@@ -1,0 +1,37 @@
+//! Shared helpers for the figure-regeneration benches (criterion is not
+//! available offline; these are `harness = false` binaries that print the
+//! same rows/series the paper's figures report).
+
+#![allow(dead_code)]
+
+use cloudflow::util::stats::fmt_ms;
+
+/// `CLOUDFLOW_QUICK=1` shrinks request counts ~4x for smoke runs.
+pub fn quick() -> bool {
+    std::env::var("CLOUDFLOW_QUICK").map(|v| v == "1").unwrap_or(false)
+}
+
+pub fn scaled(n: usize) -> usize {
+    if quick() {
+        (n / 4).max(4)
+    } else {
+        n
+    }
+}
+
+pub fn header(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+pub fn row_ms(label: &str, med: f64, p99: f64, extra: &str) {
+    println!("{label:<44} median={:<9} p99={:<9} {extra}", fmt_ms(med), fmt_ms(p99));
+}
+
+/// KB/MB formatter for payload-size axis labels.
+pub fn fmt_bytes(b: usize) -> String {
+    if b >= 1_000_000 {
+        format!("{}MB", b / 1_000_000)
+    } else {
+        format!("{}KB", b / 1_000)
+    }
+}

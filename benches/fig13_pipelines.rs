@@ -1,0 +1,210 @@
+//! Figure 13: the four real pipelines on Cloudflow vs SageMaker-like vs
+//! Clipper-like baselines, CPU and GPU deployments.
+//!
+//! Per paper §5.2.2: warm-up phase, then measured closed-loop phase from
+//! 10 clients; the Cloudflow replica allocation is copied to the
+//! baselines.  Pass a pipeline name (cascade|video|nmt|recsys) as an
+//! argument to run a subset.
+//!
+//! Requires artifacts (`make artifacts`).
+
+mod bench_common;
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use bench_common::{header, scaled};
+use cloudflow::baselines::{Baseline, BaselineKind};
+use cloudflow::cloudburst::Cluster;
+use cloudflow::dataflow::compiler::{compile, OptFlags};
+use cloudflow::runtime::{InferenceService, Manifest};
+use cloudflow::simulation::clock::Clock;
+use cloudflow::simulation::gpu::Device;
+use cloudflow::util::stats::{fmt_ms, Summary};
+use cloudflow::workloads::pipelines::{self, PipelineSpec, RecsysScale};
+use cloudflow::workloads::closed_loop;
+
+struct Config {
+    name: &'static str,
+    devices: &'static [Device],
+    opts: fn() -> OptFlags,
+    clients: usize,
+    requests: usize,
+}
+
+fn main() {
+    // Real PJRT compute is part of every request; run 1:1 so time-scale
+    // compression doesn't amplify it relative to modeled costs.
+    if std::env::var("CLOUDFLOW_TIME_SCALE").is_err() {
+        std::env::set_var("CLOUDFLOW_TIME_SCALE", "1.0");
+    }
+    // Recsys: the paper's category working set (10GB) dwarfs the 2GB
+    // caches; at our scaled-down 36 x 5MB set, a 96MB cache preserves the
+    // same working-set : cache ratio (DESIGN.md §4).
+    if std::env::var("CLOUDFLOW_CACHE_MB").is_err() {
+        std::env::set_var("CLOUDFLOW_CACHE_MB", "96");
+    }
+    let filter: Vec<String> = std::env::args().skip(1).filter(|a| !a.starts_with('-')).collect();
+    header("Fig 13: real pipelines — Cloudflow vs SageMaker-like vs Clipper-like");
+    let infer = match InferenceService::start_default() {
+        Ok(i) => i,
+        Err(e) => {
+            eprintln!("SKIP: {e:#}");
+            return;
+        }
+    };
+    let manifest = Manifest::load(Manifest::default_dir()).unwrap();
+
+    let configs = [
+        Config {
+            name: "cascade",
+            devices: &[Device::Cpu, Device::Gpu],
+            // paper: whole pipeline fused into one operator
+            opts: || OptFlags::all().with_fuse_across_devices(),
+            clients: 10,
+            requests: 60,
+        },
+        Config {
+            name: "video",
+            devices: &[Device::Cpu, Device::Gpu],
+            opts: || OptFlags::all().with_fuse_across_devices(),
+            clients: 4,
+            requests: 16,
+        },
+        Config {
+            name: "nmt",
+            devices: &[Device::Cpu, Device::Gpu],
+            // competitive execution enabled (paper reports both; we report
+            // the optimized configuration and print the delta note)
+            opts: || {
+                OptFlags::all()
+                    .with_competitive("nmt_fr", 3)
+                    .with_competitive("nmt_de", 3)
+            },
+            clients: 8,
+            requests: 40,
+        },
+        Config {
+            name: "recsys",
+            devices: &[Device::Cpu],
+            opts: OptFlags::all,
+            clients: 8,
+            requests: 60,
+        },
+    ];
+
+    println!(
+        "{:<10} {:<5} {:<12} {:>10} {:>10} {:>12}",
+        "pipeline", "dev", "system", "median", "p99", "throughput"
+    );
+    for cfg in &configs {
+        if !filter.is_empty() && !filter.iter().any(|f| f == cfg.name) {
+            continue;
+        }
+        for &device in cfg.devices {
+            let spec = build(cfg.name, &manifest);
+            let requests = scaled(cfg.requests);
+            // ---- Cloudflow ----
+            // Paper §5.2.3: batching enabled for GPU deployments only.
+            let mut opts = (cfg.opts)();
+            if device == Device::Cpu {
+                opts.batching = false;
+            }
+            let plan = compile(&spec.flow, &opts).unwrap();
+            let plan = if device == Device::Cpu {
+                plan.force_device(Device::Cpu)
+            } else {
+                plan
+            };
+            let cluster = Cluster::new(Some(infer.clone()));
+            if let Some(setup) = &spec.setup {
+                setup(&cluster.kvs());
+            }
+            let h = cluster.register(plan, 2).unwrap();
+            closed_loop(&cluster, h, cfg.clients, requests / 4 + 2, |i| {
+                (spec.make_input)(i)
+            });
+            let mut r = closed_loop(&cluster, h, cfg.clients, requests, |i| {
+                (spec.make_input)(i + 1000)
+            });
+            let (med, p99, rps) = r.report();
+            println!(
+                "{:<10} {:<5} {:<12} {:>10} {:>10} {:>9.1} r/s",
+                cfg.name, device.label(), "cloudflow", fmt_ms(med), fmt_ms(p99), rps
+            );
+            let alloc = cluster.replica_counts(h);
+            drop(cluster);
+
+            // ---- Baselines (same allocation, same inputs) ----
+            for kind in [BaselineKind::Sagemaker, BaselineKind::Clipper] {
+                let spec = build(cfg.name, &manifest);
+                let b = Baseline::deploy(
+                    &spec.flow,
+                    kind,
+                    Some(infer.clone()),
+                    device == Device::Cpu,
+                )
+                .unwrap();
+                if let Some(setup) = &spec.setup {
+                    setup(&b.kvs());
+                }
+                b.copy_allocation(&alloc);
+                // warm-up + measured closed loop against the proxy driver
+                run_baseline(&b, &spec, cfg.clients, requests / 4 + 2, 0);
+                let (mut lat, wall_ms, done) =
+                    run_baseline(&b, &spec, cfg.clients, requests, 1000);
+                let (med, p99) = lat.report();
+                println!(
+                    "{:<10} {:<5} {:<12} {:>10} {:>10} {:>9.1} r/s",
+                    cfg.name,
+                    device.label(),
+                    kind.label(),
+                    fmt_ms(med),
+                    fmt_ms(p99),
+                    done as f64 / (wall_ms / 1e3)
+                );
+            }
+        }
+    }
+    println!("\npaper: Cloudflow ~2x median latency/throughput on cascade & recsys;");
+    println!("       video GPU in real-time (<1s); NMT parity-to-win with competition");
+}
+
+fn build(name: &str, manifest: &Manifest) -> PipelineSpec {
+    match name {
+        "cascade" => pipelines::image_cascade(manifest).unwrap(),
+        "video" => pipelines::video_stream().unwrap(),
+        "nmt" => pipelines::nmt().unwrap(),
+        "recsys" => pipelines::recommender(RecsysScale::default()).unwrap(),
+        _ => unreachable!(),
+    }
+}
+
+fn run_baseline(
+    b: &std::sync::Arc<Baseline>,
+    spec: &PipelineSpec,
+    clients: usize,
+    total: usize,
+    offset: usize,
+) -> (Summary, f64, usize) {
+    let clock = Clock::new();
+    let next = AtomicUsize::new(0);
+    let lat = Mutex::new(Summary::new());
+    std::thread::scope(|s| {
+        for _ in 0..clients {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= total {
+                    return;
+                }
+                let t0 = Clock::new();
+                if b.execute((spec.make_input)(i + offset)).is_ok() {
+                    lat.lock().unwrap().add(t0.now_ms());
+                }
+            });
+        }
+    });
+    let lat = lat.into_inner().unwrap();
+    let done = lat.len();
+    (lat, clock.now_ms(), done)
+}

@@ -1,0 +1,69 @@
+//! Figure 4: operator fusion on linear chains.
+//!
+//! Chains of no-op functions, length ∈ {2,4,6,8,10} × payload ∈
+//! {10KB, 100KB, 1MB, 10MB}, fused vs unfused; median (bar) + p99
+//! (whisker) latencies.  Paper shape: fused ~flat in length; unfused
+//! linear; up to ~4× at long chains / large payloads.
+
+mod bench_common;
+
+use bench_common::{fmt_bytes, header, scaled};
+use cloudflow::cloudburst::Cluster;
+use cloudflow::dataflow::compiler::{compile, OptFlags};
+use cloudflow::dataflow::operator::Func;
+use cloudflow::dataflow::table::{DType, Schema};
+use cloudflow::dataflow::Dataflow;
+use cloudflow::util::rng::Rng;
+use cloudflow::util::stats::fmt_ms;
+use cloudflow::workloads::{closed_loop, datagen};
+
+fn chain(n: usize) -> Dataflow {
+    let mut fl = Dataflow::new("chain", Schema::new(vec![("payload", DType::Blob)]));
+    let mut cur = fl.input();
+    for i in 0..n {
+        cur = fl.map(cur, Func::identity(&format!("f{i}"))).unwrap();
+    }
+    fl.set_output(cur).unwrap();
+    fl
+}
+
+fn main() {
+    header("Fig 4: operator fusion (identity chains)");
+    let lengths = [2usize, 4, 6, 8, 10];
+    let sizes = [10_000usize, 100_000, 1_000_000, 10_000_000];
+    let requests = scaled(24);
+    println!(
+        "{:<8} {:<8} {:>12} {:>12} {:>12} {:>12} {:>8}",
+        "size", "length", "unfused med", "unfused p99", "fused med", "fused p99", "speedup"
+    );
+    for &size in &sizes {
+        for &len in &lengths {
+            let fl = chain(len);
+            let mut run = |opts: &OptFlags| {
+                let cluster = Cluster::new(None);
+                let h = cluster.register(compile(&fl, opts).unwrap(), 2).unwrap();
+                // warm-up
+                closed_loop(&cluster, h, 2, 4, |i| {
+                    datagen::payload_table(&mut Rng::new(i as u64), size)
+                });
+                let mut r = closed_loop(&cluster, h, 4, requests, |i| {
+                    datagen::payload_table(&mut Rng::new(100 + i as u64), size)
+                });
+                r.latencies.report()
+            };
+            let (umed, up99) = run(&OptFlags::none());
+            let (fmed, fp99) = run(&OptFlags::none().with_fusion());
+            println!(
+                "{:<8} {:<8} {:>12} {:>12} {:>12} {:>12} {:>7.2}x",
+                fmt_bytes(size),
+                len,
+                fmt_ms(umed),
+                fmt_ms(up99),
+                fmt_ms(fmed),
+                fmt_ms(fp99),
+                umed / fmed
+            );
+        }
+    }
+    println!("\npaper: fused flat in chain length; unfused linear; up to ~4x at length 10");
+}

@@ -1,0 +1,100 @@
+//! Figure 8: batching on CPUs vs GPUs (ResNet stand-in).
+//!
+//! Single-model pipeline; batch size ∈ {1,10,20,30,40}; for each size,
+//! issue k requests asynchronously from one client and measure until all
+//! return (the paper's methodology).  Latency (log axis in the paper) and
+//! throughput.  Paper shape: GPU b1→20 costs ~8× latency for ~3×
+//! throughput and saturates past 20; CPUs plateau at b=10.
+//!
+//! Requires artifacts (`make artifacts`).
+
+mod bench_common;
+
+use bench_common::{header, scaled};
+use cloudflow::cloudburst::Cluster;
+use cloudflow::dataflow::compiler::{compile, OptFlags};
+use cloudflow::dataflow::operator::{Func, ModelBinding};
+use cloudflow::dataflow::table::DType;
+use cloudflow::dataflow::Dataflow;
+use cloudflow::runtime::InferenceService;
+use cloudflow::simulation::clock::Clock;
+use cloudflow::simulation::gpu::Device;
+use cloudflow::util::rng::Rng;
+use cloudflow::util::stats::Summary;
+use cloudflow::workloads::datagen;
+
+fn main() {
+    header("Fig 8: batching, ResNet stand-in, CPU vs GPU");
+    let infer = match InferenceService::start_default() {
+        Ok(i) => i,
+        Err(e) => {
+            eprintln!("SKIP: {e:#}");
+            return;
+        }
+    };
+    let mut fl = Dataflow::new("batching", cloudflow::dataflow::Schema::new(vec![
+        ("img", DType::F32s),
+    ]));
+    let m = fl
+        .map(
+            fl.input(),
+            Func::model(ModelBinding::new("resnet", &["img"], &[("probs", DType::F32s)])),
+        )
+        .unwrap();
+    fl.set_output(m).unwrap();
+
+    // Compile all resnet batch variants up front so PJRT compilation
+    // doesn't pollute the measured rounds.
+    infer.prewarm(&["resnet"]).unwrap();
+    let rounds = scaled(8);
+    println!(
+        "{:<6} {:<6} {:>12} {:>14}",
+        "dev", "batch", "latency", "throughput"
+    );
+    for device in [Device::Cpu, Device::Gpu] {
+        for batch in [1usize, 10, 20, 30, 40] {
+            // Fresh cluster per configuration; single replica so the batch
+            // forms at one executor, max batch = the sweep point.
+            cloudflow::config::set_max_batch(batch);
+            let plan = compile(&fl, &OptFlags::none().with_batching())
+                .unwrap()
+                .force_device(device);
+            let cluster = Cluster::new(Some(infer.clone()));
+            let h = cluster.register(plan, 1).unwrap();
+            let mut lat = Summary::new();
+            let mut total = 0usize;
+            let clock = Clock::new();
+            for round in 0..rounds {
+                // k async requests from one client; wait for all.
+                let t0 = Clock::new();
+                let futs: Vec<_> = (0..batch)
+                    .map(|i| {
+                        cluster
+                            .execute(
+                                h,
+                                datagen::image_table(
+                                    &mut Rng::new((round * 100 + i) as u64),
+                                    1,
+                                ),
+                            )
+                            .unwrap()
+                    })
+                    .collect();
+                for f in futs {
+                    f.result().unwrap();
+                }
+                lat.add(t0.now_ms());
+                total += batch;
+            }
+            let wall_s = clock.now_ms() / 1e3;
+            println!(
+                "{:<6} {:<6} {:>10.0}ms {:>10.1} req/s",
+                device.label(),
+                batch,
+                lat.median(),
+                total as f64 / wall_s
+            );
+        }
+    }
+    println!("\npaper: GPU ~4x CPU at b=1; GPU saturates ~b=20 at ~3x b=1 throughput");
+}

@@ -1,0 +1,106 @@
+//! Micro-benchmarks of the L3 hot path (the §Perf targets in DESIGN.md):
+//! table codec throughput, scheduler dispatch overhead, KVS ops, and the
+//! end-to-end non-model overhead of a minimal request.
+
+mod bench_common;
+
+use std::time::Instant;
+
+use bench_common::header;
+use cloudflow::anna::{Cache, Directory, KvsClient, Store};
+use cloudflow::cloudburst::Cluster;
+use cloudflow::dataflow::compiler::{compile, OptFlags};
+use cloudflow::dataflow::operator::Func;
+use cloudflow::dataflow::table::{DType, Schema, Table, Value};
+use cloudflow::dataflow::Dataflow;
+use cloudflow::net::NodeId;
+use cloudflow::util::rng::Rng;
+
+fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) -> f64 {
+    // warm-up
+    for _ in 0..iters / 10 + 1 {
+        f();
+    }
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    let per = t0.elapsed().as_secs_f64() / iters as f64;
+    println!("{name:<44} {:>12.2} µs/op", per * 1e6);
+    per
+}
+
+fn main() {
+    header("micro: L3 hot-path operations");
+    let mut rng = Rng::new(1);
+
+    // Table codec at two payload scales.
+    let table_small = {
+        let mut t = Table::new(Schema::new(vec![
+            ("name", DType::Str),
+            ("conf", DType::F64),
+        ]));
+        for i in 0..32 {
+            t.push_fresh(vec![Value::Str(format!("k{i}")), Value::F64(0.5)]).unwrap();
+        }
+        t
+    };
+    bench("codec: encode 32-row scalar table", 20_000, || {
+        std::hint::black_box(table_small.encode());
+    });
+    let enc = table_small.encode();
+    bench("codec: decode 32-row scalar table", 20_000, || {
+        std::hint::black_box(Table::decode(&enc).unwrap());
+    });
+    let big = {
+        let mut t = Table::new(Schema::new(vec![("p", DType::Blob)]));
+        t.push_fresh(vec![Value::blob(rng.bytes(10_000_000))]).unwrap();
+        t
+    };
+    let t0 = Instant::now();
+    let n = 50;
+    for _ in 0..n {
+        std::hint::black_box(big.encode());
+    }
+    let gbps = 10.0e6 * n as f64 / t0.elapsed().as_secs_f64() / 1e9;
+    println!("{:<44} {:>10.2} GB/s", "codec: encode 10MB blob", gbps);
+
+    // KVS ops (no modeled sleep: measure the data structure).
+    let store = std::sync::Arc::new(Store::new(4));
+    let kvs = KvsClient::direct(store.clone(), NodeId::CLIENT);
+    for i in 0..1024 {
+        kvs.put_free(&format!("k{i}"), vec![0u8; 128]);
+    }
+    bench("kvs: get (store path)", 100_000, || {
+        std::hint::black_box(store.get("k512"));
+    });
+    let dir = Directory::new();
+    let cache = Cache::new(NodeId(1), 1 << 24, dir.clone());
+    cache.insert("hot", std::sync::Arc::new(vec![0u8; 1024]));
+    bench("cache: hit (LRU bookkeeping)", 100_000, || {
+        std::hint::black_box(cache.get("hot"));
+    });
+    bench("directory: holders lookup", 100_000, || {
+        std::hint::black_box(dir.holders("hot"));
+    });
+
+    // End-to-end no-op request: everything but models and modeled delays.
+    header("micro: end-to-end no-op request overhead");
+    std::env::set_var("CLOUDFLOW_TIME_SCALE", "1.0");
+    let mut fl = Dataflow::new("noop", Schema::new(vec![("x", DType::F64)]));
+    let a = fl.map(fl.input(), Func::identity("a")).unwrap();
+    fl.set_output(a).unwrap();
+    let cluster = Cluster::new(None);
+    let h = cluster
+        .register(compile(&fl, &OptFlags::none().with_fusion()).unwrap(), 1)
+        .unwrap();
+    let input = || {
+        let mut t = Table::new(Schema::new(vec![("x", DType::F64)]));
+        t.push_fresh(vec![Value::F64(0.0)]).unwrap();
+        t
+    };
+    bench("cluster: no-op request round trip", 2_000, || {
+        cluster.execute(h, input()).unwrap().result().unwrap();
+    });
+    println!("(includes two modeled client hops of ~0.5ms each)");
+}

@@ -1,0 +1,64 @@
+//! Fine-grained operator autoscaling (paper §5.1.3 / Fig 6): a fast and a
+//! slow function under a 4x load spike.  Watch the autoscaler add
+//! replicas to the slow function only, recover latency, then add slack.
+//!
+//! `cargo run --release --example autoscaling_demo`
+//! (set CLOUDFLOW_TIME_SCALE=0.25 for a quicker run)
+
+use cloudflow::cloudburst::Cluster;
+use cloudflow::dataflow::compiler::{compile, OptFlags};
+use cloudflow::dataflow::operator::{Func, SleepDist};
+use cloudflow::dataflow::table::{DType, Schema, Table, Value};
+use cloudflow::dataflow::Dataflow;
+use cloudflow::workloads::loadgen::timed_phase;
+
+fn main() -> anyhow::Result<()> {
+    let mut fl = Dataflow::new("autoscale", Schema::new(vec![("x", DType::F64)]));
+    let fast = fl.map(fl.input(), Func::sleep("fast", SleepDist::ConstMs(2.0)))?;
+    let slow = fl.map(fast, Func::sleep("slow", SleepDist::ConstMs(120.0)))?;
+    fl.set_output(slow)?;
+
+    let cluster = Cluster::new(None);
+    cluster.set_autoscale(true);
+    let h = cluster.register(compile(&fl, &OptFlags::none())?, 1)?;
+    cluster.scale_to(h, "slow", 3)?;
+    cluster.metrics(h).enable_timeline(1000.0, 90_000.0);
+
+    let input = |_: usize| {
+        let mut t = Table::new(Schema::new(vec![("x", DType::F64)]));
+        t.push_fresh(vec![Value::F64(0.0)]).unwrap();
+        t
+    };
+
+    let show = |label: &str| {
+        let counts = cluster.replica_counts(h);
+        let slow_n = counts.iter().find(|(l, _)| l.contains("slow")).unwrap().1;
+        let fast_n = counts.iter().find(|(l, _)| l.contains("fast")).unwrap().1;
+        println!("{label:<24} slow={slow_n:<3} fast={fast_n}");
+    };
+
+    println!("phase 1: 4 clients, 15s");
+    show("  before");
+    timed_phase(&cluster, h, 4, 15_000.0, input);
+    show("  after steady phase");
+
+    println!("phase 2: 4x spike (16 clients), 45s");
+    timed_phase(&cluster, h, 16, 45_000.0, input);
+    show("  after spike");
+
+    println!("phase 3: spike continues, 30s (slack appears)");
+    timed_phase(&cluster, h, 16, 30_000.0, input);
+    show("  final");
+
+    println!("\ntimeline (per second): t, median latency ms, throughput rps");
+    let m = cluster.metrics(h);
+    let mut tl = m.timeline.lock().unwrap();
+    if let Some(tl) = tl.as_mut() {
+        for (t, med, rps) in tl.rows() {
+            if rps > 0.0 {
+                println!("  {:>6.0}s  {:>8.1}ms  {:>6.1} rps", t / 1000.0, med, rps);
+            }
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,61 @@
+//! End-to-end validation driver (DESIGN.md deliverable (b)/E2E): load the
+//! real AOT-compiled model zoo, serve 200 batched image-cascade requests
+//! from 10 concurrent clients through the full stack (Cloudflow API →
+//! compiler → Cloudburst cluster → PJRT inference), and report the
+//! latency/throughput rows the paper reports, for both the optimized and
+//! unoptimized deployments.
+//!
+//! `cargo run --release --example image_cascade`
+
+use cloudflow::cloudburst::Cluster;
+use cloudflow::dataflow::compiler::{compile, OptFlags};
+use cloudflow::runtime::{InferenceService, Manifest};
+use cloudflow::util::stats::fmt_ms;
+use cloudflow::workloads::{closed_loop, pipelines};
+
+fn main() -> anyhow::Result<()> {
+    let infer = InferenceService::start_default()?;
+    let manifest = Manifest::load(Manifest::default_dir())?;
+    let spec = pipelines::image_cascade(&manifest)?;
+    let warmup = std::env::var("CASCADE_WARMUP").map(|v| v.parse().unwrap()).unwrap_or(20);
+    let requests = std::env::var("CASCADE_REQUESTS").map(|v| v.parse().unwrap()).unwrap_or(200);
+    let clients = 10;
+
+    println!("== image cascade: end-to-end serving ==");
+    println!("(resnet -> inception when conf < {:.3}; 64x64 synthetic ImageNet)",
+        manifest.calibration.get("conf_p60").copied().unwrap_or(0.85));
+
+    // Paper §5.2.3: the whole cascade fuses into a single operator (CPU
+    // stage costs are low, so avoiding data movement wins).  Replicas are
+    // set so both deployments get comparable total workers.
+    for (name, opts, replicas) in [
+        ("unoptimized (1 op = 1 function)", OptFlags::none(), 2),
+        (
+            "optimized (whole-pipeline fusion + batching)",
+            OptFlags::all().with_fuse_across_devices(),
+            8,
+        ),
+    ] {
+        let cluster = Cluster::new(Some(infer.clone()));
+        let plan = compile(&spec.flow, &opts)?;
+        let stages = plan.n_stages();
+        let h = cluster.register(plan, replicas)?;
+        // Warm-up lets compiles + caches settle (paper §5.2.2).
+        closed_loop(&cluster, h, clients, warmup, |i| (spec.make_input)(i));
+        let mut r = closed_loop(&cluster, h, clients, requests, |i| (spec.make_input)(i + warmup));
+        let (med, p99, rps) = r.report();
+        println!(
+            "{name:<46} stages={stages:<2} median={:<8} p99={:<8} throughput={rps:.1} req/s ({} ok, {} err)",
+            fmt_ms(med), fmt_ms(p99), r.completed, r.errors
+        );
+    }
+
+    let stats = infer.stats();
+    println!(
+        "inference service: {} PJRT executions, {} rows, {} padded rows",
+        stats.executions.load(std::sync::atomic::Ordering::Relaxed),
+        stats.rows.load(std::sync::atomic::Ordering::Relaxed),
+        stats.padded_rows.load(std::sync::atomic::Ordering::Relaxed),
+    );
+    Ok(())
+}

@@ -1,0 +1,41 @@
+//! Neural machine translation (paper §5.2.1): language identification
+//! routes each request to a French or German translation model; the
+//! NMT models have high-variance runtimes, so this is where competitive
+//! execution pays (paper §5.2.3: -50% p99 with two extra replicas).
+//!
+//! `cargo run --release --example nmt_pipeline`
+
+use cloudflow::cloudburst::Cluster;
+use cloudflow::dataflow::compiler::{compile, OptFlags};
+use cloudflow::runtime::InferenceService;
+use cloudflow::util::stats::fmt_ms;
+use cloudflow::workloads::{closed_loop, pipelines};
+
+fn main() -> anyhow::Result<()> {
+    let infer = InferenceService::start_default()?;
+    let spec = pipelines::nmt()?;
+    let n = std::env::var("NMT_REQUESTS").map(|v| v.parse().unwrap()).unwrap_or(60);
+
+    println!("== neural machine translation pipeline ==");
+    for (name, opts) in [
+        ("without competition", OptFlags::all()),
+        (
+            "with 3-way competitive NMT",
+            OptFlags::all()
+                .with_competitive("nmt_fr", 3)
+                .with_competitive("nmt_de", 3),
+        ),
+    ] {
+        let cluster = Cluster::new(Some(infer.clone()));
+        let h = cluster.register(compile(&spec.flow, &opts)?, 2)?;
+        closed_loop(&cluster, h, 5, 10, |i| (spec.make_input)(i));
+        let mut r = closed_loop(&cluster, h, 5, n, |i| (spec.make_input)(i + 10));
+        let (med, p99, rps) = r.report();
+        println!(
+            "{name:<28} median={:<8} p99={:<8} throughput={rps:.1} req/s",
+            fmt_ms(med),
+            fmt_ms(p99)
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,43 @@
+//! Quickstart: the paper's Figure 1 ensemble in the Cloudflow API.
+//!
+//! ```text
+//! preproc → {resnet, vgg, inception} → union → groupby(rowID) → argmax(conf)
+//! ```
+//!
+//! Run after `make artifacts && cargo build --release`:
+//! `cargo run --release --example quickstart`
+
+use cloudflow::cloudburst::Cluster;
+use cloudflow::dataflow::compiler::{compile, OptFlags};
+use cloudflow::runtime::InferenceService;
+use cloudflow::workloads::pipelines;
+
+fn main() -> anyhow::Result<()> {
+    // 1. Connect the AOT-compiled model zoo (built once by `make
+    //    artifacts`; Python is not involved from here on).
+    let infer = InferenceService::start_default()?;
+
+    // 2. Author the dataflow (see pipelines::ensemble for the ~15 lines of
+    //    builder code that mirror the paper's Figure 1 snippet).
+    let spec = pipelines::ensemble()?;
+    println!("flow: {} operators", spec.flow.nodes().len() - 1);
+
+    // 3. Compile with the standard optimizations and deploy.
+    let plan = compile(&spec.flow, &OptFlags::all())?;
+    println!("plan: {} stages after fusion: {:?}", plan.n_stages(), plan.stage_labels());
+    let cluster = Cluster::new(Some(infer));
+    let handle = cluster.register(plan, 2)?;
+
+    // 4. Execute requests; `execute` returns a future.
+    for i in 0..5 {
+        let fut = cluster.execute(handle, (spec.make_input)(i))?;
+        let out = fut.result()?;
+        let pred = out.value(0, "pred")?.as_i64()?;
+        let conf = out.value(0, "conf")?.as_f64()?;
+        println!("request {i}: ensemble prediction class={pred} confidence={conf:.3}");
+    }
+
+    let (med, p99) = cluster.metrics(handle).report();
+    println!("latency: median={med:.0}ms p99={p99:.0}ms");
+    Ok(())
+}

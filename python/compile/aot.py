@@ -1,0 +1,137 @@
+"""AOT lowering: model zoo -> HLO text artifacts + params + manifest.
+
+This is the only place Python touches the serving stack.  For every
+(model, batch) pair we lower the jitted forward function to **HLO text**
+(NOT ``.serialize()``: the xla crate's xla_extension 0.5.1 rejects jax>=0.5
+serialized protos whose instruction ids exceed INT_MAX; the text parser
+reassigns ids and round-trips cleanly -- see /opt/xla-example/README.md).
+
+Outputs under ``artifacts/``:
+  * ``<model>.b<batch>.hlo.txt``   -- one HLO module per batch variant
+  * ``<model>.params.bin``         -- flat little-endian f32 parameter blob
+  * ``manifest.json``              -- everything the Rust runtime needs:
+    parameter shapes (in argument order), input/output specs per artifact,
+    and calibration metadata (e.g. the resnet confidence percentiles used
+    by the cascade pipeline's routing threshold).
+
+Usage: ``python -m compile.aot --out ../artifacts``
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from compile.model import build_zoo, ModelDef
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned by parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec_json(s) -> dict:
+    dt = {"float32": "f32", "int32": "i32"}[np.dtype(s.dtype).name]
+    return {"dtype": dt, "shape": list(s.shape)}
+
+
+def lower_artifact(m: ModelDef, batch: int, out_dir: str) -> dict:
+    fn = m.lowering_fn()
+    args = m.lowering_args(batch)
+    lowered = jax.jit(fn).lower(*args)
+    text = to_hlo_text(lowered)
+    fname = f"{m.name}.b{batch}.hlo.txt"
+    with open(os.path.join(out_dir, fname), "w") as f:
+        f.write(text)
+    # Output specs from an eval_shape of the same signature.
+    out_shapes = jax.eval_shape(fn, *args)
+    return {
+        "name": f"{m.name}.b{batch}",
+        "model": m.name,
+        "batch": batch,
+        "hlo": fname,
+        "n_params": len(m.params),
+        "inputs": [spec_json(s) for s in args[len(m.params):]],
+        "outputs": [spec_json(s) for s in out_shapes],
+        "hlo_bytes": len(text),
+    }
+
+
+def write_params(m: ModelDef, out_dir: str) -> dict:
+    fname = f"{m.name}.params.bin"
+    flat = b""
+    shapes = []
+    with open(os.path.join(out_dir, fname), "wb") as f:
+        for p in m.params:
+            a = np.asarray(p, dtype=np.float32)
+            f.write(a.tobytes(order="C"))
+            shapes.append(list(a.shape))
+    size = os.path.getsize(os.path.join(out_dir, fname))
+    return {"params_file": fname, "param_shapes": shapes, "params_bytes": size}
+
+
+def calibrate_confidence(zoo, n: int = 128) -> dict:
+    """Empirical top-1 confidence percentiles for cascade routing.
+
+    The paper's cascade forwards an image to the complex model when the
+    simple model's confidence is below a threshold (85% in 5.2.1).  Our
+    stand-in's confidence distribution differs from a trained ResNet-101's,
+    so we record its percentiles and let the Rust workload pick the
+    threshold that reproduces the paper's ~40-60% forwarding rate.
+    """
+    m = zoo["resnet"]
+    key = jax.random.PRNGKey(7)
+    imgs = jax.random.uniform(key, (n, 64, 64, 3), jnp.float32, 0.0, 255.0)
+    probs = m.fn(m.params, imgs)[0]
+    conf = np.asarray(jnp.max(probs, axis=-1))
+    pct = lambda q: float(np.percentile(conf, q))
+    return {
+        "conf_p25": pct(25), "conf_p50": pct(50),
+        "conf_p60": pct(60), "conf_p75": pct(75),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--models", default="", help="comma-separated subset")
+    ap.add_argument("--skip-calibration", action="store_true")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    zoo = build_zoo()
+    subset = [s for s in args.models.split(",") if s]
+    manifest = {"version": 1, "models": {}, "artifacts": []}
+
+    for name, m in sorted(zoo.items()):
+        if subset and name not in subset:
+            continue
+        entry = write_params(m, args.out)
+        entry["meta"] = {k: v for k, v in m.meta.items()}
+        manifest["models"][name] = entry
+        for b in m.batches:
+            art = lower_artifact(m, b, args.out)
+            manifest["artifacts"].append(art)
+            print(f"  lowered {art['name']:<24} hlo={art['hlo_bytes']:>9}B")
+
+    if not args.skip_calibration and (not subset or "resnet" in subset):
+        manifest["calibration"] = calibrate_confidence(zoo)
+        print(f"  calibration: {manifest['calibration']}")
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"wrote {len(manifest['artifacts'])} artifacts to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

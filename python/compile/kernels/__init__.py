@@ -1,0 +1,14 @@
+"""Layer-1 Pallas kernels for the Cloudflow model zoo.
+
+Every kernel here is lowered with ``interpret=True`` so that it compiles to
+plain HLO ops executable on the CPU PJRT backend (real-TPU Pallas lowering
+emits Mosaic custom-calls the CPU plugin cannot run).  Correctness oracles
+live in :mod:`compile.kernels.ref` and are enforced by the pytest suite.
+"""
+
+from compile.kernels.dense import dense
+from compile.kernels.normalize import normalize
+from compile.kernels.softmax import softmax
+from compile.kernels.topk_score import score
+
+__all__ = ["dense", "normalize", "softmax", "score"]

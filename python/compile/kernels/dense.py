@@ -1,0 +1,71 @@
+"""Fused dense layer (matmul + bias + activation) as a tiled Pallas kernel.
+
+This is the compute hot-spot of every classifier head and the NMT vocab
+projection in the model zoo.  TPU-shaped rather than CUDA-shaped: the
+HBM->VMEM schedule is expressed with ``BlockSpec``s over a (m, n, k) grid,
+the (bm x bk) @ (bk x bn) partial products accumulate in the output block
+(which stays resident in VMEM across the k steps because its index map is
+independent of k), and the bias + activation epilogue is fused so the
+activation never round-trips to HBM.
+
+VMEM footprint per grid step (f32): bm*bk + bk*bn + bm*bn + bn floats.
+With the default 128 targets that is at most ~192KiB -- far under the
+~16MiB VMEM budget, leaving room for double buffering.  MXU utilisation is
+maximised when (bm, bk, bn) are multiples of (8, 128, 128); ``block_dim``
+picks the largest exact divisors under those targets.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from compile.kernels.util import block_dim
+
+_ACTS = {
+    "none": lambda x: x,
+    "relu": jax.nn.relu,
+    "tanh": jnp.tanh,
+    "sigmoid": jax.nn.sigmoid,
+}
+
+
+def _kernel(x_ref, w_ref, b_ref, o_ref, *, act, nk):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == nk - 1)
+    def _epilogue():
+        o_ref[...] = _ACTS[act](o_ref[...] + b_ref[...])
+
+
+def dense(x, w, b, act: str = "none"):
+    """``act(x @ w + b)`` with ``x: [m, k]``, ``w: [k, n]``, ``b: [n]``."""
+    if act not in _ACTS:
+        raise ValueError(f"unknown activation {act!r}")
+    m, k = x.shape
+    k2, n = w.shape
+    if k != k2 or b.shape != (n,):
+        raise ValueError(f"shape mismatch: x{x.shape} w{w.shape} b{b.shape}")
+    bm, bk, bn = block_dim(m, 8), block_dim(k, 128), block_dim(n, 128)
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        functools.partial(_kernel, act=act, nk=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bn,), lambda i, j, kk: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x.astype(jnp.float32), w, b)

@@ -1,0 +1,34 @@
+"""Image normalisation Pallas kernel: ``(x/255 - mean) / std`` per channel.
+
+The preprocessing stage of the image pipelines.  A pure VPU kernel: the
+grid walks the batch dimension, one full (h, w, c) image block resident in
+VMEM per step (64*64*3 f32 = 48KiB), with the per-channel mean/std vectors
+broadcast along the minor axis.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, mean_ref, std_ref, o_ref):
+    o_ref[...] = (x_ref[...] / 255.0 - mean_ref[...]) / std_ref[...]
+
+
+def normalize(x, mean, std):
+    """``x: [b, h, w, c]`` raw pixels in [0, 255]; ``mean``/``std``: [c]."""
+    b, h, w, c = x.shape
+    if mean.shape != (c,) or std.shape != (c,):
+        raise ValueError(f"channel mismatch: x{x.shape} mean{mean.shape}")
+    return pl.pallas_call(
+        _kernel,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, h, w, c), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((c,), lambda i: (0,)),
+            pl.BlockSpec((c,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, h, w, c), lambda i: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, w, c), jnp.float32),
+        interpret=True,
+    )(x.astype(jnp.float32), mean, std)

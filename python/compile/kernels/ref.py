@@ -1,0 +1,32 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are the correctness contracts: the pytest suite asserts
+``assert_allclose(kernel(...), ref(...))`` across a hypothesis-driven sweep
+of shapes and values.  Keep these boring and obviously correct.
+"""
+
+import jax
+import jax.numpy as jnp
+
+_ACTS = {
+    "none": lambda x: x,
+    "relu": jax.nn.relu,
+    "tanh": jnp.tanh,
+    "sigmoid": jax.nn.sigmoid,
+}
+
+
+def dense_ref(x, w, b, act: str = "none"):
+    return _ACTS[act](jnp.dot(x.astype(jnp.float32), w) + b)
+
+
+def normalize_ref(x, mean, std):
+    return (x.astype(jnp.float32) / 255.0 - mean) / std
+
+
+def softmax_ref(x, tau: float = 1.0):
+    return jax.nn.softmax(x.astype(jnp.float32) * tau, axis=-1)
+
+
+def score_ref(mat, vec):
+    return jnp.dot(mat.astype(jnp.float32), vec.astype(jnp.float32))

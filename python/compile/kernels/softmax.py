@@ -1,0 +1,36 @@
+"""Row softmax Pallas kernel with optional temperature.
+
+Used by every classifier head.  Each grid step holds a (bm, n) row block in
+VMEM and performs the numerically-stable one-pass reduction (row max and
+denominator stay in registers) -- the TPU answer to the CUDA
+shared-memory/warp-shuffle reduction the paper's models would use.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from compile.kernels.util import block_dim
+
+
+def _kernel(x_ref, o_ref, *, tau):
+    z = x_ref[...] * tau
+    z = z - jnp.max(z, axis=-1, keepdims=True)
+    e = jnp.exp(z)
+    o_ref[...] = e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+def softmax(x, tau: float = 1.0):
+    """Row-wise ``softmax(tau * x)`` for ``x: [m, n]``."""
+    m, n = x.shape
+    bm = block_dim(m, 8)
+    return pl.pallas_call(
+        functools.partial(_kernel, tau=tau),
+        grid=(m // bm,),
+        in_specs=[pl.BlockSpec((bm, n), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((bm, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x.astype(jnp.float32))

@@ -1,0 +1,42 @@
+"""Recommender scoring Pallas kernel: blocked mat-vec over a category matrix.
+
+The recommender pipeline (paper 5.2.1, after Facebook's DNN recsys case
+study) scores every product in a ~10MB category matrix against a user
+weight vector.  The kernel walks row blocks of the matrix; each grid step
+loads a (br, d) tile into VMEM (br=100, d=512 -> 200KiB) and issues one
+MXU mat-vec against the resident user vector.  The CUDA formulation would
+keep a warp-shuffle running top-k; on TPU the cheap-and-parallel move is to
+materialise the full score vector (2500 f32 = 10KiB) and let the L2 graph
+take ``lax.top_k`` over it.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from compile.kernels.util import block_dim
+
+
+def _kernel(m_ref, v_ref, o_ref):
+    o_ref[...] = jnp.dot(
+        m_ref[...], v_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def score(mat, vec):
+    """``mat: [r, d] @ vec: [d] -> [r]`` product scores."""
+    r, d = mat.shape
+    if vec.shape != (d,):
+        raise ValueError(f"shape mismatch: mat{mat.shape} vec{vec.shape}")
+    br = block_dim(r, 128)
+    return pl.pallas_call(
+        _kernel,
+        grid=(r // br,),
+        in_specs=[
+            pl.BlockSpec((br, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((br,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((r,), jnp.float32),
+        interpret=True,
+    )(mat.astype(jnp.float32), vec.astype(jnp.float32))

@@ -1,0 +1,18 @@
+"""Shared helpers for Pallas kernels."""
+
+
+def block_dim(dim: int, target: int = 128) -> int:
+    """Largest divisor of ``dim`` that is <= ``target``.
+
+    Pallas block shapes must tile the array exactly (we do not pad), so we
+    pick the biggest divisor under the MXU/VMEM-friendly target.  The model
+    zoo uses dims (64, 100, 512, 1000, 2500, ...) that all have reasonable
+    divisors; a prime dim degrades gracefully to block size 1.
+    """
+    if dim <= 0:
+        raise ValueError(f"dim must be positive, got {dim}")
+    t = min(dim, target)
+    for d in range(t, 0, -1):
+        if dim % d == 0:
+            return d
+    return 1

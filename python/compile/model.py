@@ -1,0 +1,417 @@
+"""Layer-2 model zoo: JAX forward graphs for the paper's four pipelines.
+
+Stand-ins for the paper's models (ResNet-101, Inception v3, VGG-16, YOLOv3,
+fastText, FAIRSEQ NMT, DNN recsys) with the same *pipeline roles* and I/O
+contracts, small enough to AOT-compile and execute quickly on the CPU PJRT
+backend.  The compute hot-spots (classifier heads, softmax, image
+normalisation, recommender scoring) call the Layer-1 Pallas kernels so that
+they lower into the same HLO module.
+
+Conventions:
+  * every model is a pure function ``fn(params, *inputs) -> tuple(outputs)``
+    with a leading batch axis on image/text inputs;
+  * parameters are plain f32 arrays generated deterministically in
+    :mod:`compile.params` and shipped to Rust as a flat ``.params.bin``;
+  * classifier heads z-score their logits and apply a temperature ``TAU``
+    softmax so that top-1 confidences spread over (0, 1) -- the cascade
+    pipelines route on that confidence.
+"""
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from compile import params as P
+from compile.kernels import dense, normalize, softmax, score
+
+# Softmax temperature over z-scored logits; calibrated so random inputs
+# yield top-1 confidences spanning the cascade threshold (see aot.py meta).
+TAU = 4.0
+
+IMG = (64, 64, 3)  # input image shape (h, w, c)
+SEQ_LEN = 32  # NMT sequence length
+VOCAB = 512  # NMT vocabulary
+EMB = 64  # NMT embedding dim
+LANG_FEATS = 128  # langid char-histogram features
+N_PRODUCTS = 2500  # recsys products per category
+USER_DIM = 512  # recsys user-vector dim
+
+
+def f32(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def i32(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+@dataclass
+class ModelDef:
+    """A zoo entry: parameters, forward fn, and batched input specs."""
+
+    name: str
+    params: List[jnp.ndarray]
+    fn: Callable  # fn(params, *inputs) -> tuple of outputs
+    input_spec: Callable[[int], List[jax.ShapeDtypeStruct]]
+    batches: List[int]
+    meta: Dict = field(default_factory=dict)
+
+    def lowering_fn(self):
+        """Flatten params+inputs into one positional signature for jit."""
+        nparams = len(self.params)
+
+        def wrapped(*args):
+            return self.fn(list(args[:nparams]), *args[nparams:])
+
+        return wrapped
+
+    def lowering_args(self, batch: int):
+        pspecs = [jax.ShapeDtypeStruct(p.shape, p.dtype) for p in self.params]
+        return pspecs + self.input_spec(batch)
+
+
+# --------------------------------------------------------------------------
+# building blocks
+# --------------------------------------------------------------------------
+
+
+def conv2d(x, w, b, stride=1):
+    """SAME conv (NHWC x HWIO) + bias + relu."""
+    y = lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return jax.nn.relu(y + b)
+
+
+def conv1d(x, w, b):
+    """SAME 1-D conv (NWC x WIO) + bias, no activation."""
+    y = lax.conv_general_dilated(
+        x, w, (1,), "SAME", dimension_numbers=("NWC", "WIO", "NWC")
+    )
+    return y + b
+
+
+def classifier_head(feat, w, b, tau=TAU):
+    """Pallas dense -> z-score -> Pallas temperature softmax."""
+    logits = dense(feat, w, b, act="none")
+    mu = jnp.mean(logits, axis=-1, keepdims=True)
+    sd = jnp.std(logits, axis=-1, keepdims=True) + 1e-6
+    return softmax((logits - mu) / sd, tau=tau)
+
+
+def global_pool(x):
+    return jnp.mean(x, axis=(1, 2))
+
+
+# --------------------------------------------------------------------------
+# preproc
+# --------------------------------------------------------------------------
+
+
+def build_preproc() -> ModelDef:
+    """Image preprocessing: [0,255] pixels -> channel-normalised floats."""
+    mean = jnp.array([0.485, 0.456, 0.406], jnp.float32)
+    std = jnp.array([0.229, 0.224, 0.225], jnp.float32)
+
+    def fn(params, img):
+        m, s = params
+        return (normalize(img, m, s),)
+
+    return ModelDef(
+        name="preproc",
+        params=[mean, std],
+        fn=fn,
+        input_spec=lambda b: [f32((b, *IMG))],
+        batches=[1, 10, 30],
+    )
+
+
+# --------------------------------------------------------------------------
+# residual CNN classifiers (ResNet-101 / person / vehicle stand-ins)
+# --------------------------------------------------------------------------
+
+
+def _resnet_params(init: P.Init, n_classes: int):
+    ps = [init.conv(3, 3, 3, 16), init.bias(16)]  # stem, stride 2
+    for c in (16, 16):  # block1 (2 convs, residual)
+        ps += [init.conv(3, 3, c, 16), init.bias(16)]
+    ps += [init.conv(3, 3, 16, 32), init.bias(32)]  # down2, stride 2
+    for c in (32, 32):
+        ps += [init.conv(3, 3, c, 32), init.bias(32)]
+    ps += [init.conv(3, 3, 32, 64), init.bias(64)]  # down3, stride 2
+    for c in (64, 64):
+        ps += [init.conv(3, 3, c, 64), init.bias(64)]
+    ps += [init.dense(64, n_classes), init.bias(n_classes)]  # head
+    return ps
+
+
+def _resnet_fwd(params, img):
+    i = iter(range(0, len(params), 2))
+
+    def nxt():
+        j = next(i)
+        return params[j], params[j + 1]
+
+    w, b = nxt()
+    x = conv2d(img, w, b, stride=2)  # 32x32x16
+    for _ in range(1):  # block1
+        w1, b1 = nxt()
+        w2, b2 = nxt()
+        x = x + conv2d(conv2d(x, w1, b1), w2, b2)
+    w, b = nxt()
+    x = conv2d(x, w, b, stride=2)  # 16x16x32
+    w1, b1 = nxt()
+    w2, b2 = nxt()
+    x = x + conv2d(conv2d(x, w1, b1), w2, b2)
+    w, b = nxt()
+    x = conv2d(x, w, b, stride=2)  # 8x8x64
+    w1, b1 = nxt()
+    w2, b2 = nxt()
+    x = x + conv2d(conv2d(x, w1, b1), w2, b2)
+    feat = global_pool(x)  # [b, 64]
+    hw, hb = nxt()
+    return (classifier_head(feat, hw, hb),)
+
+
+def build_resnet(name="resnet", n_classes=1000) -> ModelDef:
+    init = P.Init(P.SEEDS[name])
+    return ModelDef(
+        name=name,
+        params=_resnet_params(init, n_classes),
+        fn=_resnet_fwd,
+        input_spec=lambda b: [f32((b, *IMG))],
+        batches=[1, 10, 20, 30, 40] if name == "resnet" else [1, 10, 30],
+        meta={"n_classes": n_classes},
+    )
+
+
+# --------------------------------------------------------------------------
+# inception stand-in (parallel branches + concat)
+# --------------------------------------------------------------------------
+
+
+def build_inception() -> ModelDef:
+    init = P.Init(P.SEEDS["inception"])
+    ps = [
+        init.conv(3, 3, 3, 16), init.bias(16),  # stem stride 2
+        init.conv(1, 1, 16, 24), init.bias(24),  # branch a
+        init.conv(3, 3, 16, 24), init.bias(24),  # branch b
+        init.conv(3, 3, 48, 64), init.bias(64),  # merge stride 2
+        init.conv(3, 3, 64, 64), init.bias(64),  # stride 2
+        init.dense(64, 1000), init.bias(1000),
+    ]
+
+    def fn(params, img):
+        (sw, sb, aw, ab, bw, bb, mw, mb, cw, cb, hw, hb) = params
+        x = conv2d(img, sw, sb, stride=2)  # 32x32x16
+        a = conv2d(x, aw, ab)  # 1x1 branch
+        b2 = conv2d(x, bw, bb)  # 3x3 branch
+        x = jnp.concatenate([a, b2], axis=-1)  # 32x32x48
+        x = conv2d(x, mw, mb, stride=2)  # 16x16x64
+        x = conv2d(x, cw, cb, stride=2)  # 8x8x64
+        feat = global_pool(x)
+        return (classifier_head(feat, hw, hb),)
+
+    return ModelDef(
+        name="inception",
+        params=ps,
+        fn=fn,
+        input_spec=lambda b: [f32((b, *IMG))],
+        batches=[1, 10],
+        meta={"n_classes": 1000},
+    )
+
+
+# --------------------------------------------------------------------------
+# vgg stand-in (plain conv stack; used by the quickstart ensemble)
+# --------------------------------------------------------------------------
+
+
+def build_vgg() -> ModelDef:
+    init = P.Init(P.SEEDS["vgg"])
+    ps = [
+        init.conv(3, 3, 3, 16), init.bias(16),
+        init.conv(3, 3, 16, 32), init.bias(32),
+        init.conv(3, 3, 32, 64), init.bias(64),
+        init.dense(64, 1000), init.bias(1000),
+    ]
+
+    def fn(params, img):
+        w1, b1, w2, b2, w3, b3, hw, hb = params
+        x = conv2d(img, w1, b1, stride=2)
+        x = conv2d(x, w2, b2, stride=2)
+        x = conv2d(x, w3, b3, stride=2)
+        return (classifier_head(global_pool(x), hw, hb),)
+
+    return ModelDef(
+        name="vgg",
+        params=ps,
+        fn=fn,
+        input_spec=lambda b: [f32((b, *IMG))],
+        batches=[1, 10],
+        meta={"n_classes": 1000},
+    )
+
+
+# --------------------------------------------------------------------------
+# yolo stand-in (frame -> 8x8 grid of [obj, x, y, w, h, p_person, p_vehicle])
+# --------------------------------------------------------------------------
+
+
+def build_yolo() -> ModelDef:
+    init = P.Init(P.SEEDS["yolo"])
+    ps = [
+        init.conv(3, 3, 3, 16), init.bias(16),
+        init.conv(3, 3, 16, 32), init.bias(32),
+        init.conv(3, 3, 32, 64), init.bias(64),
+        init.conv(1, 1, 64, 7), init.bias(7),
+    ]
+
+    def fn(params, img):
+        w1, b1, w2, b2, w3, b3, hw, hb = params
+        x = conv2d(img, w1, b1, stride=2)
+        x = conv2d(x, w2, b2, stride=2)
+        x = conv2d(x, w3, b3, stride=2)  # 8x8x64
+        head = lax.conv_general_dilated(
+            x, hw, (1, 1), "SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        ) + hb
+        obj = jax.nn.sigmoid(head[..., 0:1] * 4.0)
+        box = jnp.tanh(head[..., 1:5])
+        cls = jax.nn.softmax(head[..., 5:7] * 4.0, axis=-1)
+        return (jnp.concatenate([obj, box, cls], axis=-1),)
+
+    return ModelDef(
+        name="yolo",
+        params=ps,
+        fn=fn,
+        input_spec=lambda b: [f32((b, *IMG))],
+        batches=[1, 10, 30],
+        meta={"grid": 8, "channels": 7},
+    )
+
+
+# --------------------------------------------------------------------------
+# language id (fastText stand-in)
+# --------------------------------------------------------------------------
+
+
+def build_langid() -> ModelDef:
+    init = P.Init(P.SEEDS["langid"])
+    ps = [
+        init.dense(LANG_FEATS, 64), init.bias(64),
+        init.dense(64, 2), init.bias(2),
+    ]
+
+    def fn(params, feats):
+        w1, b1, w2, b2 = params
+        h = dense(feats, w1, b1, act="relu")
+        return (classifier_head(h, w2, b2, tau=2.0),)
+
+    return ModelDef(
+        name="langid",
+        params=ps,
+        fn=fn,
+        input_spec=lambda b: [f32((b, LANG_FEATS))],
+        batches=[1, 10],
+        meta={"classes": ["fr", "de"]},
+    )
+
+
+# --------------------------------------------------------------------------
+# NMT stand-in (ConvS2S-flavoured: embedding + GLU conv blocks + projection)
+# --------------------------------------------------------------------------
+
+
+def build_nmt(name: str) -> ModelDef:
+    init = P.Init(P.SEEDS[name])
+    ps = [
+        init.embedding(VOCAB, EMB),
+        init.vec(SEQ_LEN * EMB, 0.05).reshape(SEQ_LEN, EMB),  # pos emb
+        init.dense(3 * EMB, 2 * EMB).reshape(3, EMB, 2 * EMB),  # WIO conv1d
+        init.bias(2 * EMB),
+        init.dense(3 * EMB, 2 * EMB).reshape(3, EMB, 2 * EMB),
+        init.bias(2 * EMB),
+        init.dense(EMB, VOCAB),
+        init.bias(VOCAB),
+    ]
+
+    def glu_block(x, w, b):
+        y = conv1d(x, w, b)  # [b, t, 2*EMB]
+        a, g = jnp.split(y, 2, axis=-1)
+        return x + a * jax.nn.sigmoid(g)
+
+    def fn(params, ids):
+        emb, pos, w1, b1, w2, b2, pw, pb = params
+        x = jnp.take(emb, ids, axis=0) + pos  # [b, t, EMB]
+        x = glu_block(x, w1, b1)
+        x = glu_block(x, w2, b2)
+        bsz = x.shape[0]
+        flat = x.reshape(bsz * SEQ_LEN, EMB)
+        probs = softmax(dense(flat, pw, pb, act="none"), tau=1.0)
+        probs = probs.reshape(bsz, SEQ_LEN, VOCAB)
+        out_ids = jnp.argmax(probs, axis=-1).astype(jnp.int32)
+        conf = jnp.mean(jnp.max(probs, axis=-1), axis=-1)  # [b]
+        return (out_ids, conf)
+
+    return ModelDef(
+        name=name,
+        params=ps,
+        fn=fn,
+        input_spec=lambda b: [i32((b, SEQ_LEN))],
+        batches=[1, 10],
+        meta={"seq_len": SEQ_LEN, "vocab": VOCAB},
+    )
+
+
+# --------------------------------------------------------------------------
+# recommender scoring (Facebook DNN recsys stand-in)
+# --------------------------------------------------------------------------
+
+
+def build_recsys(k: int = 10) -> ModelDef:
+    def fn(params, user_vec, category):
+        scores = score(category, user_vec)  # Pallas blocked mat-vec
+        # argsort-based top-k: lax.top_k lowers to an HLO TopK attribute
+        # ("largest") that xla_extension 0.5.1's text parser rejects.
+        order = jnp.argsort(-scores)
+        idx = order[:k]
+        vals = jnp.take(scores, idx)
+        return (idx.astype(jnp.int32), vals)
+
+    return ModelDef(
+        name="recsys",
+        params=[],
+        fn=fn,
+        input_spec=lambda b: [f32((USER_DIM,)), f32((N_PRODUCTS, USER_DIM))],
+        batches=[1],
+        meta={"k": k, "n_products": N_PRODUCTS, "user_dim": USER_DIM},
+    )
+
+
+# --------------------------------------------------------------------------
+# registry
+# --------------------------------------------------------------------------
+
+
+def build_zoo() -> Dict[str, ModelDef]:
+    zoo = {}
+    for m in [
+        build_preproc(),
+        build_resnet("resnet", 1000),
+        build_resnet("resnet_person", 100),
+        build_resnet("resnet_vehicle", 100),
+        build_inception(),
+        build_vgg(),
+        build_yolo(),
+        build_langid(),
+        build_nmt("nmt_fr"),
+        build_nmt("nmt_de"),
+        build_recsys(),
+    ]:
+        zoo[m.name] = m
+    return zoo

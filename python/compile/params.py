@@ -1,0 +1,55 @@
+"""Deterministic parameter initialisation for the model zoo.
+
+Every model's parameters are generated from a fixed per-model seed so that
+the Python oracle tests and the Rust runtime (which loads the flattened
+``.params.bin``) agree bit-for-bit on the weights.
+"""
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+SEEDS = {
+    "preproc": 11,
+    "resnet": 101,
+    "inception": 303,
+    "vgg": 160,
+    "yolo": 930,
+    "resnet_person": 1011,
+    "resnet_vehicle": 1012,
+    "langid": 71,
+    "nmt_fr": 3301,
+    "nmt_de": 3302,
+    "recsys": 512,
+}
+
+
+class Init:
+    """Sequenced He/Glorot initialiser off a single PRNG key."""
+
+    def __init__(self, seed: int):
+        self._key = jax.random.PRNGKey(seed)
+
+    def _next(self):
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+    def conv(self, kh, kw, cin, cout):
+        """HWIO conv weight, He-normal over fan-in."""
+        fan_in = kh * kw * cin
+        w = jax.random.normal(self._next(), (kh, kw, cin, cout), jnp.float32)
+        return w * math.sqrt(2.0 / fan_in)
+
+    def dense(self, fin, fout):
+        w = jax.random.normal(self._next(), (fin, fout), jnp.float32)
+        return w * math.sqrt(2.0 / fin)
+
+    def bias(self, n):
+        return jnp.zeros((n,), jnp.float32)
+
+    def embedding(self, vocab, dim):
+        return jax.random.normal(self._next(), (vocab, dim), jnp.float32) * 0.1
+
+    def vec(self, n, scale=1.0):
+        return jax.random.normal(self._next(), (n,), jnp.float32) * scale

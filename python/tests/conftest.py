@@ -1,0 +1,11 @@
+import os
+import sys
+
+# Allow `pytest python/tests` from the repo root as well as `cd python`.
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from hypothesis import settings
+
+# Pallas interpret mode is slow; keep examples modest and drop deadlines.
+settings.register_profile("kernels", max_examples=25, deadline=None)
+settings.load_profile("kernels")

@@ -1,0 +1,102 @@
+"""AOT pipeline: HLO text emission, params blob layout, manifest schema."""
+
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from compile.aot import lower_artifact, write_params, spec_json, to_hlo_text
+from compile.model import build_zoo
+
+ZOO = build_zoo()
+
+
+def test_spec_json():
+    import jax
+    import jax.numpy as jnp
+
+    assert spec_json(jax.ShapeDtypeStruct((2, 3), jnp.float32)) == {
+        "dtype": "f32", "shape": [2, 3]}
+    assert spec_json(jax.ShapeDtypeStruct((5,), jnp.int32)) == {
+        "dtype": "i32", "shape": [5]}
+
+
+def test_lower_artifact_emits_parseable_hlo(tmp_path):
+    m = ZOO["langid"]
+    art = lower_artifact(m, 1, str(tmp_path))
+    text = (tmp_path / art["hlo"]).read_text()
+    assert text.startswith("HloModule")
+    assert "ENTRY" in text
+    assert art["n_params"] == len(m.params)
+    assert art["inputs"] == [{"dtype": "f32", "shape": [1, 128]}]
+    assert art["outputs"] == [{"dtype": "f32", "shape": [1, 2]}]
+
+
+def test_params_blob_roundtrip(tmp_path):
+    m = ZOO["langid"]
+    entry = write_params(m, str(tmp_path))
+    blob = np.fromfile(tmp_path / entry["params_file"], dtype="<f4")
+    offset = 0
+    for p, shape in zip(m.params, entry["param_shapes"]):
+        n = int(np.prod(shape)) if shape else 1
+        np.testing.assert_array_equal(
+            blob[offset:offset + n].reshape(shape), np.asarray(p))
+        offset += n
+    assert offset == blob.size
+    assert entry["params_bytes"] == blob.size * 4
+
+
+def test_params_deterministic_across_builds(tmp_path):
+    (tmp_path / "a").mkdir()
+    (tmp_path / "b").mkdir()
+    a = write_params(build_zoo()["resnet"], str(tmp_path / "a"))
+    b = write_params(build_zoo()["resnet"], str(tmp_path / "b"))
+    ba = (tmp_path / "a" / a["params_file"]).read_bytes()
+    bb = (tmp_path / "b" / b["params_file"]).read_bytes()
+    assert ba == bb
+
+
+def test_hlo_has_no_embedded_weight_constants(tmp_path):
+    """Weights must be arguments, not constants, to keep HLO small."""
+    m = ZOO["resnet"]
+    art = lower_artifact(m, 1, str(tmp_path))
+    # ~620K params as text constants would be megabytes; arguments keep the
+    # module well under 100KB.
+    assert art["hlo_bytes"] < 100_000
+
+
+def test_manifest_written_by_cli(tmp_path):
+    env = dict(os.environ)
+    py_dir = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    r = subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out", str(tmp_path),
+         "--models", "langid", "--skip-calibration"],
+        cwd=py_dir, env=env, capture_output=True, text=True, timeout=600,
+    )
+    assert r.returncode == 0, r.stderr
+    man = json.loads((tmp_path / "manifest.json").read_text())
+    assert man["version"] == 1
+    assert "langid" in man["models"]
+    names = {a["name"] for a in man["artifacts"]}
+    assert names == {"langid.b1", "langid.b10"}
+    for a in man["artifacts"]:
+        assert (tmp_path / a["hlo"]).exists()
+
+
+def test_repo_manifest_consistent_if_built():
+    """If `make artifacts` has run, the checked artifacts dir is coherent."""
+    root = os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    man_path = os.path.join(root, "artifacts", "manifest.json")
+    if not os.path.exists(man_path):
+        pytest.skip("artifacts not built")
+    man = json.load(open(man_path))
+    for a in man["artifacts"]:
+        assert os.path.exists(os.path.join(root, "artifacts", a["hlo"]))
+        assert a["model"] in man["models"]
+    for name, m in man["models"].items():
+        p = os.path.join(root, "artifacts", m["params_file"])
+        assert os.path.getsize(p) == m["params_bytes"]
+    assert "calibration" in man

@@ -1,0 +1,118 @@
+"""Model-zoo contracts the Rust runtime depends on."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.model import build_zoo, SEQ_LEN, VOCAB
+
+ZOO = build_zoo()
+
+
+def make_inputs(m, batch, seed=42):
+    args = []
+    key = jax.random.PRNGKey(seed)
+    for s in m.input_spec(batch):
+        key, sub = jax.random.split(key)
+        if s.dtype == jnp.int32:
+            args.append(jax.random.randint(sub, s.shape, 0, VOCAB - 1))
+        elif len(s.shape) == 4:  # image-like: raw pixels
+            args.append(jax.random.uniform(sub, s.shape, jnp.float32, 0, 255))
+        else:
+            args.append(jax.random.normal(sub, s.shape, jnp.float32))
+    return args
+
+
+@pytest.mark.parametrize("name", sorted(ZOO))
+def test_output_shapes_match_eval_shape(name):
+    m = ZOO[name]
+    b = m.batches[0]
+    args = make_inputs(m, b)
+    outs = m.fn(m.params, *args)
+    expect = jax.eval_shape(m.lowering_fn(), *m.lowering_args(b))
+    assert len(outs) == len(expect)
+    for got, want in zip(outs, expect):
+        assert got.shape == want.shape and got.dtype == want.dtype
+
+
+@pytest.mark.parametrize("name", sorted(ZOO))
+def test_outputs_finite_and_deterministic(name):
+    m = ZOO[name]
+    args = make_inputs(m, m.batches[0])
+    o1 = m.fn(m.params, *args)
+    o2 = m.fn(m.params, *args)
+    for a, b in zip(o1, o2):
+        assert np.all(np.isfinite(np.asarray(a, dtype=np.float64)))
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("name", ["resnet", "inception", "vgg", "yolo", "preproc"])
+def test_batch_consistency(name):
+    """Row i of a batched run equals a singleton run of row i."""
+    m = ZOO[name]
+    args = make_inputs(m, 4)
+    batched = m.fn(m.params, *args)
+    single = m.fn(m.params, *[a[1:2] for a in args])
+    for bo, so in zip(batched, single):
+        np.testing.assert_allclose(
+            np.asarray(bo[1:2]), np.asarray(so), rtol=1e-4, atol=1e-5
+        )
+
+
+def test_classifier_probabilities():
+    for name in ("resnet", "inception", "vgg", "resnet_person", "langid"):
+        m = ZOO[name]
+        (probs,) = m.fn(m.params, *make_inputs(m, 2))
+        np.testing.assert_allclose(np.sum(probs, axis=-1), np.ones(2), rtol=1e-4)
+        assert np.all(np.asarray(probs) >= 0)
+
+
+def test_resnet_confidence_spreads():
+    """Cascade routing needs a non-degenerate confidence distribution."""
+    m = ZOO["resnet"]
+    imgs = jax.random.uniform(jax.random.PRNGKey(7), (64, 64, 64, 3), jnp.float32, 0, 255)
+    conf = np.asarray(jnp.max(m.fn(m.params, imgs)[0], axis=-1))
+    assert conf.std() > 0.003, f"degenerate confidence: {conf.std()}"
+    assert 0.0 < conf.min() < conf.max() < 1.0
+
+
+def test_yolo_output_ranges():
+    m = ZOO["yolo"]
+    (grid,) = m.fn(m.params, *make_inputs(m, 2))
+    g = np.asarray(grid)
+    assert g.shape == (2, 8, 8, 7)
+    assert np.all((g[..., 0] >= 0) & (g[..., 0] <= 1))  # objectness
+    assert np.all((g[..., 1:5] >= -1) & (g[..., 1:5] <= 1))  # boxes
+    np.testing.assert_allclose(g[..., 5:7].sum(-1), np.ones((2, 8, 8)), rtol=1e-4)
+
+
+def test_nmt_output_ids_in_vocab():
+    m = ZOO["nmt_fr"]
+    ids, conf = m.fn(m.params, *make_inputs(m, 2))
+    assert ids.shape == (2, SEQ_LEN) and ids.dtype == jnp.int32
+    assert np.all((np.asarray(ids) >= 0) & (np.asarray(ids) < VOCAB))
+    assert np.all((np.asarray(conf) > 0) & (np.asarray(conf) <= 1))
+
+
+def test_nmt_fr_de_differ():
+    fr, de = ZOO["nmt_fr"], ZOO["nmt_de"]
+    args = make_inputs(fr, 1)
+    ids_fr = np.asarray(fr.fn(fr.params, *args)[0])
+    ids_de = np.asarray(de.fn(de.params, *args)[0])
+    assert not np.array_equal(ids_fr, ids_de)
+
+
+def test_recsys_topk_sorted_and_valid():
+    m = ZOO["recsys"]
+    idx, vals = m.fn(m.params, *make_inputs(m, 1))
+    v = np.asarray(vals)
+    assert np.all(v[:-1] >= v[1:])  # descending
+    assert np.all((np.asarray(idx) >= 0) & (np.asarray(idx) < 2500))
+    assert len(np.unique(np.asarray(idx))) == 10
+
+
+def test_params_all_f32():
+    for m in ZOO.values():
+        for p in m.params:
+            assert p.dtype == jnp.float32, f"{m.name} has non-f32 param"

@@ -1,0 +1,40 @@
+"""Pallas normalize kernel vs oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from compile.kernels import normalize
+from compile.kernels.ref import normalize_ref
+
+
+@given(
+    b=st.integers(1, 8),
+    h=st.sampled_from([4, 16, 64]),
+    c=st.sampled_from([1, 3]),
+    seed=st.integers(0, 2**16),
+)
+def test_normalize_matches_ref(b, h, c, seed):
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.uniform(key, (b, h, h, c), jnp.float32, 0.0, 255.0)
+    mean = jnp.linspace(0.2, 0.6, c)
+    std = jnp.linspace(0.2, 0.3, c)
+    np.testing.assert_allclose(
+        normalize(x, mean, std), normalize_ref(x, mean, std), rtol=1e-5, atol=1e-5
+    )
+
+
+def test_normalize_extremes():
+    x = jnp.stack([jnp.zeros((4, 4, 3)), jnp.full((4, 4, 3), 255.0)])
+    mean = jnp.array([0.485, 0.456, 0.406])
+    std = jnp.array([0.229, 0.224, 0.225])
+    got = normalize(x, mean, std)
+    np.testing.assert_allclose(got[0, 0, 0], -mean / std, rtol=1e-5)
+    np.testing.assert_allclose(got[1, 0, 0], (1.0 - mean) / std, rtol=1e-5)
+
+
+def test_channel_mismatch_raises():
+    with pytest.raises(ValueError):
+        normalize(jnp.zeros((1, 4, 4, 3)), jnp.zeros((4,)), jnp.zeros((4,)))

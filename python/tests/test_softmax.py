@@ -1,0 +1,42 @@
+"""Pallas softmax kernel vs oracle: stability, temperature, invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, strategies as st
+
+from compile.kernels import softmax
+from compile.kernels.ref import softmax_ref
+
+
+@given(
+    m=st.integers(1, 16),
+    n=st.sampled_from([2, 10, 100, 1000]),
+    tau=st.sampled_from([0.5, 1.0, 2.0, 4.0]),
+    seed=st.integers(0, 2**16),
+)
+def test_softmax_matches_ref(m, n, tau, seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (m, n), jnp.float32) * 3.0
+    got = softmax(x, tau)
+    np.testing.assert_allclose(got, softmax_ref(x, tau), rtol=1e-5, atol=1e-7)
+    # rows sum to 1
+    np.testing.assert_allclose(jnp.sum(got, axis=-1), jnp.ones(m), rtol=1e-5)
+
+
+def test_softmax_numerically_stable_at_large_logits():
+    x = jnp.array([[1e4, 1e4 - 1.0, 0.0]])
+    got = np.asarray(softmax(x))
+    assert np.all(np.isfinite(got))
+    np.testing.assert_allclose(got.sum(), 1.0, rtol=1e-6)
+
+
+def test_softmax_shift_invariance():
+    x = jax.random.normal(jax.random.PRNGKey(3), (4, 100))
+    np.testing.assert_allclose(softmax(x), softmax(x + 100.0), rtol=1e-4, atol=1e-6)
+
+
+def test_temperature_sharpens():
+    x = jax.random.normal(jax.random.PRNGKey(5), (8, 100))
+    cold = np.asarray(softmax(x, 8.0)).max(axis=-1)
+    warm = np.asarray(softmax(x, 1.0)).max(axis=-1)
+    assert np.all(cold >= warm)

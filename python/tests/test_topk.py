@@ -1,0 +1,42 @@
+"""Pallas recommender scoring kernel vs oracle + top-k composition."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from compile.kernels import score
+from compile.kernels.ref import score_ref
+
+
+@given(
+    r=st.sampled_from([1, 10, 100, 625, 2500]),
+    d=st.sampled_from([8, 64, 512]),
+    seed=st.integers(0, 2**16),
+)
+def test_score_matches_ref(r, d, seed):
+    key = jax.random.PRNGKey(seed)
+    mat = jax.random.normal(key, (r, d), jnp.float32)
+    vec = jax.random.normal(jax.random.PRNGKey(seed + 1), (d,), jnp.float32)
+    np.testing.assert_allclose(score(mat, vec), score_ref(mat, vec), rtol=1e-4, atol=1e-3)
+
+
+def test_topk_composition_selects_true_top():
+    mat = jax.random.normal(jax.random.PRNGKey(0), (2500, 512))
+    vec = jax.random.normal(jax.random.PRNGKey(1), (512,))
+    s = np.asarray(score(mat, vec))
+    vals, idx = jax.lax.top_k(jnp.asarray(s), 10)
+    np.testing.assert_array_equal(np.asarray(idx), np.argsort(-s)[:10])
+
+
+def test_score_shape_mismatch_raises():
+    with pytest.raises(ValueError):
+        score(jnp.zeros((10, 8)), jnp.zeros((9,)))
+
+
+def test_score_identity_rows():
+    # one-hot rows pick out vector entries exactly
+    mat = jnp.eye(64)
+    vec = jnp.arange(64, dtype=jnp.float32)
+    np.testing.assert_allclose(score(mat, vec), vec, atol=1e-6)

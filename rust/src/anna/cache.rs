@@ -1,0 +1,237 @@
+//! Executor-colocated LRU caches and the cluster-wide cache directory.
+//!
+//! Cloudburst places a cache on every executor node; its scheduler keeps a
+//! (heuristic) view of which node caches which keys and routes work there.
+//! We model the cache exactly (byte-capacity LRU) and the directory as a
+//! registry updated on fill/evict — equivalent to the paper's periodically
+//! gossiped cached-key lists with the gossip delay set to zero; the
+//! scheduler still treats it as a *hint* (a cache may have evicted by the
+//! time work arrives).
+
+use std::collections::{BTreeMap, HashMap, HashSet};
+use std::sync::{Arc, Mutex, RwLock};
+
+use crate::net::NodeId;
+
+use super::store::Bytes;
+
+#[derive(Debug, Default)]
+struct CacheInner {
+    map: HashMap<String, (Bytes, u64)>, // value, lru-tick
+    order: BTreeMap<u64, String>,       // lru-tick -> key
+    bytes: usize,
+    tick: u64,
+    hits: u64,
+    misses: u64,
+}
+
+/// Byte-capacity LRU cache bound to one executor node.
+#[derive(Debug)]
+pub struct Cache {
+    node: NodeId,
+    capacity: usize,
+    inner: Mutex<CacheInner>,
+    directory: Arc<Directory>,
+}
+
+impl Cache {
+    pub fn new(node: NodeId, capacity: usize, directory: Arc<Directory>) -> Self {
+        Cache { node, capacity, inner: Mutex::new(CacheInner::default()), directory }
+    }
+
+    pub fn node(&self) -> NodeId {
+        self.node
+    }
+
+    pub fn get(&self, key: &str) -> Option<Bytes> {
+        let mut c = self.inner.lock().unwrap();
+        c.tick += 1;
+        let tick = c.tick;
+        if let Some((v, old)) = c.map.get_mut(key) {
+            let v = v.clone();
+            let old = std::mem::replace(old, tick);
+            c.order.remove(&old);
+            c.order.insert(tick, key.to_string());
+            c.hits += 1;
+            Some(v)
+        } else {
+            c.misses += 1;
+            None
+        }
+    }
+
+    pub fn insert(&self, key: &str, value: Bytes) {
+        if value.len() > self.capacity {
+            return; // would evict everything and still not fit
+        }
+        let mut c = self.inner.lock().unwrap();
+        c.tick += 1;
+        let tick = c.tick;
+        if let Some((old_v, old_t)) = c.map.remove(key) {
+            c.order.remove(&old_t);
+            c.bytes -= old_v.len();
+        }
+        c.bytes += value.len();
+        c.map.insert(key.to_string(), (value, tick));
+        c.order.insert(tick, key.to_string());
+        self.directory.note_cached(key, self.node);
+        // Evict LRU until under capacity.
+        while c.bytes > self.capacity {
+            let (&t, _) = c.order.iter().next().unwrap();
+            let victim = c.order.remove(&t).unwrap();
+            if let Some((v, _)) = c.map.remove(&victim) {
+                c.bytes -= v.len();
+                self.directory.note_evicted(&victim, self.node);
+            }
+        }
+    }
+
+    pub fn invalidate(&self, key: &str) {
+        let mut c = self.inner.lock().unwrap();
+        if let Some((v, t)) = c.map.remove(key) {
+            c.order.remove(&t);
+            c.bytes -= v.len();
+            self.directory.note_evicted(key, self.node);
+        }
+    }
+
+    pub fn bytes_used(&self) -> usize {
+        self.inner.lock().unwrap().bytes
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// (hits, misses).
+    pub fn stats(&self) -> (u64, u64) {
+        let c = self.inner.lock().unwrap();
+        (c.hits, c.misses)
+    }
+}
+
+/// Cluster-wide view of which nodes (likely) cache which keys; the
+/// scheduler's locality signal for dynamic dispatch (§4 Data Locality).
+#[derive(Debug, Default)]
+pub struct Directory {
+    map: RwLock<HashMap<String, HashSet<NodeId>>>,
+}
+
+impl Directory {
+    pub fn new() -> Arc<Self> {
+        Arc::new(Self::default())
+    }
+
+    fn note_cached(&self, key: &str, node: NodeId) {
+        self.map.write().unwrap().entry(key.to_string()).or_default().insert(node);
+    }
+
+    fn note_evicted(&self, key: &str, node: NodeId) {
+        let mut m = self.map.write().unwrap();
+        if let Some(s) = m.get_mut(key) {
+            s.remove(&node);
+            if s.is_empty() {
+                m.remove(key);
+            }
+        }
+    }
+
+    /// Nodes believed to cache `key`.
+    pub fn holders(&self, key: &str) -> Vec<NodeId> {
+        self.map
+            .read()
+            .unwrap()
+            .get(key)
+            .map(|s| {
+                let mut v: Vec<NodeId> = s.iter().copied().collect();
+                v.sort();
+                v
+            })
+            .unwrap_or_default()
+    }
+
+    pub fn any_holder(&self, key: &str) -> Option<NodeId> {
+        self.holders(key).into_iter().next()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk(cap: usize) -> (Cache, Arc<Directory>) {
+        let d = Directory::new();
+        (Cache::new(NodeId(1), cap, d.clone()), d)
+    }
+
+    fn val(n: usize) -> Bytes {
+        Arc::new(vec![0u8; n])
+    }
+
+    #[test]
+    fn hit_and_miss() {
+        let (c, _) = mk(100);
+        assert!(c.get("a").is_none());
+        c.insert("a", val(10));
+        assert_eq!(c.get("a").unwrap().len(), 10);
+        assert_eq!(c.stats(), (1, 1));
+    }
+
+    #[test]
+    fn lru_eviction_order() {
+        let (c, _) = mk(30);
+        c.insert("a", val(10));
+        c.insert("b", val(10));
+        c.insert("c", val(10));
+        c.get("a"); // refresh a
+        c.insert("d", val(10)); // evicts b (LRU)
+        assert!(c.get("b").is_none());
+        assert!(c.get("a").is_some());
+        assert!(c.get("c").is_some());
+        assert!(c.get("d").is_some());
+        assert!(c.bytes_used() <= 30);
+    }
+
+    #[test]
+    fn oversized_value_rejected() {
+        let (c, d) = mk(5);
+        c.insert("big", val(10));
+        assert!(c.get("big").is_none());
+        assert!(d.holders("big").is_empty());
+    }
+
+    #[test]
+    fn reinsert_replaces_bytes() {
+        let (c, _) = mk(100);
+        c.insert("a", val(40));
+        c.insert("a", val(10));
+        assert_eq!(c.bytes_used(), 10);
+        assert_eq!(c.len(), 1);
+    }
+
+    #[test]
+    fn directory_tracks_fill_and_evict() {
+        let d = Directory::new();
+        let c1 = Cache::new(NodeId(1), 20, d.clone());
+        let c2 = Cache::new(NodeId(2), 20, d.clone());
+        c1.insert("k", val(10));
+        c2.insert("k", val(10));
+        assert_eq!(d.holders("k"), vec![NodeId(1), NodeId(2)]);
+        c1.insert("other", val(15)); // evicts k from node 1
+        assert_eq!(d.holders("k"), vec![NodeId(2)]);
+        c2.invalidate("k");
+        assert!(d.holders("k").is_empty());
+        assert!(d.any_holder("k").is_none());
+    }
+
+    #[test]
+    fn invalidate_missing_is_noop() {
+        let (c, _) = mk(10);
+        c.invalidate("nothing");
+        assert!(c.is_empty());
+    }
+}

@@ -1,0 +1,160 @@
+//! Node-bound KVS client: the access path executors use.
+//!
+//! A `get` first consults the node's cache (modeled cache-hit cost);
+//! otherwise it pays the modeled remote cost (base + size-dependent wire
+//! time) and fills the cache — exactly the behaviour Cloudburst's
+//! cache-on-executor design gives the paper's pipelines.
+
+use std::sync::Arc;
+
+use crate::config;
+use crate::net::NodeId;
+use crate::simulation::clock;
+
+use super::cache::Cache;
+use super::store::{Bytes, Store};
+
+#[derive(Clone)]
+pub struct KvsClient {
+    store: Arc<Store>,
+    cache: Option<Arc<Cache>>,
+    node: NodeId,
+}
+
+impl KvsClient {
+    /// Client colocated with an executor cache.
+    pub fn cached(store: Arc<Store>, cache: Arc<Cache>) -> Self {
+        let node = cache.node();
+        KvsClient { store, cache: Some(cache), node }
+    }
+
+    /// Cache-less client (e.g. the benchmark driver writing inputs).
+    pub fn direct(store: Arc<Store>, node: NodeId) -> Self {
+        KvsClient { store, cache: None, node }
+    }
+
+    pub fn node(&self) -> NodeId {
+        self.node
+    }
+
+    fn remote_cost_ms(bytes: usize) -> f64 {
+        let c = config::global();
+        c.kvs.remote_base_ms + bytes as f64 / c.kvs.remote_bytes_per_ms
+    }
+
+    /// Get with modeled cost; `Ok(None)` when the key is absent.
+    pub fn get(&self, key: &str) -> Option<Bytes> {
+        if let Some(cache) = &self.cache {
+            if let Some(v) = cache.get(key) {
+                clock::sleep_ms(config::global().kvs.cache_hit_ms);
+                return Some(v);
+            }
+        }
+        let v = self.store.get(key)?;
+        clock::sleep_ms(Self::remote_cost_ms(v.len()));
+        if let Some(cache) = &self.cache {
+            cache.insert(key, v.clone());
+        }
+        Some(v)
+    }
+
+    /// Get bypassing the cache entirely (used by baselines with external
+    /// stores and by cache-bypass ablations).
+    pub fn get_uncached(&self, key: &str) -> Option<Bytes> {
+        let v = self.store.get(key)?;
+        clock::sleep_ms(Self::remote_cost_ms(v.len()));
+        Some(v)
+    }
+
+    /// Put with modeled cost.
+    pub fn put(&self, key: &str, value: Vec<u8>) {
+        clock::sleep_ms(Self::remote_cost_ms(value.len()));
+        self.store.put(key, value);
+    }
+
+    /// Put without sleeping (test/bench setup paths).
+    pub fn put_free(&self, key: &str, value: Vec<u8>) {
+        self.store.put(key, value);
+    }
+
+    pub fn store(&self) -> &Arc<Store> {
+        &self.store
+    }
+
+    pub fn cache(&self) -> Option<&Arc<Cache>> {
+        self.cache.as_ref()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::anna::cache::Directory;
+    use crate::simulation::clock::Clock;
+
+    fn setup() -> (Arc<Store>, Arc<Cache>) {
+        let store = Arc::new(Store::new(4));
+        let dir = Directory::new();
+        let cache = Arc::new(Cache::new(NodeId(1), 1 << 20, dir));
+        (store, cache)
+    }
+
+    #[test]
+    fn get_fills_cache_then_hits() {
+        let (store, cache) = setup();
+        let cl = KvsClient::cached(store, cache.clone());
+        cl.put_free("k", vec![7; 100]);
+        assert_eq!(cl.get("k").unwrap().len(), 100);
+        assert_eq!(cache.stats().1, 1); // one miss
+        assert_eq!(cl.get("k").unwrap().len(), 100);
+        assert_eq!(cache.stats().0, 1); // then a hit
+    }
+
+    #[test]
+    fn missing_key_is_none() {
+        let (store, cache) = setup();
+        let cl = KvsClient::cached(store, cache);
+        assert!(cl.get("missing").is_none());
+    }
+
+    #[test]
+    fn cache_hit_is_much_cheaper_than_remote() {
+        let store = Arc::new(Store::new(4));
+        let dir = Directory::new();
+        // Capacity must exceed the 8MB value or the fill is rejected.
+        let cache = Arc::new(Cache::new(NodeId(1), 64 << 20, dir));
+        let cl = KvsClient::cached(store, cache);
+        cl.put_free("big", vec![0; 8_000_000]);
+        let c0 = Clock::new();
+        cl.get("big");
+        let cold = c0.now_ms();
+        // Under parallel test load the wall clock is noisy; take the best
+        // of several warm reads.
+        let warm = (0..10)
+            .map(|_| {
+                let c = Clock::new();
+                cl.get("big");
+                c.now_ms()
+            })
+            .fold(f64::MAX, f64::min);
+        assert!(cold > warm * 3.0, "cold={cold} warm={warm}");
+    }
+
+    #[test]
+    fn uncached_never_fills() {
+        let (store, cache) = setup();
+        let cl = KvsClient::cached(store, cache.clone());
+        cl.put_free("k", vec![1; 10]);
+        cl.get_uncached("k");
+        assert_eq!(cache.len(), 0);
+    }
+
+    #[test]
+    fn direct_client_works_without_cache() {
+        let store = Arc::new(Store::new(2));
+        let cl = KvsClient::direct(store, NodeId::CLIENT);
+        cl.put("k", vec![1, 2]);
+        assert_eq!(cl.get("k").unwrap().as_slice(), &[1, 2]);
+        assert!(cl.cache().is_none());
+    }
+}

@@ -1,0 +1,16 @@
+//! Anna-like key-value store substrate.
+//!
+//! Cloudburst's storage layer: a sharded, last-writer-wins KVS
+//! ([`store::Store`]), per-executor-node LRU caches ([`cache::Cache`]),
+//! a directory that tracks which nodes likely cache which keys
+//! ([`cache::Directory`], the scheduler's locality signal), and a
+//! node-bound client ([`client::KvsClient`]) that charges modeled costs
+//! for remote access vs cache hits.
+
+pub mod cache;
+pub mod client;
+pub mod store;
+
+pub use cache::{Cache, Directory};
+pub use client::KvsClient;
+pub use store::Store;

@@ -1,0 +1,176 @@
+//! Sharded in-process KVS with last-writer-wins semantics.
+//!
+//! The paper's Anna deployment is a distributed autoscaling store; the
+//! experiments only exercise its interface costs (get/put latency as a
+//! function of payload size) and LWW behaviour, which this preserves.
+//! Values are `Arc`ed so cache fills don't copy payloads.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+pub type Bytes = Arc<Vec<u8>>;
+
+#[derive(Debug)]
+struct Shard {
+    map: Mutex<HashMap<String, (Bytes, u64)>>, // value, write-version
+}
+
+#[derive(Debug)]
+pub struct Store {
+    shards: Vec<Shard>,
+    version: AtomicU64,
+    gets: AtomicU64,
+    puts: AtomicU64,
+}
+
+impl Store {
+    pub fn new(n_shards: usize) -> Self {
+        assert!(n_shards > 0);
+        Store {
+            shards: (0..n_shards)
+                .map(|_| Shard { map: Mutex::new(HashMap::new()) })
+                .collect(),
+            version: AtomicU64::new(0),
+            gets: AtomicU64::new(0),
+            puts: AtomicU64::new(0),
+        }
+    }
+
+    fn shard(&self, key: &str) -> &Shard {
+        // FNV-1a: stable shard placement across the run.
+        let mut h = 0xcbf29ce484222325u64;
+        for b in key.bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+        &self.shards[(h % self.shards.len() as u64) as usize]
+    }
+
+    /// Last-writer-wins put; returns the assigned version.
+    pub fn put(&self, key: &str, value: Vec<u8>) -> u64 {
+        let v = self.version.fetch_add(1, Ordering::Relaxed) + 1;
+        self.puts.fetch_add(1, Ordering::Relaxed);
+        let mut m = self.shard(key).map.lock().unwrap();
+        match m.get(key) {
+            Some((_, existing)) if *existing > v => {} // stale writer loses
+            _ => {
+                m.insert(key.to_string(), (Arc::new(value), v));
+            }
+        }
+        v
+    }
+
+    pub fn get(&self, key: &str) -> Option<Bytes> {
+        self.gets.fetch_add(1, Ordering::Relaxed);
+        self.shard(key).map.lock().unwrap().get(key).map(|(b, _)| b.clone())
+    }
+
+    pub fn get_versioned(&self, key: &str) -> Option<(Bytes, u64)> {
+        self.shard(key).map.lock().unwrap().get(key).cloned()
+    }
+
+    pub fn delete(&self, key: &str) -> bool {
+        self.shard(key).map.lock().unwrap().remove(key).is_some()
+    }
+
+    pub fn contains(&self, key: &str) -> bool {
+        self.shard(key).map.lock().unwrap().contains_key(key)
+    }
+
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.map.lock().unwrap().len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// (gets, puts) op counters.
+    pub fn op_counts(&self) -> (u64, u64) {
+        (self.gets.load(Ordering::Relaxed), self.puts.load(Ordering::Relaxed))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    #[test]
+    fn put_get_roundtrip() {
+        let s = Store::new(4);
+        s.put("k", vec![1, 2, 3]);
+        assert_eq!(s.get("k").unwrap().as_slice(), &[1, 2, 3]);
+        assert!(s.get("missing").is_none());
+    }
+
+    #[test]
+    fn overwrite_wins() {
+        let s = Store::new(2);
+        s.put("k", vec![1]);
+        s.put("k", vec![2]);
+        assert_eq!(s.get("k").unwrap().as_slice(), &[2]);
+    }
+
+    #[test]
+    fn delete_and_contains() {
+        let s = Store::new(2);
+        s.put("k", vec![1]);
+        assert!(s.contains("k"));
+        assert!(s.delete("k"));
+        assert!(!s.delete("k"));
+        assert!(!s.contains("k"));
+    }
+
+    #[test]
+    fn keys_spread_across_shards() {
+        let s = Store::new(8);
+        for i in 0..256 {
+            s.put(&format!("key-{i}"), vec![0]);
+        }
+        let counts: Vec<usize> =
+            s.shards.iter().map(|sh| sh.map.lock().unwrap().len()).collect();
+        assert_eq!(counts.iter().sum::<usize>(), 256);
+        assert!(counts.iter().all(|&c| c > 8), "skewed shards: {counts:?}");
+    }
+
+    #[test]
+    fn concurrent_writers_last_write_wins() {
+        let s = Arc::new(Store::new(4));
+        let mut handles = Vec::new();
+        for t in 0..8u8 {
+            let s = s.clone();
+            handles.push(thread::spawn(move || {
+                for i in 0..100 {
+                    s.put("contended", vec![t, i]);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        // Some write won and the value is a coherent 2-byte payload.
+        let v = s.get("contended").unwrap();
+        assert_eq!(v.len(), 2);
+        let (_, ver) = s.get_versioned("contended").unwrap();
+        assert!(ver >= 1);
+    }
+
+    #[test]
+    fn op_counters() {
+        let s = Store::new(1);
+        s.put("a", vec![]);
+        s.get("a");
+        s.get("b");
+        assert_eq!(s.op_counts(), (2, 1));
+    }
+
+    #[test]
+    fn versions_monotone() {
+        let s = Store::new(1);
+        let v1 = s.put("a", vec![1]);
+        let v2 = s.put("a", vec![2]);
+        assert!(v2 > v1);
+    }
+}

@@ -1,0 +1,480 @@
+//! Microservice baseline engine: per-stage endpoints + proxy driver.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::anna::{Cache, Directory, KvsClient, Store};
+use crate::config;
+use crate::dataflow::compiler::{compile, OptFlags, PlanStage, StageInput};
+use crate::dataflow::exec_local::{apply_op, apply_union};
+use crate::dataflow::operator::ExecCtx;
+use crate::dataflow::table::Table;
+use crate::dataflow::Dataflow;
+use crate::net::{Fabric, NodeId};
+use crate::runtime::InferClient;
+use crate::simulation::clock;
+use crate::simulation::gpu::Device;
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BaselineKind {
+    /// Hosted model-management service: endpoints, proxy driver, no
+    /// batching.
+    Sagemaker,
+    /// Research serving system: endpoints + aggressive adaptive batching.
+    Clipper,
+}
+
+impl BaselineKind {
+    pub fn label(&self) -> &'static str {
+        match self {
+            BaselineKind::Sagemaker => "sagemaker",
+            BaselineKind::Clipper => "clipper",
+        }
+    }
+}
+
+struct Invocation {
+    tables: Vec<Table>,
+    resp: mpsc::Sender<Result<Table>>,
+}
+
+struct Worker {
+    #[allow(dead_code)] // identity retained for debugging/traces
+    node: NodeId,
+    queue: Mutex<VecDeque<Invocation>>,
+    cv: Condvar,
+    shutdown: AtomicBool,
+}
+
+impl Worker {
+    fn pop_batch(&self, max: usize, wait_for_batch_ms: f64) -> Vec<Invocation> {
+        let mut q = self.queue.lock().unwrap();
+        loop {
+            if !q.is_empty() {
+                if max > 1 && q.len() < max && wait_for_batch_ms > 0.0 {
+                    // Clipper-style aggressive batching: linger briefly to
+                    // grow the batch.
+                    let real = wait_for_batch_ms * config::global().time_scale;
+                    let (guard, _) = self
+                        .cv
+                        .wait_timeout(q, Duration::from_secs_f64(real / 1e3))
+                        .unwrap();
+                    q = guard;
+                }
+                let n = q.len().min(max.max(1));
+                return q.drain(..n).collect();
+            }
+            if self.shutdown.load(Ordering::Relaxed) {
+                return Vec::new();
+            }
+            let (guard, _) =
+                self.cv.wait_timeout(q, Duration::from_millis(50)).unwrap();
+            q = guard;
+        }
+    }
+}
+
+struct Endpoint {
+    stage: PlanStage,
+    workers: Mutex<Vec<Arc<Worker>>>,
+    rr: AtomicUsize,
+}
+
+/// A deployed baseline pipeline.
+pub struct Baseline {
+    pub kind: BaselineKind,
+    stages: Vec<PlanStage>,
+    output: usize,
+    endpoints: Vec<Arc<Endpoint>>,
+    store: Arc<Store>,
+    fabric: Arc<Fabric>,
+    directory: Arc<Directory>,
+    infer: Option<InferClient>,
+    next_node: AtomicUsize,
+    rng: Mutex<Rng>,
+}
+
+impl Baseline {
+    /// Deploy a flow as one endpoint per operator (no fusion — these
+    /// systems have no visibility into pipeline structure). `force_cpu`
+    /// models the paper's CPU-only deployments.
+    pub fn deploy(
+        flow: &Dataflow,
+        kind: BaselineKind,
+        infer: Option<InferClient>,
+        force_cpu: bool,
+    ) -> Result<Arc<Baseline>> {
+        // The naive 1:1 lowering (single segment, one op per stage).
+        let mut plan = compile(flow, &OptFlags::none())?;
+        if force_cpu {
+            for seg in &mut plan.segments {
+                for st in &mut seg.stages {
+                    st.device = Device::Cpu;
+                }
+            }
+        }
+        let seg = plan.segments.pop().context("baseline plan must be one segment")?;
+        let b = Arc::new(Baseline {
+            kind,
+            endpoints: seg
+                .stages
+                .iter()
+                .map(|s| {
+                    Arc::new(Endpoint {
+                        stage: s.clone(),
+                        workers: Mutex::new(Vec::new()),
+                        rr: AtomicUsize::new(0),
+                    })
+                })
+                .collect(),
+            stages: seg.stages,
+            output: seg.output,
+            store: Arc::new(Store::new(config::global().kvs.shards)),
+            fabric: Arc::new(Fabric::new()),
+            directory: Directory::new(),
+            infer,
+            next_node: AtomicUsize::new(1000), // distinct from driver
+            rng: Mutex::new(Rng::new(0xBA5E)),
+        });
+        for i in 0..b.stages.len() {
+            b.add_worker(i);
+        }
+        Ok(b)
+    }
+
+    /// External store access for dataset setup (ElastiCache stand-in).
+    pub fn kvs(&self) -> KvsClient {
+        KvsClient::direct(self.store.clone(), NodeId::CLIENT)
+    }
+
+    pub fn fabric(&self) -> &Arc<Fabric> {
+        &self.fabric
+    }
+
+    /// Add a worker (dedicated node) to stage endpoints matching `label`.
+    pub fn scale(&self, label: &str, replicas: usize) -> Result<()> {
+        let mut any = false;
+        for (i, ep) in self.endpoints.iter().enumerate() {
+            if ep.stage.name.contains(label) {
+                any = true;
+                while ep.workers.lock().unwrap().len() < replicas {
+                    self.add_worker(i);
+                }
+            }
+        }
+        if !any {
+            bail!("no endpoint matching {label:?}");
+        }
+        Ok(())
+    }
+
+    /// Match a Cloudflow replica allocation (paper: "we copied the exact
+    /// resource allocation from Cloudflow to each of the other systems").
+    pub fn copy_allocation(&self, counts: &[(String, usize)]) {
+        for (label, n) in counts {
+            // Unfused labels are substrings of fused Cloudflow labels.
+            for (i, ep) in self.endpoints.iter().enumerate() {
+                if label.contains(&ep.stage.name) || ep.stage.name.contains(label) {
+                    while ep.workers.lock().unwrap().len() < *n {
+                        self.add_worker(i);
+                    }
+                }
+            }
+        }
+    }
+
+    fn add_worker(self: &Baseline, idx: usize) {
+        // Each baseline worker gets its own node with a local cache
+        // (the 2GB in-memory caches the paper granted the baselines).
+        let node = NodeId(self.next_node.fetch_add(1, Ordering::Relaxed) as u32);
+        let cache = Arc::new(Cache::new(
+            node,
+            config::global().kvs.cache_capacity,
+            self.directory.clone(),
+        ));
+        let worker = Arc::new(Worker {
+            node,
+            queue: Mutex::new(VecDeque::new()),
+            cv: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+        });
+        let ep = self.endpoints[idx].clone();
+        ep.workers.lock().unwrap().push(worker.clone());
+        let ctx = ExecCtx {
+            kvs: Some(KvsClient::cached(self.store.clone(), cache)),
+            infer: self.infer.clone(),
+            rng: Mutex::new(self.rng.lock().unwrap().split()),
+            device: ep.stage.device,
+            timed: true,
+        };
+        let kind = self.kind;
+        std::thread::Builder::new()
+            .name(format!("{}-{}", self.kind.label(), ep.stage.name))
+            .spawn(move || worker_loop(ep, worker, ctx, kind))
+            .expect("spawning baseline worker");
+    }
+
+    /// Invoke one endpoint like an RPC: request ships to the worker,
+    /// response ships back to the proxy (2 transfers per stage — the
+    /// microservice data-movement tax).
+    fn invoke(&self, idx: usize, tables: Vec<Table>) -> Result<Table> {
+        let ep = &self.endpoints[idx];
+        let worker = {
+            let ws = ep.workers.lock().unwrap();
+            let i = ep.rr.fetch_add(1, Ordering::Relaxed) % ws.len();
+            // Round-robin: no structural visibility, no locality dispatch.
+            ws[i].clone()
+        };
+        let in_bytes: usize = tables.iter().map(Table::size_bytes).sum();
+        clock::sleep_ms(self.fabric.transfer_ms(in_bytes));
+        self.fabric.note_shipped(in_bytes);
+        let (tx, rx) = mpsc::channel();
+        worker
+            .queue
+            .lock()
+            .unwrap()
+            .push_back(Invocation { tables, resp: tx });
+        worker.cv.notify_one();
+        let out = rx
+            .recv()
+            .context("baseline worker dropped the invocation")??;
+        let out_bytes = out.size_bytes();
+        clock::sleep_ms(self.fabric.transfer_ms(out_bytes));
+        self.fabric.note_shipped(out_bytes);
+        Ok(out)
+    }
+
+    /// Drive one request through the pipeline from the proxy (the paper's
+    /// "long-lived driver program"); parallel branches run concurrently.
+    pub fn execute(self: &Arc<Self>, input: Table) -> Result<Table> {
+        let n = self.stages.len();
+        let results: Vec<Mutex<Option<Table>>> = (0..n).map(|_| Mutex::new(None)).collect();
+        let mut done = vec![false; n];
+        loop {
+            // Ready stages: all inputs available, not yet executed.
+            let ready: Vec<usize> = (0..n)
+                .filter(|&i| {
+                    !done[i]
+                        && self.stages[i].inputs.iter().all(|inp| match inp {
+                            StageInput::Source => true,
+                            StageInput::Stage(p) => done[*p],
+                        })
+                })
+                .collect();
+            if ready.is_empty() {
+                break;
+            }
+            std::thread::scope(|s| -> Result<()> {
+                let mut handles = Vec::new();
+                for &i in &ready {
+                    let tables: Vec<Table> = self.stages[i]
+                        .inputs
+                        .iter()
+                        .map(|inp| match inp {
+                            StageInput::Source => input.clone(),
+                            StageInput::Stage(p) => {
+                                results[*p].lock().unwrap().clone().unwrap()
+                            }
+                        })
+                        .collect();
+                    let me = self.clone();
+                    handles.push((i, s.spawn(move || me.invoke(i, tables))));
+                }
+                for (i, h) in handles {
+                    let t = h.join().expect("baseline branch panicked")?;
+                    *results[i].lock().unwrap() = Some(t);
+                }
+                Ok(())
+            })?;
+            for &i in &ready {
+                done[i] = true;
+            }
+        }
+        let out = results[self.output].lock().unwrap().take();
+        out.context("pipeline did not produce an output")
+    }
+
+    pub fn stage_labels(&self) -> Vec<String> {
+        self.stages.iter().map(|s| s.name.clone()).collect()
+    }
+}
+
+impl Drop for Baseline {
+    fn drop(&mut self) {
+        for ep in &self.endpoints {
+            for w in ep.workers.lock().unwrap().iter() {
+                w.shutdown.store(true, Ordering::Relaxed);
+                w.cv.notify_all();
+            }
+        }
+    }
+}
+
+fn worker_loop(ep: Arc<Endpoint>, worker: Arc<Worker>, ctx: ExecCtx, kind: BaselineKind) {
+    let cfg = config::global();
+    // Clipper batches model endpoints aggressively; SageMaker doesn't
+    // batch at all.
+    let (max_batch, linger) = match kind {
+        // Clipper batches GPU model endpoints aggressively; nobody
+        // batches on CPUs (paper §5.2.3).
+        BaselineKind::Clipper
+            if ep.stage.device == Device::Gpu && stage_is_model(&ep.stage) =>
+        {
+            (cfg.batch.max_batch, 4.0 * cfg.batch.batch_wait_ms)
+        }
+        _ => (1, 0.0),
+    };
+    loop {
+        let invs = worker.pop_batch(max_batch, linger);
+        if invs.is_empty() {
+            if worker.shutdown.load(Ordering::Relaxed) {
+                return;
+            }
+            continue;
+        }
+        serve(&ep.stage, &ctx, invs);
+    }
+}
+
+fn stage_is_model(stage: &PlanStage) -> bool {
+    stage.ops.iter().any(|o| {
+        matches!(
+            o,
+            crate::dataflow::OpKind::Map(f)
+                if matches!(f.body, crate::dataflow::FuncBody::Model(_))
+        )
+    })
+}
+
+fn serve(stage: &PlanStage, ctx: &ExecCtx, mut invs: Vec<Invocation>) {
+    if invs.len() == 1 {
+        let inv = invs.pop().unwrap();
+        let out = run_stage(stage, ctx, inv.tables);
+        let _ = inv.resp.send(out);
+        return;
+    }
+    // Batched: combine single-input invocations, run once, split by row id.
+    let id_sets: Vec<std::collections::HashSet<u64>> = invs
+        .iter()
+        .map(|i| i.tables[0].rows().iter().map(|r| r.id).collect())
+        .collect();
+    let combined = match apply_union(invs.iter().map(|i| i.tables[0].clone()).collect()) {
+        Ok(t) => t,
+        Err(e) => {
+            let msg = format!("{e:#}");
+            for inv in invs {
+                let _ = inv.resp.send(Err(anyhow::anyhow!("{msg}")));
+            }
+            return;
+        }
+    };
+    match run_stage(stage, ctx, vec![combined]) {
+        Ok(out) => {
+            for (inv, ids) in invs.into_iter().zip(id_sets) {
+                let mut part = Table::new(out.schema().clone());
+                let _ = part.set_grouping(out.grouping().map(str::to_string));
+                for row in out.rows() {
+                    if ids.contains(&row.id) {
+                        let _ = part.push(row.id, row.values.clone());
+                    }
+                }
+                let _ = inv.resp.send(Ok(part));
+            }
+        }
+        Err(e) => {
+            let msg = format!("{e:#}");
+            for inv in invs {
+                let _ = inv.resp.send(Err(anyhow::anyhow!("{msg}")));
+            }
+        }
+    }
+}
+
+fn run_stage(stage: &PlanStage, ctx: &ExecCtx, inputs: Vec<Table>) -> Result<Table> {
+    let mut t = apply_op(ctx, &stage.ops[0], inputs)?;
+    for op in &stage.ops[1..] {
+        t = apply_op(ctx, op, vec![t])?;
+    }
+    Ok(t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataflow::operator::{CmpOp, Func, Predicate, SleepDist};
+    use crate::dataflow::table::{DType, Schema, Value};
+
+    fn flow() -> Dataflow {
+        let mut fl = Dataflow::new("b", Schema::new(vec![("x", DType::F64)]));
+        let a = fl.map(fl.input(), Func::identity("a")).unwrap();
+        let b = fl
+            .map(fl.input(), Func::sleep("b", SleepDist::ConstMs(5.0)))
+            .unwrap();
+        let j = fl.join(a, b, None, crate::dataflow::JoinHow::Inner).unwrap();
+        let f = fl
+            .filter(j, Predicate::threshold("x", CmpOp::Ge, 1.0))
+            .unwrap();
+        fl.set_output(f).unwrap();
+        fl
+    }
+
+    fn input(n: usize) -> Table {
+        let mut t = Table::new(Schema::new(vec![("x", DType::F64)]));
+        for i in 0..n {
+            t.push_fresh(vec![Value::F64(i as f64)]).unwrap();
+        }
+        t
+    }
+
+    #[test]
+    fn sagemaker_executes_dag_with_parallel_branches() {
+        let b = Baseline::deploy(&flow(), BaselineKind::Sagemaker, None, true).unwrap();
+        let out = b.execute(input(4)).unwrap();
+        assert_eq!(out.len(), 3);
+        // 4 stages, each costing 2 transfers (there and back).
+        let (transfers, _) = b.fabric().totals();
+        assert_eq!(transfers, 8);
+    }
+
+    #[test]
+    fn results_match_local_oracle() {
+        let fl = flow();
+        let expect = crate::dataflow::exec_local::execute(
+            &fl,
+            input(6),
+            &ExecCtx::local(),
+        )
+        .unwrap();
+        let b = Baseline::deploy(&fl, BaselineKind::Clipper, None, true).unwrap();
+        let got = b.execute(input(6)).unwrap();
+        assert_eq!(got.len(), expect.len());
+        assert_eq!(got.schema(), expect.schema());
+    }
+
+    #[test]
+    fn scaling_adds_workers() {
+        let b = Baseline::deploy(&flow(), BaselineKind::Sagemaker, None, true).unwrap();
+        b.scale("map:a", 3).unwrap();
+        assert!(b.scale("nonexistent", 2).is_err());
+        // concurrent load across workers completes
+        std::thread::scope(|s| {
+            for _ in 0..6 {
+                let b = b.clone();
+                s.spawn(move || b.execute(input(2)).unwrap());
+            }
+        });
+    }
+
+    #[test]
+    fn copy_allocation_matches_labels() {
+        let b = Baseline::deploy(&flow(), BaselineKind::Sagemaker, None, true).unwrap();
+        b.copy_allocation(&[("map:a".to_string(), 3), ("join".to_string(), 2)]);
+        // no panic + execution still correct
+        assert_eq!(b.execute(input(2)).unwrap().len(), 1);
+    }
+}

@@ -1,0 +1,19 @@
+//! Baseline serving systems for the Fig 13 comparison (§5.2.2):
+//!
+//! * **SageMaker-like**: every pipeline stage is a containerized endpoint
+//!   on dedicated nodes; a client-side *proxy driver* moves each request
+//!   through the pipeline, so every stage costs two network transfers
+//!   (endpoint→driver→endpoint).  No batching, no locality-aware dispatch
+//!   (workers do have local caches, like the paper's 2GB add-on caches,
+//!   but routing is round-robin so hits are a matter of chance).
+//! * **Clipper-like**: identical topology plus *aggressive adaptive
+//!   batching* at each endpoint (workers wait briefly to build batches).
+//!
+//! Both reuse the same operator semantics (`apply_op`) and service-time
+//! profiles as Cloudflow, so measured differences come only from the
+//! architectural properties the paper credits: data movement, batching
+//! policy, and cache-hit probability.
+
+pub mod engine;
+
+pub use engine::{Baseline, BaselineKind};

@@ -1,0 +1,169 @@
+//! Per-function autoscaler (paper §4 Operator Autoscaling, evaluated in
+//! Fig 6): watches each stage's queue pressure and adjusts replica counts
+//! independently — a GPU bottleneck never scales a CPU stage and vice
+//! versa.
+//!
+//! Policy (matching Cloudburst's described behaviour):
+//! * **Up**: queued-per-replica above threshold ⇒ add up to `up_step`
+//!   replicas per decision interval.
+//! * **Slack**: shortly after a scale-up settles (queue drained), add
+//!   `slack_replicas` extra capacity for future spikes (the "+2 over the
+//!   remaining minute" in Fig 6).
+//! * **Down**: a stage idle for `down_idle_intervals` consecutive
+//!   decisions sheds one replica at a time, never below its minimum.
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::config;
+
+use super::cluster::ClusterInner;
+
+pub fn spawn(cluster: Arc<ClusterInner>) {
+    std::thread::Builder::new()
+        .name("autoscaler".into())
+        .spawn(move || run(cluster))
+        .expect("spawning autoscaler");
+}
+
+fn run(cluster: Arc<ClusterInner>) {
+    let cfg = config::global();
+    let interval_real =
+        Duration::from_secs_f64(cfg.autoscaler.interval_ms * cfg.time_scale / 1e3);
+    // Idle bookkeeping: (plan idx, seg, stage) -> (last processed, idle count)
+    let mut idle: std::collections::HashMap<(usize, usize, usize), (u64, usize)> =
+        std::collections::HashMap::new();
+    // Pressure must be sustained for 2 intervals before scaling up, so a
+    // momentary arrival burst at a fast function doesn't trigger growth
+    // (Fig 6: the fast function stays at 1 replica).
+    let mut hot: std::collections::HashMap<(usize, usize, usize), usize> =
+        std::collections::HashMap::new();
+    loop {
+        std::thread::sleep(interval_real.min(Duration::from_millis(200)));
+        if cluster.shutdown.load(Ordering::Relaxed) {
+            return;
+        }
+        if !cluster.autoscale.load(Ordering::Relaxed) {
+            continue;
+        }
+        let now = cluster.clock.now_ms();
+        for plan in cluster.plans() {
+            for seg in &plan.segs {
+                for stage in seg {
+                    let replicas = stage.replica_count();
+                    let queued = stage.queue_depth().max(0) as f64;
+                    let key = (stage.plan_idx, stage.seg, stage.idx);
+                    let processed = stage.processed.load(Ordering::Relaxed);
+                    let entry = idle.entry(key).or_insert((processed, 0));
+                    if processed == entry.0 && queued == 0.0 {
+                        entry.1 += 1;
+                    } else {
+                        entry.1 = 0;
+                    }
+                    entry.0 = processed;
+
+                    let pressure = queued / replicas.max(1) as f64;
+                    if pressure > cfg.autoscaler.up_queue_per_replica {
+                        let streak = hot.entry(key).or_insert(0);
+                        *streak += 1;
+                        if *streak >= 2 {
+                            let want = ((queued / cfg.autoscaler.up_queue_per_replica)
+                                .ceil() as usize)
+                                .min(replicas + cfg.autoscaler.up_step)
+                                .min(cfg.autoscaler.max_replicas);
+                            for _ in replicas..want {
+                                cluster.spawn_replica(&plan, stage);
+                            }
+                            if want > replicas {
+                                *stage.last_scale_up_ms.lock().unwrap() = now;
+                                stage.slack_added.store(false, Ordering::Relaxed);
+                            }
+                        }
+                    } else if queued == 0.0 {
+                        hot.remove(&key);
+                        // Settled after a recent scale-up: add slack.
+                        let last_up = *stage.last_scale_up_ms.lock().unwrap();
+                        if last_up.is_finite()
+                            && now - last_up < 60_000.0
+                            && now - last_up > 2.0 * cfg.autoscaler.interval_ms
+                            && !stage.slack_added.swap(true, Ordering::Relaxed)
+                        {
+                            for _ in 0..cfg.autoscaler.slack_replicas {
+                                if stage.replica_count() < cfg.autoscaler.max_replicas {
+                                    cluster.spawn_replica(&plan, stage);
+                                }
+                            }
+                        }
+                        // Idle long enough: shed one replica.
+                        if entry.1 >= cfg.autoscaler.down_idle_intervals {
+                            cluster.remove_replica(stage);
+                            entry.1 = 0;
+                        }
+                    }
+                    plan.metrics.note_allocation(
+                        now,
+                        &stage.spec.name,
+                        stage.replica_count(),
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cloudburst::Cluster;
+    use crate::dataflow::compiler::{compile, OptFlags};
+    use crate::dataflow::operator::{Func, SleepDist};
+    use crate::dataflow::table::{DType, Schema, Table, Value};
+    use crate::dataflow::Dataflow;
+
+    /// Under sustained load, the autoscaler must add replicas to the slow
+    /// stage and leave the fast stage alone (the Fig 6 shape, shrunk).
+    #[test]
+    fn scales_slow_stage_under_load() {
+        let cluster = Cluster::new(None);
+        cluster.set_autoscale(true);
+        let mut fl = Dataflow::new("as", Schema::new(vec![("x", DType::F64)]));
+        let fast = fl
+            .map(fl.input(), Func::sleep("fast", SleepDist::ConstMs(1.0)))
+            .unwrap();
+        let slow = fl
+            .map(fast, Func::sleep("slow", SleepDist::ConstMs(80.0)))
+            .unwrap();
+        fl.set_output(slow).unwrap();
+        let h = cluster
+            .register(compile(&fl, &OptFlags::none()).unwrap(), 1)
+            .unwrap();
+        // Sustained closed-loop load from 8 client threads for ~3s real.
+        let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let mut handles = Vec::new();
+        for _ in 0..8 {
+            let c: *const Cluster = &cluster;
+            // SAFETY: joined before `cluster` drops at end of scope.
+            let c: &'static Cluster = unsafe { &*c };
+            let stop = stop.clone();
+            handles.push(std::thread::spawn(move || {
+                while !stop.load(Ordering::Relaxed) {
+                    let mut t = Table::new(Schema::new(vec![("x", DType::F64)]));
+                    t.push_fresh(vec![Value::F64(0.0)]).unwrap();
+                    let _ = c.execute(h, t).unwrap().result();
+                }
+            }));
+        }
+        std::thread::sleep(Duration::from_millis(2500));
+        stop.store(true, Ordering::Relaxed);
+        for hd in handles {
+            hd.join().unwrap();
+        }
+        let counts = cluster.replica_counts(h);
+        let slow_n = counts.iter().find(|(l, _)| l.contains("slow")).unwrap().1;
+        let fast_n = counts.iter().find(|(l, _)| l.contains("fast")).unwrap().1;
+        assert!(slow_n > 1, "slow stage did not scale: {counts:?}");
+        assert!(fast_n <= 2, "fast stage over-scaled: {counts:?}");
+        assert!(!cluster.metrics(h).summary().is_empty());
+    }
+}

@@ -1,0 +1,783 @@
+//! The Cloudburst cluster: registration of compiled plans, request
+//! execution with wait-for-all/any gathering, locality-aware dispatch, and
+//! the to-be-continued segment mechanism (paper §4).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex, RwLock};
+
+use anyhow::{bail, Context, Result};
+
+use crate::anna::{Cache, Directory, KvsClient, Store};
+use crate::config;
+use crate::dataflow::compiler::{Plan, StageInput};
+use crate::dataflow::operator::ExecCtx;
+use crate::dataflow::table::Table;
+use crate::dataflow::LookupKey;
+use crate::net::{Fabric, NodeId};
+use crate::runtime::InferClient;
+use crate::simulation::clock::{self, Clock};
+use crate::simulation::gpu::Device;
+use crate::util::rng::Rng;
+
+use super::executor::{self, Replica, StageRuntime, Task, TableMsg};
+use super::metrics::PlanMetrics;
+
+/// Handle to a registered plan.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DagHandle(pub(crate) usize);
+
+/// Future for one executed request (paper: `execute` returns a future).
+pub struct ExecFuture {
+    rx: mpsc::Receiver<Result<Table>>,
+    pub submitted_ms: f64,
+}
+
+impl ExecFuture {
+    /// Block until the result table is available.
+    pub fn result(self) -> Result<Table> {
+        self.rx
+            .recv()
+            .context("cluster dropped the request (shutdown?)")?
+    }
+
+    /// Block with a real-time timeout.
+    pub fn result_timeout(self, real: std::time::Duration) -> Result<Table> {
+        match self.rx.recv_timeout(real) {
+            Ok(r) => r,
+            Err(e) => bail!("request timed out: {e}"),
+        }
+    }
+}
+
+/// Per-request execution state: gather buffers + completion channel.
+pub struct RequestCtx {
+    pub id: u64,
+    pub plan_idx: usize,
+    pub submitted_ms: f64,
+    gather: Mutex<HashMap<(usize, usize), Gather>>,
+    done: Mutex<Option<mpsc::Sender<Result<Table>>>>,
+}
+
+struct Gather {
+    slots: Vec<Option<TableMsg>>,
+    fired: bool,
+}
+
+impl RequestCtx {
+    pub fn fail(&self, e: anyhow::Error) {
+        if let Some(tx) = self.done.lock().unwrap().take() {
+            let _ = tx.send(Err(e));
+        }
+    }
+
+    fn take_done(&self) -> Option<mpsc::Sender<Result<Table>>> {
+        self.done.lock().unwrap().take()
+    }
+}
+
+/// A registered (compiled) plan with live stage runtimes.
+pub struct RegisteredPlan {
+    pub idx: usize,
+    pub plan: Plan,
+    /// segs[seg][stage] mirrors plan.segments.
+    pub segs: Vec<Vec<Arc<StageRuntime>>>,
+    pub metrics: Arc<PlanMetrics>,
+}
+
+/// Node pool: CPU nodes host 2 workers (paper: c5.2xlarge, 2 executors per
+/// machine), GPU nodes host 1 (g4dn.xlarge).
+struct NodePool {
+    next: u32,
+    free: HashMap<Device, Vec<NodeId>>, // nodes with spare worker slots
+    slots: HashMap<NodeId, usize>,
+    class: HashMap<NodeId, Device>,
+    caches: HashMap<NodeId, Arc<Cache>>,
+}
+
+impl NodePool {
+    fn slots_per_node(d: Device) -> usize {
+        match d {
+            Device::Cpu => 2,
+            Device::Gpu => 1,
+        }
+    }
+
+    fn pool_cap(d: Device) -> usize {
+        let c = &config::global().cluster;
+        match d {
+            Device::Cpu => c.cpu_pool_nodes,
+            Device::Gpu => c.gpu_pool_nodes,
+        }
+    }
+
+    fn alloc(&mut self, d: Device, directory: &Arc<Directory>) -> (NodeId, Arc<Cache>) {
+        // Spread-first: prefer a fresh node while the pool is under its
+        // soft cap (a real fleet rarely co-locates adjacent pipeline
+        // stages), then pack existing free slots.
+        let n_of_class = self
+            .slots
+            .keys()
+            .filter(|n| self.class.get(n) == Some(&d))
+            .count();
+        let free = self.free.entry(d).or_default();
+        let make_new = n_of_class < Self::pool_cap(d) || free.is_empty();
+        let node = if make_new {
+            self.next += 1;
+            let n = NodeId(self.next);
+            self.slots.insert(n, Self::slots_per_node(d));
+            self.class.insert(n, d);
+            self.caches.insert(
+                n,
+                Arc::new(Cache::new(
+                    n,
+                    config::global().kvs.cache_capacity,
+                    directory.clone(),
+                )),
+            );
+            self.free.entry(d).or_default().push(n);
+            n
+        } else {
+            *free.last().unwrap()
+        };
+        let s = self.slots.get_mut(&node).unwrap();
+        *s -= 1;
+        if *s == 0 {
+            self.free.get_mut(&d).unwrap().retain(|&x| x != node);
+        }
+        (node, self.caches[&node].clone())
+    }
+
+    fn release(&mut self, d: Device, node: NodeId) {
+        let s = self.slots.get_mut(&node).unwrap();
+        *s += 1;
+        let free = self.free.entry(d).or_default();
+        if !free.contains(&node) {
+            free.push(node);
+        }
+    }
+
+    fn n_nodes(&self) -> usize {
+        self.slots.len()
+    }
+}
+
+/// Shared cluster state (executors, scheduler, storage).
+pub struct ClusterInner {
+    pub clock: Clock,
+    pub fabric: Fabric,
+    pub store: Arc<Store>,
+    pub directory: Arc<Directory>,
+    pub infer: Option<InferClient>,
+    plans: RwLock<Vec<Arc<RegisteredPlan>>>,
+    nodes: Mutex<NodePool>,
+    rng: Mutex<Rng>,
+    next_req: AtomicU64,
+    pub shutdown: AtomicBool,
+    pub autoscale: AtomicBool,
+}
+
+impl ClusterInner {
+    /// Deliver a table to one input slot of a stage; fires the stage when
+    /// its wait policy is satisfied (wait-for-any vs wait-for-all).
+    pub fn deliver(
+        self: &Arc<Self>,
+        plan: &Arc<RegisteredPlan>,
+        req: &Arc<RequestCtx>,
+        seg: usize,
+        stage_idx: usize,
+        slot: usize,
+        msg: TableMsg,
+        hint: Option<&str>,
+    ) {
+        let stage = &plan.segs[seg][stage_idx];
+        let inputs = {
+            let mut g = req.gather.lock().unwrap();
+            let entry = g.entry((seg, stage_idx)).or_insert_with(|| Gather {
+                slots: vec![None; stage.spec.inputs.len()],
+                fired: false,
+            });
+            if entry.fired {
+                return; // wait-any already satisfied; drop the straggler
+            }
+            if stage.spec.wait_any {
+                entry.fired = true;
+                Some(vec![msg])
+            } else {
+                entry.slots[slot] = Some(msg);
+                if entry.slots.iter().all(Option::is_some) {
+                    entry.fired = true;
+                    Some(entry.slots.iter_mut().map(|s| s.take().unwrap()).collect())
+                } else {
+                    None
+                }
+            }
+        };
+        if let Some(inputs) = inputs {
+            let replica = self.choose_replica(plan, stage, hint);
+            stage.inflight.fetch_add(1, Ordering::Relaxed);
+            replica.push(Task { req: req.clone(), seg, stage: stage_idx, inputs });
+        }
+    }
+
+    /// Scheduler: locality-aware when a hint is given and the plan enables
+    /// dynamic dispatch; otherwise least-loaded with round-robin ties.
+    fn choose_replica(
+        &self,
+        plan: &RegisteredPlan,
+        stage: &StageRuntime,
+        hint: Option<&str>,
+    ) -> Arc<Replica> {
+        let replicas = stage.replicas.read().unwrap();
+        assert!(!replicas.is_empty(), "stage {} has no replicas", stage.spec.name);
+        if plan.plan.opts.locality_dispatch {
+            if let Some(key) = hint {
+                let holders = self.directory.holders(key);
+                if let Some(r) = replicas
+                    .iter()
+                    .filter(|r| holders.contains(&r.node))
+                    .min_by_key(|r| r.queue_len())
+                {
+                    return r.clone();
+                }
+            }
+        }
+        // Least-loaded; round-robin among equally-loaded.
+        let start = stage.rr.fetch_add(1, Ordering::Relaxed) % replicas.len();
+        let mut best = replicas[start].clone();
+        let mut best_len = best.queue_len();
+        for i in 0..replicas.len() {
+            let r = &replicas[(start + i) % replicas.len()];
+            let l = r.queue_len();
+            if l < best_len {
+                best = r.clone();
+                best_len = l;
+            }
+        }
+        best
+    }
+
+    /// A stage finished: route its output to children, the next segment,
+    /// or the client.
+    pub fn complete_stage(
+        self: &Arc<Self>,
+        plan: &Arc<RegisteredPlan>,
+        req: &Arc<RequestCtx>,
+        seg: usize,
+        stage_idx: usize,
+        table: Table,
+        node: NodeId,
+    ) {
+        let segment = &plan.plan.segments[seg];
+        // In-segment children.
+        for (ci, child) in segment.stages.iter().enumerate() {
+            for (slot, inp) in child.inputs.iter().enumerate() {
+                if *inp == StageInput::Stage(stage_idx) {
+                    self.deliver(
+                        plan,
+                        req,
+                        seg,
+                        ci,
+                        slot,
+                        TableMsg { table: table.clone(), from: node },
+                        None,
+                    );
+                }
+            }
+        }
+        if stage_idx != segment.output {
+            return;
+        }
+        // Segment boundary.
+        if seg + 1 < plan.plan.segments.len() {
+            let next = &plan.plan.segments[seg + 1];
+            // Resolve the continuation ref for locality dispatch (the
+            // paper's to-be-continued: result goes back to the scheduler
+            // with a resolved KVS key).
+            let hint: Option<String> = match &next.dispatch_key {
+                Some(LookupKey::Const(k)) => Some(k.clone()),
+                Some(LookupKey::Column(c)) => {
+                    if table.is_empty() {
+                        None
+                    } else {
+                        table.value(0, c).ok().and_then(|v| v.as_str().ok().map(String::from))
+                    }
+                }
+                None => None,
+            };
+            for (si, st) in next.stages.iter().enumerate() {
+                for (slot, inp) in st.inputs.iter().enumerate() {
+                    if *inp == StageInput::Source {
+                        self.deliver(
+                            plan,
+                            req,
+                            seg + 1,
+                            si,
+                            slot,
+                            TableMsg { table: table.clone(), from: node },
+                            hint.as_deref(),
+                        );
+                    }
+                }
+            }
+            return;
+        }
+        // Final output: charge the return hop and complete the request.
+        clock::sleep_ms(self.fabric.transfer_ms(table.size_bytes()));
+        self.fabric.note_shipped(table.size_bytes());
+        // Record metrics before releasing the client so counters are
+        // consistent the moment the future resolves.
+        if let Some(tx) = req.take_done() {
+            let now = self.clock.now_ms();
+            plan.metrics.record(now, now - req.submitted_ms);
+            let _ = tx.send(Ok(table));
+        }
+    }
+
+    /// Spawn one replica for a stage and start its worker thread.
+    pub fn spawn_replica(
+        self: &Arc<Self>,
+        plan: &Arc<RegisteredPlan>,
+        stage: &Arc<StageRuntime>,
+    ) {
+        let (node, cache) = self
+            .nodes
+            .lock()
+            .unwrap()
+            .alloc(stage.spec.device, &self.directory);
+        let replica = Replica::new(node);
+        let kvs = KvsClient::cached(self.store.clone(), cache);
+        let rng = self.rng.lock().unwrap().split();
+        let ctx = ExecCtx {
+            kvs: Some(kvs),
+            infer: self.infer.clone(),
+            rng: Mutex::new(rng),
+            device: stage.spec.device,
+            timed: true,
+        };
+        stage.replicas.write().unwrap().push(replica.clone());
+        let c = self.clone();
+        let p = plan.clone();
+        let s = stage.clone();
+        std::thread::Builder::new()
+            .name(format!("exec-{}-{}", stage.spec.name, replica.id))
+            .spawn(move || executor::replica_loop(c, p, s, replica, ctx))
+            .expect("spawning replica thread");
+    }
+
+    /// Remove one replica from a stage (scale-down). The worker exits
+    /// after draining its queue.
+    pub fn remove_replica(&self, stage: &StageRuntime) {
+        let mut reps = stage.replicas.write().unwrap();
+        if reps.len() <= stage.min_replicas.max(1) {
+            return;
+        }
+        if let Some(r) = reps.pop() {
+            r.stop();
+            self.nodes.lock().unwrap().release(stage.spec.device, r.node);
+        }
+    }
+
+    pub fn plans(&self) -> Vec<Arc<RegisteredPlan>> {
+        self.plans.read().unwrap().iter().cloned().collect()
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.nodes.lock().unwrap().n_nodes()
+    }
+}
+
+/// Public cluster API.
+pub struct Cluster {
+    inner: Arc<ClusterInner>,
+}
+
+impl Cluster {
+    /// Fresh cluster. `infer` connects model stages to the PJRT service;
+    /// pass `None` for flows without model operators.
+    pub fn new(infer: Option<InferClient>) -> Cluster {
+        let directory = Directory::new();
+        let inner = Arc::new(ClusterInner {
+            clock: Clock::new(),
+            fabric: Fabric::new(),
+            store: Arc::new(Store::new(config::global().kvs.shards)),
+            directory,
+            infer,
+            plans: RwLock::new(Vec::new()),
+            nodes: Mutex::new(NodePool {
+                next: 0,
+                free: HashMap::new(),
+                slots: HashMap::new(),
+                class: HashMap::new(),
+                caches: HashMap::new(),
+            }),
+            rng: Mutex::new(Rng::new(0xC10D)),
+            next_req: AtomicU64::new(1),
+            shutdown: AtomicBool::new(false),
+            autoscale: AtomicBool::new(false),
+        });
+        super::autoscaler::spawn(inner.clone());
+        Cluster { inner }
+    }
+
+    /// Register a compiled plan; spawns `initial_replicas` per stage.
+    pub fn register(&self, plan: Plan, initial_replicas: usize) -> Result<DagHandle> {
+        let mut plans = self.inner.plans.write().unwrap();
+        let idx = plans.len();
+        let mut segs = Vec::with_capacity(plan.segments.len());
+        for (si, seg) in plan.segments.iter().enumerate() {
+            let mut stages = Vec::with_capacity(seg.stages.len());
+            for (sti, spec) in seg.stages.iter().enumerate() {
+                stages.push(Arc::new(StageRuntime {
+                    plan_idx: idx,
+                    seg: si,
+                    idx: sti,
+                    spec: spec.clone(),
+                    replicas: RwLock::new(Vec::new()),
+                    rr: AtomicUsize::new(0),
+                    inflight: std::sync::atomic::AtomicI64::new(0),
+                    processed: AtomicU64::new(0),
+                    last_scale_up_ms: Mutex::new(f64::NEG_INFINITY),
+                    slack_added: AtomicBool::new(false),
+                    min_replicas: 1,
+                }));
+            }
+            segs.push(stages);
+        }
+        let registered = Arc::new(RegisteredPlan {
+            idx,
+            plan,
+            segs,
+            metrics: Arc::new(PlanMetrics::default()),
+        });
+        for seg in &registered.segs {
+            for stage in seg {
+                for _ in 0..initial_replicas.max(1) {
+                    self.inner.spawn_replica(&registered, stage);
+                }
+            }
+        }
+        plans.push(registered);
+        Ok(DagHandle(idx))
+    }
+
+    /// Execute a request through a registered plan; returns a future.
+    pub fn execute(&self, h: DagHandle, input: Table) -> Result<ExecFuture> {
+        let plan = self
+            .inner
+            .plans
+            .read()
+            .unwrap()
+            .get(h.0)
+            .cloned()
+            .context("unknown dag handle")?;
+        let (tx, rx) = mpsc::channel();
+        let submitted_ms = self.inner.clock.now_ms();
+        let req = Arc::new(RequestCtx {
+            id: self.inner.next_req.fetch_add(1, Ordering::Relaxed),
+            plan_idx: h.0,
+            submitted_ms,
+            gather: Mutex::new(HashMap::new()),
+            done: Mutex::new(Some(tx)),
+        });
+        // Seed segment 0: every stage reading from Source. Stages headed
+        // by a column-keyed lookup get a locality hint resolved directly
+        // from the input table (entry-level dynamic dispatch).
+        let seg0 = &plan.plan.segments[0];
+        let mut seeded = false;
+        for (si, st) in seg0.stages.iter().enumerate() {
+            let hint: Option<String> = st.dispatch_lookup_col().and_then(|c| {
+                if input.is_empty() {
+                    None
+                } else {
+                    input.value(0, c).ok().and_then(|v| v.as_str().ok().map(String::from))
+                }
+            });
+            for (slot, inp) in st.inputs.iter().enumerate() {
+                if *inp == StageInput::Source {
+                    self.inner.deliver(
+                        &plan,
+                        &req,
+                        0,
+                        si,
+                        slot,
+                        TableMsg { table: input.clone(), from: NodeId::CLIENT },
+                        hint.as_deref(),
+                    );
+                    seeded = true;
+                }
+            }
+        }
+        if !seeded {
+            bail!("plan has no source-consuming stage");
+        }
+        Ok(ExecFuture { rx, submitted_ms })
+    }
+
+    /// Direct (client-side) KVS access for dataset setup.
+    pub fn kvs(&self) -> KvsClient {
+        KvsClient::direct(self.inner.store.clone(), NodeId::CLIENT)
+    }
+
+    pub fn metrics(&self, h: DagHandle) -> Arc<PlanMetrics> {
+        self.inner.plans.read().unwrap()[h.0].metrics.clone()
+    }
+
+    /// Replica counts per stage label (allocation snapshots for Fig 6).
+    pub fn replica_counts(&self, h: DagHandle) -> Vec<(String, usize)> {
+        let plan = &self.inner.plans.read().unwrap()[h.0];
+        plan.segs
+            .iter()
+            .flatten()
+            .map(|s| (s.spec.name.clone(), s.replica_count()))
+            .collect()
+    }
+
+    /// Manually scale a stage (matched by label substring) to `n` replicas.
+    pub fn scale_to(&self, h: DagHandle, label: &str, n: usize) -> Result<()> {
+        let plan = self.inner.plans.read().unwrap()[h.0].clone();
+        let stage = plan
+            .segs
+            .iter()
+            .flatten()
+            .find(|s| s.spec.name.contains(label))
+            .with_context(|| format!("no stage matching {label:?}"))?
+            .clone();
+        loop {
+            let cur = stage.replica_count();
+            if cur == n {
+                return Ok(());
+            }
+            if cur < n {
+                self.inner.spawn_replica(&plan, &stage);
+            } else {
+                self.inner.remove_replica(&stage);
+                if stage.replica_count() == cur {
+                    bail!("cannot scale below minimum");
+                }
+            }
+        }
+    }
+
+    /// Enable/disable the autoscaler (off by default; microbenchmarks set
+    /// replica counts manually).
+    pub fn set_autoscale(&self, on: bool) {
+        self.inner.autoscale.store(on, Ordering::Relaxed);
+    }
+
+    pub fn inner(&self) -> &Arc<ClusterInner> {
+        &self.inner
+    }
+
+    /// Total nodes ever allocated.
+    pub fn n_nodes(&self) -> usize {
+        self.inner.n_nodes()
+    }
+}
+
+impl Drop for Cluster {
+    fn drop(&mut self) {
+        self.inner.shutdown.store(true, Ordering::Relaxed);
+        for plan in self.inner.plans() {
+            for seg in &plan.segs {
+                for stage in seg {
+                    for r in stage.replicas.read().unwrap().iter() {
+                        r.stop();
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataflow::compiler::{compile, OptFlags};
+    use crate::dataflow::operator::{CmpOp, Func, Predicate, SleepDist};
+    use crate::dataflow::table::{DType, Schema, Value};
+    use crate::dataflow::Dataflow;
+
+    fn input_table(n: usize) -> Table {
+        let mut t = Table::new(Schema::new(vec![("x", DType::F64)]));
+        for i in 0..n {
+            t.push_fresh(vec![Value::F64(i as f64)]).unwrap();
+        }
+        t
+    }
+
+    fn simple_flow() -> Dataflow {
+        let mut fl = Dataflow::new("t", Schema::new(vec![("x", DType::F64)]));
+        let a = fl.map(fl.input(), Func::identity("a")).unwrap();
+        let b = fl
+            .filter(a, Predicate::threshold("x", CmpOp::Ge, 1.0))
+            .unwrap();
+        fl.set_output(b).unwrap();
+        fl
+    }
+
+    #[test]
+    fn execute_simple_flow_unfused() {
+        let cluster = Cluster::new(None);
+        let plan = compile(&simple_flow(), &OptFlags::none()).unwrap();
+        let h = cluster.register(plan, 1).unwrap();
+        let out = cluster.execute(h, input_table(3)).unwrap().result().unwrap();
+        assert_eq!(out.len(), 2); // x >= 1.0 keeps rows 1,2
+    }
+
+    #[test]
+    fn execute_fused_matches_local_oracle() {
+        let fl = simple_flow();
+        let local = crate::dataflow::exec_local::execute(
+            &fl,
+            input_table(5),
+            &ExecCtx::local(),
+        )
+        .unwrap();
+        let cluster = Cluster::new(None);
+        let plan = compile(&fl, &OptFlags::none().with_fusion()).unwrap();
+        let h = cluster.register(plan, 1).unwrap();
+        let out = cluster.execute(h, input_table(5)).unwrap().result().unwrap();
+        assert_eq!(out.len(), local.len());
+        assert_eq!(out.schema(), local.schema());
+    }
+
+    #[test]
+    fn wait_any_takes_first_finisher() {
+        // fast replica + slow replica through anyof: result must arrive
+        // well before the slow replica's sleep.
+        let mut fl = Dataflow::new("race", Schema::new(vec![("x", DType::F64)]));
+        let fast = fl
+            .map(fl.input(), Func::sleep("fast", SleepDist::ConstMs(1.0)))
+            .unwrap();
+        let slow = fl
+            .map(fl.input(), Func::sleep("slow", SleepDist::ConstMs(400.0)))
+            .unwrap();
+        let any = fl.anyof(&[fast, slow]).unwrap();
+        fl.set_output(any).unwrap();
+        let cluster = Cluster::new(None);
+        let h = cluster
+            .register(compile(&fl, &OptFlags::none()).unwrap(), 1)
+            .unwrap();
+        let t0 = std::time::Instant::now();
+        let out = cluster.execute(h, input_table(1)).unwrap().result().unwrap();
+        assert_eq!(out.len(), 1);
+        let ms = t0.elapsed().as_secs_f64() * 1e3;
+        assert!(ms < 300.0, "anyof waited for the slow branch: {ms}ms");
+    }
+
+    #[test]
+    fn concurrent_requests_complete() {
+        let cluster = Cluster::new(None);
+        let plan = compile(&simple_flow(), &OptFlags::none().with_fusion()).unwrap();
+        let h = cluster.register(plan, 2).unwrap();
+        let futs: Vec<ExecFuture> = (0..20)
+            .map(|_| cluster.execute(h, input_table(2)).unwrap())
+            .collect();
+        for f in futs {
+            f.result().unwrap();
+        }
+        assert_eq!(cluster.metrics(h).completed(), 20);
+    }
+
+    #[test]
+    fn manual_scaling() {
+        let cluster = Cluster::new(None);
+        let plan = compile(&simple_flow(), &OptFlags::none()).unwrap();
+        let h = cluster.register(plan, 1).unwrap();
+        cluster.scale_to(h, "map:a", 4).unwrap();
+        let counts = cluster.replica_counts(h);
+        let a = counts.iter().find(|(l, _)| l.contains("map:a")).unwrap();
+        assert_eq!(a.1, 4);
+        cluster.scale_to(h, "map:a", 2).unwrap();
+        assert_eq!(
+            cluster
+                .replica_counts(h)
+                .iter()
+                .find(|(l, _)| l.contains("map:a"))
+                .unwrap()
+                .1,
+            2
+        );
+    }
+
+    #[test]
+    fn stage_error_fails_request() {
+        let mut fl = Dataflow::new("err", Schema::new(vec![("x", DType::F64)]));
+        let boom = fl
+            .map(
+                fl.input(),
+                Func::rust(
+                    "boom",
+                    None,
+                    std::sync::Arc::new(|_, _t: &Table| anyhow::bail!("kaboom")),
+                ),
+            )
+            .unwrap();
+        fl.set_output(boom).unwrap();
+        let cluster = Cluster::new(None);
+        let h = cluster
+            .register(compile(&fl, &OptFlags::none()).unwrap(), 1)
+            .unwrap();
+        let err = format!(
+            "{:#}",
+            cluster.execute(h, input_table(1)).unwrap().result().unwrap_err()
+        );
+        assert!(err.contains("kaboom"), "{err}");
+    }
+
+    #[test]
+    fn lookup_flow_with_kvs() {
+        let mut fl = Dataflow::new("lk", Schema::new(vec![("key", DType::Str)]));
+        let lk = fl
+            .lookup(fl.input(), LookupKey::Column("key".into()), "payload")
+            .unwrap();
+        fl.set_output(lk).unwrap();
+        let cluster = Cluster::new(None);
+        cluster.kvs().put_free("obj-1", vec![42; 10]);
+        let h = cluster
+            .register(compile(&fl, &OptFlags::all()).unwrap(), 2)
+            .unwrap();
+        let mut t = Table::new(Schema::new(vec![("key", DType::Str)]));
+        t.push_fresh(vec![Value::Str("obj-1".into())]).unwrap();
+        let out = cluster.execute(h, t).unwrap().result().unwrap();
+        assert_eq!(out.value(0, "payload").unwrap().as_blob().unwrap().len(), 10);
+    }
+
+    #[test]
+    fn join_gathers_both_sides() {
+        let mut fl = Dataflow::new("j", Schema::new(vec![("x", DType::F64)]));
+        let a = fl.map(fl.input(), Func::identity("a")).unwrap();
+        let b = fl
+            .map(fl.input(), Func::sleep("b", SleepDist::ConstMs(20.0)))
+            .unwrap();
+        let j = fl
+            .join(a, b, None, crate::dataflow::JoinHow::Inner)
+            .unwrap();
+        fl.set_output(j).unwrap();
+        let cluster = Cluster::new(None);
+        let h = cluster
+            .register(compile(&fl, &OptFlags::none()).unwrap(), 1)
+            .unwrap();
+        let out = cluster.execute(h, input_table(3)).unwrap().result().unwrap();
+        assert_eq!(out.len(), 3);
+        assert_eq!(out.schema().cols().len(), 2); // x, x_r
+    }
+
+    #[test]
+    fn latency_recorded_in_metrics() {
+        let cluster = Cluster::new(None);
+        let mut fl = Dataflow::new("m", Schema::new(vec![("x", DType::F64)]));
+        let s = fl
+            .map(fl.input(), Func::sleep("s", SleepDist::ConstMs(10.0)))
+            .unwrap();
+        fl.set_output(s).unwrap();
+        let h = cluster
+            .register(compile(&fl, &OptFlags::none()).unwrap(), 1)
+            .unwrap();
+        cluster.execute(h, input_table(1)).unwrap().result().unwrap();
+        let (med, _) = cluster.metrics(h).report();
+        assert!(med >= 10.0, "median={med}");
+        assert!(med < 500.0, "median={med}");
+    }
+}

@@ -1,0 +1,257 @@
+//! Executor replicas: the worker threads that run compiled stages.
+//!
+//! Each replica belongs to exactly one stage of one registered plan
+//! (Cloudburst assigns executors to functions) and owns a task queue.
+//! Batch-aware stages dequeue up to `max_batch` tasks at once, execute the
+//! combined table through one (batched PJRT) invocation, and demultiplex
+//! results per request — the paper's §4 Batching mechanism.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicI64, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, RwLock};
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::dataflow::compiler::PlanStage;
+use crate::dataflow::exec_local::{apply_op, apply_union};
+use crate::dataflow::operator::ExecCtx;
+use crate::dataflow::table::Table;
+use crate::net::NodeId;
+use crate::simulation::clock;
+
+use super::cluster::{ClusterInner, RegisteredPlan, RequestCtx};
+
+/// A table in flight, tagged with its producing node for transfer costing.
+#[derive(Debug, Clone)]
+pub struct TableMsg {
+    pub table: Table,
+    pub from: NodeId,
+}
+
+/// One stage invocation for one request.
+pub struct Task {
+    pub req: Arc<RequestCtx>,
+    pub seg: usize,
+    pub stage: usize,
+    pub inputs: Vec<TableMsg>,
+}
+
+/// Runtime state of one stage of a registered plan.
+pub struct StageRuntime {
+    pub plan_idx: usize,
+    pub seg: usize,
+    pub idx: usize,
+    pub spec: PlanStage,
+    pub replicas: RwLock<Vec<Arc<Replica>>>,
+    pub rr: AtomicUsize,
+    /// Tasks queued or running (autoscaler pressure signal).
+    pub inflight: AtomicI64,
+    pub processed: AtomicU64,
+    /// Virtual ms of the last scale-up (slack logic).
+    pub last_scale_up_ms: Mutex<f64>,
+    pub slack_added: AtomicBool,
+    pub min_replicas: usize,
+}
+
+impl StageRuntime {
+    pub fn replica_count(&self) -> usize {
+        self.replicas.read().unwrap().len()
+    }
+
+    pub fn queue_depth(&self) -> i64 {
+        self.inflight.load(Ordering::Relaxed)
+    }
+}
+
+static NEXT_REPLICA_ID: AtomicU64 = AtomicU64::new(1);
+
+/// One worker thread bound to a node, serving one stage.
+pub struct Replica {
+    pub id: u64,
+    pub node: NodeId,
+    queue: Mutex<VecDeque<Task>>,
+    cv: Condvar,
+    pub shutdown: AtomicBool,
+}
+
+impl Replica {
+    pub fn new(node: NodeId) -> Arc<Replica> {
+        Arc::new(Replica {
+            id: NEXT_REPLICA_ID.fetch_add(1, Ordering::Relaxed),
+            node,
+            queue: Mutex::new(VecDeque::new()),
+            cv: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+        })
+    }
+
+    pub fn push(&self, task: Task) {
+        self.queue.lock().unwrap().push_back(task);
+        self.cv.notify_one();
+    }
+
+    pub fn queue_len(&self) -> usize {
+        self.queue.lock().unwrap().len()
+    }
+
+    pub fn stop(&self) {
+        self.shutdown.store(true, Ordering::Relaxed);
+        self.cv.notify_all();
+    }
+
+    /// Pop up to `max` tasks (1 unless the stage batches). Blocks up to
+    /// 50ms real time; returns empty on timeout/shutdown.
+    fn pop_batch(&self, max: usize) -> Vec<Task> {
+        let mut q = self.queue.lock().unwrap();
+        loop {
+            if !q.is_empty() {
+                let n = q.len().min(max.max(1));
+                return q.drain(..n).collect();
+            }
+            if self.shutdown.load(Ordering::Relaxed) {
+                return Vec::new();
+            }
+            let (guard, _) = self
+                .cv
+                .wait_timeout(q, Duration::from_millis(50))
+                .unwrap();
+            q = guard;
+        }
+    }
+}
+
+/// Worker thread main: dequeue → charge transfers → execute ops → deliver.
+pub fn replica_loop(
+    cluster: Arc<ClusterInner>,
+    plan: Arc<RegisteredPlan>,
+    stage_rt: Arc<StageRuntime>,
+    replica: Arc<Replica>,
+    ctx: ExecCtx,
+) {
+    loop {
+        let max_batch = if stage_rt.spec.batchable {
+            crate::config::max_batch()
+        } else {
+            1
+        };
+        let tasks = replica.pop_batch(max_batch);
+        if tasks.is_empty() {
+            if replica.shutdown.load(Ordering::Relaxed) {
+                return;
+            }
+            continue;
+        }
+        let n = tasks.len();
+        match process_batch(&cluster, &plan, &stage_rt, &replica, &ctx, tasks) {
+            Ok(()) => {}
+            Err(e) => log::warn!("stage {} failed: {e:#}", stage_rt.spec.name),
+        }
+        stage_rt.inflight.fetch_sub(n as i64, Ordering::Relaxed);
+        stage_rt.processed.fetch_add(n as u64, Ordering::Relaxed);
+    }
+}
+
+fn process_batch(
+    cluster: &Arc<ClusterInner>,
+    plan: &Arc<RegisteredPlan>,
+    stage_rt: &StageRuntime,
+    replica: &Replica,
+    ctx: &ExecCtx,
+    mut tasks: Vec<Task>,
+) -> Result<()> {
+    // Transfer cost: concurrent inbound transfers overlap, so charge the
+    // most expensive task's inbound total.
+    let ship_ms = tasks
+        .iter()
+        .map(|t| {
+            t.inputs
+                .iter()
+                .filter(|m| m.from != replica.node)
+                .map(|m| cluster.fabric.transfer_ms(m.table.size_bytes()))
+                .sum::<f64>()
+        })
+        .fold(0.0, f64::max);
+    clock::sleep_ms(ship_ms);
+    cluster.fabric.note_shipped(
+        tasks
+            .iter()
+            .map(|t| {
+                t.inputs
+                    .iter()
+                    .filter(|m| m.from != replica.node)
+                    .map(|m| m.table.size_bytes())
+                    .sum::<usize>()
+            })
+            .sum(),
+    );
+
+    if tasks.len() == 1 {
+        let task = tasks.pop().unwrap();
+        let inputs: Vec<Table> = task.inputs.iter().map(|m| m.table.clone()).collect();
+        let out = run_ops(ctx, &stage_rt.spec, inputs);
+        finish(cluster, plan, task, out, replica.node);
+        return Ok(());
+    }
+
+    // Batched path: combine single-input tasks into one table, run once,
+    // split by row-id ownership.
+    let mut id_sets: Vec<std::collections::HashSet<u64>> = Vec::with_capacity(tasks.len());
+    let mut parts: Vec<Table> = Vec::with_capacity(tasks.len());
+    for t in &tasks {
+        if t.inputs.len() != 1 {
+            bail!("batched stage with multi-input task");
+        }
+        id_sets.push(t.inputs[0].table.rows().iter().map(|r| r.id).collect());
+        parts.push(t.inputs[0].table.clone());
+    }
+    let combined = apply_union(parts).context("batch combine")?;
+    let out = run_ops(ctx, &stage_rt.spec, vec![combined]);
+    match out {
+        Ok(out) => {
+            for (t, ids) in tasks.into_iter().zip(id_sets) {
+                let mut part = Table::new(out.schema().clone());
+                part.set_grouping(out.grouping().map(str::to_string))?;
+                for row in out.rows() {
+                    if ids.contains(&row.id) {
+                        part.push(row.id, row.values.clone())?;
+                    }
+                }
+                finish(cluster, plan, t, Ok(part), replica.node);
+            }
+        }
+        Err(e) => {
+            let msg = format!("{e:#}");
+            for t in tasks {
+                finish(cluster, plan, t, Err(anyhow::anyhow!("{msg}")), replica.node);
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Execute a stage's op chain: ops[0] may be multi-input, the rest are a
+/// fused single-input chain.
+fn run_ops(ctx: &ExecCtx, spec: &PlanStage, inputs: Vec<Table>) -> Result<Table> {
+    let mut t = apply_op(ctx, &spec.ops[0], inputs)
+        .with_context(|| format!("stage {}", spec.name))?;
+    for op in &spec.ops[1..] {
+        t = apply_op(ctx, op, vec![t]).with_context(|| format!("stage {}", spec.name))?;
+    }
+    Ok(t)
+}
+
+fn finish(
+    cluster: &Arc<ClusterInner>,
+    plan: &Arc<RegisteredPlan>,
+    task: Task,
+    out: Result<Table>,
+    node: NodeId,
+) {
+    match out {
+        Ok(table) => {
+            cluster.complete_stage(plan, &task.req, task.seg, task.stage, table, node)
+        }
+        Err(e) => task.req.fail(e),
+    }
+}

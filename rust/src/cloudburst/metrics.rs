@@ -1,0 +1,90 @@
+//! Per-plan serving metrics: end-to-end latency summaries, completion
+//! timelines (Fig 6), and replica-allocation history.
+
+use std::sync::Mutex;
+
+use crate::util::stats::{Summary, Timeline};
+
+#[derive(Debug, Default)]
+pub struct PlanMetrics {
+    /// End-to-end request latencies (virtual ms).
+    pub latency: Mutex<Summary>,
+    /// Optional completion timeline (enabled for Fig 6-style runs).
+    pub timeline: Mutex<Option<Timeline>>,
+    /// (t_ms, stage_label, replicas) samples from the autoscaler.
+    pub allocation: Mutex<Vec<(f64, String, usize)>>,
+    /// Completed request count.
+    pub completed: std::sync::atomic::AtomicU64,
+}
+
+impl PlanMetrics {
+    pub fn record(&self, t_ms: f64, latency_ms: f64) {
+        self.latency.lock().unwrap().add(latency_ms);
+        if let Some(tl) = self.timeline.lock().unwrap().as_mut() {
+            tl.record(t_ms, latency_ms);
+        }
+        self.completed
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    }
+
+    pub fn enable_timeline(&self, bucket_ms: f64, horizon_ms: f64) {
+        *self.timeline.lock().unwrap() = Some(Timeline::new(bucket_ms, horizon_ms));
+    }
+
+    pub fn note_allocation(&self, t_ms: f64, stage: &str, replicas: usize) {
+        self.allocation
+            .lock()
+            .unwrap()
+            .push((t_ms, stage.to_string(), replicas));
+    }
+
+    /// (median, p99) of recorded latencies.
+    pub fn report(&self) -> (f64, f64) {
+        self.latency.lock().unwrap().report()
+    }
+
+    pub fn summary(&self) -> Summary {
+        self.latency.lock().unwrap().clone()
+    }
+
+    pub fn completed(&self) -> u64 {
+        self.completed.load(std::sync::atomic::Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_and_report() {
+        let m = PlanMetrics::default();
+        m.record(10.0, 5.0);
+        m.record(20.0, 15.0);
+        let (med, p99) = m.report();
+        assert!((med - 10.0).abs() < 1e-9);
+        assert!(p99 <= 15.0);
+        assert_eq!(m.completed(), 2);
+    }
+
+    #[test]
+    fn timeline_optional() {
+        let m = PlanMetrics::default();
+        m.record(5.0, 1.0); // no timeline yet: no panic
+        m.enable_timeline(1000.0, 5_000.0);
+        m.record(1500.0, 2.0);
+        let mut tl = m.timeline.lock().unwrap();
+        let rows = tl.as_mut().unwrap().rows();
+        assert_eq!(rows[1].2, 1.0);
+    }
+
+    #[test]
+    fn allocation_log() {
+        let m = PlanMetrics::default();
+        m.note_allocation(0.0, "slow", 3);
+        m.note_allocation(1000.0, "slow", 19);
+        let a = m.allocation.lock().unwrap();
+        assert_eq!(a.len(), 2);
+        assert_eq!(a[1].2, 19);
+    }
+}

@@ -1,0 +1,21 @@
+//! The Cloudburst-like stateful serverless runtime (the paper's §2.3
+//! substrate plus the §4 extensions this paper added to it):
+//!
+//! * per-function executor replicas with colocated caches,
+//! * DAG registration and execution with **wait-for-all** and
+//!   **wait-for-any** semantics,
+//! * a locality-aware, resource-class-partitioned scheduler with
+//!   **to-be-continued** dynamic dispatch of plan segments,
+//! * a fine-grained per-function **autoscaler**,
+//! * **batched dequeue** for batch-aware functions.
+//!
+//! Entry points: [`Cluster::new`] → [`Cluster::register`] →
+//! [`Cluster::execute`].
+
+pub mod autoscaler;
+pub mod cluster;
+pub mod executor;
+pub mod metrics;
+
+pub use cluster::{Cluster, DagHandle, ExecFuture};
+pub use metrics::PlanMetrics;

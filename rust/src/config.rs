@@ -1,0 +1,195 @@
+//! Global configuration and calibration constants.
+//!
+//! Every modeled cost in the simulated cluster (network hops, KVS access,
+//! accelerator service times) is derived from the constants here, which are
+//! calibrated to the paper's own reported numbers (DESIGN.md §5).  The
+//! `CLOUDFLOW_TIME_SCALE` environment variable scales all modeled delays
+//! (e.g. `0.2` makes every benchmark 5x faster); recorded metrics divide
+//! the scale back out, so reported latencies stay in paper units.
+
+use once_cell::sync::OnceCell;
+
+#[derive(Debug, Clone)]
+pub struct NetConfig {
+    /// Fixed per-hop cost (scheduling + syscall + wire setup), ms.
+    pub hop_base_ms: f64,
+    /// Wire bandwidth between nodes, bytes per ms (10 Gbps ≈ 1.25e6 B/ms).
+    pub wire_bytes_per_ms: f64,
+    /// Serialization throughput at each end, bytes per ms (2 GB/s).
+    pub codec_bytes_per_ms: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct KvsConfig {
+    /// Shards in the storage tier.
+    pub shards: usize,
+    /// Base cost of a remote KVS op before size costs, ms.
+    pub remote_base_ms: f64,
+    /// Effective KVS transfer rate, bytes/ms (server-side serialization +
+    /// wire; ~2 Gbps effective, per Anna's measured large-object gets).
+    pub remote_bytes_per_ms: f64,
+    /// Cost of a local cache hit, ms.
+    pub cache_hit_ms: f64,
+    /// Per-node cache capacity in bytes (paper: 2GB side caches).
+    pub cache_capacity: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct AutoscalerConfig {
+    /// Decision period, ms.
+    pub interval_ms: f64,
+    /// Scale up when queued requests per replica exceed this.
+    pub up_queue_per_replica: f64,
+    /// Max replicas added per decision (Fig 6 adds ~16 over 15s).
+    pub up_step: usize,
+    /// Scale down after this many idle intervals.
+    pub down_idle_intervals: usize,
+    /// Fraction of spare capacity kept as slack (Fig 6's +2 replicas).
+    pub slack_replicas: usize,
+    /// Hard cap on replicas per function.
+    pub max_replicas: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct ClusterConfig {
+    /// Soft pool sizes: the allocator prefers fresh nodes (spreading
+    /// functions across machines, as Cloudburst's scheduler does on a
+    /// real fleet) until this many exist, then packs free worker slots.
+    pub cpu_pool_nodes: usize,
+    pub gpu_pool_nodes: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct BatchConfig {
+    /// Default max batch size (paper §4 Batching: defaults to 10).
+    pub max_batch: usize,
+    /// How long an executor waits to accumulate a batch, ms.
+    pub batch_wait_ms: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct Config {
+    /// Multiplier applied to modeled sleeps (see module docs).
+    pub time_scale: f64,
+    pub net: NetConfig,
+    pub kvs: KvsConfig,
+    pub autoscaler: AutoscalerConfig,
+    pub batch: BatchConfig,
+    pub cluster: ClusterConfig,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            time_scale: 1.0,
+            net: NetConfig {
+                hop_base_ms: 0.5,
+                wire_bytes_per_ms: 1.25e6,  // 10 Gbps
+                codec_bytes_per_ms: 2.0e6,  // 2 GB/s
+            },
+            kvs: KvsConfig {
+                shards: 4,
+                remote_base_ms: 0.3,
+                remote_bytes_per_ms: 2.5e5, // ~2 Gbps effective
+
+                cache_hit_ms: 0.025,
+                cache_capacity: 2 * 1024 * 1024 * 1024, // 2 GB
+            },
+            autoscaler: AutoscalerConfig {
+                interval_ms: 1000.0,
+                up_queue_per_replica: 1.0,
+                up_step: 6,
+                down_idle_intervals: 10,
+                slack_replicas: 2,
+                max_replicas: 64,
+            },
+            batch: BatchConfig { max_batch: 10, batch_wait_ms: 2.0 },
+            cluster: ClusterConfig { cpu_pool_nodes: 24, gpu_pool_nodes: 12 },
+        }
+    }
+}
+
+impl Config {
+    /// Default config with environment overrides applied.
+    pub fn from_env() -> Self {
+        let mut c = Config::default();
+        if let Some(v) = env_f64("CLOUDFLOW_TIME_SCALE") {
+            c.time_scale = v;
+        }
+        if let Some(v) = env_f64("CLOUDFLOW_MAX_BATCH") {
+            c.batch.max_batch = v as usize;
+        }
+        if let Some(v) = env_f64("CLOUDFLOW_CACHE_MB") {
+            c.kvs.cache_capacity = (v * 1024.0 * 1024.0) as usize;
+        }
+        c
+    }
+}
+
+fn env_f64(name: &str) -> Option<f64> {
+    std::env::var(name).ok()?.parse().ok()
+}
+
+static GLOBAL: OnceCell<Config> = OnceCell::new();
+
+static MAX_BATCH_OVERRIDE: std::sync::atomic::AtomicUsize =
+    std::sync::atomic::AtomicUsize::new(0);
+
+/// Override the max batch size at runtime (benchmark sweeps; the global
+/// config freezes on first access). 0 clears the override.
+pub fn set_max_batch(n: usize) {
+    MAX_BATCH_OVERRIDE.store(n, std::sync::atomic::Ordering::Relaxed);
+}
+
+/// Effective max batch: runtime override, else the frozen config.
+pub fn max_batch() -> usize {
+    match MAX_BATCH_OVERRIDE.load(std::sync::atomic::Ordering::Relaxed) {
+        0 => global().batch.max_batch,
+        n => n,
+    }
+}
+
+/// Process-wide config (first access freezes it).
+pub fn global() -> &'static Config {
+    GLOBAL.get_or_init(Config::from_env)
+}
+
+/// Install a specific config as the global one (tests/benches). No-op if
+/// already frozen; returns whether the install won.
+pub fn install(cfg: Config) -> bool {
+    GLOBAL.set(cfg).is_ok()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_sane() {
+        let c = Config::default();
+        assert_eq!(c.time_scale, 1.0);
+        assert!(c.net.wire_bytes_per_ms > 1e6);
+        assert_eq!(c.batch.max_batch, 10);
+        // 10MB hop should be ~18.5ms with default constants:
+        // 0.5 + 10e6/1.25e6 + 2*10e6/2e6 = 0.5 + 8 + 10
+        let ten_mb = 10_000_000.0;
+        let hop = c.net.hop_base_ms
+            + ten_mb / c.net.wire_bytes_per_ms
+            + 2.0 * ten_mb / c.net.codec_bytes_per_ms;
+        assert!((hop - 18.5).abs() < 0.1, "hop={hop}");
+    }
+
+    #[test]
+    fn env_parse_helper() {
+        std::env::set_var("CLOUDFLOW_TEST_F64", "0.25");
+        assert_eq!(env_f64("CLOUDFLOW_TEST_F64"), Some(0.25));
+        assert_eq!(env_f64("CLOUDFLOW_TEST_MISSING"), None);
+    }
+
+    #[test]
+    fn global_is_stable() {
+        let a = global() as *const Config;
+        let b = global() as *const Config;
+        assert_eq!(a, b);
+    }
+}

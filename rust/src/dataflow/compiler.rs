@@ -1,0 +1,761 @@
+//! The Cloudflow compiler (paper §4): dataflow→dataflow rewrites followed
+//! by lowering to a Cloudburst execution [`Plan`].
+//!
+//! Rewrites (all automatic; `OptFlags` selects which are enabled):
+//! * **Operator fusion** — maximal single-input chains collapse into one
+//!   stage (one Cloudburst function ⇒ one placement, no data movement),
+//!   optionally refusing to fuse across resource classes.
+//! * **Competitive execution** — chosen operators are replicated k ways
+//!   with an `anyof` consuming the results; the runtime's wait-for-any
+//!   semantics take the first finisher.
+//! * **Locality / dynamic dispatch** — each column-keyed `lookup` is fused
+//!   with its downstream operator, and the plan is *split* before it into
+//!   segments; at runtime the scheduler places the continuation segment on
+//!   the node whose cache likely holds the resolved key (the paper's
+//!   to-be-continued mechanism).
+//!
+//! Lowering annotates each stage with device class, batch-awareness and
+//! wait-for-any semantics for the executors.
+
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+
+use crate::simulation::gpu::Device;
+
+use super::flow::Dataflow;
+use super::operator::{Arity, LookupKey, OpKind};
+
+/// Optimization selection (paper §4: the user only selects *which*
+/// optimizations to enable; application is automatic).
+#[derive(Debug, Clone)]
+pub struct OptFlags {
+    /// Fuse chains of single-input operators into one stage.
+    pub fusion: bool,
+    /// Allow fusion across CPU/GPU resource-class boundaries.
+    pub fuse_across_devices: bool,
+    /// Replicas for competitive execution, keyed by map-function name
+    /// (k total replicas; 1 = no replication).
+    pub competitive: HashMap<String, usize>,
+    /// Fuse lookups with their downstream operator and split the plan for
+    /// cache-locality-aware dynamic dispatch.
+    pub locality_dispatch: bool,
+    /// Enable batched dequeue for batch-aware stages.
+    pub batching: bool,
+}
+
+impl OptFlags {
+    /// Everything off: the naive 1:1 lowering.
+    pub fn none() -> Self {
+        OptFlags {
+            fusion: false,
+            fuse_across_devices: false,
+            competitive: HashMap::new(),
+            locality_dispatch: false,
+            batching: false,
+        }
+    }
+
+    /// The paper's standard optimized configuration.
+    pub fn all() -> Self {
+        OptFlags { fusion: true, ..OptFlags::none() }
+            .with_locality()
+            .with_batching()
+    }
+
+    pub fn with_fusion(mut self) -> Self {
+        self.fusion = true;
+        self
+    }
+
+    pub fn with_fuse_across_devices(mut self) -> Self {
+        self.fuse_across_devices = true;
+        self
+    }
+
+    pub fn with_locality(mut self) -> Self {
+        self.locality_dispatch = true;
+        self
+    }
+
+    pub fn with_batching(mut self) -> Self {
+        self.batching = true;
+        self
+    }
+
+    pub fn with_competitive(mut self, func_name: &str, replicas: usize) -> Self {
+        self.competitive.insert(func_name.to_string(), replicas);
+        self
+    }
+}
+
+/// Where a stage's input comes from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StageInput {
+    /// The segment's input table.
+    Source,
+    /// Output of another stage in the same segment.
+    Stage(usize),
+}
+
+/// One compiled stage: a (possibly multi-input) head operator followed by
+/// a fused chain of single-input operators, executed as one Cloudburst
+/// function at one placement.
+#[derive(Debug, Clone)]
+pub struct PlanStage {
+    pub name: String,
+    /// ops[0] may be multi-input (Join/Union/Anyof); the rest are a fused
+    /// single-input chain.
+    pub ops: Vec<OpKind>,
+    pub inputs: Vec<StageInput>,
+    /// Wait-for-any: fire on the first input instead of all (anyof).
+    pub wait_any: bool,
+    pub device: Device,
+    /// Batched dequeue allowed (all model ops batch-aware + flag on).
+    pub batchable: bool,
+}
+
+impl PlanStage {
+    pub fn label(&self) -> String {
+        self.ops
+            .iter()
+            .map(|o| o.label())
+            .collect::<Vec<_>>()
+            .join("+")
+    }
+
+    /// Keys this stage looks up (for locality hints).
+    pub fn lookup_key(&self) -> Option<&LookupKey> {
+        self.ops.iter().find_map(|o| match o {
+            OpKind::Lookup { key, .. } => Some(key),
+            _ => None,
+        })
+    }
+
+    /// The key column when this stage is headed by a column-keyed lookup
+    /// (a dynamic-dispatch boundary).
+    pub fn dispatch_lookup_col(&self) -> Option<&str> {
+        match self.ops.first() {
+            Some(OpKind::Lookup { key: LookupKey::Column(c), .. }) => Some(c),
+            _ => None,
+        }
+    }
+}
+
+/// A dispatchable sub-DAG. Segments run in sequence; segment k>0 starts
+/// with a locality-dispatched stage (the paper's to-be-continued DAG).
+#[derive(Debug, Clone)]
+pub struct Segment {
+    pub stages: Vec<PlanStage>,
+    pub output: usize,
+    /// Lookup key whose resolved value should drive placement of this
+    /// segment's first stage (None for segment 0).
+    pub dispatch_key: Option<LookupKey>,
+}
+
+/// The compiled execution plan for one dataflow.
+#[derive(Debug, Clone)]
+pub struct Plan {
+    pub name: String,
+    pub segments: Vec<Segment>,
+    pub opts: OptFlags,
+}
+
+impl Plan {
+    pub fn n_stages(&self) -> usize {
+        self.segments.iter().map(|s| s.stages.len()).sum()
+    }
+
+    /// Force every stage onto one device class (the paper's CPU-only
+    /// deployments of Fig 13).
+    pub fn force_device(mut self, d: Device) -> Plan {
+        for seg in &mut self.segments {
+            for st in &mut seg.stages {
+                st.device = d;
+            }
+        }
+        self
+    }
+
+    pub fn stage_labels(&self) -> Vec<String> {
+        self.segments
+            .iter()
+            .flat_map(|s| s.stages.iter().map(|st| st.label()))
+            .collect()
+    }
+}
+
+/// Compile a dataflow under the given optimization flags.
+pub fn compile(flow: &Dataflow, opts: &OptFlags) -> Result<Plan> {
+    flow.validate()?;
+    let flow = apply_competitive(flow, &opts.competitive)?;
+
+    // 1:1 proto-stages from flow nodes (skipping Input).
+    let mut stages: Vec<PlanStage> = Vec::new();
+    let mut node_to_stage: HashMap<usize, usize> = HashMap::new();
+    for (i, node) in flow.nodes().iter().enumerate() {
+        if matches!(node.op, OpKind::Input) {
+            continue;
+        }
+        let inputs = node
+            .parents
+            .iter()
+            .map(|&p| {
+                if matches!(flow.nodes()[p].op, OpKind::Input) {
+                    StageInput::Source
+                } else {
+                    StageInput::Stage(node_to_stage[&p])
+                }
+            })
+            .collect();
+        let (device, batchable) = op_traits(&node.op, opts.batching);
+        stages.push(PlanStage {
+            name: node.op.label(),
+            ops: vec![node.op.clone()],
+            inputs,
+            wait_any: matches!(node.op, OpKind::Anyof),
+            device,
+            batchable,
+        });
+        node_to_stage.insert(i, stages.len() - 1);
+    }
+    if stages.is_empty() {
+        bail!("flow has no operators");
+    }
+    let mut output = node_to_stage[&flow.output().context("no output")?.0];
+
+    // Fusion rewrites.  With locality dispatch on, a column-keyed lookup
+    // must stay at the head of its stage (it is a dispatch boundary), so
+    // fusion may extend it downstream but never absorb it upstream.
+    let locality = opts.locality_dispatch;
+    let absorbable = move |child: &PlanStage| !(locality && is_dispatch_head(child));
+    if opts.fusion {
+        fuse_pass(&mut stages, &mut output, opts.fuse_across_devices, |_| true, absorbable);
+    } else if opts.locality_dispatch {
+        // Locality still wants each lookup colocated with its consumer.
+        fuse_pass(
+            &mut stages,
+            &mut output,
+            true,
+            |s: &PlanStage| matches!(s.ops.last(), Some(OpKind::Lookup { .. })),
+            |_| true,
+        );
+    }
+
+    // Segment split for dynamic dispatch.
+    let segments = if opts.locality_dispatch {
+        split_segments(stages, output)?
+    } else {
+        vec![Segment { stages, output, dispatch_key: None }]
+    };
+
+    Ok(Plan { name: flow.name.clone(), segments, opts: opts.clone() })
+}
+
+/// Device class + batchability of a single operator.
+fn op_traits(op: &OpKind, batching: bool) -> (Device, bool) {
+    match op {
+        OpKind::Map(f) => (f.device, batching && f.batch_aware),
+        OpKind::Fuse(ops) => {
+            let mut d = Device::Cpu;
+            let mut b = batching;
+            for o in ops {
+                let (od, ob) = op_traits(o, batching);
+                if od == Device::Gpu {
+                    d = Device::Gpu;
+                }
+                if matches!(o, OpKind::Map(_)) {
+                    b = b && ob;
+                }
+            }
+            (d, b)
+        }
+        _ => (Device::Cpu, false),
+    }
+}
+
+/// Replicate competitive map nodes and merge with anyof.
+fn apply_competitive(flow: &Dataflow, competitive: &HashMap<String, usize>) -> Result<Dataflow> {
+    if competitive.is_empty()
+        || !flow.nodes().iter().any(|n| match &n.op {
+            OpKind::Map(f) => competitive.get(&f.name).copied().unwrap_or(1) > 1,
+            _ => false,
+        })
+    {
+        return Ok(flow.clone());
+    }
+    // Rebuild the flow, expanding marked nodes.
+    let mut out = Dataflow::new(&flow.name, flow.input_schema().clone());
+    let mut remap: HashMap<usize, super::flow::NodeRef> = HashMap::new();
+    remap.insert(0, out.input());
+    for (i, node) in flow.nodes().iter().enumerate().skip(1) {
+        let parents: Vec<super::flow::NodeRef> =
+            node.parents.iter().map(|p| remap[p]).collect();
+        let new_ref = match &node.op {
+            OpKind::Map(f) => {
+                let k = competitive.get(&f.name).copied().unwrap_or(1);
+                if k > 1 {
+                    let mut reps = Vec::with_capacity(k);
+                    for r in 0..k {
+                        let mut fr = f.clone();
+                        fr.name = format!("{}#{r}", f.name);
+                        reps.push(out.map(parents[0], fr)?);
+                    }
+                    out.anyof(&reps)?
+                } else {
+                    out.map(parents[0], f.clone())?
+                }
+            }
+            OpKind::Filter(p) => out.filter(parents[0], p.clone())?,
+            OpKind::Groupby { column } => out.groupby(parents[0], column)?,
+            OpKind::Agg { agg, column } => out.agg(parents[0], *agg, column)?,
+            OpKind::Lookup { key, as_col } => {
+                out.lookup(parents[0], key.clone(), as_col)?
+            }
+            OpKind::Join { key, how } => {
+                out.join(parents[0], parents[1], key.as_deref(), *how)?
+            }
+            OpKind::Union => out.union(&parents)?,
+            OpKind::Anyof => out.anyof(&parents)?,
+            OpKind::Input => unreachable!(),
+            OpKind::Fuse(_) => bail!("fuse before competitive rewrite"),
+        };
+        remap.insert(i, new_ref);
+    }
+    let old_out = flow.output().context("no output")?;
+    out.set_output(remap[&old_out.0])?;
+    Ok(out)
+}
+
+/// Is this stage headed by a column-keyed lookup (a dynamic-dispatch
+/// boundary)?
+fn is_dispatch_head(s: &PlanStage) -> bool {
+    matches!(
+        s.ops.first(),
+        Some(OpKind::Lookup { key: LookupKey::Column(_), .. })
+    )
+}
+
+/// Greedy chain fusion over the stage graph. `want(parent)` gates which
+/// parents may absorb their child (always-true for full fusion; lookup-only
+/// for the locality mini-pass); `absorbable(child)` protects dispatch
+/// boundaries from being swallowed.
+fn fuse_pass(
+    stages: &mut Vec<PlanStage>,
+    output: &mut usize,
+    across_devices: bool,
+    want: impl Fn(&PlanStage) -> bool,
+    absorbable: impl Fn(&PlanStage) -> bool,
+) {
+    loop {
+        let children = child_map(stages);
+        let mut fused = false;
+        for s in 0..stages.len() {
+            if children[s].len() != 1 {
+                continue;
+            }
+            let c = children[s][0];
+            let child = &stages[c];
+            if child.inputs.len() != 1 || child.wait_any {
+                continue;
+            }
+            if !matches!(child.ops[0].arity(), Arity::One) {
+                continue;
+            }
+            if !across_devices && stages[s].device != child.device {
+                continue;
+            }
+            if !want(&stages[s]) || !absorbable(&stages[c]) {
+                continue;
+            }
+            // Merge c into s.
+            let child_ops = stages[c].ops.clone();
+            let child_batch = stages[c].batchable;
+            let child_dev = stages[c].device;
+            let child_name = stages[c].name.clone();
+            let st = &mut stages[s];
+            st.ops.extend(child_ops);
+            st.name = format!("{}+{}", st.name, child_name);
+            st.batchable = st.batchable && child_batch;
+            if child_dev == Device::Gpu {
+                st.device = Device::Gpu;
+            }
+            // Rewire: anything consuming c now consumes s; drop c.
+            for other in stages.iter_mut() {
+                for inp in other.inputs.iter_mut() {
+                    if *inp == StageInput::Stage(c) {
+                        *inp = StageInput::Stage(s);
+                    }
+                }
+            }
+            if *output == c {
+                *output = s;
+            }
+            remove_stage(stages, output, c);
+            fused = true;
+            break;
+        }
+        if !fused {
+            return;
+        }
+    }
+}
+
+fn child_map(stages: &[PlanStage]) -> Vec<Vec<usize>> {
+    let mut ch = vec![Vec::new(); stages.len()];
+    for (i, s) in stages.iter().enumerate() {
+        for inp in &s.inputs {
+            if let StageInput::Stage(p) = inp {
+                ch[*p].push(i);
+            }
+        }
+    }
+    ch
+}
+
+fn remove_stage(stages: &mut Vec<PlanStage>, output: &mut usize, idx: usize) {
+    stages.remove(idx);
+    for s in stages.iter_mut() {
+        for inp in s.inputs.iter_mut() {
+            if let StageInput::Stage(p) = inp {
+                if *p > idx {
+                    *inp = StageInput::Stage(*p - 1);
+                }
+            }
+        }
+    }
+    if *output > idx {
+        *output -= 1;
+    }
+}
+
+/// Split the stage graph into segments before each column-keyed lookup
+/// stage that dominates the output (linear pipeline position).
+fn split_segments(stages: Vec<PlanStage>, output: usize) -> Result<Vec<Segment>> {
+    // Find split points: stages whose first op is a lookup with a column
+    // key, that have a single Source-or-stage input, and through which all
+    // paths to the output pass.
+    let mut split_at: Vec<usize> = Vec::new();
+    for (i, s) in stages.iter().enumerate() {
+        // A lookup reading the request input directly needs no split: the
+        // entry scheduler already dispatches segment 0 with a hint
+        // resolved from the input table.
+        let reads_source = s.inputs.iter().all(|i| matches!(i, StageInput::Source));
+        if is_dispatch_head(s)
+            && !reads_source
+            && s.inputs.len() == 1
+            && dominates(&stages, output, i)
+        {
+            split_at.push(i);
+        }
+    }
+    if split_at.is_empty() {
+        return Ok(vec![Segment { stages, output, dispatch_key: None }]);
+    }
+    // Order split points topologically (index order is topological by
+    // construction of the flow).
+    split_at.sort_unstable();
+    let mut segments = Vec::new();
+    let mut assigned: Vec<Option<usize>> = vec![None; stages.len()]; // seg idx
+    // Assign each stage to the latest segment whose head dominates it.
+    // Segment 0 is everything before the first split.
+    for (i, _) in stages.iter().enumerate() {
+        let mut seg = 0;
+        for (k, &sp) in split_at.iter().enumerate() {
+            if i == sp || reaches(&stages, sp, i) {
+                seg = k + 1;
+            }
+        }
+        assigned[i] = Some(seg);
+    }
+    let n_segs = split_at.len() + 1;
+    for seg in 0..n_segs {
+        let members: Vec<usize> = (0..stages.len())
+            .filter(|&i| assigned[i] == Some(seg))
+            .collect();
+        if members.is_empty() {
+            bail!("empty plan segment {seg}");
+        }
+        let local_idx: HashMap<usize, usize> =
+            members.iter().enumerate().map(|(l, &g)| (g, l)).collect();
+        let mut seg_stages = Vec::with_capacity(members.len());
+        for &g in &members {
+            let mut st = stages[g].clone();
+            for inp in st.inputs.iter_mut() {
+                if let StageInput::Stage(p) = inp {
+                    *inp = match local_idx.get(p) {
+                        Some(&l) => StageInput::Stage(l),
+                        // Crossing a segment boundary: the boundary table
+                        // is this segment's source.
+                        None => StageInput::Source,
+                    };
+                }
+            }
+            seg_stages.push(st);
+        }
+        let seg_output = if seg == n_segs - 1 {
+            local_idx[&output]
+        } else {
+            // Output of an intermediate segment is the stage feeding the
+            // next split point: the next split's single input producer, or
+            // the last member on the boundary.  Because splits dominate,
+            // this is the unique member whose children are all in later
+            // segments.
+            let ch = child_map(&stages);
+            *members
+                .iter()
+                .find(|&&g| {
+                    ch[g].iter().all(|&c| assigned[c] > Some(seg))
+                        || ch[g].is_empty()
+                })
+                .map(|g| &local_idx[g])
+                .context("no boundary stage in segment")?
+        };
+        let dispatch_key = if seg == 0 {
+            None
+        } else {
+            stages[split_at[seg - 1]].lookup_key().cloned()
+        };
+        segments.push(Segment { stages: seg_stages, output: seg_output, dispatch_key });
+    }
+    Ok(segments)
+}
+
+/// Does every path from any Source to `output` pass through `via`?
+fn dominates(stages: &[PlanStage], output: usize, via: usize) -> bool {
+    if output == via {
+        return true;
+    }
+    // DFS from output towards sources avoiding `via`; if we reach a Source
+    // input, `via` is not a dominator.
+    let mut stack = vec![output];
+    let mut seen = vec![false; stages.len()];
+    while let Some(s) = stack.pop() {
+        if s == via || std::mem::replace(&mut seen[s], true) {
+            continue;
+        }
+        for inp in &stages[s].inputs {
+            match inp {
+                StageInput::Source => return false,
+                StageInput::Stage(p) => stack.push(*p),
+            }
+        }
+    }
+    true
+}
+
+/// Is `to` reachable (downstream) from `from`?
+fn reaches(stages: &[PlanStage], from: usize, to: usize) -> bool {
+    if from == to {
+        return true;
+    }
+    let ch = child_map(stages);
+    let mut stack = vec![from];
+    let mut seen = vec![false; stages.len()];
+    while let Some(s) = stack.pop() {
+        if std::mem::replace(&mut seen[s], true) {
+            continue;
+        }
+        if s == to {
+            return true;
+        }
+        stack.extend(ch[s].iter().copied());
+    }
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataflow::operator::{CmpOp, Func, ModelBinding, Predicate, SleepDist};
+    use crate::dataflow::table::{DType, Schema};
+
+    fn chain_flow(n: usize) -> Dataflow {
+        let mut fl = Dataflow::new("chain", Schema::new(vec![("p", DType::Blob)]));
+        let mut cur = fl.input();
+        for i in 0..n {
+            cur = fl.map(cur, Func::identity(&format!("f{i}"))).unwrap();
+        }
+        fl.set_output(cur).unwrap();
+        fl
+    }
+
+    #[test]
+    fn unoptimized_is_one_stage_per_op() {
+        let plan = compile(&chain_flow(5), &OptFlags::none()).unwrap();
+        assert_eq!(plan.segments.len(), 1);
+        assert_eq!(plan.n_stages(), 5);
+    }
+
+    #[test]
+    fn fusion_collapses_chains() {
+        let plan = compile(&chain_flow(5), &OptFlags::none().with_fusion()).unwrap();
+        assert_eq!(plan.n_stages(), 1);
+        assert_eq!(plan.segments[0].stages[0].ops.len(), 5);
+    }
+
+    #[test]
+    fn fusion_stops_at_fan_out() {
+        // diamond: a -> (b, c) -> union
+        let mut fl = Dataflow::new("d", Schema::new(vec![("p", DType::Blob)]));
+        let a = fl.map(fl.input(), Func::identity("a")).unwrap();
+        let b = fl.map(a, Func::identity("b")).unwrap();
+        let c = fl.map(a, Func::identity("c")).unwrap();
+        let u = fl.union(&[b, c]).unwrap();
+        let tail = fl.map(u, Func::identity("tail")).unwrap();
+        fl.set_output(tail).unwrap();
+        let plan = compile(&fl, &OptFlags::none().with_fusion()).unwrap();
+        // a cannot fuse (2 children); b,c cannot fuse into union (multi-in),
+        // union+tail fuse. => stages: a, b, c, union+tail
+        assert_eq!(plan.n_stages(), 4);
+        let labels = plan.stage_labels();
+        assert!(labels.iter().any(|l| l.contains("union") && l.contains("tail")));
+    }
+
+    #[test]
+    fn fusion_respects_device_boundary() {
+        let mut fl = Dataflow::new("d", Schema::new(vec![("img", DType::F32s)]));
+        let cpu = fl.map(fl.input(), Func::identity("pre")).unwrap();
+        let gpu = fl
+            .map(
+                cpu,
+                Func::model(ModelBinding::new(
+                    "resnet",
+                    &["img"],
+                    &[("probs", DType::F32s)],
+                )),
+            )
+            .unwrap();
+        fl.set_output(gpu).unwrap();
+        let split = compile(&fl, &OptFlags::none().with_fusion()).unwrap();
+        assert_eq!(split.n_stages(), 2, "CPU/GPU not fused by default");
+        let joined = compile(
+            &fl,
+            &OptFlags::none().with_fusion().with_fuse_across_devices(),
+        )
+        .unwrap();
+        assert_eq!(joined.n_stages(), 1);
+        assert_eq!(joined.segments[0].stages[0].device, Device::Gpu);
+    }
+
+    #[test]
+    fn competitive_rewrites_to_anyof() {
+        let mut fl = Dataflow::new("c", Schema::new(vec![("p", DType::Blob)]));
+        let a = fl.map(fl.input(), Func::identity("front")).unwrap();
+        let slow = fl
+            .map(
+                a,
+                Func::sleep(
+                    "variable",
+                    SleepDist::GammaMs { k: 3.0, theta: 2.0, unit_ms: 1.0, base_ms: 0.0 },
+                ),
+            )
+            .unwrap();
+        let tail = fl.map(slow, Func::identity("tail")).unwrap();
+        fl.set_output(tail).unwrap();
+        let plan = compile(
+            &fl,
+            &OptFlags::none().with_competitive("variable", 3),
+        )
+        .unwrap();
+        // front, 3 replicas, anyof, tail = 6 stages
+        assert_eq!(plan.n_stages(), 6);
+        let anyof = plan
+            .segments[0]
+            .stages
+            .iter()
+            .find(|s| s.wait_any)
+            .expect("anyof stage");
+        assert_eq!(anyof.inputs.len(), 3);
+    }
+
+    #[test]
+    fn locality_splits_segments_and_fuses_lookup() {
+        // map(pick) -> lookup(col) -> map(sum) : the Fig 7 pipeline.
+        let mut fl = Dataflow::new("loc", Schema::new(vec![("key", DType::Str)]));
+        let pick = fl.map(fl.input(), Func::identity("pick")).unwrap();
+        let lk = fl
+            .lookup(pick, LookupKey::Column("key".into()), "obj")
+            .unwrap();
+        let sum = fl.map(lk, Func::identity("consume")).unwrap();
+        fl.set_output(sum).unwrap();
+
+        let naive = compile(&fl, &OptFlags::none()).unwrap();
+        assert_eq!(naive.segments.len(), 1);
+        assert_eq!(naive.n_stages(), 3);
+
+        let opt = compile(&fl, &OptFlags::none().with_locality()).unwrap();
+        assert_eq!(opt.segments.len(), 2);
+        assert!(opt.segments[1].dispatch_key.is_some());
+        // lookup fused with its consumer in segment 1
+        let s1 = &opt.segments[1].stages;
+        assert_eq!(s1.len(), 1);
+        assert_eq!(s1[0].ops.len(), 2);
+
+        let full = compile(&fl, &OptFlags::none().with_fusion().with_locality()).unwrap();
+        assert_eq!(full.segments.len(), 2);
+        assert_eq!(full.segments[0].stages.len(), 1);
+    }
+
+    #[test]
+    fn const_lookup_does_not_split() {
+        let mut fl = Dataflow::new("loc", Schema::new(vec![("key", DType::Str)]));
+        let lk = fl
+            .lookup(fl.input(), LookupKey::Const("weights".into()), "obj")
+            .unwrap();
+        fl.set_output(lk).unwrap();
+        let plan = compile(&fl, &OptFlags::all()).unwrap();
+        assert_eq!(plan.segments.len(), 1);
+    }
+
+    #[test]
+    fn batching_annotation() {
+        let mut fl = Dataflow::new("b", Schema::new(vec![("img", DType::F32s)]));
+        let m = fl
+            .map(
+                fl.input(),
+                Func::model(ModelBinding::new(
+                    "resnet",
+                    &["img"],
+                    &[("probs", DType::F32s)],
+                )),
+            )
+            .unwrap();
+        fl.set_output(m).unwrap();
+        let off = compile(&fl, &OptFlags::none()).unwrap();
+        assert!(!off.segments[0].stages[0].batchable);
+        let on = compile(&fl, &OptFlags::none().with_batching()).unwrap();
+        assert!(on.segments[0].stages[0].batchable);
+    }
+
+    #[test]
+    fn filter_chain_fuses_with_maps() {
+        let mut fl = Dataflow::new("f", Schema::new(vec![("conf", DType::F64)]));
+        let m = fl.map(fl.input(), Func::identity("m")).unwrap();
+        let f = fl
+            .filter(m, Predicate::threshold("conf", CmpOp::Lt, 0.5))
+            .unwrap();
+        let m2 = fl.map(f, Func::identity("m2")).unwrap();
+        fl.set_output(m2).unwrap();
+        let plan = compile(&fl, &OptFlags::none().with_fusion()).unwrap();
+        assert_eq!(plan.n_stages(), 1);
+        assert_eq!(plan.segments[0].stages[0].ops.len(), 3);
+    }
+
+    #[test]
+    fn dominator_detection() {
+        // Lookup on a side branch (not dominating) must not split.
+        let mut fl = Dataflow::new("side", Schema::new(vec![("key", DType::Str)]));
+        let a = fl.map(fl.input(), Func::identity("a")).unwrap();
+        let side = fl
+            .lookup(a, LookupKey::Column("key".into()), "obj")
+            .unwrap();
+        let side2 = fl.map(side, Func::identity("side2")).unwrap();
+        // join of a with side-lookup branch: lookup doesn't dominate.
+        let j = fl
+            .join(a, side2, None, crate::dataflow::operator::JoinHow::Inner)
+            .unwrap();
+        fl.set_output(j).unwrap();
+        let plan = compile(&fl, &OptFlags::none().with_locality()).unwrap();
+        assert_eq!(plan.segments.len(), 1, "side lookup must not split");
+    }
+}

@@ -1,0 +1,746 @@
+//! Operator semantics + the reference local executor.
+//!
+//! `apply_op` defines the meaning of every operator in Table 1 exactly
+//! once; both the reference executor here (the semantics oracle used by
+//! property tests) and the Cloudburst stage runner execute through it.
+//! With `ctx.timed == true` the synthetic/model stages additionally charge
+//! their modeled service time; the oracle runs with `timed == false` so
+//! results are comparable while costs differ.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::RowVec;
+use crate::simulation::clock;
+use crate::simulation::gpu::service_time_ms;
+
+use super::flow::Dataflow;
+use super::operator::{
+    AggFn, ExecCtx, Func, FuncBody, JoinHow, LookupKey, ModelBinding, OpKind, PredBody,
+    Predicate,
+};
+use super::table::{DType, GroupKey, Row, Schema, Table, Value};
+
+/// Execute a whole flow locally (no cluster, no costs): the oracle.
+pub fn execute(flow: &Dataflow, input: Table, ctx: &ExecCtx) -> Result<Table> {
+    flow.validate()?;
+    if input.schema() != flow.input_schema() {
+        bail!(
+            "input schema {} does not match flow input {}",
+            input.schema(),
+            flow.input_schema()
+        );
+    }
+    let mut tables: Vec<Option<Table>> = vec![None; flow.nodes().len()];
+    tables[0] = Some(input);
+    for i in 1..flow.nodes().len() {
+        let node = &flow.nodes()[i];
+        let inputs: Vec<Table> = node
+            .parents
+            .iter()
+            .map(|&p| {
+                tables[p]
+                    .clone()
+                    .with_context(|| format!("node {p} not computed"))
+            })
+            .collect::<Result<_>>()?;
+        tables[i] = Some(apply_op(ctx, &node.op, inputs)?);
+    }
+    let out = flow.output().context("no output")?;
+    Ok(tables[out.0].clone().unwrap())
+}
+
+/// Apply one operator to its input tables (the single source of operator
+/// semantics).
+pub fn apply_op(ctx: &ExecCtx, op: &OpKind, mut inputs: Vec<Table>) -> Result<Table> {
+    match op {
+        OpKind::Input => {
+            bail!("Input is not executable")
+        }
+        OpKind::Map(f) => apply_map(ctx, f, take1(&mut inputs)?),
+        OpKind::Filter(p) => apply_filter(ctx, p, take1(&mut inputs)?),
+        OpKind::Groupby { column } => apply_groupby(take1(&mut inputs)?, column),
+        OpKind::Agg { agg, column } => apply_agg(take1(&mut inputs)?, *agg, column),
+        OpKind::Lookup { key, as_col } => {
+            apply_lookup(ctx, take1(&mut inputs)?, key, as_col)
+        }
+        OpKind::Join { key, how } => {
+            if inputs.len() != 2 {
+                bail!("join expects 2 inputs, got {}", inputs.len());
+            }
+            let r = inputs.pop().unwrap();
+            let l = inputs.pop().unwrap();
+            apply_join(l, r, key.as_deref(), *how)
+        }
+        OpKind::Union => apply_union(inputs),
+        OpKind::Anyof => {
+            // Locally all inputs are available; pick the first
+            // deterministically.  The cluster runtime's wait-for-any takes
+            // whichever replica finishes first instead.
+            if inputs.is_empty() {
+                bail!("anyof with no inputs");
+            }
+            Ok(inputs.swap_remove(0))
+        }
+        OpKind::Fuse(ops) => {
+            let mut t = take1(&mut inputs)?;
+            for o in ops {
+                t = apply_op(ctx, o, vec![t])?;
+            }
+            Ok(t)
+        }
+    }
+}
+
+fn take1(inputs: &mut Vec<Table>) -> Result<Table> {
+    if inputs.len() != 1 {
+        bail!("operator expects 1 input, got {}", inputs.len());
+    }
+    Ok(inputs.pop().unwrap())
+}
+
+// ---------------------------------------------------------------------
+// map
+// ---------------------------------------------------------------------
+
+pub fn apply_map(ctx: &ExecCtx, f: &Func, table: Table) -> Result<Table> {
+    let started = Instant::now();
+    let n = table.len();
+    let out = match &f.body {
+        FuncBody::Identity => table.clone(),
+        FuncBody::Sleep(dist) => {
+            if ctx.timed {
+                let ms = {
+                    let mut rng = ctx.rng.lock().unwrap();
+                    dist.sample_ms(&mut rng)
+                };
+                clock::sleep_ms(ms);
+            }
+            table.clone()
+        }
+        FuncBody::Rust(body) => {
+            let out = body(ctx, &table)?;
+            // Runtime type check (paper §3.1): declared schema must hold.
+            let declared = super::flow::out_schema_of(f, table.schema())?;
+            if out.schema() != &declared {
+                bail!(
+                    "map {:?} returned schema {} but declared {}",
+                    f.name,
+                    out.schema(),
+                    declared
+                );
+            }
+            if out.len() != n {
+                bail!("map {:?} changed row count {} -> {}", f.name, n, out.len());
+            }
+            out
+        }
+        FuncBody::Model(binding) => run_model(ctx, f, binding, &table)?,
+    };
+    // Charge the modeled service time for profiled stages. Empty tables
+    // (e.g. the unrouted branch of a cascade/router) cost nothing — the
+    // model is never invoked for them.
+    if ctx.timed && n > 0 {
+        if let Some(sm) = &f.service_model {
+            let ms = {
+                let mut rng = ctx.rng.lock().unwrap();
+                service_time_ms(sm, ctx.device, n, &mut rng)
+            };
+            clock::pad_to_ms(ms, started);
+        }
+    }
+    let mut out = out;
+    out.set_grouping(table.grouping().map(str::to_string))?;
+    Ok(out)
+}
+
+/// Execute a model-backed map: stack input columns row-wise, run the PJRT
+/// artifact (the runtime picks/pads the batch variant), split outputs.
+fn run_model(ctx: &ExecCtx, f: &Func, b: &ModelBinding, table: &Table) -> Result<Table> {
+    let infer = ctx
+        .infer
+        .as_ref()
+        .with_context(|| format!("map {:?}: no inference service in context", f.name))?;
+    let out_schema = super::flow::out_schema_of(f, table.schema())?;
+    let mut out = Table::new(out_schema);
+    if table.is_empty() {
+        return Ok(out);
+    }
+    let in_idx: Vec<usize> = b
+        .input_cols
+        .iter()
+        .map(|c| table.schema().index_of(c))
+        .collect::<Result<_>>()?;
+    let rows: Vec<Vec<RowVec>> = table
+        .rows()
+        .iter()
+        .map(|r| {
+            in_idx
+                .iter()
+                .map(|&i| match &r.values[i] {
+                    Value::F32s(v) => Ok(RowVec::F32(v.clone())),
+                    Value::I32s(v) => Ok(RowVec::I32(v.clone())),
+                    other => bail!(
+                        "model {:?} input col must be f32s/i32s, got {}",
+                        b.model,
+                        other.dtype()
+                    ),
+                })
+                .collect::<Result<Vec<_>>>()
+        })
+        .collect::<Result<_>>()?;
+    let results = infer.run_rows(&b.model, &rows)?;
+    debug_assert_eq!(results.len(), table.len());
+    let pass_idx: Vec<usize> = b
+        .passthrough
+        .iter()
+        .map(|c| table.schema().index_of(c))
+        .collect::<Result<_>>()?;
+    for (row, outs) in table.rows().iter().zip(results) {
+        if outs.len() != b.output_cols.len() {
+            bail!(
+                "model {:?} returned {} outputs, bound {}",
+                b.model,
+                outs.len(),
+                b.output_cols.len()
+            );
+        }
+        let mut values: Vec<Value> =
+            pass_idx.iter().map(|&i| row.values[i].clone()).collect();
+        for (tensor, (cname, ctype)) in outs.into_iter().zip(&b.output_cols) {
+            values.push(tensor.into_value(*ctype).with_context(|| {
+                format!("model {:?} output column {cname:?}", b.model)
+            })?);
+        }
+        for d in &b.derives {
+            values.push(derive_value(out.schema(), &values, d)?);
+        }
+        out.push(row.id, values)?;
+    }
+    Ok(out)
+}
+
+/// Compute one derived column from values already assembled for the row.
+fn derive_value(
+    schema: &Schema,
+    values: &[Value],
+    d: &super::operator::Derive,
+) -> Result<Value> {
+    use super::operator::Derive;
+    let src_of = |name: &str| -> Result<&Arc<Vec<f32>>> {
+        let idx = schema.index_of(name)?;
+        values
+            .get(idx)
+            .with_context(|| format!("derive src {name:?} not yet computed"))?
+            .as_f32s()
+    };
+    Ok(match d {
+        Derive::MaxF64 { src, .. } => {
+            let v = src_of(src)?;
+            Value::F64(v.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64)
+        }
+        Derive::ArgMaxI64 { src, .. } => {
+            let v = src_of(src)?;
+            let mut best = 0usize;
+            for (i, x) in v.iter().enumerate() {
+                if *x > v[best] {
+                    best = i;
+                }
+            }
+            Value::I64(best as i64)
+        }
+        Derive::IndexF64 { src, index, .. } => {
+            let v = src_of(src)?;
+            let x = *v
+                .get(*index)
+                .with_context(|| format!("derive index {index} out of range"))?;
+            Value::F64(x as f64)
+        }
+    })
+}
+
+// ---------------------------------------------------------------------
+// filter / groupby / agg
+// ---------------------------------------------------------------------
+
+pub fn apply_filter(ctx: &ExecCtx, p: &Predicate, table: Table) -> Result<Table> {
+    let mut out = Table::new(table.schema().clone());
+    out.set_grouping(table.grouping().map(str::to_string))?;
+    for row in table.rows() {
+        let keep = match &p.body {
+            PredBody::Rust(f) => f(ctx, &table, row)?,
+            PredBody::Threshold { column, op, value } => {
+                let idx = table.schema().index_of(column)?;
+                op.eval(row.values[idx].as_f64()?, *value)
+            }
+        };
+        if keep {
+            out.push(row.id, row.values.clone())?;
+        }
+    }
+    Ok(out)
+}
+
+pub fn apply_groupby(table: Table, column: &str) -> Result<Table> {
+    if table.grouping().is_some() {
+        bail!("groupby over already-grouped table");
+    }
+    let mut out = table;
+    out.set_grouping(Some(column.to_string()))?;
+    Ok(out)
+}
+
+pub fn apply_agg(table: Table, agg: AggFn, column: &str) -> Result<Table> {
+    let (out_schema, _) = super::operator::agg_output(
+        agg,
+        column,
+        table.schema(),
+        table.grouping(),
+    )?;
+    let mut out = Table::new(out_schema);
+    match table.grouping() {
+        None => {
+            if table.is_empty() && agg != AggFn::Count {
+                return Ok(out); // empty in, empty out (except count=0)
+            }
+            let (id, values) = agg_rows(&table, table.rows(), agg, column, None)?;
+            out.push(id, values)?;
+        }
+        Some(gcol) => {
+            let gcol = gcol.to_string();
+            // Group rows preserving first-seen order for determinism.
+            let mut order: Vec<GroupKey> = Vec::new();
+            let mut groups: HashMap<GroupKey, Vec<&Row>> = HashMap::new();
+            for row in table.rows() {
+                let k = table.group_key_of(row, &gcol)?;
+                groups.entry(k.clone()).or_insert_with(|| {
+                    order.push(k.clone());
+                    Vec::new()
+                });
+                groups.get_mut(&k).unwrap().push(row);
+            }
+            for k in order {
+                let rows = &groups[&k];
+                let rows_owned: Vec<Row> = rows.iter().map(|r| (*r).clone()).collect();
+                let (id, values) =
+                    agg_rows(&table, &rows_owned, agg, column, Some(k.to_value()))?;
+                out.push(id, values)?;
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Aggregate a set of rows to one output row: (row id, values).
+fn agg_rows(
+    table: &Table,
+    rows: &[Row],
+    agg: AggFn,
+    column: &str,
+    group_val: Option<Value>,
+) -> Result<(u64, Vec<Value>)> {
+    let first_id = rows.first().map(|r| r.id).unwrap_or(0);
+    if agg == AggFn::ArgMax {
+        let idx = table.schema().index_of(column)?;
+        let best = rows
+            .iter()
+            .max_by(|a, b| {
+                let av = a.values[idx].as_f64().unwrap_or(f64::NEG_INFINITY);
+                let bv = b.values[idx].as_f64().unwrap_or(f64::NEG_INFINITY);
+                av.partial_cmp(&bv).unwrap_or(std::cmp::Ordering::Equal)
+            })
+            .context("argmax over empty group")?;
+        return Ok((best.id, best.values.clone()));
+    }
+    if agg == AggFn::Count {
+        let v = Value::I64(rows.len() as i64);
+        return Ok(match group_val {
+            Some(g) => (first_id, vec![g, v]),
+            None => (first_id, vec![v]),
+        });
+    }
+    let idx = table.schema().index_of(column)?;
+    let is_int = table.schema().cols()[idx].1 == DType::I64;
+    let nums: Vec<f64> = rows
+        .iter()
+        .map(|r| {
+            if is_int {
+                r.values[idx].as_i64().map(|v| v as f64)
+            } else {
+                r.values[idx].as_f64()
+            }
+        })
+        .collect::<Result<_>>()?;
+    let x = match agg {
+        AggFn::Sum => nums.iter().sum(),
+        AggFn::Min => nums.iter().cloned().fold(f64::INFINITY, f64::min),
+        AggFn::Max => nums.iter().cloned().fold(f64::NEG_INFINITY, f64::max),
+        AggFn::Avg => nums.iter().sum::<f64>() / nums.len().max(1) as f64,
+        AggFn::Count | AggFn::ArgMax => unreachable!(),
+    };
+    let v = if is_int && agg != AggFn::Avg {
+        Value::I64(x as i64)
+    } else {
+        Value::F64(x)
+    };
+    Ok(match group_val {
+        Some(g) => (first_id, vec![g, v]),
+        None => (first_id, vec![v]),
+    })
+}
+
+// ---------------------------------------------------------------------
+// lookup / join / union
+// ---------------------------------------------------------------------
+
+pub fn apply_lookup(
+    ctx: &ExecCtx,
+    table: Table,
+    key: &LookupKey,
+    as_col: &str,
+) -> Result<Table> {
+    let kvs = ctx
+        .kvs
+        .as_ref()
+        .context("lookup requires a KVS client in the execution context")?;
+    let mut cols = table.schema().cols().to_vec();
+    cols.push((as_col.to_string(), DType::Blob));
+    let mut out = Table::new(Schema::from_owned(cols));
+    out.set_grouping(table.grouping().map(str::to_string))?;
+    for row in table.rows() {
+        let k: String = match key {
+            LookupKey::Const(s) => s.clone(),
+            LookupKey::Column(c) => {
+                let idx = table.schema().index_of(c)?;
+                row.values[idx].as_str()?.to_string()
+            }
+        };
+        let payload = kvs
+            .get(&k)
+            .with_context(|| format!("lookup: key {k:?} not found"))?;
+        let mut values = row.values.clone();
+        values.push(Value::Blob(payload));
+        out.push(row.id, values)?;
+    }
+    Ok(out)
+}
+
+/// Type-respecting defaults for unmatched outer-join sides (no NULLs in
+/// the Value model; NaN/empty stand in, as documented in DESIGN.md).
+pub fn default_value(t: DType) -> Value {
+    match t {
+        DType::Str => Value::Str(String::new()),
+        DType::I64 => Value::I64(0),
+        DType::F64 => Value::F64(f64::NAN),
+        DType::Bool => Value::Bool(false),
+        DType::Blob => Value::blob(Vec::new()),
+        DType::F32s => Value::f32s(Vec::new()),
+        DType::I32s => Value::i32s(Vec::new()),
+    }
+}
+
+pub fn apply_join(
+    left: Table,
+    right: Table,
+    key: Option<&str>,
+    how: JoinHow,
+) -> Result<Table> {
+    if left.grouping().is_some() || right.grouping().is_some() {
+        bail!("join requires ungrouped inputs");
+    }
+    let schema = left.schema().join_with(right.schema());
+    let mut out = Table::new(schema);
+    // Hash the right side.
+    let mut rmap: HashMap<GroupKey, Vec<usize>> = HashMap::new();
+    for (i, row) in right.rows().iter().enumerate() {
+        let k = join_key(&right, row, key)?;
+        rmap.entry(k).or_default().push(i);
+    }
+    let mut right_matched = vec![false; right.len()];
+    for lrow in left.rows() {
+        let k = join_key(&left, lrow, key)?;
+        match rmap.get(&k) {
+            Some(matches) => {
+                for &ri in matches {
+                    right_matched[ri] = true;
+                    let mut values = lrow.values.clone();
+                    values.extend(right.rows()[ri].values.iter().cloned());
+                    out.push(lrow.id, values)?;
+                }
+            }
+            None => {
+                if matches!(how, JoinHow::Left | JoinHow::Outer) {
+                    let mut values = lrow.values.clone();
+                    values.extend(
+                        right.schema().cols().iter().map(|(_, t)| default_value(*t)),
+                    );
+                    out.push(lrow.id, values)?;
+                }
+            }
+        }
+    }
+    if how == JoinHow::Outer {
+        for (ri, rrow) in right.rows().iter().enumerate() {
+            if !right_matched[ri] {
+                let mut values: Vec<Value> = left
+                    .schema()
+                    .cols()
+                    .iter()
+                    .map(|(_, t)| default_value(*t))
+                    .collect();
+                values.extend(rrow.values.iter().cloned());
+                out.push(rrow.id, values)?;
+            }
+        }
+    }
+    Ok(out)
+}
+
+fn join_key(t: &Table, row: &Row, key: Option<&str>) -> Result<GroupKey> {
+    match key {
+        None => Ok(GroupKey::RowId(row.id)),
+        Some(k) => t.group_key_of(row, k),
+    }
+}
+
+pub fn apply_union(inputs: Vec<Table>) -> Result<Table> {
+    let mut it = inputs.into_iter();
+    let mut acc = it.next().context("union with no inputs")?;
+    for t in it {
+        if t.schema() != acc.schema() {
+            bail!("union schema mismatch: {} vs {}", acc.schema(), t.schema());
+        }
+        if t.grouping() != acc.grouping() {
+            bail!("union grouping mismatch");
+        }
+        for row in t.rows() {
+            acc.push(row.id, row.values.clone())?;
+        }
+    }
+    Ok(acc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataflow::operator::CmpOp;
+    use std::sync::Arc;
+
+    fn t2(rows: Vec<(&str, f64)>) -> Table {
+        let mut t = Table::new(Schema::new(vec![
+            ("name", DType::Str),
+            ("conf", DType::F64),
+        ]));
+        for (n, c) in rows {
+            t.push_fresh(vec![Value::Str(n.into()), Value::F64(c)]).unwrap();
+        }
+        t
+    }
+
+    #[test]
+    fn filter_threshold() {
+        let ctx = ExecCtx::local();
+        let t = t2(vec![("a", 0.9), ("b", 0.3), ("c", 0.7)]);
+        let p = Predicate::threshold("conf", CmpOp::Lt, 0.85);
+        let out = apply_filter(&ctx, &p, t).unwrap();
+        assert_eq!(out.len(), 2);
+        assert_eq!(out.value(0, "name").unwrap().as_str().unwrap(), "b");
+    }
+
+    #[test]
+    fn filter_rust_predicate() {
+        let ctx = ExecCtx::local();
+        let t = t2(vec![("keep", 0.1), ("drop", 0.2)]);
+        let p = Predicate::rust(
+            "name_keep",
+            Arc::new(|_, t: &Table, r: &Row| {
+                let i = t.schema().index_of("name")?;
+                Ok(r.values[i].as_str()? == "keep")
+            }),
+        );
+        assert_eq!(apply_filter(&ctx, &p, t).unwrap().len(), 1);
+    }
+
+    #[test]
+    fn agg_ungrouped() {
+        let t = t2(vec![("a", 1.0), ("b", 2.0), ("c", 3.0)]);
+        let sum = apply_agg(t.clone(), AggFn::Sum, "conf").unwrap();
+        assert_eq!(sum.len(), 1);
+        assert_eq!(sum.value(0, "sum").unwrap().as_f64().unwrap(), 6.0);
+        let avg = apply_agg(t.clone(), AggFn::Avg, "conf").unwrap();
+        assert_eq!(avg.value(0, "avg").unwrap().as_f64().unwrap(), 2.0);
+        let cnt = apply_agg(t.clone(), AggFn::Count, "conf").unwrap();
+        assert_eq!(cnt.value(0, "count").unwrap().as_i64().unwrap(), 3);
+        let mn = apply_agg(t.clone(), AggFn::Min, "conf").unwrap();
+        assert_eq!(mn.value(0, "min").unwrap().as_f64().unwrap(), 1.0);
+        let mx = apply_agg(t, AggFn::Max, "conf").unwrap();
+        assert_eq!(mx.value(0, "max").unwrap().as_f64().unwrap(), 3.0);
+    }
+
+    #[test]
+    fn agg_grouped_by_column() {
+        let t = t2(vec![("x", 1.0), ("y", 2.0), ("x", 3.0)]);
+        let g = apply_groupby(t, "name").unwrap();
+        let out = apply_agg(g, AggFn::Sum, "conf").unwrap();
+        assert_eq!(out.len(), 2);
+        assert!(out.grouping().is_none()); // agg ungroups
+        assert_eq!(out.value(0, "group").unwrap().as_str().unwrap(), "x");
+        assert_eq!(out.value(0, "sum").unwrap().as_f64().unwrap(), 4.0);
+        assert_eq!(out.value(1, "group").unwrap().as_str().unwrap(), "y");
+    }
+
+    #[test]
+    fn argmax_keeps_best_row_and_id() {
+        let t = t2(vec![("lo", 0.2), ("hi", 0.9), ("mid", 0.5)]);
+        let hi_id = t.rows()[1].id;
+        let out = apply_agg(t, AggFn::ArgMax, "conf").unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out.rows()[0].id, hi_id);
+        assert_eq!(out.value(0, "name").unwrap().as_str().unwrap(), "hi");
+    }
+
+    #[test]
+    fn ensemble_groupby_rowid_argmax() {
+        // Three "models" produce one row each per request row, same ids.
+        let mut u = Table::new(Schema::new(vec![
+            ("pred", DType::Str),
+            ("conf", DType::F64),
+        ]));
+        for (id, pred, conf) in
+            [(1, "cat", 0.6), (2, "dog", 0.4), (1, "lion", 0.8), (2, "wolf", 0.9)]
+        {
+            u.push(id, vec![Value::Str(pred.into()), Value::F64(conf)]).unwrap();
+        }
+        let g = apply_groupby(u, "__rowid").unwrap();
+        let out = apply_agg(g, AggFn::ArgMax, "conf").unwrap();
+        assert_eq!(out.len(), 2);
+        let preds: Vec<&str> = (0..2)
+            .map(|i| out.value(i, "pred").unwrap().as_str().unwrap())
+            .collect();
+        assert!(preds.contains(&"lion") && preds.contains(&"wolf"));
+    }
+
+    #[test]
+    fn join_on_rowid_left() {
+        let l = t2(vec![("a", 0.9), ("b", 0.3)]);
+        let mut r = Table::new(Schema::new(vec![("extra", DType::F64)]));
+        r.push(l.rows()[1].id, vec![Value::F64(7.0)]).unwrap();
+        let out = apply_join(l, r, None, JoinHow::Left).unwrap();
+        assert_eq!(out.len(), 2);
+        // row a unmatched -> NaN default
+        assert!(out.value(0, "extra").unwrap().as_f64().unwrap().is_nan());
+        assert_eq!(out.value(1, "extra").unwrap().as_f64().unwrap(), 7.0);
+    }
+
+    #[test]
+    fn join_inner_and_outer_on_key() {
+        let mk = |names: Vec<(&str, f64)>| t2(names);
+        let l = mk(vec![("a", 1.0), ("b", 2.0)]);
+        let r = mk(vec![("b", 20.0), ("c", 30.0)]);
+        let inner = apply_join(l.clone(), r.clone(), Some("name"), JoinHow::Inner).unwrap();
+        assert_eq!(inner.len(), 1);
+        assert_eq!(inner.value(0, "name").unwrap().as_str().unwrap(), "b");
+        assert_eq!(inner.value(0, "conf_r").unwrap().as_f64().unwrap(), 20.0);
+        let outer = apply_join(l, r, Some("name"), JoinHow::Outer).unwrap();
+        assert_eq!(outer.len(), 3);
+    }
+
+    #[test]
+    fn join_duplicate_keys_cartesian() {
+        let l = t2(vec![("k", 1.0), ("k", 2.0)]);
+        let r = t2(vec![("k", 10.0), ("k", 20.0)]);
+        let out = apply_join(l, r, Some("name"), JoinHow::Inner).unwrap();
+        assert_eq!(out.len(), 4);
+    }
+
+    #[test]
+    fn union_concat_and_mismatch() {
+        let a = t2(vec![("a", 1.0)]);
+        let b = t2(vec![("b", 2.0)]);
+        let u = apply_union(vec![a.clone(), b]).unwrap();
+        assert_eq!(u.len(), 2);
+        let mut other = Table::new(Schema::new(vec![("z", DType::I64)]));
+        other.push_fresh(vec![Value::I64(0)]).unwrap();
+        assert!(apply_union(vec![a, other]).is_err());
+    }
+
+    #[test]
+    fn map_identity_and_rowcount_check() {
+        let ctx = ExecCtx::local();
+        let t = t2(vec![("a", 1.0)]);
+        let out = apply_map(&ctx, &Func::identity("id"), t.clone()).unwrap();
+        assert_eq!(out, t);
+        // A Rust body that drops rows must be rejected.
+        let bad = Func::rust(
+            "bad",
+            None,
+            Arc::new(|_, t: &Table| Ok(Table::new(t.schema().clone()))),
+        );
+        assert!(apply_map(&ctx, &bad, t).is_err());
+    }
+
+    #[test]
+    fn map_schema_violation_detected() {
+        let ctx = ExecCtx::local();
+        let t = t2(vec![("a", 1.0)]);
+        // Declares out schema (x: i64) but returns the input unchanged.
+        let lying = Func::rust(
+            "liar",
+            Some(vec![("x", DType::I64)]),
+            Arc::new(|_, t: &Table| Ok(t.clone())),
+        );
+        let err = apply_map(&ctx, &lying, t).unwrap_err().to_string();
+        assert!(err.contains("declared"), "{err}");
+    }
+
+    #[test]
+    fn lookup_requires_kvs() {
+        let ctx = ExecCtx::local();
+        let t = t2(vec![("a", 1.0)]);
+        assert!(apply_lookup(&ctx, t, &LookupKey::Const("k".into()), "v").is_err());
+    }
+
+    #[test]
+    fn fuse_chains_ops() {
+        let ctx = ExecCtx::local();
+        let t = t2(vec![("a", 0.9), ("b", 0.2), ("c", 0.8)]);
+        let fused = OpKind::Fuse(vec![
+            OpKind::Filter(Predicate::threshold("conf", CmpOp::Gt, 0.5)),
+            OpKind::Agg { agg: AggFn::Count, column: "conf".into() },
+        ]);
+        let out = apply_op(&ctx, &fused, vec![t]).unwrap();
+        assert_eq!(out.value(0, "count").unwrap().as_i64().unwrap(), 2);
+    }
+
+    #[test]
+    fn anyof_local_picks_first() {
+        let ctx = ExecCtx::local();
+        let a = t2(vec![("first", 1.0)]);
+        let b = t2(vec![("second", 2.0)]);
+        let out = apply_op(&ctx, &OpKind::Anyof, vec![a, b]).unwrap();
+        assert_eq!(out.value(0, "name").unwrap().as_str().unwrap(), "first");
+    }
+
+    #[test]
+    fn empty_tables_flow_through() {
+        let ctx = ExecCtx::local();
+        let empty = Table::new(Schema::new(vec![
+            ("name", DType::Str),
+            ("conf", DType::F64),
+        ]));
+        let f = apply_filter(
+            &ctx,
+            &Predicate::threshold("conf", CmpOp::Lt, 0.5),
+            empty.clone(),
+        )
+        .unwrap();
+        assert!(f.is_empty());
+        let a = apply_agg(empty.clone(), AggFn::Sum, "conf").unwrap();
+        assert!(a.is_empty());
+        let c = apply_agg(empty, AggFn::Count, "conf").unwrap();
+        assert_eq!(c.value(0, "count").unwrap().as_i64().unwrap(), 0);
+    }
+}

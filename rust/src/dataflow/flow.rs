@@ -1,0 +1,529 @@
+//! The `Dataflow` builder: the user-facing API (paper §3.1).
+//!
+//! A `Dataflow` is a typed DAG specification with a distinguished input
+//! and output.  Builder methods mirror Table 1 one-to-one and typecheck
+//! eagerly: schema/grouping mismatches fail at construction, mirroring the
+//! paper's typechecking ("Cloudflow raises an error" rather than failing
+//! silently).
+
+use anyhow::{bail, Context, Result};
+
+use super::operator::{
+    agg_output, AggFn, Arity, Func, FuncBody, JoinHow, LookupKey, OpKind, Predicate,
+};
+use super::table::{DType, Schema};
+
+/// Reference to a node in a `Dataflow` (the value builder methods return).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct NodeRef(pub(crate) usize);
+
+#[derive(Debug, Clone)]
+pub struct FlowNode {
+    pub op: OpKind,
+    pub parents: Vec<usize>,
+    /// Inferred output schema of this node.
+    pub schema: Schema,
+    /// Inferred grouping column (None = ungrouped).
+    pub grouping: Option<String>,
+}
+
+/// A dataflow specification: a DAG of operators over Tables.
+#[derive(Debug, Clone)]
+pub struct Dataflow {
+    pub name: String,
+    nodes: Vec<FlowNode>,
+    output: Option<usize>,
+}
+
+impl Dataflow {
+    /// New flow whose input table has the given schema (paper Fig 2 line 1).
+    pub fn new(name: &str, input_schema: Schema) -> Self {
+        Dataflow {
+            name: name.to_string(),
+            nodes: vec![FlowNode {
+                op: OpKind::Input,
+                parents: vec![],
+                schema: input_schema,
+                grouping: None,
+            }],
+            output: None,
+        }
+    }
+
+    pub fn input(&self) -> NodeRef {
+        NodeRef(0)
+    }
+
+    pub fn input_schema(&self) -> &Schema {
+        &self.nodes[0].schema
+    }
+
+    pub fn nodes(&self) -> &[FlowNode] {
+        &self.nodes
+    }
+
+    pub fn node(&self, r: NodeRef) -> &FlowNode {
+        &self.nodes[r.0]
+    }
+
+    pub fn output(&self) -> Option<NodeRef> {
+        self.output.map(NodeRef)
+    }
+
+    /// Children indices of each node (computed).
+    pub fn children(&self) -> Vec<Vec<usize>> {
+        let mut ch = vec![Vec::new(); self.nodes.len()];
+        for (i, n) in self.nodes.iter().enumerate() {
+            for &p in &n.parents {
+                ch[p].push(i);
+            }
+        }
+        ch
+    }
+
+    fn push(&mut self, node: FlowNode) -> NodeRef {
+        self.nodes.push(node);
+        NodeRef(self.nodes.len() - 1)
+    }
+
+    fn check_parent(&self, r: NodeRef) -> Result<&FlowNode> {
+        self.nodes
+            .get(r.0)
+            .with_context(|| format!("dangling node ref {r:?}"))
+    }
+
+    /// Apply a function to each row (Table 1: map).
+    pub fn map(&mut self, parent: NodeRef, func: Func) -> Result<NodeRef> {
+        let p = self.check_parent(parent)?;
+        if let Some(expect) = &func.expect_input {
+            let got: Vec<DType> = p.schema.cols().iter().map(|(_, t)| *t).collect();
+            if &got != expect {
+                bail!(
+                    "map {:?}: input type mismatch: upstream {} vs declared {:?}",
+                    func.name,
+                    p.schema,
+                    expect
+                );
+            }
+        }
+        let schema = out_schema_of(&func, &p.schema)?;
+        let grouping = p.grouping.clone();
+        Ok(self.push(FlowNode {
+            op: OpKind::Map(func),
+            parents: vec![parent.0],
+            schema,
+            grouping,
+        }))
+    }
+
+    /// Keep rows satisfying a predicate (Table 1: filter).
+    pub fn filter(&mut self, parent: NodeRef, pred: Predicate) -> Result<NodeRef> {
+        let p = self.check_parent(parent)?;
+        if let super::operator::PredBody::Threshold { column, .. } = &pred.body {
+            let t = p.schema.dtype_of(column)?;
+            if t != DType::F64 {
+                bail!("filter threshold column {column:?} must be f64, got {t}");
+            }
+        }
+        let schema = p.schema.clone();
+        let grouping = p.grouping.clone();
+        Ok(self.push(FlowNode {
+            op: OpKind::Filter(pred),
+            parents: vec![parent.0],
+            schema,
+            grouping,
+        }))
+    }
+
+    /// Group an ungrouped table by a column (Table 1: groupby). The
+    /// pseudo-column `"__rowid"` groups by the automatic row ID (Fig 1).
+    pub fn groupby(&mut self, parent: NodeRef, column: &str) -> Result<NodeRef> {
+        let p = self.check_parent(parent)?;
+        if p.grouping.is_some() {
+            bail!("groupby requires an ungrouped table");
+        }
+        if column != "__rowid" {
+            let t = p.schema.dtype_of(column)?;
+            if matches!(t, DType::Blob | DType::F32s | DType::I32s) {
+                bail!("cannot group by vector column {column:?}");
+            }
+        }
+        let schema = p.schema.clone();
+        Ok(self.push(FlowNode {
+            op: OpKind::Groupby { column: column.to_string() },
+            parents: vec![parent.0],
+            schema,
+            grouping: Some(column.to_string()),
+        }))
+    }
+
+    /// Aggregate a column (Table 1: agg).
+    pub fn agg(&mut self, parent: NodeRef, agg: AggFn, column: &str) -> Result<NodeRef> {
+        let p = self.check_parent(parent)?;
+        let (schema, grouping) =
+            agg_output(agg, column, &p.schema, p.grouping.as_deref())?;
+        Ok(self.push(FlowNode {
+            op: OpKind::Agg { agg, column: column.to_string() },
+            parents: vec![parent.0],
+            schema,
+            grouping,
+        }))
+    }
+
+    /// Retrieve an object from the KVS per row (Table 1: lookup).
+    pub fn lookup(&mut self, parent: NodeRef, key: LookupKey, as_col: &str) -> Result<NodeRef> {
+        let p = self.check_parent(parent)?;
+        if let LookupKey::Column(c) = &key {
+            let t = p.schema.dtype_of(c)?;
+            if t != DType::Str {
+                bail!("lookup column {c:?} must be str, got {t}");
+            }
+        }
+        if p.schema.has(as_col) {
+            bail!("lookup output column {as_col:?} already exists");
+        }
+        let mut cols = p.schema.cols().to_vec();
+        cols.push((as_col.to_string(), DType::Blob));
+        let grouping = p.grouping.clone();
+        Ok(self.push(FlowNode {
+            op: OpKind::Lookup { key, as_col: as_col.to_string() },
+            parents: vec![parent.0],
+            schema: Schema::from_owned(cols),
+            grouping,
+        }))
+    }
+
+    /// Join two ungrouped tables (Table 1: join); `key=None` joins on the
+    /// automatic row ID.
+    pub fn join(
+        &mut self,
+        left: NodeRef,
+        right: NodeRef,
+        key: Option<&str>,
+        how: JoinHow,
+    ) -> Result<NodeRef> {
+        let l = self.check_parent(left)?.clone();
+        let r = self.check_parent(right)?.clone();
+        if l.grouping.is_some() || r.grouping.is_some() {
+            bail!("join requires ungrouped inputs");
+        }
+        if let Some(k) = key {
+            let lt = l.schema.dtype_of(k)?;
+            let rt = r.schema.dtype_of(k)?;
+            if lt != rt {
+                bail!("join key {k:?} type mismatch: {lt} vs {rt}");
+            }
+            if matches!(lt, DType::Blob | DType::F32s | DType::I32s) {
+                bail!("cannot join on vector column {k:?}");
+            }
+        }
+        let schema = l.schema.join_with(&r.schema);
+        Ok(self.push(FlowNode {
+            op: OpKind::Join { key: key.map(str::to_string), how },
+            parents: vec![left.0, right.0],
+            schema,
+            grouping: None,
+        }))
+    }
+
+    /// Union of tables with matching schemas (Table 1: union).
+    pub fn union(&mut self, parts: &[NodeRef]) -> Result<NodeRef> {
+        self.nary(parts, false)
+    }
+
+    /// Runtime picks any one of the inputs (Table 1: anyof) — the hook
+    /// competitive execution uses (§4).
+    pub fn anyof(&mut self, parts: &[NodeRef]) -> Result<NodeRef> {
+        self.nary(parts, true)
+    }
+
+    fn nary(&mut self, parts: &[NodeRef], any: bool) -> Result<NodeRef> {
+        if parts.len() < 2 {
+            bail!("union/anyof needs at least 2 inputs");
+        }
+        let first = self.check_parent(parts[0])?.clone();
+        for p in &parts[1..] {
+            let n = self.check_parent(*p)?;
+            if n.schema != first.schema {
+                bail!(
+                    "union/anyof schema mismatch: {} vs {}",
+                    first.schema,
+                    n.schema
+                );
+            }
+            if n.grouping != first.grouping {
+                bail!("union/anyof grouping mismatch");
+            }
+        }
+        let op = if any { OpKind::Anyof } else { OpKind::Union };
+        Ok(self.push(FlowNode {
+            op,
+            parents: parts.iter().map(|r| r.0).collect(),
+            schema: first.schema.clone(),
+            grouping: first.grouping.clone(),
+        }))
+    }
+
+    /// Mark the output node (paper: `flow.output = ...`).
+    pub fn set_output(&mut self, r: NodeRef) -> Result<()> {
+        self.check_parent(r)?;
+        self.output = Some(r.0);
+        Ok(())
+    }
+
+    /// Append another flow's DAG after node `at` (paper §3.3 `extend`).
+    /// Returns the appended flow's output node in `self`.
+    pub fn extend(&mut self, at: NodeRef, other: &Dataflow) -> Result<NodeRef> {
+        let tail = self.check_parent(at)?;
+        if tail.schema != *other.input_schema() {
+            bail!(
+                "extend: schema mismatch: {} vs expected {}",
+                tail.schema,
+                other.input_schema()
+            );
+        }
+        let out = other
+            .output
+            .context("extend: appended flow has no output")?;
+        let base = self.nodes.len();
+        // other's node 0 (Input) maps to `at`; others shift by base-1.
+        let map_idx = |i: usize| if i == 0 { at.0 } else { base + i - 1 };
+        for (i, n) in other.nodes.iter().enumerate().skip(1) {
+            let mut node = n.clone();
+            node.parents = node.parents.iter().map(|&p| map_idx(p)).collect();
+            debug_assert_eq!(map_idx(i), self.nodes.len());
+            self.nodes.push(node);
+        }
+        Ok(NodeRef(map_idx(out)))
+    }
+
+    /// Validate the flow is executable: output set and reachable, arities
+    /// consistent (construction enforces most of this; `deploy` re-checks).
+    pub fn validate(&self) -> Result<()> {
+        let out = self.output.context("flow has no output assigned")?;
+        // Arity check.
+        for (i, n) in self.nodes.iter().enumerate() {
+            let ok = match n.op.arity() {
+                Arity::Zero => n.parents.is_empty(),
+                Arity::One => n.parents.len() == 1,
+                Arity::Two => n.parents.len() == 2,
+                Arity::Many => n.parents.len() >= 2,
+            };
+            if !ok {
+                bail!("node {i} ({}) has wrong arity", n.op.label());
+            }
+            for &p in &n.parents {
+                if p >= i {
+                    bail!("node {i} has non-topological parent {p}");
+                }
+            }
+        }
+        // Output must be reachable from the input.
+        let mut reach = vec![false; self.nodes.len()];
+        reach[0] = true;
+        for i in 1..self.nodes.len() {
+            if self.nodes[i].parents.iter().any(|&p| reach[p]) {
+                reach[i] = true;
+            }
+        }
+        if !reach[out] {
+            bail!("output is not reachable from the input");
+        }
+        Ok(())
+    }
+}
+
+/// Output schema of a map function over a given input schema.
+pub fn out_schema_of(func: &Func, input: &Schema) -> Result<Schema> {
+    match &func.body {
+        FuncBody::Model(binding) => {
+            // Passthrough columns keep their upstream types; model outputs
+            // take their declared types; derives append their own.
+            let mut cols = Vec::new();
+            for c in &binding.passthrough {
+                let t = input.dtype_of(c)?;
+                cols.push((c.clone(), t));
+            }
+            for c in &binding.input_cols {
+                input
+                    .index_of(c)
+                    .with_context(|| format!("model {:?} input", binding.model))?;
+            }
+            cols.extend(binding.output_cols.iter().cloned());
+            for d in &binding.derives {
+                let (name, t) = d.out_col();
+                cols.push((name.to_string(), t));
+            }
+            Ok(Schema::from_owned(cols))
+        }
+        FuncBody::Identity | FuncBody::Sleep(_) => Ok(input.clone()),
+        FuncBody::Rust(_) => Ok(match &func.out_schema {
+            Some(cols) => Schema::from_owned(cols.clone()),
+            None => input.clone(),
+        }),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataflow::operator::{CmpOp, ModelBinding, SleepDist};
+
+    fn img_schema() -> Schema {
+        Schema::new(vec![("url", DType::Str), ("img", DType::F32s)])
+    }
+
+    #[test]
+    fn linear_chain_builds() {
+        let mut fl = Dataflow::new("t", img_schema());
+        let a = fl.map(fl.input(), Func::identity("a")).unwrap();
+        let b = fl.map(a, Func::sleep("b", SleepDist::ConstMs(1.0))).unwrap();
+        fl.set_output(b).unwrap();
+        fl.validate().unwrap();
+        assert_eq!(fl.nodes().len(), 3);
+        assert_eq!(fl.node(b).schema, img_schema());
+    }
+
+    #[test]
+    fn ensemble_shape_fig1() {
+        // Fig 1: preproc -> 3 models in parallel -> union -> groupby(rowid)
+        // -> agg(argmax conf)
+        let mut fl = Dataflow::new("ensemble", img_schema());
+        let img = fl.map(fl.input(), Func::identity("preproc")).unwrap();
+        let mk = |m: &str| {
+            Func::model(
+                ModelBinding::new(m, &["img"], &[("probs", DType::F32s)]).with_derive(
+                    crate::dataflow::operator::Derive::MaxF64 {
+                        src: "probs".into(),
+                        as_col: "conf".into(),
+                    },
+                ),
+            )
+        };
+        let p1 = fl.map(img, mk("resnet")).unwrap();
+        let p2 = fl.map(img, mk("vgg")).unwrap();
+        let p3 = fl.map(img, mk("inception")).unwrap();
+        let u = fl.union(&[p1, p2, p3]).unwrap();
+        let g = fl.groupby(u, "__rowid").unwrap();
+        let out = fl.agg(g, AggFn::ArgMax, "conf").unwrap();
+        fl.set_output(out).unwrap();
+        fl.validate().unwrap();
+        // argmax output keeps the model-output schema
+        assert!(fl.node(out).schema.has("conf"));
+        assert!(fl.node(out).grouping.is_none());
+    }
+
+    #[test]
+    fn cascade_shape_fig3() {
+        let mut fl = Dataflow::new("cascade", img_schema());
+        let simple = fl
+            .map(
+                fl.input(),
+                Func::rust(
+                    "simple",
+                    Some(vec![("pred", DType::Str), ("conf", DType::F64)]),
+                    std::sync::Arc::new(|_, t| Ok(t.clone())),
+                ),
+            )
+            .unwrap();
+        let low = fl
+            .filter(simple, Predicate::threshold("conf", CmpOp::Lt, 0.85))
+            .unwrap();
+        let complexm = fl.map(low, Func::identity("complex")).unwrap();
+        let j = fl.join(simple, complexm, None, JoinHow::Left).unwrap();
+        fl.set_output(j).unwrap();
+        fl.validate().unwrap();
+        let names: Vec<&str> =
+            fl.node(j).schema.cols().iter().map(|(n, _)| n.as_str()).collect();
+        assert_eq!(names, vec!["pred", "conf", "pred_r", "conf_r"]);
+    }
+
+    #[test]
+    fn typecheck_rejects_bad_flows() {
+        let mut fl = Dataflow::new("t", img_schema());
+        // threshold on non-f64
+        assert!(fl
+            .filter(fl.input(), Predicate::threshold("url", CmpOp::Lt, 1.0))
+            .is_err());
+        // groupby vector column
+        assert!(fl.groupby(fl.input(), "img").is_err());
+        // unknown column
+        assert!(fl.groupby(fl.input(), "nope").is_err());
+        // grouped join
+        let g = fl.groupby(fl.input(), "url").unwrap();
+        assert!(fl.join(g, fl.input(), None, JoinHow::Inner).is_err());
+        // union schema mismatch
+        let m = fl
+            .map(
+                fl.input(),
+                Func::rust(
+                    "reshape",
+                    Some(vec![("x", DType::I64)]),
+                    std::sync::Arc::new(|_, t| Ok(t.clone())),
+                ),
+            )
+            .unwrap();
+        assert!(fl.union(&[fl.input(), m]).is_err());
+        assert!(fl.union(&[fl.input()]).is_err());
+        // double groupby
+        let g2 = fl.groupby(fl.input(), "url").unwrap();
+        assert!(fl.groupby(g2, "url").is_err());
+    }
+
+    #[test]
+    fn map_input_annotation_checked() {
+        let mut fl = Dataflow::new("t", img_schema());
+        let ok = Func::identity("ok").with_expect_input(vec![DType::Str, DType::F32s]);
+        fl.map(fl.input(), ok).unwrap();
+        let bad = Func::identity("bad").with_expect_input(vec![DType::F64]);
+        assert!(fl.map(fl.input(), bad).is_err());
+    }
+
+    #[test]
+    fn output_required_for_validate() {
+        let fl = Dataflow::new("t", img_schema());
+        assert!(fl.validate().is_err());
+    }
+
+    #[test]
+    fn extend_appends_and_remaps() {
+        let mut pre = Dataflow::new("pre", img_schema());
+        let a = pre.map(pre.input(), Func::identity("shared_preproc")).unwrap();
+        pre.set_output(a).unwrap();
+
+        let mut cls = Dataflow::new("cls", img_schema());
+        let b = cls.map(cls.input(), Func::identity("classify")).unwrap();
+        cls.set_output(b).unwrap();
+
+        let joined = pre.extend(a, &cls).unwrap();
+        pre.set_output(joined).unwrap();
+        pre.validate().unwrap();
+        assert_eq!(pre.nodes().len(), 3);
+        assert_eq!(pre.node(joined).op.label(), "map:classify");
+    }
+
+    #[test]
+    fn extend_schema_mismatch_rejected() {
+        let mut pre = Dataflow::new("pre", img_schema());
+        let a = pre.input();
+        let other = Dataflow::new("o", Schema::new(vec![("z", DType::I64)]));
+        assert!(pre.extend(a, &other).is_err());
+    }
+
+    #[test]
+    fn lookup_typecheck() {
+        let mut fl = Dataflow::new("t", img_schema());
+        let l = fl
+            .lookup(fl.input(), LookupKey::Column("url".into()), "payload")
+            .unwrap();
+        assert!(fl.node(l).schema.has("payload"));
+        // non-str key column
+        assert!(fl
+            .lookup(fl.input(), LookupKey::Column("img".into()), "x")
+            .is_err());
+        // duplicate output column
+        assert!(fl
+            .lookup(fl.input(), LookupKey::Const("k".into()), "img")
+            .is_err());
+    }
+}

@@ -1,0 +1,18 @@
+//! The Cloudflow dataflow layer (the paper's §3): the `Table` data model,
+//! the operator set of Table 1, the `Dataflow` builder API with
+//! typechecking, a reference local executor (the semantics oracle), and
+//! the compiler that rewrites and lowers flows onto Cloudburst DAGs (§4).
+
+pub mod compiler;
+pub mod exec_local;
+pub mod flow;
+pub mod operator;
+pub mod table;
+
+pub use compiler::{compile, OptFlags, Plan};
+pub use flow::{Dataflow, NodeRef};
+pub use operator::{
+    AggFn, CmpOp, ExecCtx, Func, FuncBody, JoinHow, LookupKey, ModelBinding, OpKind,
+    PredBody, Predicate, SleepDist,
+};
+pub use table::{DType, Row, Schema, Table, Value};

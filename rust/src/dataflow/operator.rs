@@ -1,0 +1,560 @@
+//! The Cloudflow operator set (paper Table 1) and the function types that
+//! `map`/`filter` wrap.
+//!
+//! Functions are **black boxes** to the optimizer — exactly the paper's
+//! point: a `Func` may be an arbitrary Rust closure or a compiled model
+//! artifact executed via PJRT; Cloudflow only sees its declared schema,
+//! resource class and batch-awareness, which is all the §4 optimizations
+//! need.
+
+use std::fmt;
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::anna::KvsClient;
+use crate::runtime::InferClient;
+use crate::simulation::gpu::Device;
+use crate::util::rng::Rng;
+
+use super::table::{DType, Row, Schema, Table};
+
+/// Execution context handed to operator bodies by whichever engine runs
+/// them (the local reference executor or a Cloudburst executor replica).
+pub struct ExecCtx {
+    /// Node-bound KVS client (lookups). Absent in pure-local tests.
+    pub kvs: Option<KvsClient>,
+    /// Handle to the PJRT inference service (model stages).
+    pub infer: Option<InferClient>,
+    /// Deterministic randomness (sleep distributions, tie-breaking).
+    pub rng: std::sync::Mutex<Rng>,
+    /// Device class of the executing replica (service-time model input).
+    pub device: Device,
+    /// Whether modeled time should actually be slept (cluster execution)
+    /// or skipped (reference semantics oracle).
+    pub timed: bool,
+}
+
+impl ExecCtx {
+    /// Context for the reference executor: no costs, no cluster services.
+    pub fn local() -> Self {
+        ExecCtx {
+            kvs: None,
+            infer: None,
+            rng: std::sync::Mutex::new(Rng::new(0x10CA1)),
+            device: Device::Cpu,
+            timed: false,
+        }
+    }
+
+    /// Local context that can still run model stages through PJRT.
+    pub fn local_with_infer(infer: InferClient) -> Self {
+        ExecCtx { infer: Some(infer), ..ExecCtx::local() }
+    }
+}
+
+/// Whole-table user function (1:1 over rows; the executor checks row
+/// counts and ID preservation).
+pub type TableFn = Arc<dyn Fn(&ExecCtx, &Table) -> Result<Table> + Send + Sync>;
+
+/// Row predicate for `filter`.
+pub type RowPred = Arc<dyn Fn(&ExecCtx, &Table, &Row) -> Result<bool> + Send + Sync>;
+
+/// Synthetic service-time distributions for the microbenchmarks
+/// (Fig 5 uses Gamma(k=3, θ∈{1,2,4})).
+#[derive(Debug, Clone, PartialEq)]
+pub enum SleepDist {
+    ConstMs(f64),
+    /// base + Gamma(k, theta) * unit_ms
+    GammaMs { k: f64, theta: f64, unit_ms: f64, base_ms: f64 },
+}
+
+impl SleepDist {
+    pub fn sample_ms(&self, rng: &mut Rng) -> f64 {
+        match self {
+            SleepDist::ConstMs(ms) => *ms,
+            SleepDist::GammaMs { k, theta, unit_ms, base_ms } => {
+                base_ms + rng.gamma(*k, *theta) * unit_ms
+            }
+        }
+    }
+}
+
+/// Cheap post-processing derived from a model output column, computed in
+/// the same stage (the way a PyTorch model fn would return `(pred, conf)`
+/// rather than raw logits).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Derive {
+    /// max(src) of an F32s column → F64 column (confidences).
+    MaxF64 { src: String, as_col: String },
+    /// argmax(src) of an F32s column → I64 column (predicted class).
+    ArgMaxI64 { src: String, as_col: String },
+    /// src[index] of an F32s column → F64 column (per-class probability).
+    IndexF64 { src: String, index: usize, as_col: String },
+}
+
+impl Derive {
+    pub fn out_col(&self) -> (&str, DType) {
+        match self {
+            Derive::MaxF64 { as_col, .. } => (as_col, DType::F64),
+            Derive::ArgMaxI64 { as_col, .. } => (as_col, DType::I64),
+            Derive::IndexF64 { as_col, .. } => (as_col, DType::F64),
+        }
+    }
+}
+
+/// Binding of a zoo model into a dataflow stage: which columns feed the
+/// artifact's tensor inputs and what the outputs are called.
+#[derive(Debug, Clone)]
+pub struct ModelBinding {
+    /// Zoo model name (manifest key), e.g. "resnet".
+    pub model: String,
+    /// Input columns, in artifact argument order (F32s/I32s columns).
+    pub input_cols: Vec<String>,
+    /// Output columns appended, in artifact result order.
+    pub output_cols: Vec<(String, DType)>,
+    /// Input columns to carry through to the output table (defaults to
+    /// none to minimise downstream data movement).
+    pub passthrough: Vec<String>,
+    /// Post-processed columns computed from outputs in the same stage.
+    pub derives: Vec<Derive>,
+}
+
+impl ModelBinding {
+    pub fn new(model: &str, input_cols: &[&str], output_cols: &[(&str, DType)]) -> Self {
+        ModelBinding {
+            model: model.to_string(),
+            input_cols: input_cols.iter().map(|s| s.to_string()).collect(),
+            output_cols: output_cols
+                .iter()
+                .map(|(n, t)| (n.to_string(), *t))
+                .collect(),
+            passthrough: Vec::new(),
+            derives: Vec::new(),
+        }
+    }
+
+    pub fn with_passthrough(mut self, cols: &[&str]) -> Self {
+        self.passthrough = cols.iter().map(|s| s.to_string()).collect();
+        self
+    }
+
+    pub fn with_derive(mut self, d: Derive) -> Self {
+        self.derives.push(d);
+        self
+    }
+}
+
+/// The body of a map function.
+#[derive(Clone)]
+pub enum FuncBody {
+    /// Arbitrary Rust closure (black box).
+    Rust(TableFn),
+    /// Compiled model artifact executed via the PJRT runtime.
+    Model(ModelBinding),
+    /// Synthetic sleep (microbenchmarks).
+    Sleep(SleepDist),
+    /// Pass-through (data-movement benchmarks).
+    Identity,
+}
+
+impl fmt::Debug for FuncBody {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            FuncBody::Rust(_) => write!(f, "Rust(<fn>)"),
+            FuncBody::Model(m) => write!(f, "Model({})", m.model),
+            FuncBody::Sleep(d) => write!(f, "Sleep({d:?})"),
+            FuncBody::Identity => write!(f, "Identity"),
+        }
+    }
+}
+
+/// A map function: black-box body plus the metadata Cloudflow's compiler
+/// and scheduler use (declared schemas, resource class, batch-awareness —
+/// the paper's API "hints").
+#[derive(Debug, Clone)]
+pub struct Func {
+    pub name: String,
+    /// Expected input column types (typechecked against upstream when
+    /// present — the paper's type annotations).
+    pub expect_input: Option<Vec<DType>>,
+    /// Declared output schema; `None` means same-as-input.
+    pub out_schema: Option<Vec<(String, DType)>>,
+    pub body: FuncBody,
+    /// Resource class this function should be placed on (§4 placement).
+    pub device: Device,
+    /// Whether the body handles whole batches in one invocation (§4
+    /// batching flag).
+    pub batch_aware: bool,
+    /// Service-time profile key (defaults to the model name for Model
+    /// bodies; None means no modeled padding).
+    pub service_model: Option<String>,
+}
+
+impl Func {
+    pub fn rust(name: &str, out: Option<Vec<(&str, DType)>>, f: TableFn) -> Func {
+        Func {
+            name: name.to_string(),
+            expect_input: None,
+            out_schema: out.map(|v| {
+                v.into_iter().map(|(n, t)| (n.to_string(), t)).collect()
+            }),
+            body: FuncBody::Rust(f),
+            device: Device::Cpu,
+            batch_aware: false,
+            service_model: None,
+        }
+    }
+
+    pub fn identity(name: &str) -> Func {
+        Func {
+            name: name.to_string(),
+            expect_input: None,
+            out_schema: None,
+            body: FuncBody::Identity,
+            device: Device::Cpu,
+            batch_aware: false,
+            service_model: None,
+        }
+    }
+
+    pub fn sleep(name: &str, dist: SleepDist) -> Func {
+        Func {
+            name: name.to_string(),
+            expect_input: None,
+            out_schema: None,
+            body: FuncBody::Sleep(dist),
+            device: Device::Cpu,
+            batch_aware: false,
+            service_model: None,
+        }
+    }
+
+    /// Model-backed function with the registry's device/batch defaults.
+    pub fn model(binding: ModelBinding) -> Func {
+        let info = crate::models::info(&binding.model);
+        Func {
+            name: binding.model.clone(),
+            expect_input: None,
+            out_schema: Some(
+                binding
+                    .passthrough
+                    .iter()
+                    .map(|c| (c.clone(), DType::F32s)) // refined at typecheck
+                    .chain(binding.output_cols.iter().cloned())
+                    .collect(),
+            ),
+            service_model: Some(binding.model.clone()),
+            device: info.map(|i| i.device).unwrap_or(Device::Cpu),
+            batch_aware: info.map(|i| i.batchable).unwrap_or(false),
+            body: FuncBody::Model(binding),
+        }
+    }
+
+    pub fn with_device(mut self, d: Device) -> Func {
+        self.device = d;
+        self
+    }
+
+    pub fn with_batch_aware(mut self, b: bool) -> Func {
+        self.batch_aware = b;
+        self
+    }
+
+    pub fn with_service_model(mut self, m: &str) -> Func {
+        self.service_model = Some(m.to_string());
+        self
+    }
+
+    pub fn with_expect_input(mut self, tys: Vec<DType>) -> Func {
+        self.expect_input = Some(tys);
+        self
+    }
+}
+
+/// Filter predicates: closures or declarative threshold comparisons.
+#[derive(Clone)]
+pub enum PredBody {
+    Rust(RowPred),
+    /// `column <op> value` on an F64 column.
+    Threshold { column: String, op: CmpOp, value: f64 },
+}
+
+impl fmt::Debug for PredBody {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            PredBody::Rust(_) => write!(f, "Rust(<pred>)"),
+            PredBody::Threshold { column, op, value } => {
+                write!(f, "{column} {op:?} {value}")
+            }
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CmpOp {
+    Lt,
+    Le,
+    Gt,
+    Ge,
+    Eq,
+    Ne,
+}
+
+impl CmpOp {
+    pub fn eval(self, a: f64, b: f64) -> bool {
+        match self {
+            CmpOp::Lt => a < b,
+            CmpOp::Le => a <= b,
+            CmpOp::Gt => a > b,
+            CmpOp::Ge => a >= b,
+            CmpOp::Eq => a == b,
+            CmpOp::Ne => a != b,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Predicate {
+    pub name: String,
+    pub body: PredBody,
+}
+
+impl Predicate {
+    pub fn rust(name: &str, p: RowPred) -> Predicate {
+        Predicate { name: name.to_string(), body: PredBody::Rust(p) }
+    }
+
+    pub fn threshold(column: &str, op: CmpOp, value: f64) -> Predicate {
+        Predicate {
+            name: format!("{column}_{op:?}_{value}"),
+            body: PredBody::Threshold { column: column.to_string(), op, value },
+        }
+    }
+}
+
+/// Aggregates (paper: count, sum, min, max, avg; `ArgMax` additionally
+/// returns the attaining row, which is how ensembles pick the best
+/// prediction in Fig 1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AggFn {
+    Count,
+    Sum,
+    Min,
+    Max,
+    Avg,
+    ArgMax,
+}
+
+impl AggFn {
+    pub fn name(&self) -> &'static str {
+        match self {
+            AggFn::Count => "count",
+            AggFn::Sum => "sum",
+            AggFn::Min => "min",
+            AggFn::Max => "max",
+            AggFn::Avg => "avg",
+            AggFn::ArgMax => "argmax",
+        }
+    }
+}
+
+/// Key argument to `lookup`: a constant or a per-row column reference
+/// (the latter is what dynamic dispatch resolves at runtime, §4).
+#[derive(Debug, Clone, PartialEq)]
+pub enum LookupKey {
+    Const(String),
+    Column(String),
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JoinHow {
+    Inner,
+    Left,
+    Outer,
+}
+
+/// One dataflow operator (paper Table 1).
+#[derive(Debug, Clone)]
+pub enum OpKind {
+    /// Distinguished input of the flow.
+    Input,
+    Map(Func),
+    Filter(Predicate),
+    Groupby { column: String },
+    Agg { agg: AggFn, column: String },
+    Lookup { key: LookupKey, as_col: String },
+    Join { key: Option<String>, how: JoinHow },
+    Union,
+    Anyof,
+    /// Encapsulated chain of single-input operators (created by the
+    /// fusion rewrite; §4 Operator Fusion).
+    Fuse(Vec<OpKind>),
+}
+
+impl OpKind {
+    pub fn label(&self) -> String {
+        match self {
+            OpKind::Input => "input".into(),
+            OpKind::Map(f) => format!("map:{}", f.name),
+            OpKind::Filter(p) => format!("filter:{}", p.name),
+            OpKind::Groupby { column } => format!("groupby:{column}"),
+            OpKind::Agg { agg, column } => format!("agg:{}:{column}", agg.name()),
+            OpKind::Lookup { as_col, .. } => format!("lookup:{as_col}"),
+            OpKind::Join { .. } => "join".into(),
+            OpKind::Union => "union".into(),
+            OpKind::Anyof => "anyof".into(),
+            OpKind::Fuse(ops) => {
+                let inner: Vec<String> = ops.iter().map(|o| o.label()).collect();
+                format!("fuse[{}]", inner.join("+"))
+            }
+        }
+    }
+
+    /// Number of upstream inputs this operator consumes.
+    pub fn arity(&self) -> Arity {
+        match self {
+            OpKind::Input => Arity::Zero,
+            OpKind::Join { .. } => Arity::Two,
+            OpKind::Union | OpKind::Anyof => Arity::Many,
+            _ => Arity::One,
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Arity {
+    Zero,
+    One,
+    Two,
+    Many,
+}
+
+/// Schema helper shared by typechecking and execution: the output schema
+/// and grouping an agg produces.
+pub fn agg_output(
+    agg: AggFn,
+    column: &str,
+    input: &Schema,
+    grouping: Option<&str>,
+) -> Result<(Schema, Option<String>)> {
+    let val_ty = if agg == AggFn::Count {
+        DType::I64
+    } else if column == "__rowid" {
+        anyhow::bail!("cannot aggregate the __rowid pseudo-column")
+    } else {
+        match input.dtype_of(column)? {
+            DType::F64 => DType::F64,
+            DType::I64 => {
+                if agg == AggFn::Avg {
+                    DType::F64
+                } else {
+                    DType::I64
+                }
+            }
+            other => anyhow::bail!("agg {:?} over non-numeric column {column:?} ({other})", agg),
+        }
+    };
+    let out = match (agg, grouping) {
+        (AggFn::ArgMax, None) => input.clone(),
+        (AggFn::ArgMax, Some(_)) => input.clone(),
+        (_, None) => Schema::from_owned(vec![(agg.name().to_string(), val_ty)]),
+        (_, Some(g)) => {
+            let gty = if g == "__rowid" { DType::I64 } else { input.dtype_of(g)? };
+            Schema::from_owned(vec![
+                ("group".to_string(), gty),
+                (agg.name().to_string(), val_ty),
+            ])
+        }
+    };
+    Ok((out, None)) // aggregation always returns an ungrouped table
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sleep_dist_sampling() {
+        let mut r = Rng::new(1);
+        assert_eq!(SleepDist::ConstMs(5.0).sample_ms(&mut r), 5.0);
+        let d = SleepDist::GammaMs { k: 3.0, theta: 2.0, unit_ms: 10.0, base_ms: 1.0 };
+        let xs: Vec<f64> = (0..2000).map(|_| d.sample_ms(&mut r)).collect();
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        assert!((mean - 61.0).abs() < 5.0, "mean={mean}"); // 1 + 3*2*10
+        assert!(xs.iter().all(|&x| x >= 1.0));
+    }
+
+    #[test]
+    fn cmp_ops() {
+        assert!(CmpOp::Lt.eval(1.0, 2.0));
+        assert!(CmpOp::Ge.eval(2.0, 2.0));
+        assert!(CmpOp::Ne.eval(1.0, 2.0));
+        assert!(!CmpOp::Eq.eval(1.0, 2.0));
+    }
+
+    #[test]
+    fn labels_and_arity() {
+        assert_eq!(OpKind::Input.arity(), Arity::Zero);
+        assert_eq!(OpKind::Union.arity(), Arity::Many);
+        assert_eq!(
+            OpKind::Join { key: None, how: JoinHow::Left }.arity(),
+            Arity::Two
+        );
+        let f = Func::identity("noop");
+        assert_eq!(OpKind::Map(f).label(), "map:noop");
+        let fused = OpKind::Fuse(vec![
+            OpKind::Map(Func::identity("a")),
+            OpKind::Groupby { column: "g".into() },
+        ]);
+        assert_eq!(fused.label(), "fuse[map:a+groupby:g]");
+    }
+
+    #[test]
+    fn agg_output_schemas() {
+        let s = Schema::new(vec![("lang", DType::Str), ("conf", DType::F64)]);
+        // ungrouped sum
+        let (out, g) = agg_output(AggFn::Sum, "conf", &s, None).unwrap();
+        assert_eq!(out.cols()[0], ("sum".to_string(), DType::F64));
+        assert!(g.is_none());
+        // grouped count
+        let (out, _) = agg_output(AggFn::Count, "conf", &s, Some("lang")).unwrap();
+        assert_eq!(out.cols().len(), 2);
+        assert_eq!(out.cols()[0].1, DType::Str);
+        assert_eq!(out.cols()[1], ("count".to_string(), DType::I64));
+        // grouped by rowid
+        let (out, _) = agg_output(AggFn::Max, "conf", &s, Some("__rowid")).unwrap();
+        assert_eq!(out.cols()[0].1, DType::I64);
+        // argmax keeps the schema
+        let (out, _) = agg_output(AggFn::ArgMax, "conf", &s, Some("__rowid")).unwrap();
+        assert_eq!(out, s);
+        // non-numeric rejected
+        assert!(agg_output(AggFn::Sum, "lang", &s, None).is_err());
+        assert!(agg_output(AggFn::Max, "__rowid", &s, None).is_err());
+    }
+
+    #[test]
+    fn model_func_defaults_from_registry() {
+        let f = Func::model(ModelBinding::new(
+            "resnet",
+            &["img"],
+            &[("probs", DType::F32s)],
+        ));
+        assert_eq!(f.device, Device::Gpu);
+        assert!(f.batch_aware);
+        assert_eq!(f.service_model.as_deref(), Some("resnet"));
+    }
+
+    #[test]
+    fn binding_builder_and_derives() {
+        let b = ModelBinding::new("resnet", &["img"], &[("probs", DType::F32s)])
+            .with_passthrough(&["img"])
+            .with_derive(Derive::MaxF64 { src: "probs".into(), as_col: "conf".into() })
+            .with_derive(Derive::ArgMaxI64 { src: "probs".into(), as_col: "pred".into() });
+        assert_eq!(b.passthrough, vec!["img"]);
+        assert_eq!(b.derives[0].out_col(), ("conf", DType::F64));
+        assert_eq!(b.derives[1].out_col(), ("pred", DType::I64));
+        let d = Derive::IndexF64 { src: "p".into(), index: 0, as_col: "p_fr".into() };
+        assert_eq!(d.out_col(), ("p_fr", DType::F64));
+    }
+}

@@ -1,0 +1,656 @@
+//! The Cloudflow `Table`: a small in-memory relation with a schema, an
+//! optional grouping column, and per-row identity (paper §3.1).
+//!
+//! Tables are the only values that flow between operators.  Rows carry the
+//! automatically-assigned row ID of the request row they derive from, which
+//! is what makes `union → groupby(rowID) → agg` ensembles and row-ID joins
+//! work (Fig 1).  Serialization (for network cost accounting and KVS
+//! storage) uses the in-repo codec.
+
+use std::fmt;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::codec::{Reader, Writer};
+
+/// Column data types. `F32s`/`I32s` are vector columns (images,
+/// probability vectors, token ids); `Blob` is an opaque payload.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DType {
+    Str,
+    I64,
+    F64,
+    Bool,
+    Blob,
+    F32s,
+    I32s,
+}
+
+impl fmt::Display for DType {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            DType::Str => "str",
+            DType::I64 => "i64",
+            DType::F64 => "f64",
+            DType::Bool => "bool",
+            DType::Blob => "blob",
+            DType::F32s => "f32s",
+            DType::I32s => "i32s",
+        };
+        f.write_str(s)
+    }
+}
+
+impl DType {
+    fn tag(self) -> u8 {
+        match self {
+            DType::Str => 0,
+            DType::I64 => 1,
+            DType::F64 => 2,
+            DType::Bool => 3,
+            DType::Blob => 4,
+            DType::F32s => 5,
+            DType::I32s => 6,
+        }
+    }
+
+    fn from_tag(t: u8) -> Result<Self> {
+        Ok(match t {
+            0 => DType::Str,
+            1 => DType::I64,
+            2 => DType::F64,
+            3 => DType::Bool,
+            4 => DType::Blob,
+            5 => DType::F32s,
+            6 => DType::I32s,
+            _ => bail!("bad dtype tag {t}"),
+        })
+    }
+}
+
+/// A cell value. Vector payloads are `Arc`ed so copies between fused
+/// operators are cheap; serialization still charges full bytes.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    I64(i64),
+    F64(f64),
+    Bool(bool),
+    Blob(Arc<Vec<u8>>),
+    F32s(Arc<Vec<f32>>),
+    I32s(Arc<Vec<i32>>),
+}
+
+impl Value {
+    pub fn dtype(&self) -> DType {
+        match self {
+            Value::Str(_) => DType::Str,
+            Value::I64(_) => DType::I64,
+            Value::F64(_) => DType::F64,
+            Value::Bool(_) => DType::Bool,
+            Value::Blob(_) => DType::Blob,
+            Value::F32s(_) => DType::F32s,
+            Value::I32s(_) => DType::I32s,
+        }
+    }
+
+    pub fn blob(bytes: Vec<u8>) -> Value {
+        Value::Blob(Arc::new(bytes))
+    }
+
+    pub fn f32s(v: Vec<f32>) -> Value {
+        Value::F32s(Arc::new(v))
+    }
+
+    pub fn i32s(v: Vec<i32>) -> Value {
+        Value::I32s(Arc::new(v))
+    }
+
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            Value::Str(s) => Ok(s),
+            other => bail!("expected str, got {}", other.dtype()),
+        }
+    }
+
+    pub fn as_i64(&self) -> Result<i64> {
+        match self {
+            Value::I64(v) => Ok(*v),
+            other => bail!("expected i64, got {}", other.dtype()),
+        }
+    }
+
+    pub fn as_f64(&self) -> Result<f64> {
+        match self {
+            Value::F64(v) => Ok(*v),
+            other => bail!("expected f64, got {}", other.dtype()),
+        }
+    }
+
+    pub fn as_bool(&self) -> Result<bool> {
+        match self {
+            Value::Bool(v) => Ok(*v),
+            other => bail!("expected bool, got {}", other.dtype()),
+        }
+    }
+
+    pub fn as_blob(&self) -> Result<&Arc<Vec<u8>>> {
+        match self {
+            Value::Blob(v) => Ok(v),
+            other => bail!("expected blob, got {}", other.dtype()),
+        }
+    }
+
+    pub fn as_f32s(&self) -> Result<&Arc<Vec<f32>>> {
+        match self {
+            Value::F32s(v) => Ok(v),
+            other => bail!("expected f32s, got {}", other.dtype()),
+        }
+    }
+
+    pub fn as_i32s(&self) -> Result<&Arc<Vec<i32>>> {
+        match self {
+            Value::I32s(v) => Ok(v),
+            other => bail!("expected i32s, got {}", other.dtype()),
+        }
+    }
+
+    /// Approximate in-memory/wire size in bytes (drives net costs).
+    pub fn size_bytes(&self) -> usize {
+        match self {
+            Value::Str(s) => s.len() + 4,
+            Value::I64(_) | Value::F64(_) => 8,
+            Value::Bool(_) => 1,
+            Value::Blob(b) => b.len() + 4,
+            Value::F32s(v) => v.len() * 4 + 4,
+            Value::I32s(v) => v.len() * 4 + 4,
+        }
+    }
+
+    /// A grouping key for `groupby` (hash/equality on scalar values).
+    pub fn group_key(&self) -> Result<GroupKey> {
+        Ok(match self {
+            Value::Str(s) => GroupKey::Str(s.clone()),
+            Value::I64(v) => GroupKey::I64(*v),
+            Value::Bool(v) => GroupKey::Bool(*v),
+            Value::F64(v) => GroupKey::F64(v.to_bits()),
+            other => bail!("cannot group by {} column", other.dtype()),
+        })
+    }
+
+    fn encode(&self, w: &mut Writer) {
+        w.u8(self.dtype().tag());
+        match self {
+            Value::Str(s) => w.str(s),
+            Value::I64(v) => w.i64(*v),
+            Value::F64(v) => w.f64(*v),
+            Value::Bool(v) => w.u8(*v as u8),
+            Value::Blob(b) => w.bytes(b),
+            Value::F32s(v) => w.f32s(v),
+            Value::I32s(v) => w.i32s(v),
+        }
+    }
+
+    fn decode(r: &mut Reader) -> Result<Value> {
+        Ok(match DType::from_tag(r.u8()?)? {
+            DType::Str => Value::Str(r.str()?),
+            DType::I64 => Value::I64(r.i64()?),
+            DType::F64 => Value::F64(r.f64()?),
+            DType::Bool => Value::Bool(r.u8()? != 0),
+            DType::Blob => Value::blob(r.bytes()?.to_vec()),
+            DType::F32s => Value::f32s(r.f32s()?),
+            DType::I32s => Value::i32s(r.i32s()?),
+        })
+    }
+}
+
+/// Equality-hashable grouping key derived from a scalar `Value`.
+#[derive(Debug, Clone, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum GroupKey {
+    Str(String),
+    I64(i64),
+    Bool(bool),
+    F64(u64), // bit pattern
+    RowId(u64),
+}
+
+impl GroupKey {
+    /// Back to a value for output tables.
+    pub fn to_value(&self) -> Value {
+        match self {
+            GroupKey::Str(s) => Value::Str(s.clone()),
+            GroupKey::I64(v) => Value::I64(*v),
+            GroupKey::Bool(v) => Value::Bool(*v),
+            GroupKey::F64(bits) => Value::F64(f64::from_bits(*bits)),
+            GroupKey::RowId(v) => Value::I64(*v as i64),
+        }
+    }
+}
+
+/// Schema: ordered named, typed columns.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Schema {
+    cols: Vec<(String, DType)>,
+}
+
+impl Schema {
+    pub fn new(cols: Vec<(&str, DType)>) -> Self {
+        Schema { cols: cols.into_iter().map(|(n, t)| (n.to_string(), t)).collect() }
+    }
+
+    pub fn from_owned(cols: Vec<(String, DType)>) -> Self {
+        Schema { cols }
+    }
+
+    pub fn cols(&self) -> &[(String, DType)] {
+        &self.cols
+    }
+
+    pub fn len(&self) -> usize {
+        self.cols.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.cols.is_empty()
+    }
+
+    pub fn index_of(&self, name: &str) -> Result<usize> {
+        self.cols
+            .iter()
+            .position(|(n, _)| n == name)
+            .with_context(|| format!("no column {name:?} in schema {self}"))
+    }
+
+    pub fn dtype_of(&self, name: &str) -> Result<DType> {
+        Ok(self.cols[self.index_of(name)?].1)
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.cols.iter().any(|(n, _)| n == name)
+    }
+
+    /// Concatenate for joins, suffixing right-side name collisions.
+    pub fn join_with(&self, right: &Schema) -> Schema {
+        let mut cols = self.cols.clone();
+        for (n, t) in &right.cols {
+            let name = if self.has(n) { format!("{n}_r") } else { n.clone() };
+            cols.push((name, *t));
+        }
+        Schema { cols }
+    }
+
+    fn encode(&self, w: &mut Writer) {
+        w.u32(self.cols.len() as u32);
+        for (n, t) in &self.cols {
+            w.str(n);
+            w.u8(t.tag());
+        }
+    }
+
+    fn decode(r: &mut Reader) -> Result<Schema> {
+        let n = r.u32()? as usize;
+        let mut cols = Vec::with_capacity(n);
+        for _ in 0..n {
+            let name = r.str()?;
+            let t = DType::from_tag(r.u8()?)?;
+            cols.push((name, t));
+        }
+        Ok(Schema { cols })
+    }
+}
+
+impl fmt::Display for Schema {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "[")?;
+        for (i, (n, t)) in self.cols.iter().enumerate() {
+            if i > 0 {
+                write!(f, ", ")?;
+            }
+            write!(f, "{n}: {t}")?;
+        }
+        write!(f, "]")
+    }
+}
+
+/// A row: the originating request row's ID plus one value per column.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Row {
+    pub id: u64,
+    pub values: Vec<Value>,
+}
+
+impl Row {
+    pub fn new(id: u64, values: Vec<Value>) -> Self {
+        Row { id, values }
+    }
+}
+
+static NEXT_ROW_ID: AtomicU64 = AtomicU64::new(1);
+
+/// Allocate a globally-unique row ID (assigned to input rows on execute).
+pub fn fresh_row_id() -> u64 {
+    NEXT_ROW_ID.fetch_add(1, Ordering::Relaxed)
+}
+
+/// The core relation type (paper Table 1 notation:
+/// `Table[c1,...,cn][grouping?]`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Table {
+    schema: Schema,
+    grouping: Option<String>,
+    rows: Vec<Row>,
+}
+
+impl Table {
+    pub fn new(schema: Schema) -> Self {
+        Table { schema, grouping: None, rows: Vec::new() }
+    }
+
+    /// Build an input table, assigning fresh row IDs.
+    pub fn from_values(schema: Schema, rows: Vec<Vec<Value>>) -> Result<Table> {
+        let mut t = Table::new(schema);
+        for values in rows {
+            t.push_fresh(values)?;
+        }
+        Ok(t)
+    }
+
+    pub fn schema(&self) -> &Schema {
+        &self.schema
+    }
+
+    pub fn grouping(&self) -> Option<&str> {
+        self.grouping.as_deref()
+    }
+
+    pub fn set_grouping(&mut self, col: Option<String>) -> Result<()> {
+        if let Some(c) = &col {
+            if c != "__rowid" {
+                self.schema.index_of(c)?;
+            }
+        }
+        self.grouping = col;
+        Ok(())
+    }
+
+    pub fn rows(&self) -> &[Row] {
+        &self.rows
+    }
+
+    pub fn rows_mut(&mut self) -> &mut Vec<Row> {
+        &mut self.rows
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    fn check_row(&self, values: &[Value]) -> Result<()> {
+        if values.len() != self.schema.len() {
+            bail!(
+                "row width {} != schema width {} ({})",
+                values.len(),
+                self.schema.len(),
+                self.schema
+            );
+        }
+        for ((name, t), v) in self.schema.cols().iter().zip(values) {
+            if v.dtype() != *t {
+                bail!("column {name:?}: expected {t}, got {}", v.dtype());
+            }
+        }
+        Ok(())
+    }
+
+    /// Append a row with a fresh ID (input construction).
+    pub fn push_fresh(&mut self, values: Vec<Value>) -> Result<u64> {
+        self.check_row(&values)?;
+        let id = fresh_row_id();
+        self.rows.push(Row::new(id, values));
+        Ok(id)
+    }
+
+    /// Append a row that inherits an existing ID (operator outputs).
+    pub fn push(&mut self, id: u64, values: Vec<Value>) -> Result<()> {
+        self.check_row(&values)?;
+        self.rows.push(Row::new(id, values));
+        Ok(())
+    }
+
+    pub fn value(&self, row: usize, col: &str) -> Result<&Value> {
+        let idx = self.schema.index_of(col)?;
+        Ok(&self.rows[row].values[idx])
+    }
+
+    /// Column value of a row borrowed from this table.
+    pub fn value_of<'a>(&self, row: &'a Row, col: &str) -> Result<&'a Value> {
+        let idx = self.schema.index_of(col)?;
+        Ok(&row.values[idx])
+    }
+
+    /// Total payload size in bytes (network/KVS cost accounting).
+    pub fn size_bytes(&self) -> usize {
+        let header = 16 + self.schema.len() * 12;
+        header
+            + self
+                .rows
+                .iter()
+                .map(|r| 8 + r.values.iter().map(Value::size_bytes).sum::<usize>())
+                .sum::<usize>()
+    }
+
+    /// Serialize with the repo codec (used when crossing node boundaries).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = Writer::with_capacity(self.size_bytes());
+        self.schema.encode(&mut w);
+        match &self.grouping {
+            Some(g) => {
+                w.u8(1);
+                w.str(g);
+            }
+            None => w.u8(0),
+        }
+        w.u32(self.rows.len() as u32);
+        for row in &self.rows {
+            w.u64(row.id);
+            for v in &row.values {
+                v.encode(&mut w);
+            }
+        }
+        w.finish()
+    }
+
+    pub fn decode(bytes: &[u8]) -> Result<Table> {
+        let mut r = Reader::new(bytes);
+        let schema = Schema::decode(&mut r)?;
+        let grouping = if r.u8()? == 1 { Some(r.str()?) } else { None };
+        let n = r.u32()? as usize;
+        let width = schema.len();
+        let mut rows = Vec::with_capacity(n);
+        for _ in 0..n {
+            let id = r.u64()?;
+            let mut values = Vec::with_capacity(width);
+            for _ in 0..width {
+                values.push(Value::decode(&mut r)?);
+            }
+            rows.push(Row::new(id, values));
+        }
+        r.done()?;
+        Ok(Table { schema, grouping, rows })
+    }
+
+    /// Group key of a row for column `col` (`__rowid` groups by row ID).
+    pub fn group_key_of(&self, row: &Row, col: &str) -> Result<GroupKey> {
+        if col == "__rowid" {
+            return Ok(GroupKey::RowId(row.id));
+        }
+        let idx = self.schema.index_of(col)?;
+        row.values[idx].group_key()
+    }
+}
+
+impl fmt::Display for Table {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(
+            f,
+            "Table{} grouped={:?} rows={}",
+            self.schema,
+            self.grouping,
+            self.rows.len()
+        )?;
+        for r in self.rows.iter().take(8) {
+            write!(f, "  #{}:", r.id)?;
+            for v in &r.values {
+                match v {
+                    Value::Str(s) => write!(f, " {s:?}")?,
+                    Value::I64(x) => write!(f, " {x}")?,
+                    Value::F64(x) => write!(f, " {x:.4}")?,
+                    Value::Bool(x) => write!(f, " {x}")?,
+                    Value::Blob(b) => write!(f, " blob[{}]", b.len())?,
+                    Value::F32s(x) => write!(f, " f32s[{}]", x.len())?,
+                    Value::I32s(x) => write!(f, " i32s[{}]", x.len())?,
+                }
+            }
+            writeln!(f)?;
+        }
+        if self.rows.len() > 8 {
+            writeln!(f, "  ... {} more", self.rows.len() - 8)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn schema() -> Schema {
+        Schema::new(vec![("name", DType::Str), ("score", DType::F64)])
+    }
+
+    #[test]
+    fn push_checks_schema() {
+        let mut t = Table::new(schema());
+        t.push_fresh(vec![Value::Str("a".into()), Value::F64(0.5)]).unwrap();
+        assert!(t.push_fresh(vec![Value::F64(0.5), Value::Str("a".into())]).is_err());
+        assert!(t.push_fresh(vec![Value::Str("a".into())]).is_err());
+        assert_eq!(t.len(), 1);
+    }
+
+    #[test]
+    fn fresh_ids_unique_and_preserved() {
+        let mut t = Table::new(schema());
+        let a = t.push_fresh(vec![Value::Str("a".into()), Value::F64(1.0)]).unwrap();
+        let b = t.push_fresh(vec![Value::Str("b".into()), Value::F64(2.0)]).unwrap();
+        assert_ne!(a, b);
+        t.push(a, vec![Value::Str("c".into()), Value::F64(3.0)]).unwrap();
+        assert_eq!(t.rows()[2].id, a);
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let mut t = Table::new(Schema::new(vec![
+            ("s", DType::Str),
+            ("i", DType::I64),
+            ("f", DType::F64),
+            ("b", DType::Bool),
+            ("blob", DType::Blob),
+            ("v", DType::F32s),
+            ("ids", DType::I32s),
+        ]));
+        t.push_fresh(vec![
+            Value::Str("héllo".into()),
+            Value::I64(-9),
+            Value::F64(2.5),
+            Value::Bool(true),
+            Value::blob(vec![1, 2, 3]),
+            Value::f32s(vec![1.0, -2.0]),
+            Value::i32s(vec![5, 6, 7]),
+        ])
+        .unwrap();
+        t.set_grouping(Some("s".to_string())).unwrap();
+        let rt = Table::decode(&t.encode()).unwrap();
+        assert_eq!(rt, t);
+    }
+
+    #[test]
+    fn decode_rejects_garbage() {
+        assert!(Table::decode(&[1, 2, 3]).is_err());
+        let good = Table::new(schema()).encode();
+        assert!(Table::decode(&good[..good.len() - 1]).is_err());
+    }
+
+    #[test]
+    fn size_bytes_tracks_payload() {
+        let mut t = Table::new(Schema::new(vec![("p", DType::Blob)]));
+        let empty = t.size_bytes();
+        t.push_fresh(vec![Value::blob(vec![0; 10_000])]).unwrap();
+        assert!(t.size_bytes() >= empty + 10_000);
+        // encode() length should be close to size_bytes
+        let enc = t.encode().len();
+        let sz = t.size_bytes();
+        let rel = (enc as f64 - sz as f64).abs() / (sz as f64);
+        assert!(rel < 0.1, "enc={enc} sz={sz}");
+    }
+
+    #[test]
+    fn grouping_validated() {
+        let mut t = Table::new(schema());
+        assert!(t.set_grouping(Some("missing".into())).is_err());
+        t.set_grouping(Some("name".into())).unwrap();
+        assert_eq!(t.grouping(), Some("name"));
+        t.set_grouping(Some("__rowid".into())).unwrap();
+        t.set_grouping(None).unwrap();
+    }
+
+    #[test]
+    fn group_keys() {
+        let mut t = Table::new(schema());
+        t.push_fresh(vec![Value::Str("x".into()), Value::F64(0.25)]).unwrap();
+        let row = &t.rows()[0];
+        assert_eq!(t.group_key_of(row, "name").unwrap(), GroupKey::Str("x".into()));
+        assert_eq!(t.group_key_of(row, "__rowid").unwrap(), GroupKey::RowId(row.id));
+        assert_eq!(
+            t.group_key_of(row, "score").unwrap(),
+            GroupKey::F64(0.25f64.to_bits())
+        );
+    }
+
+    #[test]
+    fn group_key_to_value_roundtrip() {
+        assert_eq!(GroupKey::Str("a".into()).to_value(), Value::Str("a".into()));
+        assert_eq!(GroupKey::I64(-2).to_value(), Value::I64(-2));
+        assert_eq!(GroupKey::F64(1.5f64.to_bits()).to_value(), Value::F64(1.5));
+        assert_eq!(GroupKey::RowId(7).to_value(), Value::I64(7));
+    }
+
+    #[test]
+    fn vector_group_key_rejected() {
+        assert!(Value::f32s(vec![1.0]).group_key().is_err());
+        assert!(Value::blob(vec![1]).group_key().is_err());
+    }
+
+    #[test]
+    fn join_schema_renames_collisions() {
+        let a = Schema::new(vec![("x", DType::I64), ("y", DType::F64)]);
+        let b = Schema::new(vec![("y", DType::F64), ("z", DType::Str)]);
+        let j = a.join_with(&b);
+        let names: Vec<&str> = j.cols().iter().map(|(n, _)| n.as_str()).collect();
+        assert_eq!(names, vec!["x", "y", "y_r", "z"]);
+    }
+
+    #[test]
+    fn accessors() {
+        let mut t = Table::new(schema());
+        t.push_fresh(vec![Value::Str("a".into()), Value::F64(1.5)]).unwrap();
+        assert_eq!(t.value(0, "score").unwrap().as_f64().unwrap(), 1.5);
+        assert!(t.value(0, "nope").is_err());
+        assert!(t.value(0, "name").unwrap().as_f64().is_err());
+    }
+}

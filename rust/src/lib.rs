@@ -1,0 +1,29 @@
+//! # Cloudflow
+//!
+//! A from-scratch reproduction of *Optimizing Prediction Serving on
+//! Low-Latency Serverless Dataflow* (Sreekanti et al., 2020): a dataflow
+//! API for prediction pipelines compiled onto a Cloudburst-like stateful
+//! serverless runtime, with the paper's optimizations — operator fusion,
+//! competitive execution, fine-grained autoscaling, locality-aware dynamic
+//! dispatch, and batching — implemented as automatic rewrites.
+//!
+//! Architecture (three layers, Python never on the request path):
+//! * **L3** ([`dataflow`], [`cloudburst`], [`anna`], [`baselines`]): the
+//!   Rust coordinator — API, compiler, FaaS runtime, storage, baselines.
+//! * **L2/L1** (`python/compile`): JAX models + Pallas kernels, AOT-lowered
+//!   to HLO text artifacts loaded by [`runtime`] via PJRT.
+//!
+//! Start with [`dataflow::Dataflow`] (the user API) and
+//! [`cloudburst::Cluster`] (the runtime), or the `examples/` directory.
+
+pub mod anna;
+pub mod baselines;
+pub mod cloudburst;
+pub mod config;
+pub mod dataflow;
+pub mod models;
+pub mod net;
+pub mod runtime;
+pub mod simulation;
+pub mod util;
+pub mod workloads;

@@ -1,0 +1,160 @@
+//! `cloudflow` — serving launcher / CLI.
+//!
+//! ```text
+//! cloudflow info                       # artifacts + model zoo summary
+//! cloudflow serve <pipeline> [opts]    # run a pipeline under load
+//! cloudflow pipelines                  # list available pipelines
+//! ```
+//!
+//! Pipelines: ensemble | cascade | video | nmt | recsys.
+//! Options: --requests N --clients N --replicas N --no-opt --competitive K
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+
+use cloudflow::cloudburst::Cluster;
+use cloudflow::dataflow::compiler::{compile, OptFlags};
+use cloudflow::runtime::{InferenceService, Manifest};
+use cloudflow::util::stats::fmt_ms;
+use cloudflow::workloads::{closed_loop, pipelines};
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(String::as_str) {
+        Some("info") => info(),
+        Some("pipelines") => {
+            println!("ensemble  - Fig 1 three-model classification ensemble");
+            println!("cascade   - Fig 9 resnet->inception confidence cascade");
+            println!("video     - Fig 10 YOLO + person/vehicle classifiers");
+            println!("nmt       - Fig 11 langid-routed translation");
+            println!("recsys    - Fig 12 lookup-heavy recommender");
+            Ok(())
+        }
+        Some("serve") => serve(&args[1..]),
+        _ => {
+            println!("usage: cloudflow <info|pipelines|serve> ...");
+            println!("  cloudflow serve cascade --requests 200 --clients 10");
+            Ok(())
+        }
+    }
+}
+
+fn info() -> Result<()> {
+    let manifest = Manifest::load(Manifest::default_dir())
+        .context("artifacts not built; run `make artifacts`")?;
+    println!("artifacts dir: {:?}", manifest.dir);
+    println!(
+        "{} models, {} compiled artifacts",
+        manifest.models.len(),
+        manifest.artifacts.len()
+    );
+    for (name, m) in &manifest.models {
+        let batches = manifest.batches_of(name);
+        let info = cloudflow::models::info(name);
+        println!(
+            "  {name:<16} params={:<9} batches={batches:?} device={}",
+            m.params_bytes,
+            info.map(|i| i.device.label()).unwrap_or("?"),
+        );
+    }
+    if !manifest.calibration.is_empty() {
+        println!("calibration: {:?}", manifest.calibration);
+    }
+    Ok(())
+}
+
+fn parse_flags(args: &[String]) -> HashMap<String, String> {
+    let mut out = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(k) = args[i].strip_prefix("--") {
+            let v = args.get(i + 1).cloned().unwrap_or_default();
+            if v.starts_with("--") || v.is_empty() {
+                out.insert(k.to_string(), "true".into());
+                i += 1;
+            } else {
+                out.insert(k.to_string(), v);
+                i += 2;
+            }
+        } else {
+            i += 1;
+        }
+    }
+    out
+}
+
+fn serve(args: &[String]) -> Result<()> {
+    let name = args
+        .first()
+        .context("serve: which pipeline? (see `cloudflow pipelines`)")?;
+    let flags = parse_flags(&args[1..]);
+    let get =
+        |k: &str, d: usize| -> usize { flags.get(k).and_then(|v| v.parse().ok()).unwrap_or(d) };
+    let requests = get("requests", 100);
+    let clients = get("clients", 10);
+    let replicas = get("replicas", 2);
+
+    let infer = InferenceService::start_default()?;
+    let manifest = Manifest::load(Manifest::default_dir())?;
+    let spec = match name.as_str() {
+        "ensemble" => pipelines::ensemble()?,
+        "cascade" => pipelines::image_cascade(&manifest)?,
+        "video" => pipelines::video_stream()?,
+        "nmt" => pipelines::nmt()?,
+        "recsys" => pipelines::recommender(Default::default())?,
+        other => bail!("unknown pipeline {other:?}"),
+    };
+
+    let mut opts = if flags.contains_key("no-opt") {
+        OptFlags::none()
+    } else {
+        OptFlags::all()
+    };
+    if let Some(k) = flags.get("competitive").and_then(|v| v.parse::<usize>().ok()) {
+        for m in ["nmt_fr", "nmt_de"] {
+            opts = opts.with_competitive(m, k);
+        }
+    }
+
+    let plan = compile(&spec.flow, &opts)?;
+    println!(
+        "pipeline {name}: {} stages {:?}",
+        plan.n_stages(),
+        plan.stage_labels()
+    );
+    let cluster = Cluster::new(Some(infer));
+    cluster.set_autoscale(true);
+    if let Some(setup) = &spec.setup {
+        println!("populating KVS ...");
+        setup(&cluster.kvs());
+    }
+    let h = cluster.register(plan, replicas)?;
+
+    println!("warm-up ...");
+    closed_loop(&cluster, h, clients, requests / 5 + 1, |i| (spec.make_input)(i));
+    println!("serving {requests} requests from {clients} clients ...");
+    let mut r = closed_loop(&cluster, h, clients, requests, |i| {
+        (spec.make_input)(i + requests)
+    });
+    let (med, p99, rps) = r.report();
+    println!(
+        "median={} p99={} throughput={rps:.1} req/s completed={} errors={}",
+        fmt_ms(med),
+        fmt_ms(p99),
+        r.completed,
+        r.errors
+    );
+    println!("replica allocation:");
+    for (stage, n) in cluster.replica_counts(h) {
+        println!("  {stage:<48} x{n}");
+    }
+    Ok(())
+}

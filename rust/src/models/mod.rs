@@ -1,0 +1,54 @@
+//! Model metadata shared by the scheduler, batching executor and runtime:
+//! which models exist, their resource class, and whether they batch.
+
+use crate::simulation::gpu::Device;
+
+/// Static description of a zoo model from the serving system's viewpoint.
+#[derive(Debug, Clone)]
+pub struct ModelInfo {
+    pub name: &'static str,
+    /// Preferred device class for placement (paper §4 Operator Placement).
+    pub device: Device,
+    /// Whether the model's artifacts support batched execution.
+    pub batchable: bool,
+}
+
+/// The registry of stand-in models (DESIGN.md S16).
+pub const MODELS: &[ModelInfo] = &[
+    ModelInfo { name: "preproc", device: Device::Cpu, batchable: true },
+    ModelInfo { name: "resnet", device: Device::Gpu, batchable: true },
+    ModelInfo { name: "resnet_person", device: Device::Gpu, batchable: true },
+    ModelInfo { name: "resnet_vehicle", device: Device::Gpu, batchable: true },
+    ModelInfo { name: "inception", device: Device::Gpu, batchable: true },
+    ModelInfo { name: "vgg", device: Device::Gpu, batchable: true },
+    ModelInfo { name: "yolo", device: Device::Gpu, batchable: true },
+    ModelInfo { name: "langid", device: Device::Cpu, batchable: true },
+    ModelInfo { name: "nmt_fr", device: Device::Gpu, batchable: true },
+    ModelInfo { name: "nmt_de", device: Device::Gpu, batchable: true },
+    ModelInfo { name: "recsys", device: Device::Cpu, batchable: false },
+];
+
+pub fn info(name: &str) -> Option<&'static ModelInfo> {
+    MODELS.iter().find(|m| m.name == name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_lookup() {
+        assert_eq!(info("resnet").unwrap().device, Device::Gpu);
+        assert!(info("recsys").unwrap().device == Device::Cpu);
+        assert!(!info("recsys").unwrap().batchable);
+        assert!(info("nope").is_none());
+    }
+
+    #[test]
+    fn names_unique() {
+        let mut names: Vec<_> = MODELS.iter().map(|m| m.name).collect();
+        names.sort();
+        names.dedup();
+        assert_eq!(names.len(), MODELS.len());
+    }
+}

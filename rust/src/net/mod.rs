@@ -1,0 +1,114 @@
+//! Simulated network fabric.
+//!
+//! The paper's effects (fusion, locality, baseline overheads) are all
+//! driven by inter-node data movement.  The fabric charges a calibrated,
+//! size-dependent cost for every transfer between distinct nodes; co-located
+//! transfers are free.  Costs are *slept* through the virtual clock so they
+//! compose naturally with queueing in the executors.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::config;
+use crate::simulation::clock;
+
+/// Logical machine identity. Executors, KVS shards and baseline endpoints
+/// all live on nodes; transfers between equal ids are local.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct NodeId(pub u32);
+
+impl NodeId {
+    /// The client/driver side of the system (benchmark clients, the
+    /// baselines' proxy service).
+    pub const CLIENT: NodeId = NodeId(u32::MAX);
+}
+
+/// Accounting + cost model for the simulated wire.
+#[derive(Debug, Default)]
+pub struct Fabric {
+    transfers: AtomicU64,
+    bytes: AtomicU64,
+}
+
+impl Fabric {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Modeled one-way cost of moving `bytes` between two *distinct*
+    /// nodes: fixed hop cost + serialize + wire + deserialize.
+    pub fn transfer_ms(&self, bytes: usize) -> f64 {
+        let n = config::global().net.clone();
+        n.hop_base_ms
+            + bytes as f64 / n.wire_bytes_per_ms
+            + 2.0 * bytes as f64 / n.codec_bytes_per_ms
+    }
+
+    /// Ship a payload from `from` to `to`, sleeping the modeled cost.
+    /// Returns the modeled cost charged (0 for local moves).
+    pub fn ship(&self, from: NodeId, to: NodeId, bytes: usize) -> f64 {
+        if from == to {
+            return 0.0;
+        }
+        let ms = self.transfer_ms(bytes);
+        self.transfers.fetch_add(1, Ordering::Relaxed);
+        self.bytes.fetch_add(bytes as u64, Ordering::Relaxed);
+        clock::sleep_ms(ms);
+        ms
+    }
+
+    /// Account bytes moved without sleeping (used when the caller models
+    /// overlapped transfers and sleeps the aggregate itself).
+    pub fn note_shipped(&self, bytes: usize) {
+        if bytes > 0 {
+            self.transfers.fetch_add(1, Ordering::Relaxed);
+            self.bytes.fetch_add(bytes as u64, Ordering::Relaxed);
+        }
+    }
+
+    /// Totals since construction: (transfer count, bytes moved).
+    pub fn totals(&self) -> (u64, u64) {
+        (
+            self.transfers.load(Ordering::Relaxed),
+            self.bytes.load(Ordering::Relaxed),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn local_moves_are_free() {
+        let f = Fabric::new();
+        assert_eq!(f.ship(NodeId(1), NodeId(1), 10_000_000), 0.0);
+        assert_eq!(f.totals(), (0, 0));
+    }
+
+    #[test]
+    fn cost_scales_with_size() {
+        let f = Fabric::new();
+        let small = f.transfer_ms(10_000);
+        let large = f.transfer_ms(10_000_000);
+        assert!(large > small * 30.0, "small={small} large={large}");
+        // 10MB with default calibration ≈ 18.5ms (DESIGN.md §5).
+        assert!((large - 18.5).abs() < 0.5, "large={large}");
+    }
+
+    #[test]
+    fn ship_accounts_and_sleeps() {
+        let f = Fabric::new();
+        let c = crate::simulation::clock::Clock::new();
+        let ms = f.ship(NodeId(1), NodeId(2), 1_000_000);
+        assert!(ms > 0.0);
+        assert!(c.now_ms() >= ms * 0.8);
+        let (n, b) = f.totals();
+        assert_eq!((n, b), (1, 1_000_000));
+    }
+
+    #[test]
+    fn client_node_is_distinct() {
+        assert_ne!(NodeId::CLIENT, NodeId(0));
+        assert_eq!(NodeId::CLIENT, NodeId::CLIENT);
+    }
+}

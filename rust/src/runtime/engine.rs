@@ -1,0 +1,469 @@
+//! The inference service: a dedicated thread owning the PJRT CPU client,
+//! compiled executables, and parameter literals.
+//!
+//! Load path (per artifact, lazily on first use):
+//!   `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//!   `client.compile` — HLO *text* is the interchange format because the
+//!   crate's xla_extension 0.5.1 rejects jax≥0.5 serialized protos (ids >
+//!   INT_MAX); the text parser reassigns ids (see /opt/xla-example).
+//!
+//! Batching: `run_rows` rounds a dynamic batch up to the nearest compiled
+//! batch variant, pads by repeating the last row, executes once, and
+//! splits per-row outputs — the mechanism behind the paper's §4 Batching.
+//! Models whose only variant is batch=1 (e.g. recsys, whose inputs have no
+//! batch axis) are executed row-at-a-time.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+
+use anyhow::{bail, Context, Result};
+
+use crate::simulation::gpu::round_up_batch;
+
+use super::manifest::{ArtifactEntry, Manifest};
+use super::{ElemType, RowVec, Tensor};
+
+enum Req {
+    Run {
+        model: String,
+        rows: Vec<Vec<RowVec>>,
+        resp: mpsc::Sender<Result<Vec<Vec<Tensor>>>>,
+    },
+    Prewarm {
+        models: Vec<String>,
+        resp: mpsc::Sender<Result<usize>>,
+    },
+}
+
+#[derive(Debug, Default)]
+pub struct Stats {
+    /// PJRT executions issued.
+    pub executions: AtomicU64,
+    /// Total rows served (pre-padding).
+    pub rows: AtomicU64,
+    /// Rows of padding added to reach compiled batch sizes.
+    pub padded_rows: AtomicU64,
+}
+
+/// Cheap, cloneable, thread-safe handle to the inference service.
+#[derive(Clone)]
+pub struct InferClient {
+    tx: mpsc::Sender<Req>,
+    manifest: Arc<Manifest>,
+    stats: Arc<Stats>,
+}
+
+impl InferClient {
+    /// Execute `model` over `rows` (one `Vec<RowVec>` per row, one
+    /// `RowVec` per model input).  Returns, per row, one tensor per model
+    /// output with the batch axis stripped.
+    pub fn run_rows(&self, model: &str, rows: &[Vec<RowVec>]) -> Result<Vec<Vec<Tensor>>> {
+        if rows.is_empty() {
+            return Ok(Vec::new());
+        }
+        let (tx, rx) = mpsc::channel();
+        self.tx
+            .send(Req::Run { model: model.to_string(), rows: rows.to_vec(), resp: tx })
+            .map_err(|_| anyhow::anyhow!("inference service is down"))?;
+        rx.recv().context("inference service dropped the request")?
+    }
+
+    /// Compile all artifacts for the given models (or all when empty)
+    /// ahead of time; returns the number compiled.
+    pub fn prewarm(&self, models: &[&str]) -> Result<usize> {
+        let (tx, rx) = mpsc::channel();
+        self.tx
+            .send(Req::Prewarm {
+                models: models.iter().map(|s| s.to_string()).collect(),
+                resp: tx,
+            })
+            .map_err(|_| anyhow::anyhow!("inference service is down"))?;
+        rx.recv().context("inference service dropped the request")?
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn stats(&self) -> &Stats {
+        &self.stats
+    }
+}
+
+/// Owns the service thread. Dropping all `InferClient`s stops the thread.
+pub struct InferenceService;
+
+impl InferenceService {
+    /// Start the service over an artifacts directory.
+    pub fn start(dir: impl Into<PathBuf>) -> Result<InferClient> {
+        let manifest = Arc::new(Manifest::load(dir.into())?);
+        let stats = Arc::new(Stats::default());
+        let (tx, rx) = mpsc::channel::<Req>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let m = manifest.clone();
+        let st = stats.clone();
+        std::thread::Builder::new()
+            .name("pjrt-inference".into())
+            .spawn(move || service_main(m, st, rx, ready_tx))
+            .context("spawning inference thread")?;
+        ready_rx.recv().context("inference thread died during init")??;
+        Ok(InferClient { tx, manifest, stats })
+    }
+
+    /// Start against the default artifacts dir, if it exists.
+    pub fn start_default() -> Result<InferClient> {
+        let dir = Manifest::default_dir();
+        if !dir.join("manifest.json").exists() {
+            bail!("artifacts not built (run `make artifacts`); looked in {dir:?}");
+        }
+        Self::start(dir)
+    }
+}
+
+struct Service {
+    manifest: Arc<Manifest>,
+    stats: Arc<Stats>,
+    client: xla::PjRtClient,
+    exes: HashMap<String, xla::PjRtLoadedExecutable>,
+    params: HashMap<String, Vec<xla::Literal>>,
+}
+
+fn service_main(
+    manifest: Arc<Manifest>,
+    stats: Arc<Stats>,
+    rx: mpsc::Receiver<Req>,
+    ready: mpsc::Sender<Result<()>>,
+) {
+    let client = match xla::PjRtClient::cpu() {
+        Ok(c) => c,
+        Err(e) => {
+            let _ = ready.send(Err(anyhow::anyhow!("PJRT cpu client: {e}")));
+            return;
+        }
+    };
+    let _ = ready.send(Ok(()));
+    let mut svc = Service {
+        manifest,
+        stats,
+        client,
+        exes: HashMap::new(),
+        params: HashMap::new(),
+    };
+    while let Ok(req) = rx.recv() {
+        match req {
+            Req::Run { model, rows, resp } => {
+                let _ = resp.send(svc.run(&model, rows));
+            }
+            Req::Prewarm { models, resp } => {
+                let _ = resp.send(svc.prewarm(&models));
+            }
+        }
+    }
+}
+
+impl Service {
+    fn prewarm(&mut self, models: &[String]) -> Result<usize> {
+        let names: Vec<String> = self
+            .manifest
+            .artifacts
+            .iter()
+            .filter(|a| models.is_empty() || models.contains(&a.model))
+            .map(|a| a.name.clone())
+            .collect();
+        let mut n = 0;
+        for name in names {
+            self.executable(&name)?;
+            n += 1;
+        }
+        Ok(n)
+    }
+
+    fn executable(&mut self, artifact: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.exes.contains_key(artifact) {
+            let entry = self
+                .manifest
+                .artifacts
+                .iter()
+                .find(|a| a.name == artifact)
+                .with_context(|| format!("unknown artifact {artifact:?}"))?;
+            let path = entry.hlo_path.to_string_lossy().to_string();
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .map_err(|e| anyhow::anyhow!("parsing {path}: {e}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow::anyhow!("compiling {artifact}: {e}"))?;
+            self.exes.insert(artifact.to_string(), exe);
+        }
+        Ok(&self.exes[artifact])
+    }
+
+    /// Parameter literals for a model, built once from the params blob.
+    fn model_params(&mut self, model: &str) -> Result<&[xla::Literal]> {
+        if !self.params.contains_key(model) {
+            let entry = self
+                .manifest
+                .models
+                .get(model)
+                .with_context(|| format!("unknown model {model:?}"))?;
+            let bytes = std::fs::read(&entry.params_path)
+                .with_context(|| format!("reading {:?}", entry.params_path))?;
+            if bytes.len() != entry.params_bytes {
+                bail!(
+                    "params blob {:?}: {} bytes, manifest says {}",
+                    entry.params_path,
+                    bytes.len(),
+                    entry.params_bytes
+                );
+            }
+            let floats = crate::util::codec::bytes_as_f32s(&bytes)?;
+            let mut lits = Vec::with_capacity(entry.param_shapes.len());
+            let mut off = 0usize;
+            for shape in &entry.param_shapes {
+                let n: usize = shape.iter().product::<usize>().max(1);
+                if off + n > floats.len() {
+                    bail!("params blob too small for declared shapes");
+                }
+                let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                let lit = xla::Literal::vec1(&floats[off..off + n])
+                    .reshape(&dims)
+                    .map_err(|e| anyhow::anyhow!("param reshape: {e}"))?;
+                lits.push(lit);
+                off += n;
+            }
+            if off != floats.len() {
+                bail!("params blob has {} trailing floats", floats.len() - off);
+            }
+            self.params.insert(model.to_string(), lits);
+        }
+        Ok(&self.params[model])
+    }
+
+    fn run(&mut self, model: &str, rows: Vec<Vec<RowVec>>) -> Result<Vec<Vec<Tensor>>> {
+        let batches = self.manifest.batches_of(model);
+        if batches.is_empty() {
+            bail!("no artifacts for model {model:?}");
+        }
+        self.stats.rows.fetch_add(rows.len() as u64, Ordering::Relaxed);
+        let batchable = batches.len() > 1 || batches[0] > 1;
+        let mut out = Vec::with_capacity(rows.len());
+        if !batchable {
+            for row in &rows {
+                out.push(self.run_exact(model, row)?);
+            }
+            return Ok(out);
+        }
+        let max_b = *batches.last().unwrap();
+        let mut idx = 0;
+        while idx < rows.len() {
+            let chunk = (rows.len() - idx).min(max_b);
+            let b = round_up_batch(&batches, chunk)
+                .with_context(|| format!("no batch variant ≥ {chunk} for {model}"))?;
+            let slice = &rows[idx..idx + chunk];
+            out.extend(self.run_batched(model, b, slice)?);
+            idx += chunk;
+        }
+        Ok(out)
+    }
+
+    /// Non-batched path: artifact input shapes are exact (no batch axis).
+    fn run_exact(&mut self, model: &str, row: &[RowVec]) -> Result<Vec<Tensor>> {
+        let entry = self.manifest.artifact(model, 1).context("no b1 artifact")?.clone();
+        if row.len() != entry.inputs.len() {
+            bail!(
+                "model {model}: {} inputs bound, artifact needs {}",
+                row.len(),
+                entry.inputs.len()
+            );
+        }
+        let mut inputs: Vec<xla::Literal> = Vec::new();
+        for (rv, spec) in row.iter().zip(&entry.inputs) {
+            if rv.len() != spec.elems() {
+                bail!(
+                    "model {model}: input of {} elems, spec needs {}",
+                    rv.len(),
+                    spec.elems()
+                );
+            }
+            inputs.push(literal_of(rv, spec)?);
+        }
+        let outs = self.execute(&entry, inputs)?;
+        // No batch axis: each output tensor belongs to this row whole.
+        split_outputs(&entry, outs, 1, 1, false).map(|mut v| v.pop().unwrap())
+    }
+
+    /// Batched path: stack rows, pad to the compiled batch, split results.
+    fn run_batched(
+        &mut self,
+        model: &str,
+        batch: usize,
+        rows: &[Vec<RowVec>],
+    ) -> Result<Vec<Vec<Tensor>>> {
+        let entry = self
+            .manifest
+            .artifact(model, batch)
+            .with_context(|| format!("no artifact {model}.b{batch}"))?
+            .clone();
+        let n = rows.len();
+        self.stats.padded_rows.fetch_add((batch - n) as u64, Ordering::Relaxed);
+        let mut args: Vec<xla::Literal> = Vec::new();
+        for (i, spec) in entry.inputs.iter().enumerate() {
+            if spec.shape.first() != Some(&batch) {
+                bail!("artifact {} input {i} lacks batch axis", entry.name);
+            }
+            let per_item = spec.elems() / batch;
+            match spec.dtype {
+                ElemType::F32 => {
+                    let mut data: Vec<f32> = Vec::with_capacity(spec.elems());
+                    for r in 0..batch {
+                        let row = &rows[r.min(n - 1)]; // pad: repeat last row
+                        match &row[i] {
+                            RowVec::F32(v) => {
+                                if v.len() != per_item {
+                                    bail!(
+                                        "model {model} input {i}: row has {} elems, needs {per_item}",
+                                        v.len()
+                                    );
+                                }
+                                data.extend_from_slice(v);
+                            }
+                            RowVec::I32(_) => bail!("dtype mismatch on input {i}"),
+                        }
+                    }
+                    let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+                    args.push(
+                        xla::Literal::vec1(&data)
+                            .reshape(&dims)
+                            .map_err(|e| anyhow::anyhow!("reshape: {e}"))?,
+                    );
+                }
+                ElemType::I32 => {
+                    let mut data: Vec<i32> = Vec::with_capacity(spec.elems());
+                    for r in 0..batch {
+                        let row = &rows[r.min(n - 1)];
+                        match &row[i] {
+                            RowVec::I32(v) => {
+                                if v.len() != per_item {
+                                    bail!(
+                                        "model {model} input {i}: row has {} elems, needs {per_item}",
+                                        v.len()
+                                    );
+                                }
+                                data.extend_from_slice(v);
+                            }
+                            RowVec::F32(_) => bail!("dtype mismatch on input {i}"),
+                        }
+                    }
+                    let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+                    args.push(
+                        xla::Literal::vec1(&data)
+                            .reshape(&dims)
+                            .map_err(|e| anyhow::anyhow!("reshape: {e}"))?,
+                    );
+                }
+            }
+        }
+        let outs = self.execute(&entry, args)?;
+        split_outputs(&entry, outs, batch, n, true)
+    }
+
+    /// Execute with cached parameter literals passed by reference (no
+    /// copies) followed by the freshly-built input literals.
+    fn execute(
+        &mut self,
+        entry: &ArtifactEntry,
+        inputs: Vec<xla::Literal>,
+    ) -> Result<Vec<xla::Literal>> {
+        self.stats.executions.fetch_add(1, Ordering::Relaxed);
+        self.executable(&entry.name)?; // ensure compiled
+        self.model_params(&entry.model)?; // ensure params loaded
+        let exe = &self.exes[&entry.name];
+        let params = &self.params[&entry.model];
+        if params.len() + inputs.len() != entry.n_params + entry.inputs.len() {
+            bail!("argument count mismatch for {}", entry.name);
+        }
+        let args: Vec<&xla::Literal> = params.iter().chain(inputs.iter()).collect();
+        let result = exe
+            .execute::<&xla::Literal>(&args)
+            .map_err(|e| anyhow::anyhow!("executing {}: {e}", entry.name))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetching result: {e}"))?;
+        // aot.py lowers with return_tuple=True.
+        result
+            .to_tuple()
+            .map_err(|e| anyhow::anyhow!("untupling result: {e}"))
+    }
+}
+
+/// Split artifact outputs into per-row tensors: with `batched`, outputs
+/// have the batch as the leading axis and `n` of `batch` rows are real.
+fn split_outputs(
+    entry: &ArtifactEntry,
+    outs: Vec<xla::Literal>,
+    batch: usize,
+    n: usize,
+    batched: bool,
+) -> Result<Vec<Vec<Tensor>>> {
+    if outs.len() != entry.outputs.len() {
+        bail!(
+            "artifact {} returned {} outputs, manifest says {}",
+            entry.name,
+            outs.len(),
+            entry.outputs.len()
+        );
+    }
+    let mut per_row: Vec<Vec<Tensor>> = (0..n).map(|_| Vec::new()).collect();
+    for (lit, spec) in outs.iter().zip(&entry.outputs) {
+        if batched && spec.shape.first() != Some(&batch) {
+            bail!("artifact {} output lacks batch axis", entry.name);
+        }
+        let row_shape: Vec<usize> = if batched {
+            spec.shape.iter().skip(1).copied().collect()
+        } else {
+            spec.shape.clone()
+        };
+        let per_item = if batched { spec.elems() / batch } else { spec.elems() };
+        match spec.dtype {
+            ElemType::F32 => {
+                let data = lit
+                    .to_vec::<f32>()
+                    .map_err(|e| anyhow::anyhow!("output read: {e}"))?;
+                for (r, row) in per_row.iter_mut().enumerate() {
+                    let start = r * per_item;
+                    row.push(Tensor::F32 {
+                        shape: row_shape.clone(),
+                        data: data[start..start + per_item].to_vec(),
+                    });
+                }
+            }
+            ElemType::I32 => {
+                let data = lit
+                    .to_vec::<i32>()
+                    .map_err(|e| anyhow::anyhow!("output read: {e}"))?;
+                for (r, row) in per_row.iter_mut().enumerate() {
+                    let start = r * per_item;
+                    row.push(Tensor::I32 {
+                        shape: row_shape.clone(),
+                        data: data[start..start + per_item].to_vec(),
+                    });
+                }
+            }
+        }
+    }
+    Ok(per_row)
+}
+
+/// Build a literal from one per-row payload against an exact (unbatched)
+/// input spec.
+fn literal_of(rv: &RowVec, spec: &super::manifest::TensorSpec) -> Result<xla::Literal> {
+    let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+    let lit = match (rv, spec.dtype) {
+        (RowVec::F32(v), ElemType::F32) => xla::Literal::vec1(v.as_slice()),
+        (RowVec::I32(v), ElemType::I32) => xla::Literal::vec1(v.as_slice()),
+        _ => bail!("input dtype mismatch"),
+    };
+    lit.reshape(&dims).map_err(|e| anyhow::anyhow!("reshape: {e}"))
+}

@@ -1,0 +1,217 @@
+//! Parsing of `artifacts/manifest.json` (written by `python/compile/aot.py`).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+use super::ElemType;
+
+/// Shape + dtype of one tensor crossing the AOT boundary.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub dtype: ElemType,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+
+    fn parse(j: &Json) -> Result<TensorSpec> {
+        let dtype = ElemType::parse(j.req("dtype")?.as_str().context("dtype")?)?;
+        let shape = j
+            .req("shape")?
+            .as_arr()
+            .context("shape")?
+            .iter()
+            .map(|v| v.as_usize().context("shape elem"))
+            .collect::<Result<_>>()?;
+        Ok(TensorSpec { dtype, shape })
+    }
+}
+
+/// One compiled (model, batch) HLO module.
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub model: String,
+    pub batch: usize,
+    pub hlo_path: PathBuf,
+    pub n_params: usize,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// Parameter blob layout for one model.
+#[derive(Debug, Clone)]
+pub struct ModelEntry {
+    pub params_path: PathBuf,
+    pub param_shapes: Vec<Vec<usize>>,
+    pub params_bytes: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub models: BTreeMap<String, ModelEntry>,
+    pub artifacts: Vec<ArtifactEntry>,
+    /// Calibration metadata (e.g. resnet confidence percentiles used by
+    /// the cascade threshold).
+    pub calibration: BTreeMap<String, f64>,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading manifest in {dir:?}"))?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: PathBuf) -> Result<Manifest> {
+        let j = Json::parse(text)?;
+        let mut models = BTreeMap::new();
+        for (name, m) in j.req("models")?.as_obj().context("models")? {
+            let param_shapes = m
+                .req("param_shapes")?
+                .as_arr()
+                .context("param_shapes")?
+                .iter()
+                .map(|s| {
+                    s.as_arr()
+                        .context("shape")?
+                        .iter()
+                        .map(|v| v.as_usize().context("dim"))
+                        .collect::<Result<Vec<_>>>()
+                })
+                .collect::<Result<_>>()?;
+            models.insert(
+                name.clone(),
+                ModelEntry {
+                    params_path: dir.join(
+                        m.req("params_file")?.as_str().context("params_file")?,
+                    ),
+                    param_shapes,
+                    params_bytes: m
+                        .req("params_bytes")?
+                        .as_usize()
+                        .context("params_bytes")?,
+                },
+            );
+        }
+        let mut artifacts = Vec::new();
+        for a in j.req("artifacts")?.as_arr().context("artifacts")? {
+            artifacts.push(ArtifactEntry {
+                name: a.req("name")?.as_str().context("name")?.to_string(),
+                model: a.req("model")?.as_str().context("model")?.to_string(),
+                batch: a.req("batch")?.as_usize().context("batch")?,
+                hlo_path: dir.join(a.req("hlo")?.as_str().context("hlo")?),
+                n_params: a.req("n_params")?.as_usize().context("n_params")?,
+                inputs: a
+                    .req("inputs")?
+                    .as_arr()
+                    .context("inputs")?
+                    .iter()
+                    .map(TensorSpec::parse)
+                    .collect::<Result<_>>()?,
+                outputs: a
+                    .req("outputs")?
+                    .as_arr()
+                    .context("outputs")?
+                    .iter()
+                    .map(TensorSpec::parse)
+                    .collect::<Result<_>>()?,
+            });
+        }
+        let mut calibration = BTreeMap::new();
+        if let Some(Json::Obj(c)) = j.get("calibration") {
+            for (k, v) in c {
+                if let Some(x) = v.as_f64() {
+                    calibration.insert(k.clone(), x);
+                }
+            }
+        }
+        Ok(Manifest { dir, models, artifacts, calibration })
+    }
+
+    /// Artifact for (model, exact batch).
+    pub fn artifact(&self, model: &str, batch: usize) -> Option<&ArtifactEntry> {
+        self.artifacts.iter().find(|a| a.model == model && a.batch == batch)
+    }
+
+    /// Batch variants available for a model (sorted ascending).
+    pub fn batches_of(&self, model: &str) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .artifacts
+            .iter()
+            .filter(|a| a.model == model)
+            .map(|a| a.batch)
+            .collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// Repo-standard artifacts directory (env override:
+    /// `CLOUDFLOW_ARTIFACTS`).
+    pub fn default_dir() -> PathBuf {
+        std::env::var("CLOUDFLOW_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "models": {
+        "langid": {"params_file": "langid.params.bin",
+                   "param_shapes": [[128, 64], [64], [64, 2], [2]],
+                   "params_bytes": 33320, "meta": {}}
+      },
+      "artifacts": [
+        {"name": "langid.b1", "model": "langid", "batch": 1,
+         "hlo": "langid.b1.hlo.txt", "n_params": 4,
+         "inputs": [{"dtype": "f32", "shape": [1, 128]}],
+         "outputs": [{"dtype": "f32", "shape": [1, 2]}], "hlo_bytes": 1},
+        {"name": "langid.b10", "model": "langid", "batch": 10,
+         "hlo": "langid.b10.hlo.txt", "n_params": 4,
+         "inputs": [{"dtype": "f32", "shape": [10, 128]}],
+         "outputs": [{"dtype": "f32", "shape": [10, 2]}], "hlo_bytes": 1}
+      ],
+      "calibration": {"conf_p50": 0.19}
+    }"#;
+
+    #[test]
+    fn parse_sample() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp/a")).unwrap();
+        assert_eq!(m.models["langid"].param_shapes.len(), 4);
+        assert_eq!(m.models["langid"].params_bytes, 33320);
+        assert_eq!(m.artifacts.len(), 2);
+        assert_eq!(m.batches_of("langid"), vec![1, 10]);
+        let a = m.artifact("langid", 10).unwrap();
+        assert_eq!(a.inputs[0].shape, vec![10, 128]);
+        assert_eq!(a.inputs[0].elems(), 1280);
+        assert!(m.artifact("langid", 7).is_none());
+        assert_eq!(m.calibration["conf_p50"], 0.19);
+        assert!(m.artifacts[0].hlo_path.starts_with("/tmp/a"));
+    }
+
+    #[test]
+    fn parse_rejects_missing_fields() {
+        assert!(Manifest::parse(r#"{"models": {}}"#, PathBuf::new()).is_err());
+        assert!(Manifest::parse("[]", PathBuf::new()).is_err());
+    }
+
+    #[test]
+    fn scalar_spec_elems() {
+        let s = TensorSpec { dtype: ElemType::F32, shape: vec![] };
+        assert_eq!(s.elems(), 1);
+    }
+}

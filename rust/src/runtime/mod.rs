@@ -1,0 +1,128 @@
+//! PJRT model runtime: loads the AOT artifacts produced by
+//! `python/compile/aot.py` (HLO text + params blobs + manifest) and serves
+//! inference to the rest of the system.
+//!
+//! PJRT objects are not `Send` (the xla crate wraps them in `Rc`), so a
+//! dedicated **inference service thread** owns the client, compiled
+//! executables and parameter literals; executors talk to it through a
+//! channel-based [`InferClient`].  This mirrors the real deployment shape:
+//! the service thread *is* the accelerator, and its queue is the device
+//! queue.
+
+pub mod engine;
+pub mod manifest;
+
+pub use engine::{InferClient, InferenceService};
+pub use manifest::{ArtifactEntry, Manifest, TensorSpec};
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::dataflow::table::{DType, Value};
+
+/// Element type of a tensor crossing the runtime boundary.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElemType {
+    F32,
+    I32,
+}
+
+impl ElemType {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "f32" => Ok(ElemType::F32),
+            "i32" => Ok(ElemType::I32),
+            other => bail!("unsupported dtype {other:?}"),
+        }
+    }
+}
+
+/// A host tensor (result of model execution, leading batch axis already
+/// stripped for per-row results).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Tensor {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+}
+
+impl Tensor {
+    pub fn len(&self) -> usize {
+        match self {
+            Tensor::F32 { data, .. } => data.len(),
+            Tensor::I32 { data, .. } => data.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Convert to a table `Value` of the requested column type.
+    pub fn into_value(self, t: DType) -> Result<Value> {
+        match (self, t) {
+            (Tensor::F32 { data, .. }, DType::F32s) => Ok(Value::f32s(data)),
+            (Tensor::I32 { data, .. }, DType::I32s) => Ok(Value::i32s(data)),
+            (Tensor::F32 { data, .. }, DType::F64) => {
+                if data.len() != 1 {
+                    bail!("scalar F64 column from tensor of {} elems", data.len());
+                }
+                Ok(Value::F64(data[0] as f64))
+            }
+            (Tensor::I32 { data, .. }, DType::I64) => {
+                if data.len() != 1 {
+                    bail!("scalar I64 column from tensor of {} elems", data.len());
+                }
+                Ok(Value::I64(data[0] as i64))
+            }
+            (tensor, t) => bail!("cannot convert {tensor:?} to column type {t}"),
+        }
+    }
+}
+
+/// Per-row model input payload (one per bound input column).
+#[derive(Debug, Clone)]
+pub enum RowVec {
+    F32(Arc<Vec<f32>>),
+    I32(Arc<Vec<i32>>),
+}
+
+impl RowVec {
+    pub fn len(&self) -> usize {
+        match self {
+            RowVec::F32(v) => v.len(),
+            RowVec::I32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_into_value() {
+        let t = Tensor::F32 { shape: vec![3], data: vec![1.0, 2.0, 3.0] };
+        assert_eq!(
+            t.clone().into_value(DType::F32s).unwrap(),
+            Value::f32s(vec![1.0, 2.0, 3.0])
+        );
+        assert!(t.into_value(DType::F64).is_err()); // not scalar
+        let s = Tensor::F32 { shape: vec![], data: vec![0.5] };
+        assert_eq!(s.into_value(DType::F64).unwrap(), Value::F64(0.5));
+        let i = Tensor::I32 { shape: vec![2], data: vec![4, 5] };
+        assert_eq!(i.clone().into_value(DType::I32s).unwrap(), Value::i32s(vec![4, 5]));
+        assert!(i.into_value(DType::F32s).is_err());
+    }
+
+    #[test]
+    fn elem_type_parse() {
+        assert_eq!(ElemType::parse("f32").unwrap(), ElemType::F32);
+        assert_eq!(ElemType::parse("i32").unwrap(), ElemType::I32);
+        assert!(ElemType::parse("f64").is_err());
+    }
+}

@@ -1,0 +1,99 @@
+//! Virtual clock: modeled (paper-unit) delays are slept scaled by
+//! `Config::time_scale`, and elapsed real time is divided by the scale so
+//! all recorded metrics stay in paper units regardless of the scale.
+
+use std::time::{Duration, Instant};
+
+use crate::config;
+
+/// A stopwatch measuring *virtual* milliseconds.
+#[derive(Debug, Clone, Copy)]
+pub struct Clock {
+    start: Instant,
+    scale: f64,
+}
+
+impl Default for Clock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Clock {
+    pub fn new() -> Self {
+        Clock { start: Instant::now(), scale: config::global().time_scale }
+    }
+
+    /// Virtual milliseconds since this clock was created.
+    pub fn now_ms(&self) -> f64 {
+        self.start.elapsed().as_secs_f64() * 1e3 / self.scale
+    }
+
+    pub fn scale(&self) -> f64 {
+        self.scale
+    }
+}
+
+/// Sleep a modeled duration of `ms` virtual milliseconds.
+pub fn sleep_ms(ms: f64) {
+    if ms <= 0.0 {
+        return;
+    }
+    let real = ms * config::global().time_scale;
+    std::thread::sleep(Duration::from_secs_f64(real / 1e3));
+}
+
+/// Sleep whatever is left of a modeled service time after `spent_real`
+/// already elapsed doing real work (e.g. actual PJRT execution).  This is
+/// how executors enforce calibrated service times while still producing
+/// real outputs: compute first, pad to the profile.
+pub fn pad_to_ms(modeled_ms: f64, started: Instant) {
+    let scale = config::global().time_scale;
+    let budget = Duration::from_secs_f64(modeled_ms * scale / 1e3);
+    let spent = started.elapsed();
+    if budget > spent {
+        std::thread::sleep(budget - spent);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clock_advances() {
+        let c = Clock::new();
+        sleep_ms(5.0);
+        let t = c.now_ms();
+        assert!(t >= 5.0 * 0.9, "t={t}");
+        assert!(t < 500.0, "t={t}");
+    }
+
+    #[test]
+    fn zero_and_negative_sleep_are_free() {
+        let t0 = Instant::now();
+        sleep_ms(0.0);
+        sleep_ms(-3.0);
+        assert!(t0.elapsed() < Duration::from_millis(5));
+    }
+
+    #[test]
+    fn pad_to_accounts_for_work_done() {
+        let start = Instant::now();
+        std::thread::sleep(Duration::from_millis(4));
+        pad_to_ms(8.0 / config::global().time_scale, start);
+        let el = start.elapsed().as_secs_f64() * 1e3;
+        assert!(el >= 7.0, "elapsed={el}");
+        assert!(el < 200.0, "elapsed={el}");
+    }
+
+    #[test]
+    fn pad_to_noop_when_overspent() {
+        let start = Instant::now();
+        std::thread::sleep(Duration::from_millis(3));
+        let before = start.elapsed();
+        pad_to_ms(0.5, start);
+        // Should not have added meaningful extra sleep.
+        assert!(start.elapsed() - before < Duration::from_millis(2));
+    }
+}

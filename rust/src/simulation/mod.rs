@@ -1,0 +1,5 @@
+//! Simulated-testbed substrates: the virtual clock that scales modeled
+//! delays, and the calibrated accelerator service-time model.
+
+pub mod clock;
+pub mod gpu;

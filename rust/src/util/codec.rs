@@ -1,0 +1,276 @@
+//! Minimal little-endian binary codec.
+//!
+//! Tables and KVS values are serialized with this codec whenever they cross
+//! a (simulated) machine boundary; the byte counts it produces drive the
+//! network cost model, so it must account every payload byte faithfully.
+
+use anyhow::{bail, Context, Result};
+
+#[derive(Debug, Default)]
+pub struct Writer {
+    buf: Vec<u8>,
+}
+
+impl Writer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn with_capacity(n: usize) -> Self {
+        Writer { buf: Vec::with_capacity(n) }
+    }
+
+    pub fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn i64(&mut self, v: i64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn f32(&mut self, v: f32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn bytes(&mut self, v: &[u8]) {
+        self.u32(v.len() as u32);
+        self.buf.extend_from_slice(v);
+    }
+
+    pub fn str(&mut self, v: &str) {
+        self.bytes(v.as_bytes());
+    }
+
+    pub fn f32s(&mut self, v: &[f32]) {
+        self.u32(v.len() as u32);
+        // Bulk copy: safe because f32 is POD and we fix little-endian.
+        for chunk in v {
+            self.buf.extend_from_slice(&chunk.to_le_bytes());
+        }
+    }
+
+    pub fn i32s(&mut self, v: &[i32]) {
+        self.u32(v.len() as u32);
+        for chunk in v {
+            self.buf.extend_from_slice(&chunk.to_le_bytes());
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn finish(self) -> Vec<u8> {
+        self.buf
+    }
+}
+
+#[derive(Debug)]
+pub struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Reader { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            bail!(
+                "codec underrun: need {n} bytes at {} of {}",
+                self.pos,
+                self.buf.len()
+            );
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn i64(&mut self) -> Result<i64> {
+        Ok(i64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn bytes(&mut self) -> Result<&'a [u8]> {
+        let n = self.u32()? as usize;
+        self.take(n)
+    }
+
+    pub fn str(&mut self) -> Result<String> {
+        let b = self.bytes()?;
+        String::from_utf8(b.to_vec()).context("invalid utf8 in codec string")
+    }
+
+    pub fn f32s(&mut self) -> Result<Vec<f32>> {
+        let n = self.u32()? as usize;
+        let raw = self.take(n * 4)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    pub fn i32s(&mut self) -> Result<Vec<i32>> {
+        let n = self.u32()? as usize;
+        let raw = self.take(n * 4)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    pub fn done(&self) -> Result<()> {
+        if self.remaining() != 0 {
+            bail!("codec trailing bytes: {}", self.remaining());
+        }
+        Ok(())
+    }
+}
+
+/// Reinterpret f32 slice as raw little-endian bytes (zero-copy helper for
+/// literal construction on the PJRT path).
+pub fn f32s_as_bytes(v: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(v.len() * 4);
+    for x in v {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    out
+}
+
+pub fn bytes_as_f32s(b: &[u8]) -> Result<Vec<f32>> {
+    if b.len() % 4 != 0 {
+        bail!("byte length {} not divisible by 4", b.len());
+    }
+    Ok(b.chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_scalars() {
+        let mut w = Writer::new();
+        w.u8(7);
+        w.u32(0xDEADBEEF);
+        w.u64(u64::MAX);
+        w.i64(-42);
+        w.f64(3.25);
+        w.f32(-1.5);
+        let buf = w.finish();
+        let mut r = Reader::new(&buf);
+        assert_eq!(r.u8().unwrap(), 7);
+        assert_eq!(r.u32().unwrap(), 0xDEADBEEF);
+        assert_eq!(r.u64().unwrap(), u64::MAX);
+        assert_eq!(r.i64().unwrap(), -42);
+        assert_eq!(r.f64().unwrap(), 3.25);
+        assert_eq!(r.f32().unwrap(), -1.5);
+        r.done().unwrap();
+    }
+
+    #[test]
+    fn roundtrip_composites() {
+        let mut w = Writer::new();
+        w.str("héllo");
+        w.bytes(&[1, 2, 3]);
+        w.f32s(&[1.0, 2.0, 3.0]);
+        w.i32s(&[-1, 0, 1]);
+        let buf = w.finish();
+        let mut r = Reader::new(&buf);
+        assert_eq!(r.str().unwrap(), "héllo");
+        assert_eq!(r.bytes().unwrap(), &[1, 2, 3]);
+        assert_eq!(r.f32s().unwrap(), vec![1.0, 2.0, 3.0]);
+        assert_eq!(r.i32s().unwrap(), vec![-1, 0, 1]);
+        r.done().unwrap();
+    }
+
+    #[test]
+    fn underrun_errors() {
+        let buf = [1u8, 2];
+        let mut r = Reader::new(&buf);
+        assert!(r.u64().is_err());
+    }
+
+    #[test]
+    fn trailing_detected() {
+        let mut w = Writer::new();
+        w.u32(1);
+        w.u32(2);
+        let buf = w.finish();
+        let mut r = Reader::new(&buf);
+        r.u32().unwrap();
+        assert!(r.done().is_err());
+    }
+
+    #[test]
+    fn truncated_composite_errors() {
+        let mut w = Writer::new();
+        w.f32s(&[1.0; 8]);
+        let mut buf = w.finish();
+        buf.truncate(buf.len() - 3);
+        let mut r = Reader::new(&buf);
+        assert!(r.f32s().is_err());
+    }
+
+    #[test]
+    fn f32_bytes_roundtrip() {
+        let v = vec![1.5f32, -2.25, 0.0, f32::MAX];
+        assert_eq!(bytes_as_f32s(&f32s_as_bytes(&v)).unwrap(), v);
+        assert!(bytes_as_f32s(&[0, 1, 2]).is_err());
+    }
+
+    #[test]
+    fn empty_string_and_bytes() {
+        let mut w = Writer::new();
+        w.str("");
+        w.bytes(&[]);
+        let buf = w.finish();
+        let mut r = Reader::new(&buf);
+        assert_eq!(r.str().unwrap(), "");
+        assert_eq!(r.bytes().unwrap(), &[] as &[u8]);
+    }
+}

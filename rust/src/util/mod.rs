@@ -1,0 +1,9 @@
+//! Standard-library substrates: the offline build environment ships no
+//! general-purpose crates (no rand/serde/criterion/proptest), so the small
+//! pieces we need are implemented here and tested in place.
+
+pub mod codec;
+pub mod json;
+pub mod quickcheck;
+pub mod rng;
+pub mod stats;

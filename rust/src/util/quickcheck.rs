@@ -1,0 +1,120 @@
+//! In-repo property-testing helper (proptest is unavailable offline).
+//!
+//! `check("name", iters, |rng| { ... })` runs a closure over many seeded
+//! RNG streams; a failure reports the reproducing seed.  Generators are
+//! just methods on [`crate::util::rng::Rng`] plus the combinators below.
+
+use crate::util::rng::Rng;
+
+/// Run `f` for `iters` deterministic cases. `f` returns `Err(msg)` to fail.
+/// Panics with the failing case's seed so it can be replayed with
+/// [`replay`].
+pub fn check<F>(name: &str, iters: u64, mut f: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    for case in 0..iters {
+        let seed = fnv(name) ^ case.wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = f(&mut rng) {
+            panic!("property {name:?} failed at case {case} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Re-run a single failing case by seed (for debugging).
+pub fn replay<F>(seed: u64, mut f: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    let mut rng = Rng::new(seed);
+    if let Err(msg) = f(&mut rng) {
+        panic!("replay of seed {seed:#x} failed: {msg}");
+    }
+}
+
+/// Assert helper producing property-style error strings.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !$cond {
+            return Err(format!($($fmt)+));
+        }
+    };
+}
+
+/// Generate a vector with length in [0, max_len] using `g`.
+pub fn vec_of<T>(rng: &mut Rng, max_len: usize, mut g: impl FnMut(&mut Rng) -> T) -> Vec<T> {
+    let n = rng.below(max_len as u64 + 1) as usize;
+    (0..n).map(|_| g(rng)).collect()
+}
+
+/// Generate a short ascii identifier.
+pub fn ident(rng: &mut Rng) -> String {
+    let n = 1 + rng.below(8) as usize;
+    (0..n)
+        .map(|_| (b'a' + rng.below(26) as u8) as char)
+        .collect()
+}
+
+fn fnv(s: &str) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property() {
+        check("add commutes", 50, |r| {
+            let (a, b) = (r.range(-100, 100), r.range(-100, 100));
+            prop_assert!(a + b == b + a, "{a}+{b}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "always fails")]
+    fn failing_property_panics_with_seed() {
+        check("always fails", 5, |_r| Err("always fails".into()));
+    }
+
+    #[test]
+    fn vec_of_respects_bounds() {
+        check("vec_of len", 50, |r| {
+            let v = vec_of(r, 10, |r| r.f64());
+            prop_assert!(v.len() <= 10, "len {}", v.len());
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn ident_nonempty_ascii() {
+        check("ident", 50, |r| {
+            let s = ident(r);
+            prop_assert!(!s.is_empty() && s.is_ascii(), "{s:?}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let mut first = Vec::new();
+        check("det", 10, |r| {
+            first.push(r.next_u64());
+            Ok(())
+        });
+        let mut second = Vec::new();
+        check("det", 10, |r| {
+            second.push(r.next_u64());
+            Ok(())
+        });
+        assert_eq!(first, second);
+    }
+}

@@ -1,0 +1,220 @@
+//! Deterministic PRNG (SplitMix64) plus the distributions the benchmarks
+//! need: uniform, normal (Box–Muller), and Gamma (Marsaglia–Tsang), the
+//! latter driving the paper's Fig 5 competitive-execution workload.
+
+/// SplitMix64: tiny, fast, splittable, and good enough for workload
+/// generation and property tests (not cryptographic).
+#[derive(Debug, Clone)]
+pub struct Rng {
+    state: u64,
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        Rng { state: seed.wrapping_add(0x9E3779B97F4A7C15) }
+    }
+
+    /// Derive an independent stream (for per-thread/per-request seeding).
+    pub fn split(&mut self) -> Rng {
+        Rng::new(self.next_u64())
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform in [0, 1).
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Uniform integer in [0, n).
+    pub fn below(&mut self, n: u64) -> u64 {
+        // Rejection-free modulo is fine at our scales.
+        if n == 0 { 0 } else { self.next_u64() % n }
+    }
+
+    /// Uniform in [lo, hi).
+    pub fn range_f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.f64() * (hi - lo)
+    }
+
+    /// Uniform integer in [lo, hi].
+    pub fn range(&mut self, lo: i64, hi: i64) -> i64 {
+        debug_assert!(lo <= hi);
+        lo + self.below((hi - lo + 1) as u64) as i64
+    }
+
+    pub fn bool(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// Standard normal via Box–Muller.
+    pub fn normal(&mut self) -> f64 {
+        let u1 = self.f64().max(1e-12);
+        let u2 = self.f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Gamma(shape k, scale theta) via Marsaglia–Tsang (k >= 1 fast path,
+    /// boost for k < 1).
+    pub fn gamma(&mut self, k: f64, theta: f64) -> f64 {
+        assert!(k > 0.0 && theta > 0.0);
+        if k < 1.0 {
+            let u = self.f64().max(1e-12);
+            return self.gamma(k + 1.0, theta) * u.powf(1.0 / k);
+        }
+        let d = k - 1.0 / 3.0;
+        let c = 1.0 / (9.0 * d).sqrt();
+        loop {
+            let x = self.normal();
+            let v = (1.0 + c * x).powi(3);
+            if v <= 0.0 {
+                continue;
+            }
+            let u = self.f64();
+            if u < 1.0 - 0.0331 * x.powi(4)
+                || u.ln() < 0.5 * x * x + d * (1.0 - v + v.ln())
+            {
+                return d * v * theta;
+            }
+        }
+    }
+
+    /// Exponential with given mean.
+    pub fn exp(&mut self, mean: f64) -> f64 {
+        -mean * self.f64().max(1e-12).ln()
+    }
+
+    pub fn choice<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.below(xs.len() as u64) as usize]
+    }
+
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i as u64 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// Deterministic byte blob (payload generation).
+    pub fn bytes(&mut self, n: usize) -> Vec<u8> {
+        let mut out = Vec::with_capacity(n);
+        while out.len() < n {
+            out.extend_from_slice(&self.next_u64().to_le_bytes());
+        }
+        out.truncate(n);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Rng::new(7);
+        let mut b = Rng::new(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn seeds_differ() {
+        assert_ne!(Rng::new(1).next_u64(), Rng::new(2).next_u64());
+    }
+
+    #[test]
+    fn uniform_mean() {
+        let mut r = Rng::new(3);
+        let n = 20_000;
+        let mean: f64 = (0..n).map(|_| r.f64()).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(4);
+        let n = 50_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.05, "var={var}");
+    }
+
+    #[test]
+    fn gamma_moments() {
+        // Fig 5 parameters: k=3, theta in {1,2,4}; mean = k*theta,
+        // var = k*theta^2.
+        let mut r = Rng::new(5);
+        for theta in [1.0, 2.0, 4.0] {
+            let n = 50_000;
+            let xs: Vec<f64> = (0..n).map(|_| r.gamma(3.0, theta)).collect();
+            let mean = xs.iter().sum::<f64>() / n as f64;
+            let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
+            assert!((mean - 3.0 * theta).abs() / (3.0 * theta) < 0.03);
+            assert!((var - 3.0 * theta * theta).abs() / (3.0 * theta * theta) < 0.1);
+        }
+    }
+
+    #[test]
+    fn gamma_small_shape() {
+        let mut r = Rng::new(6);
+        let n = 30_000;
+        let mean: f64 = (0..n).map(|_| r.gamma(0.5, 2.0)).sum::<f64>() / n as f64;
+        assert!((mean - 1.0).abs() < 0.05, "mean={mean}");
+    }
+
+    #[test]
+    fn below_bounds() {
+        let mut r = Rng::new(8);
+        for _ in 0..1000 {
+            assert!(r.below(10) < 10);
+        }
+        assert_eq!(r.below(0), 0);
+        assert_eq!(r.below(1), 0);
+    }
+
+    #[test]
+    fn range_inclusive() {
+        let mut r = Rng::new(9);
+        let mut seen = [false; 5];
+        for _ in 0..500 {
+            let v = r.range(2, 6);
+            assert!((2..=6).contains(&v));
+            seen[(v - 2) as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(10);
+        let mut v: Vec<u32> = (0..50).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn bytes_len_and_determinism() {
+        assert_eq!(Rng::new(1).bytes(13).len(), 13);
+        assert_eq!(Rng::new(1).bytes(64), Rng::new(1).bytes(64));
+    }
+
+    #[test]
+    fn split_streams_independent() {
+        let mut a = Rng::new(11);
+        let mut s1 = a.split();
+        let mut s2 = a.split();
+        assert_ne!(s1.next_u64(), s2.next_u64());
+    }
+}

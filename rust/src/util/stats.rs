@@ -1,0 +1,279 @@
+//! Latency/throughput statistics: percentile summaries for the paper's
+//! median/p99 reporting and bucketed timelines for Fig 6.
+
+use std::time::Duration;
+
+/// A collection of latency samples (in *virtual* milliseconds, i.e. already
+/// divided by the time scale) with percentile queries.
+#[derive(Debug, Clone, Default)]
+pub struct Summary {
+    samples: Vec<f64>,
+    sorted: bool,
+}
+
+impl Summary {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn from_durations(ds: &[Duration]) -> Self {
+        let mut s = Self::new();
+        for d in ds {
+            s.add(d.as_secs_f64() * 1e3);
+        }
+        s
+    }
+
+    pub fn add(&mut self, ms: f64) {
+        self.samples.push(ms);
+        self.sorted = false;
+    }
+
+    pub fn merge(&mut self, other: &Summary) {
+        self.samples.extend_from_slice(&other.samples);
+        self.sorted = false;
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    fn ensure_sorted(&mut self) {
+        if !self.sorted {
+            self.samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            self.sorted = true;
+        }
+    }
+
+    /// Linear-interpolated percentile, q in [0, 100].
+    pub fn percentile(&mut self, q: f64) -> f64 {
+        assert!((0.0..=100.0).contains(&q));
+        if self.samples.is_empty() {
+            return f64::NAN;
+        }
+        self.ensure_sorted();
+        let n = self.samples.len();
+        if n == 1 {
+            return self.samples[0];
+        }
+        let pos = q / 100.0 * (n - 1) as f64;
+        let lo = pos.floor() as usize;
+        let hi = pos.ceil() as usize;
+        let frac = pos - lo as f64;
+        self.samples[lo] * (1.0 - frac) + self.samples[hi] * frac
+    }
+
+    pub fn median(&mut self) -> f64 {
+        self.percentile(50.0)
+    }
+
+    pub fn p99(&mut self) -> f64 {
+        self.percentile(99.0)
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return f64::NAN;
+        }
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+
+    pub fn min(&mut self) -> f64 {
+        self.percentile(0.0)
+    }
+
+    pub fn max(&mut self) -> f64 {
+        self.percentile(100.0)
+    }
+
+    /// The paper's standard row: median and 99th percentile.
+    pub fn report(&mut self) -> (f64, f64) {
+        (self.median(), self.p99())
+    }
+
+    /// Five-number summary used by Fig 5 (p1/p25/p50/p75/p99).
+    pub fn whiskers(&mut self) -> [f64; 5] {
+        [
+            self.percentile(1.0),
+            self.percentile(25.0),
+            self.percentile(50.0),
+            self.percentile(75.0),
+            self.percentile(99.0),
+        ]
+    }
+}
+
+/// Time-bucketed counters for the Fig 6 timeline (latency, throughput and
+/// replica allocation per second).
+#[derive(Debug)]
+pub struct Timeline {
+    bucket_ms: f64,
+    buckets: Vec<Summary>,
+    counts: Vec<usize>,
+}
+
+impl Timeline {
+    pub fn new(bucket_ms: f64, horizon_ms: f64) -> Self {
+        let n = (horizon_ms / bucket_ms).ceil() as usize + 1;
+        Timeline {
+            bucket_ms,
+            buckets: (0..n).map(|_| Summary::new()).collect(),
+            counts: vec![0; n],
+        }
+    }
+
+    /// Record a request that *completed* at `t_ms` with latency `lat_ms`.
+    pub fn record(&mut self, t_ms: f64, lat_ms: f64) {
+        let idx = (t_ms / self.bucket_ms) as usize;
+        if idx < self.buckets.len() {
+            self.buckets[idx].add(lat_ms);
+            self.counts[idx] += 1;
+        }
+    }
+
+    pub fn n_buckets(&self) -> usize {
+        self.buckets.len()
+    }
+
+    /// (bucket start ms, median latency ms, throughput req/s).
+    pub fn rows(&mut self) -> Vec<(f64, f64, f64)> {
+        let per_sec = 1000.0 / self.bucket_ms;
+        (0..self.buckets.len())
+            .map(|i| {
+                (
+                    i as f64 * self.bucket_ms,
+                    self.buckets[i].median(),
+                    self.counts[i] as f64 * per_sec,
+                )
+            })
+            .collect()
+    }
+}
+
+/// Format a millisecond quantity the way the paper's tables do.
+pub fn fmt_ms(ms: f64) -> String {
+    if ms.is_nan() {
+        "-".to_string()
+    } else if ms >= 1000.0 {
+        format!("{:.2}s", ms / 1000.0)
+    } else if ms >= 10.0 {
+        format!("{:.0}ms", ms)
+    } else {
+        format!("{:.1}ms", ms)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_exact() {
+        let mut s = Summary::new();
+        for v in [1.0, 2.0, 3.0, 4.0, 5.0] {
+            s.add(v);
+        }
+        assert_eq!(s.median(), 3.0);
+        assert_eq!(s.percentile(0.0), 1.0);
+        assert_eq!(s.percentile(100.0), 5.0);
+        assert_eq!(s.percentile(25.0), 2.0);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let mut s = Summary::new();
+        s.add(0.0);
+        s.add(10.0);
+        assert!((s.median() - 5.0).abs() < 1e-9);
+        assert!((s.percentile(99.0) - 9.9).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_is_nan() {
+        let mut s = Summary::new();
+        assert!(s.median().is_nan());
+        assert!(s.mean().is_nan());
+    }
+
+    #[test]
+    fn single_sample() {
+        let mut s = Summary::new();
+        s.add(7.0);
+        assert_eq!(s.median(), 7.0);
+        assert_eq!(s.p99(), 7.0);
+    }
+
+    #[test]
+    fn unordered_input() {
+        let mut s = Summary::new();
+        for v in [9.0, 1.0, 5.0, 3.0, 7.0] {
+            s.add(v);
+        }
+        assert_eq!(s.median(), 5.0);
+    }
+
+    #[test]
+    fn merge_combines() {
+        let mut a = Summary::new();
+        a.add(1.0);
+        let mut b = Summary::new();
+        b.add(3.0);
+        a.merge(&b);
+        assert_eq!(a.len(), 2);
+        assert!((a.median() - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn whiskers_ordered() {
+        let mut s = Summary::new();
+        let mut r = crate::util::rng::Rng::new(1);
+        for _ in 0..1000 {
+            s.add(r.f64() * 100.0);
+        }
+        let w = s.whiskers();
+        for i in 1..5 {
+            assert!(w[i] >= w[i - 1]);
+        }
+    }
+
+    #[test]
+    fn timeline_buckets() {
+        let mut t = Timeline::new(1000.0, 10_000.0);
+        t.record(500.0, 10.0);
+        t.record(700.0, 20.0);
+        t.record(1500.0, 30.0);
+        let rows = t.rows();
+        assert_eq!(rows[0].1, 15.0); // median of 10,20
+        assert_eq!(rows[0].2, 2.0); // 2 per second
+        assert_eq!(rows[1].1, 30.0);
+        assert!(rows[2].1.is_nan());
+    }
+
+    #[test]
+    fn timeline_out_of_horizon_dropped() {
+        let mut t = Timeline::new(1000.0, 2000.0);
+        t.record(99_000.0, 1.0); // silently dropped
+        assert!(t.rows().iter().all(|r| r.2 == 0.0 || r.1.is_nan()));
+    }
+
+    #[test]
+    fn fmt_ms_ranges() {
+        assert_eq!(fmt_ms(f64::NAN), "-");
+        assert_eq!(fmt_ms(3.25), "3.2ms");
+        assert_eq!(fmt_ms(42.0), "42ms");
+        assert_eq!(fmt_ms(1234.0), "1.23s");
+    }
+
+    #[test]
+    fn from_durations() {
+        let mut s = Summary::from_durations(&[
+            Duration::from_millis(10),
+            Duration::from_millis(20),
+        ]);
+        assert!((s.median() - 15.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,196 @@
+//! Deterministic synthetic data with the paper's shapes and sizes:
+//! 64×64×3 "ImageNet-like" images, 30-frame video clips, token sequences,
+//! char-histogram language features, and the recommender's user vectors +
+//! product-category matrices (placed in the KVS).
+
+use std::sync::Arc;
+
+use crate::anna::KvsClient;
+use crate::dataflow::table::{DType, Schema, Table, Value};
+use crate::util::codec::f32s_as_bytes;
+use crate::util::rng::Rng;
+
+pub const IMG_ELEMS: usize = 64 * 64 * 3;
+pub const CLIP_FRAMES: usize = 30;
+pub const SEQ_LEN: usize = 32;
+pub const VOCAB: usize = 512;
+pub const LANG_FEATS: usize = 128;
+pub const USER_DIM: usize = 512;
+pub const N_PRODUCTS: usize = 2500;
+
+/// Raw image pixels in [0, 255].
+pub fn image(rng: &mut Rng) -> Arc<Vec<f32>> {
+    Arc::new((0..IMG_ELEMS).map(|_| (rng.f64() * 255.0) as f32).collect())
+}
+
+/// A 1-second clip: `CLIP_FRAMES` correlated frames (consecutive frames
+/// share a base image plus noise, like real video).
+pub fn clip(rng: &mut Rng) -> Vec<Arc<Vec<f32>>> {
+    let base = image(rng);
+    (0..CLIP_FRAMES)
+        .map(|_| {
+            Arc::new(
+                base.iter()
+                    .map(|&p| (p + (rng.f64() as f32 - 0.5) * 40.0).clamp(0.0, 255.0))
+                    .collect(),
+            )
+        })
+        .collect()
+}
+
+/// Token id sequence for the NMT pipeline.
+pub fn tokens(rng: &mut Rng) -> Arc<Vec<i32>> {
+    Arc::new((0..SEQ_LEN).map(|_| rng.below(VOCAB as u64) as i32).collect())
+}
+
+/// Char-histogram features for language identification.
+pub fn char_hist(rng: &mut Rng) -> Arc<Vec<f32>> {
+    let total: f64 = 200.0;
+    let mut h = vec![0.0f32; LANG_FEATS];
+    for _ in 0..total as usize {
+        h[rng.below(LANG_FEATS as u64) as usize] += 1.0 / total as f32;
+    }
+    Arc::new(h)
+}
+
+/// Opaque payload of exactly `n` bytes (fusion/locality microbenchmarks).
+pub fn payload(rng: &mut Rng, n: usize) -> Vec<u8> {
+    rng.bytes(n)
+}
+
+/// Single-column blob input table for the synthetic chains.
+pub fn payload_table(rng: &mut Rng, bytes: usize) -> Table {
+    let mut t = Table::new(Schema::new(vec![("payload", DType::Blob)]));
+    t.push_fresh(vec![Value::blob(payload(rng, bytes))]).unwrap();
+    t
+}
+
+/// Image input table (`img` column), `n` rows.
+pub fn image_table(rng: &mut Rng, n: usize) -> Table {
+    let mut t = Table::new(Schema::new(vec![("img", DType::F32s)]));
+    for _ in 0..n {
+        t.push_fresh(vec![Value::F32s(image(rng))]).unwrap();
+    }
+    t
+}
+
+/// Video input: one row per frame of a clip.
+pub fn clip_table(rng: &mut Rng) -> Table {
+    let mut t = Table::new(Schema::new(vec![("img", DType::F32s)]));
+    for frame in clip(rng) {
+        t.push_fresh(vec![Value::F32s(frame)]).unwrap();
+    }
+    t
+}
+
+/// NMT input: char histogram + tokens.
+pub fn nmt_table(rng: &mut Rng, n: usize) -> Table {
+    let mut t = Table::new(Schema::new(vec![
+        ("text", DType::F32s),
+        ("tokens", DType::I32s),
+    ]));
+    for _ in 0..n {
+        t.push_fresh(vec![Value::F32s(char_hist(rng)), Value::I32s(tokens(rng))])
+            .unwrap();
+    }
+    t
+}
+
+/// Recommender request: a user id and recent click ids.
+pub fn recsys_table(rng: &mut Rng, n_users: usize, n_categories: usize) -> Table {
+    let mut t = Table::new(Schema::new(vec![
+        ("user_key", DType::Str),
+        ("clicks", DType::I32s),
+        ("cat_key", DType::Str),
+    ]));
+    let user = rng.below(n_users as u64);
+    let clicks: Vec<i32> = (0..8).map(|_| rng.below(10_000) as i32).collect();
+    // The clicked items determine the category (paper: "based on the set
+    // of recently clicked items, we generate a product category").
+    let cat = clicks.iter().map(|&c| c as u64).sum::<u64>() % n_categories as u64;
+    t.push_fresh(vec![
+        Value::Str(format!("user-{user}")),
+        Value::i32s(clicks),
+        Value::Str(format!("category-{cat}")),
+    ])
+    .unwrap();
+    t
+}
+
+/// Populate the KVS with recommender state: `user-<i>` weight vectors
+/// (512 f32 ≈ 2KB; paper: 4KB) and `category-<j>` product matrices
+/// (2500×512 f32 ≈ 5MB; paper: ~10MB — halved with the f32 model zoo,
+/// which preserves the "categories dwarf everything else" shape).
+pub fn setup_recsys(kvs: &KvsClient, rng: &mut Rng, n_users: usize, n_categories: usize) {
+    for u in 0..n_users {
+        let vec: Vec<f32> = (0..USER_DIM).map(|_| rng.normal() as f32 * 0.1).collect();
+        kvs.put_free(&format!("user-{u}"), f32s_as_bytes(&vec));
+    }
+    for c in 0..n_categories {
+        let mat: Vec<f32> = (0..N_PRODUCTS * USER_DIM)
+            .map(|_| rng.normal() as f32 * 0.05)
+            .collect();
+        kvs.put_free(&format!("category-{c}"), f32s_as_bytes(&mat));
+    }
+}
+
+/// Fixed-size objects for the Fig 7 locality benchmark: `obj-<i>`.
+pub fn setup_locality_objects(kvs: &KvsClient, rng: &mut Rng, n: usize, bytes: usize) {
+    let floats = bytes / 4;
+    for i in 0..n {
+        let v: Vec<f32> = (0..floats).map(|_| rng.f64() as f32).collect();
+        kvs.put_free(&format!("obj-{i}"), f32s_as_bytes(&v));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_determinism() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(1);
+        assert_eq!(image(&mut a), image(&mut b));
+        assert_eq!(image(&mut a).len(), IMG_ELEMS);
+        assert_eq!(clip(&mut a).len(), CLIP_FRAMES);
+        assert_eq!(tokens(&mut a).len(), SEQ_LEN);
+        assert!(tokens(&mut a).iter().all(|&t| (0..VOCAB as i32).contains(&t)));
+        let h = char_hist(&mut a);
+        assert!((h.iter().sum::<f32>() - 1.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn payload_sizes_exact() {
+        let mut r = Rng::new(2);
+        for n in [8_192, 100_000, 10_000_000] {
+            assert_eq!(payload(&mut r, n).len(), n);
+        }
+        let t = payload_table(&mut r, 10_000);
+        assert!(t.size_bytes() >= 10_000);
+    }
+
+    #[test]
+    fn tables_typecheck() {
+        let mut r = Rng::new(3);
+        assert_eq!(image_table(&mut r, 4).len(), 4);
+        assert_eq!(clip_table(&mut r).len(), CLIP_FRAMES);
+        assert_eq!(nmt_table(&mut r, 2).len(), 2);
+        let t = recsys_table(&mut r, 100, 8);
+        let cat = t.value(0, "cat_key").unwrap().as_str().unwrap().to_string();
+        assert!(cat.starts_with("category-"));
+    }
+
+    #[test]
+    fn recsys_setup_populates_kvs() {
+        let store = std::sync::Arc::new(crate::anna::Store::new(2));
+        let kvs = KvsClient::direct(store, crate::net::NodeId::CLIENT);
+        let mut r = Rng::new(4);
+        setup_recsys(&kvs, &mut r, 3, 2);
+        assert_eq!(kvs.get_uncached("user-0").unwrap().len(), USER_DIM * 4);
+        assert_eq!(
+            kvs.get_uncached("category-1").unwrap().len(),
+            N_PRODUCTS * USER_DIM * 4
+        );
+    }
+}

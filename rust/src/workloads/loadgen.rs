@@ -1,0 +1,165 @@
+//! Load generators matching the paper's benchmark methodology (§5.2.2):
+//! closed-loop client pools reporting median/p99 latency and throughput,
+//! plus an open-loop phase driver for the Fig 6 load spike.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::cloudburst::{Cluster, DagHandle};
+use crate::dataflow::table::Table;
+use crate::simulation::clock::Clock;
+use crate::util::stats::Summary;
+
+#[derive(Debug)]
+pub struct LoadResult {
+    pub latencies: Summary,
+    /// Virtual wall time of the measured window, ms.
+    pub wall_ms: f64,
+    pub completed: usize,
+    pub errors: usize,
+}
+
+impl LoadResult {
+    pub fn throughput_rps(&self) -> f64 {
+        self.completed as f64 / (self.wall_ms / 1e3)
+    }
+
+    /// The paper's standard row: (median ms, p99 ms, requests/s).
+    pub fn report(&mut self) -> (f64, f64, f64) {
+        let (med, p99) = self.latencies.report();
+        (med, p99, self.throughput_rps())
+    }
+}
+
+/// Run `total` requests from `clients` closed-loop threads; per-request
+/// inputs come from `make_input(request_index)`.
+pub fn closed_loop(
+    cluster: &Cluster,
+    h: DagHandle,
+    clients: usize,
+    total: usize,
+    make_input: impl Fn(usize) -> Table + Sync,
+) -> LoadResult {
+    let clock = Clock::new();
+    let next = AtomicUsize::new(0);
+    let lat = Mutex::new(Summary::new());
+    let errors = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for _ in 0..clients.max(1) {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= total {
+                    return;
+                }
+                let t0 = Clock::new();
+                let r = cluster
+                    .execute(h, make_input(i))
+                    .and_then(|f| f.result());
+                match r {
+                    Ok(_) => lat.lock().unwrap().add(t0.now_ms()),
+                    Err(e) => {
+                        log::warn!("request {i} failed: {e:#}");
+                        errors.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            });
+        }
+    });
+    let latencies = lat.into_inner().unwrap();
+    LoadResult {
+        completed: latencies.len(),
+        errors: errors.into_inner(),
+        latencies,
+        wall_ms: clock.now_ms(),
+    }
+}
+
+/// Closed-loop phase that runs for a fixed *virtual* duration instead of a
+/// request count (Fig 6's pre/post-spike phases). Returns when the clock
+/// passes `duration_ms`.
+pub fn timed_phase(
+    cluster: &Cluster,
+    h: DagHandle,
+    clients: usize,
+    duration_ms: f64,
+    make_input: impl Fn(usize) -> Table + Sync,
+) -> LoadResult {
+    let clock = Clock::new();
+    let next = AtomicUsize::new(0);
+    let lat = Mutex::new(Summary::new());
+    let errors = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for _ in 0..clients.max(1) {
+            s.spawn(|| {
+                while clock.now_ms() < duration_ms {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    let t0 = Clock::new();
+                    match cluster.execute(h, make_input(i)).and_then(|f| f.result()) {
+                        Ok(_) => lat.lock().unwrap().add(t0.now_ms()),
+                        Err(_) => {
+                            errors.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                }
+            });
+        }
+    });
+    let latencies = lat.into_inner().unwrap();
+    LoadResult {
+        completed: latencies.len(),
+        errors: errors.into_inner(),
+        latencies,
+        wall_ms: clock.now_ms(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataflow::compiler::{compile, OptFlags};
+    use crate::dataflow::operator::{Func, SleepDist};
+    use crate::dataflow::table::{DType, Schema, Value};
+    use crate::dataflow::Dataflow;
+
+    fn sleep_flow(ms: f64) -> Dataflow {
+        let mut fl = Dataflow::new("lg", Schema::new(vec![("x", DType::F64)]));
+        let a = fl
+            .map(fl.input(), Func::sleep("s", SleepDist::ConstMs(ms)))
+            .unwrap();
+        fl.set_output(a).unwrap();
+        fl
+    }
+
+    fn one_row(_: usize) -> Table {
+        let mut t = Table::new(Schema::new(vec![("x", DType::F64)]));
+        t.push_fresh(vec![Value::F64(0.0)]).unwrap();
+        t
+    }
+
+    #[test]
+    fn closed_loop_counts_and_latency() {
+        let cluster = Cluster::new(None);
+        let h = cluster
+            .register(compile(&sleep_flow(5.0), &OptFlags::none()).unwrap(), 4)
+            .unwrap();
+        let mut r = closed_loop(&cluster, h, 4, 20, one_row);
+        assert_eq!(r.completed, 20);
+        assert_eq!(r.errors, 0);
+        let (med, p99, rps) = r.report();
+        assert!(med >= 5.0 && med < 200.0, "median={med}");
+        assert!(p99 >= med);
+        assert!(rps > 1.0, "rps={rps}");
+    }
+
+    #[test]
+    fn timed_phase_stops() {
+        let cluster = Cluster::new(None);
+        let h = cluster
+            .register(compile(&sleep_flow(2.0), &OptFlags::none()).unwrap(), 2)
+            .unwrap();
+        let r = timed_phase(&cluster, h, 2, 100.0, one_row);
+        assert!(r.completed > 0);
+        assert!(r.wall_ms >= 100.0);
+        assert!(r.wall_ms < 3_000.0);
+    }
+}

@@ -1,0 +1,9 @@
+//! Workloads: synthetic data generators, the paper's four real-world
+//! pipelines (§5.2.1), and open/closed-loop load generators.
+
+pub mod datagen;
+pub mod loadgen;
+pub mod pipelines;
+
+pub use loadgen::{closed_loop, LoadResult};
+pub use pipelines::PipelineSpec;

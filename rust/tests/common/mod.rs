@@ -1,0 +1,19 @@
+//! Shared helpers for integration tests.
+
+use cloudflow::runtime::{InferClient, InferenceService, Manifest};
+
+/// Start the inference service against the repo artifacts, or return None
+/// (tests print a skip note) when `make artifacts` hasn't run.
+pub fn infer_or_skip() -> Option<InferClient> {
+    let dir = Manifest::default_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(InferenceService::start(dir).expect("inference service"))
+}
+
+/// Repo manifest (panics if artifacts missing — call after infer_or_skip).
+pub fn manifest() -> Manifest {
+    Manifest::load(Manifest::default_dir()).expect("manifest")
+}

@@ -1,0 +1,245 @@
+//! Dataflow-layer integration: paper control-flow patterns (§3.2) executed
+//! through the reference executor, and compiler rewrites preserving
+//! semantics end-to-end.
+
+use std::sync::Arc;
+
+use cloudflow::cloudburst::Cluster;
+use cloudflow::dataflow::compiler::{compile, OptFlags};
+use cloudflow::dataflow::operator::{CmpOp, ExecCtx, Func, Predicate, SleepDist};
+use cloudflow::dataflow::table::{DType, Schema, Table, Value};
+use cloudflow::dataflow::{exec_local, AggFn, Dataflow, JoinHow};
+
+fn score_table(rows: &[(&str, f64)]) -> Table {
+    let mut t = Table::new(Schema::new(vec![
+        ("name", DType::Str),
+        ("conf", DType::F64),
+    ]));
+    for (n, c) in rows {
+        t.push_fresh(vec![Value::Str(n.to_string()), Value::F64(*c)]).unwrap();
+    }
+    t
+}
+
+/// The cascade pattern (paper Fig 3) in pure-Rust functions.
+fn cascade_flow(threshold: f64) -> Dataflow {
+    let mut fl = Dataflow::new("cascade", Schema::new(vec![
+        ("name", DType::Str),
+        ("conf", DType::F64),
+    ]));
+    let simple = fl.map(fl.input(), Func::identity("simple")).unwrap();
+    let low = fl
+        .filter(simple, Predicate::threshold("conf", CmpOp::Lt, threshold))
+        .unwrap();
+    let complexm = fl
+        .map(
+            low,
+            Func::rust(
+                "complex",
+                None,
+                Arc::new(|_, t: &Table| {
+                    // complex model doubles confidence (capped)
+                    let mut out = Table::new(t.schema().clone());
+                    for r in t.rows() {
+                        out.push(
+                            r.id,
+                            vec![
+                                r.values[0].clone(),
+                                Value::F64((r.values[1].as_f64().unwrap() * 2.0).min(1.0)),
+                            ],
+                        )
+                        .unwrap();
+                    }
+                    Ok(out)
+                }),
+            ),
+        )
+        .unwrap();
+    let j = fl.join(simple, complexm, None, JoinHow::Left).unwrap();
+    fl.set_output(j).unwrap();
+    fl
+}
+
+#[test]
+fn cascade_pattern_semantics() {
+    let fl = cascade_flow(0.5);
+    let ctx = ExecCtx::local();
+    let input = score_table(&[("high", 0.9), ("low", 0.2)]);
+    let out = exec_local::execute(&fl, input, &ctx).unwrap();
+    assert_eq!(out.len(), 2);
+    // high-confidence row skipped the complex model: right side defaulted
+    let high = out
+        .rows()
+        .iter()
+        .position(|r| r.values[0] == Value::Str("high".into()))
+        .unwrap();
+    assert!(out.value(high, "conf_r").unwrap().as_f64().unwrap().is_nan());
+    let low = 1 - high;
+    assert_eq!(out.value(low, "conf_r").unwrap().as_f64().unwrap(), 0.4);
+}
+
+#[test]
+fn ensemble_pattern_semantics() {
+    // union -> groupby(rowid) -> argmax picks the best model per request.
+    let mut fl = Dataflow::new("ens", Schema::new(vec![
+        ("name", DType::Str),
+        ("conf", DType::F64),
+    ]));
+    let bump = |amount: f64, name: &str| {
+        Func::rust(
+            name,
+            None,
+            Arc::new(move |_, t: &Table| {
+                let mut out = Table::new(t.schema().clone());
+                for r in t.rows() {
+                    out.push(
+                        r.id,
+                        vec![
+                            Value::Str(format!(
+                                "{}@{amount}",
+                                r.values[0].as_str().unwrap()
+                            )),
+                            Value::F64(r.values[1].as_f64().unwrap() * amount),
+                        ],
+                    )
+                    .unwrap();
+                }
+                Ok(out)
+            }),
+        )
+    };
+    let m1 = fl.map(fl.input(), bump(0.5, "m1")).unwrap();
+    let m2 = fl.map(fl.input(), bump(0.9, "m2")).unwrap();
+    let m3 = fl.map(fl.input(), bump(0.7, "m3")).unwrap();
+    let u = fl.union(&[m1, m2, m3]).unwrap();
+    let g = fl.groupby(u, "__rowid").unwrap();
+    let best = fl.agg(g, AggFn::ArgMax, "conf").unwrap();
+    fl.set_output(best).unwrap();
+
+    let out = exec_local::execute(
+        &fl,
+        score_table(&[("a", 0.5), ("b", 1.0)]),
+        &ExecCtx::local(),
+    )
+    .unwrap();
+    assert_eq!(out.len(), 2);
+    for i in 0..2 {
+        let n = out.value(i, "name").unwrap().as_str().unwrap();
+        assert!(n.ends_with("@0.9"), "argmax should pick m2: {n}");
+    }
+}
+
+#[test]
+fn rewrites_preserve_semantics_on_cluster() {
+    // The same flow under four optimization configurations produces
+    // identical tables through the cluster.
+    let fl = cascade_flow(0.6);
+    let input = score_table(&[("w", 0.1), ("x", 0.55), ("y", 0.62), ("z", 0.99)]);
+    let configs = [
+        OptFlags::none(),
+        OptFlags::none().with_fusion(),
+        OptFlags::none().with_fusion().with_fuse_across_devices(),
+        OptFlags::all(),
+    ];
+    let reference = exec_local::execute(&fl, input.clone(), &ExecCtx::local()).unwrap();
+    let canon = |t: &Table| {
+        let mut v: Vec<String> =
+            t.rows().iter().map(|r| format!("{:?}", r.values)).collect();
+        v.sort();
+        v
+    };
+    for opts in configs {
+        let cluster = Cluster::new(None);
+        let h = cluster.register(compile(&fl, &opts).unwrap(), 1).unwrap();
+        let out = cluster.execute(h, input.clone()).unwrap().result().unwrap();
+        assert_eq!(canon(&out), canon(&reference), "opts {opts:?}");
+    }
+}
+
+#[test]
+fn competitive_rewrite_preserves_results() {
+    let mut fl = Dataflow::new("comp", Schema::new(vec![("conf", DType::F64)]));
+    let v = fl
+        .map(
+            fl.input(),
+            Func::sleep(
+                "variable",
+                SleepDist::GammaMs { k: 3.0, theta: 1.0, unit_ms: 3.0, base_ms: 0.0 },
+            ),
+        )
+        .unwrap();
+    let t = fl.map(v, Func::identity("tail")).unwrap();
+    fl.set_output(t).unwrap();
+    let mut inp = Table::new(Schema::new(vec![("conf", DType::F64)]));
+    inp.push_fresh(vec![Value::F64(0.5)]).unwrap();
+    let reference = exec_local::execute(&fl, inp.clone(), &ExecCtx::local()).unwrap();
+    let cluster = Cluster::new(None);
+    let opts = OptFlags::none().with_competitive("variable", 3);
+    let h = cluster.register(compile(&fl, &opts).unwrap(), 1).unwrap();
+    for _ in 0..5 {
+        let out = cluster.execute(h, inp.clone()).unwrap().result().unwrap();
+        assert_eq!(out.len(), reference.len());
+        assert_eq!(out.rows()[0].values, reference.rows()[0].values);
+    }
+}
+
+#[test]
+fn deep_chain_fusion_equivalence() {
+    let mut fl = Dataflow::new("deep", Schema::new(vec![("conf", DType::F64)]));
+    let mut cur = fl.input();
+    for i in 0..10 {
+        cur = fl
+            .map(
+                cur,
+                Func::rust(
+                    &format!("inc{i}"),
+                    None,
+                    Arc::new(|_, t: &Table| {
+                        let mut out = Table::new(t.schema().clone());
+                        for r in t.rows() {
+                            out.push(
+                                r.id,
+                                vec![Value::F64(r.values[0].as_f64().unwrap() + 1.0)],
+                            )
+                            .unwrap();
+                        }
+                        Ok(out)
+                    }),
+                ),
+            )
+            .unwrap();
+    }
+    fl.set_output(cur).unwrap();
+    let mut inp = Table::new(Schema::new(vec![("conf", DType::F64)]));
+    inp.push_fresh(vec![Value::F64(0.0)]).unwrap();
+    let cluster = Cluster::new(None);
+    let h = cluster
+        .register(compile(&fl, &OptFlags::none().with_fusion()).unwrap(), 1)
+        .unwrap();
+    let out = cluster.execute(h, inp).unwrap().result().unwrap();
+    assert_eq!(out.value(0, "conf").unwrap().as_f64().unwrap(), 10.0);
+}
+
+#[test]
+fn grouped_agg_pipeline() {
+    let mut fl = Dataflow::new("counts", Schema::new(vec![
+        ("name", DType::Str),
+        ("conf", DType::F64),
+    ]));
+    let g = fl.groupby(fl.input(), "name").unwrap();
+    let c = fl.agg(g, AggFn::Avg, "conf").unwrap();
+    fl.set_output(c).unwrap();
+    let out = exec_local::execute(
+        &fl,
+        score_table(&[("a", 0.2), ("b", 0.4), ("a", 0.6)]),
+        &ExecCtx::local(),
+    )
+    .unwrap();
+    assert_eq!(out.len(), 2);
+    let a_row = out
+        .rows()
+        .iter()
+        .position(|r| r.values[0] == Value::Str("a".into()))
+        .unwrap();
+    assert!((out.value(a_row, "avg").unwrap().as_f64().unwrap() - 0.4).abs() < 1e-12);
+}

@@ -1,0 +1,213 @@
+//! End-to-end pipeline integration: the paper's four workloads run on the
+//! Cloudburst cluster with real PJRT model execution, under the full
+//! optimization set, and agree with the local reference executor.
+
+mod common;
+
+use cloudflow::cloudburst::Cluster;
+use cloudflow::dataflow::compiler::{compile, OptFlags};
+use cloudflow::dataflow::operator::ExecCtx;
+use cloudflow::dataflow::{exec_local, Table};
+use cloudflow::workloads::pipelines::{self, RecsysScale};
+
+fn run_both(spec: &pipelines::PipelineSpec, opts: &OptFlags, n: usize) -> Vec<(Table, Table)> {
+    let Some(client) = common::infer_or_skip() else { return Vec::new() };
+    let cluster = Cluster::new(Some(client.clone()));
+    if let Some(setup) = &spec.setup {
+        setup(&cluster.kvs());
+    }
+    let plan = compile(&spec.flow, opts).unwrap();
+    let h = cluster.register(plan, 2).unwrap();
+    let mut out = Vec::new();
+    for i in 0..n {
+        let input = (spec.make_input)(i);
+        let clustered = cluster
+            .execute(h, input.clone())
+            .unwrap()
+            .result()
+            .unwrap();
+        // Local oracle with KVS access wired to the same store.
+        let ctx = ExecCtx {
+            kvs: Some(cluster.kvs()),
+            infer: Some(client.clone()),
+            rng: std::sync::Mutex::new(cloudflow::util::rng::Rng::new(7)),
+            device: cloudflow::simulation::gpu::Device::Cpu,
+            timed: false,
+        };
+        let local = exec_local::execute(&spec.flow, input, &ctx).unwrap();
+        out.push((clustered, local));
+    }
+    out
+}
+
+fn assert_equivalent(pairs: &[(Table, Table)], unordered: bool) {
+    for (got, want) in pairs {
+        assert_eq!(got.schema(), want.schema());
+        assert_eq!(got.len(), want.len(), "row count:\n{got}\nvs\n{want}");
+        if unordered {
+            // Compare as multisets of debug-rendered rows.
+            let render = |t: &Table| {
+                let mut v: Vec<String> =
+                    t.rows().iter().map(|r| format!("{:?}", r.values)).collect();
+                v.sort();
+                v
+            };
+            assert_eq!(render(got), render(want));
+        } else {
+            for (a, b) in got.rows().iter().zip(want.rows()) {
+                assert_eq!(a.values, b.values);
+            }
+        }
+    }
+}
+
+#[test]
+fn image_cascade_cluster_matches_oracle() {
+    if common::infer_or_skip().is_none() {
+        return;
+    }
+    let spec = pipelines::image_cascade(&common::manifest()).unwrap();
+    let pairs = run_both(&spec, &OptFlags::all(), 4);
+    assert_equivalent(&pairs, false);
+    // Every output row has a prediction and a confidence in range.
+    for (got, _) in &pairs {
+        let conf = got.value(0, "conf").unwrap().as_f64().unwrap();
+        assert!((0.0..=1.0).contains(&conf));
+    }
+}
+
+#[test]
+fn cascade_actually_cascades() {
+    // With the calibrated threshold, some requests should take the
+    // complex path and some should not.
+    if common::infer_or_skip().is_none() {
+        return;
+    }
+    let man = common::manifest();
+    let spec = pipelines::image_cascade(&man).unwrap();
+    let pairs = run_both(&spec, &OptFlags::all(), 12);
+    let thresh = man.calibration["conf_p60"];
+    let mut above = 0;
+    let mut below = 0;
+    for (got, _) in &pairs {
+        let c = got.value(0, "conf").unwrap().as_f64().unwrap();
+        if c >= thresh {
+            above += 1;
+        } else {
+            below += 1;
+        }
+    }
+    // The final conf is a max over one-or-two models, so most should be
+    // at/above threshold; the split just shouldn't be degenerate.
+    assert!(above > 0, "no request ended above the threshold");
+    assert!(above + below == 12);
+}
+
+#[test]
+fn video_pipeline_counts_classes() {
+    if common::infer_or_skip().is_none() {
+        return;
+    }
+    let spec = pipelines::video_stream().unwrap();
+    let pairs = run_both(&spec, &OptFlags::all(), 2);
+    assert_equivalent(&pairs, true);
+    for (got, _) in &pairs {
+        for (i, _row) in got.rows().iter().enumerate() {
+            let class = got.value(i, "group").unwrap().as_str().unwrap().to_string();
+            assert!(
+                class.starts_with("person-") || class.starts_with("vehicle-"),
+                "{class}"
+            );
+            assert!(got.value(i, "count").unwrap().as_i64().unwrap() > 0);
+        }
+    }
+}
+
+#[test]
+fn nmt_routes_and_translates() {
+    if common::infer_or_skip().is_none() {
+        return;
+    }
+    let spec = pipelines::nmt().unwrap();
+    let pairs = run_both(&spec, &OptFlags::all(), 6);
+    assert_equivalent(&pairs, true);
+    for (got, _) in &pairs {
+        assert_eq!(got.len(), 1); // exactly one translation per request
+        assert_eq!(got.value(0, "out_ids").unwrap().as_i32s().unwrap().len(), 32);
+    }
+}
+
+#[test]
+fn recommender_end_to_end_with_locality() {
+    if common::infer_or_skip().is_none() {
+        return;
+    }
+    let spec =
+        pipelines::recommender(RecsysScale { n_users: 50, n_categories: 4 }).unwrap();
+    let pairs = run_both(&spec, &OptFlags::all(), 5);
+    assert_equivalent(&pairs, false);
+    for (got, _) in &pairs {
+        let idx = got.value(0, "top_idx").unwrap().as_i32s().unwrap();
+        assert_eq!(idx.len(), 10);
+        let scores = got.value(0, "top_scores").unwrap().as_f32s().unwrap();
+        for w in scores.windows(2) {
+            assert!(w[0] >= w[1]);
+        }
+    }
+}
+
+#[test]
+fn ensemble_picks_highest_confidence() {
+    if common::infer_or_skip().is_none() {
+        return;
+    }
+    let spec = pipelines::ensemble().unwrap();
+    let pairs = run_both(&spec, &OptFlags::none().with_fusion(), 3);
+    for (got, local) in &pairs {
+        assert_eq!(got.len(), 1);
+        let got_conf = got.value(0, "conf").unwrap().as_f64().unwrap();
+        let local_conf = local.value(0, "conf").unwrap().as_f64().unwrap();
+        assert!((got_conf - local_conf).abs() < 1e-9);
+    }
+}
+
+#[test]
+fn optimized_and_unoptimized_agree() {
+    if common::infer_or_skip().is_none() {
+        return;
+    }
+    let man = common::manifest();
+    let spec = pipelines::image_cascade(&man).unwrap();
+    let a = run_both(&spec, &OptFlags::none(), 2);
+    let b = run_both(&spec, &OptFlags::all(), 2);
+    for ((ga, _), (gb, _)) in a.iter().zip(&b) {
+        assert_eq!(ga.len(), gb.len());
+        for (ra, rb) in ga.rows().iter().zip(gb.rows()) {
+            assert_eq!(ra.values, rb.values);
+        }
+    }
+}
+
+#[test]
+fn baselines_agree_with_cloudflow_on_cascade() {
+    let Some(client) = common::infer_or_skip() else { return };
+    let man = common::manifest();
+    let spec = pipelines::image_cascade(&man).unwrap();
+    // Cloudflow result
+    let pairs = run_both(&spec, &OptFlags::all(), 2);
+    // Baseline result on the same inputs
+    let b = cloudflow::baselines::Baseline::deploy(
+        &spec.flow,
+        cloudflow::baselines::BaselineKind::Sagemaker,
+        Some(client),
+        true,
+    )
+    .unwrap();
+    for (i, (cf, _)) in pairs.iter().enumerate() {
+        let base = b.execute((spec.make_input)(i)).unwrap();
+        assert_eq!(base.len(), cf.len());
+        for (x, y) in base.rows().iter().zip(cf.rows()) {
+            assert_eq!(x.values, y.values);
+        }
+    }
+}

@@ -1,0 +1,149 @@
+//! Runtime integration: AOT artifacts load, compile and execute through
+//! PJRT with correct shapes, batching semantics and numerics.
+
+mod common;
+
+use std::sync::Arc;
+
+use cloudflow::runtime::{RowVec, Tensor};
+
+#[test]
+fn langid_probabilities() {
+    let Some(client) = common::infer_or_skip() else { return };
+    let feats = Arc::new(vec![0.3f32; 128]);
+    let out = client
+        .run_rows("langid", &[vec![RowVec::F32(feats)]])
+        .unwrap();
+    match &out[0][0] {
+        Tensor::F32 { shape, data } => {
+            assert_eq!(shape, &vec![2]);
+            assert!((data.iter().sum::<f32>() - 1.0).abs() < 1e-4);
+            assert!(data.iter().all(|&p| (0.0..=1.0).contains(&p)));
+        }
+        t => panic!("unexpected tensor {t:?}"),
+    }
+}
+
+#[test]
+fn batch_padding_is_invisible() {
+    // 3 rows against artifacts {1,10}: padded to 10; identical rows must
+    // produce identical outputs and padding must not leak.
+    let Some(client) = common::infer_or_skip() else { return };
+    let a = Arc::new(vec![0.25f32; 128]);
+    let b = Arc::new(vec![0.75f32; 128]);
+    let rows = vec![
+        vec![RowVec::F32(a.clone())],
+        vec![RowVec::F32(b.clone())],
+        vec![RowVec::F32(a.clone())],
+    ];
+    let out = client.run_rows("langid", &rows).unwrap();
+    assert_eq!(out.len(), 3);
+    assert_eq!(out[0], out[2]);
+    assert_ne!(out[0], out[1]);
+    // singleton run agrees with batched run
+    let single = client.run_rows("langid", &rows[..1]).unwrap();
+    match (&single[0][0], &out[0][0]) {
+        (Tensor::F32 { data: s, .. }, Tensor::F32 { data: b, .. }) => {
+            for (x, y) in s.iter().zip(b) {
+                assert!((x - y).abs() < 1e-4, "batch vs single: {x} vs {y}");
+            }
+        }
+        _ => panic!("dtype"),
+    }
+}
+
+#[test]
+fn resnet_probs_sum_to_one_across_chunks() {
+    let Some(client) = common::infer_or_skip() else { return };
+    // 43 rows > max batch 40: exercises chunking.
+    let img = Arc::new(vec![100.0f32; 64 * 64 * 3]);
+    let rows: Vec<_> = (0..43).map(|_| vec![RowVec::F32(img.clone())]).collect();
+    let out = client.run_rows("resnet", &rows).unwrap();
+    assert_eq!(out.len(), 43);
+    for row in &out {
+        if let Tensor::F32 { data, .. } = &row[0] {
+            assert_eq!(data.len(), 1000);
+            assert!((data.iter().sum::<f32>() - 1.0).abs() < 1e-3);
+        }
+    }
+}
+
+#[test]
+fn recsys_topk_descending_and_valid() {
+    let Some(client) = common::infer_or_skip() else { return };
+    let user = Arc::new((0..512).map(|i| (i as f32 / 512.0) - 0.5).collect::<Vec<_>>());
+    let cat = Arc::new(
+        (0..2500 * 512)
+            .map(|i| ((i % 131) as f32) / 131.0 - 0.5)
+            .collect::<Vec<_>>(),
+    );
+    let out = client
+        .run_rows("recsys", &[vec![RowVec::F32(user), RowVec::F32(cat)]])
+        .unwrap();
+    let (idx, vals) = (&out[0][0], &out[0][1]);
+    match (idx, vals) {
+        (Tensor::I32 { data: idx, .. }, Tensor::F32 { data: vals, .. }) => {
+            assert_eq!(idx.len(), 10);
+            assert!(idx.iter().all(|&i| (0..2500).contains(&i)));
+            for w in vals.windows(2) {
+                assert!(w[0] >= w[1], "scores not descending: {vals:?}");
+            }
+        }
+        _ => panic!("unexpected output kinds"),
+    }
+}
+
+#[test]
+fn nmt_ids_in_vocab() {
+    let Some(client) = common::infer_or_skip() else { return };
+    let ids = Arc::new((0..32).map(|i| (i * 7) % 512).collect::<Vec<i32>>());
+    let out = client.run_rows("nmt_fr", &[vec![RowVec::I32(ids.clone())]]).unwrap();
+    match &out[0][0] {
+        Tensor::I32 { data, .. } => {
+            assert_eq!(data.len(), 32);
+            assert!(data.iter().all(|&t| (0..512).contains(&t)));
+        }
+        t => panic!("unexpected {t:?}"),
+    }
+    // fr and de translate differently (different seeds)
+    let out_de = client.run_rows("nmt_de", &[vec![RowVec::I32(ids)]]).unwrap();
+    assert_ne!(out[0][0], out_de[0][0]);
+}
+
+#[test]
+fn wrong_shapes_are_rejected() {
+    let Some(client) = common::infer_or_skip() else { return };
+    let bad = Arc::new(vec![0.0f32; 7]);
+    assert!(client.run_rows("langid", &[vec![RowVec::F32(bad)]]).is_err());
+    let ids = Arc::new(vec![0i32; 32]);
+    assert!(client
+        .run_rows("langid", &[vec![RowVec::I32(ids)]])
+        .is_err()); // dtype mismatch
+    assert!(client.run_rows("not_a_model", &[vec![]]).is_err());
+}
+
+#[test]
+fn prewarm_compiles_artifacts() {
+    let Some(client) = common::infer_or_skip() else { return };
+    let n = client.prewarm(&["langid"]).unwrap();
+    assert_eq!(n, 2); // b1 + b10
+}
+
+#[test]
+fn stats_track_padding() {
+    let Some(client) = common::infer_or_skip() else { return };
+    let feats = Arc::new(vec![0.1f32; 128]);
+    let before = client
+        .stats()
+        .padded_rows
+        .load(std::sync::atomic::Ordering::Relaxed);
+    // 2 rows -> b10 artifact: 8 rows of padding.
+    client
+        .run_rows("langid", &[vec![RowVec::F32(feats.clone())], vec![RowVec::F32(feats)]])
+        .unwrap();
+    let after = client
+        .stats()
+        .padded_rows
+        .load(std::sync::atomic::Ordering::Relaxed);
+    assert_eq!(after - before, 8);
+}

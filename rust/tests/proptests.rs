@@ -1,0 +1,257 @@
+//! Property tests (in-repo quickcheck, DESIGN.md §4): randomized flows and
+//! tables exercise the invariants the paper's correctness story rests on —
+//! rewrites never change results, serialization round-trips, operator
+//! algebra holds.
+
+use std::sync::Arc;
+
+use cloudflow::cloudburst::Cluster;
+use cloudflow::dataflow::compiler::{compile, OptFlags};
+use cloudflow::dataflow::exec_local::{self, apply_agg, apply_groupby, apply_join, apply_union};
+use cloudflow::dataflow::operator::{CmpOp, ExecCtx, Func, Predicate};
+use cloudflow::dataflow::table::{DType, Schema, Table, Value};
+use cloudflow::dataflow::{AggFn, Dataflow, JoinHow};
+use cloudflow::util::quickcheck::check;
+use cloudflow::util::rng::Rng;
+
+fn random_table(rng: &mut Rng, max_rows: usize) -> Table {
+    let mut t = Table::new(Schema::new(vec![
+        ("name", DType::Str),
+        ("conf", DType::F64),
+        ("n", DType::I64),
+    ]));
+    let rows = rng.below(max_rows as u64 + 1);
+    for _ in 0..rows {
+        t.push_fresh(vec![
+            Value::Str(format!("k{}", rng.below(4))),
+            Value::F64(rng.f64()),
+            Value::I64(rng.range(-50, 50)),
+        ])
+        .unwrap();
+    }
+    t
+}
+
+/// A random linear flow of maps (arithmetic on conf), filters and an
+/// optional trailing groupby+agg.
+fn random_flow(rng: &mut Rng) -> Dataflow {
+    let mut fl = Dataflow::new(
+        "rand",
+        Schema::new(vec![
+            ("name", DType::Str),
+            ("conf", DType::F64),
+            ("n", DType::I64),
+        ]),
+    );
+    let mut cur = fl.input();
+    let steps = 1 + rng.below(5);
+    for s in 0..steps {
+        if rng.bool(0.6) {
+            let mult = 0.5 + rng.f64();
+            cur = fl
+                .map(
+                    cur,
+                    Func::rust(
+                        &format!("mul{s}"),
+                        None,
+                        Arc::new(move |_, t: &Table| {
+                            let mut out = Table::new(t.schema().clone());
+                            out.set_grouping(t.grouping().map(str::to_string))?;
+                            for r in t.rows() {
+                                out.push(
+                                    r.id,
+                                    vec![
+                                        r.values[0].clone(),
+                                        Value::F64(r.values[1].as_f64()? * mult),
+                                        r.values[2].clone(),
+                                    ],
+                                )?;
+                            }
+                            Ok(out)
+                        }),
+                    ),
+                )
+                .unwrap();
+        } else {
+            let thresh = rng.f64() * 1.5;
+            let op = *rng.choice(&[CmpOp::Lt, CmpOp::Ge]);
+            cur = fl
+                .filter(cur, Predicate::threshold("conf", op, thresh))
+                .unwrap();
+        }
+    }
+    if rng.bool(0.4) {
+        let g = fl.groupby(cur, "name").unwrap();
+        let agg = *rng.choice(&[AggFn::Count, AggFn::Sum, AggFn::Max, AggFn::Avg]);
+        cur = fl.agg(g, agg, "conf").unwrap();
+    }
+    fl.set_output(cur).unwrap();
+    fl
+}
+
+fn canon(t: &Table) -> Vec<String> {
+    let mut v: Vec<String> = t.rows().iter().map(|r| format!("{:?}", r.values)).collect();
+    v.sort();
+    v
+}
+
+#[test]
+fn prop_fusion_preserves_semantics() {
+    check("fusion preserves semantics", 40, |rng| {
+        let fl = random_flow(rng);
+        let input = random_table(rng, 12);
+        let ctx = ExecCtx::local();
+        let reference = exec_local::execute(&fl, input.clone(), &ctx)
+            .map_err(|e| format!("local: {e:#}"))?;
+        let cluster = Cluster::new(None);
+        let plan = compile(&fl, &OptFlags::none().with_fusion())
+            .map_err(|e| format!("compile: {e:#}"))?;
+        let h = cluster.register(plan, 1).map_err(|e| format!("{e:#}"))?;
+        let out = cluster
+            .execute(h, input)
+            .and_then(|f| f.result())
+            .map_err(|e| format!("cluster: {e:#}"))?;
+        cloudflow::prop_assert!(
+            canon(&out) == canon(&reference),
+            "fused cluster != local oracle\n{out}\nvs\n{reference}"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_unfused_equals_fused() {
+    check("unfused equals fused", 25, |rng| {
+        let fl = random_flow(rng);
+        let input = random_table(rng, 10);
+        let run = |opts: &OptFlags| -> Result<Table, String> {
+            let cluster = Cluster::new(None);
+            let h = cluster
+                .register(compile(&fl, opts).map_err(|e| format!("{e:#}"))?, 1)
+                .map_err(|e| format!("{e:#}"))?;
+            cluster
+                .execute(h, input.clone())
+                .and_then(|f| f.result())
+                .map_err(|e| format!("{e:#}"))
+        };
+        let a = run(&OptFlags::none())?;
+        let b = run(&OptFlags::none().with_fusion())?;
+        cloudflow::prop_assert!(canon(&a) == canon(&b), "plans disagree");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_table_codec_roundtrip() {
+    check("table codec roundtrip", 100, |rng| {
+        let mut t = random_table(rng, 20);
+        if rng.bool(0.3) {
+            t.set_grouping(Some("name".into())).unwrap();
+        }
+        let rt = Table::decode(&t.encode()).map_err(|e| format!("{e:#}"))?;
+        cloudflow::prop_assert!(rt == t, "roundtrip mismatch");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_union_row_count_and_ids() {
+    check("union preserves rows and ids", 60, |rng| {
+        let a = random_table(rng, 10);
+        let b = random_table(rng, 10);
+        let ids: Vec<u64> = a
+            .rows()
+            .iter()
+            .chain(b.rows())
+            .map(|r| r.id)
+            .collect();
+        let u = apply_union(vec![a, b]).map_err(|e| format!("{e:#}"))?;
+        cloudflow::prop_assert!(
+            u.rows().iter().map(|r| r.id).collect::<Vec<_>>() == ids,
+            "ids not preserved in order"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_grouped_count_totals_match() {
+    check("grouped counts sum to table size", 60, |rng| {
+        let t = random_table(rng, 30);
+        let n = t.len() as i64;
+        let g = apply_groupby(t, "name").map_err(|e| format!("{e:#}"))?;
+        let c = apply_agg(g, AggFn::Count, "conf").map_err(|e| format!("{e:#}"))?;
+        let total: i64 = (0..c.len())
+            .map(|i| c.value(i, "count").unwrap().as_i64().unwrap())
+            .sum();
+        cloudflow::prop_assert!(total == n, "counts {total} != rows {n}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_join_inner_subset_of_left_outer() {
+    check("inner ⊆ left ⊆ outer", 40, |rng| {
+        let a = random_table(rng, 8);
+        let b = random_table(rng, 8);
+        let inner = apply_join(a.clone(), b.clone(), Some("name"), JoinHow::Inner)
+            .map_err(|e| format!("{e:#}"))?;
+        let left = apply_join(a.clone(), b.clone(), Some("name"), JoinHow::Left)
+            .map_err(|e| format!("{e:#}"))?;
+        let outer = apply_join(a, b, Some("name"), JoinHow::Outer)
+            .map_err(|e| format!("{e:#}"))?;
+        cloudflow::prop_assert!(
+            inner.len() <= left.len() && left.len() <= outer.len(),
+            "{} / {} / {}",
+            inner.len(),
+            left.len(),
+            outer.len()
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_argmax_attains_max() {
+    check("argmax value equals max", 60, |rng| {
+        let t = random_table(rng, 20);
+        if t.is_empty() {
+            return Ok(());
+        }
+        let max = apply_agg(t.clone(), AggFn::Max, "conf").map_err(|e| format!("{e:#}"))?;
+        let arg = apply_agg(t, AggFn::ArgMax, "conf").map_err(|e| format!("{e:#}"))?;
+        let m = max.value(0, "max").unwrap().as_f64().unwrap();
+        let a = arg.value(0, "conf").unwrap().as_f64().unwrap();
+        cloudflow::prop_assert!((m - a).abs() < 1e-12, "max {m} vs argmax row {a}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_filter_partition() {
+    check("filter p + filter !p partitions table", 60, |rng| {
+        let t = random_table(rng, 25);
+        let ctx = ExecCtx::local();
+        let thresh = rng.f64();
+        let keep = exec_local::apply_filter(
+            &ctx,
+            &Predicate::threshold("conf", CmpOp::Ge, thresh),
+            t.clone(),
+        )
+        .map_err(|e| format!("{e:#}"))?;
+        let drop = exec_local::apply_filter(
+            &ctx,
+            &Predicate::threshold("conf", CmpOp::Lt, thresh),
+            t.clone(),
+        )
+        .map_err(|e| format!("{e:#}"))?;
+        cloudflow::prop_assert!(
+            keep.len() + drop.len() == t.len(),
+            "{} + {} != {}",
+            keep.len(),
+            drop.len(),
+            t.len()
+        );
+        Ok(())
+    });
+}
