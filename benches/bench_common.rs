@@ -35,3 +35,44 @@ pub fn fmt_bytes(b: usize) -> String {
         format!("{}KB", b / 1_000)
     }
 }
+
+// ---- BENCH_*.json emission (no serde offline; rows are rendered by the
+//      helpers below so the perf trajectory can be tracked across PRs) ----
+
+/// Render a JSON number (non-finite values become null).
+pub fn jnum(x: f64) -> String {
+    if x.is_finite() {
+        format!("{x:.3}")
+    } else {
+        "null".to_string()
+    }
+}
+
+/// Render a JSON string (Rust debug escaping is JSON-compatible for the
+/// ASCII labels benches emit).
+pub fn jstr(s: &str) -> String {
+    format!("{s:?}")
+}
+
+pub fn jbool(b: bool) -> String {
+    b.to_string()
+}
+
+/// Render one result object from pre-rendered (key, value) pairs.
+pub fn json_row(fields: &[(&str, String)]) -> String {
+    let body: Vec<String> = fields
+        .iter()
+        .map(|(k, v)| format!("{}: {}", jstr(k), v))
+        .collect();
+    format!("{{{}}}", body.join(", "))
+}
+
+/// Write `BENCH_<name>.json` (an array of row objects) in the cwd.
+pub fn write_bench_json(name: &str, rows: &[String]) {
+    let path = format!("BENCH_{name}.json");
+    let body = format!("[\n  {}\n]\n", rows.join(",\n  "));
+    match std::fs::write(&path, body) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("warn: cannot write {path}: {e}"),
+    }
+}

@@ -1,0 +1,165 @@
+//! SLO planner bench: planner-tuned deployments versus the hand-tuned
+//! all-flags-on default (2 replicas per stage + autoscaler) across the
+//! Fig 13 cascade and NMT pipeline shapes.
+//!
+//! The pipelines are the model-free stand-ins from
+//! `workloads::pipelines::{synthetic_cascade, synthetic_nmt}`: identical
+//! DAGs and identical calibrated service-time curves to the artifact-backed
+//! Fig 13 versions, so the bench runs without `make artifacts`.
+//!
+//! For each pipeline: `plan_for_slo` turns the flow + SLO into a
+//! `DeploymentPlan`; both the planned and the default deployment then
+//! serve the same closed-loop load, and we report measured p99 versus the
+//! SLO plus the replica-seconds each deployment burned.  Results land in
+//! `BENCH_slo_planner.json`.
+
+mod bench_common;
+
+use bench_common::{header, jbool, jnum, json_row, jstr, scaled, write_bench_json};
+use cloudflow::cloudburst::Cluster;
+use cloudflow::dataflow::compiler::{compile, OptFlags};
+use cloudflow::planner::{plan_for_slo, PlannerCtx, Slo};
+use cloudflow::util::stats::fmt_ms;
+use cloudflow::workloads::closed_loop;
+use cloudflow::workloads::pipelines::{self, PipelineSpec};
+
+struct Case {
+    name: &'static str,
+    build: fn() -> PipelineSpec,
+    slo: Slo,
+    requests: usize,
+}
+
+fn main() {
+    if std::env::var("CLOUDFLOW_TIME_SCALE").is_err() {
+        std::env::set_var("CLOUDFLOW_TIME_SCALE", "1.0");
+    }
+    header("SLO planner: auto-tuned deployments vs all-flags default (fig13 shapes)");
+    let cases = [
+        Case {
+            name: "cascade",
+            build: || pipelines::synthetic_cascade().unwrap(),
+            slo: Slo::new(250.0, 30.0),
+            requests: 80,
+        },
+        Case {
+            name: "nmt",
+            build: || pipelines::synthetic_nmt().unwrap(),
+            slo: Slo::new(1200.0, 5.0),
+            requests: 32,
+        },
+    ];
+
+    println!(
+        "{:<10} {:<10} {:>9} {:>9} {:>9} {:>8} {:>12} {:>8}",
+        "pipeline", "system", "median", "p99", "slo p99", "ok?", "replicas", "rep-sec"
+    );
+    let mut rows: Vec<String> = Vec::new();
+    for case in &cases {
+        let spec = (case.build)();
+        let ctx = PlannerCtx::default().with_make_input(spec.make_input.clone());
+        let dp = match plan_for_slo(&spec.flow, &case.slo, &ctx) {
+            Ok(dp) => dp,
+            Err(e) => {
+                println!("{:<10} SKIP: {e:#}", case.name);
+                continue;
+            }
+        };
+        // Drive roughly at the SLO's target rate (closed loop self-clocks).
+        let clients = ((case.slo.min_qps * dp.estimate.p50_ms / 1000.0).ceil() as usize)
+            .clamp(2, 16);
+        let requests = scaled(case.requests);
+
+        // ---- planned deployment (allocation pinned by the plan) ----
+        let (p_med, p_p99, p_rps, p_replicas, p_rs) =
+            run(&(case.build)(), |c, _| c.register_planned(&dp), clients, requests);
+        let attained = p_p99 <= case.slo.p99_ms;
+        println!(
+            "{:<10} {:<10} {:>9} {:>9} {:>9} {:>8} {:>12} {:>8.1}",
+            case.name,
+            format!("planned[{}]", dp.variant),
+            fmt_ms(p_med),
+            fmt_ms(p_p99),
+            fmt_ms(case.slo.p99_ms),
+            if attained { "yes" } else { "NO" },
+            p_replicas,
+            p_rs,
+        );
+
+        // ---- default: all flags on, uniform 2 replicas, autoscaler ----
+        let (d_med, d_p99, d_rps, d_replicas, d_rs) = run(
+            &(case.build)(),
+            |c, s| {
+                let plan = compile(&s.flow, &OptFlags::all())?;
+                c.set_autoscale(true);
+                c.register(plan, 2)
+            },
+            clients,
+            requests,
+        );
+        println!(
+            "{:<10} {:<10} {:>9} {:>9} {:>9} {:>8} {:>12} {:>8.1}",
+            case.name,
+            "default",
+            fmt_ms(d_med),
+            fmt_ms(d_p99),
+            fmt_ms(case.slo.p99_ms),
+            if d_p99 <= case.slo.p99_ms { "yes" } else { "NO" },
+            d_replicas,
+            d_rs,
+        );
+
+        rows.push(json_row(&[
+            ("pipeline", jstr(case.name)),
+            ("slo_p99_ms", jnum(case.slo.p99_ms)),
+            ("slo_min_qps", jnum(case.slo.min_qps)),
+            ("variant", jstr(&dp.variant)),
+            ("est_p50_ms", jnum(dp.estimate.p50_ms)),
+            ("est_p99_ms", jnum(dp.estimate.p99_ms)),
+            ("est_max_qps", jnum(dp.estimate.max_qps)),
+            ("planned_p50_ms", jnum(p_med)),
+            ("planned_p99_ms", jnum(p_p99)),
+            ("planned_qps", jnum(p_rps)),
+            ("slo_attained", jbool(attained)),
+            ("planned_replicas", jnum(p_replicas as f64)),
+            ("planned_replica_seconds", jnum(p_rs)),
+            ("default_p50_ms", jnum(d_med)),
+            ("default_p99_ms", jnum(d_p99)),
+            ("default_qps", jnum(d_rps)),
+            ("default_replicas", jnum(d_replicas as f64)),
+            ("default_replica_seconds", jnum(d_rs)),
+            ("replica_seconds_ratio", jnum(p_rs / d_rs.max(1e-9))),
+        ]));
+    }
+    write_bench_json("slo_planner", &rows);
+    println!("\ngoal: every planned row attains its SLO with replica-seconds <= default");
+}
+
+/// Deploy via `deploy`, run warm-up + a measured closed loop, and report
+/// (median, p99, qps, replica count, replica-seconds over the cluster
+/// lifetime).
+fn run(
+    spec: &PipelineSpec,
+    deploy: impl FnOnce(
+        &Cluster,
+        &PipelineSpec,
+    ) -> anyhow::Result<cloudflow::cloudburst::DagHandle>,
+    clients: usize,
+    requests: usize,
+) -> (f64, f64, f64, usize, f64) {
+    let cluster = Cluster::new(None);
+    if let Some(setup) = &spec.setup {
+        setup(&cluster.kvs());
+    }
+    let h = deploy(&cluster, spec).expect("deploy");
+    closed_loop(&cluster, h, clients, requests / 4 + 2, |i| (spec.make_input)(i));
+    let mut r = closed_loop(&cluster, h, clients, requests, |i| {
+        (spec.make_input)(i + 1000)
+    });
+    let (med, p99, rps) = r.report();
+    let counts = cluster.replica_counts(h);
+    let n_replicas: usize = counts.iter().map(|(_, n)| *n).sum();
+    let lifetime_ms = cluster.inner().clock.now_ms();
+    let rs = cluster.metrics(h).replica_seconds(lifetime_ms, &counts);
+    (med, p99, rps, n_replicas, rs)
+}

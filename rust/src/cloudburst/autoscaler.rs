@@ -71,7 +71,8 @@ fn run(cluster: Arc<ClusterInner>) {
                             let want = ((queued / cfg.autoscaler.up_queue_per_replica)
                                 .ceil() as usize)
                                 .min(replicas + cfg.autoscaler.up_step)
-                                .min(cfg.autoscaler.max_replicas);
+                                .min(cfg.autoscaler.max_replicas)
+                                .min(stage.max_replicas);
                             for _ in replicas..want {
                                 cluster.spawn_replica(&plan, stage);
                             }
@@ -89,8 +90,10 @@ fn run(cluster: Arc<ClusterInner>) {
                             && now - last_up > 2.0 * cfg.autoscaler.interval_ms
                             && !stage.slack_added.swap(true, Ordering::Relaxed)
                         {
+                            let ceiling =
+                                cfg.autoscaler.max_replicas.min(stage.max_replicas);
                             for _ in 0..cfg.autoscaler.slack_replicas {
-                                if stage.replica_count() < cfg.autoscaler.max_replicas {
+                                if stage.replica_count() < ceiling {
                                     cluster.spawn_replica(&plan, stage);
                                 }
                             }

@@ -18,7 +18,7 @@ use crate::net::{Fabric, NodeId};
 use crate::runtime::InferClient;
 use crate::simulation::clock::{self, Clock};
 use crate::simulation::gpu::Device;
-use crate::util::rng::Rng;
+use crate::util::rng::{self, Rng};
 
 use super::executor::{self, Replica, StageRuntime, Task, TableMsg};
 use super::metrics::PlanMetrics;
@@ -26,6 +26,20 @@ use super::metrics::PlanMetrics;
 /// Handle to a registered plan.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct DagHandle(pub(crate) usize);
+
+/// Per-stage provisioning directives used at registration (deployment
+/// plans pin these; plain `register` uses uniform defaults).
+#[derive(Debug, Clone, Copy)]
+pub struct StageProvision {
+    /// Replicas spawned immediately.
+    pub initial: usize,
+    /// Autoscaler floor.
+    pub min: usize,
+    /// Autoscaler ceiling.
+    pub max: usize,
+    /// Pinned dequeue batch cap; 0 = use the global batch config.
+    pub batch_cap: usize,
+}
 
 /// Future for one executed request (paper: `execute` returns a future).
 pub struct ExecFuture {
@@ -411,7 +425,7 @@ impl Cluster {
                 class: HashMap::new(),
                 caches: HashMap::new(),
             }),
-            rng: Mutex::new(Rng::new(0xC10D)),
+            rng: Mutex::new(rng::from_env(0xC10D)),
             next_req: AtomicU64::new(1),
             shutdown: AtomicBool::new(false),
             autoscale: AtomicBool::new(false),
@@ -422,12 +436,53 @@ impl Cluster {
 
     /// Register a compiled plan; spawns `initial_replicas` per stage.
     pub fn register(&self, plan: Plan, initial_replicas: usize) -> Result<DagHandle> {
+        let cap = config::global().autoscaler.max_replicas;
+        self.register_with(plan, |_, _| StageProvision {
+            initial: initial_replicas.max(1),
+            min: 1,
+            max: cap,
+            batch_cap: 0,
+        })
+    }
+
+    /// Register a planner-tuned deployment: pre-provision each stage's
+    /// planned replicas, pin its batch cap, and hand the autoscaler the
+    /// plan as its floor (`replicas`) and ceiling (`max_replicas`).
+    pub fn register_planned(
+        &self,
+        dp: &crate::planner::DeploymentPlan,
+    ) -> Result<DagHandle> {
+        let stages = dp.stages.clone();
+        let default_cap = config::global().autoscaler.max_replicas;
+        self.register_with(dp.plan.clone(), move |seg, idx| {
+            match stages.iter().find(|s| s.seg == seg && s.idx == idx) {
+                Some(sp) => {
+                    let floor = sp.replicas.max(1);
+                    StageProvision {
+                        initial: floor,
+                        min: floor,
+                        max: sp.max_replicas.max(floor),
+                        batch_cap: sp.batch_cap,
+                    }
+                }
+                None => StageProvision { initial: 1, min: 1, max: default_cap, batch_cap: 0 },
+            }
+        })
+    }
+
+    /// Shared registration path with per-stage provisioning directives.
+    fn register_with(
+        &self,
+        plan: Plan,
+        provision: impl Fn(usize, usize) -> StageProvision,
+    ) -> Result<DagHandle> {
         let mut plans = self.inner.plans.write().unwrap();
         let idx = plans.len();
         let mut segs = Vec::with_capacity(plan.segments.len());
         for (si, seg) in plan.segments.iter().enumerate() {
             let mut stages = Vec::with_capacity(seg.stages.len());
             for (sti, spec) in seg.stages.iter().enumerate() {
+                let p = provision(si, sti);
                 stages.push(Arc::new(StageRuntime {
                     plan_idx: idx,
                     seg: si,
@@ -439,7 +494,9 @@ impl Cluster {
                     processed: AtomicU64::new(0),
                     last_scale_up_ms: Mutex::new(f64::NEG_INFINITY),
                     slack_added: AtomicBool::new(false),
-                    min_replicas: 1,
+                    min_replicas: p.min.max(1),
+                    max_replicas: p.max.max(p.min.max(1)),
+                    batch_cap: p.batch_cap,
                 }));
             }
             segs.push(stages);
@@ -452,7 +509,8 @@ impl Cluster {
         });
         for seg in &registered.segs {
             for stage in seg {
-                for _ in 0..initial_replicas.max(1) {
+                let p = provision(stage.seg, stage.idx);
+                for _ in 0..p.initial.max(1) {
                     self.inner.spawn_replica(&registered, stage);
                 }
             }
@@ -762,6 +820,30 @@ mod tests {
         let out = cluster.execute(h, input_table(3)).unwrap().result().unwrap();
         assert_eq!(out.len(), 3);
         assert_eq!(out.schema().cols().len(), 2); // x, x_r
+    }
+
+    #[test]
+    fn register_planned_pins_replicas_and_floor() {
+        use crate::planner::{plan_for_slo, PlannerCtx, Slo};
+        let mut fl = Dataflow::new("planned", Schema::new(vec![("x", DType::F64)]));
+        let a = fl
+            .map(fl.input(), Func::sleep("stage", SleepDist::ConstMs(10.0)))
+            .unwrap();
+        fl.set_output(a).unwrap();
+        // 10ms stage at 150 qps needs two replicas (100/s each).
+        let dp = plan_for_slo(&fl, &Slo::new(400.0, 150.0), &PlannerCtx::default().quick())
+            .unwrap();
+        assert!(dp.n_replicas() >= 2, "{}", dp.summary());
+        let cluster = Cluster::new(None);
+        let h = cluster.register_planned(&dp).unwrap();
+        let counts = cluster.replica_counts(h);
+        let total: usize = counts.iter().map(|(_, n)| *n).sum();
+        assert_eq!(total, dp.n_replicas(), "{counts:?}");
+        // The plan is the autoscaler floor: scaling below it must fail.
+        assert!(cluster.scale_to(h, "stage", 1).is_err());
+        // And the deployment still serves requests correctly.
+        let out = cluster.execute(h, input_table(2)).unwrap().result().unwrap();
+        assert_eq!(out.len(), 2);
     }
 
     #[test]

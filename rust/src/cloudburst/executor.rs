@@ -51,7 +51,12 @@ pub struct StageRuntime {
     /// Virtual ms of the last scale-up (slack logic).
     pub last_scale_up_ms: Mutex<f64>,
     pub slack_added: AtomicBool,
+    /// Autoscaler floor (a deployment plan's pre-provisioned replicas).
     pub min_replicas: usize,
+    /// Autoscaler ceiling for this stage (plan pin or the config cap).
+    pub max_replicas: usize,
+    /// Pinned dequeue batch cap; 0 = use the global batch config.
+    pub batch_cap: usize,
 }
 
 impl StageRuntime {
@@ -130,10 +135,12 @@ pub fn replica_loop(
     ctx: ExecCtx,
 ) {
     loop {
-        let max_batch = if stage_rt.spec.batchable {
-            crate::config::max_batch()
-        } else {
+        let max_batch = if !stage_rt.spec.batchable {
             1
+        } else if stage_rt.batch_cap > 0 {
+            stage_rt.batch_cap
+        } else {
+            crate::config::max_batch()
         };
         let tasks = replica.pop_batch(max_batch);
         if tasks.is_empty() {

@@ -50,6 +50,43 @@ impl PlanMetrics {
     pub fn completed(&self) -> u64 {
         self.completed.load(std::sync::atomic::Ordering::Relaxed)
     }
+
+    /// Integrate the allocation log into total replica-seconds over
+    /// `[0, horizon_ms]` (stepwise-constant per stage label).  Stages with
+    /// no samples — e.g. when the autoscaler is disabled — use their entry
+    /// in `fallback` (typically `Cluster::replica_counts`) as a constant.
+    pub fn replica_seconds(&self, horizon_ms: f64, fallback: &[(String, usize)]) -> f64 {
+        use std::collections::{HashMap, HashSet};
+        let log = self.allocation.lock().unwrap();
+        let mut per_stage: HashMap<&str, Vec<(f64, usize)>> = HashMap::new();
+        for (t, stage, n) in log.iter() {
+            per_stage.entry(stage.as_str()).or_default().push((*t, *n));
+        }
+        let mut total_ms = 0.0;
+        let mut seen: HashSet<&str> = HashSet::new();
+        for (stage, samples) in &per_stage {
+            seen.insert(*stage);
+            let mut prev_t = 0.0;
+            let mut prev_n = samples.first().map(|s| s.1).unwrap_or(0);
+            for &(t, n) in samples {
+                let t = t.min(horizon_ms);
+                if t > prev_t {
+                    total_ms += prev_n as f64 * (t - prev_t);
+                    prev_t = t;
+                }
+                prev_n = n;
+            }
+            if horizon_ms > prev_t {
+                total_ms += prev_n as f64 * (horizon_ms - prev_t);
+            }
+        }
+        for (stage, n) in fallback {
+            if !seen.contains(stage.as_str()) {
+                total_ms += *n as f64 * horizon_ms;
+            }
+        }
+        total_ms / 1000.0
+    }
 }
 
 #[cfg(test)]
@@ -86,5 +123,25 @@ mod tests {
         let a = m.allocation.lock().unwrap();
         assert_eq!(a.len(), 2);
         assert_eq!(a[1].2, 19);
+    }
+
+    #[test]
+    fn replica_seconds_integrates_log() {
+        let m = PlanMetrics::default();
+        // 2 replicas for 1s, then 4 replicas for 1s.
+        m.note_allocation(0.0, "a", 2);
+        m.note_allocation(1000.0, "a", 4);
+        let rs = m.replica_seconds(2000.0, &[]);
+        assert!((rs - 6.0).abs() < 1e-9, "rs={rs}");
+    }
+
+    #[test]
+    fn replica_seconds_fallback_for_unsampled_stages() {
+        let m = PlanMetrics::default();
+        m.note_allocation(0.0, "a", 1);
+        let fallback = vec![("a".to_string(), 9), ("b".to_string(), 3)];
+        // "a" uses its log (1 replica), "b" uses the fallback (3 replicas).
+        let rs = m.replica_seconds(1000.0, &fallback);
+        assert!((rs - 4.0).abs() < 1e-9, "rs={rs}");
     }
 }

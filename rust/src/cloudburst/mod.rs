@@ -17,5 +17,5 @@ pub mod cluster;
 pub mod executor;
 pub mod metrics;
 
-pub use cluster::{Cluster, DagHandle, ExecFuture};
+pub use cluster::{Cluster, DagHandle, ExecFuture, StageProvision};
 pub use metrics::PlanMetrics;

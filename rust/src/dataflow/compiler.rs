@@ -251,6 +251,21 @@ pub fn compile(flow: &Dataflow, opts: &OptFlags) -> Result<Plan> {
     Ok(Plan { name: flow.name.clone(), segments, opts: opts.clone() })
 }
 
+/// Planner-driven compilation (the SLO front door): profile the flow,
+/// search rewrite variants and per-stage replica/batch settings, and
+/// return the cheapest [`DeploymentPlan`](crate::planner::DeploymentPlan)
+/// whose estimated p99 and throughput meet `slo`.  Calibration inputs are
+/// synthesized from the input schema; use
+/// [`planner::plan_for_slo`](crate::planner::plan_for_slo) with a custom
+/// [`PlannerCtx`](crate::planner::PlannerCtx) to profile with real inputs,
+/// an inference service, or a pre-populated KVS.
+pub fn compile_for_slo(
+    flow: &Dataflow,
+    slo: &crate::planner::Slo,
+) -> Result<crate::planner::DeploymentPlan> {
+    crate::planner::plan_for_slo(flow, slo, &crate::planner::PlannerCtx::default())
+}
+
 /// Device class + batchability of a single operator.
 fn op_traits(op: &OpKind, batching: bool) -> (Device, bool) {
     match op {

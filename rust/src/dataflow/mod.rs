@@ -9,7 +9,7 @@ pub mod flow;
 pub mod operator;
 pub mod table;
 
-pub use compiler::{compile, OptFlags, Plan};
+pub use compiler::{compile, compile_for_slo, OptFlags, Plan};
 pub use flow::{Dataflow, NodeRef};
 pub use operator::{
     AggFn, CmpOp, ExecCtx, Func, FuncBody, JoinHow, LookupKey, ModelBinding, OpKind,

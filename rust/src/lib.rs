@@ -13,8 +13,16 @@
 //! * **L2/L1** (`python/compile`): JAX models + Pallas kernels, AOT-lowered
 //!   to HLO text artifacts loaded by [`runtime`] via PJRT.
 //!
+//! On top sits the [`planner`]: an InferLine-style profiler + cost model +
+//! tuner that turns a [`dataflow::Dataflow`] and an SLO (`p99` target +
+//! minimum QPS) into a tuned [`planner::DeploymentPlan`] — which rewrites
+//! to enable, per-stage batch caps, and per-stage replica counts — via
+//! [`dataflow::compile_for_slo`], deployed with
+//! [`cloudburst::Cluster::register_planned`].
+//!
 //! Start with [`dataflow::Dataflow`] (the user API) and
-//! [`cloudburst::Cluster`] (the runtime), or the `examples/` directory.
+//! [`cloudburst::Cluster`] (the runtime), or the `examples/` directory
+//! (`examples/slo_planner.rs` for the planner path).
 
 pub mod anna;
 pub mod baselines;
@@ -23,6 +31,7 @@ pub mod config;
 pub mod dataflow;
 pub mod models;
 pub mod net;
+pub mod planner;
 pub mod runtime;
 pub mod simulation;
 pub mod util;

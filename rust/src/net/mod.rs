@@ -22,6 +22,17 @@ impl NodeId {
     pub const CLIENT: NodeId = NodeId(u32::MAX);
 }
 
+/// Modeled one-way cost of moving `bytes` between two *distinct* nodes:
+/// fixed hop cost + serialize + wire + deserialize.  The single shared
+/// definition: both the fabric's charging and the planner's cost model
+/// call this, so estimates can never diverge from the simulated wire.
+pub fn transfer_cost_ms(bytes: usize) -> f64 {
+    let n = &config::global().net;
+    n.hop_base_ms
+        + bytes as f64 / n.wire_bytes_per_ms
+        + 2.0 * bytes as f64 / n.codec_bytes_per_ms
+}
+
 /// Accounting + cost model for the simulated wire.
 #[derive(Debug, Default)]
 pub struct Fabric {
@@ -34,13 +45,9 @@ impl Fabric {
         Self::default()
     }
 
-    /// Modeled one-way cost of moving `bytes` between two *distinct*
-    /// nodes: fixed hop cost + serialize + wire + deserialize.
+    /// Modeled one-way transfer cost (see [`transfer_cost_ms`]).
     pub fn transfer_ms(&self, bytes: usize) -> f64 {
-        let n = config::global().net.clone();
-        n.hop_base_ms
-            + bytes as f64 / n.wire_bytes_per_ms
-            + 2.0 * bytes as f64 / n.codec_bytes_per_ms
+        transfer_cost_ms(bytes)
     }
 
     /// Ship a payload from `from` to `to`, sleeping the modeled cost.

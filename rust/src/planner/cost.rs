@@ -1,0 +1,434 @@
+//! Deployment cost model: composes stage profiles along the compiled DAG
+//! to estimate end-to-end p50/p99 latency, the maximum sustainable request
+//! rate, and the (GPU-weighted) replica cost of a candidate configuration.
+//!
+//! Latency is estimated by Monte-Carlo composition over the stage graph:
+//! each virtual request draws per-stage service times from the profiled
+//! empirical distributions, joins charge wait-for-all (max over inputs),
+//! `anyof` stages charge wait-for-any (min — which is exactly why
+//! competitive execution pays off for high-variance stages), and every
+//! inter-stage edge charges the fabric's size-dependent transfer cost.
+//! Queueing delay per stage is the Sakasegawa M/M/c approximation at the
+//! offered load.  The estimate is intentionally mildly conservative: the
+//! tuner additionally applies a safety factor before declaring a
+//! configuration SLO-feasible.
+
+use crate::dataflow::compiler::{Plan, StageInput};
+use crate::simulation::gpu::Device;
+use crate::util::rng;
+use crate::util::stats::Summary;
+
+use super::profile::{Profile, CANDIDATE_BATCHES};
+
+/// Relative cost of a GPU worker slot versus a CPU worker slot
+/// (g4dn.xlarge vs one of two executors on a c5.2xlarge, roughly).
+pub const GPU_COST_WEIGHT: f64 = 3.0;
+
+/// Target utilization ceiling when picking an effective batch size.
+const MAX_UTIL: f64 = 0.9;
+
+/// Per-stage knobs of a candidate deployment.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StageConfig {
+    pub replicas: usize,
+    /// Maximum task batch per dequeue (1 = unbatched).
+    pub batch_cap: usize,
+}
+
+/// A full candidate configuration, mirroring `plan.segments`.
+#[derive(Debug, Clone)]
+pub struct DeployConfig {
+    pub stages: Vec<Vec<StageConfig>>,
+}
+
+impl DeployConfig {
+    pub fn uniform(plan: &Plan, replicas: usize, batch_cap: usize) -> Self {
+        DeployConfig {
+            stages: plan
+                .segments
+                .iter()
+                .map(|seg| {
+                    seg.stages
+                        .iter()
+                        .map(|_| StageConfig { replicas, batch_cap })
+                        .collect()
+                })
+                .collect(),
+        }
+    }
+
+    pub fn get(&self, seg: usize, idx: usize) -> StageConfig {
+        self.stages[seg][idx]
+    }
+
+    pub fn get_mut(&mut self, seg: usize, idx: usize) -> &mut StageConfig {
+        &mut self.stages[seg][idx]
+    }
+
+    pub fn total_replicas(&self) -> usize {
+        self.stages.iter().flatten().map(|s| s.replicas).sum()
+    }
+}
+
+/// What the cost model predicts for one configuration at one offered load.
+#[derive(Debug, Clone)]
+pub struct CostEstimate {
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    /// Maximum sustainable request rate (requests/s) before some stage
+    /// saturates, at each stage's best allowed batch size.
+    pub max_qps: f64,
+    /// GPU-weighted replica count (the quantity the tuner minimizes).
+    pub replica_cost: f64,
+    /// (seg, idx) of the throughput bottleneck stage.
+    pub bottleneck: (usize, usize),
+    /// Per-stage utilization at the offered load, mirroring segments.
+    pub util: Vec<Vec<f64>>,
+    /// Per-stage Sakasegawa queue-wait estimate (ms), mirroring segments.
+    pub wait_ms: Vec<Vec<f64>>,
+    /// Per-stage effective batch size chosen at the offered load.
+    pub batch_eff: Vec<Vec<usize>>,
+}
+
+impl CostEstimate {
+    /// Does this estimate satisfy the SLO with the given safety margin on
+    /// the latency prediction?
+    pub fn meets(&self, slo: &super::Slo, safety: f64) -> bool {
+        self.max_qps >= slo.min_qps && self.p99_ms * safety <= slo.p99_ms
+    }
+}
+
+/// Modeled one-way transfer cost for `bytes` between distinct nodes —
+/// delegates to the single shared definition the fabric charges, so the
+/// planner can never diverge from the simulated wire.
+pub fn transfer_ms(bytes: f64) -> f64 {
+    crate::net::transfer_cost_ms(bytes.max(0.0) as usize)
+}
+
+fn device_weight(d: Device) -> f64 {
+    match d {
+        Device::Cpu => 1.0,
+        Device::Gpu => GPU_COST_WEIGHT,
+    }
+}
+
+/// Estimate end-to-end latency, sustainable throughput and cost of `cfg`
+/// for `plan` at an offered load of `qps` requests per second.
+pub fn estimate(
+    plan: &Plan,
+    profile: &Profile,
+    cfg: &DeployConfig,
+    qps: f64,
+    samples: usize,
+    seed: u64,
+) -> CostEstimate {
+    let lam = qps.max(0.0) / 1000.0; // tasks per virtual ms (per stage)
+    let mut util = Vec::with_capacity(plan.segments.len());
+    let mut wait_ms = Vec::with_capacity(plan.segments.len());
+    let mut batch_eff = Vec::with_capacity(plan.segments.len());
+    let mut replica_cost = 0.0;
+    let mut max_qps = f64::INFINITY;
+    let mut bottleneck = (0usize, 0usize);
+
+    for (si, seg) in plan.segments.iter().enumerate() {
+        let mut seg_util = Vec::with_capacity(seg.stages.len());
+        let mut seg_wait = Vec::with_capacity(seg.stages.len());
+        let mut seg_batch = Vec::with_capacity(seg.stages.len());
+        for sti in 0..seg.stages.len() {
+            let sp = profile.get(si, sti);
+            let sc = cfg.get(si, sti);
+            let c = sc.replicas.max(1) as f64;
+            replica_cost += c * device_weight(sp.device);
+            let p = sp.invoke_prob;
+
+            // Effective batch: smallest candidate within the cap that keeps
+            // utilization under MAX_UTIL; else the highest-capacity one.
+            let allowed: Vec<usize> = CANDIDATE_BATCHES
+                .iter()
+                .copied()
+                .filter(|&b| b == 1 || (sp.batchable && b <= sc.batch_cap.max(1)))
+                .collect();
+            let rho_of = |b: usize| -> f64 {
+                let s = sp.mean_ms(b);
+                if s <= 0.0 || p <= 0.0 {
+                    0.0
+                } else {
+                    lam * p * s / (c * b as f64)
+                }
+            };
+            let mut b_eff = *allowed.last().unwrap_or(&1);
+            let mut best_rho = f64::INFINITY;
+            for &b in &allowed {
+                let r = rho_of(b);
+                if r < MAX_UTIL {
+                    b_eff = b;
+                    break;
+                }
+                if r < best_rho {
+                    b_eff = b;
+                    best_rho = r;
+                }
+            }
+            let rho = rho_of(b_eff);
+
+            // Sakasegawa M/M/c wait at the effective batch:
+            // Wq ≈ ρ^(√(2(c+1))−1) / (1−ρ) · E[S]/c, exact M/M/1 at c=1.
+            let s_task = p * sp.mean_ms(b_eff) / b_eff as f64; // per task
+            let wq = if lam <= 0.0 || s_task <= 0.0 {
+                0.0
+            } else if rho >= 1.0 {
+                f64::INFINITY
+            } else {
+                rho.powf((2.0 * (c + 1.0)).sqrt() - 1.0) / (1.0 - rho) * s_task / c
+            };
+
+            // Stage throughput ceiling at its best allowed batch.
+            if p > 0.0 {
+                let cap_tasks_per_ms = allowed
+                    .iter()
+                    .map(|&b| {
+                        let s = sp.mean_ms(b);
+                        if s <= 0.0 {
+                            f64::INFINITY
+                        } else {
+                            c * b as f64 / s
+                        }
+                    })
+                    .fold(0.0, f64::max);
+                let stage_qps = 1000.0 * cap_tasks_per_ms / p;
+                if stage_qps < max_qps {
+                    max_qps = stage_qps;
+                    bottleneck = (si, sti);
+                }
+            }
+
+            seg_util.push(rho);
+            seg_wait.push(wq);
+            seg_batch.push(b_eff);
+        }
+        util.push(seg_util);
+        wait_ms.push(seg_wait);
+        batch_eff.push(seg_batch);
+    }
+
+    // Monte-Carlo latency composition over the stage graph.
+    let mut totals = Summary::new();
+    let mut mc = rng::for_case(seed, 0xC057);
+    for _ in 0..samples.max(1) {
+        let mut seg_start = 0.0f64; // request enters at t=0
+        for (si, seg) in plan.segments.iter().enumerate() {
+            let n = seg.stages.len();
+            let mut done: Vec<Option<f64>> = vec![None; n];
+            let mut remaining = n;
+            while remaining > 0 {
+                let mut progressed = false;
+                for i in 0..n {
+                    if done[i].is_some() {
+                        continue;
+                    }
+                    let spec = &seg.stages[i];
+                    let mut arrival: Option<f64> = None;
+                    let mut ready = true;
+                    for inp in &spec.inputs {
+                        let t = match inp {
+                            StageInput::Source => Some(seg_start),
+                            StageInput::Stage(p) => done[*p],
+                        };
+                        match t {
+                            Some(t) => {
+                                arrival = Some(match arrival {
+                                    None => t,
+                                    Some(a) => {
+                                        if spec.wait_any {
+                                            a.min(t)
+                                        } else {
+                                            a.max(t)
+                                        }
+                                    }
+                                });
+                            }
+                            None => {
+                                if !spec.wait_any {
+                                    ready = false;
+                                    break;
+                                }
+                            }
+                        }
+                    }
+                    // wait-any needs *all* inputs resolved to know the min
+                    // finisher; wait-for-all needs all anyway.
+                    if !ready || arrival.is_none() {
+                        continue;
+                    }
+                    if spec.wait_any
+                        && spec
+                            .inputs
+                            .iter()
+                            .any(|inp| matches!(inp, StageInput::Stage(p) if done[*p].is_none()))
+                    {
+                        continue;
+                    }
+                    let sp = profile.get(si, i);
+                    let invoked = sp.invoke_prob >= 1.0 || mc.f64() < sp.invoke_prob;
+                    let serv = if invoked {
+                        let s = sp.samples_at(batch_eff[si][i]);
+                        if s.is_empty() {
+                            0.0
+                        } else {
+                            s[mc.below(s.len() as u64) as usize]
+                        }
+                    } else {
+                        0.0
+                    };
+                    done[i] = Some(
+                        arrival.unwrap()
+                            + transfer_ms(sp.in_bytes)
+                            + wait_ms[si][i]
+                            + serv,
+                    );
+                    remaining -= 1;
+                    progressed = true;
+                }
+                if !progressed {
+                    // Defensive: a malformed graph would spin forever.
+                    for d in done.iter_mut() {
+                        if d.is_none() {
+                            *d = Some(f64::INFINITY);
+                        }
+                    }
+                    remaining = 0;
+                }
+            }
+            seg_start = done[seg.output].unwrap_or(f64::INFINITY);
+        }
+        totals.add(seg_start + transfer_ms(profile.output_bytes));
+    }
+
+    CostEstimate {
+        p50_ms: totals.median(),
+        p99_ms: totals.p99(),
+        max_qps,
+        replica_cost,
+        bottleneck,
+        util,
+        wait_ms,
+        batch_eff,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataflow::compiler::{compile, OptFlags};
+    use crate::dataflow::operator::{Func, JoinHow, SleepDist};
+    use crate::dataflow::table::{DType, Schema};
+    use crate::dataflow::Dataflow;
+    use crate::planner::profiler::{profile_plan, PlannerCtx};
+
+    fn est(
+        fl: &Dataflow,
+        opts: &OptFlags,
+        cfg_replicas: usize,
+        qps: f64,
+    ) -> (Plan, Profile, CostEstimate) {
+        let plan = compile(fl, opts).unwrap();
+        let prof = profile_plan(&plan, fl.input_schema(), &PlannerCtx::default()).unwrap();
+        let cfg = DeployConfig::uniform(&plan, cfg_replicas, 1);
+        let e = estimate(&plan, &prof, &cfg, qps, 400, 7);
+        (plan, prof, e)
+    }
+
+    fn sleep_flow(ms: &[f64]) -> Dataflow {
+        let mut fl = Dataflow::new("cchain", Schema::new(vec![("x", DType::F64)]));
+        let mut cur = fl.input();
+        for (i, &m) in ms.iter().enumerate() {
+            cur = fl
+                .map(cur, Func::sleep(&format!("s{i}"), SleepDist::ConstMs(m)))
+                .unwrap();
+        }
+        fl.set_output(cur).unwrap();
+        fl
+    }
+
+    #[test]
+    fn single_stage_no_load_matches_service() {
+        let fl = sleep_flow(&[20.0]);
+        let (_, _, e) = est(&fl, &OptFlags::none(), 1, 1.0);
+        // service + client hop in + return hop (tiny tables ≈ hop_base).
+        assert!(e.p50_ms >= 20.0 && e.p50_ms < 25.0, "p50={}", e.p50_ms);
+        assert!(e.p99_ms >= e.p50_ms && e.p99_ms < 26.0, "p99={}", e.p99_ms);
+        assert!(e.replica_cost == 1.0);
+    }
+
+    #[test]
+    fn linear_chain_sums() {
+        let fl = sleep_flow(&[10.0, 30.0]);
+        let (_, _, e) = est(&fl, &OptFlags::none(), 1, 1.0);
+        assert!(e.p50_ms >= 40.0 && e.p50_ms < 48.0, "p50={}", e.p50_ms);
+        // Fusion removes the inter-stage hop.
+        let (_, _, fused) = est(&fl, &OptFlags::none().with_fusion(), 1, 1.0);
+        assert!(fused.p50_ms < e.p50_ms, "{} !< {}", fused.p50_ms, e.p50_ms);
+    }
+
+    #[test]
+    fn anyof_takes_min_branch() {
+        let mut fl = Dataflow::new("cany", Schema::new(vec![("x", DType::F64)]));
+        let a = fl
+            .map(fl.input(), Func::sleep("fast", SleepDist::ConstMs(5.0)))
+            .unwrap();
+        let b = fl
+            .map(fl.input(), Func::sleep("slow", SleepDist::ConstMs(80.0)))
+            .unwrap();
+        let any = fl.anyof(&[a, b]).unwrap();
+        fl.set_output(any).unwrap();
+        let plan = compile(&fl, &OptFlags::none()).unwrap();
+        let prof =
+            profile_plan(&plan, fl.input_schema(), &PlannerCtx::default()).unwrap();
+        let cfg = DeployConfig::uniform(&plan, 1, 1);
+        let e = estimate(&plan, &prof, &cfg, 1.0, 200, 7);
+        assert!(e.p50_ms < 30.0, "anyof should track the fast branch: {}", e.p50_ms);
+    }
+
+    #[test]
+    fn join_waits_for_slowest_branch() {
+        let mut fl = Dataflow::new("cjoin", Schema::new(vec![("x", DType::F64)]));
+        let a = fl
+            .map(fl.input(), Func::sleep("fast", SleepDist::ConstMs(5.0)))
+            .unwrap();
+        let b = fl
+            .map(fl.input(), Func::sleep("slow", SleepDist::ConstMs(80.0)))
+            .unwrap();
+        let j = fl.join(a, b, None, JoinHow::Inner).unwrap();
+        fl.set_output(j).unwrap();
+        let plan = compile(&fl, &OptFlags::none()).unwrap();
+        let prof =
+            profile_plan(&plan, fl.input_schema(), &PlannerCtx::default()).unwrap();
+        let cfg = DeployConfig::uniform(&plan, 1, 1);
+        let e = estimate(&plan, &prof, &cfg, 1.0, 200, 7);
+        assert!(e.p50_ms >= 80.0, "join must wait for the slow branch: {}", e.p50_ms);
+    }
+
+    #[test]
+    fn capacity_and_saturation() {
+        let fl = sleep_flow(&[20.0]);
+        let (_, _, e) = est(&fl, &OptFlags::none(), 1, 1.0);
+        // One replica of a 20ms stage ⇒ ~50 req/s ceiling.
+        assert!(e.max_qps > 40.0 && e.max_qps < 60.0, "max_qps={}", e.max_qps);
+        // Past saturation the queue estimate blows up.
+        let (_, _, over) = est(&fl, &OptFlags::none(), 1, 100.0);
+        assert!(over.p99_ms.is_infinite(), "p99={}", over.p99_ms);
+        // Two replicas double the ceiling.
+        let (_, _, two) = est(&fl, &OptFlags::none(), 2, 1.0);
+        assert!(two.max_qps > 80.0, "max_qps={}", two.max_qps);
+        assert_eq!(two.replica_cost, 2.0);
+    }
+
+    #[test]
+    fn queue_wait_grows_with_load() {
+        let fl = sleep_flow(&[20.0]);
+        let (_, _, light) = est(&fl, &OptFlags::none(), 2, 5.0);
+        let (_, _, heavy) = est(&fl, &OptFlags::none(), 2, 80.0);
+        assert!(light.wait_ms[0][0] < heavy.wait_ms[0][0]);
+        assert!(heavy.p99_ms > light.p99_ms);
+    }
+}

@@ -1,0 +1,103 @@
+//! SLO-aware pipeline planner: profiler, cost model, and auto-tuned
+//! deployment plans.
+//!
+//! The paper applies its optimizations — fusion, competitive execution,
+//! batching, autoscaling — as manually chosen rewrite flags and leaves
+//! "which optimizations, at what settings, for a given latency target" to
+//! the operator.  This subsystem closes that loop, InferLine-style:
+//!
+//! * [`profiler`] runs short calibration executions of a compiled
+//!   [`Plan`](crate::dataflow::compiler::Plan) through the local operator
+//!   semantics and the calibrated service-time model, recording per-stage
+//!   latency samples versus batch size, invocation probability
+//!   (selectivity), and data-movement sizes into a [`Profile`].
+//! * [`cost`] composes stage profiles along the DAG — queueing
+//!   (Sakasegawa M/M/c waits), network fabric transfer costs, wait-for-any
+//!   versus wait-for-all gathering — to estimate end-to-end p50/p99
+//!   latency, the maximum sustainable QPS, and the (GPU-weighted) replica
+//!   cost of a candidate configuration.
+//! * [`tuner`] searches the discrete configuration space — optimization
+//!   flag variants (including competitive replication of high-variance
+//!   operators), per-stage batch caps and per-stage replica counts — for
+//!   the cheapest configuration whose estimated tail latency and
+//!   throughput meet a caller-supplied [`Slo`], returning a typed
+//!   [`DeploymentPlan`].
+//!
+//! Entry points: [`crate::dataflow::compile_for_slo`] (schema-synthesized
+//! calibration inputs) or [`plan_for_slo`] with a custom [`PlannerCtx`]
+//! (real inputs, inference service, pre-populated KVS).  A
+//! [`DeploymentPlan`] deploys via
+//! [`Cluster::register_planned`](crate::cloudburst::Cluster::register_planned),
+//! which pre-provisions the planned replicas, pins per-stage batch caps,
+//! and hands the autoscaler the plan as its floor/ceiling.
+
+pub mod cost;
+pub mod profile;
+pub mod profiler;
+pub mod tuner;
+
+pub use cost::{estimate, CostEstimate, DeployConfig, StageConfig};
+pub use profile::{Profile, StageProfile, CANDIDATE_BATCHES};
+pub use profiler::{profile_plan, PlannerCtx};
+pub use tuner::{plan_for_slo, tune, DeploymentPlan, StagePlan, TunerOptions};
+
+use crate::config;
+
+/// A service-level objective for one pipeline: a tail-latency target plus
+/// the minimum throughput the deployment must sustain.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Slo {
+    /// 99th-percentile end-to-end latency target, virtual ms.
+    pub p99_ms: f64,
+    /// Minimum sustainable request rate, requests per second.
+    pub min_qps: f64,
+}
+
+impl Slo {
+    pub fn new(p99_ms: f64, min_qps: f64) -> Slo {
+        Slo { p99_ms, min_qps }
+    }
+}
+
+/// Capacity limits the tuner must respect (derived from the simulated
+/// cluster's pool sizes and the autoscaler's per-function cap).
+#[derive(Debug, Clone, Copy)]
+pub struct ResourceCaps {
+    /// Maximum replicas of any single stage.
+    pub per_stage: usize,
+    /// Total CPU worker slots across the pool (2 per CPU node).
+    pub cpu_slots: usize,
+    /// Total GPU worker slots across the pool (1 per GPU node).
+    pub gpu_slots: usize,
+}
+
+impl Default for ResourceCaps {
+    fn default() -> Self {
+        let c = config::global();
+        ResourceCaps {
+            per_stage: c.autoscaler.max_replicas,
+            cpu_slots: c.cluster.cpu_pool_nodes * 2,
+            gpu_slots: c.cluster.gpu_pool_nodes,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn caps_from_config() {
+        let caps = ResourceCaps::default();
+        assert!(caps.per_stage >= 1);
+        assert!(caps.cpu_slots >= 2);
+        assert!(caps.gpu_slots >= 1);
+    }
+
+    #[test]
+    fn slo_constructor() {
+        let slo = Slo::new(250.0, 30.0);
+        assert_eq!(slo.p99_ms, 250.0);
+        assert_eq!(slo.min_qps, 30.0);
+    }
+}

@@ -1,0 +1,163 @@
+//! Profile data model: what the calibration runs record about each
+//! compiled stage, and how the cost model queries it.
+
+use crate::simulation::gpu::Device;
+use crate::util::stats::Summary;
+
+/// Task batch sizes the profiler samples and the tuner may pin.  Chosen to
+/// bracket the paper's Fig 8 sweep (GPU knee near 10–20).
+pub const CANDIDATE_BATCHES: &[usize] = &[1, 2, 4, 8, 10, 16, 20];
+
+/// Calibration record for one plan stage.
+#[derive(Debug, Clone)]
+pub struct StageProfile {
+    pub label: String,
+    pub seg: usize,
+    pub idx: usize,
+    pub device: Device,
+    pub batchable: bool,
+    pub wait_any: bool,
+    /// Empirical service-time samples (virtual ms) per candidate task
+    /// batch size, in [`CANDIDATE_BATCHES`] order.  A "task batch" of b
+    /// combines b requests' tables into one invocation; row counts scale
+    /// with the stage's observed rows-per-request.
+    pub service_ms: Vec<(usize, Vec<f64>)>,
+    /// Fraction of calibration requests that reached this stage with at
+    /// least one row (selectivity of upstream filters/routers).
+    pub invoke_prob: f64,
+    /// Mean rows entering the stage per invoked request.
+    pub rows_in: f64,
+    /// Mean inbound bytes per request (max over input edges, matching the
+    /// executor's overlapped-transfer charging).
+    pub in_bytes: f64,
+    /// Mean outbound bytes per request.
+    pub out_bytes: f64,
+}
+
+impl StageProfile {
+    /// Samples at the smallest profiled batch >= `batch` (the executor
+    /// rounds dynamic batches up the same way).
+    pub fn samples_at(&self, batch: usize) -> &[f64] {
+        for (b, s) in &self.service_ms {
+            if *b >= batch {
+                return s;
+            }
+        }
+        &self
+            .service_ms
+            .last()
+            .expect("stage profile has no batch samples")
+            .1
+    }
+
+    pub fn mean_ms(&self, batch: usize) -> f64 {
+        let s = self.samples_at(batch);
+        if s.is_empty() {
+            return 0.0;
+        }
+        s.iter().sum::<f64>() / s.len() as f64
+    }
+
+    pub fn p99_ms(&self, batch: usize) -> f64 {
+        let mut sm = Summary::new();
+        for &x in self.samples_at(batch) {
+            sm.add(x);
+        }
+        if sm.is_empty() {
+            0.0
+        } else {
+            sm.p99()
+        }
+    }
+
+    /// Coefficient of variation of the batch-1 service time (the tuner's
+    /// competitive-execution signal: high-variance stages profit from
+    /// racing replicas).
+    pub fn service_cv(&self) -> f64 {
+        let s = self.samples_at(1);
+        if s.len() < 2 {
+            return 0.0;
+        }
+        let mean = s.iter().sum::<f64>() / s.len() as f64;
+        if mean <= 0.0 {
+            return 0.0;
+        }
+        let var = s.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / s.len() as f64;
+        var.sqrt() / mean
+    }
+}
+
+/// A full pipeline profile: per-stage records mirroring
+/// `Plan.segments`, plus the request boundary sizes.
+#[derive(Debug, Clone)]
+pub struct Profile {
+    /// `stages[seg][idx]` mirrors `plan.segments[seg].stages[idx]`.
+    pub stages: Vec<Vec<StageProfile>>,
+    /// Mean request input bytes (client → entry stages).
+    pub input_bytes: f64,
+    /// Mean final output bytes (exit stage → client).
+    pub output_bytes: f64,
+    /// Calibration requests the observations were averaged over.
+    pub calib_requests: usize,
+}
+
+impl Profile {
+    pub fn get(&self, seg: usize, idx: usize) -> &StageProfile {
+        &self.stages[seg][idx]
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &StageProfile> {
+        self.stages.iter().flatten()
+    }
+
+    pub fn n_stages(&self) -> usize {
+        self.stages.iter().map(Vec::len).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn prof(samples: Vec<(usize, Vec<f64>)>) -> StageProfile {
+        StageProfile {
+            label: "t".into(),
+            seg: 0,
+            idx: 0,
+            device: Device::Cpu,
+            batchable: true,
+            wait_any: false,
+            service_ms: samples,
+            invoke_prob: 1.0,
+            rows_in: 1.0,
+            in_bytes: 100.0,
+            out_bytes: 100.0,
+        }
+    }
+
+    #[test]
+    fn batch_rounding_up() {
+        let p = prof(vec![(1, vec![10.0]), (4, vec![20.0]), (10, vec![50.0])]);
+        assert_eq!(p.samples_at(1), &[10.0]);
+        assert_eq!(p.samples_at(2), &[20.0]);
+        assert_eq!(p.samples_at(4), &[20.0]);
+        assert_eq!(p.samples_at(7), &[50.0]);
+        // Past the last profiled batch: clamp to the largest.
+        assert_eq!(p.samples_at(64), &[50.0]);
+    }
+
+    #[test]
+    fn mean_and_p99() {
+        let p = prof(vec![(1, vec![10.0, 20.0, 30.0])]);
+        assert!((p.mean_ms(1) - 20.0).abs() < 1e-9);
+        assert!(p.p99_ms(1) >= 29.0);
+    }
+
+    #[test]
+    fn cv_zero_for_constant() {
+        let p = prof(vec![(1, vec![5.0, 5.0, 5.0, 5.0])]);
+        assert!(p.service_cv() < 1e-9);
+        let noisy = prof(vec![(1, vec![1.0, 100.0, 1.0, 100.0])]);
+        assert!(noisy.service_cv() > 0.5);
+    }
+}

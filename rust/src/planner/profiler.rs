@@ -1,0 +1,496 @@
+//! Calibration profiler: runs a compiled plan's stages through the local
+//! operator semantics (the exec_local oracle) over a handful of
+//! calibration requests, and samples the calibrated service-time model per
+//! stage and batch size — producing the [`Profile`] the cost model and
+//! tuner consume.
+//!
+//! Service times are *sampled analytically* from the same
+//! [`service_time_ms`](crate::simulation::gpu::service_time_ms) curves and
+//! sleep distributions the simulated cluster charges, rather than slept
+//! through the virtual clock, so profiling a pipeline takes milliseconds
+//! of real time regardless of the modeled costs.
+
+use std::sync::{Arc, Mutex};
+
+use anyhow::{bail, Context, Result};
+
+use crate::anna::{KvsClient, Store};
+use crate::dataflow::compiler::{Plan, PlanStage, StageInput};
+use crate::dataflow::exec_local::apply_op;
+use crate::dataflow::operator::{ExecCtx, FuncBody, LookupKey, OpKind};
+use crate::dataflow::table::{DType, Schema, Table, Value};
+use crate::net::NodeId;
+use crate::runtime::InferClient;
+use crate::simulation::gpu::{service_time_ms, Device};
+use crate::util::rng::{self, Rng};
+
+use super::profile::{Profile, StageProfile, CANDIDATE_BATCHES};
+
+/// Everything the profiler may need to execute calibration requests.  All
+/// fields have workable defaults: inputs are synthesized from the flow's
+/// input schema, lookups hit an in-memory stand-in store, and model stages
+/// fail with a clear error unless an inference client is supplied.
+#[derive(Clone)]
+pub struct PlannerCtx {
+    /// Calibration input generator (e.g. a `PipelineSpec::make_input`).
+    pub make_input: Option<Arc<dyn Fn(usize) -> Table + Send + Sync>>,
+    /// Inference service handle for model-backed stages.
+    pub infer: Option<InferClient>,
+    /// Pre-populated KVS for lookup stages (e.g. after a pipeline's
+    /// `setup` ran against it).
+    pub kvs: Option<KvsClient>,
+    /// Calibration requests per profile.
+    pub calib_requests: usize,
+    /// Service-time samples drawn per (stage, batch size) point.
+    pub samples: usize,
+    /// Payload size for synthesized lookup objects, bytes.
+    pub lookup_bytes: usize,
+    /// RNG stream label (mixed with `CLOUDFLOW_SEED`).
+    pub seed: u64,
+}
+
+impl Default for PlannerCtx {
+    fn default() -> Self {
+        PlannerCtx {
+            make_input: None,
+            infer: None,
+            kvs: None,
+            calib_requests: 8,
+            samples: 64,
+            lookup_bytes: 64 * 1024,
+            seed: 0x51_0_51,
+        }
+    }
+}
+
+impl PlannerCtx {
+    pub fn with_make_input(
+        mut self,
+        f: Arc<dyn Fn(usize) -> Table + Send + Sync>,
+    ) -> Self {
+        self.make_input = Some(f);
+        self
+    }
+
+    pub fn with_infer(mut self, infer: InferClient) -> Self {
+        self.infer = Some(infer);
+        self
+    }
+
+    pub fn with_kvs(mut self, kvs: KvsClient) -> Self {
+        self.kvs = Some(kvs);
+        self
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Shrink calibration for property tests / smoke runs.
+    pub fn quick(mut self) -> Self {
+        self.calib_requests = 3;
+        self.samples = 24;
+        self
+    }
+}
+
+/// Profile a compiled plan: local calibration executions for selectivity
+/// and data sizes, analytic sampling for service-time distributions.
+pub fn profile_plan(plan: &Plan, input_schema: &Schema, ctx: &PlannerCtx) -> Result<Profile> {
+    let n_req = ctx.calib_requests.max(1);
+    let mut rng = rng::for_case(ctx.seed, 0x9A0F);
+
+    // Calibration inputs up front (lookup synthesis scans them for keys).
+    let inputs: Vec<Table> = (0..n_req)
+        .map(|i| match &ctx.make_input {
+            Some(f) => f(i),
+            None => synth_input(input_schema, i),
+        })
+        .collect();
+    for (i, t) in inputs.iter().enumerate() {
+        if t.schema() != input_schema {
+            bail!(
+                "calibration input {i} schema {} does not match flow input {}",
+                t.schema(),
+                input_schema
+            );
+        }
+    }
+
+    let kvs = match &ctx.kvs {
+        Some(k) => k.clone(),
+        None => {
+            let k = KvsClient::direct(Arc::new(Store::new(1)), NodeId::CLIENT);
+            seed_lookup_keys(plan, &inputs, &k, ctx.lookup_bytes, &mut rng);
+            k
+        }
+    };
+    let exec = ExecCtx {
+        kvs: Some(kvs),
+        infer: ctx.infer.clone(),
+        rng: Mutex::new(rng.split()),
+        device: Device::Cpu,
+        timed: false,
+    };
+
+    // Per-stage observation accumulators, mirroring plan.segments.
+    struct Obs {
+        invoked: usize,
+        rows_in: f64,
+        in_bytes: f64,
+        out_bytes: f64,
+    }
+    let mut obs: Vec<Vec<Obs>> = plan
+        .segments
+        .iter()
+        .map(|seg| {
+            seg.stages
+                .iter()
+                .map(|_| Obs { invoked: 0, rows_in: 0.0, in_bytes: 0.0, out_bytes: 0.0 })
+                .collect()
+        })
+        .collect();
+    let mut input_bytes = 0.0;
+    let mut output_bytes = 0.0;
+
+    for input in &inputs {
+        input_bytes += input.size_bytes() as f64;
+        let mut boundary = input.clone();
+        for (si, seg) in plan.segments.iter().enumerate() {
+            let outs = run_segment(&exec, &seg.stages, &boundary, |sti, ins, out| {
+                let o = &mut obs[si][sti];
+                let head = &seg.stages[sti].ops[0];
+                let rows: usize = match head {
+                    OpKind::Union => ins.iter().map(|t| t.len()).sum(),
+                    _ => ins.iter().map(|t| t.len()).max().unwrap_or(0),
+                };
+                if rows > 0 {
+                    o.invoked += 1;
+                    o.rows_in += rows as f64;
+                }
+                o.in_bytes += ins
+                    .iter()
+                    .map(|t| t.size_bytes() as f64)
+                    .fold(0.0, f64::max);
+                o.out_bytes += out.size_bytes() as f64;
+            })
+            .with_context(|| format!("profiling segment {si} of plan {:?}", plan.name))?;
+            boundary = outs[seg.output].clone();
+        }
+        output_bytes += boundary.size_bytes() as f64;
+    }
+
+    // Analytic service-time sampling per stage and candidate batch.
+    let mut stages: Vec<Vec<StageProfile>> = Vec::with_capacity(plan.segments.len());
+    for (si, seg) in plan.segments.iter().enumerate() {
+        let mut seg_profiles = Vec::with_capacity(seg.stages.len());
+        for (sti, spec) in seg.stages.iter().enumerate() {
+            let o = &obs[si][sti];
+            let rows_per_req = if o.invoked > 0 {
+                (o.rows_in / o.invoked as f64).max(1.0)
+            } else {
+                1.0
+            };
+            let mut service_ms = Vec::with_capacity(CANDIDATE_BATCHES.len());
+            for &b in CANDIDATE_BATCHES {
+                let rows = (rows_per_req * b as f64).ceil() as usize;
+                let samples: Vec<f64> = (0..ctx.samples.max(1))
+                    .map(|_| stage_service_sample(spec, rows.max(1), &mut rng))
+                    .collect();
+                service_ms.push((b, samples));
+            }
+            seg_profiles.push(StageProfile {
+                label: spec.name.clone(),
+                seg: si,
+                idx: sti,
+                device: spec.device,
+                batchable: spec.batchable,
+                wait_any: spec.wait_any,
+                service_ms,
+                invoke_prob: o.invoked as f64 / n_req as f64,
+                rows_in: rows_per_req,
+                in_bytes: o.in_bytes / n_req as f64,
+                out_bytes: o.out_bytes / n_req as f64,
+            });
+        }
+        stages.push(seg_profiles);
+    }
+
+    Ok(Profile {
+        stages,
+        input_bytes: input_bytes / n_req as f64,
+        output_bytes: output_bytes / n_req as f64,
+        calib_requests: n_req,
+    })
+}
+
+/// Execute one segment's stages locally in dependency order, invoking
+/// `observe(stage_idx, inputs, output)` for each.  Returns every stage's
+/// output table.
+fn run_segment(
+    exec: &ExecCtx,
+    stages: &[PlanStage],
+    source: &Table,
+    mut observe: impl FnMut(usize, &[Table], &Table),
+) -> Result<Vec<Table>> {
+    let n = stages.len();
+    let mut outs: Vec<Option<Table>> = vec![None; n];
+    let mut done = 0usize;
+    while done < n {
+        let mut progressed = false;
+        for i in 0..n {
+            if outs[i].is_some() {
+                continue;
+            }
+            let spec = &stages[i];
+            // Gather available inputs; wait-any fires on the first one.
+            let mut ins: Vec<Table> = Vec::with_capacity(spec.inputs.len());
+            let mut ready = true;
+            for inp in &spec.inputs {
+                match inp {
+                    StageInput::Source => ins.push(source.clone()),
+                    StageInput::Stage(p) => match &outs[*p] {
+                        Some(t) => ins.push(t.clone()),
+                        None => {
+                            if spec.wait_any {
+                                continue;
+                            }
+                            ready = false;
+                            break;
+                        }
+                    },
+                }
+            }
+            if !ready || (spec.wait_any && ins.is_empty()) {
+                continue;
+            }
+            let picked: Vec<Table> = if spec.wait_any {
+                vec![ins.swap_remove(0)]
+            } else {
+                ins
+            };
+            let out = run_stage_ops(exec, spec, picked.clone())
+                .with_context(|| format!("stage {:?}", spec.name))?;
+            observe(i, &picked, &out);
+            outs[i] = Some(out);
+            done += 1;
+            progressed = true;
+        }
+        if !progressed {
+            bail!("stage graph made no progress (cycle or missing input)");
+        }
+    }
+    Ok(outs.into_iter().map(|o| o.unwrap()).collect())
+}
+
+/// Run a stage's fused op chain (head may be multi-input).
+fn run_stage_ops(exec: &ExecCtx, spec: &PlanStage, inputs: Vec<Table>) -> Result<Table> {
+    let mut t = apply_op(exec, &spec.ops[0], inputs)?;
+    for op in &spec.ops[1..] {
+        t = apply_op(exec, op, vec![t])?;
+    }
+    Ok(t)
+}
+
+/// One analytic draw of a stage's modeled service time at `rows` input
+/// rows: the sum over the fused chain of each op's sleep-distribution or
+/// calibrated model service cost (mirroring what the executor charges).
+pub fn stage_service_sample(spec: &PlanStage, rows: usize, rng: &mut Rng) -> f64 {
+    let mut ms = 0.0;
+    for op in &spec.ops {
+        ms += op_service_sample(op, spec.device, rows, rng);
+    }
+    ms
+}
+
+fn op_service_sample(op: &OpKind, device: Device, rows: usize, rng: &mut Rng) -> f64 {
+    match op {
+        OpKind::Map(f) => {
+            let mut ms = 0.0;
+            if let FuncBody::Sleep(dist) = &f.body {
+                ms += dist.sample_ms(rng);
+            }
+            if let Some(sm) = &f.service_model {
+                ms += service_time_ms(sm, device, rows, rng);
+            }
+            ms
+        }
+        OpKind::Fuse(ops) => ops
+            .iter()
+            .map(|o| op_service_sample(o, device, rows, rng))
+            .sum(),
+        _ => 0.0,
+    }
+}
+
+/// Synthesize one calibration input row per request from the schema alone
+/// (used when the caller supplies no generator; column contents only need
+/// to satisfy the operators' type expectations).
+fn synth_input(schema: &Schema, case: usize) -> Table {
+    let mut t = Table::new(schema.clone());
+    let mut rng = rng::for_case(0x5E1F, case as u64);
+    let values: Vec<Value> = schema
+        .cols()
+        .iter()
+        .map(|(_, dt)| match dt {
+            DType::Str => Value::Str(format!("calib-{}", rng.below(4))),
+            DType::I64 => Value::I64(rng.range(0, 100)),
+            DType::F64 => Value::F64(rng.f64()),
+            DType::Bool => Value::Bool(rng.bool(0.5)),
+            DType::Blob => Value::blob(rng.bytes(1024)),
+            DType::F32s => {
+                Value::f32s((0..128).map(|_| rng.f64() as f32).collect())
+            }
+            DType::I32s => {
+                Value::i32s((0..32).map(|_| rng.below(512) as i32).collect())
+            }
+        })
+        .collect();
+    t.push_fresh(values).expect("synth input row");
+    t
+}
+
+/// Populate the stand-in store so every lookup the plan can issue during
+/// calibration resolves: constant keys directly, column keys from the
+/// string values observed in the calibration inputs.
+fn seed_lookup_keys(
+    plan: &Plan,
+    inputs: &[Table],
+    kvs: &KvsClient,
+    payload_bytes: usize,
+    rng: &mut Rng,
+) {
+    let mut keys: Vec<String> = Vec::new();
+    for seg in &plan.segments {
+        for stage in &seg.stages {
+            for op in &stage.ops {
+                if let OpKind::Lookup { key, .. } = op {
+                    match key {
+                        LookupKey::Const(k) => keys.push(k.clone()),
+                        LookupKey::Column(c) => {
+                            for t in inputs {
+                                if !t.schema().has(c) {
+                                    continue;
+                                }
+                                for row in t.rows() {
+                                    if let Ok(v) = t.value_of(row, c) {
+                                        if let Ok(s) = v.as_str() {
+                                            keys.push(s.to_string());
+                                        }
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    keys.sort();
+    keys.dedup();
+    for k in keys {
+        kvs.put_free(&k, rng.bytes(payload_bytes));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataflow::compiler::{compile, OptFlags};
+    use crate::dataflow::operator::{CmpOp, Func, Predicate, SleepDist};
+    use crate::dataflow::Dataflow;
+
+    fn sleep_chain() -> Dataflow {
+        let mut fl = Dataflow::new("pchain", Schema::new(vec![("x", DType::F64)]));
+        let a = fl
+            .map(fl.input(), Func::sleep("a", SleepDist::ConstMs(10.0)))
+            .unwrap();
+        let b = fl
+            .map(a, Func::sleep("b", SleepDist::ConstMs(30.0)))
+            .unwrap();
+        fl.set_output(b).unwrap();
+        fl
+    }
+
+    #[test]
+    fn profiles_sleep_chain() {
+        let fl = sleep_chain();
+        let plan = compile(&fl, &OptFlags::none()).unwrap();
+        let prof =
+            profile_plan(&plan, fl.input_schema(), &PlannerCtx::default()).unwrap();
+        assert_eq!(prof.n_stages(), 2);
+        let a = prof.get(0, 0);
+        assert!((a.mean_ms(1) - 10.0).abs() < 1e-6, "a={}", a.mean_ms(1));
+        assert_eq!(a.invoke_prob, 1.0);
+        let b = prof.get(0, 1);
+        assert!((b.mean_ms(1) - 30.0).abs() < 1e-6);
+        assert!(prof.input_bytes > 0.0);
+        assert!(prof.output_bytes > 0.0);
+    }
+
+    #[test]
+    fn fused_stage_sums_service() {
+        let fl = sleep_chain();
+        let plan = compile(&fl, &OptFlags::none().with_fusion()).unwrap();
+        let prof =
+            profile_plan(&plan, fl.input_schema(), &PlannerCtx::default()).unwrap();
+        assert_eq!(prof.n_stages(), 1);
+        assert!((prof.get(0, 0).mean_ms(1) - 40.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn filter_selectivity_observed() {
+        // conf < 0.5 passes roughly half the synthesized requests.
+        let mut fl = Dataflow::new("psel", Schema::new(vec![("x", DType::F64)]));
+        let f = fl
+            .filter(fl.input(), Predicate::threshold("x", CmpOp::Lt, 0.5))
+            .unwrap();
+        let tail = fl
+            .map(f, Func::sleep("tail", SleepDist::ConstMs(5.0)))
+            .unwrap();
+        fl.set_output(tail).unwrap();
+        let plan = compile(&fl, &OptFlags::none()).unwrap();
+        let ctx = PlannerCtx { calib_requests: 32, ..PlannerCtx::default() };
+        let prof = profile_plan(&plan, fl.input_schema(), &ctx).unwrap();
+        let tail_prof = prof.get(0, 1);
+        assert!(
+            tail_prof.invoke_prob > 0.1 && tail_prof.invoke_prob < 0.9,
+            "selectivity {} not observed",
+            tail_prof.invoke_prob
+        );
+    }
+
+    #[test]
+    fn lookup_keys_synthesized() {
+        let mut fl = Dataflow::new("plk", Schema::new(vec![("k", DType::Str)]));
+        let lk = fl
+            .lookup(fl.input(), LookupKey::Column("k".into()), "payload")
+            .unwrap();
+        fl.set_output(lk).unwrap();
+        let plan = compile(&fl, &OptFlags::none()).unwrap();
+        let prof =
+            profile_plan(&plan, fl.input_schema(), &PlannerCtx::default()).unwrap();
+        // Lookup outputs carry the synthesized payload.
+        assert!(prof.get(0, 0).out_bytes > 1000.0);
+    }
+
+    #[test]
+    fn anyof_profiled_via_first_input() {
+        let mut fl = Dataflow::new("pany", Schema::new(vec![("x", DType::F64)]));
+        let a = fl
+            .map(fl.input(), Func::sleep("fast", SleepDist::ConstMs(1.0)))
+            .unwrap();
+        let b = fl
+            .map(fl.input(), Func::sleep("slow", SleepDist::ConstMs(50.0)))
+            .unwrap();
+        let any = fl.anyof(&[a, b]).unwrap();
+        fl.set_output(any).unwrap();
+        let plan = compile(&fl, &OptFlags::none()).unwrap();
+        let prof =
+            profile_plan(&plan, fl.input_schema(), &PlannerCtx::default()).unwrap();
+        assert_eq!(prof.n_stages(), 3);
+        let any_prof = prof.iter().find(|s| s.wait_any).unwrap();
+        assert_eq!(any_prof.invoke_prob, 1.0);
+    }
+}

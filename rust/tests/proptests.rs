@@ -228,6 +228,84 @@ fn prop_argmax_attains_max() {
 }
 
 #[test]
+fn prop_tuner_never_violates_slo_or_capacity() {
+    use cloudflow::dataflow::operator::SleepDist;
+    use cloudflow::planner::{tune, PlannerCtx, ResourceCaps, Slo, TunerOptions};
+    use cloudflow::simulation::gpu::Device;
+    check("tuner respects slo and capacity", 12, |rng| {
+        // Random 1-3 stage sleep chain mixing constant and heavy-tailed
+        // service times (the latter tempt the tuner into competition).
+        let mut fl = Dataflow::new(
+            "ptune",
+            Schema::new(vec![("x", DType::F64)]),
+        );
+        let mut cur = fl.input();
+        let stages = 1 + rng.below(3);
+        for s in 0..stages {
+            let dist = if rng.bool(0.5) {
+                SleepDist::ConstMs(1.0 + rng.f64() * 40.0)
+            } else {
+                SleepDist::GammaMs {
+                    k: 3.0,
+                    theta: 2.0,
+                    unit_ms: 1.0 + rng.f64() * 10.0,
+                    base_ms: 5.0,
+                }
+            };
+            cur = fl.map(cur, Func::sleep(&format!("p{s}"), dist)).unwrap();
+        }
+        fl.set_output(cur).unwrap();
+        let slo = Slo::new(20.0 + rng.f64() * 600.0, 1.0 + rng.f64() * 80.0);
+        let caps = ResourceCaps { per_stage: 8, cpu_slots: 24, gpu_slots: 8 };
+        let opts = TunerOptions { caps, ..TunerOptions::default() };
+        let ctx = PlannerCtx::default().quick();
+        match tune(&fl, &slo, &ctx, &opts) {
+            Err(_) => Ok(()), // infeasible under these caps is a valid answer
+            Ok(dp) => {
+                cloudflow::prop_assert!(
+                    dp.estimate.p99_ms * opts.safety <= slo.p99_ms,
+                    "estimated p99 {} (safety {}) exceeds slo {}",
+                    dp.estimate.p99_ms,
+                    opts.safety,
+                    slo.p99_ms
+                );
+                cloudflow::prop_assert!(
+                    dp.estimate.max_qps >= slo.min_qps,
+                    "estimated max qps {} below slo {}",
+                    dp.estimate.max_qps,
+                    slo.min_qps
+                );
+                let mut cpu = 0usize;
+                let mut gpu = 0usize;
+                for st in &dp.stages {
+                    cloudflow::prop_assert!(
+                        st.replicas <= caps.per_stage,
+                        "stage {} over per-stage cap: {}",
+                        st.label,
+                        st.replicas
+                    );
+                    cloudflow::prop_assert!(
+                        st.max_replicas <= caps.per_stage,
+                        "stage {} ceiling over cap: {}",
+                        st.label,
+                        st.max_replicas
+                    );
+                    match st.device {
+                        Device::Cpu => cpu += st.replicas,
+                        Device::Gpu => gpu += st.replicas,
+                    }
+                }
+                cloudflow::prop_assert!(
+                    cpu <= caps.cpu_slots && gpu <= caps.gpu_slots,
+                    "pool caps exceeded: cpu={cpu} gpu={gpu}"
+                );
+                Ok(())
+            }
+        }
+    });
+}
+
+#[test]
 fn prop_filter_partition() {
     check("filter p + filter !p partitions table", 60, |rng| {
         let t = random_table(rng, 25);
