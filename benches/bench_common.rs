@@ -11,11 +11,35 @@ pub fn quick() -> bool {
     std::env::var("CLOUDFLOW_QUICK").map(|v| v == "1").unwrap_or(false)
 }
 
+/// `CLOUDFLOW_BENCH_SMOKE=1` shrinks harder still (~8x) — the CI bench
+/// job runs every figure bench in this mode just to prove it executes
+/// end-to-end and emits its `BENCH_*.json`.
+pub fn smoke() -> bool {
+    std::env::var("CLOUDFLOW_BENCH_SMOKE")
+        .map(|v| v == "1")
+        .unwrap_or(false)
+}
+
 pub fn scaled(n: usize) -> usize {
-    if quick() {
+    if smoke() {
+        (n / 8).max(2)
+    } else if quick() {
         (n / 4).max(4)
     } else {
         n
+    }
+}
+
+/// Scale a virtual-time phase duration the same way request counts are
+/// scaled (the adaptive bench runs wall-clock phases, not request
+/// counts).
+pub fn scaled_ms(ms: f64) -> f64 {
+    if smoke() {
+        (ms / 4.0).max(500.0)
+    } else if quick() {
+        (ms / 2.0).max(500.0)
+    } else {
+        ms
     }
 }
 

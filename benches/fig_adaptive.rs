@@ -1,0 +1,287 @@
+//! Adaptive controller bench: drift recovery and overload protection.
+//!
+//! **Scenario A (service-time drift).** A front/heavy chain is planned for
+//! its SLO (PR 1 planner), then the heavy stage's service time is tripled
+//! mid-run through a `DriftKnob`.  The *static* deployment keeps the stale
+//! plan and degrades; the *adaptive* deployment's controller detects the
+//! observed/profiled ratio drift, re-tunes against the live profile, and
+//! hot-swaps the plan — the measured tail-window SLO attainment must land
+//! within 5% of a *freshly-planned* deployment (planned from scratch
+//! against the already-drifted pipeline).
+//!
+//! **Scenario B (overload).** A single-stage pipeline with tight capacity
+//! caps faces 1.5x its serving ceiling.  No feasible plan exists, so the
+//! overload guard applies the max-throughput plan and sheds admission down
+//! to the ceiling: the shed fraction is reported and the p99 of admitted
+//! traffic must stay within the SLO.
+//!
+//! Results land in `BENCH_adaptive.json`.
+
+mod bench_common;
+
+use bench_common::{header, jbool, jnum, json_row, jstr, scaled_ms, write_bench_json};
+use cloudflow::adaptive::{Action, AdaptiveController, ControllerOptions, DriftConfig};
+use cloudflow::cloudburst::{Cluster, DagHandle};
+use cloudflow::planner::{plan_for_slo, PlannerCtx, ResourceCaps, Slo, TunerOptions};
+use cloudflow::util::stats::fmt_ms;
+use cloudflow::workloads::{drifting_chain, open_loop, overload_stage, ArrivalTrace};
+
+const DRIFT_FACTOR: f64 = 3.0;
+
+fn main() {
+    if std::env::var("CLOUDFLOW_TIME_SCALE").is_err() {
+        std::env::set_var("CLOUDFLOW_TIME_SCALE", "1.0");
+    }
+    header("adaptive controller: drift recovery + overload protection");
+    let mut rows = Vec::new();
+    rows.push(service_drift_scenario());
+    rows.push(overload_scenario());
+    write_bench_json("adaptive", &rows);
+    println!(
+        "\ngoal: adaptive attainment within 5% of fresh after drift; \
+         admitted p99 within SLO under overload"
+    );
+}
+
+fn controller_options() -> ControllerOptions {
+    ControllerOptions {
+        interval_ms: 400.0,
+        drift: DriftConfig {
+            ratio_tol: 1.3,
+            sustain: 2,
+            attainment_floor: 0.9,
+            min_window: 16,
+        },
+        ..ControllerOptions::default()
+    }
+}
+
+/// Drive one deployment through calm → drift → measured-tail phases.
+/// Returns (calm attainment, tail attainment, tail p99).
+fn drive_phases(
+    cluster: &Cluster,
+    h: DagHandle,
+    knob: &cloudflow::dataflow::operator::DriftKnob,
+    slo: &Slo,
+    qps: f64,
+) -> (f64, f64, f64) {
+    let calm = open_loop(
+        cluster,
+        h,
+        &ArrivalTrace::constant(qps, scaled_ms(2_500.0)),
+        one_f64_row,
+    );
+    knob.set(DRIFT_FACTOR);
+    // Adaptation window: the controller (if any) detects and re-plans here.
+    open_loop(
+        cluster,
+        h,
+        &ArrivalTrace::constant(qps, scaled_ms(4_000.0)),
+        one_f64_row,
+    );
+    // Measured tail window.
+    let tail = open_loop(
+        cluster,
+        h,
+        &ArrivalTrace::constant(qps, scaled_ms(3_000.0)),
+        one_f64_row,
+    );
+    knob.set(1.0);
+    let mut tail = tail;
+    let (_, tail_p99, _) = tail.report();
+    (
+        calm.attainment(slo.p99_ms),
+        tail.attainment(slo.p99_ms),
+        tail_p99,
+    )
+}
+
+fn one_f64_row(i: usize) -> cloudflow::dataflow::table::Table {
+    use cloudflow::dataflow::table::{DType, Schema, Table, Value};
+    let mut t = Table::new(Schema::new(vec![("x", DType::F64)]));
+    t.push_fresh(vec![Value::F64(i as f64)]).unwrap();
+    t
+}
+
+fn service_drift_scenario() -> String {
+    let slo = Slo::new(250.0, 40.0);
+    let qps = 40.0;
+    let sc = drifting_chain(2.0, 20.0).expect("drift scenario");
+    let ctx = PlannerCtx::default().with_make_input(sc.spec.make_input.clone());
+    let dp = plan_for_slo(&sc.spec.flow, &slo, &ctx).expect("plan");
+    println!("\n-- scenario A: service-time drift (x{DRIFT_FACTOR} on 'heavy') --");
+    print!("{}", dp.summary());
+
+    // Static: the PR 1 plan, no controller.
+    let static_cluster = Cluster::new(None);
+    let hs = static_cluster.register_planned(&dp).expect("register static");
+    let (s_calm, s_tail, s_p99) = drive_phases(&static_cluster, hs, &sc.knob, &slo, qps);
+
+    // Adaptive: same plan plus the controller.
+    let adaptive_cluster = Cluster::new(None);
+    let ha = adaptive_cluster
+        .register_planned(&dp)
+        .expect("register adaptive");
+    let ctl = AdaptiveController::new(&adaptive_cluster, ha, &dp, controller_options())
+        .expect("controller");
+    let handle = ctl.spawn();
+    let (a_calm, a_tail, a_p99) = drive_phases(&adaptive_cluster, ha, &sc.knob, &slo, qps);
+    let events = handle.stop().take_events();
+    let replans = events
+        .iter()
+        .filter(|e| matches!(e.action, Action::Replan { .. }))
+        .count();
+
+    // Fresh reference: planned from scratch against the drifted pipeline.
+    sc.knob.set(DRIFT_FACTOR);
+    let dp_fresh = plan_for_slo(&sc.spec.flow, &slo, &ctx).expect("fresh plan");
+    let fresh_cluster = Cluster::new(None);
+    let hf = fresh_cluster
+        .register_planned(&dp_fresh)
+        .expect("register fresh");
+    let mut fresh = open_loop(
+        &fresh_cluster,
+        hf,
+        &ArrivalTrace::constant(qps, scaled_ms(3_000.0)),
+        one_f64_row,
+    );
+    sc.knob.set(1.0);
+    let f_att = fresh.attainment(slo.p99_ms);
+    let (_, f_p99, _) = fresh.report();
+
+    let recovered = a_tail >= f_att - 0.05;
+    println!(
+        "{:<10} calm_att={:<6.3} tail_att={:<6.3} tail_p99={}",
+        "static",
+        s_calm,
+        s_tail,
+        fmt_ms(s_p99)
+    );
+    println!(
+        "{:<10} calm_att={:<6.3} tail_att={:<6.3} tail_p99={} (replans={replans})",
+        "adaptive",
+        a_calm,
+        a_tail,
+        fmt_ms(a_p99)
+    );
+    println!(
+        "{:<10} {:<16} tail_att={:<6.3} tail_p99={}  recovered_within_5pct={recovered}",
+        "fresh",
+        "",
+        f_att,
+        fmt_ms(f_p99)
+    );
+
+    json_row(&[
+        ("scenario", jstr("service_drift")),
+        ("slo_p99_ms", jnum(slo.p99_ms)),
+        ("offered_qps", jnum(qps)),
+        ("drift_factor", jnum(DRIFT_FACTOR)),
+        ("static_calm_attainment", jnum(s_calm)),
+        ("static_tail_attainment", jnum(s_tail)),
+        ("static_tail_p99_ms", jnum(s_p99)),
+        ("adaptive_calm_attainment", jnum(a_calm)),
+        ("adaptive_tail_attainment", jnum(a_tail)),
+        ("adaptive_tail_p99_ms", jnum(a_p99)),
+        ("fresh_tail_attainment", jnum(f_att)),
+        ("fresh_tail_p99_ms", jnum(f_p99)),
+        ("replans", jnum(replans as f64)),
+        ("recovered_within_5pct", jbool(recovered)),
+        ("static_stays_degraded", jbool(s_tail < f_att - 0.05)),
+    ])
+}
+
+fn overload_scenario() -> String {
+    let slo = Slo::new(300.0, 30.0);
+    let offered_qps = 150.0;
+    let caps = ResourceCaps { per_stage: 2, cpu_slots: 4, gpu_slots: 1 };
+    let spec = overload_stage(20.0).expect("overload spec");
+    let ctx = PlannerCtx::default().with_make_input(spec.make_input.clone());
+    let tuner = TunerOptions { caps, ..TunerOptions::default() };
+    let dp = cloudflow::planner::tune(&spec.flow, &slo, &ctx, &tuner).expect("plan");
+    println!("\n-- scenario B: overload (150 qps into a ~100 qps ceiling) --");
+    print!("{}", dp.summary());
+
+    let cluster = Cluster::new(None);
+    let h = cluster.register_planned(&dp).expect("register");
+    let opts = ControllerOptions {
+        interval_ms: 300.0,
+        tuner,
+        ..controller_options()
+    };
+    let ctl = AdaptiveController::new(&cluster, h, &dp, opts).expect("controller");
+    let handle = ctl.spawn();
+
+    // Adaptation window: the guard detects infeasibility and sheds.
+    open_loop(
+        &cluster,
+        h,
+        &ArrivalTrace::constant(offered_qps, scaled_ms(2_000.0)),
+        one_f64_row,
+    );
+    // Let the pre-shed backlog drain before measuring steady state.
+    wait_for_drain(&cluster, h, 20_000.0);
+    let offered_before = cluster.metrics(h).offered();
+    let shed_before = cluster.metrics(h).shed_count();
+    let mut measured = open_loop(
+        &cluster,
+        h,
+        &ArrivalTrace::constant(offered_qps, scaled_ms(4_000.0)),
+        one_f64_row,
+    );
+    let events = handle.stop().take_events();
+    let (shed_events, ceiling) = events
+        .iter()
+        .filter_map(|e| match e.action {
+            Action::Shed { ceiling_qps, .. } => Some(ceiling_qps),
+            _ => None,
+        })
+        .fold((0usize, f64::NAN), |(n, _), c| (n + 1, c));
+
+    let offered_delta = cluster.metrics(h).offered() - offered_before;
+    let shed_delta = cluster.metrics(h).shed_count() - shed_before;
+    let shed_fraction = if offered_delta > 0 {
+        shed_delta as f64 / offered_delta as f64
+    } else {
+        0.0
+    };
+    let (_, admitted_p99, admitted_rps) = measured.report();
+    let within_slo = admitted_p99 <= slo.p99_ms;
+    println!(
+        "offered={offered_qps:.0}/s ceiling~{ceiling:.0}/s shed_fraction={shed_fraction:.2} \
+         admitted_p99={} ({}) admitted_rps={admitted_rps:.0} shed_events={shed_events}",
+        fmt_ms(admitted_p99),
+        if within_slo { "within SLO" } else { "SLO MISS" },
+    );
+
+    json_row(&[
+        ("scenario", jstr("overload")),
+        ("slo_p99_ms", jnum(slo.p99_ms)),
+        ("offered_qps", jnum(offered_qps)),
+        ("ceiling_qps", jnum(ceiling)),
+        ("shed_fraction", jnum(shed_fraction)),
+        ("admitted_p99_ms", jnum(admitted_p99)),
+        ("admitted_rps", jnum(admitted_rps)),
+        ("admitted_p99_within_slo", jbool(within_slo)),
+        ("shed_events", jnum(shed_events as f64)),
+    ])
+}
+
+/// Block until the plan's stage queues are (nearly) empty, up to
+/// `timeout_ms` virtual time.
+fn wait_for_drain(cluster: &Cluster, h: DagHandle, timeout_ms: f64) {
+    let t0 = cloudflow::simulation::clock::Clock::new();
+    while t0.now_ms() < timeout_ms {
+        let plan = cluster.inner().plan(h).expect("plan");
+        let queued: i64 = plan
+            .segs
+            .iter()
+            .flatten()
+            .map(|s| s.queue_depth().max(0))
+            .sum();
+        if queued <= 2 {
+            return;
+        }
+        cloudflow::simulation::clock::sleep_ms(200.0);
+    }
+}

@@ -1,0 +1,489 @@
+//! The adaptive runtime controller: a closed feedback loop from live
+//! telemetry back into the planner.
+//!
+//! Each control interval the controller samples a [`LiveSnapshot`], runs
+//! the [`DriftDetector`], and — on sustained drift or SLO degradation —
+//! re-runs the PR 1 tuner against the *live profile* (the calibration
+//! profile rescaled by observed per-stage drift ratios) and hot-swaps the
+//! resulting [`DeploymentPlan`] onto the running cluster with
+//! [`Cluster::apply_plan`]: replica floors/ceilings and batch caps are
+//! retargeted in place and no in-flight request is dropped.  When no
+//! feasible plan exists at the observed arrival rate, the overload guard
+//! computes the serving ceiling ([`plan_max_throughput`]), applies it,
+//! and sheds admission down to the ceiling so the p99 of admitted traffic
+//! stays bounded; admission is restored once arrivals fit again.
+//!
+//! Decisions are split into a *pure* function ([`decide`]) of the
+//! snapshot stream plus explicit [`DecisionState`], so a fixed
+//! `CLOUDFLOW_SEED` and a fixed snapshot sequence reproduce the exact
+//! decision sequence (the determinism property test relies on this).
+//! Note the hot-swap path never changes the compiled rewrite variant —
+//! retuning a live topology is always safe, while a variant change (e.g.
+//! enabling fusion) alters the stage graph and requires registering a
+//! fresh plan and draining the old one.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::cloudburst::cluster::{ClusterInner, DagHandle};
+use crate::cloudburst::Cluster;
+use crate::dataflow::compiler::Plan;
+use crate::planner::{plan_max_throughput, tune_profile, DeploymentPlan, Slo, TunerOptions};
+use crate::util::shutdown::ShutdownGate;
+
+use super::drift::{DriftConfig, DriftDetector};
+use super::guard;
+use super::telemetry::{live_profile, LiveSnapshot, TelemetryCollector};
+
+/// Knobs of the control loop.
+#[derive(Debug, Clone)]
+pub struct ControllerOptions {
+    /// Control period, virtual ms.
+    pub interval_ms: f64,
+    pub drift: DriftConfig,
+    /// Shed admitted load to this fraction of the serving ceiling.
+    pub overload_margin: f64,
+    /// Never shed below this admitted fraction.
+    pub min_admit: f64,
+    /// Intervals to sit out after acting (telemetry must refill).
+    pub cooldown_intervals: usize,
+    /// Capacity/search limits for live re-plans.
+    pub tuner: TunerOptions,
+    /// Seed for the tuner's Monte-Carlo estimates (decision
+    /// reproducibility).
+    pub seed: u64,
+}
+
+impl Default for ControllerOptions {
+    fn default() -> Self {
+        ControllerOptions {
+            interval_ms: 500.0,
+            drift: DriftConfig::default(),
+            overload_margin: 0.85,
+            min_admit: 0.05,
+            cooldown_intervals: 2,
+            tuner: TunerOptions::default(),
+            seed: crate::util::rng::base_seed(),
+        }
+    }
+}
+
+/// What one control step did.
+#[derive(Debug, Clone)]
+pub enum Action {
+    /// No intervention.
+    None,
+    /// Re-tuned against the live profile and hot-swapped the plan.
+    Replan {
+        replicas_before: usize,
+        replicas_after: usize,
+        est_p99_ms: f64,
+        max_ratio: f64,
+    },
+    /// No feasible plan at the observed rate: throughput ceiling applied
+    /// and admission lowered.
+    Shed {
+        admit_fraction: f64,
+        ceiling_qps: f64,
+    },
+    /// Arrivals fit under the ceiling again: full admission restored.
+    Restore,
+}
+
+/// One control step's record (the bench's decision log).
+#[derive(Debug, Clone)]
+pub struct ControlEvent {
+    pub t_ms: f64,
+    pub attainment: f64,
+    pub p99_ms: f64,
+    pub offered_qps: f64,
+    pub max_ratio: f64,
+    pub action: Action,
+}
+
+/// Mutable decision state threaded through [`decide`].
+#[derive(Debug)]
+pub struct DecisionState {
+    pub detector: DriftDetector,
+    pub cooldown: usize,
+    pub shedding: bool,
+    pub last_ceiling_qps: f64,
+}
+
+impl DecisionState {
+    pub fn new(cfg: DriftConfig) -> Self {
+        DecisionState {
+            detector: DriftDetector::new(cfg),
+            cooldown: 0,
+            shedding: false,
+            last_ceiling_qps: f64::INFINITY,
+        }
+    }
+}
+
+/// The pure decision function: given the compiled plan, the planning-time
+/// profile, the SLO, the options, the decision state, and one snapshot,
+/// produce the action to take.  Carries no cluster side effects — the
+/// caller applies the action — so identical snapshot sequences yield
+/// identical action sequences (byte-identical under `{:?}`).
+///
+/// On `Replan`/`Shed` the chosen deployment plan is returned alongside so
+/// the caller can apply it without re-running the tuner.
+pub fn decide(
+    plan: &Plan,
+    base: &crate::planner::Profile,
+    slo: &Slo,
+    opts: &ControllerOptions,
+    state: &mut DecisionState,
+    snap: &LiveSnapshot,
+) -> (Action, Option<DeploymentPlan>) {
+    let verdict = state.detector.observe(snap);
+    if state.cooldown > 0 {
+        state.cooldown -= 1;
+        return (Action::None, None);
+    }
+    if verdict.sustained() {
+        let live = live_profile(base, snap, opts.drift.min_window);
+        // Hold the SLO's latency target, but require capacity for the
+        // *observed* arrival rate when it exceeds the planned floor.
+        let target = Slo::new(slo.p99_ms, slo.min_qps.max(snap.offered_qps));
+        match tune_profile(plan, &live, &target, &opts.tuner, opts.seed, "live") {
+            Ok(dp) => {
+                state.detector.reset();
+                state.cooldown = opts.cooldown_intervals;
+                // A replan supersedes any shedding: apply restores
+                // admission alongside the swap.
+                state.shedding = false;
+                state.last_ceiling_qps = f64::INFINITY;
+                let action = Action::Replan {
+                    replicas_before: 0, // filled by the caller
+                    replicas_after: dp.n_replicas(),
+                    est_p99_ms: dp.estimate.p99_ms,
+                    max_ratio: snap.max_ratio(opts.drift.min_window),
+                };
+                return (action, Some(dp));
+            }
+            Err(_) => {
+                // Overload: find the ceiling and shed down to it.
+                let tp = plan_max_throughput(plan, &live, slo, &opts.tuner, opts.seed);
+                let ceiling = tp.estimate.max_qps;
+                let admit = guard::admit_fraction(
+                    ceiling,
+                    snap.offered_qps,
+                    opts.overload_margin,
+                    opts.min_admit,
+                );
+                state.detector.reset();
+                state.cooldown = opts.cooldown_intervals;
+                state.shedding = true;
+                state.last_ceiling_qps = ceiling;
+                return (
+                    Action::Shed { admit_fraction: admit, ceiling_qps: ceiling },
+                    Some(tp),
+                );
+            }
+        }
+    }
+    if state.shedding
+        && guard::can_restore(state.last_ceiling_qps, snap.offered_qps, opts.overload_margin)
+    {
+        state.shedding = false;
+        state.last_ceiling_qps = f64::INFINITY;
+        state.cooldown = opts.cooldown_intervals;
+        return (Action::Restore, None);
+    }
+    (Action::None, None)
+}
+
+/// The stateful controller bound to one registered plan.
+pub struct AdaptiveController {
+    inner: Arc<ClusterInner>,
+    h: DagHandle,
+    plan: Plan,
+    base: crate::planner::Profile,
+    slo: Slo,
+    opts: ControllerOptions,
+    collector: TelemetryCollector,
+    state: DecisionState,
+    events: Vec<ControlEvent>,
+}
+
+impl AdaptiveController {
+    /// Attach a controller to the deployment `dp` registered as `h` on
+    /// `cluster`.  `dp.profile` is the drift baseline.
+    pub fn new(
+        cluster: &Cluster,
+        h: DagHandle,
+        dp: &DeploymentPlan,
+        opts: ControllerOptions,
+    ) -> Result<Self> {
+        let collector =
+            TelemetryCollector::new(cluster, h, dp.profile.clone(), dp.slo)?;
+        Ok(AdaptiveController {
+            inner: cluster.inner().clone(),
+            h,
+            plan: dp.plan.clone(),
+            base: dp.profile.clone(),
+            slo: dp.slo,
+            state: DecisionState::new(opts.drift.clone()),
+            opts,
+            collector,
+            events: Vec::new(),
+        })
+    }
+
+    pub fn events(&self) -> &[ControlEvent] {
+        &self.events
+    }
+
+    pub fn take_events(&mut self) -> Vec<ControlEvent> {
+        std::mem::take(&mut self.events)
+    }
+
+    /// Run one control interval: sample, decide, apply.  Returns the
+    /// recorded event.
+    pub fn step(&mut self) -> ControlEvent {
+        let snap = self.collector.sample();
+        let max_ratio = snap.max_ratio(self.opts.drift.min_window);
+        let (mut action, dp) = decide(
+            &self.plan,
+            &self.base,
+            &self.slo,
+            &self.opts,
+            &mut self.state,
+            &snap,
+        );
+        match (&mut action, dp) {
+            (Action::Replan { replicas_before, .. }, Some(dp)) => {
+                if let Ok(p) = self.inner.plan(self.h) {
+                    *replicas_before = p.total_replicas();
+                }
+                if let Err(e) = self.inner.apply_plan(self.h, &dp) {
+                    log::warn!("adaptive: plan swap failed: {e:#}");
+                } else {
+                    let _ = self.inner.set_admission(self.h, 1.0);
+                    // The live profile the new plan was tuned against is
+                    // the drift baseline from here on: still-drifted
+                    // service times now read as ratio ~1.0 rather than
+                    // re-triggering an identical re-plan every few
+                    // intervals for the lifetime of the drift.
+                    self.base = dp.profile.clone();
+                    self.collector.set_base(dp.profile);
+                    self.collector.reset_windows();
+                }
+            }
+            (Action::Shed { admit_fraction, .. }, Some(dp)) => {
+                if let Err(e) = self.inner.apply_plan(self.h, &dp) {
+                    log::warn!("adaptive: ceiling swap failed: {e:#}");
+                }
+                let _ = self.inner.set_admission(self.h, *admit_fraction);
+                self.base = dp.profile.clone();
+                self.collector.set_base(dp.profile);
+                self.collector.reset_windows();
+            }
+            (Action::Restore, _) => {
+                let _ = self.inner.set_admission(self.h, 1.0);
+                self.collector.reset_windows();
+            }
+            _ => {}
+        }
+        let event = ControlEvent {
+            t_ms: snap.t_ms,
+            attainment: snap.attainment,
+            p99_ms: snap.p99_ms,
+            offered_qps: snap.offered_qps,
+            max_ratio,
+            action,
+        };
+        self.events.push(event.clone());
+        event
+    }
+
+    /// Run the control loop on a background thread until stopped (or the
+    /// cluster shuts down).  The returned handle joins the thread and
+    /// hands the controller (with its event log) back.
+    pub fn spawn(self) -> AdaptiveHandle {
+        let gate = Arc::new(ShutdownGate::new());
+        let g = gate.clone();
+        let scale = crate::config::global().time_scale;
+        let interval = std::time::Duration::from_secs_f64(
+            (self.opts.interval_ms * scale / 1e3).max(1e-3),
+        );
+        let thread = std::thread::Builder::new()
+            .name("adaptive-controller".into())
+            .spawn(move || {
+                let mut ctl = self;
+                loop {
+                    // The gate wakes immediately on trigger, so the full
+                    // interval can be slept without hurting shutdown.
+                    if g.wait_timeout(interval) {
+                        return ctl;
+                    }
+                    if ctl.inner.shutdown.load(std::sync::atomic::Ordering::Relaxed) {
+                        return ctl;
+                    }
+                    ctl.step();
+                }
+            })
+            .expect("spawning adaptive controller");
+        AdaptiveHandle { gate, thread: Some(thread) }
+    }
+}
+
+/// Join handle for a spawned controller; stopping returns the controller
+/// so callers can read its decision log.  Dropping the handle also stops
+/// and joins the thread (no leaks across bench iterations).
+pub struct AdaptiveHandle {
+    gate: Arc<ShutdownGate>,
+    thread: Option<std::thread::JoinHandle<AdaptiveController>>,
+}
+
+impl AdaptiveHandle {
+    pub fn stop(mut self) -> AdaptiveController {
+        self.gate.trigger();
+        self.thread
+            .take()
+            .expect("controller thread already joined")
+            .join()
+            .expect("adaptive controller panicked")
+    }
+}
+
+impl Drop for AdaptiveHandle {
+    fn drop(&mut self) {
+        self.gate.trigger();
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::adaptive::telemetry::StageObs;
+    use crate::dataflow::compiler::{compile, OptFlags};
+    use crate::dataflow::operator::{Func, SleepDist};
+    use crate::dataflow::table::{DType, Schema};
+    use crate::dataflow::Dataflow;
+    use crate::planner::{profile_plan, PlannerCtx, ResourceCaps};
+
+    fn chain(ms: f64) -> (Plan, crate::planner::Profile) {
+        let mut fl = Dataflow::new("ctl", Schema::new(vec![("x", DType::F64)]));
+        let s = fl
+            .map(fl.input(), Func::sleep("s", SleepDist::ConstMs(ms)))
+            .unwrap();
+        fl.set_output(s).unwrap();
+        let plan = compile(&fl, &OptFlags::none()).unwrap();
+        let prof =
+            profile_plan(&plan, fl.input_schema(), &PlannerCtx::default().quick())
+                .unwrap();
+        (plan, prof)
+    }
+
+    fn snap(ratio: f64, attainment: f64, offered: f64) -> LiveSnapshot {
+        LiveSnapshot {
+            t_ms: 0.0,
+            stages: vec![StageObs {
+                seg: 0,
+                idx: 0,
+                label: "s".into(),
+                observed_ms: 0.0,
+                profiled_ms: 0.0,
+                ratio,
+                mean_batch: 1.0,
+                queue: 0,
+                arrival_qps: offered,
+                window: 64,
+            }],
+            offered_qps: offered,
+            attainment,
+            p99_ms: 0.0,
+            latency_window: 64,
+            completed: 0,
+            shed: 0,
+        }
+    }
+
+    fn opts() -> ControllerOptions {
+        ControllerOptions { seed: 7, ..ControllerOptions::default() }
+    }
+
+    #[test]
+    fn sustained_drift_yields_replan_with_more_replicas() {
+        let (plan, base) = chain(20.0);
+        let slo = Slo::new(400.0, 40.0);
+        let o = opts();
+        let mut st = DecisionState::new(o.drift.clone());
+        let s = snap(3.0, 0.95, 40.0);
+        let (a1, _) = decide(&plan, &base, &slo, &o, &mut st, &s);
+        assert!(matches!(a1, Action::None), "{a1:?}");
+        let (a2, dp) = decide(&plan, &base, &slo, &o, &mut st, &s);
+        match a2 {
+            Action::Replan { replicas_after, .. } => {
+                // 60ms effective service at 40qps needs >= 3 replicas.
+                assert!(replicas_after >= 3, "replicas_after={replicas_after}");
+                assert!(dp.is_some());
+            }
+            other => panic!("expected replan, got {other:?}"),
+        }
+        // Cooldown: the next observation is absorbed.
+        let (a3, _) = decide(&plan, &base, &slo, &o, &mut st, &s);
+        assert!(matches!(a3, Action::None));
+    }
+
+    #[test]
+    fn infeasible_rate_sheds_then_restores() {
+        let (plan, base) = chain(20.0);
+        let slo = Slo::new(300.0, 30.0);
+        let mut o = opts();
+        o.tuner.caps = ResourceCaps { per_stage: 2, cpu_slots: 4, gpu_slots: 1 };
+        o.cooldown_intervals = 0;
+        let mut st = DecisionState::new(o.drift.clone());
+        // 20ms stage, <=2 replicas => ~100/s ceiling; 300/s offered with a
+        // collapsed SLO is infeasible.
+        let s = snap(1.0, 0.2, 300.0);
+        decide(&plan, &base, &slo, &o, &mut st, &s);
+        let (a, dp) = decide(&plan, &base, &slo, &o, &mut st, &s);
+        match a {
+            Action::Shed { admit_fraction, ceiling_qps } => {
+                assert!(ceiling_qps > 50.0 && ceiling_qps < 200.0, "{ceiling_qps}");
+                let expect = 0.85 * ceiling_qps / 300.0;
+                assert!((admit_fraction - expect).abs() < 1e-6, "{admit_fraction}");
+                assert!(dp.is_some());
+            }
+            other => panic!("expected shed, got {other:?}"),
+        }
+        assert!(st.shedding);
+        // Load falls back under the ceiling: restore.
+        let calm = snap(1.0, 1.0, 10.0);
+        let (a2, _) = decide(&plan, &base, &slo, &o, &mut st, &calm);
+        assert!(matches!(a2, Action::Restore), "{a2:?}");
+        assert!(!st.shedding);
+    }
+
+    #[test]
+    fn decisions_are_deterministic() {
+        let (plan, base) = chain(20.0);
+        let slo = Slo::new(400.0, 40.0);
+        let o = opts();
+        let seq = [
+            snap(1.0, 1.0, 40.0),
+            snap(3.0, 0.95, 40.0),
+            snap(3.0, 0.95, 40.0),
+            snap(3.0, 0.4, 40.0),
+            snap(1.0, 1.0, 40.0),
+        ];
+        let run = || {
+            let mut st = DecisionState::new(o.drift.clone());
+            let mut log = String::new();
+            for s in &seq {
+                let (a, _) = decide(&plan, &base, &slo, &o, &mut st, s);
+                log.push_str(&format!("{a:?};"));
+            }
+            log
+        };
+        assert_eq!(run(), run());
+    }
+}

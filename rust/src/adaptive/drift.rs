@@ -1,0 +1,195 @@
+//! Drift detection: statistical tests over [`LiveSnapshot`]s that decide
+//! when the live system has diverged from the profile its deployment plan
+//! was tuned against.
+//!
+//! Two complementary signals, both requiring *sustained* evidence so a
+//! single noisy window never triggers a re-plan:
+//!
+//! * **Service-time drift** — the windowed ratio of observed to profiled
+//!   per-stage service time leaves `[1/tol, tol]` for `sustain`
+//!   consecutive samples.  Catches drift even before it hurts latency
+//!   (e.g. a stage slowing under a model update while load is light).
+//! * **SLO-attainment trend** — the fraction of windowed end-to-end
+//!   latencies within the SLO stays below `attainment_floor` for
+//!   `sustain` consecutive samples.  Catches everything the per-stage
+//!   test can't attribute (queueing from arrival-rate shifts, payload
+//!   growth inflating transfer costs).
+
+use std::collections::HashMap;
+
+use super::telemetry::LiveSnapshot;
+
+#[derive(Debug, Clone)]
+pub struct DriftConfig {
+    /// Ratio tolerance: drift when observed/profiled > tol or < 1/tol.
+    pub ratio_tol: f64,
+    /// Consecutive samples a signal must persist before it counts.
+    pub sustain: usize,
+    /// Re-plan when windowed SLO attainment falls below this.
+    pub attainment_floor: f64,
+    /// Minimum windowed samples before a stage ratio or the attainment
+    /// trend is trusted.
+    pub min_window: usize,
+}
+
+impl Default for DriftConfig {
+    fn default() -> Self {
+        DriftConfig {
+            ratio_tol: 1.3,
+            sustain: 2,
+            attainment_floor: 0.9,
+            min_window: 16,
+        }
+    }
+}
+
+/// What one observation concluded.
+#[derive(Debug, Clone, Default)]
+pub struct DriftVerdict {
+    /// Stages with sustained service-time drift: (seg, idx, ratio).
+    pub drifted: Vec<(usize, usize, f64)>,
+    /// Sustained SLO-attainment degradation.
+    pub slo_degraded: bool,
+}
+
+impl DriftVerdict {
+    /// Should the controller re-plan?
+    pub fn sustained(&self) -> bool {
+        !self.drifted.is_empty() || self.slo_degraded
+    }
+}
+
+/// Streak-counting detector; purely a function of the snapshots it has
+/// observed, so controller decisions are reproducible.
+#[derive(Debug)]
+pub struct DriftDetector {
+    cfg: DriftConfig,
+    streaks: HashMap<(usize, usize), usize>,
+    slo_streak: usize,
+}
+
+impl DriftDetector {
+    pub fn new(cfg: DriftConfig) -> Self {
+        DriftDetector { cfg, streaks: HashMap::new(), slo_streak: 0 }
+    }
+
+    pub fn config(&self) -> &DriftConfig {
+        &self.cfg
+    }
+
+    /// Feed one snapshot; returns the current verdict.
+    pub fn observe(&mut self, snap: &LiveSnapshot) -> DriftVerdict {
+        let mut verdict = DriftVerdict::default();
+        let tol = self.cfg.ratio_tol.max(1.0 + 1e-6);
+        for obs in &snap.stages {
+            let key = (obs.seg, obs.idx);
+            let hit = obs.window >= self.cfg.min_window
+                && obs.ratio.is_finite()
+                && (obs.ratio > tol || obs.ratio < 1.0 / tol);
+            let streak = self.streaks.entry(key).or_insert(0);
+            if hit {
+                *streak += 1;
+                if *streak >= self.cfg.sustain {
+                    verdict.drifted.push((obs.seg, obs.idx, obs.ratio));
+                }
+            } else {
+                *streak = 0;
+            }
+        }
+        let slo_hit = snap.latency_window >= self.cfg.min_window
+            && snap.attainment.is_finite()
+            && snap.attainment < self.cfg.attainment_floor;
+        if slo_hit {
+            self.slo_streak += 1;
+        } else {
+            self.slo_streak = 0;
+        }
+        verdict.slo_degraded = self.slo_streak >= self.cfg.sustain;
+        verdict
+    }
+
+    /// Forget all streaks (after a re-plan the baseline changed).
+    pub fn reset(&mut self) {
+        self.streaks.clear();
+        self.slo_streak = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::adaptive::telemetry::StageObs;
+
+    fn snap(ratio: f64, window: usize, attainment: f64, lat_window: usize) -> LiveSnapshot {
+        LiveSnapshot {
+            t_ms: 0.0,
+            stages: vec![StageObs {
+                seg: 0,
+                idx: 0,
+                label: "s".into(),
+                observed_ms: 0.0,
+                profiled_ms: 0.0,
+                ratio,
+                mean_batch: 1.0,
+                queue: 0,
+                arrival_qps: 0.0,
+                window,
+            }],
+            offered_qps: 0.0,
+            attainment,
+            p99_ms: 0.0,
+            latency_window: lat_window,
+            completed: 0,
+            shed: 0,
+        }
+    }
+
+    #[test]
+    fn ratio_drift_needs_sustain() {
+        let mut d = DriftDetector::new(DriftConfig {
+            ratio_tol: 1.3,
+            sustain: 2,
+            attainment_floor: 0.9,
+            min_window: 8,
+        });
+        // One drifted sample: not yet.
+        assert!(!d.observe(&snap(2.0, 20, 1.0, 20)).sustained());
+        // Second consecutive: sustained.
+        let v = d.observe(&snap(2.0, 20, 1.0, 20));
+        assert!(v.sustained());
+        assert_eq!(v.drifted, vec![(0, 0, 2.0)]);
+        // A clean sample resets the streak.
+        assert!(!d.observe(&snap(1.0, 20, 1.0, 20)).sustained());
+        assert!(!d.observe(&snap(2.0, 20, 1.0, 20)).sustained());
+    }
+
+    #[test]
+    fn speedup_drift_also_detected() {
+        let mut d = DriftDetector::new(DriftConfig::default());
+        let s = snap(0.4, 32, 1.0, 32); // 2.5x faster than profiled
+        d.observe(&s);
+        assert!(d.observe(&s).sustained());
+    }
+
+    #[test]
+    fn thin_windows_are_ignored() {
+        let mut d = DriftDetector::new(DriftConfig {
+            min_window: 16,
+            ..DriftConfig::default()
+        });
+        let s = snap(5.0, 4, 1.0, 4); // huge ratio, almost no evidence
+        d.observe(&s);
+        assert!(!d.observe(&s).sustained());
+    }
+
+    #[test]
+    fn attainment_trend_triggers_without_ratio_drift() {
+        let mut d = DriftDetector::new(DriftConfig::default());
+        let s = snap(1.0, 32, 0.5, 32); // stages look fine, SLO does not
+        d.observe(&s);
+        let v = d.observe(&s);
+        assert!(v.slo_degraded && v.sustained());
+        d.reset();
+        assert!(!d.observe(&s).sustained());
+    }
+}

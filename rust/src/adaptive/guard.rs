@@ -1,0 +1,50 @@
+//! Overload guard: when even the best feasible deployment cannot meet the
+//! SLO at the observed arrival rate, shed load instead of letting queues
+//! grow without bound — p99 of *admitted* traffic stays bounded while the
+//! shed fraction is reported honestly.
+//!
+//! The guard's arithmetic lives here as pure functions so controller
+//! decisions stay deterministic and unit-testable; the enforcement
+//! mechanism (deterministic per-request-id admission hashing) lives in
+//! `cloudburst::cluster`.
+
+/// Admission fraction that keeps admitted load at `margin * ceiling_qps`
+/// when `offered_qps` is arriving, clamped to `[min_admit, 1.0]`.
+pub fn admit_fraction(ceiling_qps: f64, offered_qps: f64, margin: f64, min_admit: f64) -> f64 {
+    if !(ceiling_qps.is_finite() && ceiling_qps > 0.0) || offered_qps <= 0.0 {
+        return 1.0;
+    }
+    (margin.clamp(0.0, 1.0) * ceiling_qps / offered_qps).clamp(min_admit.clamp(0.0, 1.0), 1.0)
+}
+
+/// While shedding, admission is restored once raw arrivals fit back under
+/// the serving ceiling (with the same margin).
+pub fn can_restore(ceiling_qps: f64, offered_qps: f64, margin: f64) -> bool {
+    ceiling_qps.is_finite() && offered_qps <= margin.clamp(0.0, 1.0) * ceiling_qps
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shed_to_margin_of_ceiling() {
+        // 100/s ceiling, 150/s offered, 0.85 margin => admit ~57%.
+        let f = admit_fraction(100.0, 150.0, 0.85, 0.05);
+        assert!((f - 0.85 * 100.0 / 150.0).abs() < 1e-9);
+        // Underload: admit everything.
+        assert_eq!(admit_fraction(100.0, 50.0, 0.85, 0.05), 1.0);
+        // Catastrophic overload clamps at the minimum.
+        assert_eq!(admit_fraction(10.0, 10_000.0, 0.85, 0.05), 0.05);
+        // Degenerate ceilings fail open.
+        assert_eq!(admit_fraction(f64::INFINITY, 100.0, 0.85, 0.05), 1.0);
+        assert_eq!(admit_fraction(0.0, 100.0, 0.85, 0.05), 1.0);
+    }
+
+    #[test]
+    fn restore_when_offered_fits() {
+        assert!(can_restore(100.0, 80.0, 0.85));
+        assert!(!can_restore(100.0, 90.0, 0.85));
+        assert!(!can_restore(f64::NAN, 1.0, 0.85));
+    }
+}

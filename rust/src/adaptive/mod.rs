@@ -1,0 +1,53 @@
+//! Adaptive runtime controller: drift detection, live re-planning, and
+//! overload protection — the closed feedback loop from live telemetry
+//! back into the [`planner`](crate::planner).
+//!
+//! The PR 1 planner tunes a deployment against an *offline* calibration
+//! profile; this subsystem keeps that deployment honest as traffic
+//! drifts (InferLine's reactive controller layered on the offline
+//! planner; Clipper-style runtime adaptation over black-box stages):
+//!
+//! * [`telemetry`] — streaming, fixed-memory per-stage estimators
+//!   (windowed quantile sketches fed by the executor) sampled into
+//!   [`LiveSnapshot`]s, and rescaling of the calibration
+//!   [`Profile`](crate::planner::Profile) into a *live profile* via
+//!   observed drift ratios.
+//! * [`drift`] — sustained-evidence statistical tests: windowed
+//!   observed/profiled service-time ratios per stage, and the plan-level
+//!   SLO-attainment trend.
+//! * [`controller`] — the control loop: on sustained drift it re-runs
+//!   the tuner against the live profile
+//!   ([`tune_profile`](crate::planner::tune_profile)) and hot-swaps the
+//!   resulting [`DeploymentPlan`](crate::planner::DeploymentPlan) onto
+//!   the running cluster
+//!   ([`Cluster::apply_plan`](crate::cloudburst::Cluster)), with zero
+//!   dropped in-flight requests.
+//! * [`guard`] — overload protection: when no feasible plan meets the
+//!   SLO at the observed arrival rate, the serving ceiling is applied
+//!   and admission is shed down to it, so p99 of *admitted* traffic
+//!   stays bounded.
+//!
+//! Typical wiring (see `examples/adaptive_serving.rs` and
+//! `benches/fig_adaptive.rs`):
+//!
+//! ```text
+//! let dp = plan_for_slo(&flow, &slo, &ctx)?;          // PR 1 planner
+//! let h  = cluster.register_planned(&dp)?;
+//! let ctl = AdaptiveController::new(&cluster, h, &dp, opts)?;
+//! let handle = ctl.spawn();                            // background loop
+//! ...                                                  // serve traffic
+//! let log = handle.stop().take_events();               // decision log
+//! ```
+
+pub mod controller;
+pub mod drift;
+pub mod guard;
+pub mod telemetry;
+
+pub use controller::{
+    decide, Action, AdaptiveController, AdaptiveHandle, ControlEvent, ControllerOptions,
+    DecisionState,
+};
+pub use drift::{DriftConfig, DriftDetector, DriftVerdict};
+pub use guard::{admit_fraction, can_restore};
+pub use telemetry::{live_profile, LiveSnapshot, StageObs, TelemetryCollector};

@@ -1,0 +1,303 @@
+//! Streaming telemetry → `LiveSnapshot` → `LiveProfile`.
+//!
+//! The executor feeds fixed-memory windowed sketches on every stage
+//! ([`StageTelemetry`](crate::cloudburst::StageTelemetry)); the collector
+//! here periodically samples them into a [`LiveSnapshot`] — per-stage
+//! observed-vs-profiled service-time ratios, queue depths, arrival rates,
+//! and plan-level SLO attainment — and can rescale the planning-time
+//! [`Profile`] into a *live profile* the tuner re-runs against.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::cloudburst::cluster::{ClusterInner, DagHandle, RegisteredPlan};
+use crate::cloudburst::Cluster;
+use crate::planner::{Profile, Slo};
+
+/// Drift ratios are clamped to this range before rescaling the profile,
+/// so one wild window cannot produce a degenerate live profile.
+pub const RATIO_CLAMP: (f64, f64) = (0.05, 100.0);
+
+/// One stage's live observations at a sampling instant.
+#[derive(Debug, Clone)]
+pub struct StageObs {
+    pub seg: usize,
+    pub idx: usize,
+    pub label: String,
+    /// Mean per-invocation service time over the window, virtual ms (NaN
+    /// if the window is empty).
+    pub observed_ms: f64,
+    /// The planning-time profile's mean at the observed batch size.
+    pub profiled_ms: f64,
+    /// observed / profiled (1.0 when there is not enough evidence).
+    pub ratio: f64,
+    /// Mean observed dequeue batch size (>= 1).
+    pub mean_batch: f64,
+    /// Tasks queued or running right now.
+    pub queue: i64,
+    /// Stage-level task arrival rate since the previous sample, per
+    /// second of virtual time.
+    pub arrival_qps: f64,
+    /// Service-time samples currently in the window (evidence weight).
+    pub window: usize,
+}
+
+/// A plan-level telemetry sample: everything the drift detector and
+/// overload guard decide on.
+#[derive(Debug, Clone)]
+pub struct LiveSnapshot {
+    /// Virtual ms on the cluster clock.
+    pub t_ms: f64,
+    pub stages: Vec<StageObs>,
+    /// Request arrival rate at the plan entry since the previous sample
+    /// (admitted or not), requests/s.
+    pub offered_qps: f64,
+    /// Fraction of windowed end-to-end latencies within the SLO (NaN if
+    /// the window is empty).
+    pub attainment: f64,
+    /// Windowed end-to-end p99, virtual ms.
+    pub p99_ms: f64,
+    /// End-to-end latency samples in the window.
+    pub latency_window: usize,
+    pub completed: u64,
+    pub shed: u64,
+}
+
+impl LiveSnapshot {
+    /// The largest per-stage drift ratio with at least `min_window`
+    /// samples of evidence (1.0 if none qualify).
+    pub fn max_ratio(&self, min_window: usize) -> f64 {
+        self.stages
+            .iter()
+            .filter(|o| o.window >= min_window && o.ratio.is_finite())
+            .map(|o| o.ratio)
+            .fold(1.0, f64::max)
+    }
+}
+
+/// Samples a registered plan's stage sketches into [`LiveSnapshot`]s.
+/// Holds only counters between samples — fixed memory.
+pub struct TelemetryCollector {
+    inner: Arc<ClusterInner>,
+    plan: Arc<RegisteredPlan>,
+    base: Profile,
+    slo: Slo,
+    last_t_ms: f64,
+    last_arrivals: HashMap<(usize, usize), u64>,
+    last_offered: u64,
+}
+
+impl TelemetryCollector {
+    pub fn new(cluster: &Cluster, h: DagHandle, base: Profile, slo: Slo) -> Result<Self> {
+        let inner = cluster.inner().clone();
+        let plan = inner.plan(h)?;
+        Ok(TelemetryCollector {
+            inner,
+            plan,
+            base,
+            slo,
+            last_t_ms: 0.0,
+            last_arrivals: HashMap::new(),
+            last_offered: 0,
+        })
+    }
+
+    pub fn base_profile(&self) -> &Profile {
+        &self.base
+    }
+
+    /// Replace the drift baseline.  Called after a plan swap with the
+    /// profile the new plan was tuned against, so persistent drift reads
+    /// as ratio ~1.0 against the *adopted* baseline instead of
+    /// re-triggering re-plans forever against the original one.
+    pub fn set_base(&mut self, base: Profile) {
+        self.base = base;
+    }
+
+    /// Take one sample.  Rates are computed against the previous call.
+    pub fn sample(&mut self) -> LiveSnapshot {
+        let now = self.inner.clock.now_ms();
+        let dt_s = ((now - self.last_t_ms) / 1000.0).max(1e-9);
+        let mut stages = Vec::new();
+        for seg in &self.plan.segs {
+            for stage in seg {
+                let (observed_ms, window) = {
+                    let s = stage.telemetry.service.lock().unwrap();
+                    (s.mean(), s.window_len())
+                };
+                let mean_batch = {
+                    let b = stage.telemetry.batches.lock().unwrap();
+                    let m = b.mean();
+                    if m.is_finite() { m.max(1.0) } else { 1.0 }
+                };
+                let sp = self.base.get(stage.seg, stage.idx);
+                let profiled_ms = sp.mean_ms(mean_batch.round() as usize);
+                let ratio = if window > 0
+                    && observed_ms.is_finite()
+                    && profiled_ms > 1e-9
+                {
+                    (observed_ms / profiled_ms).clamp(RATIO_CLAMP.0, RATIO_CLAMP.1)
+                } else {
+                    1.0
+                };
+                let arrivals = stage
+                    .telemetry
+                    .arrivals
+                    .load(std::sync::atomic::Ordering::Relaxed);
+                let key = (stage.seg, stage.idx);
+                let prev = *self.last_arrivals.get(&key).unwrap_or(&0);
+                self.last_arrivals.insert(key, arrivals);
+                stages.push(StageObs {
+                    seg: stage.seg,
+                    idx: stage.idx,
+                    label: stage.spec.name.clone(),
+                    observed_ms,
+                    profiled_ms,
+                    ratio,
+                    mean_batch,
+                    queue: stage.queue_depth(),
+                    arrival_qps: (arrivals.saturating_sub(prev)) as f64 / dt_s,
+                    window,
+                });
+            }
+        }
+        let m = &self.plan.metrics;
+        let sketch = m.sketch();
+        let offered = m.offered();
+        let offered_qps = (offered.saturating_sub(self.last_offered)) as f64 / dt_s;
+        self.last_offered = offered;
+        self.last_t_ms = now;
+        LiveSnapshot {
+            t_ms: now,
+            stages,
+            offered_qps,
+            attainment: sketch.fraction_le(self.slo.p99_ms),
+            p99_ms: sketch.p99(),
+            latency_window: sketch.window_len(),
+            completed: m.completed(),
+            shed: m.shed_count(),
+        }
+    }
+
+    /// Clear every stage's telemetry window plus the plan latency window;
+    /// called after a plan swap so the next decisions reflect only
+    /// post-swap behaviour.
+    pub fn reset_windows(&mut self) {
+        for seg in &self.plan.segs {
+            for stage in seg {
+                stage.telemetry.reset_windows();
+            }
+        }
+        self.plan.metrics.reset_latency_window();
+    }
+}
+
+/// Rescale the planning-time profile by the snapshot's observed drift
+/// ratios (stages with fewer than `min_window` samples keep their
+/// profiled service times) — the `LiveProfile` the tuner re-runs against.
+pub fn live_profile(base: &Profile, snap: &LiveSnapshot, min_window: usize) -> Profile {
+    base.scale_service(|seg, idx| {
+        snap.stages
+            .iter()
+            .find(|o| o.seg == seg && o.idx == idx)
+            .filter(|o| o.window >= min_window && o.ratio.is_finite() && o.ratio > 0.0)
+            .map(|o| o.ratio)
+            .unwrap_or(1.0)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataflow::compiler::{compile, OptFlags};
+    use crate::dataflow::operator::{Func, SleepDist};
+    use crate::dataflow::table::{DType, Schema, Table, Value};
+    use crate::dataflow::Dataflow;
+    use crate::planner::{profile_plan, PlannerCtx};
+
+    fn one_row() -> Table {
+        let mut t = Table::new(Schema::new(vec![("x", DType::F64)]));
+        t.push_fresh(vec![Value::F64(0.0)]).unwrap();
+        t
+    }
+
+    #[test]
+    fn collector_observes_ratio_near_one_without_drift() {
+        let mut fl = Dataflow::new("tel", Schema::new(vec![("x", DType::F64)]));
+        let s = fl
+            .map(fl.input(), Func::sleep("s", SleepDist::ConstMs(10.0)))
+            .unwrap();
+        fl.set_output(s).unwrap();
+        let plan = compile(&fl, &OptFlags::none()).unwrap();
+        let base =
+            profile_plan(&plan, fl.input_schema(), &PlannerCtx::default().quick())
+                .unwrap();
+        let cluster = Cluster::new(None);
+        let h = cluster.register(plan, 1).unwrap();
+        let slo = Slo::new(200.0, 10.0);
+        let mut col = TelemetryCollector::new(&cluster, h, base, slo).unwrap();
+        for _ in 0..12 {
+            cluster.execute(h, one_row()).unwrap().result().unwrap();
+        }
+        let snap = col.sample();
+        assert_eq!(snap.completed, 12);
+        assert!(snap.offered_qps > 0.0);
+        let obs = &snap.stages[0];
+        assert!(obs.window >= 12, "window={}", obs.window);
+        assert!(obs.observed_ms >= 9.0, "obs={}", obs.observed_ms);
+        // Scheduling noise allowed, but no drift was injected.
+        assert!(obs.ratio > 0.5 && obs.ratio < 2.0, "ratio={}", obs.ratio);
+        assert!(snap.attainment > 0.99, "attainment={}", snap.attainment);
+        // Window reset clears evidence.
+        col.reset_windows();
+        let snap2 = col.sample();
+        assert_eq!(snap2.stages[0].window, 0);
+        assert_eq!(snap2.stages[0].ratio, 1.0);
+        assert!(snap2.attainment.is_nan());
+    }
+
+    #[test]
+    fn live_profile_rescales_only_evidenced_stages() {
+        let mut fl = Dataflow::new("lp", Schema::new(vec![("x", DType::F64)]));
+        let a = fl
+            .map(fl.input(), Func::sleep("a", SleepDist::ConstMs(10.0)))
+            .unwrap();
+        let b = fl
+            .map(a, Func::sleep("b", SleepDist::ConstMs(30.0)))
+            .unwrap();
+        fl.set_output(b).unwrap();
+        let plan = compile(&fl, &OptFlags::none()).unwrap();
+        let base =
+            profile_plan(&plan, fl.input_schema(), &PlannerCtx::default().quick())
+                .unwrap();
+        let mk = |seg, idx, ratio, window| StageObs {
+            seg,
+            idx,
+            label: String::new(),
+            observed_ms: 0.0,
+            profiled_ms: 0.0,
+            ratio,
+            mean_batch: 1.0,
+            queue: 0,
+            arrival_qps: 0.0,
+            window,
+        };
+        let snap = LiveSnapshot {
+            t_ms: 0.0,
+            stages: vec![mk(0, 0, 2.0, 50), mk(0, 1, 4.0, 1)],
+            offered_qps: 0.0,
+            attainment: 1.0,
+            p99_ms: 0.0,
+            latency_window: 0,
+            completed: 0,
+            shed: 0,
+        };
+        let live = live_profile(&base, &snap, 8);
+        // Stage (0,0) had evidence: scaled 2x. Stage (0,1) did not: kept.
+        assert!((live.get(0, 0).mean_ms(1) - 20.0).abs() < 1e-6);
+        assert!((live.get(0, 1).mean_ms(1) - 30.0).abs() < 1e-6);
+        assert!((snap.max_ratio(8) - 2.0).abs() < 1e-9);
+    }
+}

@@ -20,11 +20,14 @@ use crate::config;
 
 use super::cluster::ClusterInner;
 
-pub fn spawn(cluster: Arc<ClusterInner>) {
+/// Start the autoscaler loop; the returned handle is joined by `Cluster`
+/// drop after the cluster's shutdown gate is triggered, so tearing down a
+/// cluster never leaks the thread.
+pub fn spawn(cluster: Arc<ClusterInner>) -> std::thread::JoinHandle<()> {
     std::thread::Builder::new()
         .name("autoscaler".into())
         .spawn(move || run(cluster))
-        .expect("spawning autoscaler");
+        .expect("spawning autoscaler")
 }
 
 fn run(cluster: Arc<ClusterInner>) {
@@ -40,7 +43,12 @@ fn run(cluster: Arc<ClusterInner>) {
     let mut hot: std::collections::HashMap<(usize, usize, usize), usize> =
         std::collections::HashMap::new();
     loop {
-        std::thread::sleep(interval_real.min(Duration::from_millis(200)));
+        if cluster
+            .gate
+            .wait_timeout(interval_real.min(Duration::from_millis(200)))
+        {
+            return;
+        }
         if cluster.shutdown.load(Ordering::Relaxed) {
             return;
         }
@@ -72,7 +80,7 @@ fn run(cluster: Arc<ClusterInner>) {
                                 .ceil() as usize)
                                 .min(replicas + cfg.autoscaler.up_step)
                                 .min(cfg.autoscaler.max_replicas)
-                                .min(stage.max_replicas);
+                                .min(stage.max_ceiling());
                             for _ in replicas..want {
                                 cluster.spawn_replica(&plan, stage);
                             }
@@ -91,7 +99,7 @@ fn run(cluster: Arc<ClusterInner>) {
                             && !stage.slack_added.swap(true, Ordering::Relaxed)
                         {
                             let ceiling =
-                                cfg.autoscaler.max_replicas.min(stage.max_replicas);
+                                cfg.autoscaler.max_replicas.min(stage.max_ceiling());
                             for _ in 0..cfg.autoscaler.slack_replicas {
                                 if stage.replica_count() < ceiling {
                                     cluster.spawn_replica(&plan, stage);
@@ -123,6 +131,19 @@ mod tests {
     use crate::dataflow::operator::{Func, SleepDist};
     use crate::dataflow::table::{DType, Schema, Table, Value};
     use crate::dataflow::Dataflow;
+
+    /// Dropping a cluster must wake and join the autoscaler thread
+    /// promptly — benches that build/tear down many clusters would
+    /// otherwise leak one polling thread per cluster.
+    #[test]
+    fn cluster_drop_joins_autoscaler() {
+        let t0 = std::time::Instant::now();
+        for _ in 0..6 {
+            let c = Cluster::new(None);
+            drop(c);
+        }
+        assert!(t0.elapsed() < Duration::from_secs(5), "{:?}", t0.elapsed());
+    }
 
     /// Under sustained load, the autoscaler must add replicas to the slow
     /// stage and leave the fast stage alone (the Fig 6 shape, shrunk).

@@ -3,7 +3,7 @@
 //! the to-be-continued segment mechanism (paper §4).
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex, RwLock};
 
 use anyhow::{bail, Context, Result};
@@ -19,9 +19,13 @@ use crate::runtime::InferClient;
 use crate::simulation::clock::{self, Clock};
 use crate::simulation::gpu::Device;
 use crate::util::rng::{self, Rng};
+use crate::util::shutdown::ShutdownGate;
 
 use super::executor::{self, Replica, StageRuntime, Task, TableMsg};
 use super::metrics::PlanMetrics;
+
+/// Admission parts-per-million meaning "admit everything".
+const ADMIT_ALL_PPM: u32 = 1_000_000;
 
 /// Handle to a registered plan.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -90,6 +94,13 @@ impl RequestCtx {
     }
 }
 
+/// Outcome of submitting a request through admission control.
+pub enum Admit {
+    Accepted(ExecFuture),
+    /// Rejected by the overload guard; the request was never enqueued.
+    Shed,
+}
+
 /// A registered (compiled) plan with live stage runtimes.
 pub struct RegisteredPlan {
     pub idx: usize,
@@ -97,6 +108,29 @@ pub struct RegisteredPlan {
     /// segs[seg][stage] mirrors plan.segments.
     pub segs: Vec<Vec<Arc<StageRuntime>>>,
     pub metrics: Arc<PlanMetrics>,
+    /// Admission fraction in parts-per-million (overload guard); the
+    /// per-request decision is a deterministic hash of the request id, so
+    /// a given id sequence always sheds the same requests.
+    pub admit_ppm: AtomicU32,
+}
+
+impl RegisteredPlan {
+    /// Deterministic admission decision for one request id.
+    fn admits(&self, req_id: u64) -> bool {
+        let ppm = self.admit_ppm.load(Ordering::Relaxed);
+        if ppm >= ADMIT_ALL_PPM {
+            return true;
+        }
+        (rng::Rng::new(req_id).next_u64() % ADMIT_ALL_PPM as u64) < ppm as u64
+    }
+
+    pub fn total_replicas(&self) -> usize {
+        self.segs
+            .iter()
+            .flatten()
+            .map(|s| s.replica_count())
+            .sum()
+    }
 }
 
 /// Node pool: CPU nodes host 2 workers (paper: c5.2xlarge, 2 executors per
@@ -189,6 +223,9 @@ pub struct ClusterInner {
     next_req: AtomicU64,
     pub shutdown: AtomicBool,
     pub autoscale: AtomicBool,
+    /// Wakes sleeping background loops (autoscaler, adaptive controller)
+    /// so `Cluster` drop can join them promptly.
+    pub gate: ShutdownGate,
 }
 
 impl ClusterInner {
@@ -228,9 +265,27 @@ impl ClusterInner {
             }
         };
         if let Some(inputs) = inputs {
-            let replica = self.choose_replica(plan, stage, hint);
+            stage.telemetry.note_arrival();
             stage.inflight.fetch_add(1, Ordering::Relaxed);
-            replica.push(Task { req: req.clone(), seg, stage: stage_idx, inputs });
+            let mut task = Task { req: req.clone(), seg, stage: stage_idx, inputs };
+            // A replica that drained out after a scale-down refuses the
+            // push; retry on another (the stage always keeps >= 1 live,
+            // except during cluster shutdown, when the request is failed
+            // rather than spinning on all-dead replicas).
+            loop {
+                let replica = self.choose_replica(plan, stage, hint);
+                match replica.push(task) {
+                    Ok(()) => break,
+                    Err(t) => {
+                        if self.shutdown.load(Ordering::Relaxed) {
+                            stage.inflight.fetch_sub(1, Ordering::Relaxed);
+                            t.req.fail(anyhow::anyhow!("cluster shutting down"));
+                            return;
+                        }
+                        task = t;
+                    }
+                }
+            }
         }
     }
 
@@ -348,12 +403,19 @@ impl ClusterInner {
         }
     }
 
-    /// Spawn one replica for a stage and start its worker thread.
+    /// Spawn one replica for a stage and start its worker thread.  A
+    /// no-op once the cluster is shutting down: a replica spawned after
+    /// `Cluster::drop`'s stop sweep would never be stopped and its worker
+    /// would spin forever (callers that loop until a replica count is
+    /// reached must check for progress).
     pub fn spawn_replica(
         self: &Arc<Self>,
         plan: &Arc<RegisteredPlan>,
         stage: &Arc<StageRuntime>,
     ) {
+        if self.shutdown.load(Ordering::Relaxed) {
+            return;
+        }
         let (node, cache) = self
             .nodes
             .lock()
@@ -370,6 +432,14 @@ impl ClusterInner {
             timed: true,
         };
         stage.replicas.write().unwrap().push(replica.clone());
+        // Re-check after publication: if Cluster::drop set the flag
+        // between the entry check and the list insert, its stop sweep may
+        // have missed this replica — stopping it ourselves guarantees the
+        // worker exits either way (the list insert synchronizes with the
+        // sweep's lock, so one of the two always observes the other).
+        if self.shutdown.load(Ordering::Relaxed) {
+            replica.stop();
+        }
         let c = self.clone();
         let p = plan.clone();
         let s = stage.clone();
@@ -383,7 +453,7 @@ impl ClusterInner {
     /// after draining its queue.
     pub fn remove_replica(&self, stage: &StageRuntime) {
         let mut reps = stage.replicas.write().unwrap();
-        if reps.len() <= stage.min_replicas.max(1) {
+        if reps.len() <= stage.min_floor().max(1) {
             return;
         }
         if let Some(r) = reps.pop() {
@@ -396,6 +466,88 @@ impl ClusterInner {
         self.plans.read().unwrap().iter().cloned().collect()
     }
 
+    pub fn plan(&self, h: DagHandle) -> Result<Arc<RegisteredPlan>> {
+        self.plans
+            .read()
+            .unwrap()
+            .get(h.0)
+            .cloned()
+            .context("unknown dag handle")
+    }
+
+    /// Hot-swap the provisioning of a registered plan to `dp` without
+    /// tearing the plan down: per-stage floors/ceilings and batch caps
+    /// are retargeted atomically, then replicas are scaled to the new
+    /// floor.  Scale-down drains each removed replica's queue before its
+    /// worker exits and the scheduler never enqueues onto a drained
+    /// replica, so no in-flight request is dropped.  The compiled
+    /// topology must match (a rewrite-variant change needs a fresh
+    /// registration; see `adaptive` module docs).
+    pub fn apply_plan(
+        self: &Arc<Self>,
+        h: DagHandle,
+        dp: &crate::planner::DeploymentPlan,
+    ) -> Result<()> {
+        let plan = self.plan(h)?;
+        if dp.plan.segments.len() != plan.plan.segments.len()
+            || dp
+                .plan
+                .segments
+                .iter()
+                .zip(plan.plan.segments.iter())
+                .any(|(a, b)| a.stages.len() != b.stages.len())
+        {
+            bail!(
+                "plan swap topology mismatch: {:?} cannot replace {:?}",
+                dp.plan.name,
+                plan.plan.name
+            );
+        }
+        for sp in &dp.stages {
+            let stage = plan
+                .segs
+                .get(sp.seg)
+                .and_then(|s| s.get(sp.idx))
+                .with_context(|| format!("no stage at seg{}/{}", sp.seg, sp.idx))?
+                .clone();
+            let floor = sp.replicas.max(1);
+            stage.batch_cap.store(sp.batch_cap, Ordering::Relaxed);
+            stage.min_replicas.store(floor, Ordering::Relaxed);
+            stage
+                .max_replicas
+                .store(sp.max_replicas.max(floor), Ordering::Relaxed);
+            while stage.replica_count() < floor {
+                let before = stage.replica_count();
+                self.spawn_replica(&plan, &stage);
+                if stage.replica_count() == before {
+                    bail!("cluster shutting down; plan swap aborted");
+                }
+            }
+            while stage.replica_count() > floor {
+                let before = stage.replica_count();
+                self.remove_replica(&stage);
+                if stage.replica_count() == before {
+                    break; // floor guard refused; nothing more to shed
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Set the admitted fraction of offered traffic for a plan (overload
+    /// guard). 1.0 restores full admission.
+    pub fn set_admission(&self, h: DagHandle, fraction: f64) -> Result<()> {
+        let plan = self.plan(h)?;
+        let ppm = (fraction.clamp(0.0, 1.0) * ADMIT_ALL_PPM as f64).round() as u32;
+        plan.admit_ppm.store(ppm.min(ADMIT_ALL_PPM), Ordering::Relaxed);
+        Ok(())
+    }
+
+    pub fn admission(&self, h: DagHandle) -> Result<f64> {
+        let plan = self.plan(h)?;
+        Ok(plan.admit_ppm.load(Ordering::Relaxed) as f64 / ADMIT_ALL_PPM as f64)
+    }
+
     pub fn n_nodes(&self) -> usize {
         self.nodes.lock().unwrap().n_nodes()
     }
@@ -404,6 +556,9 @@ impl ClusterInner {
 /// Public cluster API.
 pub struct Cluster {
     inner: Arc<ClusterInner>,
+    /// Background threads joined on drop (autoscaler; adaptive benches
+    /// that build and tear down many clusters must not leak threads).
+    bg: Vec<std::thread::JoinHandle<()>>,
 }
 
 impl Cluster {
@@ -429,9 +584,10 @@ impl Cluster {
             next_req: AtomicU64::new(1),
             shutdown: AtomicBool::new(false),
             autoscale: AtomicBool::new(false),
+            gate: ShutdownGate::new(),
         });
-        super::autoscaler::spawn(inner.clone());
-        Cluster { inner }
+        let scaler = super::autoscaler::spawn(inner.clone());
+        Cluster { inner, bg: vec![scaler] }
     }
 
     /// Register a compiled plan; spawns `initial_replicas` per stage.
@@ -494,9 +650,10 @@ impl Cluster {
                     processed: AtomicU64::new(0),
                     last_scale_up_ms: Mutex::new(f64::NEG_INFINITY),
                     slack_added: AtomicBool::new(false),
-                    min_replicas: p.min.max(1),
-                    max_replicas: p.max.max(p.min.max(1)),
-                    batch_cap: p.batch_cap,
+                    min_replicas: AtomicUsize::new(p.min.max(1)),
+                    max_replicas: AtomicUsize::new(p.max.max(p.min.max(1))),
+                    batch_cap: AtomicUsize::new(p.batch_cap),
+                    telemetry: executor::StageTelemetry::default(),
                 }));
             }
             segs.push(stages);
@@ -506,6 +663,7 @@ impl Cluster {
             plan,
             segs,
             metrics: Arc::new(PlanMetrics::default()),
+            admit_ppm: AtomicU32::new(ADMIT_ALL_PPM),
         });
         for seg in &registered.segs {
             for stage in seg {
@@ -520,20 +678,41 @@ impl Cluster {
     }
 
     /// Execute a request through a registered plan; returns a future.
+    /// Bypasses admission control (microbenchmarks and tests drive their
+    /// clusters directly); traffic subject to the overload guard goes
+    /// through [`Cluster::submit`].
     pub fn execute(&self, h: DagHandle, input: Table) -> Result<ExecFuture> {
-        let plan = self
-            .inner
-            .plans
-            .read()
-            .unwrap()
-            .get(h.0)
-            .cloned()
-            .context("unknown dag handle")?;
+        let plan = self.inner.plan(h)?;
+        plan.metrics.note_offered();
+        let id = self.inner.next_req.fetch_add(1, Ordering::Relaxed);
+        self.start_request(&plan, id, input)
+    }
+
+    /// Submit a request through admission control: sheds deterministically
+    /// (by request-id hash) when the overload guard has lowered the
+    /// admitted fraction, otherwise behaves like [`Cluster::execute`].
+    pub fn submit(&self, h: DagHandle, input: Table) -> Result<Admit> {
+        let plan = self.inner.plan(h)?;
+        plan.metrics.note_offered();
+        let id = self.inner.next_req.fetch_add(1, Ordering::Relaxed);
+        if !plan.admits(id) {
+            plan.metrics.note_shed();
+            return Ok(Admit::Shed);
+        }
+        self.start_request(&plan, id, input).map(Admit::Accepted)
+    }
+
+    fn start_request(
+        &self,
+        plan: &Arc<RegisteredPlan>,
+        id: u64,
+        input: Table,
+    ) -> Result<ExecFuture> {
         let (tx, rx) = mpsc::channel();
         let submitted_ms = self.inner.clock.now_ms();
         let req = Arc::new(RequestCtx {
-            id: self.inner.next_req.fetch_add(1, Ordering::Relaxed),
-            plan_idx: h.0,
+            id,
+            plan_idx: plan.idx,
             submitted_ms,
             gather: Mutex::new(HashMap::new()),
             done: Mutex::new(Some(tx)),
@@ -554,7 +733,7 @@ impl Cluster {
             for (slot, inp) in st.inputs.iter().enumerate() {
                 if *inp == StageInput::Source {
                     self.inner.deliver(
-                        &plan,
+                        plan,
                         &req,
                         0,
                         si,
@@ -608,6 +787,9 @@ impl Cluster {
             }
             if cur < n {
                 self.inner.spawn_replica(&plan, &stage);
+                if stage.replica_count() == cur {
+                    bail!("cluster shutting down; cannot scale up");
+                }
             } else {
                 self.inner.remove_replica(&stage);
                 if stage.replica_count() == cur {
@@ -623,6 +805,22 @@ impl Cluster {
         self.inner.autoscale.store(on, Ordering::Relaxed);
     }
 
+    /// Hot-swap a registered plan's provisioning to `dp` (see
+    /// [`ClusterInner::apply_plan`]); drops no in-flight requests.
+    pub fn apply_plan(&self, h: DagHandle, dp: &crate::planner::DeploymentPlan) -> Result<()> {
+        self.inner.apply_plan(h, dp)
+    }
+
+    /// Set the admitted fraction of [`Cluster::submit`] traffic (overload
+    /// guard); 1.0 restores full admission.
+    pub fn set_admission(&self, h: DagHandle, fraction: f64) -> Result<()> {
+        self.inner.set_admission(h, fraction)
+    }
+
+    pub fn admission(&self, h: DagHandle) -> Result<f64> {
+        self.inner.admission(h)
+    }
+
     pub fn inner(&self) -> &Arc<ClusterInner> {
         &self.inner
     }
@@ -636,15 +834,30 @@ impl Cluster {
 impl Drop for Cluster {
     fn drop(&mut self) {
         self.inner.shutdown.store(true, Ordering::Relaxed);
-        for plan in self.inner.plans() {
-            for seg in &plan.segs {
-                for stage in seg {
-                    for r in stage.replicas.read().unwrap().iter() {
-                        r.stop();
+        self.inner.gate.trigger();
+        let stop_all = |inner: &ClusterInner| {
+            for plan in inner.plans() {
+                for seg in &plan.segs {
+                    for stage in seg {
+                        for r in stage.replicas.read().unwrap().iter() {
+                            r.stop();
+                        }
                     }
                 }
             }
+        };
+        stop_all(&self.inner);
+        // Join background loops (autoscaler): adaptive benches build and
+        // tear down many clusters and must not leak threads.
+        for h in self.bg.drain(..) {
+            let _ = h.join();
         }
+        // Second sweep: a scaler/controller mid-iteration may have raced
+        // a spawn past the first sweep before it observed `shutdown`
+        // (spawn_replica itself refuses once the flag is set, but the
+        // flag read and the first sweep are not atomic).  With the
+        // background loops joined, membership is now stable.
+        stop_all(&self.inner);
     }
 }
 
@@ -844,6 +1057,43 @@ mod tests {
         // And the deployment still serves requests correctly.
         let out = cluster.execute(h, input_table(2)).unwrap().result().unwrap();
         assert_eq!(out.len(), 2);
+    }
+
+    #[test]
+    fn admission_sheds_deterministically() {
+        let cluster = Cluster::new(None);
+        let plan = compile(&simple_flow(), &OptFlags::none()).unwrap();
+        let h = cluster.register(plan, 1).unwrap();
+        cluster.set_admission(h, 0.5).unwrap();
+        assert!((cluster.admission(h).unwrap() - 0.5).abs() < 1e-6);
+        let mut admitted = 0usize;
+        let mut shed = 0usize;
+        for _ in 0..200 {
+            match cluster.submit(h, input_table(1)).unwrap() {
+                Admit::Accepted(f) => {
+                    f.result().unwrap();
+                    admitted += 1;
+                }
+                Admit::Shed => shed += 1,
+            }
+        }
+        assert_eq!(admitted + shed, 200);
+        // The id-hash is uniform: shed fraction tracks the setting.
+        assert!(shed > 60 && shed < 140, "shed={shed}");
+        let m = cluster.metrics(h);
+        assert_eq!(m.offered(), 200);
+        assert_eq!(m.shed_count(), shed as u64);
+        assert_eq!(m.completed(), admitted as u64);
+        // Restoring admission stops shedding entirely.
+        cluster.set_admission(h, 1.0).unwrap();
+        for _ in 0..20 {
+            match cluster.submit(h, input_table(1)).unwrap() {
+                Admit::Accepted(f) => {
+                    f.result().unwrap();
+                }
+                Admit::Shed => panic!("shed at full admission"),
+            }
+        }
     }
 
     #[test]

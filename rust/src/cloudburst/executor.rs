@@ -19,6 +19,7 @@ use crate::dataflow::operator::ExecCtx;
 use crate::dataflow::table::Table;
 use crate::net::NodeId;
 use crate::simulation::clock;
+use crate::util::stats::WindowSketch;
 
 use super::cluster::{ClusterInner, RegisteredPlan, RequestCtx};
 
@@ -37,7 +38,59 @@ pub struct Task {
     pub inputs: Vec<TableMsg>,
 }
 
+/// Live per-stage observations the adaptive telemetry collector samples:
+/// windowed service-time and batch-size sketches fed by the executor, plus
+/// a lifetime arrival counter for rate estimation.  Fixed memory per
+/// stage.
+#[derive(Debug)]
+pub struct StageTelemetry {
+    /// Per-invocation service time (virtual ms) over the recent window.
+    pub service: Mutex<WindowSketch>,
+    /// Observed dequeue batch sizes over the recent window.
+    pub batches: Mutex<WindowSketch>,
+    /// Tasks delivered to this stage (lifetime).
+    pub arrivals: AtomicU64,
+}
+
+impl Default for StageTelemetry {
+    fn default() -> Self {
+        // A tighter window than the plan-level latency sketch: stage-level
+        // drift ratios should track *recent* service times, so stale
+        // history ages out quickly.
+        StageTelemetry {
+            service: Mutex::new(WindowSketch::new(512)),
+            batches: Mutex::new(WindowSketch::new(512)),
+            arrivals: AtomicU64::new(0),
+        }
+    }
+}
+
+impl StageTelemetry {
+    /// Record one executed invocation covering `n` tasks.
+    pub fn note_invocation(&self, n: usize, service_ms: f64) {
+        if n == 0 {
+            return;
+        }
+        self.service.lock().unwrap().add(service_ms.max(0.0));
+        self.batches.lock().unwrap().add(n as f64);
+    }
+
+    pub fn note_arrival(&self) {
+        self.arrivals.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Clear the windows (kept counters survive); used after a plan swap.
+    pub fn reset_windows(&self) {
+        self.service.lock().unwrap().clear();
+        self.batches.lock().unwrap().clear();
+    }
+}
+
 /// Runtime state of one stage of a registered plan.
+///
+/// The provisioning knobs (`min_replicas`, `max_replicas`, `batch_cap`)
+/// are atomics so a live plan swap (`Cluster::apply_plan`) can retarget
+/// them without tearing down the stage.
 pub struct StageRuntime {
     pub plan_idx: usize,
     pub seg: usize,
@@ -52,11 +105,13 @@ pub struct StageRuntime {
     pub last_scale_up_ms: Mutex<f64>,
     pub slack_added: AtomicBool,
     /// Autoscaler floor (a deployment plan's pre-provisioned replicas).
-    pub min_replicas: usize,
+    pub min_replicas: AtomicUsize,
     /// Autoscaler ceiling for this stage (plan pin or the config cap).
-    pub max_replicas: usize,
+    pub max_replicas: AtomicUsize,
     /// Pinned dequeue batch cap; 0 = use the global batch config.
-    pub batch_cap: usize,
+    pub batch_cap: AtomicUsize,
+    /// Live observations for the adaptive controller.
+    pub telemetry: StageTelemetry,
 }
 
 impl StageRuntime {
@@ -66,6 +121,18 @@ impl StageRuntime {
 
     pub fn queue_depth(&self) -> i64 {
         self.inflight.load(Ordering::Relaxed)
+    }
+
+    pub fn min_floor(&self) -> usize {
+        self.min_replicas.load(Ordering::Relaxed)
+    }
+
+    pub fn max_ceiling(&self) -> usize {
+        self.max_replicas.load(Ordering::Relaxed)
+    }
+
+    pub fn pinned_batch_cap(&self) -> usize {
+        self.batch_cap.load(Ordering::Relaxed)
     }
 }
 
@@ -78,6 +145,12 @@ pub struct Replica {
     queue: Mutex<VecDeque<Task>>,
     cv: Condvar,
     pub shutdown: AtomicBool,
+    /// Set by the worker, under the queue lock, once it has drained its
+    /// queue after `stop()` and will never dequeue again.  `push` checks
+    /// it under the same lock, so a task can never land on a replica that
+    /// has already exited — the scheduler retries on another replica and
+    /// scale-down provably drops no in-flight work.
+    dead: AtomicBool,
 }
 
 impl Replica {
@@ -88,12 +161,21 @@ impl Replica {
             queue: Mutex::new(VecDeque::new()),
             cv: Condvar::new(),
             shutdown: AtomicBool::new(false),
+            dead: AtomicBool::new(false),
         })
     }
 
-    pub fn push(&self, task: Task) {
-        self.queue.lock().unwrap().push_back(task);
+    /// Enqueue a task; returns it back if this replica has permanently
+    /// exited (the caller must pick another replica).
+    pub fn push(&self, task: Task) -> Result<(), Task> {
+        let mut q = self.queue.lock().unwrap();
+        if self.dead.load(Ordering::Relaxed) {
+            return Err(task);
+        }
+        q.push_back(task);
+        drop(q);
         self.cv.notify_one();
+        Ok(())
     }
 
     pub fn queue_len(&self) -> usize {
@@ -106,7 +188,9 @@ impl Replica {
     }
 
     /// Pop up to `max` tasks (1 unless the stage batches). Blocks up to
-    /// 50ms real time; returns empty on timeout/shutdown.
+    /// 50ms real time; returns empty on timeout, or on shutdown once the
+    /// queue is fully drained (the replica is then marked dead before the
+    /// queue lock is released).
     fn pop_batch(&self, max: usize) -> Vec<Task> {
         let mut q = self.queue.lock().unwrap();
         loop {
@@ -115,6 +199,9 @@ impl Replica {
                 return q.drain(..n).collect();
             }
             if self.shutdown.load(Ordering::Relaxed) {
+                // Empty + stopping: commit to never dequeueing again while
+                // still holding the lock, so no push can race in between.
+                self.dead.store(true, Ordering::Relaxed);
                 return Vec::new();
             }
             let (guard, _) = self
@@ -135,10 +222,11 @@ pub fn replica_loop(
     ctx: ExecCtx,
 ) {
     loop {
+        let pinned = stage_rt.pinned_batch_cap();
         let max_batch = if !stage_rt.spec.batchable {
             1
-        } else if stage_rt.batch_cap > 0 {
-            stage_rt.batch_cap
+        } else if pinned > 0 {
+            pinned
         } else {
             crate::config::max_batch()
         };
@@ -196,7 +284,11 @@ fn process_batch(
     if tasks.len() == 1 {
         let task = tasks.pop().unwrap();
         let inputs: Vec<Table> = task.inputs.iter().map(|m| m.table.clone()).collect();
+        let t0 = cluster.clock.now_ms();
         let out = run_ops(ctx, &stage_rt.spec, inputs);
+        stage_rt
+            .telemetry
+            .note_invocation(1, cluster.clock.now_ms() - t0);
         finish(cluster, plan, task, out, replica.node);
         return Ok(());
     }
@@ -213,7 +305,11 @@ fn process_batch(
         parts.push(t.inputs[0].table.clone());
     }
     let combined = apply_union(parts).context("batch combine")?;
+    let t0 = cluster.clock.now_ms();
     let out = run_ops(ctx, &stage_rt.spec, vec![combined]);
+    stage_rt
+        .telemetry
+        .note_invocation(tasks.len(), cluster.clock.now_ms() - t0);
     match out {
         Ok(out) => {
             for (t, ids) in tasks.into_iter().zip(id_sets) {

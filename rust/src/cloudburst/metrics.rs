@@ -1,20 +1,32 @@
 //! Per-plan serving metrics: end-to-end latency summaries, completion
-//! timelines (Fig 6), and replica-allocation history.
+//! timelines (Fig 6), replica-allocation history, and the offered/shed
+//! counters the overload guard reports against.
+//!
+//! Latency is held in a fixed-memory [`WindowSketch`] rather than an
+//! unbounded sample vector: long-running serving never grows memory, and
+//! percentile queries reflect the recent window — which is what both the
+//! paper-style (median, p99) reporting over a bench phase and the adaptive
+//! controller's SLO-attainment estimates need.
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
-use crate::util::stats::{Summary, Timeline};
+use crate::util::stats::{Summary, Timeline, WindowSketch};
 
 #[derive(Debug, Default)]
 pub struct PlanMetrics {
-    /// End-to-end request latencies (virtual ms).
-    pub latency: Mutex<Summary>,
+    /// Windowed end-to-end request latencies (virtual ms).
+    pub latency: Mutex<WindowSketch>,
     /// Optional completion timeline (enabled for Fig 6-style runs).
     pub timeline: Mutex<Option<Timeline>>,
     /// (t_ms, stage_label, replicas) samples from the autoscaler.
     pub allocation: Mutex<Vec<(f64, String, usize)>>,
     /// Completed request count.
-    pub completed: std::sync::atomic::AtomicU64,
+    pub completed: AtomicU64,
+    /// Requests presented to the plan (admitted or not).
+    pub offered: AtomicU64,
+    /// Requests rejected by admission control (overload guard).
+    pub shed: AtomicU64,
 }
 
 impl PlanMetrics {
@@ -23,8 +35,7 @@ impl PlanMetrics {
         if let Some(tl) = self.timeline.lock().unwrap().as_mut() {
             tl.record(t_ms, latency_ms);
         }
-        self.completed
-            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        self.completed.fetch_add(1, Ordering::Relaxed);
     }
 
     pub fn enable_timeline(&self, bucket_ms: f64, horizon_ms: f64) {
@@ -38,17 +49,51 @@ impl PlanMetrics {
             .push((t_ms, stage.to_string(), replicas));
     }
 
-    /// (median, p99) of recorded latencies.
+    pub fn note_offered(&self) {
+        self.offered.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn note_shed(&self) {
+        self.shed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// (median, p99) of the latency window.
     pub fn report(&self) -> (f64, f64) {
         self.latency.lock().unwrap().report()
     }
 
-    pub fn summary(&self) -> Summary {
+    /// Snapshot of the windowed latency sketch.
+    pub fn sketch(&self) -> WindowSketch {
         self.latency.lock().unwrap().clone()
     }
 
+    /// The latency window materialized as a [`Summary`].
+    pub fn summary(&self) -> Summary {
+        self.latency.lock().unwrap().to_summary()
+    }
+
+    /// Fraction of windowed latencies within `slo_ms`; NaN if the window
+    /// is empty.
+    pub fn attainment(&self, slo_ms: f64) -> f64 {
+        self.latency.lock().unwrap().fraction_le(slo_ms)
+    }
+
+    /// Clear the latency window (the adaptive controller does this after a
+    /// plan swap so attainment reflects only post-swap traffic).
+    pub fn reset_latency_window(&self) {
+        self.latency.lock().unwrap().clear();
+    }
+
     pub fn completed(&self) -> u64 {
-        self.completed.load(std::sync::atomic::Ordering::Relaxed)
+        self.completed.load(Ordering::Relaxed)
+    }
+
+    pub fn offered(&self) -> u64 {
+        self.offered.load(Ordering::Relaxed)
+    }
+
+    pub fn shed_count(&self) -> u64 {
+        self.shed.load(Ordering::Relaxed)
     }
 
     /// Integrate the allocation log into total replica-seconds over
@@ -102,6 +147,29 @@ mod tests {
         assert!((med - 10.0).abs() < 1e-9);
         assert!(p99 <= 15.0);
         assert_eq!(m.completed(), 2);
+    }
+
+    #[test]
+    fn attainment_and_window_reset() {
+        let m = PlanMetrics::default();
+        assert!(m.attainment(100.0).is_nan());
+        for lat in [10.0, 20.0, 30.0, 200.0] {
+            m.record(0.0, lat);
+        }
+        assert!((m.attainment(50.0) - 0.75).abs() < 1e-9);
+        m.reset_latency_window();
+        assert!(m.attainment(50.0).is_nan());
+        assert_eq!(m.completed(), 4); // counters survive the reset
+    }
+
+    #[test]
+    fn offered_and_shed_counters() {
+        let m = PlanMetrics::default();
+        m.note_offered();
+        m.note_offered();
+        m.note_shed();
+        assert_eq!(m.offered(), 2);
+        assert_eq!(m.shed_count(), 1);
     }
 
     #[test]

@@ -60,6 +60,52 @@ pub type TableFn = Arc<dyn Fn(&ExecCtx, &Table) -> Result<Table> + Send + Sync>;
 /// Row predicate for `filter`.
 pub type RowPred = Arc<dyn Fn(&ExecCtx, &Table, &Row) -> Result<bool> + Send + Sync>;
 
+/// Shared multiplier on a sleep distribution that can be changed while a
+/// cluster is serving — the injection point for service-time drift in the
+/// adaptive workloads.  Every sampling site (`SleepDist::sample_ms`) reads
+/// the knob at invocation time, so the executor, the local oracle, and the
+/// planner's analytic profiler all see the *current* value: profiles taken
+/// before a `set` call diverge from observed behaviour after it, which is
+/// exactly the scenario the drift detector exists for.
+#[derive(Clone)]
+pub struct DriftKnob(Arc<std::sync::atomic::AtomicU64>);
+
+impl Default for DriftKnob {
+    fn default() -> Self {
+        DriftKnob::new()
+    }
+}
+
+impl DriftKnob {
+    /// A knob starting at 1.0 (no drift).
+    pub fn new() -> Self {
+        DriftKnob(Arc::new(std::sync::atomic::AtomicU64::new(1.0f64.to_bits())))
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(std::sync::atomic::Ordering::Relaxed))
+    }
+
+    /// Set the multiplier (values <= 0 are clamped to a small positive).
+    pub fn set(&self, scale: f64) {
+        let s = if scale.is_finite() { scale.max(1e-3) } else { 1.0 };
+        self.0
+            .store(s.to_bits(), std::sync::atomic::Ordering::Relaxed);
+    }
+}
+
+impl fmt::Debug for DriftKnob {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "DriftKnob({:.3})", self.get())
+    }
+}
+
+impl PartialEq for DriftKnob {
+    fn eq(&self, other: &Self) -> bool {
+        Arc::ptr_eq(&self.0, &other.0)
+    }
+}
+
 /// Synthetic service-time distributions for the microbenchmarks
 /// (Fig 5 uses Gamma(k=3, θ∈{1,2,4})).
 #[derive(Debug, Clone, PartialEq)]
@@ -67,6 +113,9 @@ pub enum SleepDist {
     ConstMs(f64),
     /// base + Gamma(k, theta) * unit_ms
     GammaMs { k: f64, theta: f64, unit_ms: f64, base_ms: f64 },
+    /// A base distribution scaled by a live [`DriftKnob`] (adaptive
+    /// workloads inject service-time drift mid-run through this).
+    Scaled { base: Box<SleepDist>, knob: DriftKnob },
 }
 
 impl SleepDist {
@@ -76,7 +125,13 @@ impl SleepDist {
             SleepDist::GammaMs { k, theta, unit_ms, base_ms } => {
                 base_ms + rng.gamma(*k, *theta) * unit_ms
             }
+            SleepDist::Scaled { base, knob } => base.sample_ms(rng) * knob.get(),
         }
+    }
+
+    /// Wrap `self` so its samples track `knob`.
+    pub fn scaled_by(self, knob: DriftKnob) -> SleepDist {
+        SleepDist::Scaled { base: Box::new(self), knob }
     }
 }
 
@@ -483,6 +538,23 @@ mod tests {
         let mean = xs.iter().sum::<f64>() / xs.len() as f64;
         assert!((mean - 61.0).abs() < 5.0, "mean={mean}"); // 1 + 3*2*10
         assert!(xs.iter().all(|&x| x >= 1.0));
+    }
+
+    #[test]
+    fn drift_knob_scales_sleep() {
+        let mut r = Rng::new(2);
+        let knob = DriftKnob::new();
+        let d = SleepDist::ConstMs(10.0).scaled_by(knob.clone());
+        assert_eq!(d.sample_ms(&mut r), 10.0);
+        knob.set(2.5);
+        assert_eq!(d.sample_ms(&mut r), 25.0);
+        knob.set(-4.0); // clamped, never negative
+        assert!(d.sample_ms(&mut r) > 0.0);
+        // Clones share the knob.
+        let d2 = d.clone();
+        knob.set(3.0);
+        assert_eq!(d2.sample_ms(&mut r), 30.0);
+        assert_eq!(d, d2);
     }
 
     #[test]

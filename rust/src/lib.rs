@@ -20,10 +20,17 @@
 //! [`dataflow::compile_for_slo`], deployed with
 //! [`cloudburst::Cluster::register_planned`].
 //!
+//! The [`adaptive`] subsystem closes the remaining loop at runtime:
+//! executor-fed telemetry sketches, drift detection against the planning
+//! profile, live re-planning with zero-drop plan hot-swap, and overload
+//! protection via deterministic admission control.
+//!
 //! Start with [`dataflow::Dataflow`] (the user API) and
 //! [`cloudburst::Cluster`] (the runtime), or the `examples/` directory
-//! (`examples/slo_planner.rs` for the planner path).
+//! (`examples/slo_planner.rs` for the planner path,
+//! `examples/adaptive_serving.rs` for the adaptive controller).
 
+pub mod adaptive;
 pub mod anna;
 pub mod baselines;
 pub mod cloudburst;

@@ -39,7 +39,10 @@ pub mod tuner;
 pub use cost::{estimate, CostEstimate, DeployConfig, StageConfig};
 pub use profile::{Profile, StageProfile, CANDIDATE_BATCHES};
 pub use profiler::{profile_plan, PlannerCtx};
-pub use tuner::{plan_for_slo, tune, DeploymentPlan, StagePlan, TunerOptions};
+pub use tuner::{
+    plan_for_slo, plan_max_throughput, tune, tune_profile, DeploymentPlan, StagePlan,
+    TunerOptions,
+};
 
 use crate::config;
 

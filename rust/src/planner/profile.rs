@@ -113,6 +113,27 @@ impl Profile {
     pub fn n_stages(&self) -> usize {
         self.stages.iter().map(Vec::len).sum()
     }
+
+    /// A copy with every stage's service-time samples multiplied by
+    /// `factor(seg, idx)` — how live re-planning turns a calibration
+    /// profile plus observed drift ratios into a `LiveProfile` the tuner
+    /// can re-run against.  Non-finite or non-positive factors are
+    /// treated as 1.0 (no evidence of drift).
+    pub fn scale_service(&self, factor: impl Fn(usize, usize) -> f64) -> Profile {
+        let mut out = self.clone();
+        for seg in &mut out.stages {
+            for sp in seg.iter_mut() {
+                let f = factor(sp.seg, sp.idx);
+                let f = if f.is_finite() && f > 0.0 { f } else { 1.0 };
+                for (_, samples) in &mut sp.service_ms {
+                    for s in samples.iter_mut() {
+                        *s *= f;
+                    }
+                }
+            }
+        }
+        out
+    }
 }
 
 #[cfg(test)]
@@ -151,6 +172,22 @@ mod tests {
         let p = prof(vec![(1, vec![10.0, 20.0, 30.0])]);
         assert!((p.mean_ms(1) - 20.0).abs() < 1e-9);
         assert!(p.p99_ms(1) >= 29.0);
+    }
+
+    #[test]
+    fn scale_service_multiplies_samples() {
+        let p = Profile {
+            stages: vec![vec![prof(vec![(1, vec![10.0, 20.0])])]],
+            input_bytes: 1.0,
+            output_bytes: 1.0,
+            calib_requests: 1,
+        };
+        let scaled = p.scale_service(|_, _| 3.0);
+        assert!((scaled.get(0, 0).mean_ms(1) - 45.0).abs() < 1e-9);
+        // The original is untouched; bad factors fall back to 1.0.
+        assert!((p.get(0, 0).mean_ms(1) - 15.0).abs() < 1e-9);
+        let nan = p.scale_service(|_, _| f64::NAN);
+        assert!((nan.get(0, 0).mean_ms(1) - 15.0).abs() < 1e-9);
     }
 
     #[test]

@@ -52,8 +52,13 @@ pub struct DeploymentPlan {
     /// One entry per stage, in (segment, stage) order.
     pub stages: Vec<StagePlan>,
     pub estimate: CostEstimate,
-    /// Which rewrite variant won (e.g. "all", "all+comp3").
+    /// Which rewrite variant won (e.g. "all", "all+comp3", or "live" for
+    /// an adaptive re-plan).
     pub variant: String,
+    /// The profile the tuner searched against — the adaptive controller's
+    /// drift baseline (observed service times are compared to it, and
+    /// live re-plans rescale it).
+    pub profile: Profile,
 }
 
 impl DeploymentPlan {
@@ -152,10 +157,10 @@ pub fn tune(
             Err(_) => continue,
         };
         let profile = profile_plan(&plan, flow.input_schema(), ctx)?;
-        let found = search_candidate(&plan, &profile, slo, ctx, opts, mc_samples);
+        let found = search_candidate(&plan, &profile, slo, ctx.seed, opts, mc_samples);
         if let Some(cfg) = found {
             let est = estimate(&plan, &profile, &cfg, slo.min_qps, mc_samples, ctx.seed);
-            let dp = build_deployment(plan, cfg, est, slo, variant, opts);
+            let dp = build_deployment(plan, profile, cfg, est, slo, variant, opts);
             let better = match &best {
                 None => true,
                 Some(b) => {
@@ -247,7 +252,7 @@ fn search_candidate(
     plan: &Plan,
     profile: &Profile,
     slo: &Slo,
-    ctx: &PlannerCtx,
+    seed: u64,
     opts: &TunerOptions,
     mc_samples: usize,
 ) -> Option<DeployConfig> {
@@ -255,9 +260,9 @@ fn search_candidate(
     let global_batch = config::global().batch.max_batch.max(1);
     let mut cfg = DeployConfig::uniform(plan, 1, 1);
     for _ in 0..opts.max_steps.max(1) {
-        let est = estimate(plan, profile, &cfg, slo.min_qps, mc_samples, ctx.seed);
+        let est = estimate(plan, profile, &cfg, slo.min_qps, mc_samples, seed);
         if est.meets(slo, opts.safety) {
-            shrink(plan, profile, slo, ctx, opts, mc_samples, &mut cfg);
+            shrink(plan, profile, slo, seed, opts, mc_samples, &mut cfg);
             return Some(cfg);
         }
         let mut acted = false;
@@ -316,7 +321,7 @@ fn shrink(
     plan: &Plan,
     profile: &Profile,
     slo: &Slo,
-    ctx: &PlannerCtx,
+    seed: u64,
     opts: &TunerOptions,
     mc_samples: usize,
     cfg: &mut DeployConfig,
@@ -334,7 +339,7 @@ fn shrink(
                 continue;
             }
             cfg.get_mut(si, sti).replicas -= 1;
-            let est = estimate(plan, profile, cfg, slo.min_qps, mc_samples, ctx.seed);
+            let est = estimate(plan, profile, cfg, slo.min_qps, mc_samples, seed);
             if est.meets(slo, opts.safety) {
                 improved = true;
             } else {
@@ -386,6 +391,7 @@ fn can_add_replica(
 
 fn build_deployment(
     plan: Plan,
+    profile: Profile,
     cfg: DeployConfig,
     est: CostEstimate,
     slo: &Slo,
@@ -408,7 +414,111 @@ fn build_deployment(
             });
         }
     }
-    DeploymentPlan { plan, slo: *slo, stages, estimate: est, variant }
+    DeploymentPlan { plan, slo: *slo, stages, estimate: est, variant, profile }
+}
+
+/// Monte-Carlo samples the re-entrant entry points use (matches the
+/// default `PlannerCtx` resolution in [`tune`]).
+const LIVE_MC_SAMPLES: usize = 400;
+
+/// Re-entrant tuning over an *already compiled* plan and a caller-supplied
+/// profile — the adaptive controller's re-planning path.  No rewrite
+/// variants are explored (the plan is live; hot-swap can retarget replica
+/// floors/ceilings and batch caps but not the compiled topology): the
+/// search covers per-stage replica counts and batch caps only.  Fully
+/// deterministic for a given `seed`.
+pub fn tune_profile(
+    plan: &Plan,
+    profile: &Profile,
+    slo: &Slo,
+    opts: &TunerOptions,
+    seed: u64,
+    variant: &str,
+) -> Result<DeploymentPlan> {
+    if slo.p99_ms.is_nan() || slo.p99_ms <= 0.0 || slo.min_qps < 0.0 {
+        return Err(anyhow!("invalid SLO: {slo:?}"));
+    }
+    let cfg = search_candidate(plan, profile, slo, seed, opts, LIVE_MC_SAMPLES)
+        .ok_or_else(|| {
+            anyhow!(
+                "no deployment of {:?} meets p99<={:.0}ms at >={:.0} qps within capacity",
+                plan.name,
+                slo.p99_ms,
+                slo.min_qps
+            )
+        })?;
+    let est = estimate(plan, profile, &cfg, slo.min_qps, LIVE_MC_SAMPLES, seed);
+    Ok(build_deployment(
+        plan.clone(),
+        profile.clone(),
+        cfg,
+        est,
+        slo,
+        variant.to_string(),
+        opts,
+    ))
+}
+
+/// Best-effort throughput plan: grow the modeled bottleneck (batch cap
+/// first, then replicas) within capacity until the sustainable-QPS
+/// estimate stops improving.  The overload guard uses this to find the
+/// serving ceiling when no SLO-feasible plan exists at the observed
+/// arrival rate — admitted traffic is then shed down to that ceiling.
+pub fn plan_max_throughput(
+    plan: &Plan,
+    profile: &Profile,
+    slo: &Slo,
+    opts: &TunerOptions,
+    seed: u64,
+) -> DeploymentPlan {
+    let global_batch = config::global().batch.max_batch.max(1);
+    let mut cfg = DeployConfig::uniform(plan, 1, 1);
+    let mut best = estimate(plan, profile, &cfg, 0.0, LIVE_MC_SAMPLES, seed);
+    for _ in 0..opts.max_steps.max(1) {
+        let (bs, bi) = best.bottleneck;
+        let sp = profile.get(bs, bi);
+        let mut improved = false;
+        // Batch bump first (capacity without replicas), kept only if it
+        // actually raises the ceiling; otherwise fall back to a replica.
+        if sp.batchable {
+            let cur = cfg.get(bs, bi).batch_cap;
+            let next = next_batch(cur, global_batch);
+            if next > cur {
+                cfg.get_mut(bs, bi).batch_cap = next;
+                let est = estimate(plan, profile, &cfg, 0.0, LIVE_MC_SAMPLES, seed);
+                if est.max_qps > best.max_qps * (1.0 + 1e-6) {
+                    best = est;
+                    improved = true;
+                } else {
+                    cfg.get_mut(bs, bi).batch_cap = cur;
+                }
+            }
+        }
+        if !improved && can_add_replica(plan, &cfg, bs, bi, &opts.caps) {
+            cfg.get_mut(bs, bi).replicas += 1;
+            let est = estimate(plan, profile, &cfg, 0.0, LIVE_MC_SAMPLES, seed);
+            if est.max_qps > best.max_qps * (1.0 + 1e-6)
+                || est.bottleneck != best.bottleneck
+            {
+                best = est;
+                improved = true;
+            } else {
+                cfg.get_mut(bs, bi).replicas -= 1;
+            }
+        }
+        if !improved {
+            break; // bottleneck is at capacity every way we can grow it
+        }
+    }
+    build_deployment(
+        plan.clone(),
+        profile.clone(),
+        cfg,
+        best,
+        slo,
+        "throughput".to_string(),
+        opts,
+    )
 }
 
 #[cfg(test)]
@@ -514,6 +624,49 @@ mod tests {
                 }
             }
             Err(_) => {} // infeasible under the tight caps is also valid
+        }
+    }
+
+    #[test]
+    fn tune_profile_reacts_to_rescaled_service() {
+        let fl = sleep_chain(&[20.0]);
+        let plan = compile(&fl, &OptFlags::none()).unwrap();
+        let profile =
+            profile_plan(&plan, fl.input_schema(), &quick_ctx()).unwrap();
+        let slo = Slo::new(400.0, 40.0);
+        let opts = TunerOptions::default();
+        let dp = tune_profile(&plan, &profile, &slo, &opts, 7, "live").unwrap();
+        assert_eq!(dp.variant, "live");
+        // 3x drift on the stage forces more capacity for the same SLO.
+        let drifted = profile.scale_service(|_, _| 3.0);
+        let dp2 = tune_profile(&plan, &drifted, &slo, &opts, 7, "live").unwrap();
+        assert!(
+            dp2.n_replicas() > dp.n_replicas(),
+            "{} !> {}",
+            dp2.n_replicas(),
+            dp.n_replicas()
+        );
+        // Deterministic for a fixed seed.
+        let dp3 = tune_profile(&plan, &drifted, &slo, &opts, 7, "live").unwrap();
+        assert_eq!(format!("{:?}", dp2.stages), format!("{:?}", dp3.stages));
+    }
+
+    #[test]
+    fn max_throughput_plan_hits_capacity() {
+        let fl = sleep_chain(&[20.0]);
+        let plan = compile(&fl, &OptFlags::none()).unwrap();
+        let profile =
+            profile_plan(&plan, fl.input_schema(), &quick_ctx()).unwrap();
+        let opts = TunerOptions {
+            caps: ResourceCaps { per_stage: 3, cpu_slots: 6, gpu_slots: 1 },
+            ..TunerOptions::default()
+        };
+        let slo = Slo::new(100.0, 1000.0);
+        let tp = plan_max_throughput(&plan, &profile, &slo, &opts, 7);
+        // 20ms unbatchable stage, 3 replicas max => ~150/s ceiling.
+        assert!(tp.estimate.max_qps > 100.0, "{}", tp.estimate.max_qps);
+        for st in &tp.stages {
+            assert!(st.replicas <= 3);
         }
     }
 

@@ -6,4 +6,5 @@ pub mod codec;
 pub mod json;
 pub mod quickcheck;
 pub mod rng;
+pub mod shutdown;
 pub mod stats;

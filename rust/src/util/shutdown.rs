@@ -1,0 +1,82 @@
+//! Cooperative shutdown for background threads (autoscaler, adaptive
+//! controller): a triggerable gate that sleeping loops wait on, so
+//! `Cluster` drop can wake and join them immediately instead of leaking
+//! threads or blocking for a full poll interval.  Benches that build and
+//! tear down many clusters depend on this being prompt.
+
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Default)]
+pub struct ShutdownGate {
+    shut: Mutex<bool>,
+    cv: Condvar,
+}
+
+impl ShutdownGate {
+    pub fn new() -> Self {
+        ShutdownGate::default()
+    }
+
+    /// Trip the gate and wake every waiter.  Idempotent.
+    pub fn trigger(&self) {
+        let mut g = self.shut.lock().unwrap();
+        *g = true;
+        self.cv.notify_all();
+    }
+
+    pub fn is_shut(&self) -> bool {
+        *self.shut.lock().unwrap()
+    }
+
+    /// Sleep up to `d`, returning early (with `true`) the moment the gate
+    /// is triggered; `false` means the full interval elapsed.
+    pub fn wait_timeout(&self, d: Duration) -> bool {
+        let deadline = Instant::now() + d;
+        let mut g = self.shut.lock().unwrap();
+        loop {
+            if *g {
+                return true;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return false;
+            }
+            let (ng, _) = self.cv.wait_timeout(g, deadline - now).unwrap();
+            g = ng;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn untriggered_times_out() {
+        let gate = ShutdownGate::new();
+        let t0 = Instant::now();
+        assert!(!gate.wait_timeout(Duration::from_millis(20)));
+        assert!(t0.elapsed() >= Duration::from_millis(15));
+        assert!(!gate.is_shut());
+    }
+
+    #[test]
+    fn trigger_wakes_waiter() {
+        let gate = Arc::new(ShutdownGate::new());
+        let g2 = gate.clone();
+        let h = std::thread::spawn(move || {
+            let t0 = Instant::now();
+            assert!(g2.wait_timeout(Duration::from_secs(10)));
+            t0.elapsed()
+        });
+        std::thread::sleep(Duration::from_millis(10));
+        gate.trigger();
+        let waited = h.join().unwrap();
+        assert!(waited < Duration::from_secs(5), "waited {waited:?}");
+        assert!(gate.is_shut());
+        // Already-shut gates return immediately.
+        assert!(gate.wait_timeout(Duration::from_secs(10)));
+    }
+}

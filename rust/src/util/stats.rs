@@ -105,6 +105,139 @@ impl Summary {
             self.percentile(99.0),
         ]
     }
+
+    /// Fraction of samples at or below `x` (SLO attainment); NaN if empty.
+    pub fn fraction_le(&self, x: f64) -> f64 {
+        if self.samples.is_empty() {
+            return f64::NAN;
+        }
+        let n = self.samples.iter().filter(|&&s| s <= x).count();
+        n as f64 / self.samples.len() as f64
+    }
+}
+
+/// Default window for [`WindowSketch`] — large enough that a bench phase's
+/// tail is exact, small enough that memory stays fixed under open-ended
+/// serving.
+pub const DEFAULT_SKETCH_WINDOW: usize = 4096;
+
+/// Fixed-memory windowed quantile estimator: a ring buffer over the last
+/// `cap` samples with exact percentile queries on the window.  Replaces
+/// unbounded full-sample accumulation on long-running serving paths
+/// (`PlanMetrics`, the adaptive telemetry collector): memory is O(cap)
+/// regardless of how many requests the plan has served, and queries
+/// reflect *recent* behaviour, which is what drift detection needs.
+#[derive(Debug, Clone)]
+pub struct WindowSketch {
+    buf: Vec<f64>,
+    cap: usize,
+    next: usize,
+    count: u64,
+}
+
+impl Default for WindowSketch {
+    fn default() -> Self {
+        WindowSketch::new(DEFAULT_SKETCH_WINDOW)
+    }
+}
+
+impl WindowSketch {
+    pub fn new(cap: usize) -> Self {
+        let cap = cap.max(1);
+        WindowSketch { buf: Vec::with_capacity(cap.min(1024)), cap, next: 0, count: 0 }
+    }
+
+    pub fn add(&mut self, x: f64) {
+        if self.buf.len() < self.cap {
+            self.buf.push(x);
+        } else {
+            self.buf[self.next] = x;
+        }
+        self.next = (self.next + 1) % self.cap;
+        self.count += 1;
+    }
+
+    /// Samples currently in the window.
+    pub fn window_len(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// Lifetime sample count (window evictions included).
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Drop the window (lifetime count is kept).  The adaptive controller
+    /// clears telemetry windows after a plan swap so post-swap decisions
+    /// are not polluted by pre-swap observations.
+    pub fn clear(&mut self) {
+        self.buf.clear();
+        self.next = 0;
+    }
+
+    /// Mean over the window; NaN if empty.
+    pub fn mean(&self) -> f64 {
+        if self.buf.is_empty() {
+            return f64::NAN;
+        }
+        self.buf.iter().sum::<f64>() / self.buf.len() as f64
+    }
+
+    /// Linear-interpolated percentile over the window, q in [0, 100];
+    /// NaN if empty.
+    pub fn percentile(&self, q: f64) -> f64 {
+        assert!((0.0..=100.0).contains(&q));
+        if self.buf.is_empty() {
+            return f64::NAN;
+        }
+        let mut sorted = self.buf.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = sorted.len();
+        if n == 1 {
+            return sorted[0];
+        }
+        let pos = q / 100.0 * (n - 1) as f64;
+        let lo = pos.floor() as usize;
+        let hi = pos.ceil() as usize;
+        let frac = pos - lo as f64;
+        sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+    }
+
+    pub fn median(&self) -> f64 {
+        self.percentile(50.0)
+    }
+
+    pub fn p99(&self) -> f64 {
+        self.percentile(99.0)
+    }
+
+    /// The paper's standard row: (median, p99) over the window.
+    pub fn report(&self) -> (f64, f64) {
+        (self.median(), self.p99())
+    }
+
+    /// Fraction of windowed samples at or below `x`; NaN if empty.
+    pub fn fraction_le(&self, x: f64) -> f64 {
+        if self.buf.is_empty() {
+            return f64::NAN;
+        }
+        let n = self.buf.iter().filter(|&&s| s <= x).count();
+        n as f64 / self.buf.len() as f64
+    }
+
+    /// Materialize the window as a [`Summary`] (interoperates with the
+    /// existing reporting helpers).
+    pub fn to_summary(&self) -> Summary {
+        let mut s = Summary::new();
+        for &x in &self.buf {
+            s.add(x);
+        }
+        s
+    }
 }
 
 /// Time-bucketed counters for the Fig 6 timeline (latency, throughput and
@@ -266,6 +399,65 @@ mod tests {
         assert_eq!(fmt_ms(3.25), "3.2ms");
         assert_eq!(fmt_ms(42.0), "42ms");
         assert_eq!(fmt_ms(1234.0), "1.23s");
+    }
+
+    #[test]
+    fn fraction_le_counts() {
+        let mut s = Summary::new();
+        assert!(s.fraction_le(1.0).is_nan());
+        for v in [1.0, 2.0, 3.0, 4.0] {
+            s.add(v);
+        }
+        assert!((s.fraction_le(2.0) - 0.5).abs() < 1e-9);
+        assert!((s.fraction_le(0.5) - 0.0).abs() < 1e-9);
+        assert!((s.fraction_le(9.0) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn window_sketch_matches_summary_under_capacity() {
+        let mut w = WindowSketch::new(100);
+        let mut s = Summary::new();
+        let mut r = crate::util::rng::Rng::new(2);
+        for _ in 0..80 {
+            let v = r.f64() * 50.0;
+            w.add(v);
+            s.add(v);
+        }
+        assert_eq!(w.window_len(), 80);
+        assert_eq!(w.count(), 80);
+        assert!((w.median() - s.median()).abs() < 1e-9);
+        assert!((w.p99() - s.p99()).abs() < 1e-9);
+        assert!((w.fraction_le(25.0) - s.fraction_le(25.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn window_sketch_evicts_oldest() {
+        let mut w = WindowSketch::new(4);
+        for v in [100.0, 100.0, 100.0, 100.0, 1.0, 1.0, 1.0, 1.0] {
+            w.add(v);
+        }
+        // Window now holds only the four 1.0s.
+        assert_eq!(w.window_len(), 4);
+        assert_eq!(w.count(), 8);
+        assert_eq!(w.median(), 1.0);
+        assert_eq!(w.p99(), 1.0);
+        assert!((w.mean() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn window_sketch_empty_and_clear() {
+        let mut w = WindowSketch::new(8);
+        assert!(w.is_empty());
+        assert!(w.median().is_nan());
+        assert!(w.mean().is_nan());
+        assert!(w.fraction_le(1.0).is_nan());
+        w.add(5.0);
+        assert_eq!(w.report(), (5.0, 5.0));
+        w.clear();
+        assert!(w.is_empty());
+        assert_eq!(w.count(), 1); // lifetime count survives clear
+        let sm = w.to_summary();
+        assert!(sm.is_empty());
     }
 
     #[test]

@@ -1,0 +1,161 @@
+//! Drifting workload scenarios for the adaptive controller: pipelines
+//! whose service times can be shifted mid-run through a [`DriftKnob`],
+//! and input generators whose payload size shifts at a request index.
+//! Arrival-rate drift (diurnal/bursty) comes from
+//! [`traces`](super::traces).
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::dataflow::operator::{DriftKnob, Func, SleepDist};
+use crate::dataflow::table::{DType, Schema, Table, Value};
+use crate::dataflow::Dataflow;
+use crate::util::rng;
+
+use super::pipelines::PipelineSpec;
+
+/// A pipeline plus the knob that injects service-time drift into its
+/// heavy stage.  Planning while the knob reads 1.0 then raising it
+/// reproduces "the profile went stale" exactly: the planner's analytic
+/// profiler and the executor both read the knob at sample time.
+pub struct DriftScenario {
+    pub spec: PipelineSpec,
+    pub knob: DriftKnob,
+}
+
+/// Two-stage chain — a light front stage and a heavy, driftable back
+/// stage — the minimal shape where per-stage drift detection and
+/// bottleneck-targeted re-planning are observable.
+pub fn drifting_chain(front_ms: f64, heavy_ms: f64) -> Result<DriftScenario> {
+    let knob = DriftKnob::new();
+    let mut fl = Dataflow::new("drift_chain", Schema::new(vec![("x", DType::F64)]));
+    let front = fl.map(
+        fl.input(),
+        Func::sleep("front", SleepDist::ConstMs(front_ms)),
+    )?;
+    let heavy = fl.map(
+        front,
+        Func::sleep(
+            "heavy",
+            SleepDist::ConstMs(heavy_ms).scaled_by(knob.clone()),
+        ),
+    )?;
+    fl.set_output(heavy)?;
+    let spec = PipelineSpec {
+        flow: fl,
+        make_input: Arc::new(|i| {
+            let mut t = Table::new(Schema::new(vec![("x", DType::F64)]));
+            t.push_fresh(vec![Value::F64(rng::for_case(0xD81F, i as u64).f64())])
+                .expect("drift input row");
+            t
+        }),
+        setup: None,
+    };
+    Ok(DriftScenario { spec, knob })
+}
+
+/// Single-stage pipeline used by the overload scenario: capacity is easy
+/// to reason about (1000/`service_ms` per replica).
+pub fn overload_stage(service_ms: f64) -> Result<PipelineSpec> {
+    let mut fl = Dataflow::new("overload", Schema::new(vec![("x", DType::F64)]));
+    let s = fl.map(
+        fl.input(),
+        Func::sleep("serve", SleepDist::ConstMs(service_ms)),
+    )?;
+    fl.set_output(s)?;
+    Ok(PipelineSpec {
+        flow: fl,
+        make_input: Arc::new(|i| {
+            let mut t = Table::new(Schema::new(vec![("x", DType::F64)]));
+            t.push_fresh(vec![Value::F64(rng::for_case(0x01AD, i as u64).f64())])
+                .expect("overload input row");
+            t
+        }),
+        setup: None,
+    })
+}
+
+/// Payload-size shift: a blob-carrying identity pipeline whose inputs are
+/// `base_kb` for request indices below `shift_at` and `shifted_kb` after
+/// — transfer costs (and hence end-to-end latency) drift while stage
+/// service times stay calibrated, exercising the SLO-attainment trend
+/// path of the detector rather than the per-stage ratio path.
+pub fn payload_shift(base_kb: usize, shifted_kb: usize, shift_at: usize) -> Result<PipelineSpec> {
+    let mut fl = Dataflow::new(
+        "payload_shift",
+        Schema::new(vec![("blob", DType::Blob)]),
+    );
+    let s = fl.map(fl.input(), Func::identity("carry"))?;
+    fl.set_output(s)?;
+    Ok(PipelineSpec {
+        flow: fl,
+        make_input: Arc::new(move |i| {
+            let kb = if i < shift_at { base_kb } else { shifted_kb };
+            let mut r = rng::for_case(0x5128, i as u64);
+            let mut t = Table::new(Schema::new(vec![("blob", DType::Blob)]));
+            t.push_fresh(vec![Value::blob(r.bytes(kb * 1024))])
+                .expect("payload row");
+            t
+        }),
+        setup: None,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cloudburst::Cluster;
+    use crate::dataflow::compiler::{compile, OptFlags};
+
+    #[test]
+    fn drifting_chain_tracks_knob() {
+        let sc = drifting_chain(1.0, 10.0).unwrap();
+        let cluster = Cluster::new(None);
+        let plan = compile(&sc.spec.flow, &OptFlags::none()).unwrap();
+        let h = cluster.register(plan, 1).unwrap();
+        let t0 = crate::simulation::clock::Clock::new();
+        cluster
+            .execute(h, (sc.spec.make_input)(0))
+            .unwrap()
+            .result()
+            .unwrap();
+        let calm = t0.now_ms();
+        sc.knob.set(5.0);
+        let t1 = crate::simulation::clock::Clock::new();
+        cluster
+            .execute(h, (sc.spec.make_input)(1))
+            .unwrap()
+            .result()
+            .unwrap();
+        let drifted = t1.now_ms();
+        assert!(drifted > calm + 20.0, "calm={calm} drifted={drifted}");
+    }
+
+    #[test]
+    fn payload_shift_grows_inputs() {
+        let spec = payload_shift(4, 64, 10).unwrap();
+        let small = (spec.make_input)(0);
+        let large = (spec.make_input)(10);
+        assert!(large.size_bytes() > 10 * small.size_bytes());
+        // Deterministic per index.
+        assert_eq!(
+            (spec.make_input)(3).size_bytes(),
+            (spec.make_input)(3).size_bytes()
+        );
+    }
+
+    #[test]
+    fn overload_stage_serves() {
+        let spec = overload_stage(5.0).unwrap();
+        let cluster = Cluster::new(None);
+        let plan = compile(&spec.flow, &OptFlags::none()).unwrap();
+        let h = cluster.register(plan, 1).unwrap();
+        let out = cluster
+            .execute(h, (spec.make_input)(0))
+            .unwrap()
+            .result()
+            .unwrap();
+        assert_eq!(out.len(), 1);
+    }
+}

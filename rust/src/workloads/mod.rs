@@ -1,9 +1,15 @@
 //! Workloads: synthetic data generators, the paper's four real-world
-//! pipelines (§5.2.1), and open/closed-loop load generators.
+//! pipelines (§5.2.1), open/closed-loop load generators, deterministic
+//! arrival traces, and the drifting scenarios the adaptive controller is
+//! benchmarked against.
 
 pub mod datagen;
+pub mod drift;
 pub mod loadgen;
 pub mod pipelines;
+pub mod traces;
 
-pub use loadgen::{closed_loop, LoadResult};
+pub use drift::{drifting_chain, overload_stage, payload_shift, DriftScenario};
+pub use loadgen::{closed_loop, open_loop, LoadResult, OpenLoopResult};
 pub use pipelines::PipelineSpec;
+pub use traces::ArrivalTrace;

@@ -1,0 +1,210 @@
+//! Deterministic open-loop arrival traces for the adaptive scenarios:
+//! constant-rate, Poisson, diurnal (sinusoidal thinning) and bursty
+//! arrivals, all derived from `CLOUDFLOW_SEED` so a fixed seed yields a
+//! byte-identical trace run-to-run (the determinism property test hashes
+//! them).
+
+use crate::util::rng;
+
+/// A precomputed arrival schedule in virtual milliseconds from phase
+/// start, sorted ascending.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArrivalTrace {
+    pub label: String,
+    pub t_ms: Vec<f64>,
+}
+
+impl ArrivalTrace {
+    /// Evenly spaced arrivals at `qps` over `horizon_ms` (no randomness).
+    pub fn constant(qps: f64, horizon_ms: f64) -> ArrivalTrace {
+        let gap = 1000.0 / qps.max(1e-9);
+        let mut t_ms = Vec::new();
+        let mut t = gap / 2.0;
+        while t < horizon_ms {
+            t_ms.push(t);
+            t += gap;
+        }
+        ArrivalTrace { label: format!("constant[{qps:.0}qps]"), t_ms }
+    }
+
+    /// Poisson arrivals at `qps` (exponential gaps from the seeded RNG
+    /// stream `stream`).
+    pub fn poisson(stream: u64, qps: f64, horizon_ms: f64) -> ArrivalTrace {
+        let mut r = rng::for_case(0x7ACE, stream);
+        let mean_gap = 1000.0 / qps.max(1e-9);
+        let mut t_ms = Vec::new();
+        let mut t = r.exp(mean_gap);
+        while t < horizon_ms {
+            t_ms.push(t);
+            t += r.exp(mean_gap);
+        }
+        ArrivalTrace { label: format!("poisson[{qps:.0}qps]"), t_ms }
+    }
+
+    /// Diurnal-style rate swing: Poisson arrivals whose instantaneous
+    /// rate follows a raised sinusoid between `base_qps` and `peak_qps`
+    /// with the given period (thinning against the peak rate).
+    pub fn diurnal(
+        stream: u64,
+        base_qps: f64,
+        peak_qps: f64,
+        period_ms: f64,
+        horizon_ms: f64,
+    ) -> ArrivalTrace {
+        let peak = peak_qps.max(base_qps).max(1e-9);
+        let mut r = rng::for_case(0xD1A1, stream);
+        let mean_gap = 1000.0 / peak;
+        let mut t_ms = Vec::new();
+        let mut t = r.exp(mean_gap);
+        while t < horizon_ms {
+            let phase = (t / period_ms.max(1e-9)) * 2.0 * std::f64::consts::PI;
+            let rate = base_qps + (peak - base_qps) * 0.5 * (1.0 - phase.cos());
+            if r.bool(rate / peak) {
+                t_ms.push(t);
+            }
+            t += r.exp(mean_gap);
+        }
+        ArrivalTrace {
+            label: format!("diurnal[{base_qps:.0}-{peak_qps:.0}qps]"),
+            t_ms,
+        }
+    }
+
+    /// Base-rate Poisson arrivals with periodic bursts at `burst_qps` for
+    /// `burst_len_ms` every `period_ms`.
+    pub fn bursty(
+        stream: u64,
+        base_qps: f64,
+        burst_qps: f64,
+        period_ms: f64,
+        burst_len_ms: f64,
+        horizon_ms: f64,
+    ) -> ArrivalTrace {
+        let peak = burst_qps.max(base_qps).max(1e-9);
+        let mut r = rng::for_case(0xB057, stream);
+        let mean_gap = 1000.0 / peak;
+        let mut t_ms = Vec::new();
+        let mut t = r.exp(mean_gap);
+        while t < horizon_ms {
+            let in_burst = period_ms > 0.0 && (t % period_ms) < burst_len_ms;
+            let rate = if in_burst { burst_qps } else { base_qps };
+            if r.bool(rate / peak) {
+                t_ms.push(t);
+            }
+            t += r.exp(mean_gap);
+        }
+        ArrivalTrace {
+            label: format!("bursty[{base_qps:.0}/{burst_qps:.0}qps]"),
+            t_ms,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.t_ms.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.t_ms.is_empty()
+    }
+
+    /// Mean offered rate over the trace horizon, requests/s.
+    pub fn mean_qps(&self) -> f64 {
+        match self.t_ms.last() {
+            Some(&last) if last > 0.0 => self.t_ms.len() as f64 / (last / 1000.0),
+            _ => 0.0,
+        }
+    }
+
+    /// Restrict to arrivals in `[from_ms, to_ms)`, re-based to 0.
+    pub fn slice(&self, from_ms: f64, to_ms: f64) -> ArrivalTrace {
+        ArrivalTrace {
+            label: self.label.clone(),
+            t_ms: self
+                .t_ms
+                .iter()
+                .filter(|&&t| t >= from_ms && t < to_ms)
+                .map(|&t| t - from_ms)
+                .collect(),
+        }
+    }
+
+    /// FNV-1a over the exact bit patterns of every arrival time — equal
+    /// digests mean byte-identical traces (the determinism test's probe).
+    pub fn digest(&self) -> String {
+        let mut h: u64 = 0xcbf29ce484222325;
+        for b in self.label.as_bytes() {
+            h = (h ^ *b as u64).wrapping_mul(0x100000001b3);
+        }
+        for t in &self.t_ms {
+            for b in t.to_bits().to_le_bytes() {
+                h = (h ^ b as u64).wrapping_mul(0x100000001b3);
+            }
+        }
+        format!("{}:{}:{h:016x}", self.label, self.t_ms.len())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constant_spacing_and_rate() {
+        let tr = ArrivalTrace::constant(100.0, 1000.0);
+        assert_eq!(tr.len(), 100);
+        assert!((tr.t_ms[1] - tr.t_ms[0] - 10.0).abs() < 1e-9);
+        assert!((tr.mean_qps() - 100.0).abs() < 5.0, "{}", tr.mean_qps());
+    }
+
+    #[test]
+    fn poisson_rate_and_determinism() {
+        let a = ArrivalTrace::poisson(1, 50.0, 20_000.0);
+        let b = ArrivalTrace::poisson(1, 50.0, 20_000.0);
+        assert_eq!(a, b);
+        assert_eq!(a.digest(), b.digest());
+        assert!((a.mean_qps() - 50.0).abs() < 10.0, "{}", a.mean_qps());
+        let c = ArrivalTrace::poisson(2, 50.0, 20_000.0);
+        assert_ne!(a.digest(), c.digest());
+    }
+
+    #[test]
+    fn diurnal_swings_between_rates() {
+        let tr = ArrivalTrace::diurnal(3, 10.0, 90.0, 10_000.0, 20_000.0);
+        // Trough around t=0/10s, peak around t=5s/15s.
+        let trough: Vec<_> =
+            tr.t_ms.iter().filter(|&&t| t < 2_000.0).collect();
+        let peak: Vec<_> = tr
+            .t_ms
+            .iter()
+            .filter(|&&t| (4_000.0..6_000.0).contains(&t))
+            .collect();
+        assert!(
+            peak.len() > 2 * trough.len(),
+            "peak={} trough={}",
+            peak.len(),
+            trough.len()
+        );
+        let sorted = tr.t_ms.windows(2).all(|w| w[0] <= w[1]);
+        assert!(sorted);
+    }
+
+    #[test]
+    fn bursty_has_bursts() {
+        let tr = ArrivalTrace::bursty(4, 5.0, 200.0, 5_000.0, 500.0, 20_000.0);
+        let burst: usize = tr
+            .t_ms
+            .iter()
+            .filter(|&&t| (t % 5_000.0) < 500.0)
+            .count();
+        // 10% of the time carries most of the arrivals.
+        assert!(burst as f64 > 0.5 * tr.len() as f64, "{burst}/{}", tr.len());
+    }
+
+    #[test]
+    fn slice_rebases() {
+        let tr = ArrivalTrace::constant(10.0, 2_000.0);
+        let s = tr.slice(1_000.0, 2_000.0);
+        assert!(s.len() >= 9 && s.len() <= 11, "{}", s.len());
+        assert!(s.t_ms.iter().all(|&t| t < 1_000.0));
+    }
+}
