@@ -34,15 +34,16 @@ fn flow() -> Dataflow {
                 Some(vec![("sum", DType::F64)]),
                 Arc::new(|_, t: &Table| {
                     let mut out = Table::new(Schema::new(vec![("sum", DType::F64)]));
-                    for row in t.rows() {
+                    let blobs = t.col_blob("obj")?;
+                    for i in 0..t.len() {
                         // Stream the sum without materialising a Vec<f32>:
                         // real compute must not drown the modeled costs.
-                        let blob = t.value_of(row, "obj")?.as_blob()?;
-                        let s: f64 = blob
+                        let s: f64 = blobs
+                            .get(i)
                             .chunks_exact(4)
                             .map(|c| f32::from_le_bytes(c.try_into().unwrap()) as f64)
                             .sum();
-                        out.push(row.id, vec![Value::F64(s)])?;
+                        out.push(t.id_at(i), vec![Value::F64(s)])?;
                     }
                     Ok(out)
                 }),

@@ -1,0 +1,212 @@
+//! Data-plane microbenchmark: columnar zero-copy kernels vs the retained
+//! row-oriented reference path (`dataflow::rowref`).
+//!
+//! Two table shapes, matching the serving workloads:
+//! * **wide_vector** — image-cascade-like rows (one 12288-element f32
+//!   image + a confidence scalar), where payload copies dominate;
+//! * **scalar_heavy** — str/f64/i64 rows, where per-row `Vec<Value>`
+//!   allocation and per-cell dispatch dominate.
+//!
+//! For each shape it measures single-stage operator throughput (filter,
+//! union/batch-combine, batch demux) and codec throughput (encode +
+//! decode) on both layouts, then runs the model-free `synthetic_cascade`
+//! pipeline end-to-end through a cluster for p50/p99.  Emits
+//! `BENCH_dataplane.json` so the perf trajectory tracks the data plane
+//! across PRs.
+
+mod bench_common;
+
+use std::collections::HashSet;
+use std::time::Instant;
+
+use bench_common::{header, jnum, json_row, jstr, scaled, write_bench_json};
+use cloudflow::cloudburst::Cluster;
+use cloudflow::dataflow::compiler::{compile, OptFlags};
+use cloudflow::dataflow::exec_local::{apply_filter, apply_union};
+use cloudflow::dataflow::operator::{CmpOp, ExecCtx, Predicate};
+use cloudflow::dataflow::rowref::{self, RowTable};
+use cloudflow::dataflow::table::{DType, Schema, Table, Value};
+use cloudflow::util::rng::Rng;
+use cloudflow::workloads::{closed_loop, pipelines};
+
+const IMG_ELEMS: usize = 64 * 64 * 3;
+
+fn wide_table(rows: usize) -> Table {
+    let mut rng = Rng::new(0xDA7A);
+    let mut t = Table::new(Schema::new(vec![
+        ("img", DType::F32s),
+        ("conf", DType::F64),
+    ]));
+    for _ in 0..rows {
+        let img: Vec<f32> = (0..IMG_ELEMS).map(|_| (rng.f64() * 255.0) as f32).collect();
+        t.push_fresh(vec![Value::f32s(img), Value::F64(rng.f64())]).unwrap();
+    }
+    t
+}
+
+fn scalar_table(rows: usize) -> Table {
+    let mut rng = Rng::new(0x5CA1);
+    let mut t = Table::new(Schema::new(vec![
+        ("name", DType::Str),
+        ("conf", DType::F64),
+        ("n", DType::I64),
+    ]));
+    for i in 0..rows {
+        t.push_fresh(vec![
+            Value::Str(format!("key-{}", i % 97)),
+            Value::F64(rng.f64()),
+            Value::I64(rng.range(-1000, 1000)),
+        ])
+        .unwrap();
+    }
+    t
+}
+
+/// Time `f` over `iters` runs; returns rows/s given `rows` handled/run.
+fn rows_per_s<F: FnMut()>(iters: usize, rows: usize, mut f: F) -> f64 {
+    for _ in 0..(iters / 10).max(1) {
+        f(); // warm-up
+    }
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    (rows * iters) as f64 / t0.elapsed().as_secs_f64()
+}
+
+struct Case {
+    case: &'static str,
+    pipeline: &'static str,
+    columnar: f64,
+    row: f64,
+}
+
+impl Case {
+    fn speedup(&self) -> f64 {
+        self.columnar / self.row
+    }
+}
+
+fn operator_cases(pipeline: &'static str, t: &Table, iters: usize) -> Vec<Case> {
+    let ctx = ExecCtx::local();
+    let n = t.len();
+    let rt = RowTable::from_table(t);
+    let pred = Predicate::threshold("conf", CmpOp::Lt, 0.5);
+    let mut cases = Vec::new();
+
+    // filter: selection vector vs per-row Vec<Value> clone
+    let columnar = rows_per_s(iters, n, || {
+        std::hint::black_box(apply_filter(&ctx, &pred, t.clone()).unwrap());
+    });
+    let row = rows_per_s(iters, n, || {
+        std::hint::black_box(
+            rowref::filter_threshold(&rt, "conf", CmpOp::Lt, 0.5).unwrap(),
+        );
+    });
+    cases.push(Case { case: "filter", pipeline, columnar, row });
+
+    // union of 4 parts: bulk column append vs per-row push (the executor's
+    // batch-combine path; input clones are shallow for columns, deep-ish
+    // for rows — exactly the per-task cost each layout pays).
+    let parts: Vec<Table> = (0..4).map(|_| t.clone()).collect();
+    let rparts: Vec<RowTable> = parts.iter().map(RowTable::from_table).collect();
+    let columnar = rows_per_s(iters.div_ceil(4), 4 * n, || {
+        std::hint::black_box(apply_union(parts.clone()).unwrap());
+    });
+    let row = rows_per_s(iters.div_ceil(4), 4 * n, || {
+        std::hint::black_box(rowref::union(rparts.clone()).unwrap());
+    });
+    cases.push(Case { case: "union4", pipeline, columnar, row });
+
+    // batch demux: zero-copy id-selection split vs rebuild-by-push
+    let half: HashSet<u64> = t.ids().into_iter().step_by(2).collect();
+    let columnar = rows_per_s(iters, n, || {
+        std::hint::black_box(t.subset_by_ids(&half));
+    });
+    let row = rows_per_s(iters, n, || {
+        let mut part = RowTable::new(t.schema().clone());
+        for r in rt.rows() {
+            if half.contains(&r.id) {
+                part.push(r.id, r.values.clone()).unwrap();
+            }
+        }
+        std::hint::black_box(part);
+    });
+    cases.push(Case { case: "demux", pipeline, columnar, row });
+
+    // codec: columnar bulk format vs per-cell tagged rows
+    let columnar = rows_per_s(iters, n, || {
+        std::hint::black_box(t.encode());
+    });
+    let row = rows_per_s(iters, n, || {
+        std::hint::black_box(rt.encode());
+    });
+    cases.push(Case { case: "encode", pipeline, columnar, row });
+
+    let enc_col = t.encode();
+    let enc_row = rt.encode();
+    let columnar = rows_per_s(iters, n, || {
+        std::hint::black_box(Table::decode(&enc_col).unwrap());
+    });
+    let row = rows_per_s(iters, n, || {
+        std::hint::black_box(RowTable::decode(&enc_row).unwrap());
+    });
+    cases.push(Case { case: "decode", pipeline, columnar, row });
+
+    cases
+}
+
+fn main() {
+    header("dataplane: columnar zero-copy kernels vs row-oriented baseline");
+    let mut rows_json: Vec<String> = Vec::new();
+
+    let shapes: [(&'static str, Table, usize); 2] = [
+        ("wide_vector", wide_table(scaled(256)), scaled(160)),
+        ("scalar_heavy", scalar_table(scaled(16_384)), scaled(80)),
+    ];
+    println!(
+        "{:<14} {:<8} {:>16} {:>16} {:>9}",
+        "pipeline", "case", "columnar rows/s", "row rows/s", "speedup"
+    );
+    for (pipeline, t, iters) in &shapes {
+        for c in operator_cases(*pipeline, t, *iters) {
+            println!(
+                "{:<14} {:<8} {:>16.0} {:>16.0} {:>8.1}x",
+                c.pipeline,
+                c.case,
+                c.columnar,
+                c.row,
+                c.speedup()
+            );
+            rows_json.push(json_row(&[
+                ("case", jstr(c.case)),
+                ("pipeline", jstr(c.pipeline)),
+                ("columnar_rows_per_s", jnum(c.columnar)),
+                ("row_baseline_rows_per_s", jnum(c.row)),
+                ("speedup", jnum(c.speedup())),
+            ]));
+        }
+    }
+
+    // End-to-end: the model-free cascade through a live cluster (p99 must
+    // not regress vs earlier PRs' BENCH_dataplane.json entries).
+    header("dataplane: synthetic_cascade end-to-end");
+    let spec = pipelines::synthetic_cascade().unwrap();
+    let plan = compile(&spec.flow, &OptFlags::all()).unwrap();
+    let cluster = Cluster::new(None);
+    let h = cluster.register(plan, 2).unwrap();
+    let requests = scaled(240);
+    closed_loop(&cluster, h, 8, requests / 4 + 2, |i| (spec.make_input)(i));
+    let mut r = closed_loop(&cluster, h, 8, requests, |i| (spec.make_input)(i + 1000));
+    let (med, p99, rps) = r.report();
+    println!("synthetic_cascade: p50={med:.1}ms p99={p99:.1}ms {rps:.1} r/s");
+    rows_json.push(json_row(&[
+        ("case", jstr("e2e_synthetic_cascade")),
+        ("pipeline", jstr("synthetic_cascade")),
+        ("p50_ms", jnum(med)),
+        ("p99_ms", jnum(p99)),
+        ("throughput_rps", jnum(rps)),
+    ]));
+
+    write_bench_json("dataplane", &rows_json);
+}

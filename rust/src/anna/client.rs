@@ -66,14 +66,17 @@ impl KvsClient {
         Some(v)
     }
 
-    /// Put with modeled cost.
-    pub fn put(&self, key: &str, value: Vec<u8>) {
+    /// Put with modeled cost.  Accepts shared buffers (`Bytes`, e.g. from
+    /// `Writer::into_bytes`) or plain vectors; the payload is never
+    /// copied on the way into the store.
+    pub fn put(&self, key: &str, value: impl Into<Bytes>) {
+        let value: Bytes = value.into();
         clock::sleep_ms(Self::remote_cost_ms(value.len()));
         self.store.put(key, value);
     }
 
     /// Put without sleeping (test/bench setup paths).
-    pub fn put_free(&self, key: &str, value: Vec<u8>) {
+    pub fn put_free(&self, key: &str, value: impl Into<Bytes>) {
         self.store.put(key, value);
     }
 

@@ -13,4 +13,4 @@ pub mod store;
 
 pub use cache::{Cache, Directory};
 pub use client::KvsClient;
-pub use store::Store;
+pub use store::{Bytes, Store};

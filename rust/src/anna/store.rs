@@ -3,13 +3,15 @@
 //! The paper's Anna deployment is a distributed autoscaling store; the
 //! experiments only exercise its interface costs (get/put latency as a
 //! function of payload size) and LWW behaviour, which this preserves.
-//! Values are `Arc`ed so cache fills don't copy payloads.
+//! Values are `Arc`ed ([`Bytes`]) end to end: `put` takes a shared
+//! buffer (`Writer::into_bytes` hands one over without copying the
+//! encoded payload) and cache fills / gets are handle copies.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::Mutex;
 
-pub type Bytes = Arc<Vec<u8>>;
+pub use crate::util::codec::Bytes;
 
 #[derive(Debug)]
 struct Shard {
@@ -47,15 +49,18 @@ impl Store {
         &self.shards[(h % self.shards.len() as u64) as usize]
     }
 
-    /// Last-writer-wins put; returns the assigned version.
-    pub fn put(&self, key: &str, value: Vec<u8>) -> u64 {
+    /// Last-writer-wins put; returns the assigned version.  Accepts any
+    /// shared buffer (`Bytes`, or a `Vec<u8>` which is wrapped without a
+    /// copy) so encoded payloads are never duplicated on insert.
+    pub fn put(&self, key: &str, value: impl Into<Bytes>) -> u64 {
+        let value: Bytes = value.into();
         let v = self.version.fetch_add(1, Ordering::Relaxed) + 1;
         self.puts.fetch_add(1, Ordering::Relaxed);
         let mut m = self.shard(key).map.lock().unwrap();
         match m.get(key) {
             Some((_, existing)) if *existing > v => {} // stale writer loses
             _ => {
-                m.insert(key.to_string(), (Arc::new(value), v));
+                m.insert(key.to_string(), (value, v));
             }
         }
         v
@@ -95,6 +100,7 @@ impl Store {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::sync::Arc;
     use std::thread;
 
     #[test]

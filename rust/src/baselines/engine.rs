@@ -361,7 +361,7 @@ fn serve(stage: &PlanStage, ctx: &ExecCtx, mut invs: Vec<Invocation>) {
     // Batched: combine single-input invocations, run once, split by row id.
     let id_sets: Vec<std::collections::HashSet<u64>> = invs
         .iter()
-        .map(|i| i.tables[0].rows().iter().map(|r| r.id).collect())
+        .map(|i| i.tables[0].ids().into_iter().collect())
         .collect();
     let combined = match apply_union(invs.iter().map(|i| i.tables[0].clone()).collect()) {
         Ok(t) => t,
@@ -376,13 +376,8 @@ fn serve(stage: &PlanStage, ctx: &ExecCtx, mut invs: Vec<Invocation>) {
     match run_stage(stage, ctx, vec![combined]) {
         Ok(out) => {
             for (inv, ids) in invs.into_iter().zip(id_sets) {
-                let mut part = Table::new(out.schema().clone());
-                let _ = part.set_grouping(out.grouping().map(str::to_string));
-                for row in out.rows() {
-                    if ids.contains(&row.id) {
-                        let _ = part.push(row.id, row.values.clone());
-                    }
-                }
+                // Zero-copy demultiplex: a selection over the shared output.
+                let part = out.subset_by_ids(&ids);
                 let _ = inv.resp.send(Ok(part));
             }
         }

@@ -327,7 +327,9 @@ impl ClusterInner {
     }
 
     /// A stage finished: route its output to children, the next segment,
-    /// or the client.
+    /// or the client.  The table is `Arc`-wrapped once here; every
+    /// consumer (fan-out children, continuation segments) shares it
+    /// without copying a single cell.
     pub fn complete_stage(
         self: &Arc<Self>,
         plan: &Arc<RegisteredPlan>,
@@ -337,6 +339,7 @@ impl ClusterInner {
         table: Table,
         node: NodeId,
     ) {
+        let table = Arc::new(table);
         let segment = &plan.plan.segments[seg];
         // In-segment children.
         for (ci, child) in segment.stages.iter().enumerate() {
@@ -399,7 +402,13 @@ impl ClusterInner {
         if let Some(tx) = req.take_done() {
             let now = self.clock.now_ms();
             plan.metrics.record(now, now - req.submitted_ms);
-            let _ = tx.send(Ok(table));
+            // Resolve any selection view at the client boundary: a small
+            // demuxed/filtered result must not pin the whole batch's
+            // backing storage for as long as the caller holds it.
+            let out = Arc::try_unwrap(table)
+                .unwrap_or_else(|a| (*a).clone())
+                .compacted();
+            let _ = tx.send(Ok(out));
         }
     }
 
@@ -719,7 +728,9 @@ impl Cluster {
         });
         // Seed segment 0: every stage reading from Source. Stages headed
         // by a column-keyed lookup get a locality hint resolved directly
-        // from the input table (entry-level dynamic dispatch).
+        // from the input table (entry-level dynamic dispatch).  The input
+        // is Arc'd once and shared across all source-consuming stages.
+        let input = Arc::new(input);
         let seg0 = &plan.plan.segments[0];
         let mut seeded = false;
         for (si, st) in seg0.stages.iter().enumerate() {

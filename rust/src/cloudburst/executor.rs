@@ -24,9 +24,11 @@ use crate::util::stats::WindowSketch;
 use super::cluster::{ClusterInner, RegisteredPlan, RequestCtx};
 
 /// A table in flight, tagged with its producing node for transfer costing.
+/// The payload is `Arc`-shared: fan-out delivers the same table to every
+/// consumer stage without copying columns.
 #[derive(Debug, Clone)]
 pub struct TableMsg {
-    pub table: Table,
+    pub table: Arc<Table>,
     pub from: NodeId,
 }
 
@@ -283,7 +285,9 @@ fn process_batch(
 
     if tasks.len() == 1 {
         let task = tasks.pop().unwrap();
-        let inputs: Vec<Table> = task.inputs.iter().map(|m| m.table.clone()).collect();
+        // Shallow clones: schema + Arc'd column buffers, never cells.
+        let inputs: Vec<Table> =
+            task.inputs.iter().map(|m| (*m.table).clone()).collect();
         let t0 = cluster.clock.now_ms();
         let out = run_ops(ctx, &stage_rt.spec, inputs);
         stage_rt
@@ -293,16 +297,17 @@ fn process_batch(
         return Ok(());
     }
 
-    // Batched path: combine single-input tasks into one table, run once,
-    // split by row-id ownership.
+    // Batched path: combine single-input tasks into one table (bulk
+    // column concat), run once, split by row-id ownership with zero-copy
+    // selection views.
     let mut id_sets: Vec<std::collections::HashSet<u64>> = Vec::with_capacity(tasks.len());
     let mut parts: Vec<Table> = Vec::with_capacity(tasks.len());
     for t in &tasks {
         if t.inputs.len() != 1 {
             bail!("batched stage with multi-input task");
         }
-        id_sets.push(t.inputs[0].table.rows().iter().map(|r| r.id).collect());
-        parts.push(t.inputs[0].table.clone());
+        id_sets.push(t.inputs[0].table.ids().into_iter().collect());
+        parts.push((*t.inputs[0].table).clone());
     }
     let combined = apply_union(parts).context("batch combine")?;
     let t0 = cluster.clock.now_ms();
@@ -313,13 +318,8 @@ fn process_batch(
     match out {
         Ok(out) => {
             for (t, ids) in tasks.into_iter().zip(id_sets) {
-                let mut part = Table::new(out.schema().clone());
-                part.set_grouping(out.grouping().map(str::to_string))?;
-                for row in out.rows() {
-                    if ids.contains(&row.id) {
-                        part.push(row.id, row.values.clone())?;
-                    }
-                }
+                // Demultiplex: a selection over the shared output buffers.
+                let part = out.subset_by_ids(&ids);
                 finish(cluster, plan, t, Ok(part), replica.node);
             }
         }

@@ -6,6 +6,14 @@
 //! With `ctx.timed == true` the synthetic/model stages additionally charge
 //! their modeled service time; the oracle runs with `timed == false` so
 //! results are comparable while costs differ.
+//!
+//! The kernels are white-box columnar (paper §4 / PRETZEL): `filter`
+//! builds a selection vector over shared buffers, `union` bulk-appends
+//! typed columns, `groupby`/`agg` scan columns directly, `join` gathers
+//! with typed defaults, and model-input extraction is a bulk column read.
+//! Black-box `Rust` closures and predicates still see the row-oriented
+//! `Table`/`Row` API.  The retained row-at-a-time implementations live in
+//! [`super::rowref`] for equivalence testing and baseline benchmarking.
 
 use std::collections::HashMap;
 use std::sync::Arc;
@@ -16,13 +24,14 @@ use anyhow::{bail, Context, Result};
 use crate::runtime::RowVec;
 use crate::simulation::clock;
 use crate::simulation::gpu::service_time_ms;
+use crate::util::codec::ByteBuf;
 
 use super::flow::Dataflow;
 use super::operator::{
     AggFn, ExecCtx, Func, FuncBody, JoinHow, LookupKey, ModelBinding, OpKind, PredBody,
     Predicate,
 };
-use super::table::{DType, GroupKey, Row, Schema, Table, Value};
+use super::table::{ColView, Column, DType, GroupKey, Schema, Table, Value, NO_ROW};
 
 /// Execute a whole flow locally (no cluster, no costs): the oracle.
 pub fn execute(flow: &Dataflow, input: Table, ctx: &ExecCtx) -> Result<Table> {
@@ -50,7 +59,8 @@ pub fn execute(flow: &Dataflow, input: Table, ctx: &ExecCtx) -> Result<Table> {
         tables[i] = Some(apply_op(ctx, &node.op, inputs)?);
     }
     let out = flow.output().context("no output")?;
-    Ok(tables[out.0].clone().unwrap())
+    // Move the output table out instead of deep-cloning it.
+    Ok(tables[out.0].take().unwrap())
 }
 
 /// Apply one operator to its input tables (the single source of operator
@@ -109,8 +119,11 @@ fn take1(inputs: &mut Vec<Table>) -> Result<Table> {
 pub fn apply_map(ctx: &ExecCtx, f: &Func, table: Table) -> Result<Table> {
     let started = Instant::now();
     let n = table.len();
+    let grouping = table.grouping().map(str::to_string);
     let out = match &f.body {
-        FuncBody::Identity => table.clone(),
+        // Identity/sleep bodies pass the table through by move: with
+        // Arc-shared columns there is nothing to copy.
+        FuncBody::Identity => table,
         FuncBody::Sleep(dist) => {
             if ctx.timed {
                 let ms = {
@@ -119,7 +132,7 @@ pub fn apply_map(ctx: &ExecCtx, f: &Func, table: Table) -> Result<Table> {
                 };
                 clock::sleep_ms(ms);
             }
-            table.clone()
+            table
         }
         FuncBody::Rust(body) => {
             let out = body(ctx, &table)?;
@@ -153,12 +166,13 @@ pub fn apply_map(ctx: &ExecCtx, f: &Func, table: Table) -> Result<Table> {
         }
     }
     let mut out = out;
-    out.set_grouping(table.grouping().map(str::to_string))?;
+    out.set_grouping(grouping)?;
     Ok(out)
 }
 
-/// Execute a model-backed map: stack input columns row-wise, run the PJRT
-/// artifact (the runtime picks/pads the batch variant), split outputs.
+/// Execute a model-backed map: extract input columns with bulk typed
+/// reads, run the PJRT artifact (the runtime picks/pads the batch
+/// variant), assemble outputs.
 fn run_model(ctx: &ExecCtx, f: &Func, b: &ModelBinding, table: &Table) -> Result<Table> {
     let infer = ctx
         .infer
@@ -169,37 +183,43 @@ fn run_model(ctx: &ExecCtx, f: &Func, b: &ModelBinding, table: &Table) -> Result
     if table.is_empty() {
         return Ok(out);
     }
-    let in_idx: Vec<usize> = b
-        .input_cols
-        .iter()
-        .map(|c| table.schema().index_of(c))
-        .collect::<Result<_>>()?;
-    let rows: Vec<Vec<RowVec>> = table
-        .rows()
-        .iter()
-        .map(|r| {
-            in_idx
+    let n = table.len();
+    // Typed column views per bound input: no per-row `Value` matching.
+    enum InCol<'a> {
+        F32(ColView<'a, Arc<Vec<f32>>>),
+        I32(ColView<'a, Arc<Vec<i32>>>),
+    }
+    let mut in_views: Vec<InCol> = Vec::with_capacity(b.input_cols.len());
+    for c in &b.input_cols {
+        match table.schema().dtype_of(c)? {
+            DType::F32s => in_views.push(InCol::F32(table.col_f32s(c)?)),
+            DType::I32s => in_views.push(InCol::I32(table.col_i32s(c)?)),
+            other => bail!(
+                "model {:?} input col must be f32s/i32s, got {}",
+                b.model,
+                other
+            ),
+        }
+    }
+    let rows: Vec<Vec<RowVec>> = (0..n)
+        .map(|i| {
+            in_views
                 .iter()
-                .map(|&i| match &r.values[i] {
-                    Value::F32s(v) => Ok(RowVec::F32(v.clone())),
-                    Value::I32s(v) => Ok(RowVec::I32(v.clone())),
-                    other => bail!(
-                        "model {:?} input col must be f32s/i32s, got {}",
-                        b.model,
-                        other.dtype()
-                    ),
+                .map(|v| match v {
+                    InCol::F32(c) => RowVec::F32(c.get(i).clone()),
+                    InCol::I32(c) => RowVec::I32(c.get(i).clone()),
                 })
-                .collect::<Result<Vec<_>>>()
+                .collect()
         })
-        .collect::<Result<_>>()?;
+        .collect();
     let results = infer.run_rows(&b.model, &rows)?;
-    debug_assert_eq!(results.len(), table.len());
+    debug_assert_eq!(results.len(), n);
     let pass_idx: Vec<usize> = b
         .passthrough
         .iter()
         .map(|c| table.schema().index_of(c))
         .collect::<Result<_>>()?;
-    for (row, outs) in table.rows().iter().zip(results) {
+    for (i, outs) in results.into_iter().enumerate() {
         if outs.len() != b.output_cols.len() {
             bail!(
                 "model {:?} returned {} outputs, bound {}",
@@ -209,7 +229,7 @@ fn run_model(ctx: &ExecCtx, f: &Func, b: &ModelBinding, table: &Table) -> Result
             );
         }
         let mut values: Vec<Value> =
-            pass_idx.iter().map(|&i| row.values[i].clone()).collect();
+            pass_idx.iter().map(|&ci| table.cell(i, ci)).collect();
         for (tensor, (cname, ctype)) in outs.into_iter().zip(&b.output_cols) {
             values.push(tensor.into_value(*ctype).with_context(|| {
                 format!("model {:?} output column {cname:?}", b.model)
@@ -218,7 +238,7 @@ fn run_model(ctx: &ExecCtx, f: &Func, b: &ModelBinding, table: &Table) -> Result
         for d in &b.derives {
             values.push(derive_value(out.schema(), &values, d)?);
         }
-        out.push(row.id, values)?;
+        out.push(table.id_at(i), values)?;
     }
     Ok(out)
 }
@@ -266,22 +286,33 @@ fn derive_value(
 // filter / groupby / agg
 // ---------------------------------------------------------------------
 
+/// Filter is a selection-vector build: the output shares the input's
+/// column buffers; no cell is copied.
 pub fn apply_filter(ctx: &ExecCtx, p: &Predicate, table: Table) -> Result<Table> {
-    let mut out = Table::new(table.schema().clone());
-    out.set_grouping(table.grouping().map(str::to_string))?;
-    for row in table.rows() {
-        let keep = match &p.body {
-            PredBody::Rust(f) => f(ctx, &table, row)?,
-            PredBody::Threshold { column, op, value } => {
-                let idx = table.schema().index_of(column)?;
-                op.eval(row.values[idx].as_f64()?, *value)
+    let keep: Vec<u32> = match &p.body {
+        PredBody::Threshold { column, op, value } => {
+            let col = table.col_f64(column)?;
+            let mut keep = Vec::new();
+            for i in 0..col.len() {
+                if op.eval(*col.get(i), *value) {
+                    keep.push(i as u32);
+                }
             }
-        };
-        if keep {
-            out.push(row.id, row.values.clone())?;
+            keep
         }
-    }
-    Ok(out)
+        PredBody::Rust(f) => {
+            // Black-box predicates see materialized rows (compat path).
+            let mut keep = Vec::new();
+            for i in 0..table.len() {
+                let row = table.row_at(i);
+                if f(ctx, &table, &row)? {
+                    keep.push(i as u32);
+                }
+            }
+            keep
+        }
+    };
+    Ok(table.select(keep))
 }
 
 pub fn apply_groupby(table: Table, column: &str) -> Result<Table> {
@@ -300,63 +331,101 @@ pub fn apply_agg(table: Table, agg: AggFn, column: &str) -> Result<Table> {
         table.schema(),
         table.grouping(),
     )?;
-    let mut out = Table::new(out_schema);
-    match table.grouping() {
+    match table.grouping().map(str::to_string) {
         None => {
             if table.is_empty() && agg != AggFn::Count {
-                return Ok(out); // empty in, empty out (except count=0)
+                return Ok(Table::new(out_schema)); // empty in, empty out (except count=0)
             }
-            let (id, values) = agg_rows(&table, table.rows(), agg, column, None)?;
+            if agg == AggFn::ArgMax {
+                let best = argmax_pick(&table, 0..table.len(), column)?;
+                let mut out = table.select(vec![best as u32]);
+                out.set_grouping(None)?;
+                return Ok(out);
+            }
+            let all: Vec<usize> = (0..table.len()).collect();
+            let (id, values) = agg_scan(&table, &all, agg, column, None)?;
+            let mut out = Table::new(out_schema);
             out.push(id, values)?;
+            Ok(out)
         }
         Some(gcol) => {
-            let gcol = gcol.to_string();
-            // Group rows preserving first-seen order for determinism.
+            // Group view rows preserving first-seen order for determinism.
             let mut order: Vec<GroupKey> = Vec::new();
-            let mut groups: HashMap<GroupKey, Vec<&Row>> = HashMap::new();
-            for row in table.rows() {
-                let k = table.group_key_of(row, &gcol)?;
-                groups.entry(k.clone()).or_insert_with(|| {
-                    order.push(k.clone());
-                    Vec::new()
-                });
-                groups.get_mut(&k).unwrap().push(row);
+            let mut groups: HashMap<GroupKey, Vec<usize>> = HashMap::new();
+            for i in 0..table.len() {
+                let k = table.group_key_at(i, &gcol)?;
+                match groups.get_mut(&k) {
+                    Some(v) => v.push(i),
+                    None => {
+                        order.push(k.clone());
+                        groups.insert(k, vec![i]);
+                    }
+                }
             }
+            if agg == AggFn::ArgMax {
+                // The attaining row per group: a selection, not a copy.
+                let mut best_idx: Vec<u32> = Vec::with_capacity(order.len());
+                for k in &order {
+                    let best = argmax_pick(&table, groups[k].iter().copied(), column)?;
+                    best_idx.push(best as u32);
+                }
+                let mut out = table.select(best_idx);
+                out.set_grouping(None)?;
+                return Ok(out);
+            }
+            let mut out = Table::new(out_schema);
             for k in order {
-                let rows = &groups[&k];
-                let rows_owned: Vec<Row> = rows.iter().map(|r| (*r).clone()).collect();
+                let idxs = &groups[&k];
                 let (id, values) =
-                    agg_rows(&table, &rows_owned, agg, column, Some(k.to_value()))?;
+                    agg_scan(&table, idxs, agg, column, Some(k.to_value()))?;
                 out.push(id, values)?;
             }
+            Ok(out)
         }
     }
-    Ok(out)
 }
 
-/// Aggregate a set of rows to one output row: (row id, values).
-fn agg_rows(
+/// View index of the row attaining the maximum of `column` among `idxs`
+/// (ties and incomparable values resolve to the last candidate, matching
+/// the row-oriented reference's `max_by` semantics).
+fn argmax_pick(
     table: &Table,
-    rows: &[Row],
+    idxs: impl IntoIterator<Item = usize>,
+    column: &str,
+) -> Result<usize> {
+    table.schema().index_of(column)?;
+    // Non-f64 columns rank every row as -inf (reference behaviour).
+    let col = table.col_f64(column).ok();
+    let mut best: Option<(usize, f64)> = None;
+    for i in idxs {
+        let v = col.as_ref().map(|c| *c.get(i)).unwrap_or(f64::NEG_INFINITY);
+        best = match best {
+            None => Some((i, v)),
+            Some((bi, bv)) => {
+                if v.partial_cmp(&bv).unwrap_or(std::cmp::Ordering::Equal)
+                    != std::cmp::Ordering::Less
+                {
+                    Some((i, v))
+                } else {
+                    Some((bi, bv))
+                }
+            }
+        };
+    }
+    best.map(|(i, _)| i).context("argmax over empty group")
+}
+
+/// Aggregate a set of view rows to one output row: (row id, values).
+fn agg_scan(
+    table: &Table,
+    idxs: &[usize],
     agg: AggFn,
     column: &str,
     group_val: Option<Value>,
 ) -> Result<(u64, Vec<Value>)> {
-    let first_id = rows.first().map(|r| r.id).unwrap_or(0);
-    if agg == AggFn::ArgMax {
-        let idx = table.schema().index_of(column)?;
-        let best = rows
-            .iter()
-            .max_by(|a, b| {
-                let av = a.values[idx].as_f64().unwrap_or(f64::NEG_INFINITY);
-                let bv = b.values[idx].as_f64().unwrap_or(f64::NEG_INFINITY);
-                av.partial_cmp(&bv).unwrap_or(std::cmp::Ordering::Equal)
-            })
-            .context("argmax over empty group")?;
-        return Ok((best.id, best.values.clone()));
-    }
+    let first_id = idxs.first().map(|&i| table.id_at(i)).unwrap_or(0);
     if agg == AggFn::Count {
-        let v = Value::I64(rows.len() as i64);
+        let v = Value::I64(idxs.len() as i64);
         return Ok(match group_val {
             Some(g) => (first_id, vec![g, v]),
             None => (first_id, vec![v]),
@@ -364,16 +433,18 @@ fn agg_rows(
     }
     let idx = table.schema().index_of(column)?;
     let is_int = table.schema().cols()[idx].1 == DType::I64;
-    let nums: Vec<f64> = rows
-        .iter()
-        .map(|r| {
-            if is_int {
-                r.values[idx].as_i64().map(|v| v as f64)
-            } else {
-                r.values[idx].as_f64()
-            }
-        })
-        .collect::<Result<_>>()?;
+    let mut nums: Vec<f64> = Vec::with_capacity(idxs.len());
+    if is_int {
+        let col = table.col_i64(column)?;
+        for &i in idxs {
+            nums.push(*col.get(i) as f64);
+        }
+    } else {
+        let col = table.col_f64(column)?;
+        for &i in idxs {
+            nums.push(*col.get(i));
+        }
+    }
     let x = match agg {
         AggFn::Sum => nums.iter().sum(),
         AggFn::Min => nums.iter().cloned().fold(f64::INFINITY, f64::min),
@@ -406,25 +477,33 @@ pub fn apply_lookup(
         .kvs
         .as_ref()
         .context("lookup requires a KVS client in the execution context")?;
-    let mut cols = table.schema().cols().to_vec();
-    cols.push((as_col.to_string(), DType::Blob));
-    let mut out = Table::new(Schema::from_owned(cols));
-    out.set_grouping(table.grouping().map(str::to_string))?;
-    for row in table.rows() {
-        let k: String = match key {
-            LookupKey::Const(s) => s.clone(),
-            LookupKey::Column(c) => {
-                let idx = table.schema().index_of(c)?;
-                row.values[idx].as_str()?.to_string()
+    let n = table.len();
+    let mut blobs: Vec<ByteBuf> = Vec::with_capacity(n);
+    match key {
+        LookupKey::Const(s) => {
+            for _ in 0..n {
+                let payload = kvs
+                    .get(s)
+                    .with_context(|| format!("lookup: key {s:?} not found"))?;
+                // Zero-copy: the cell aliases the KVS/cache buffer.
+                blobs.push(ByteBuf::from_shared(payload));
             }
-        };
-        let payload = kvs
-            .get(&k)
-            .with_context(|| format!("lookup: key {k:?} not found"))?;
-        let mut values = row.values.clone();
-        values.push(Value::Blob(payload));
-        out.push(row.id, values)?;
+        }
+        LookupKey::Column(c) => {
+            let keys = table.col_str(c)?;
+            for i in 0..n {
+                let k = keys.get(i);
+                let payload = kvs
+                    .get(k)
+                    .with_context(|| format!("lookup: key {k:?} not found"))?;
+                blobs.push(ByteBuf::from_shared(payload));
+            }
+        }
     }
+    // push_column resolves any selection view into contiguous storage
+    // before extending the schema in place.
+    let mut out = table;
+    out.push_column(as_col, Column::Blob(blobs))?;
     Ok(out)
 }
 
@@ -442,6 +521,9 @@ pub fn default_value(t: DType) -> Value {
     }
 }
 
+/// Hash join producing gathered columns: match pairs become index vectors
+/// and each output column is one typed gather (with [`NO_ROW`] defaults
+/// for unmatched outer rows) — vector/blob cells are handle copies.
 pub fn apply_join(
     left: Table,
     right: Table,
@@ -452,81 +534,72 @@ pub fn apply_join(
         bail!("join requires ungrouped inputs");
     }
     let schema = left.schema().join_with(right.schema());
-    let mut out = Table::new(schema);
     // Hash the right side.
-    let mut rmap: HashMap<GroupKey, Vec<usize>> = HashMap::new();
-    for (i, row) in right.rows().iter().enumerate() {
-        let k = join_key(&right, row, key)?;
-        rmap.entry(k).or_default().push(i);
+    let mut rmap: HashMap<GroupKey, Vec<u32>> = HashMap::new();
+    for ri in 0..right.len() {
+        rmap.entry(join_key_at(&right, ri, key)?)
+            .or_default()
+            .push(ri as u32);
     }
     let mut right_matched = vec![false; right.len()];
-    for lrow in left.rows() {
-        let k = join_key(&left, lrow, key)?;
+    let mut lidx: Vec<u32> = Vec::new();
+    let mut ridx: Vec<u32> = Vec::new();
+    let mut ids: Vec<u64> = Vec::new();
+    for li in 0..left.len() {
+        let k = join_key_at(&left, li, key)?;
         match rmap.get(&k) {
             Some(matches) => {
                 for &ri in matches {
-                    right_matched[ri] = true;
-                    let mut values = lrow.values.clone();
-                    values.extend(right.rows()[ri].values.iter().cloned());
-                    out.push(lrow.id, values)?;
+                    right_matched[ri as usize] = true;
+                    lidx.push(li as u32);
+                    ridx.push(ri);
+                    ids.push(left.id_at(li));
                 }
             }
             None => {
                 if matches!(how, JoinHow::Left | JoinHow::Outer) {
-                    let mut values = lrow.values.clone();
-                    values.extend(
-                        right.schema().cols().iter().map(|(_, t)| default_value(*t)),
-                    );
-                    out.push(lrow.id, values)?;
+                    lidx.push(li as u32);
+                    ridx.push(NO_ROW);
+                    ids.push(left.id_at(li));
                 }
             }
         }
     }
     if how == JoinHow::Outer {
-        for (ri, rrow) in right.rows().iter().enumerate() {
+        for ri in 0..right.len() {
             if !right_matched[ri] {
-                let mut values: Vec<Value> = left
-                    .schema()
-                    .cols()
-                    .iter()
-                    .map(|(_, t)| default_value(*t))
-                    .collect();
-                values.extend(rrow.values.iter().cloned());
-                out.push(rrow.id, values)?;
+                lidx.push(NO_ROW);
+                ridx.push(ri as u32);
+                ids.push(right.id_at(ri));
             }
         }
     }
-    Ok(out)
+    let mut cols = left.gather_cols(&lidx);
+    cols.extend(right.gather_cols(&ridx));
+    Ok(Table::from_parts(schema, None, ids, cols))
 }
 
-fn join_key(t: &Table, row: &Row, key: Option<&str>) -> Result<GroupKey> {
+fn join_key_at(t: &Table, i: usize, key: Option<&str>) -> Result<GroupKey> {
     match key {
-        None => Ok(GroupKey::RowId(row.id)),
-        Some(k) => t.group_key_of(row, k),
+        None => Ok(GroupKey::RowId(t.id_at(i))),
+        Some(k) => t.group_key_at(i, k),
     }
 }
 
+/// Union is a bulk concat: the first input's buffers are reused when
+/// uniquely owned, the rest append by memcpy/handle copy.
 pub fn apply_union(inputs: Vec<Table>) -> Result<Table> {
-    let mut it = inputs.into_iter();
-    let mut acc = it.next().context("union with no inputs")?;
-    for t in it {
-        if t.schema() != acc.schema() {
-            bail!("union schema mismatch: {} vs {}", acc.schema(), t.schema());
-        }
-        if t.grouping() != acc.grouping() {
-            bail!("union grouping mismatch");
-        }
-        for row in t.rows() {
-            acc.push(row.id, row.values.clone())?;
-        }
+    if inputs.is_empty() {
+        bail!("union with no inputs");
     }
-    Ok(acc)
+    Table::concat(inputs)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::dataflow::operator::CmpOp;
+    use crate::dataflow::table::Row;
     use std::sync::Arc;
 
     fn t2(rows: Vec<(&str, f64)>) -> Table {
@@ -595,10 +668,10 @@ mod tests {
     #[test]
     fn argmax_keeps_best_row_and_id() {
         let t = t2(vec![("lo", 0.2), ("hi", 0.9), ("mid", 0.5)]);
-        let hi_id = t.rows()[1].id;
+        let hi_id = t.id_at(1);
         let out = apply_agg(t, AggFn::ArgMax, "conf").unwrap();
         assert_eq!(out.len(), 1);
-        assert_eq!(out.rows()[0].id, hi_id);
+        assert_eq!(out.id_at(0), hi_id);
         assert_eq!(out.value(0, "name").unwrap().as_str().unwrap(), "hi");
     }
 
@@ -617,17 +690,17 @@ mod tests {
         let g = apply_groupby(u, "__rowid").unwrap();
         let out = apply_agg(g, AggFn::ArgMax, "conf").unwrap();
         assert_eq!(out.len(), 2);
-        let preds: Vec<&str> = (0..2)
-            .map(|i| out.value(i, "pred").unwrap().as_str().unwrap())
+        let preds: Vec<String> = (0..2)
+            .map(|i| out.value(i, "pred").unwrap().as_str().unwrap().to_string())
             .collect();
-        assert!(preds.contains(&"lion") && preds.contains(&"wolf"));
+        assert!(preds.contains(&"lion".to_string()) && preds.contains(&"wolf".to_string()));
     }
 
     #[test]
     fn join_on_rowid_left() {
         let l = t2(vec![("a", 0.9), ("b", 0.3)]);
         let mut r = Table::new(Schema::new(vec![("extra", DType::F64)]));
-        r.push(l.rows()[1].id, vec![Value::F64(7.0)]).unwrap();
+        r.push(l.id_at(1), vec![Value::F64(7.0)]).unwrap();
         let out = apply_join(l, r, None, JoinHow::Left).unwrap();
         assert_eq!(out.len(), 2);
         // row a unmatched -> NaN default
@@ -742,5 +815,28 @@ mod tests {
         assert!(a.is_empty());
         let c = apply_agg(empty, AggFn::Count, "conf").unwrap();
         assert_eq!(c.value(0, "count").unwrap().as_i64().unwrap(), 0);
+    }
+
+    #[test]
+    fn filter_output_shares_buffers() {
+        // The filtered view must not copy vector payloads: the cell Arcs
+        // are the same allocations as the input's.
+        let mut t = Table::new(Schema::new(vec![
+            ("img", DType::F32s),
+            ("conf", DType::F64),
+        ]));
+        let payload = Arc::new(vec![1.0f32; 1024]);
+        t.push_fresh(vec![Value::F32s(payload.clone()), Value::F64(0.1)]).unwrap();
+        t.push_fresh(vec![Value::f32s(vec![2.0; 1024]), Value::F64(0.9)]).unwrap();
+        let ctx = ExecCtx::local();
+        let out = apply_filter(
+            &ctx,
+            &Predicate::threshold("conf", CmpOp::Lt, 0.5),
+            t,
+        )
+        .unwrap();
+        assert_eq!(out.len(), 1);
+        let cell = out.value(0, "img").unwrap();
+        assert!(Arc::ptr_eq(cell.as_f32s().unwrap(), &payload));
     }
 }

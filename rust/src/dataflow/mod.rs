@@ -7,6 +7,7 @@ pub mod compiler;
 pub mod exec_local;
 pub mod flow;
 pub mod operator;
+pub mod rowref;
 pub mod table;
 
 pub use compiler::{compile, compile_for_slo, OptFlags, Plan};
@@ -15,4 +16,4 @@ pub use operator::{
     AggFn, CmpOp, ExecCtx, Func, FuncBody, JoinHow, LookupKey, ModelBinding, OpKind,
     PredBody, Predicate, SleepDist,
 };
-pub use table::{DType, Row, Schema, Table, Value};
+pub use table::{ColView, Column, DType, Row, Schema, Table, Value};

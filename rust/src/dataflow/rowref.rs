@@ -1,0 +1,440 @@
+//! Retained **row-oriented reference data plane**.
+//!
+//! This module preserves the pre-columnar `Vec<Row>` table representation
+//! and its row-at-a-time operator kernels and row-wise wire format.  It
+//! exists for two reasons:
+//!
+//! 1. **Equivalence testing** — the operator-equivalence property tests
+//!    run random tables through both this reference and the columnar
+//!    kernels in [`super::exec_local`] and require byte-identical encoded
+//!    results.
+//! 2. **Baseline benchmarking** — `benches/fig_dataplane.rs` measures the
+//!    columnar data plane's speedup against this path (per-row `Vec`
+//!    clones, per-cell tagged serialization), which is exactly what the
+//!    executor shipped before the columnar rewrite.
+//!
+//! It is not wired into any serving path.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::codec::{Reader, Writer};
+
+use super::operator::{AggFn, CmpOp, JoinHow};
+use super::table::{DType, GroupKey, Row, Schema, Table, Value};
+
+/// A row-oriented relation: the pre-columnar `Table` layout.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RowTable {
+    schema: Schema,
+    grouping: Option<String>,
+    rows: Vec<Row>,
+}
+
+impl RowTable {
+    pub fn new(schema: Schema) -> Self {
+        RowTable { schema, grouping: None, rows: Vec::new() }
+    }
+
+    /// Materialize a columnar table row-by-row.
+    pub fn from_table(t: &Table) -> RowTable {
+        RowTable {
+            schema: t.schema().clone(),
+            grouping: t.grouping().map(str::to_string),
+            rows: t.rows(),
+        }
+    }
+
+    /// Rebuild a columnar table (row-append path), preserving IDs.
+    pub fn to_table(&self) -> Result<Table> {
+        let mut t = Table::new(self.schema.clone());
+        for r in &self.rows {
+            t.push(r.id, r.values.clone())?;
+        }
+        t.set_grouping(self.grouping.clone())?;
+        Ok(t)
+    }
+
+    pub fn schema(&self) -> &Schema {
+        &self.schema
+    }
+
+    pub fn grouping(&self) -> Option<&str> {
+        self.grouping.as_deref()
+    }
+
+    pub fn set_grouping(&mut self, col: Option<String>) -> Result<()> {
+        if let Some(c) = &col {
+            if c != "__rowid" {
+                self.schema.index_of(c)?;
+            }
+        }
+        self.grouping = col;
+        Ok(())
+    }
+
+    pub fn rows(&self) -> &[Row] {
+        &self.rows
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    fn check_row(&self, values: &[Value]) -> Result<()> {
+        if values.len() != self.schema.len() {
+            bail!(
+                "row width {} != schema width {} ({})",
+                values.len(),
+                self.schema.len(),
+                self.schema
+            );
+        }
+        for ((name, t), v) in self.schema.cols().iter().zip(values) {
+            if v.dtype() != *t {
+                bail!("column {name:?}: expected {t}, got {}", v.dtype());
+            }
+        }
+        Ok(())
+    }
+
+    pub fn push(&mut self, id: u64, values: Vec<Value>) -> Result<()> {
+        self.check_row(&values)?;
+        self.rows.push(Row::new(id, values));
+        Ok(())
+    }
+
+    fn group_key_of(&self, row: &Row, col: &str) -> Result<GroupKey> {
+        if col == "__rowid" {
+            return Ok(GroupKey::RowId(row.id));
+        }
+        let idx = self.schema.index_of(col)?;
+        row.values[idx].group_key()
+    }
+
+    /// Row-wise (legacy) wire format: per row, id + one tagged,
+    /// length-framed cell per column (no columnar payload regions).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = Writer::new();
+        self.schema.encode(&mut w);
+        match &self.grouping {
+            Some(g) => {
+                w.u8(1);
+                w.str(g);
+            }
+            None => w.u8(0),
+        }
+        w.u32(self.rows.len() as u32);
+        for row in &self.rows {
+            w.u64(row.id);
+            for v in &row.values {
+                v.encode(&mut w);
+            }
+        }
+        w.finish()
+    }
+
+    pub fn decode(bytes: &[u8]) -> Result<RowTable> {
+        let mut r = Reader::new(bytes);
+        let schema = Schema::decode(&mut r)?;
+        let grouping = if r.u8()? == 1 { Some(r.str()?) } else { None };
+        let n = r.u32()? as usize;
+        let width = schema.len();
+        let mut rows = Vec::with_capacity(n);
+        for _ in 0..n {
+            let id = r.u64()?;
+            let mut values = Vec::with_capacity(width);
+            for _ in 0..width {
+                values.push(Value::decode(&mut r)?);
+            }
+            rows.push(Row::new(id, values));
+        }
+        r.done()?;
+        Ok(RowTable { schema, grouping, rows })
+    }
+}
+
+// ---------------------------------------------------------------------
+// Row-at-a-time operator kernels (the pre-columnar semantics, verbatim)
+// ---------------------------------------------------------------------
+
+/// Threshold filter: per-row predicate eval + full `Vec<Value>` clone of
+/// every kept row.
+pub fn filter_threshold(
+    table: &RowTable,
+    column: &str,
+    op: CmpOp,
+    value: f64,
+) -> Result<RowTable> {
+    let mut out = RowTable::new(table.schema.clone());
+    out.set_grouping(table.grouping.clone())?;
+    let idx = table.schema.index_of(column)?;
+    for row in &table.rows {
+        if op.eval(row.values[idx].as_f64()?, value) {
+            out.push(row.id, row.values.clone())?;
+        }
+    }
+    Ok(out)
+}
+
+/// Union by per-row append (one `Vec<Value>` clone per row).
+pub fn union(inputs: Vec<RowTable>) -> Result<RowTable> {
+    let mut it = inputs.into_iter();
+    let mut acc = it.next().context("union with no inputs")?;
+    for t in it {
+        if t.schema != acc.schema {
+            bail!("union schema mismatch: {} vs {}", acc.schema, t.schema);
+        }
+        if t.grouping != acc.grouping {
+            bail!("union grouping mismatch");
+        }
+        for row in &t.rows {
+            acc.push(row.id, row.values.clone())?;
+        }
+    }
+    Ok(acc)
+}
+
+pub fn groupby(table: RowTable, column: &str) -> Result<RowTable> {
+    if table.grouping.is_some() {
+        bail!("groupby over already-grouped table");
+    }
+    let mut out = table;
+    out.set_grouping(Some(column.to_string()))?;
+    Ok(out)
+}
+
+pub fn agg(table: RowTable, agg: AggFn, column: &str) -> Result<RowTable> {
+    let (out_schema, _) = super::operator::agg_output(
+        agg,
+        column,
+        &table.schema,
+        table.grouping.as_deref(),
+    )?;
+    let mut out = RowTable::new(out_schema);
+    match table.grouping.clone() {
+        None => {
+            if table.is_empty() && agg != AggFn::Count {
+                return Ok(out); // empty in, empty out (except count=0)
+            }
+            let (id, values) = agg_rows(&table, &table.rows, agg, column, None)?;
+            out.push(id, values)?;
+        }
+        Some(gcol) => {
+            // Group rows preserving first-seen order for determinism.
+            let mut order: Vec<GroupKey> = Vec::new();
+            let mut groups: HashMap<GroupKey, Vec<Row>> = HashMap::new();
+            for row in &table.rows {
+                let k = table.group_key_of(row, &gcol)?;
+                groups
+                    .entry(k.clone())
+                    .or_insert_with(|| {
+                        order.push(k.clone());
+                        Vec::new()
+                    })
+                    .push(row.clone());
+            }
+            for k in order {
+                let rows = &groups[&k];
+                let (id, values) = agg_rows(&table, rows, agg, column, Some(k.to_value()))?;
+                out.push(id, values)?;
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Aggregate a set of rows to one output row: (row id, values).
+fn agg_rows(
+    table: &RowTable,
+    rows: &[Row],
+    agg: AggFn,
+    column: &str,
+    group_val: Option<Value>,
+) -> Result<(u64, Vec<Value>)> {
+    let first_id = rows.first().map(|r| r.id).unwrap_or(0);
+    if agg == AggFn::ArgMax {
+        let idx = table.schema.index_of(column)?;
+        let best = rows
+            .iter()
+            .max_by(|a, b| {
+                let av = a.values[idx].as_f64().unwrap_or(f64::NEG_INFINITY);
+                let bv = b.values[idx].as_f64().unwrap_or(f64::NEG_INFINITY);
+                av.partial_cmp(&bv).unwrap_or(std::cmp::Ordering::Equal)
+            })
+            .context("argmax over empty group")?;
+        return Ok((best.id, best.values.clone()));
+    }
+    if agg == AggFn::Count {
+        let v = Value::I64(rows.len() as i64);
+        return Ok(match group_val {
+            Some(g) => (first_id, vec![g, v]),
+            None => (first_id, vec![v]),
+        });
+    }
+    let idx = table.schema.index_of(column)?;
+    let is_int = table.schema.cols()[idx].1 == DType::I64;
+    let nums: Vec<f64> = rows
+        .iter()
+        .map(|r| {
+            if is_int {
+                r.values[idx].as_i64().map(|v| v as f64)
+            } else {
+                r.values[idx].as_f64()
+            }
+        })
+        .collect::<Result<_>>()?;
+    let x = match agg {
+        AggFn::Sum => nums.iter().sum(),
+        AggFn::Min => nums.iter().cloned().fold(f64::INFINITY, f64::min),
+        AggFn::Max => nums.iter().cloned().fold(f64::NEG_INFINITY, f64::max),
+        AggFn::Avg => nums.iter().sum::<f64>() / nums.len().max(1) as f64,
+        AggFn::Count | AggFn::ArgMax => unreachable!(),
+    };
+    let v = if is_int && agg != AggFn::Avg {
+        Value::I64(x as i64)
+    } else {
+        Value::F64(x)
+    };
+    Ok(match group_val {
+        Some(g) => (first_id, vec![g, v]),
+        None => (first_id, vec![v]),
+    })
+}
+
+pub fn join(
+    left: RowTable,
+    right: RowTable,
+    key: Option<&str>,
+    how: JoinHow,
+) -> Result<RowTable> {
+    if left.grouping.is_some() || right.grouping.is_some() {
+        bail!("join requires ungrouped inputs");
+    }
+    let schema = left.schema.join_with(&right.schema);
+    let mut out = RowTable::new(schema);
+    // Hash the right side.
+    let mut rmap: HashMap<GroupKey, Vec<usize>> = HashMap::new();
+    for (i, row) in right.rows.iter().enumerate() {
+        let k = join_key(&right, row, key)?;
+        rmap.entry(k).or_default().push(i);
+    }
+    let mut right_matched = vec![false; right.len()];
+    for lrow in &left.rows {
+        let k = join_key(&left, lrow, key)?;
+        match rmap.get(&k) {
+            Some(matches) => {
+                for &ri in matches {
+                    right_matched[ri] = true;
+                    let mut values = lrow.values.clone();
+                    values.extend(right.rows[ri].values.iter().cloned());
+                    out.push(lrow.id, values)?;
+                }
+            }
+            None => {
+                if matches!(how, JoinHow::Left | JoinHow::Outer) {
+                    let mut values = lrow.values.clone();
+                    values.extend(
+                        right
+                            .schema
+                            .cols()
+                            .iter()
+                            .map(|(_, t)| super::exec_local::default_value(*t)),
+                    );
+                    out.push(lrow.id, values)?;
+                }
+            }
+        }
+    }
+    if how == JoinHow::Outer {
+        for (ri, rrow) in right.rows.iter().enumerate() {
+            if !right_matched[ri] {
+                let mut values: Vec<Value> = left
+                    .schema
+                    .cols()
+                    .iter()
+                    .map(|(_, t)| super::exec_local::default_value(*t))
+                    .collect();
+                values.extend(rrow.values.iter().cloned());
+                out.push(rrow.id, values)?;
+            }
+        }
+    }
+    Ok(out)
+}
+
+fn join_key(t: &RowTable, row: &Row, key: Option<&str>) -> Result<GroupKey> {
+    match key {
+        None => Ok(GroupKey::RowId(row.id)),
+        Some(k) => t.group_key_of(row, k),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataflow::exec_local;
+    use crate::dataflow::operator::{ExecCtx, Predicate};
+
+    fn sample() -> Table {
+        let mut t = Table::new(Schema::new(vec![
+            ("name", DType::Str),
+            ("conf", DType::F64),
+            ("v", DType::F32s),
+        ]));
+        for (n, c) in [("a", 0.9), ("b", 0.3), ("a", 0.7)] {
+            t.push_fresh(vec![
+                Value::Str(n.into()),
+                Value::F64(c),
+                Value::f32s(vec![c as f32; 16]),
+            ])
+            .unwrap();
+        }
+        t
+    }
+
+    #[test]
+    fn roundtrip_table_conversion() {
+        let t = sample();
+        let rt = RowTable::from_table(&t);
+        assert_eq!(rt.len(), t.len());
+        assert_eq!(rt.to_table().unwrap(), t);
+    }
+
+    #[test]
+    fn legacy_codec_roundtrip() {
+        let rt = RowTable::from_table(&sample());
+        let dec = RowTable::decode(&rt.encode()).unwrap();
+        assert_eq!(dec, rt);
+    }
+
+    #[test]
+    fn filter_matches_columnar_kernel() {
+        let t = sample();
+        let ctx = ExecCtx::local();
+        let col = exec_local::apply_filter(
+            &ctx,
+            &Predicate::threshold("conf", CmpOp::Lt, 0.85),
+            t.clone(),
+        )
+        .unwrap();
+        let row = filter_threshold(&RowTable::from_table(&t), "conf", CmpOp::Lt, 0.85)
+            .unwrap();
+        assert_eq!(row.to_table().unwrap().encode(), col.encode());
+    }
+
+    #[test]
+    fn agg_matches_columnar_kernel() {
+        let t = sample();
+        let g = exec_local::apply_groupby(t.clone(), "name").unwrap();
+        let col = exec_local::apply_agg(g, AggFn::Sum, "conf").unwrap();
+        let rg = groupby(RowTable::from_table(&t), "name").unwrap();
+        let row = agg(rg, AggFn::Sum, "conf").unwrap();
+        assert_eq!(row.to_table().unwrap().encode(), col.encode());
+    }
+}

@@ -1,19 +1,40 @@
-//! The Cloudflow `Table`: a small in-memory relation with a schema, an
+//! The Cloudflow `Table`: a columnar in-memory relation with a schema, an
 //! optional grouping column, and per-row identity (paper §3.1).
 //!
-//! Tables are the only values that flow between operators.  Rows carry the
-//! automatically-assigned row ID of the request row they derive from, which
-//! is what makes `union → groupby(rowID) → agg` ensembles and row-ID joins
-//! work (Fig 1).  Serialization (for network cost accounting and KVS
-//! storage) uses the in-repo codec.
+//! Tables are the only values that flow between operators.  Storage is
+//! **columnar and `Arc`-shared**: cells live in typed [`Column`] arrays
+//! inside a shared `TableData`, and a `Table` is a *view* — the shared
+//! buffers plus an optional row-selection vector.  That makes the hot
+//! relational kernels cheap:
+//!
+//! * `filter` produces a selection vector over the same buffers (no cell
+//!   is touched, let alone copied);
+//! * `union` bulk-appends typed buffers — scalar columns are `memcpy`s
+//!   and vector/blob cells are `Arc`/[`ByteBuf`] handle copies, so large
+//!   payloads (images, probability vectors) are never duplicated;
+//! * batch demultiplexing in the executor is a selection split;
+//! * model-input extraction is a typed column read instead of per-row
+//!   `Value` matching.
+//!
+//! Rows carry the automatically-assigned row ID of the request row they
+//! derive from, which is what makes `union → groupby(rowID) → agg`
+//! ensembles and row-ID joins work (Fig 1).  Serialization uses a
+//! columnar wire format: primitive columns are bulk-copied, and blob
+//! cells decode as zero-copy views into the shared input buffer
+//! ([`Table::decode_shared`] — the KVS and caches hand back [`Bytes`]).
+//!
+//! The row-oriented `Row`/`rows()` API is retained as a materializing
+//! compatibility layer for black-box user closures and tests; operator
+//! kernels use the typed column views.
 
+use std::collections::HashSet;
 use std::fmt;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
-use crate::util::codec::{Reader, Writer};
+use crate::util::codec::{ByteBuf, Bytes, Reader, Writer};
 
 /// Column data types. `F32s`/`I32s` are vector columns (images,
 /// probability vectors, token ids); `Blob` is an opaque payload.
@@ -44,7 +65,7 @@ impl fmt::Display for DType {
 }
 
 impl DType {
-    fn tag(self) -> u8 {
+    pub(crate) fn tag(self) -> u8 {
         match self {
             DType::Str => 0,
             DType::I64 => 1,
@@ -56,7 +77,7 @@ impl DType {
         }
     }
 
-    fn from_tag(t: u8) -> Result<Self> {
+    pub(crate) fn from_tag(t: u8) -> Result<Self> {
         Ok(match t {
             0 => DType::Str,
             1 => DType::I64,
@@ -70,15 +91,16 @@ impl DType {
     }
 }
 
-/// A cell value. Vector payloads are `Arc`ed so copies between fused
-/// operators are cheap; serialization still charges full bytes.
+/// A cell value. Vector payloads are `Arc`ed and blobs are shared
+/// [`ByteBuf`] views, so materialized cells are handle copies, never
+/// payload copies; serialization still charges full bytes.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Value {
     Str(String),
     I64(i64),
     F64(f64),
     Bool(bool),
-    Blob(Arc<Vec<u8>>),
+    Blob(ByteBuf),
     F32s(Arc<Vec<f32>>),
     I32s(Arc<Vec<i32>>),
 }
@@ -97,7 +119,7 @@ impl Value {
     }
 
     pub fn blob(bytes: Vec<u8>) -> Value {
-        Value::Blob(Arc::new(bytes))
+        Value::Blob(ByteBuf::from_vec(bytes))
     }
 
     pub fn f32s(v: Vec<f32>) -> Value {
@@ -136,7 +158,7 @@ impl Value {
         }
     }
 
-    pub fn as_blob(&self) -> Result<&Arc<Vec<u8>>> {
+    pub fn as_blob(&self) -> Result<&ByteBuf> {
         match self {
             Value::Blob(v) => Ok(v),
             other => bail!("expected blob, got {}", other.dtype()),
@@ -180,7 +202,11 @@ impl Value {
         })
     }
 
-    fn encode(&self, w: &mut Writer) {
+    /// Row-oriented (legacy-format) cell encoding: per-cell dtype tag +
+    /// payload.  Retained for the row-reference data plane
+    /// (`dataflow::rowref`) the equivalence tests and benches compare
+    /// against.
+    pub(crate) fn encode(&self, w: &mut Writer) {
         w.u8(self.dtype().tag());
         match self {
             Value::Str(s) => w.str(s),
@@ -193,7 +219,7 @@ impl Value {
         }
     }
 
-    fn decode(r: &mut Reader) -> Result<Value> {
+    pub(crate) fn decode(r: &mut Reader) -> Result<Value> {
         Ok(match DType::from_tag(r.u8()?)? {
             DType::Str => Value::Str(r.str()?),
             DType::I64 => Value::I64(r.i64()?),
@@ -281,7 +307,7 @@ impl Schema {
         Schema { cols }
     }
 
-    fn encode(&self, w: &mut Writer) {
+    pub(crate) fn encode(&self, w: &mut Writer) {
         w.u32(self.cols.len() as u32);
         for (n, t) in &self.cols {
             w.str(n);
@@ -289,7 +315,7 @@ impl Schema {
         }
     }
 
-    fn decode(r: &mut Reader) -> Result<Schema> {
+    pub(crate) fn decode(r: &mut Reader) -> Result<Schema> {
         let n = r.u32()? as usize;
         let mut cols = Vec::with_capacity(n);
         for _ in 0..n {
@@ -314,7 +340,8 @@ impl fmt::Display for Schema {
     }
 }
 
-/// A row: the originating request row's ID plus one value per column.
+/// A materialized row: the originating request row's ID plus one value per
+/// column.  Only built on demand — operator kernels work on columns.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Row {
     pub id: u64,
@@ -334,18 +361,295 @@ pub fn fresh_row_id() -> u64 {
     NEXT_ROW_ID.fetch_add(1, Ordering::Relaxed)
 }
 
-/// The core relation type (paper Table 1 notation:
-/// `Table[c1,...,cn][grouping?]`).
+/// Sentinel index in gather vectors meaning "no source row": the gathered
+/// cell takes the column's type-respecting default (outer-join padding).
+pub const NO_ROW: u32 = u32::MAX;
+
+/// One typed column of cells.  Scalar variants are plain primitive
+/// buffers; vector/blob variants hold shared handles so copying a cell is
+/// a pointer copy.
 #[derive(Debug, Clone, PartialEq)]
+pub enum Column {
+    Str(Vec<String>),
+    I64(Vec<i64>),
+    F64(Vec<f64>),
+    Bool(Vec<bool>),
+    Blob(Vec<ByteBuf>),
+    F32s(Vec<Arc<Vec<f32>>>),
+    I32s(Vec<Arc<Vec<i32>>>),
+}
+
+impl Column {
+    pub fn new(t: DType) -> Column {
+        Column::with_capacity(t, 0)
+    }
+
+    pub fn with_capacity(t: DType, n: usize) -> Column {
+        match t {
+            DType::Str => Column::Str(Vec::with_capacity(n)),
+            DType::I64 => Column::I64(Vec::with_capacity(n)),
+            DType::F64 => Column::F64(Vec::with_capacity(n)),
+            DType::Bool => Column::Bool(Vec::with_capacity(n)),
+            DType::Blob => Column::Blob(Vec::with_capacity(n)),
+            DType::F32s => Column::F32s(Vec::with_capacity(n)),
+            DType::I32s => Column::I32s(Vec::with_capacity(n)),
+        }
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self {
+            Column::Str(_) => DType::Str,
+            Column::I64(_) => DType::I64,
+            Column::F64(_) => DType::F64,
+            Column::Bool(_) => DType::Bool,
+            Column::Blob(_) => DType::Blob,
+            Column::F32s(_) => DType::F32s,
+            Column::I32s(_) => DType::I32s,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            Column::Str(v) => v.len(),
+            Column::I64(v) => v.len(),
+            Column::F64(v) => v.len(),
+            Column::Bool(v) => v.len(),
+            Column::Blob(v) => v.len(),
+            Column::F32s(v) => v.len(),
+            Column::I32s(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Append one cell; the value's dtype must match the column's.
+    pub fn push(&mut self, v: Value) -> Result<()> {
+        match (self, v) {
+            (Column::Str(c), Value::Str(x)) => c.push(x),
+            (Column::I64(c), Value::I64(x)) => c.push(x),
+            (Column::F64(c), Value::F64(x)) => c.push(x),
+            (Column::Bool(c), Value::Bool(x)) => c.push(x),
+            (Column::Blob(c), Value::Blob(x)) => c.push(x),
+            (Column::F32s(c), Value::F32s(x)) => c.push(x),
+            (Column::I32s(c), Value::I32s(x)) => c.push(x),
+            (col, v) => {
+                bail!("column type mismatch: expected {}, got {}", col.dtype(), v.dtype())
+            }
+        }
+        Ok(())
+    }
+
+    /// Materialize one cell (handle copy for vectors/blobs).
+    pub fn value_at(&self, i: usize) -> Value {
+        match self {
+            Column::Str(v) => Value::Str(v[i].clone()),
+            Column::I64(v) => Value::I64(v[i]),
+            Column::F64(v) => Value::F64(v[i]),
+            Column::Bool(v) => Value::Bool(v[i]),
+            Column::Blob(v) => Value::Blob(v[i].clone()),
+            Column::F32s(v) => Value::F32s(v[i].clone()),
+            Column::I32s(v) => Value::I32s(v[i].clone()),
+        }
+    }
+
+    /// Wire/memory bytes of one cell (matches `Value::size_bytes`).
+    fn payload_bytes_at(&self, i: usize) -> usize {
+        match self {
+            Column::Str(v) => v[i].len() + 4,
+            Column::I64(_) | Column::F64(_) => 8,
+            Column::Bool(_) => 1,
+            Column::Blob(v) => v[i].len() + 4,
+            Column::F32s(v) => v[i].len() * 4 + 4,
+            Column::I32s(v) => v[i].len() * 4 + 4,
+        }
+    }
+
+    fn cell_eq(&self, i: usize, other: &Column, j: usize) -> bool {
+        match (self, other) {
+            (Column::Str(a), Column::Str(b)) => a[i] == b[j],
+            (Column::I64(a), Column::I64(b)) => a[i] == b[j],
+            (Column::F64(a), Column::F64(b)) => a[i] == b[j],
+            (Column::Bool(a), Column::Bool(b)) => a[i] == b[j],
+            (Column::Blob(a), Column::Blob(b)) => a[i] == b[j],
+            (Column::F32s(a), Column::F32s(b)) => a[i] == b[j],
+            (Column::I32s(a), Column::I32s(b)) => a[i] == b[j],
+            _ => false,
+        }
+    }
+
+    /// Gather cells by base index; [`NO_ROW`] entries take the column's
+    /// type-respecting default (no NULLs in the Value model; NaN/empty
+    /// stand in, as documented in DESIGN.md).
+    pub fn gather(&self, idx: &[u32]) -> Column {
+        match self {
+            Column::Str(v) => Column::Str(
+                idx.iter()
+                    .map(|&i| if i == NO_ROW { String::new() } else { v[i as usize].clone() })
+                    .collect(),
+            ),
+            Column::I64(v) => Column::I64(
+                idx.iter().map(|&i| if i == NO_ROW { 0 } else { v[i as usize] }).collect(),
+            ),
+            Column::F64(v) => Column::F64(
+                idx.iter()
+                    .map(|&i| if i == NO_ROW { f64::NAN } else { v[i as usize] })
+                    .collect(),
+            ),
+            Column::Bool(v) => Column::Bool(
+                idx.iter().map(|&i| i != NO_ROW && v[i as usize]).collect(),
+            ),
+            Column::Blob(v) => Column::Blob(
+                idx.iter()
+                    .map(|&i| {
+                        if i == NO_ROW {
+                            ByteBuf::from_vec(Vec::new())
+                        } else {
+                            v[i as usize].clone()
+                        }
+                    })
+                    .collect(),
+            ),
+            Column::F32s(v) => Column::F32s(
+                idx.iter()
+                    .map(|&i| {
+                        if i == NO_ROW {
+                            Arc::new(Vec::new())
+                        } else {
+                            v[i as usize].clone()
+                        }
+                    })
+                    .collect(),
+            ),
+            Column::I32s(v) => Column::I32s(
+                idx.iter()
+                    .map(|&i| {
+                        if i == NO_ROW {
+                            Arc::new(Vec::new())
+                        } else {
+                            v[i as usize].clone()
+                        }
+                    })
+                    .collect(),
+            ),
+        }
+    }
+
+    /// Bulk-append `other`'s cells (optionally through a selection of base
+    /// indices).  Scalar buffers extend by memcpy; vector/blob cells are
+    /// handle copies.
+    fn append_from(&mut self, other: &Column, sel: Option<&[u32]>) -> Result<()> {
+        match (self, other) {
+            (Column::Str(a), Column::Str(b)) => match sel {
+                None => a.extend(b.iter().cloned()),
+                Some(s) => a.extend(s.iter().map(|&i| b[i as usize].clone())),
+            },
+            (Column::I64(a), Column::I64(b)) => match sel {
+                None => a.extend_from_slice(b),
+                Some(s) => a.extend(s.iter().map(|&i| b[i as usize])),
+            },
+            (Column::F64(a), Column::F64(b)) => match sel {
+                None => a.extend_from_slice(b),
+                Some(s) => a.extend(s.iter().map(|&i| b[i as usize])),
+            },
+            (Column::Bool(a), Column::Bool(b)) => match sel {
+                None => a.extend_from_slice(b),
+                Some(s) => a.extend(s.iter().map(|&i| b[i as usize])),
+            },
+            (Column::Blob(a), Column::Blob(b)) => match sel {
+                None => a.extend(b.iter().cloned()),
+                Some(s) => a.extend(s.iter().map(|&i| b[i as usize].clone())),
+            },
+            (Column::F32s(a), Column::F32s(b)) => match sel {
+                None => a.extend(b.iter().cloned()),
+                Some(s) => a.extend(s.iter().map(|&i| b[i as usize].clone())),
+            },
+            (Column::I32s(a), Column::I32s(b)) => match sel {
+                None => a.extend(b.iter().cloned()),
+                Some(s) => a.extend(s.iter().map(|&i| b[i as usize].clone())),
+            },
+            (a, b) => bail!("column type mismatch in concat: {} vs {}", a.dtype(), b.dtype()),
+        }
+        Ok(())
+    }
+}
+
+/// A typed read-only view of one column through a table's selection: the
+/// white-box access path operator kernels and user closures use to scan a
+/// column without materializing `Value`s.
+pub struct ColView<'a, T> {
+    cells: &'a [T],
+    sel: Option<&'a [u32]>,
+}
+
+// Manual impls: a view is always a pair of references, so it is `Copy`
+// regardless of whether `T` is.
+impl<'a, T> Clone for ColView<'a, T> {
+    fn clone(&self) -> Self {
+        *self
+    }
+}
+
+impl<'a, T> Copy for ColView<'a, T> {}
+
+impl<'a, T> ColView<'a, T> {
+    pub fn len(&self) -> usize {
+        match self.sel {
+            Some(s) => s.len(),
+            None => self.cells.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn get(&self, i: usize) -> &'a T {
+        match self.sel {
+            Some(s) => &self.cells[s[i] as usize],
+            None => &self.cells[i],
+        }
+    }
+
+    pub fn iter(self) -> impl Iterator<Item = &'a T> {
+        (0..self.len()).map(move |i| self.get(i))
+    }
+}
+
+/// Shared backing storage of a table: row IDs plus one typed buffer per
+/// schema column, all the same length.
+#[derive(Debug, Clone, PartialEq)]
+struct TableData {
+    ids: Vec<u64>,
+    cols: Vec<Column>,
+}
+
+impl TableData {
+    fn empty(schema: &Schema) -> TableData {
+        TableData {
+            ids: Vec::new(),
+            cols: schema.cols().iter().map(|(_, t)| Column::new(*t)).collect(),
+        }
+    }
+}
+
+/// The core relation type (paper Table 1 notation:
+/// `Table[c1,...,cn][grouping?]`): `Arc`-shared columnar storage plus an
+/// optional row-selection view.
+#[derive(Debug, Clone)]
 pub struct Table {
     schema: Schema,
     grouping: Option<String>,
-    rows: Vec<Row>,
+    data: Arc<TableData>,
+    /// Row-selection view into `data` (base indices); `None` = all rows.
+    sel: Option<Arc<Vec<u32>>>,
 }
 
 impl Table {
     pub fn new(schema: Schema) -> Self {
-        Table { schema, grouping: None, rows: Vec::new() }
+        let data = Arc::new(TableData::empty(&schema));
+        Table { schema, grouping: None, data, sel: None }
     }
 
     /// Build an input table, assigning fresh row IDs.
@@ -355,6 +659,43 @@ impl Table {
             t.push_fresh(values)?;
         }
         Ok(t)
+    }
+
+    /// Build a table directly from typed columns (the white-box operator
+    /// construction path: no per-row `Value` boxing).
+    pub fn from_columns(schema: Schema, ids: Vec<u64>, cols: Vec<Column>) -> Result<Table> {
+        if cols.len() != schema.len() {
+            bail!("{} columns for schema {}", cols.len(), schema);
+        }
+        for ((name, t), col) in schema.cols().iter().zip(&cols) {
+            if col.dtype() != *t {
+                bail!("column {name:?}: expected {t}, got {}", col.dtype());
+            }
+            if col.len() != ids.len() {
+                bail!(
+                    "column {name:?} has {} cells for {} row ids",
+                    col.len(),
+                    ids.len()
+                );
+            }
+        }
+        Ok(Table::from_parts(schema, None, ids, cols))
+    }
+
+    /// Internal constructor for pre-validated parts.
+    pub(crate) fn from_parts(
+        schema: Schema,
+        grouping: Option<String>,
+        ids: Vec<u64>,
+        cols: Vec<Column>,
+    ) -> Table {
+        debug_assert!(cols.iter().all(|c| c.len() == ids.len()));
+        Table {
+            schema,
+            grouping,
+            data: Arc::new(TableData { ids, cols }),
+            sel: None,
+        }
     }
 
     pub fn schema(&self) -> &Schema {
@@ -375,20 +716,133 @@ impl Table {
         Ok(())
     }
 
-    pub fn rows(&self) -> &[Row] {
-        &self.rows
-    }
-
-    pub fn rows_mut(&mut self) -> &mut Vec<Row> {
-        &mut self.rows
-    }
-
     pub fn len(&self) -> usize {
-        self.rows.len()
+        match &self.sel {
+            Some(s) => s.len(),
+            None => self.data.ids.len(),
+        }
     }
 
     pub fn is_empty(&self) -> bool {
-        self.rows.is_empty()
+        self.len() == 0
+    }
+
+    /// Base-storage index of view row `i`.
+    #[inline]
+    fn base(&self, i: usize) -> usize {
+        match &self.sel {
+            Some(s) => s[i] as usize,
+            None => i,
+        }
+    }
+
+    pub(crate) fn sel_slice(&self) -> Option<&[u32]> {
+        self.sel.as_deref().map(|v| v.as_slice())
+    }
+
+    /// Row ID of view row `i`.
+    pub fn id_at(&self, i: usize) -> u64 {
+        self.data.ids[self.base(i)]
+    }
+
+    /// All row IDs in view order.
+    pub fn ids(&self) -> Vec<u64> {
+        match &self.sel {
+            None => self.data.ids.clone(),
+            Some(s) => s.iter().map(|&i| self.data.ids[i as usize]).collect(),
+        }
+    }
+
+    /// Materialize the cell at (view row, column index).
+    pub fn cell(&self, row: usize, col: usize) -> Value {
+        self.data.cols[col].value_at(self.base(row))
+    }
+
+    pub fn value(&self, row: usize, col: &str) -> Result<Value> {
+        let idx = self.schema.index_of(col)?;
+        Ok(self.cell(row, idx))
+    }
+
+    /// Column value of a materialized row by name (compatibility path for
+    /// black-box closures that iterate `rows()`).
+    pub fn value_of<'a>(&self, row: &'a Row, col: &str) -> Result<&'a Value> {
+        let idx = self.schema.index_of(col)?;
+        Ok(&row.values[idx])
+    }
+
+    // ---- typed column views -------------------------------------------
+
+    fn col_named(&self, col: &str) -> Result<&Column> {
+        Ok(&self.data.cols[self.schema.index_of(col)?])
+    }
+
+    pub fn col_str(&self, col: &str) -> Result<ColView<'_, String>> {
+        match self.col_named(col)? {
+            Column::Str(v) => Ok(ColView { cells: v, sel: self.sel_slice() }),
+            c => bail!("column {col:?} is {}, expected str", c.dtype()),
+        }
+    }
+
+    pub fn col_i64(&self, col: &str) -> Result<ColView<'_, i64>> {
+        match self.col_named(col)? {
+            Column::I64(v) => Ok(ColView { cells: v, sel: self.sel_slice() }),
+            c => bail!("column {col:?} is {}, expected i64", c.dtype()),
+        }
+    }
+
+    pub fn col_f64(&self, col: &str) -> Result<ColView<'_, f64>> {
+        match self.col_named(col)? {
+            Column::F64(v) => Ok(ColView { cells: v, sel: self.sel_slice() }),
+            c => bail!("column {col:?} is {}, expected f64", c.dtype()),
+        }
+    }
+
+    pub fn col_bool(&self, col: &str) -> Result<ColView<'_, bool>> {
+        match self.col_named(col)? {
+            Column::Bool(v) => Ok(ColView { cells: v, sel: self.sel_slice() }),
+            c => bail!("column {col:?} is {}, expected bool", c.dtype()),
+        }
+    }
+
+    pub fn col_blob(&self, col: &str) -> Result<ColView<'_, ByteBuf>> {
+        match self.col_named(col)? {
+            Column::Blob(v) => Ok(ColView { cells: v, sel: self.sel_slice() }),
+            c => bail!("column {col:?} is {}, expected blob", c.dtype()),
+        }
+    }
+
+    pub fn col_f32s(&self, col: &str) -> Result<ColView<'_, Arc<Vec<f32>>>> {
+        match self.col_named(col)? {
+            Column::F32s(v) => Ok(ColView { cells: v, sel: self.sel_slice() }),
+            c => bail!("column {col:?} is {}, expected f32s", c.dtype()),
+        }
+    }
+
+    pub fn col_i32s(&self, col: &str) -> Result<ColView<'_, Arc<Vec<i32>>>> {
+        match self.col_named(col)? {
+            Column::I32s(v) => Ok(ColView { cells: v, sel: self.sel_slice() }),
+            c => bail!("column {col:?} is {}, expected i32s", c.dtype()),
+        }
+    }
+
+    // ---- row-compatibility layer --------------------------------------
+
+    /// Materialize one row (handle copies for vector/blob cells).
+    pub fn row_at(&self, i: usize) -> Row {
+        let b = self.base(i);
+        Row {
+            id: self.data.ids[b],
+            values: self.data.cols.iter().map(|c| c.value_at(b)).collect(),
+        }
+    }
+
+    /// Materialize all rows in view order.
+    ///
+    /// Compatibility/debug path for black-box closures and tests: this
+    /// allocates one `Row` per view row.  Operator kernels use the typed
+    /// `col_*` views instead.
+    pub fn rows(&self) -> Vec<Row> {
+        (0..self.len()).map(|i| self.row_at(i)).collect()
     }
 
     fn check_row(&self, values: &[Value]) -> Result<()> {
@@ -408,46 +862,249 @@ impl Table {
         Ok(())
     }
 
+    /// Mutable access to the backing storage: resolves any selection view
+    /// into owned buffers first, then clones shared storage (copy-on-write
+    /// append).  Fresh builder tables hit neither path.
+    fn data_mut(&mut self) -> &mut TableData {
+        if self.sel.is_some() {
+            *self = self.compacted();
+        }
+        Arc::make_mut(&mut self.data)
+    }
+
     /// Append a row with a fresh ID (input construction).
     pub fn push_fresh(&mut self, values: Vec<Value>) -> Result<u64> {
-        self.check_row(&values)?;
         let id = fresh_row_id();
-        self.rows.push(Row::new(id, values));
+        self.push(id, values)?;
         Ok(id)
     }
 
     /// Append a row that inherits an existing ID (operator outputs).
     pub fn push(&mut self, id: u64, values: Vec<Value>) -> Result<()> {
         self.check_row(&values)?;
-        self.rows.push(Row::new(id, values));
+        let data = self.data_mut();
+        data.ids.push(id);
+        for (col, v) in data.cols.iter_mut().zip(values) {
+            col.push(v)?;
+        }
         Ok(())
     }
 
-    pub fn value(&self, row: usize, col: &str) -> Result<&Value> {
-        let idx = self.schema.index_of(col)?;
-        Ok(&self.rows[row].values[idx])
+    /// Append a named column (schema extension, e.g. `lookup` results).
+    /// Any active selection view is resolved into contiguous storage
+    /// first, so `col` must have exactly `self.len()` cells.
+    pub fn push_column(&mut self, name: &str, col: Column) -> Result<()> {
+        if self.schema.has(name) {
+            bail!("column {name:?} already exists");
+        }
+        if col.len() != self.len() {
+            bail!("column {name:?} has {} cells for {} rows", col.len(), self.len());
+        }
+        let dtype = col.dtype();
+        self.data_mut().cols.push(col);
+        self.schema = Schema::from_owned(
+            self.schema
+                .cols()
+                .iter()
+                .cloned()
+                .chain(std::iter::once((name.to_string(), dtype)))
+                .collect(),
+        );
+        Ok(())
     }
 
-    /// Column value of a row borrowed from this table.
-    pub fn value_of<'a>(&self, row: &'a Row, col: &str) -> Result<&'a Value> {
-        let idx = self.schema.index_of(col)?;
-        Ok(&row.values[idx])
+    // ---- zero-copy view kernels ---------------------------------------
+
+    /// Select a subset of view rows (indices into the *current* view) —
+    /// the filter/demux primitive.  Shares the backing buffers; no cell
+    /// is copied.
+    pub fn select(&self, view_idx: Vec<u32>) -> Table {
+        let base: Vec<u32> = match &self.sel {
+            None => view_idx,
+            Some(s) => view_idx.iter().map(|&i| s[i as usize]).collect(),
+        };
+        Table {
+            schema: self.schema.clone(),
+            grouping: self.grouping.clone(),
+            data: self.data.clone(),
+            sel: Some(Arc::new(base)),
+        }
     }
+
+    /// Zero-copy split by row-ID ownership (batch demultiplexing).
+    pub fn subset_by_ids(&self, ids: &HashSet<u64>) -> Table {
+        let keep: Vec<u32> = (0..self.len())
+            .filter(|&i| ids.contains(&self.id_at(i)))
+            .map(|i| i as u32)
+            .collect();
+        self.select(keep)
+    }
+
+    /// A copy of this table with the selection resolved into fresh, owned,
+    /// contiguous storage (no-op storage share when there is no view).
+    pub fn compacted(&self) -> Table {
+        match &self.sel {
+            None => self.clone(),
+            Some(s) => {
+                let ids = s.iter().map(|&i| self.data.ids[i as usize]).collect();
+                let cols = self.data.cols.iter().map(|c| c.gather(s)).collect();
+                Table::from_parts(self.schema.clone(), self.grouping.clone(), ids, cols)
+            }
+        }
+    }
+
+    /// Take the backing storage for in-place extension: resolves the
+    /// selection, then moves the buffers out when uniquely owned (clones
+    /// otherwise).
+    fn take_data(self) -> TableData {
+        if self.sel.is_some() {
+            let c = self.compacted();
+            return Arc::try_unwrap(c.data).unwrap_or_else(|a| (*a).clone());
+        }
+        Arc::try_unwrap(self.data).unwrap_or_else(|a| (*a).clone())
+    }
+
+    /// Concatenate tables (the `union` kernel): the first input's storage
+    /// is moved when uniquely owned; subsequent inputs bulk-append —
+    /// scalar buffers by memcpy, vector/blob cells by handle copy.
+    pub fn concat(parts: Vec<Table>) -> Result<Table> {
+        let mut it = parts.into_iter();
+        let first = it.next().context("concat with no inputs")?;
+        let rest: Vec<Table> = it.collect();
+        if rest.is_empty() {
+            return Ok(first);
+        }
+        for t in &rest {
+            if t.schema != first.schema {
+                bail!("union schema mismatch: {} vs {}", first.schema, t.schema);
+            }
+            if t.grouping != first.grouping {
+                bail!("union grouping mismatch");
+            }
+        }
+        let schema = first.schema.clone();
+        let grouping = first.grouping.clone();
+        let mut acc = first.take_data();
+        for t in rest {
+            match t.sel_slice() {
+                None => acc.ids.extend_from_slice(&t.data.ids),
+                Some(s) => acc.ids.extend(s.iter().map(|&i| t.data.ids[i as usize])),
+            }
+            for (dst, src) in acc.cols.iter_mut().zip(t.data.cols.iter()) {
+                dst.append_from(src, t.sel_slice())?;
+            }
+        }
+        Ok(Table {
+            schema,
+            grouping,
+            data: Arc::new(acc),
+            sel: None,
+        })
+    }
+
+    /// Project to a subset of columns: whole-column clones (memcpy for
+    /// scalar buffers, handle copies for vector/blob cells), never
+    /// per-cell `Value` boxing.  Fails like `set_grouping` if the current
+    /// grouping column is projected away.
+    pub fn project(&self, cols: &[&str]) -> Result<Table> {
+        let t = self.compacted();
+        let mut schema_cols = Vec::with_capacity(cols.len());
+        let mut out_cols = Vec::with_capacity(cols.len());
+        for c in cols {
+            let i = t.schema.index_of(c)?;
+            schema_cols.push(t.schema.cols()[i].clone());
+            out_cols.push(t.data.cols[i].clone());
+        }
+        let mut out = Table::from_parts(
+            Schema::from_owned(schema_cols),
+            None,
+            t.data.ids.clone(),
+            out_cols,
+        );
+        out.set_grouping(t.grouping.clone())?;
+        Ok(out)
+    }
+
+    /// Gather base-storage columns by view indices ([`NO_ROW`] → default
+    /// cells); translates through any active selection.  Join padding
+    /// uses this.
+    pub(crate) fn gather_cols(&self, view_idx: &[u32]) -> Vec<Column> {
+        let base: Vec<u32> = view_idx
+            .iter()
+            .map(|&i| {
+                if i == NO_ROW {
+                    NO_ROW
+                } else {
+                    self.base(i as usize) as u32
+                }
+            })
+            .collect();
+        self.data.cols.iter().map(|c| c.gather(&base)).collect()
+    }
+
+    // ---- grouping -----------------------------------------------------
+
+    /// Group key of view row `i` for column `col` (`__rowid` groups by
+    /// row ID).
+    pub fn group_key_at(&self, i: usize, col: &str) -> Result<GroupKey> {
+        if col == "__rowid" {
+            return Ok(GroupKey::RowId(self.id_at(i)));
+        }
+        let b = self.base(i);
+        match self.col_named(col)? {
+            Column::Str(v) => Ok(GroupKey::Str(v[b].clone())),
+            Column::I64(v) => Ok(GroupKey::I64(v[b])),
+            Column::Bool(v) => Ok(GroupKey::Bool(v[b])),
+            Column::F64(v) => Ok(GroupKey::F64(v[b].to_bits())),
+            c => bail!("cannot group by {} column", c.dtype()),
+        }
+    }
+
+    /// Group key of a materialized row (compatibility path).
+    pub fn group_key_of(&self, row: &Row, col: &str) -> Result<GroupKey> {
+        if col == "__rowid" {
+            return Ok(GroupKey::RowId(row.id));
+        }
+        let idx = self.schema.index_of(col)?;
+        row.values[idx].group_key()
+    }
+
+    // ---- size accounting + wire format --------------------------------
 
     /// Total payload size in bytes (network/KVS cost accounting).
     pub fn size_bytes(&self) -> usize {
         let header = 16 + self.schema.len() * 12;
-        header
-            + self
-                .rows
-                .iter()
-                .map(|r| 8 + r.values.iter().map(Value::size_bytes).sum::<usize>())
-                .sum::<usize>()
+        let n = self.len();
+        let mut total = header + n * 8;
+        for col in &self.data.cols {
+            match (&self.sel, col) {
+                // Fixed-width columns need no per-cell scan.
+                (_, Column::I64(_)) | (_, Column::F64(_)) => total += 8 * n,
+                (_, Column::Bool(_)) => total += n,
+                (None, c) => {
+                    for i in 0..n {
+                        total += c.payload_bytes_at(i);
+                    }
+                }
+                (Some(s), c) => {
+                    for &i in s.iter() {
+                        total += c.payload_bytes_at(i as usize);
+                    }
+                }
+            }
+        }
+        total
     }
 
-    /// Serialize with the repo codec (used when crossing node boundaries).
+    /// Serialize with the columnar wire format (used when crossing node
+    /// boundaries): bulk-copied primitive columns, length-prefixed
+    /// payload regions for vectors and blobs.
     pub fn encode(&self) -> Vec<u8> {
+        if self.sel.is_some() {
+            return self.compacted().encode();
+        }
         let mut w = Writer::with_capacity(self.size_bytes());
+        w.u8(2); // columnar format version
         self.schema.encode(&mut w);
         match &self.grouping {
             Some(g) => {
@@ -456,42 +1113,162 @@ impl Table {
             }
             None => w.u8(0),
         }
-        w.u32(self.rows.len() as u32);
-        for row in &self.rows {
-            w.u64(row.id);
-            for v in &row.values {
-                v.encode(&mut w);
+        let n = self.data.ids.len();
+        w.u32(n as u32);
+        w.u64s_raw(&self.data.ids);
+        for col in &self.data.cols {
+            w.u8(col.dtype().tag());
+            match col {
+                Column::Str(v) => {
+                    for s in v {
+                        w.str(s);
+                    }
+                }
+                Column::I64(v) => w.i64s_raw(v),
+                Column::F64(v) => w.f64s_raw(v),
+                Column::Bool(v) => {
+                    for &b in v {
+                        w.u8(b as u8);
+                    }
+                }
+                Column::Blob(v) => {
+                    let lens: Vec<u32> = v.iter().map(|b| b.len() as u32).collect();
+                    w.u32s_raw(&lens);
+                    for b in v {
+                        w.raw(b);
+                    }
+                }
+                Column::F32s(v) => {
+                    let lens: Vec<u32> = v.iter().map(|x| x.len() as u32).collect();
+                    w.u32s_raw(&lens);
+                    for x in v {
+                        w.f32s_raw(x);
+                    }
+                }
+                Column::I32s(v) => {
+                    let lens: Vec<u32> = v.iter().map(|x| x.len() as u32).collect();
+                    w.u32s_raw(&lens);
+                    for x in v {
+                        w.i32s_raw(x);
+                    }
+                }
             }
         }
         w.finish()
     }
 
+    /// Decode from a plain byte slice.  Blob cells copy just their own
+    /// payload out of the slice; prefer [`Table::decode_shared`] when the
+    /// caller already holds a shared buffer (blob cells then alias it).
     pub fn decode(bytes: &[u8]) -> Result<Table> {
+        Table::decode_impl(bytes, None)
+    }
+
+    /// Decode from a shared buffer.  Primitive columns are bulk-converted
+    /// in one pass each; blob cells are zero-copy views into `buf` (the
+    /// anna store/cache hand back exactly this shape).
+    pub fn decode_shared(buf: &Bytes) -> Result<Table> {
+        Table::decode_impl(buf.as_slice(), Some(buf))
+    }
+
+    fn decode_impl(bytes: &[u8], shared: Option<&Bytes>) -> Result<Table> {
         let mut r = Reader::new(bytes);
+        let version = r.u8()?;
+        if version != 2 {
+            bail!("unsupported table codec version {version}");
+        }
         let schema = Schema::decode(&mut r)?;
         let grouping = if r.u8()? == 1 { Some(r.str()?) } else { None };
         let n = r.u32()? as usize;
-        let width = schema.len();
-        let mut rows = Vec::with_capacity(n);
-        for _ in 0..n {
-            let id = r.u64()?;
-            let mut values = Vec::with_capacity(width);
-            for _ in 0..width {
-                values.push(Value::decode(&mut r)?);
+        let ids = r.u64_vec(n)?;
+        let mut cols = Vec::with_capacity(schema.len());
+        for (name, t) in schema.cols() {
+            let tag = r.u8()?;
+            if tag != t.tag() {
+                bail!("column {name:?}: dtype tag {tag} does not match schema {t}");
             }
-            rows.push(Row::new(id, values));
+            let col = match t {
+                DType::Str => {
+                    let mut v = Vec::with_capacity(n);
+                    for _ in 0..n {
+                        v.push(r.str()?);
+                    }
+                    Column::Str(v)
+                }
+                DType::I64 => Column::I64(r.i64_vec(n)?),
+                DType::F64 => Column::F64(r.f64_vec(n)?),
+                DType::Bool => {
+                    let at = r.skip(n)?;
+                    Column::Bool(bytes[at..at + n].iter().map(|&b| b != 0).collect())
+                }
+                DType::Blob => {
+                    let lens = r.u32_vec(n)?;
+                    let total: usize = lens.iter().map(|&l| l as usize).sum();
+                    let start = r.skip(total)?;
+                    let mut off = start;
+                    let mut v = Vec::with_capacity(n);
+                    for &l in &lens {
+                        let len = l as usize;
+                        v.push(match shared {
+                            // Zero-copy: alias the shared input buffer.
+                            Some(buf) => ByteBuf::slice_of(buf, off, len)?,
+                            None => ByteBuf::from_vec(bytes[off..off + len].to_vec()),
+                        });
+                        off += len;
+                    }
+                    Column::Blob(v)
+                }
+                DType::F32s => {
+                    let lens = r.u32_vec(n)?;
+                    let mut v = Vec::with_capacity(n);
+                    for &l in &lens {
+                        v.push(Arc::new(r.f32_vec(l as usize)?));
+                    }
+                    Column::F32s(v)
+                }
+                DType::I32s => {
+                    let lens = r.u32_vec(n)?;
+                    let mut v = Vec::with_capacity(n);
+                    for &l in &lens {
+                        v.push(Arc::new(r.i32_vec(l as usize)?));
+                    }
+                    Column::I32s(v)
+                }
+            };
+            cols.push(col);
         }
         r.done()?;
-        Ok(Table { schema, grouping, rows })
+        Ok(Table::from_parts(schema, grouping, ids, cols))
     }
+}
 
-    /// Group key of a row for column `col` (`__rowid` groups by row ID).
-    pub fn group_key_of(&self, row: &Row, col: &str) -> Result<GroupKey> {
-        if col == "__rowid" {
-            return Ok(GroupKey::RowId(row.id));
+/// Logical equality: same schema, grouping, and per-view-row IDs + cells
+/// (selection views compare equal to their compacted form).
+impl PartialEq for Table {
+    fn eq(&self, other: &Self) -> bool {
+        if self.schema != other.schema
+            || self.grouping != other.grouping
+            || self.len() != other.len()
+        {
+            return false;
         }
-        let idx = self.schema.index_of(col)?;
-        row.values[idx].group_key()
+        if Arc::ptr_eq(&self.data, &other.data) && self.sel_slice() == other.sel_slice() {
+            return true;
+        }
+        let n = self.len();
+        for i in 0..n {
+            if self.id_at(i) != other.id_at(i) {
+                return false;
+            }
+        }
+        for (a, b) in self.data.cols.iter().zip(other.data.cols.iter()) {
+            for i in 0..n {
+                if !a.cell_eq(self.base(i), b, other.base(i)) {
+                    return false;
+                }
+            }
+        }
+        true
     }
 }
 
@@ -502,12 +1279,12 @@ impl fmt::Display for Table {
             "Table{} grouped={:?} rows={}",
             self.schema,
             self.grouping,
-            self.rows.len()
+            self.len()
         )?;
-        for r in self.rows.iter().take(8) {
-            write!(f, "  #{}:", r.id)?;
-            for v in &r.values {
-                match v {
+        for i in 0..self.len().min(8) {
+            write!(f, "  #{}:", self.id_at(i))?;
+            for c in 0..self.schema.len() {
+                match self.cell(i, c) {
                     Value::Str(s) => write!(f, " {s:?}")?,
                     Value::I64(x) => write!(f, " {x}")?,
                     Value::F64(x) => write!(f, " {x:.4}")?,
@@ -519,8 +1296,8 @@ impl fmt::Display for Table {
             }
             writeln!(f)?;
         }
-        if self.rows.len() > 8 {
-            writeln!(f, "  ... {} more", self.rows.len() - 8)?;
+        if self.len() > 8 {
+            writeln!(f, "  ... {} more", self.len() - 8)?;
         }
         Ok(())
     }
@@ -550,6 +1327,7 @@ mod tests {
         let b = t.push_fresh(vec![Value::Str("b".into()), Value::F64(2.0)]).unwrap();
         assert_ne!(a, b);
         t.push(a, vec![Value::Str("c".into()), Value::F64(3.0)]).unwrap();
+        assert_eq!(t.id_at(2), a);
         assert_eq!(t.rows()[2].id, a);
     }
 
@@ -574,9 +1352,24 @@ mod tests {
             Value::i32s(vec![5, 6, 7]),
         ])
         .unwrap();
+        t.push_fresh(vec![
+            Value::Str(String::new()),
+            Value::I64(7),
+            Value::F64(f64::NAN),
+            Value::Bool(false),
+            Value::blob(Vec::new()),
+            Value::f32s(Vec::new()),
+            Value::i32s(vec![0]),
+        ])
+        .unwrap();
         t.set_grouping(Some("s".to_string())).unwrap();
         let rt = Table::decode(&t.encode()).unwrap();
-        assert_eq!(rt, t);
+        // NaN != NaN under PartialEq; compare debug rendering field-wise.
+        assert_eq!(rt.schema(), t.schema());
+        assert_eq!(rt.grouping(), t.grouping());
+        assert_eq!(rt.ids(), t.ids());
+        assert_eq!(format!("{rt}"), format!("{t}"));
+        assert!(rt.value(1, "f").unwrap().as_f64().unwrap().is_nan());
     }
 
     #[test]
@@ -613,12 +1406,17 @@ mod tests {
     fn group_keys() {
         let mut t = Table::new(schema());
         t.push_fresh(vec![Value::Str("x".into()), Value::F64(0.25)]).unwrap();
-        let row = &t.rows()[0];
-        assert_eq!(t.group_key_of(row, "name").unwrap(), GroupKey::Str("x".into()));
-        assert_eq!(t.group_key_of(row, "__rowid").unwrap(), GroupKey::RowId(row.id));
+        assert_eq!(t.group_key_at(0, "name").unwrap(), GroupKey::Str("x".into()));
+        assert_eq!(t.group_key_at(0, "__rowid").unwrap(), GroupKey::RowId(t.id_at(0)));
         assert_eq!(
-            t.group_key_of(row, "score").unwrap(),
+            t.group_key_at(0, "score").unwrap(),
             GroupKey::F64(0.25f64.to_bits())
+        );
+        // Row-based compatibility path agrees.
+        let rows = t.rows();
+        assert_eq!(
+            t.group_key_of(&rows[0], "name").unwrap(),
+            t.group_key_at(0, "name").unwrap()
         );
     }
 
@@ -652,5 +1450,154 @@ mod tests {
         assert_eq!(t.value(0, "score").unwrap().as_f64().unwrap(), 1.5);
         assert!(t.value(0, "nope").is_err());
         assert!(t.value(0, "name").unwrap().as_f64().is_err());
+        assert_eq!(*t.col_f64("score").unwrap().get(0), 1.5);
+        assert!(t.col_i64("score").is_err());
+    }
+
+    fn four_rows() -> Table {
+        let mut t = Table::new(schema());
+        for (n, s) in [("a", 1.0), ("b", 2.0), ("c", 3.0), ("d", 4.0)] {
+            t.push_fresh(vec![Value::Str(n.into()), Value::F64(s)]).unwrap();
+        }
+        t
+    }
+
+    #[test]
+    fn select_is_zero_copy_view() {
+        let t = four_rows();
+        let v = t.select(vec![1, 3]);
+        assert_eq!(v.len(), 2);
+        assert_eq!(v.value(0, "name").unwrap().as_str().unwrap(), "b");
+        assert_eq!(v.value(1, "score").unwrap().as_f64().unwrap(), 4.0);
+        assert_eq!(v.id_at(0), t.id_at(1));
+        // Nested selection composes.
+        let vv = v.select(vec![1]);
+        assert_eq!(vv.len(), 1);
+        assert_eq!(vv.value(0, "name").unwrap().as_str().unwrap(), "d");
+        // Compaction materializes the same logical table.
+        assert_eq!(vv.compacted(), vv);
+    }
+
+    #[test]
+    fn selected_views_encode_and_push() {
+        let t = four_rows();
+        let mut v = t.select(vec![0, 2]);
+        let rt = Table::decode(&v.encode()).unwrap();
+        assert_eq!(rt, v);
+        // Pushing onto a view compacts it first.
+        v.push(99, vec![Value::Str("e".into()), Value::F64(5.0)]).unwrap();
+        assert_eq!(v.len(), 3);
+        assert_eq!(v.id_at(2), 99);
+        // The original base table is untouched.
+        assert_eq!(t.len(), 4);
+    }
+
+    #[test]
+    fn concat_appends_and_checks() {
+        let a = four_rows();
+        let ids_a = a.ids();
+        let b = four_rows().select(vec![1, 2]);
+        let ids_b = b.ids();
+        let u = Table::concat(vec![a, b]).unwrap();
+        assert_eq!(u.len(), 6);
+        let want: Vec<u64> = ids_a.into_iter().chain(ids_b).collect();
+        assert_eq!(u.ids(), want);
+        let other = Table::new(Schema::new(vec![("z", DType::I64)]));
+        assert!(Table::concat(vec![u, other]).is_err());
+    }
+
+    #[test]
+    fn subset_by_ids_partitions() {
+        let t = four_rows();
+        let pick: HashSet<u64> = [t.id_at(0), t.id_at(3)].into_iter().collect();
+        let s = t.subset_by_ids(&pick);
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.value(1, "name").unwrap().as_str().unwrap(), "d");
+    }
+
+    #[test]
+    fn from_columns_validates() {
+        let s = schema();
+        let ids = vec![1, 2];
+        let ok = Table::from_columns(
+            s.clone(),
+            ids.clone(),
+            vec![
+                Column::Str(vec!["a".into(), "b".into()]),
+                Column::F64(vec![0.1, 0.2]),
+            ],
+        )
+        .unwrap();
+        assert_eq!(ok.len(), 2);
+        assert!(Table::from_columns(
+            s.clone(),
+            ids.clone(),
+            vec![Column::F64(vec![0.1, 0.2]), Column::F64(vec![0.1, 0.2])],
+        )
+        .is_err());
+        assert!(Table::from_columns(
+            s,
+            ids,
+            vec![Column::Str(vec!["a".into()]), Column::F64(vec![0.1, 0.2])],
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn push_column_extends_schema() {
+        let mut t = four_rows();
+        t.push_column("flag", Column::Bool(vec![true, false, true, false]))
+            .unwrap();
+        assert!(t.schema().has("flag"));
+        assert!(t.value(2, "flag").unwrap().as_bool().unwrap());
+        assert!(t
+            .push_column("flag", Column::Bool(vec![true, false, true, false]))
+            .is_err());
+        assert!(t.push_column("short", Column::Bool(vec![true])).is_err());
+    }
+
+    #[test]
+    fn decode_shared_blobs_alias_input_buffer() {
+        let mut t = Table::new(Schema::new(vec![("p", DType::Blob)]));
+        t.push_fresh(vec![Value::blob(vec![7; 4096])]).unwrap();
+        let buf: Bytes = Arc::new(t.encode());
+        let before = Arc::strong_count(&buf);
+        let rt = Table::decode_shared(&buf).unwrap();
+        // The blob cell holds a reference into `buf` rather than a copy.
+        assert!(Arc::strong_count(&buf) > before);
+        assert_eq!(rt.value(0, "p").unwrap().as_blob().unwrap().len(), 4096);
+        drop(rt);
+        assert_eq!(Arc::strong_count(&buf), before);
+    }
+
+    #[test]
+    fn col_views_respect_selection() {
+        let t = four_rows();
+        let v = t.select(vec![3, 1]);
+        let col = v.col_f64("score").unwrap();
+        assert_eq!(col.len(), 2);
+        assert_eq!(*col.get(0), 4.0);
+        let collected: Vec<f64> = col.iter().copied().collect();
+        assert_eq!(collected, vec![4.0, 2.0]);
+        let names: Vec<&String> = v.col_str("name").unwrap().iter().collect();
+        assert_eq!(names[1], "b");
+    }
+
+    #[test]
+    fn gather_with_sentinel_defaults() {
+        let c = Column::F64(vec![1.0, 2.0]);
+        match c.gather(&[1, NO_ROW, 0]) {
+            Column::F64(v) => {
+                assert_eq!(v[0], 2.0);
+                assert!(v[1].is_nan());
+                assert_eq!(v[2], 1.0);
+            }
+            _ => panic!("wrong column type"),
+        }
+        let s = Column::Str(vec!["x".into()]);
+        match s.gather(&[NO_ROW, 0]) {
+            Column::Str(v) => assert_eq!(v, vec![String::new(), "x".to_string()]),
+            _ => panic!("wrong column type"),
+        }
     }
 }

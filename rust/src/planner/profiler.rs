@@ -370,15 +370,9 @@ fn seed_lookup_keys(
                         LookupKey::Const(k) => keys.push(k.clone()),
                         LookupKey::Column(c) => {
                             for t in inputs {
-                                if !t.schema().has(c) {
-                                    continue;
-                                }
-                                for row in t.rows() {
-                                    if let Ok(v) = t.value_of(row, c) {
-                                        if let Ok(s) = v.as_str() {
-                                            keys.push(s.to_string());
-                                        }
-                                    }
+                                // Columnar scan: string key cells directly.
+                                if let Ok(col) = t.col_str(c) {
+                                    keys.extend(col.iter().cloned());
                                 }
                             }
                         }

@@ -1,10 +1,179 @@
-//! Minimal little-endian binary codec.
+//! Minimal little-endian binary codec with bulk primitive-slice support.
 //!
 //! Tables and KVS values are serialized with this codec whenever they cross
 //! a (simulated) machine boundary; the byte counts it produces drive the
 //! network cost model, so it must account every payload byte faithfully.
+//!
+//! The columnar data plane leans on two things here:
+//! * **Bulk slice writes/reads** (`u64s`/`f32s`/`i32s`/`i64s`/`f64s`): on
+//!   little-endian targets a whole primitive column is one `memcpy` into
+//!   the wire buffer instead of a per-element loop.
+//! * **[`ByteBuf`]**: an `Arc`-shared byte slice so blob cells decoded
+//!   from a KVS/cache buffer (`Bytes`) alias the original allocation —
+//!   decode is zero-copy for opaque payloads.
+
+use std::fmt;
+use std::ops::Deref;
+use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
+
+/// The canonical shared byte buffer handed around by the KVS, caches and
+/// the codec. Cheap to clone; never copied on read paths.
+pub type Bytes = Arc<Vec<u8>>;
+
+/// A zero-copy view into a shared byte buffer: `(buf, off, len)`.
+///
+/// Blob table cells are `ByteBuf`s, so decoding a table from a KVS value
+/// aliases the stored allocation instead of copying each payload out.
+#[derive(Clone)]
+pub struct ByteBuf {
+    buf: Bytes,
+    off: usize,
+    len: usize,
+}
+
+impl ByteBuf {
+    /// Own a fresh vector (whole-buffer view).
+    pub fn from_vec(v: Vec<u8>) -> ByteBuf {
+        let len = v.len();
+        ByteBuf { buf: Arc::new(v), off: 0, len }
+    }
+
+    /// Whole-buffer view of an already-shared allocation (zero-copy).
+    pub fn from_shared(buf: Bytes) -> ByteBuf {
+        let len = buf.len();
+        ByteBuf { buf, off: 0, len }
+    }
+
+    /// Sub-range view of a shared allocation (zero-copy).
+    pub fn slice_of(buf: &Bytes, off: usize, len: usize) -> Result<ByteBuf> {
+        if off + len > buf.len() {
+            bail!("byte slice {off}+{len} out of range of {} bytes", buf.len());
+        }
+        Ok(ByteBuf { buf: buf.clone(), off, len })
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn as_slice(&self) -> &[u8] {
+        &self.buf[self.off..self.off + self.len]
+    }
+
+    /// The backing shared allocation as-is when this view covers all of
+    /// it, otherwise a fresh copy of just the viewed range.
+    pub fn to_shared(&self) -> Bytes {
+        if self.off == 0 && self.len == self.buf.len() {
+            self.buf.clone()
+        } else {
+            Arc::new(self.as_slice().to_vec())
+        }
+    }
+}
+
+impl Deref for ByteBuf {
+    type Target = [u8];
+
+    fn deref(&self) -> &[u8] {
+        self.as_slice()
+    }
+}
+
+impl AsRef<[u8]> for ByteBuf {
+    fn as_ref(&self) -> &[u8] {
+        self.as_slice()
+    }
+}
+
+impl PartialEq for ByteBuf {
+    fn eq(&self, other: &Self) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl Eq for ByteBuf {}
+
+impl fmt::Debug for ByteBuf {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "ByteBuf[{}]", self.len)
+    }
+}
+
+impl From<Vec<u8>> for ByteBuf {
+    fn from(v: Vec<u8>) -> ByteBuf {
+        ByteBuf::from_vec(v)
+    }
+}
+
+impl From<Bytes> for ByteBuf {
+    fn from(b: Bytes) -> ByteBuf {
+        ByteBuf::from_shared(b)
+    }
+}
+
+/// Copy a primitive slice into the byte buffer: a single `memcpy` on
+/// little-endian targets, an element loop elsewhere.
+macro_rules! bulk_write {
+    ($buf:expr, $v:expr, $ty:ty) => {{
+        let v: &[$ty] = $v;
+        #[cfg(target_endian = "little")]
+        {
+            // Safe reinterpret: the element type is a POD scalar and the
+            // wire format is little-endian, matching the in-memory layout.
+            let bytes = unsafe {
+                std::slice::from_raw_parts(
+                    v.as_ptr() as *const u8,
+                    std::mem::size_of_val(v),
+                )
+            };
+            $buf.extend_from_slice(bytes);
+        }
+        #[cfg(not(target_endian = "little"))]
+        {
+            for x in v {
+                $buf.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+    }};
+}
+
+/// Decode a length-checked little-endian byte region into a primitive
+/// vector in one pass (zero-init + one memcpy on little-endian targets).
+macro_rules! bulk_read {
+    ($raw:expr, $ty:ty) => {{
+        let raw: &[u8] = $raw;
+        let n = raw.len() / std::mem::size_of::<$ty>();
+        let mut out: Vec<$ty> = vec![<$ty>::default(); n];
+        #[cfg(target_endian = "little")]
+        {
+            // One memcpy: the possibly-unaligned source is copied into the
+            // aligned destination allocation.
+            unsafe {
+                std::ptr::copy_nonoverlapping(
+                    raw.as_ptr(),
+                    out.as_mut_ptr() as *mut u8,
+                    n * std::mem::size_of::<$ty>(),
+                );
+            }
+        }
+        #[cfg(not(target_endian = "little"))]
+        {
+            for (slot, c) in out
+                .iter_mut()
+                .zip(raw.chunks_exact(std::mem::size_of::<$ty>()))
+            {
+                *slot = <$ty>::from_le_bytes(c.try_into().unwrap());
+            }
+        }
+        out
+    }};
+}
 
 #[derive(Debug, Default)]
 pub struct Writer {
@@ -49,23 +218,49 @@ impl Writer {
         self.buf.extend_from_slice(v);
     }
 
+    /// Raw bytes with no length prefix (caller tracks framing).
+    pub fn raw(&mut self, v: &[u8]) {
+        self.buf.extend_from_slice(v);
+    }
+
     pub fn str(&mut self, v: &str) {
         self.bytes(v.as_bytes());
     }
 
     pub fn f32s(&mut self, v: &[f32]) {
         self.u32(v.len() as u32);
-        // Bulk copy: safe because f32 is POD and we fix little-endian.
-        for chunk in v {
-            self.buf.extend_from_slice(&chunk.to_le_bytes());
-        }
+        self.f32s_raw(v);
     }
 
     pub fn i32s(&mut self, v: &[i32]) {
         self.u32(v.len() as u32);
-        for chunk in v {
-            self.buf.extend_from_slice(&chunk.to_le_bytes());
-        }
+        self.i32s_raw(v);
+    }
+
+    // ---- unframed bulk slice writes (columnar payload regions) ----
+
+    pub fn f32s_raw(&mut self, v: &[f32]) {
+        bulk_write!(self.buf, v, f32);
+    }
+
+    pub fn i32s_raw(&mut self, v: &[i32]) {
+        bulk_write!(self.buf, v, i32);
+    }
+
+    pub fn u32s_raw(&mut self, v: &[u32]) {
+        bulk_write!(self.buf, v, u32);
+    }
+
+    pub fn u64s_raw(&mut self, v: &[u64]) {
+        bulk_write!(self.buf, v, u64);
+    }
+
+    pub fn i64s_raw(&mut self, v: &[i64]) {
+        bulk_write!(self.buf, v, i64);
+    }
+
+    pub fn f64s_raw(&mut self, v: &[f64]) {
+        bulk_write!(self.buf, v, f64);
     }
 
     pub fn len(&self) -> usize {
@@ -78,6 +273,12 @@ impl Writer {
 
     pub fn finish(self) -> Vec<u8> {
         self.buf
+    }
+
+    /// Finish into a shared buffer without copying — the hand-off KVS
+    /// writes use so the encoded table is never duplicated on insert.
+    pub fn into_bytes(self) -> Bytes {
+        Arc::new(self.buf)
     }
 }
 
@@ -103,6 +304,12 @@ impl<'a> Reader<'a> {
         let s = &self.buf[self.pos..self.pos + n];
         self.pos += n;
         Ok(s)
+    }
+
+    /// Current read offset into the underlying buffer (zero-copy slicing
+    /// of shared buffers needs absolute positions).
+    pub fn pos(&self) -> usize {
+        self.pos
     }
 
     pub fn u8(&mut self) -> Result<u8> {
@@ -134,6 +341,13 @@ impl<'a> Reader<'a> {
         self.take(n)
     }
 
+    /// Skip `n` bytes, returning the absolute offset where they began.
+    pub fn skip(&mut self, n: usize) -> Result<usize> {
+        let at = self.pos;
+        self.take(n)?;
+        Ok(at)
+    }
+
     pub fn str(&mut self) -> Result<String> {
         let b = self.bytes()?;
         String::from_utf8(b.to_vec()).context("invalid utf8 in codec string")
@@ -141,20 +355,44 @@ impl<'a> Reader<'a> {
 
     pub fn f32s(&mut self) -> Result<Vec<f32>> {
         let n = self.u32()? as usize;
-        let raw = self.take(n * 4)?;
-        Ok(raw
-            .chunks_exact(4)
-            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
-            .collect())
+        self.f32_vec(n)
     }
 
     pub fn i32s(&mut self) -> Result<Vec<i32>> {
         let n = self.u32()? as usize;
+        self.i32_vec(n)
+    }
+
+    // ---- unframed bulk slice reads (columnar payload regions) ----
+
+    pub fn f32_vec(&mut self, n: usize) -> Result<Vec<f32>> {
         let raw = self.take(n * 4)?;
-        Ok(raw
-            .chunks_exact(4)
-            .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
-            .collect())
+        Ok(bulk_read!(raw, f32))
+    }
+
+    pub fn i32_vec(&mut self, n: usize) -> Result<Vec<i32>> {
+        let raw = self.take(n * 4)?;
+        Ok(bulk_read!(raw, i32))
+    }
+
+    pub fn u32_vec(&mut self, n: usize) -> Result<Vec<u32>> {
+        let raw = self.take(n * 4)?;
+        Ok(bulk_read!(raw, u32))
+    }
+
+    pub fn u64_vec(&mut self, n: usize) -> Result<Vec<u64>> {
+        let raw = self.take(n * 8)?;
+        Ok(bulk_read!(raw, u64))
+    }
+
+    pub fn i64_vec(&mut self, n: usize) -> Result<Vec<i64>> {
+        let raw = self.take(n * 8)?;
+        Ok(bulk_read!(raw, i64))
+    }
+
+    pub fn f64_vec(&mut self, n: usize) -> Result<Vec<f64>> {
+        let raw = self.take(n * 8)?;
+        Ok(bulk_read!(raw, f64))
     }
 
     pub fn remaining(&self) -> usize {
@@ -169,13 +407,11 @@ impl<'a> Reader<'a> {
     }
 }
 
-/// Reinterpret f32 slice as raw little-endian bytes (zero-copy helper for
-/// literal construction on the PJRT path).
+/// Reinterpret f32 slice as raw little-endian bytes (bulk helper for
+/// literal construction on the PJRT path and KVS payload setup).
 pub fn f32s_as_bytes(v: &[f32]) -> Vec<u8> {
     let mut out = Vec::with_capacity(v.len() * 4);
-    for x in v {
-        out.extend_from_slice(&x.to_le_bytes());
-    }
+    bulk_write!(out, v, f32);
     out
 }
 
@@ -183,9 +419,7 @@ pub fn bytes_as_f32s(b: &[u8]) -> Result<Vec<f32>> {
     if b.len() % 4 != 0 {
         bail!("byte length {} not divisible by 4", b.len());
     }
-    Ok(b.chunks_exact(4)
-        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
-        .collect())
+    Ok(bulk_read!(b, f32))
 }
 
 #[cfg(test)]
@@ -229,10 +463,30 @@ mod tests {
     }
 
     #[test]
+    fn roundtrip_bulk_slices() {
+        let mut w = Writer::new();
+        w.u64s_raw(&[1, u64::MAX, 7]);
+        w.i64s_raw(&[-1, i64::MIN]);
+        w.f64s_raw(&[0.5, f64::NAN]);
+        w.u32s_raw(&[9, 10]);
+        let buf = w.finish();
+        let mut r = Reader::new(&buf);
+        assert_eq!(r.u64_vec(3).unwrap(), vec![1, u64::MAX, 7]);
+        assert_eq!(r.i64_vec(2).unwrap(), vec![-1, i64::MIN]);
+        let fs = r.f64_vec(2).unwrap();
+        assert_eq!(fs[0], 0.5);
+        assert!(fs[1].is_nan());
+        assert_eq!(r.u32_vec(2).unwrap(), vec![9, 10]);
+        r.done().unwrap();
+    }
+
+    #[test]
     fn underrun_errors() {
         let buf = [1u8, 2];
         let mut r = Reader::new(&buf);
         assert!(r.u64().is_err());
+        let mut r2 = Reader::new(&buf);
+        assert!(r2.f32_vec(1).is_err());
     }
 
     #[test]
@@ -272,5 +526,40 @@ mod tests {
         let mut r = Reader::new(&buf);
         assert_eq!(r.str().unwrap(), "");
         assert_eq!(r.bytes().unwrap(), &[] as &[u8]);
+    }
+
+    #[test]
+    fn into_bytes_shares_without_copy() {
+        let mut w = Writer::new();
+        w.bytes(&[1, 2, 3]);
+        let n = w.len();
+        let b = w.into_bytes();
+        assert_eq!(b.len(), n);
+    }
+
+    #[test]
+    fn bytebuf_views_alias_shared_buffer() {
+        let shared: Bytes = Arc::new(vec![0, 1, 2, 3, 4, 5]);
+        let v = ByteBuf::slice_of(&shared, 2, 3).unwrap();
+        assert_eq!(v.as_slice(), &[2, 3, 4]);
+        assert_eq!(v.len(), 3);
+        // Sub-range views copy only on to_shared().
+        assert_eq!(v.to_shared().as_slice(), &[2, 3, 4]);
+        // Whole-buffer views share the allocation.
+        let whole = ByteBuf::from_shared(shared.clone());
+        assert!(Arc::ptr_eq(&whole.to_shared(), &shared));
+        assert!(ByteBuf::slice_of(&shared, 4, 3).is_err());
+        // Content equality across different backings.
+        assert_eq!(ByteBuf::from_vec(vec![2, 3, 4]), v);
+    }
+
+    #[test]
+    fn skip_returns_offset() {
+        let buf = [9u8; 10];
+        let mut r = Reader::new(&buf);
+        r.u32().unwrap();
+        assert_eq!(r.skip(2).unwrap(), 4);
+        assert_eq!(r.pos(), 6);
+        assert!(r.skip(100).is_err());
     }
 }

@@ -13,7 +13,7 @@ use anyhow::Result;
 
 use crate::anna::KvsClient;
 use crate::dataflow::operator::{CmpOp, Derive, Func, ModelBinding, Predicate};
-use crate::dataflow::table::{DType, Schema, Table, Value};
+use crate::dataflow::table::{Column, DType, Schema, Table, Value};
 use crate::dataflow::{AggFn, Dataflow, JoinHow, LookupKey};
 use crate::runtime::Manifest;
 use crate::simulation::gpu::Device;
@@ -148,22 +148,29 @@ pub fn image_cascade(manifest: &Manifest) -> Result<PipelineSpec> {
             "max_conf",
             Some(vec![("pred", DType::I64), ("conf", DType::F64)]),
             Arc::new(|_, t: &Table| {
-                let mut out = Table::new(Schema::new(vec![
-                    ("pred", DType::I64),
-                    ("conf", DType::F64),
-                ]));
-                for row in t.rows() {
-                    let conf = t.value_of(row, "conf")?.as_f64()?;
-                    let conf2 = t.value_of(row, "conf2")?.as_f64()?;
-                    let pred = t.value_of(row, "pred")?.as_i64()?;
-                    let (p, c) = if conf2.is_nan() || conf >= conf2 {
-                        (pred, conf)
+                // Columnar scan: typed views in, typed buffers out.
+                let conf = t.col_f64("conf")?;
+                let conf2 = t.col_f64("conf2")?;
+                let pred = t.col_i64("pred")?;
+                let pred2 = t.col_i64("pred2")?;
+                let n = t.len();
+                let mut preds = Vec::with_capacity(n);
+                let mut confs = Vec::with_capacity(n);
+                for i in 0..n {
+                    let (c, c2) = (*conf.get(i), *conf2.get(i));
+                    if c2.is_nan() || c >= c2 {
+                        preds.push(*pred.get(i));
+                        confs.push(c);
                     } else {
-                        (t.value_of(row, "pred2")?.as_i64()?, conf2)
-                    };
-                    out.push(row.id, vec![Value::I64(p), Value::F64(c)])?;
+                        preds.push(*pred2.get(i));
+                        confs.push(c2);
+                    }
                 }
-                Ok(out)
+                Table::from_columns(
+                    Schema::new(vec![("pred", DType::I64), ("conf", DType::F64)]),
+                    t.ids(),
+                    vec![Column::I64(preds), Column::F64(confs)],
+                )
             }),
         ),
     )?;
@@ -201,25 +208,36 @@ pub fn video_stream() -> Result<PipelineSpec> {
                 ("vehicle", DType::F64),
             ]),
             Arc::new(|_, t: &Table| {
-                let mut out = Table::new(Schema::new(vec![
-                    ("img", DType::F32s),
-                    ("person", DType::F64),
-                    ("vehicle", DType::F64),
-                ]));
-                for row in t.rows() {
-                    let grid = t.value_of(row, "grid")?.as_f32s()?;
-                    let img = t.value_of(row, "img")?.clone();
+                let grids = t.col_f32s("grid")?;
+                let imgs = t.col_f32s("img")?;
+                let n = t.len();
+                let mut img_col = Vec::with_capacity(n);
+                let mut person = Vec::with_capacity(n);
+                let mut vehicle = Vec::with_capacity(n);
+                for i in 0..n {
                     let (mut p, mut v) = (0.0f32, 0.0f32);
-                    for cell in grid.chunks_exact(7) {
+                    for cell in grids.get(i).chunks_exact(7) {
                         p = p.max(cell[0] * cell[5]);
                         v = v.max(cell[0] * cell[6]);
                     }
-                    out.push(
-                        row.id,
-                        vec![img, Value::F64(p as f64), Value::F64(v as f64)],
-                    )?;
+                    // Frame payloads pass through as shared handles.
+                    img_col.push(imgs.get(i).clone());
+                    person.push(p as f64);
+                    vehicle.push(v as f64);
                 }
-                Ok(out)
+                Table::from_columns(
+                    Schema::new(vec![
+                        ("img", DType::F32s),
+                        ("person", DType::F64),
+                        ("vehicle", DType::F64),
+                    ]),
+                    t.ids(),
+                    vec![
+                        Column::F32s(img_col),
+                        Column::F64(person),
+                        Column::F64(vehicle),
+                    ],
+                )
             }),
         ),
     )?;
@@ -242,13 +260,16 @@ pub fn video_stream() -> Result<PipelineSpec> {
                 &format!("label_{label}"),
                 Some(vec![("class", DType::Str)]),
                 Arc::new(move |_, t: &Table| {
-                    let mut out =
-                        Table::new(Schema::new(vec![("class", DType::Str)]));
-                    for row in t.rows() {
-                        let pred = t.value_of(row, "pred")?.as_i64()?;
-                        out.push(row.id, vec![Value::Str(format!("{lbl}-{pred}"))])?;
-                    }
-                    Ok(out)
+                    let classes: Vec<String> = t
+                        .col_i64("pred")?
+                        .iter()
+                        .map(|p| format!("{lbl}-{p}"))
+                        .collect();
+                    Table::from_columns(
+                        Schema::new(vec![("class", DType::Str)]),
+                        t.ids(),
+                        vec![Column::Str(classes)],
+                    )
                 }),
             ),
         )
@@ -345,16 +366,21 @@ pub fn recommender(scale: RecsysScale) -> Result<PipelineSpec> {
             "decode",
             Some(vec![("uvec", DType::F32s), ("cmat", DType::F32s)]),
             Arc::new(|_, t: &Table| {
-                let mut out = Table::new(Schema::new(vec![
-                    ("uvec", DType::F32s),
-                    ("cmat", DType::F32s),
-                ]));
-                for row in t.rows() {
-                    let u = bytes_as_f32s(t.value_of(row, "ublob")?.as_blob()?)?;
-                    let c = bytes_as_f32s(t.value_of(row, "cblob")?.as_blob()?)?;
-                    out.push(row.id, vec![Value::f32s(u), Value::f32s(c)])?;
+                let ub = t.col_blob("ublob")?;
+                let cb = t.col_blob("cblob")?;
+                let n = t.len();
+                let mut uvec = Vec::with_capacity(n);
+                let mut cmat = Vec::with_capacity(n);
+                for i in 0..n {
+                    // Bulk byte→f32 conversion straight off the blob views.
+                    uvec.push(Arc::new(bytes_as_f32s(ub.get(i))?));
+                    cmat.push(Arc::new(bytes_as_f32s(cb.get(i))?));
                 }
-                Ok(out)
+                Table::from_columns(
+                    Schema::new(vec![("uvec", DType::F32s), ("cmat", DType::F32s)]),
+                    t.ids(),
+                    vec![Column::F32s(uvec), Column::F32s(cmat)],
+                )
             }),
         ),
     )?;
@@ -404,20 +430,22 @@ pub fn synthetic_cascade() -> Result<PipelineSpec> {
             "simple",
             Some(vec![("pred", DType::I64), ("conf", DType::F64)]),
             Arc::new(|_, t: &Table| {
-                let mut out = Table::new(Schema::new(vec![
-                    ("pred", DType::I64),
-                    ("conf", DType::F64),
-                ]));
-                for row in t.rows() {
-                    let img = t.value_of(row, "img")?.as_f32s()?;
-                    let x = (img.first().copied().unwrap_or(0.0) as f64 / 255.0)
+                let imgs = t.col_f32s("img")?;
+                let n = t.len();
+                let mut preds = Vec::with_capacity(n);
+                let mut confs = Vec::with_capacity(n);
+                for i in 0..n {
+                    let x = (imgs.get(i).first().copied().unwrap_or(0.0) as f64
+                        / 255.0)
                         .clamp(0.0, 1.0);
-                    out.push(
-                        row.id,
-                        vec![Value::I64((x * 1000.0) as i64), Value::F64(x)],
-                    )?;
+                    preds.push((x * 1000.0) as i64);
+                    confs.push(x);
                 }
-                Ok(out)
+                Table::from_columns(
+                    Schema::new(vec![("pred", DType::I64), ("conf", DType::F64)]),
+                    t.ids(),
+                    vec![Column::I64(preds), Column::F64(confs)],
+                )
             }),
         )
         .with_service_model("resnet")
@@ -495,23 +523,10 @@ pub fn synthetic_nmt() -> Result<PipelineSpec> {
     })
 }
 
-/// Project a table to a subset of columns (helper for strip stages).
+/// Project a table to a subset of columns (helper for strip stages):
+/// whole-column clones, no per-row Value boxing.
 fn project(t: &Table, cols: &[&str]) -> Result<Table> {
-    let schema = Schema::from_owned(
-        cols.iter()
-            .map(|c| Ok((c.to_string(), t.schema().dtype_of(c)?)))
-            .collect::<Result<Vec<_>>>()?,
-    );
-    let idx: Vec<usize> = cols
-        .iter()
-        .map(|c| t.schema().index_of(c))
-        .collect::<Result<_>>()?;
-    let mut out = Table::new(schema);
-    out.set_grouping(t.grouping().map(str::to_string))?;
-    for row in t.rows() {
-        out.push(row.id, idx.iter().map(|&i| row.values[i].clone()).collect())?;
-    }
-    Ok(out)
+    t.project(cols)
 }
 
 #[cfg(test)]

@@ -147,10 +147,10 @@ fn recommender_end_to_end_with_locality() {
     let pairs = run_both(&spec, &OptFlags::all(), 5);
     assert_equivalent(&pairs, false);
     for (got, _) in &pairs {
-        let idx = got.value(0, "top_idx").unwrap().as_i32s().unwrap();
-        assert_eq!(idx.len(), 10);
-        let scores = got.value(0, "top_scores").unwrap().as_f32s().unwrap();
-        for w in scores.windows(2) {
+        let idx = got.value(0, "top_idx").unwrap();
+        assert_eq!(idx.as_i32s().unwrap().len(), 10);
+        let scores = got.value(0, "top_scores").unwrap();
+        for w in scores.as_f32s().unwrap().windows(2) {
             assert!(w[0] >= w[1]);
         }
     }
