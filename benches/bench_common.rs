@@ -43,6 +43,15 @@ pub fn scaled_ms(ms: f64) -> f64 {
     }
 }
 
+/// The one shared "standard optimized" flags constructor for the figure
+/// benches: [`OptFlags::all`] (fusion + locality + batching + the
+/// expression rewrites).  Benches that need variations derive them from
+/// this (`standard_flags().with_fuse_across_devices()`,
+/// `standard_flags().without_rewrites()`) instead of hand-rolling copies.
+pub fn standard_flags() -> cloudflow::dataflow::OptFlags {
+    cloudflow::dataflow::OptFlags::all()
+}
+
 pub fn header(title: &str) {
     println!("\n=== {title} ===");
 }

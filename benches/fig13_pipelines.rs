@@ -10,17 +10,13 @@
 
 mod bench_common;
 
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
-
-use bench_common::{header, scaled};
+use bench_common::{header, scaled, standard_flags};
 use cloudflow::baselines::{Baseline, BaselineKind};
 use cloudflow::cloudburst::Cluster;
 use cloudflow::dataflow::compiler::{compile, OptFlags};
 use cloudflow::runtime::{InferenceService, Manifest};
-use cloudflow::simulation::clock::Clock;
 use cloudflow::simulation::gpu::Device;
-use cloudflow::util::stats::{fmt_ms, Summary};
+use cloudflow::util::stats::fmt_ms;
 use cloudflow::workloads::pipelines::{self, PipelineSpec, RecsysScale};
 use cloudflow::workloads::closed_loop;
 
@@ -60,14 +56,14 @@ fn main() {
             name: "cascade",
             devices: &[Device::Cpu, Device::Gpu],
             // paper: whole pipeline fused into one operator
-            opts: || OptFlags::all().with_fuse_across_devices(),
+            opts: || standard_flags().with_fuse_across_devices(),
             clients: 10,
             requests: 60,
         },
         Config {
             name: "video",
             devices: &[Device::Cpu, Device::Gpu],
-            opts: || OptFlags::all().with_fuse_across_devices(),
+            opts: || standard_flags().with_fuse_across_devices(),
             clients: 4,
             requests: 16,
         },
@@ -77,7 +73,7 @@ fn main() {
             // competitive execution enabled (paper reports both; we report
             // the optimized configuration and print the delta note)
             opts: || {
-                OptFlags::all()
+                standard_flags()
                     .with_competitive("nmt_fr", 3)
                     .with_competitive("nmt_de", 3)
             },
@@ -87,7 +83,7 @@ fn main() {
         Config {
             name: "recsys",
             devices: &[Device::Cpu],
-            opts: OptFlags::all,
+            opts: standard_flags,
             clients: 8,
             requests: 60,
         },
@@ -121,10 +117,11 @@ fn main() {
                 setup(&cluster.kvs());
             }
             let h = cluster.register(plan, 2).unwrap();
-            closed_loop(&cluster, h, cfg.clients, requests / 4 + 2, |i| {
+            let dep = cluster.deployment(h).unwrap();
+            closed_loop(&dep, cfg.clients, requests / 4 + 2, |i| {
                 (spec.make_input)(i)
             });
-            let mut r = closed_loop(&cluster, h, cfg.clients, requests, |i| {
+            let mut r = closed_loop(&dep, cfg.clients, requests, |i| {
                 (spec.make_input)(i + 1000)
             });
             let (med, p99, rps) = r.report();
@@ -149,11 +146,13 @@ fn main() {
                     setup(&b.kvs());
                 }
                 b.copy_allocation(&alloc);
-                // warm-up + measured closed loop against the proxy driver
-                run_baseline(&b, &spec, cfg.clients, requests / 4 + 2, 0);
-                let (mut lat, wall_ms, done) =
-                    run_baseline(&b, &spec, cfg.clients, requests, 1000);
-                let (med, p99) = lat.report();
+                // Warm-up + measured closed loop: the baselines implement
+                // the same Deployment facade, so the identical driver runs
+                // against them (apples-to-apples by construction).
+                closed_loop(&b, cfg.clients, requests / 4 + 2, |i| (spec.make_input)(i));
+                let mut r =
+                    closed_loop(&b, cfg.clients, requests, |i| (spec.make_input)(i + 1000));
+                let (med, p99, rps) = r.report();
                 println!(
                     "{:<10} {:<5} {:<12} {:>10} {:>10} {:>9.1} r/s",
                     cfg.name,
@@ -161,7 +160,7 @@ fn main() {
                     kind.label(),
                     fmt_ms(med),
                     fmt_ms(p99),
-                    done as f64 / (wall_ms / 1e3)
+                    rps
                 );
             }
         }
@@ -180,31 +179,3 @@ fn build(name: &str, manifest: &Manifest) -> PipelineSpec {
     }
 }
 
-fn run_baseline(
-    b: &std::sync::Arc<Baseline>,
-    spec: &PipelineSpec,
-    clients: usize,
-    total: usize,
-    offset: usize,
-) -> (Summary, f64, usize) {
-    let clock = Clock::new();
-    let next = AtomicUsize::new(0);
-    let lat = Mutex::new(Summary::new());
-    std::thread::scope(|s| {
-        for _ in 0..clients {
-            s.spawn(|| loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= total {
-                    return;
-                }
-                let t0 = Clock::new();
-                if b.execute((spec.make_input)(i + offset)).is_ok() {
-                    lat.lock().unwrap().add(t0.now_ms());
-                }
-            });
-        }
-    });
-    let lat = lat.into_inner().unwrap();
-    let done = lat.len();
-    (lat, clock.now_ms(), done)
-}

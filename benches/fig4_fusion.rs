@@ -9,22 +9,20 @@ mod bench_common;
 
 use bench_common::{fmt_bytes, header, scaled};
 use cloudflow::cloudburst::Cluster;
-use cloudflow::dataflow::compiler::{compile, OptFlags};
+use cloudflow::dataflow::compiler::OptFlags;
 use cloudflow::dataflow::operator::Func;
 use cloudflow::dataflow::table::{DType, Schema};
-use cloudflow::dataflow::Dataflow;
+use cloudflow::dataflow::v2::Flow;
 use cloudflow::util::rng::Rng;
 use cloudflow::util::stats::fmt_ms;
 use cloudflow::workloads::{closed_loop, datagen};
 
-fn chain(n: usize) -> Dataflow {
-    let mut fl = Dataflow::new("chain", Schema::new(vec![("payload", DType::Blob)]));
-    let mut cur = fl.input();
+fn chain(n: usize) -> Flow {
+    let mut cur = Flow::source("chain", Schema::new(vec![("payload", DType::Blob)]));
     for i in 0..n {
-        cur = fl.map(cur, Func::identity(&format!("f{i}"))).unwrap();
+        cur = cur.map(Func::identity(&format!("f{i}"))).unwrap();
     }
-    fl.set_output(cur).unwrap();
-    fl
+    cur
 }
 
 fn main() {
@@ -41,12 +39,13 @@ fn main() {
             let fl = chain(len);
             let mut run = |opts: &OptFlags| {
                 let cluster = Cluster::new(None);
-                let h = cluster.register(compile(&fl, opts).unwrap(), 2).unwrap();
+                let h = cluster.register(fl.compile(opts).unwrap(), 2).unwrap();
+                let dep = cluster.deployment(h).unwrap();
                 // warm-up
-                closed_loop(&cluster, h, 2, 4, |i| {
+                closed_loop(&dep, 2, 4, |i| {
                     datagen::payload_table(&mut Rng::new(i as u64), size)
                 });
-                let mut r = closed_loop(&cluster, h, 4, requests, |i| {
+                let mut r = closed_loop(&dep, 4, requests, |i| {
                     datagen::payload_table(&mut Rng::new(100 + i as u64), size)
                 });
                 r.latencies.report()

@@ -9,28 +9,24 @@ mod bench_common;
 
 use bench_common::{header, scaled};
 use cloudflow::cloudburst::Cluster;
-use cloudflow::dataflow::compiler::{compile, OptFlags};
+use cloudflow::dataflow::compiler::OptFlags;
 use cloudflow::dataflow::operator::{Func, SleepDist};
 use cloudflow::dataflow::table::{DType, Schema, Table, Value};
-use cloudflow::dataflow::Dataflow;
+use cloudflow::dataflow::v2::Flow;
 use cloudflow::workloads::closed_loop;
 
-fn flow(theta: f64) -> Dataflow {
-    let mut fl = Dataflow::new("competitive", Schema::new(vec![("x", DType::F64)]));
-    let a = fl.map(fl.input(), Func::identity("front")).unwrap();
-    let v = fl
-        .map(
-            a,
-            Func::sleep(
-                "variable",
-                // unit 30ms: Gamma(3,4) ~ p99 0.9s, like the paper's scale
-                SleepDist::GammaMs { k: 3.0, theta, unit_ms: 30.0, base_ms: 0.0 },
-            ),
-        )
-        .unwrap();
-    let t = fl.map(v, Func::identity("tail")).unwrap();
-    fl.set_output(t).unwrap();
-    fl
+fn flow(theta: f64) -> Flow {
+    Flow::source("competitive", Schema::new(vec![("x", DType::F64)]))
+        .map(Func::identity("front"))
+        .unwrap()
+        .map(Func::sleep(
+            "variable",
+            // unit 30ms: Gamma(3,4) ~ p99 0.9s, like the paper's scale
+            SleepDist::GammaMs { k: 3.0, theta, unit_ms: 30.0, base_ms: 0.0 },
+        ))
+        .unwrap()
+        .map(Func::identity("tail"))
+        .unwrap()
 }
 
 fn input(_: usize) -> Table {
@@ -57,9 +53,10 @@ fn main() {
             };
             let cluster = Cluster::new(None);
             // ample worker capacity so straggler attempts don't queue-block
-            let h = cluster.register(compile(&fl, &opts).unwrap(), 4).unwrap();
-            closed_loop(&cluster, h, 2, 8, input);
-            let r = closed_loop(&cluster, h, 2, requests, input);
+            let h = cluster.register(fl.compile(&opts).unwrap(), 4).unwrap();
+            let dep = cluster.deployment(h).unwrap();
+            closed_loop(&dep, 2, 8, input);
+            let r = closed_loop(&dep, 2, requests, input);
             let mut s = r.latencies;
             let w = s.whiskers();
             if replicas == 1 {

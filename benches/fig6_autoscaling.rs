@@ -13,30 +13,28 @@ mod bench_common;
 
 use bench_common::header;
 use cloudflow::cloudburst::Cluster;
-use cloudflow::dataflow::compiler::{compile, OptFlags};
+use cloudflow::dataflow::compiler::OptFlags;
 use cloudflow::dataflow::operator::{Func, SleepDist};
 use cloudflow::dataflow::table::{DType, Schema, Table, Value};
-use cloudflow::dataflow::Dataflow;
+use cloudflow::dataflow::v2::Flow;
 use cloudflow::workloads::loadgen::timed_phase;
 
 fn main() {
     header("Fig 6: operator autoscaling under a 4x load spike");
-    let mut fl = Dataflow::new("autoscale", Schema::new(vec![("x", DType::F64)]));
-    let fast = fl
-        .map(fl.input(), Func::sleep("fast", SleepDist::ConstMs(2.0)))
+    let plan = Flow::source("autoscale", Schema::new(vec![("x", DType::F64)]))
+        .map(Func::sleep("fast", SleepDist::ConstMs(2.0)))
+        .unwrap()
+        .map(Func::sleep("slow", SleepDist::ConstMs(120.0)))
+        .unwrap()
+        .compile(&OptFlags::none())
         .unwrap();
-    let slow = fl
-        .map(fast, Func::sleep("slow", SleepDist::ConstMs(120.0)))
-        .unwrap();
-    fl.set_output(slow).unwrap();
 
     let cluster = Cluster::new(None);
     cluster.set_autoscale(true);
-    let h = cluster
-        .register(compile(&fl, &OptFlags::none()).unwrap(), 1)
-        .unwrap();
+    let h = cluster.register(plan, 1).unwrap();
     cluster.scale_to(h, "slow", 3).unwrap();
     cluster.metrics(h).enable_timeline(1000.0, 80_000.0);
+    let dep = cluster.deployment(h).unwrap();
 
     let input = |_: usize| {
         let mut t = Table::new(Schema::new(vec![("x", DType::F64)]));
@@ -44,11 +42,11 @@ fn main() {
         t
     };
     println!("t=0s: 4 clients");
-    timed_phase(&cluster, h, 4, 15_000.0, input);
+    timed_phase(&dep, 4, 15_000.0, input);
     println!("t=15s: spike to 16 clients");
-    timed_phase(&cluster, h, 16, 45_000.0, input);
+    timed_phase(&dep, 16, 45_000.0, input);
     println!("t=60s: spike continues");
-    timed_phase(&cluster, h, 16, 15_000.0, input);
+    timed_phase(&dep, 16, 15_000.0, input);
 
     // Timeline: latency + throughput per second.
     println!("\n{:>5} {:>12} {:>12}", "t(s)", "median(ms)", "rps");

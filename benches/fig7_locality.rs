@@ -12,46 +12,42 @@ use std::sync::Arc;
 
 use bench_common::{fmt_bytes, header, scaled};
 use cloudflow::cloudburst::Cluster;
-use cloudflow::dataflow::compiler::{compile, OptFlags};
+use cloudflow::dataflow::compiler::OptFlags;
 use cloudflow::dataflow::operator::Func;
 use cloudflow::dataflow::table::{DType, Schema, Table, Value};
-use cloudflow::dataflow::{Dataflow, LookupKey};
+use cloudflow::dataflow::v2::Flow;
+use cloudflow::dataflow::LookupKey;
+use cloudflow::serve::Deployment;
 use cloudflow::util::rng::Rng;
 use cloudflow::util::stats::{fmt_ms, Summary};
 use cloudflow::workloads::datagen;
 
-fn flow() -> Dataflow {
-    let mut fl = Dataflow::new("locality", Schema::new(vec![("key", DType::Str)]));
-    let pick = fl.map(fl.input(), Func::identity("pick")).unwrap();
-    let lk = fl
-        .lookup(pick, LookupKey::Column("key".into()), "obj")
-        .unwrap();
-    let sum = fl
-        .map(
-            lk,
-            Func::rust(
-                "sum",
-                Some(vec![("sum", DType::F64)]),
-                Arc::new(|_, t: &Table| {
-                    let mut out = Table::new(Schema::new(vec![("sum", DType::F64)]));
-                    let blobs = t.col_blob("obj")?;
-                    for i in 0..t.len() {
-                        // Stream the sum without materialising a Vec<f32>:
-                        // real compute must not drown the modeled costs.
-                        let s: f64 = blobs
-                            .get(i)
-                            .chunks_exact(4)
-                            .map(|c| f32::from_le_bytes(c.try_into().unwrap()) as f64)
-                            .sum();
-                        out.push(t.id_at(i), vec![Value::F64(s)])?;
-                    }
-                    Ok(out)
-                }),
-            ),
-        )
-        .unwrap();
-    fl.set_output(sum).unwrap();
-    fl
+fn flow() -> Flow {
+    Flow::source("locality", Schema::new(vec![("key", DType::Str)]))
+        .map(Func::identity("pick"))
+        .unwrap()
+        .lookup(LookupKey::Column("key".into()), "obj")
+        .unwrap()
+        .map(Func::rust(
+            "sum",
+            Some(vec![("sum", DType::F64)]),
+            Arc::new(|_, t: &Table| {
+                let mut out = Table::new(Schema::new(vec![("sum", DType::F64)]));
+                let blobs = t.col_blob("obj")?;
+                for i in 0..t.len() {
+                    // Stream the sum without materialising a Vec<f32>:
+                    // real compute must not drown the modeled costs.
+                    let s: f64 = blobs
+                        .get(i)
+                        .chunks_exact(4)
+                        .map(|c| f32::from_le_bytes(c.try_into().unwrap()) as f64)
+                        .sum();
+                    out.push(t.id_at(i), vec![Value::F64(s)])?;
+                }
+                Ok(out)
+            }),
+        ))
+        .unwrap()
 }
 
 fn main() {
@@ -84,7 +80,8 @@ fn main() {
             // A wide replica pool (as the paper's autoscaled deployment):
             // undirected placement then rarely lands where the object is
             // cached, which is exactly the effect under test.
-            let h = cluster.register(compile(&fl, opts).unwrap(), 12).unwrap();
+            let h = cluster.register(fl.compile(opts).unwrap(), 12).unwrap();
+            let dep = cluster.deployment(h).unwrap();
             let key_table = |i: u64| {
                 let mut t = Table::new(Schema::new(vec![("key", DType::Str)]));
                 t.push_fresh(vec![Value::Str(format!("obj-{i}"))]).unwrap();
@@ -92,11 +89,7 @@ fn main() {
             };
             // Warm the caches: touch each object once (paper does this).
             for i in 0..n_objects {
-                cluster
-                    .execute(h, key_table(i as u64))
-                    .unwrap()
-                    .result()
-                    .unwrap();
+                dep.call(key_table(i as u64)).unwrap();
             }
             let gets0 = cluster.inner().store.op_counts().0;
             // Random-order accesses, sequential client (latency-focused).
@@ -107,7 +100,7 @@ fn main() {
             let mut lat = Summary::new();
             for &i in &order {
                 let c = cloudflow::simulation::clock::Clock::new();
-                cluster.execute(h, key_table(i)).unwrap().result().unwrap();
+                dep.call(key_table(i)).unwrap();
                 lat.add(c.now_ms());
             }
             let gets = cluster.inner().store.op_counts().0 - gets0;

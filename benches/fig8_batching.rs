@@ -12,11 +12,12 @@ mod bench_common;
 
 use bench_common::{header, scaled};
 use cloudflow::cloudburst::Cluster;
-use cloudflow::dataflow::compiler::{compile, OptFlags};
+use cloudflow::dataflow::compiler::OptFlags;
 use cloudflow::dataflow::operator::{Func, ModelBinding};
 use cloudflow::dataflow::table::DType;
-use cloudflow::dataflow::Dataflow;
+use cloudflow::dataflow::v2::Flow;
 use cloudflow::runtime::InferenceService;
+use cloudflow::serve::{CallOpts, Deployment};
 use cloudflow::simulation::clock::Clock;
 use cloudflow::simulation::gpu::Device;
 use cloudflow::util::rng::Rng;
@@ -32,16 +33,16 @@ fn main() {
             return;
         }
     };
-    let mut fl = Dataflow::new("batching", cloudflow::dataflow::Schema::new(vec![
-        ("img", DType::F32s),
-    ]));
-    let m = fl
-        .map(
-            fl.input(),
-            Func::model(ModelBinding::new("resnet", &["img"], &[("probs", DType::F32s)])),
-        )
-        .unwrap();
-    fl.set_output(m).unwrap();
+    let fl = Flow::source(
+        "batching",
+        cloudflow::dataflow::Schema::new(vec![("img", DType::F32s)]),
+    )
+    .map(Func::model(ModelBinding::new(
+        "resnet",
+        &["img"],
+        &[("probs", DType::F32s)],
+    )))
+    .unwrap();
 
     // Compile all resnet batch variants up front so PJRT compilation
     // doesn't pollute the measured rounds.
@@ -56,11 +57,14 @@ fn main() {
             // Fresh cluster per configuration; single replica so the batch
             // forms at one executor, max batch = the sweep point.
             cloudflow::config::set_max_batch(batch);
-            let plan = compile(&fl, &OptFlags::none().with_batching())
+            let plan = fl
+                .compile(&OptFlags::none().with_batching())
                 .unwrap()
                 .force_device(device);
             let cluster = Cluster::new(Some(infer.clone()));
             let h = cluster.register(plan, 1).unwrap();
+            let dep = cluster.deployment(h).unwrap();
+            let opts = CallOpts::default();
             let mut lat = Summary::new();
             let mut total = 0usize;
             let clock = Clock::new();
@@ -69,15 +73,14 @@ fn main() {
                 let t0 = Clock::new();
                 let futs: Vec<_> = (0..batch)
                     .map(|i| {
-                        cluster
-                            .execute(
-                                h,
-                                datagen::image_table(
-                                    &mut Rng::new((round * 100 + i) as u64),
-                                    1,
-                                ),
-                            )
-                            .unwrap()
+                        dep.call_async(
+                            datagen::image_table(
+                                &mut Rng::new((round * 100 + i) as u64),
+                                1,
+                            ),
+                            &opts,
+                        )
+                        .unwrap()
                     })
                     .collect();
                 for f in futs {

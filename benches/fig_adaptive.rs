@@ -65,24 +65,22 @@ fn drive_phases(
     slo: &Slo,
     qps: f64,
 ) -> (f64, f64, f64) {
+    let dep = cluster.deployment(h).expect("deployment");
     let calm = open_loop(
-        cluster,
-        h,
+        &dep,
         &ArrivalTrace::constant(qps, scaled_ms(2_500.0)),
         one_f64_row,
     );
     knob.set(DRIFT_FACTOR);
     // Adaptation window: the controller (if any) detects and re-plans here.
     open_loop(
-        cluster,
-        h,
+        &dep,
         &ArrivalTrace::constant(qps, scaled_ms(4_000.0)),
         one_f64_row,
     );
     // Measured tail window.
     let tail = open_loop(
-        cluster,
-        h,
+        &dep,
         &ArrivalTrace::constant(qps, scaled_ms(3_000.0)),
         one_f64_row,
     );
@@ -140,8 +138,7 @@ fn service_drift_scenario() -> String {
         .register_planned(&dp_fresh)
         .expect("register fresh");
     let mut fresh = open_loop(
-        &fresh_cluster,
-        hf,
+        &fresh_cluster.deployment(hf).expect("deployment"),
         &ArrivalTrace::constant(qps, scaled_ms(3_000.0)),
         one_f64_row,
     );
@@ -213,9 +210,9 @@ fn overload_scenario() -> String {
     let handle = ctl.spawn();
 
     // Adaptation window: the guard detects infeasibility and sheds.
+    let dep = cluster.deployment(h).expect("deployment");
     open_loop(
-        &cluster,
-        h,
+        &dep,
         &ArrivalTrace::constant(offered_qps, scaled_ms(2_000.0)),
         one_f64_row,
     );
@@ -224,8 +221,7 @@ fn overload_scenario() -> String {
     let offered_before = cluster.metrics(h).offered();
     let shed_before = cluster.metrics(h).shed_count();
     let mut measured = open_loop(
-        &cluster,
-        h,
+        &dep,
         &ArrivalTrace::constant(offered_qps, scaled_ms(4_000.0)),
         one_f64_row,
     );

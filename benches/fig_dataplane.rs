@@ -21,7 +21,7 @@ use std::time::Instant;
 
 use bench_common::{header, jnum, json_row, jstr, scaled, write_bench_json};
 use cloudflow::cloudburst::Cluster;
-use cloudflow::dataflow::compiler::{compile, OptFlags};
+use cloudflow::dataflow::compiler::compile;
 use cloudflow::dataflow::exec_local::{apply_filter, apply_union};
 use cloudflow::dataflow::operator::{CmpOp, ExecCtx, Predicate};
 use cloudflow::dataflow::rowref::{self, RowTable};
@@ -192,12 +192,13 @@ fn main() {
     // not regress vs earlier PRs' BENCH_dataplane.json entries).
     header("dataplane: synthetic_cascade end-to-end");
     let spec = pipelines::synthetic_cascade().unwrap();
-    let plan = compile(&spec.flow, &OptFlags::all()).unwrap();
+    let plan = compile(&spec.flow, &bench_common::standard_flags()).unwrap();
     let cluster = Cluster::new(None);
     let h = cluster.register(plan, 2).unwrap();
+    let dep = cluster.deployment(h).unwrap();
     let requests = scaled(240);
-    closed_loop(&cluster, h, 8, requests / 4 + 2, |i| (spec.make_input)(i));
-    let mut r = closed_loop(&cluster, h, 8, requests, |i| (spec.make_input)(i + 1000));
+    closed_loop(&dep, 8, requests / 4 + 2, |i| (spec.make_input)(i));
+    let mut r = closed_loop(&dep, 8, requests, |i| (spec.make_input)(i + 1000));
     let (med, p99, rps) = r.report();
     println!("synthetic_cascade: p50={med:.1}ms p99={p99:.1}ms {rps:.1} r/s");
     rows_json.push(json_row(&[

@@ -1,0 +1,167 @@
+//! Expression-rewrite bench: filter pushdown + projection pruning.
+//!
+//! A scalar-heavy pipeline where a *selective* filter sits above an
+//! expensive (GPU, row-count-scaled) embedding stage, and the final
+//! projection reads only scalars while a fat f32 feature vector rides
+//! along:
+//!
+//! ```text
+//! input{key, conf, feat[12288]} → embed(expensive, GPU) →
+//!     filter(conf < t) → select{score = conf*100}
+//! ```
+//!
+//! With the rewrites off, every request pays the embed stage for all
+//! rows and ships the feature vectors across both stage boundaries.
+//! With `OptFlags::all()`, the filter is pushed below the embed stage
+//! (it only reads `conf`, which embed passes through) and the unused
+//! `feat` column is pruned at the source, so the expensive stage sees
+//! ~`keep_fraction` of the rows and no vector payload ever moves.
+//!
+//! Emits `BENCH_rewrites.json` (p50/p99/throughput per configuration and
+//! the speedup) so the rewrite gains are tracked across PRs.
+
+mod bench_common;
+
+use bench_common::{header, jnum, json_row, jstr, scaled, standard_flags, write_bench_json};
+use cloudflow::cloudburst::Cluster;
+use cloudflow::dataflow::compiler::OptFlags;
+use cloudflow::dataflow::expr::{col, lit};
+use cloudflow::dataflow::operator::Func;
+use cloudflow::dataflow::table::{Column, DType, Schema, Table};
+use cloudflow::dataflow::v2::Flow;
+use cloudflow::util::rng::Rng;
+use cloudflow::util::stats::fmt_ms;
+use cloudflow::workloads::closed_loop;
+
+const FEAT_ELEMS: usize = 64 * 64 * 3;
+const ROWS_PER_REQUEST: usize = 8;
+const KEEP_THRESHOLD: f64 = 0.3; // filter keeps ~30% of rows
+
+fn flow(threshold: f64) -> Flow {
+    Flow::source(
+        "rewrites",
+        Schema::new(vec![
+            ("key", DType::Str),
+            ("conf", DType::F64),
+            ("feat", DType::F32s),
+        ]),
+    )
+    // Expensive stage: identity body, but padded to the calibrated
+    // inception service-time curve, which scales with the row count.
+    // It passes every column through, so an inspectable filter on
+    // "conf" may legally move below it.
+    .map(
+        Func::identity("embed")
+            .with_service_model("inception")
+            .with_device(cloudflow::simulation::gpu::Device::Gpu)
+            .with_batch_aware(true),
+    )
+    .unwrap()
+    .filter_expr(col("conf").lt(lit(threshold)))
+    .unwrap()
+    .select(&[("score", col("conf") * lit(100.0))])
+    .unwrap()
+}
+
+fn input(i: usize) -> Table {
+    let mut rng = Rng::new(0xEE00 + i as u64);
+    let n = ROWS_PER_REQUEST;
+    let mut keys = Vec::with_capacity(n);
+    let mut confs = Vec::with_capacity(n);
+    let mut feats = Vec::with_capacity(n);
+    for r in 0..n {
+        keys.push(format!("req{i}-{r}"));
+        confs.push(rng.f64());
+        feats.push(std::sync::Arc::new(
+            (0..FEAT_ELEMS).map(|_| rng.f64() as f32).collect::<Vec<f32>>(),
+        ));
+    }
+    let ids = (0..n as u64).map(|r| (i as u64) * 1000 + r).collect();
+    Table::from_columns(
+        Schema::new(vec![
+            ("key", DType::Str),
+            ("conf", DType::F64),
+            ("feat", DType::F32s),
+        ]),
+        ids,
+        vec![Column::Str(keys), Column::F64(confs), Column::F32s(feats)],
+    )
+    .unwrap()
+}
+
+fn run(label: &str, opts: &OptFlags, requests: usize) -> (f64, f64, f64, usize) {
+    let plan = flow(KEEP_THRESHOLD).compile(opts).unwrap();
+    let stages = plan.n_stages();
+    let cluster = Cluster::new(None);
+    let h = cluster.register(plan, 2).unwrap();
+    let dep = cluster.deployment(h).unwrap();
+    closed_loop(&dep, 4, requests / 4 + 2, input);
+    let mut r = closed_loop(&dep, 4, requests, |i| input(i + 1000));
+    let (med, p99, rps) = r.report();
+    println!(
+        "{label:<28} stages={stages:<2} p50={:<9} p99={:<9} {rps:.1} req/s",
+        fmt_ms(med),
+        fmt_ms(p99)
+    );
+    (med, p99, rps, stages)
+}
+
+fn main() {
+    header("rewrites: filter pushdown + projection pruning");
+    let requests = scaled(160);
+
+    // Sanity: the rewritten plan must produce identical results.
+    {
+        use cloudflow::dataflow::compiler::rewrite_flow;
+        use cloudflow::dataflow::exec_local;
+        use cloudflow::dataflow::operator::ExecCtx;
+        let fl = flow(KEEP_THRESHOLD).into_dataflow().unwrap();
+        let rewritten = rewrite_flow(&fl, &standard_flags()).unwrap();
+        let ctx = ExecCtx::local();
+        let a = exec_local::execute(&fl, input(7), &ctx).unwrap();
+        let b = exec_local::execute(&rewritten, input(7), &ctx).unwrap();
+        assert_eq!(a.encode(), b.encode(), "rewrites changed results");
+        println!("rewritten plan result-equivalent: ok");
+    }
+
+    let (b_med, b_p99, b_rps, _) =
+        run("baseline (rewrites off)", &standard_flags().without_rewrites(), requests);
+    let (p_med, p_p99, p_rps, _) =
+        run("pushdown only", &standard_flags().without_pruning(), requests);
+    let (r_med, r_p99, r_rps, _) = run("pushdown + pruning", &standard_flags(), requests);
+
+    println!(
+        "\nrewrites vs baseline: p50 {:.2}x  p99 {:.2}x  throughput {:.2}x",
+        b_med / r_med,
+        b_p99 / r_p99,
+        r_rps / b_rps
+    );
+
+    let rows = vec![
+        json_row(&[
+            ("config", jstr("baseline_no_rewrites")),
+            ("p50_ms", jnum(b_med)),
+            ("p99_ms", jnum(b_p99)),
+            ("throughput_rps", jnum(b_rps)),
+        ]),
+        json_row(&[
+            ("config", jstr("pushdown_only")),
+            ("p50_ms", jnum(p_med)),
+            ("p99_ms", jnum(p_p99)),
+            ("throughput_rps", jnum(p_rps)),
+        ]),
+        json_row(&[
+            ("config", jstr("pushdown_and_pruning")),
+            ("p50_ms", jnum(r_med)),
+            ("p99_ms", jnum(r_p99)),
+            ("throughput_rps", jnum(r_rps)),
+        ]),
+        json_row(&[
+            ("config", jstr("speedup")),
+            ("p50_x", jnum(b_med / r_med)),
+            ("p99_x", jnum(b_p99 / r_p99)),
+            ("throughput_x", jnum(r_rps / b_rps)),
+        ]),
+    ];
+    write_bench_json("rewrites", &rows);
+}

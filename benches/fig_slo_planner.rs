@@ -17,7 +17,7 @@ mod bench_common;
 
 use bench_common::{header, jbool, jnum, json_row, jstr, scaled, write_bench_json};
 use cloudflow::cloudburst::Cluster;
-use cloudflow::dataflow::compiler::{compile, OptFlags};
+use cloudflow::dataflow::compiler::compile;
 use cloudflow::planner::{plan_for_slo, PlannerCtx, Slo};
 use cloudflow::util::stats::fmt_ms;
 use cloudflow::workloads::closed_loop;
@@ -90,7 +90,7 @@ fn main() {
         let (d_med, d_p99, d_rps, d_replicas, d_rs) = run(
             &(case.build)(),
             |c, s| {
-                let plan = compile(&s.flow, &OptFlags::all())?;
+                let plan = compile(&s.flow, &bench_common::standard_flags())?;
                 c.set_autoscale(true);
                 c.register(plan, 2)
             },
@@ -152,8 +152,9 @@ fn run(
         setup(&cluster.kvs());
     }
     let h = deploy(&cluster, spec).expect("deploy");
-    closed_loop(&cluster, h, clients, requests / 4 + 2, |i| (spec.make_input)(i));
-    let mut r = closed_loop(&cluster, h, clients, requests, |i| {
+    let dep = cluster.deployment(h).expect("deployment");
+    closed_loop(&dep, clients, requests / 4 + 2, |i| (spec.make_input)(i));
+    let mut r = closed_loop(&dep, clients, requests, |i| {
         (spec.make_input)(i + 1000)
     });
     let (med, p99, rps) = r.report();

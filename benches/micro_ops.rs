@@ -9,11 +9,12 @@ use std::time::Instant;
 use bench_common::header;
 use cloudflow::anna::{Cache, Directory, KvsClient, Store};
 use cloudflow::cloudburst::Cluster;
-use cloudflow::dataflow::compiler::{compile, OptFlags};
+use cloudflow::dataflow::compiler::OptFlags;
 use cloudflow::dataflow::operator::Func;
 use cloudflow::dataflow::table::{DType, Schema, Table, Value};
-use cloudflow::dataflow::Dataflow;
+use cloudflow::dataflow::v2::Flow;
 use cloudflow::net::NodeId;
+use cloudflow::serve::Deployment;
 use cloudflow::util::rng::Rng;
 
 fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) -> f64 {
@@ -87,20 +88,21 @@ fn main() {
     // End-to-end no-op request: everything but models and modeled delays.
     header("micro: end-to-end no-op request overhead");
     std::env::set_var("CLOUDFLOW_TIME_SCALE", "1.0");
-    let mut fl = Dataflow::new("noop", Schema::new(vec![("x", DType::F64)]));
-    let a = fl.map(fl.input(), Func::identity("a")).unwrap();
-    fl.set_output(a).unwrap();
-    let cluster = Cluster::new(None);
-    let h = cluster
-        .register(compile(&fl, &OptFlags::none().with_fusion()).unwrap(), 1)
+    let plan = Flow::source("noop", Schema::new(vec![("x", DType::F64)]))
+        .map(Func::identity("a"))
+        .unwrap()
+        .compile(&OptFlags::none().with_fusion())
         .unwrap();
+    let cluster = Cluster::new(None);
+    let h = cluster.register(plan, 1).unwrap();
+    let dep = cluster.deployment(h).unwrap();
     let input = || {
         let mut t = Table::new(Schema::new(vec![("x", DType::F64)]));
         t.push_fresh(vec![Value::F64(0.0)]).unwrap();
         t
     };
     bench("cluster: no-op request round trip", 2_000, || {
-        cluster.execute(h, input()).unwrap().result().unwrap();
+        dep.call(input()).unwrap();
     });
     println!("(includes two modeled client hops of ~0.5ms each)");
 }

@@ -29,11 +29,11 @@ fn main() -> anyhow::Result<()> {
     };
     let handle = AdaptiveController::new(&cluster, h, &dp, opts)?.spawn();
 
+    let dep = cluster.deployment(h)?;
     let input = sc.spec.make_input.clone();
     println!("\nphase 1: calibrated traffic at 40 qps ...");
     let calm = open_loop(
-        &cluster,
-        h,
+        &dep,
         &ArrivalTrace::constant(40.0, 2_500.0),
         |i| (input)(i),
     );
@@ -46,14 +46,12 @@ fn main() -> anyhow::Result<()> {
     println!("\nphase 2: 'heavy' stage drifts 3x slower; controller adapts ...");
     sc.knob.set(3.0);
     open_loop(
-        &cluster,
-        h,
+        &dep,
         &ArrivalTrace::constant(40.0, 4_000.0),
         |i| (input)(i + 100_000),
     );
     let tail = open_loop(
-        &cluster,
-        h,
+        &dep,
         &ArrivalTrace::constant(40.0, 3_000.0),
         |i| (input)(i + 200_000),
     );

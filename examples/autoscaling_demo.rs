@@ -6,23 +6,24 @@
 //! (set CLOUDFLOW_TIME_SCALE=0.25 for a quicker run)
 
 use cloudflow::cloudburst::Cluster;
-use cloudflow::dataflow::compiler::{compile, OptFlags};
+use cloudflow::dataflow::compiler::OptFlags;
 use cloudflow::dataflow::operator::{Func, SleepDist};
 use cloudflow::dataflow::table::{DType, Schema, Table, Value};
-use cloudflow::dataflow::Dataflow;
+use cloudflow::dataflow::v2::Flow;
 use cloudflow::workloads::loadgen::timed_phase;
 
 fn main() -> anyhow::Result<()> {
-    let mut fl = Dataflow::new("autoscale", Schema::new(vec![("x", DType::F64)]));
-    let fast = fl.map(fl.input(), Func::sleep("fast", SleepDist::ConstMs(2.0)))?;
-    let slow = fl.map(fast, Func::sleep("slow", SleepDist::ConstMs(120.0)))?;
-    fl.set_output(slow)?;
+    let plan = Flow::source("autoscale", Schema::new(vec![("x", DType::F64)]))
+        .map(Func::sleep("fast", SleepDist::ConstMs(2.0)))?
+        .map(Func::sleep("slow", SleepDist::ConstMs(120.0)))?
+        .compile(&OptFlags::none())?;
 
     let cluster = Cluster::new(None);
     cluster.set_autoscale(true);
-    let h = cluster.register(compile(&fl, &OptFlags::none())?, 1)?;
+    let h = cluster.register(plan, 1)?;
     cluster.scale_to(h, "slow", 3)?;
     cluster.metrics(h).enable_timeline(1000.0, 90_000.0);
+    let dep = cluster.deployment(h)?;
 
     let input = |_: usize| {
         let mut t = Table::new(Schema::new(vec![("x", DType::F64)]));
@@ -39,15 +40,15 @@ fn main() -> anyhow::Result<()> {
 
     println!("phase 1: 4 clients, 15s");
     show("  before");
-    timed_phase(&cluster, h, 4, 15_000.0, input);
+    timed_phase(&dep, 4, 15_000.0, input);
     show("  after steady phase");
 
     println!("phase 2: 4x spike (16 clients), 45s");
-    timed_phase(&cluster, h, 16, 45_000.0, input);
+    timed_phase(&dep, 16, 45_000.0, input);
     show("  after spike");
 
     println!("phase 3: spike continues, 30s (slack appears)");
-    timed_phase(&cluster, h, 16, 30_000.0, input);
+    timed_phase(&dep, 16, 30_000.0, input);
     show("  final");
 
     println!("\ntimeline (per second): t, median latency ms, throughput rps");

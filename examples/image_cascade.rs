@@ -40,9 +40,10 @@ fn main() -> anyhow::Result<()> {
         let plan = compile(&spec.flow, &opts)?;
         let stages = plan.n_stages();
         let h = cluster.register(plan, replicas)?;
+        let dep = cluster.deployment(h)?;
         // Warm-up lets compiles + caches settle (paper §5.2.2).
-        closed_loop(&cluster, h, clients, warmup, |i| (spec.make_input)(i));
-        let mut r = closed_loop(&cluster, h, clients, requests, |i| (spec.make_input)(i + warmup));
+        closed_loop(&dep, clients, warmup, |i| (spec.make_input)(i));
+        let mut r = closed_loop(&dep, clients, requests, |i| (spec.make_input)(i + warmup));
         let (med, p99, rps) = r.report();
         println!(
             "{name:<46} stages={stages:<2} median={:<8} p99={:<8} throughput={rps:.1} req/s ({} ok, {} err)",

@@ -28,8 +28,9 @@ fn main() -> anyhow::Result<()> {
     ] {
         let cluster = Cluster::new(Some(infer.clone()));
         let h = cluster.register(compile(&spec.flow, &opts)?, 2)?;
-        closed_loop(&cluster, h, 5, 10, |i| (spec.make_input)(i));
-        let mut r = closed_loop(&cluster, h, 5, n, |i| (spec.make_input)(i + 10));
+        let dep = cluster.deployment(h)?;
+        closed_loop(&dep, 5, 10, |i| (spec.make_input)(i));
+        let mut r = closed_loop(&dep, 5, n, |i| (spec.make_input)(i + 10));
         let (med, p99, rps) = r.report();
         println!(
             "{name:<28} median={:<8} p99={:<8} throughput={rps:.1} req/s",

@@ -10,6 +10,7 @@
 use cloudflow::cloudburst::Cluster;
 use cloudflow::dataflow::compiler::{compile, OptFlags};
 use cloudflow::runtime::InferenceService;
+use cloudflow::serve::Deployment;
 use cloudflow::workloads::pipelines;
 
 fn main() -> anyhow::Result<()> {
@@ -18,7 +19,7 @@ fn main() -> anyhow::Result<()> {
     let infer = InferenceService::start_default()?;
 
     // 2. Author the dataflow (see pipelines::ensemble for the ~15 lines of
-    //    builder code that mirror the paper's Figure 1 snippet).
+    //    fluent v2 builder code that mirror the paper's Figure 1 snippet).
     let spec = pipelines::ensemble()?;
     println!("flow: {} operators", spec.flow.nodes().len() - 1);
 
@@ -28,16 +29,16 @@ fn main() -> anyhow::Result<()> {
     let cluster = Cluster::new(Some(infer));
     let handle = cluster.register(plan, 2)?;
 
-    // 4. Execute requests; `execute` returns a future.
+    // 4. Serve through the unified Deployment facade.
+    let dep = cluster.deployment(handle)?;
     for i in 0..5 {
-        let fut = cluster.execute(handle, (spec.make_input)(i))?;
-        let out = fut.result()?;
+        let out = dep.call((spec.make_input)(i))?;
         let pred = out.value(0, "pred")?.as_i64()?;
         let conf = out.value(0, "conf")?.as_f64()?;
         println!("request {i}: ensemble prediction class={pred} confidence={conf:.3}");
     }
 
-    let (med, p99) = cluster.metrics(handle).report();
+    let (med, p99) = dep.metrics().report();
     println!("latency: median={med:.0}ms p99={p99:.0}ms");
     Ok(())
 }

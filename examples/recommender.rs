@@ -10,6 +10,7 @@ use cloudflow::cloudburst::Cluster;
 use cloudflow::dataflow::compiler::{compile, OptFlags};
 use cloudflow::runtime::InferenceService;
 use cloudflow::util::stats::fmt_ms;
+use cloudflow::serve::Deployment;
 use cloudflow::workloads::pipelines::{self, RecsysScale};
 use cloudflow::workloads::closed_loop;
 
@@ -30,8 +31,9 @@ fn main() -> anyhow::Result<()> {
             setup(&cluster.kvs());
         }
         let h = cluster.register(compile(&spec.flow, &opts)?, 4)?;
-        closed_loop(&cluster, h, 4, 16, |i| (spec.make_input)(i)); // cache warm-up
-        let mut r = closed_loop(&cluster, h, 4, n, |i| (spec.make_input)(i + 16));
+        let dep = cluster.deployment(h)?;
+        closed_loop(&dep, 4, 16, |i| (spec.make_input)(i)); // cache warm-up
+        let mut r = closed_loop(&dep, 4, n, |i| (spec.make_input)(i + 16));
         let (med, p99, rps) = r.report();
         println!(
             "{name:<32} median={:<8} p99={:<8} throughput={rps:.1} req/s",
@@ -47,7 +49,7 @@ fn main() -> anyhow::Result<()> {
         setup(&cluster.kvs());
     }
     let h = cluster.register(compile(&spec.flow, &OptFlags::all())?, 2)?;
-    let out = cluster.execute(h, (spec.make_input)(1))?.result()?;
+    let out = cluster.deployment(h)?.call((spec.make_input)(1))?;
     println!(
         "sample top-10 products: {:?}",
         out.value(0, "top_idx")?.as_i32s()?

@@ -34,8 +34,12 @@ fn main() -> anyhow::Result<()> {
     //    autoscaler floored/ceilinged by the plan.
     let cluster = Cluster::new(None);
     let h = cluster.register_planned(&dp)?;
+    // 5. Serve through the unified Deployment facade (same interface the
+    //    local oracle and the baselines expose).
+    use cloudflow::serve::Deployment;
+    let dep = cluster.deployment(h)?;
     for i in 0..5 {
-        let out = cluster.execute(h, (spec.make_input)(i))?.result()?;
+        let out = dep.call((spec.make_input)(i))?;
         println!(
             "request {i}: {} row(s), conf={:.3}",
             out.len(),

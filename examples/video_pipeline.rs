@@ -24,9 +24,10 @@ fn main() -> anyhow::Result<()> {
     let cluster = Cluster::new(Some(infer));
     let h = cluster.register(plan, 2)?;
 
+    let dep = cluster.deployment(h)?;
     let clips = std::env::var("VIDEO_CLIPS").map(|v| v.parse().unwrap()).unwrap_or(30);
-    closed_loop(&cluster, h, 4, 6, |i| (spec.make_input)(i)); // warm-up
-    let mut r = closed_loop(&cluster, h, 4, clips, |i| (spec.make_input)(i + 6));
+    closed_loop(&dep, 4, 6, |i| (spec.make_input)(i)); // warm-up
+    let mut r = closed_loop(&dep, 4, clips, |i| (spec.make_input)(i + 6));
     let (med, p99, rps) = r.report();
     println!(
         "{clips} clips x 30 frames: median={} p99={} throughput={rps:.1} clips/s",
@@ -38,7 +39,8 @@ fn main() -> anyhow::Result<()> {
     );
 
     // Show one output: what the pipeline saw in the clip.
-    let out = cluster.execute(h, (spec.make_input)(999))?.result()?;
+    use cloudflow::serve::Deployment;
+    let out = dep.call((spec.make_input)(999))?;
     println!("sample clip contents:");
     for i in 0..out.len() {
         println!(

@@ -8,15 +8,17 @@ use std::time::Duration;
 use anyhow::{bail, Context, Result};
 
 use crate::anna::{Cache, Directory, KvsClient, Store};
+use crate::cloudburst::{ExecFuture, PlanMetrics};
 use crate::config;
 use crate::dataflow::compiler::{compile, OptFlags, PlanStage, StageInput};
 use crate::dataflow::exec_local::{apply_op, apply_union};
 use crate::dataflow::operator::ExecCtx;
-use crate::dataflow::table::Table;
+use crate::dataflow::table::{Schema, Table};
 use crate::dataflow::Dataflow;
 use crate::net::{Fabric, NodeId};
 use crate::runtime::InferClient;
-use crate::simulation::clock;
+use crate::serve::{CallOpts, Deployment, ServeError};
+use crate::simulation::clock::{self, Clock};
 use crate::simulation::gpu::Device;
 use crate::util::rng::Rng;
 
@@ -88,6 +90,8 @@ struct Endpoint {
 /// A deployed baseline pipeline.
 pub struct Baseline {
     pub kind: BaselineKind,
+    name: String,
+    input_schema: Schema,
     stages: Vec<PlanStage>,
     output: usize,
     endpoints: Vec<Arc<Endpoint>>,
@@ -97,6 +101,8 @@ pub struct Baseline {
     infer: Option<InferClient>,
     next_node: AtomicUsize,
     rng: Mutex<Rng>,
+    metrics: Arc<PlanMetrics>,
+    clock: Clock,
 }
 
 impl Baseline {
@@ -121,6 +127,8 @@ impl Baseline {
         let seg = plan.segments.pop().context("baseline plan must be one segment")?;
         let b = Arc::new(Baseline {
             kind,
+            name: flow.name.clone(),
+            input_schema: flow.input_schema().clone(),
             endpoints: seg
                 .stages
                 .iter()
@@ -140,6 +148,8 @@ impl Baseline {
             infer,
             next_node: AtomicUsize::new(1000), // distinct from driver
             rng: Mutex::new(Rng::new(0xBA5E)),
+            metrics: Arc::new(PlanMetrics::default()),
+            clock: Clock::new(),
         });
         for i in 0..b.stages.len() {
             b.add_worker(i);
@@ -252,6 +262,17 @@ impl Baseline {
     /// Drive one request through the pipeline from the proxy (the paper's
     /// "long-lived driver program"); parallel branches run concurrently.
     pub fn execute(self: &Arc<Self>, input: Table) -> Result<Table> {
+        self.metrics.note_offered();
+        let submitted = self.clock.now_ms();
+        let out = self.execute_inner(input);
+        if out.is_ok() {
+            let now = self.clock.now_ms();
+            self.metrics.record(now, now - submitted);
+        }
+        out
+    }
+
+    fn execute_inner(self: &Arc<Self>, input: Table) -> Result<Table> {
         let n = self.stages.len();
         let results: Vec<Mutex<Option<Table>>> = (0..n).map(|_| Mutex::new(None)).collect();
         let mut done = vec![false; n];
@@ -301,6 +322,34 @@ impl Baseline {
 
     pub fn stage_labels(&self) -> Vec<String> {
         self.stages.iter().map(|s| s.name.clone()).collect()
+    }
+}
+
+/// The microservice baselines behind the unified serving facade: the same
+/// `Deployment` interface as a Cloudflow cluster, so benches drive both
+/// through identical code paths (the paper's apples-to-apples setup).
+impl Deployment for Arc<Baseline> {
+    fn label(&self) -> String {
+        format!("{}:{}", self.kind.label(), self.name)
+    }
+
+    fn call_async(&self, input: Table, _opts: &CallOpts) -> Result<ExecFuture, ServeError> {
+        if input.schema() != &self.input_schema {
+            return Err(ServeError::TypeMismatch(format!(
+                "baseline {:?} expects {}, got {}",
+                self.name,
+                self.input_schema,
+                input.schema()
+            )));
+        }
+        let me = self.clone();
+        Ok(ExecFuture::spawn(self.clock.now_ms(), move || {
+            me.execute(input)
+        }))
+    }
+
+    fn metrics(&self) -> Arc<PlanMetrics> {
+        self.metrics.clone()
     }
 }
 

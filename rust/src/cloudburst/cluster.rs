@@ -66,6 +66,39 @@ impl ExecFuture {
             Err(e) => bail!("request timed out: {e}"),
         }
     }
+
+    /// Block until the result arrives or `virtual_ms` of virtual time
+    /// elapse; `Ok(None)` means the deadline passed (the request keeps
+    /// executing — only the wait is abandoned).
+    pub fn result_within(self, virtual_ms: f64) -> Result<Option<Table>> {
+        let real = std::time::Duration::from_secs_f64(
+            (virtual_ms * crate::config::global().time_scale / 1e3).max(0.0),
+        );
+        match self.rx.recv_timeout(real) {
+            Ok(r) => r.map(Some),
+            Err(mpsc::RecvTimeoutError::Timeout) => Ok(None),
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                bail!("cluster dropped the request (shutdown?)")
+            }
+        }
+    }
+
+    /// A future backed by a fresh thread running `f` (how non-cluster
+    /// [`Deployment`](crate::serve::Deployment)s — the local oracle, the
+    /// baselines — produce the same future type the cluster returns).
+    pub fn spawn(
+        submitted_ms: f64,
+        f: impl FnOnce() -> Result<Table> + Send + 'static,
+    ) -> ExecFuture {
+        let (tx, rx) = mpsc::channel();
+        std::thread::Builder::new()
+            .name("serve-call".into())
+            .spawn(move || {
+                let _ = tx.send(f());
+            })
+            .expect("spawning serve thread");
+        ExecFuture { rx, submitted_ms }
+    }
 }
 
 /// Per-request execution state: gather buffers + completion channel.
@@ -117,11 +150,26 @@ pub struct RegisteredPlan {
 impl RegisteredPlan {
     /// Deterministic admission decision for one request id.
     fn admits(&self, req_id: u64) -> bool {
+        self.admits_with(req_id, crate::serve::Priority::Normal)
+    }
+
+    /// Priority-aware admission: `High` bypasses shedding, `Low` sheds at
+    /// twice the prevailing rate (overload drains the least important
+    /// traffic first).  Deterministic in the request id, like `admits`.
+    fn admits_with(&self, req_id: u64, priority: crate::serve::Priority) -> bool {
         let ppm = self.admit_ppm.load(Ordering::Relaxed);
         if ppm >= ADMIT_ALL_PPM {
             return true;
         }
-        (rng::Rng::new(req_id).next_u64() % ADMIT_ALL_PPM as u64) < ppm as u64
+        let effective = match priority {
+            crate::serve::Priority::High => return true,
+            crate::serve::Priority::Normal => ppm,
+            crate::serve::Priority::Low => {
+                // 2*ppm - ADMIT_ALL_PPM, floored at 0: twice the shed rate.
+                ppm.saturating_sub(ADMIT_ALL_PPM - ppm)
+            }
+        };
+        (rng::Rng::new(req_id).next_u64() % ADMIT_ALL_PPM as u64) < effective as u64
     }
 
     pub fn total_replicas(&self) -> usize {
@@ -560,6 +608,112 @@ impl ClusterInner {
     pub fn n_nodes(&self) -> usize {
         self.nodes.lock().unwrap().n_nodes()
     }
+
+    /// Start an (already admitted) request: seed segment 0 and return the
+    /// completion future.
+    pub(crate) fn start_request(
+        self: &Arc<Self>,
+        plan: &Arc<RegisteredPlan>,
+        id: u64,
+        input: Table,
+    ) -> Result<ExecFuture> {
+        let (tx, rx) = mpsc::channel();
+        let submitted_ms = self.clock.now_ms();
+        let req = Arc::new(RequestCtx {
+            id,
+            plan_idx: plan.idx,
+            submitted_ms,
+            gather: Mutex::new(HashMap::new()),
+            done: Mutex::new(Some(tx)),
+        });
+        // Seed segment 0: every stage reading from Source. Stages headed
+        // by a column-keyed lookup get a locality hint resolved directly
+        // from the input table (entry-level dynamic dispatch).  The input
+        // is Arc'd once and shared across all source-consuming stages.
+        let input = Arc::new(input);
+        let seg0 = &plan.plan.segments[0];
+        let mut seeded = false;
+        for (si, st) in seg0.stages.iter().enumerate() {
+            let hint: Option<String> = st.dispatch_lookup_col().and_then(|c| {
+                if input.is_empty() {
+                    None
+                } else {
+                    input.value(0, c).ok().and_then(|v| v.as_str().ok().map(String::from))
+                }
+            });
+            for (slot, inp) in st.inputs.iter().enumerate() {
+                if *inp == StageInput::Source {
+                    self.deliver(
+                        plan,
+                        &req,
+                        0,
+                        si,
+                        slot,
+                        TableMsg { table: input.clone(), from: NodeId::CLIENT },
+                        hint.as_deref(),
+                    );
+                    seeded = true;
+                }
+            }
+        }
+        if !seeded {
+            bail!("plan has no source-consuming stage");
+        }
+        Ok(ExecFuture { rx, submitted_ms })
+    }
+}
+
+/// A registered plan behind the unified serving facade: the
+/// [`Deployment`](crate::serve::Deployment) implementation for Cloudburst
+/// clusters — plain registrations, planner-tuned
+/// ([`Cluster::register_planned`]) and adaptive-controlled plans alike.
+/// Holds only the shared cluster state, so it is `'static` and can be
+/// handed to workload drivers outliving the borrow of [`Cluster`].
+pub struct ClusterDeployment {
+    inner: Arc<ClusterInner>,
+    h: DagHandle,
+}
+
+impl crate::serve::Deployment for ClusterDeployment {
+    fn label(&self) -> String {
+        self.inner
+            .plan(self.h)
+            .map(|p| format!("cluster:{}", p.plan.name))
+            .unwrap_or_else(|_| "cluster:<gone>".into())
+    }
+
+    fn call_async(
+        &self,
+        input: Table,
+        opts: &crate::serve::CallOpts,
+    ) -> std::result::Result<ExecFuture, crate::serve::ServeError> {
+        use crate::serve::ServeError;
+        let plan = self.inner.plan(self.h).map_err(ServeError::internal)?;
+        if input.schema() != &plan.plan.input_schema {
+            return Err(ServeError::TypeMismatch(format!(
+                "plan {:?} expects {}, got {}",
+                plan.plan.name,
+                plan.plan.input_schema,
+                input.schema()
+            )));
+        }
+        plan.metrics.note_offered();
+        let id = self.inner.next_req.fetch_add(1, Ordering::Relaxed);
+        if !plan.admits_with(id, opts.priority) {
+            plan.metrics.note_shed();
+            return Err(ServeError::Shed);
+        }
+        self.inner
+            .start_request(&plan, id, input)
+            .map_err(ServeError::internal)
+    }
+
+    fn metrics(&self) -> Arc<PlanMetrics> {
+        self.inner
+            .plan(self.h)
+            .map(|p| p.metrics.clone())
+            .unwrap_or_default()
+    }
 }
 
 /// Public cluster API.
@@ -717,49 +871,17 @@ impl Cluster {
         id: u64,
         input: Table,
     ) -> Result<ExecFuture> {
-        let (tx, rx) = mpsc::channel();
-        let submitted_ms = self.inner.clock.now_ms();
-        let req = Arc::new(RequestCtx {
-            id,
-            plan_idx: plan.idx,
-            submitted_ms,
-            gather: Mutex::new(HashMap::new()),
-            done: Mutex::new(Some(tx)),
-        });
-        // Seed segment 0: every stage reading from Source. Stages headed
-        // by a column-keyed lookup get a locality hint resolved directly
-        // from the input table (entry-level dynamic dispatch).  The input
-        // is Arc'd once and shared across all source-consuming stages.
-        let input = Arc::new(input);
-        let seg0 = &plan.plan.segments[0];
-        let mut seeded = false;
-        for (si, st) in seg0.stages.iter().enumerate() {
-            let hint: Option<String> = st.dispatch_lookup_col().and_then(|c| {
-                if input.is_empty() {
-                    None
-                } else {
-                    input.value(0, c).ok().and_then(|v| v.as_str().ok().map(String::from))
-                }
-            });
-            for (slot, inp) in st.inputs.iter().enumerate() {
-                if *inp == StageInput::Source {
-                    self.inner.deliver(
-                        plan,
-                        &req,
-                        0,
-                        si,
-                        slot,
-                        TableMsg { table: input.clone(), from: NodeId::CLIENT },
-                        hint.as_deref(),
-                    );
-                    seeded = true;
-                }
-            }
-        }
-        if !seeded {
-            bail!("plan has no source-consuming stage");
-        }
-        Ok(ExecFuture { rx, submitted_ms })
+        self.inner.start_request(plan, id, input)
+    }
+
+    /// The unified serving facade for a registered plan: admission
+    /// control, schema typechecking, priorities and deadlines via
+    /// [`Deployment`](crate::serve::Deployment).  The returned handle is
+    /// `'static` (it shares the cluster state), so it can be passed to
+    /// workload drivers directly.
+    pub fn deployment(&self, h: DagHandle) -> Result<ClusterDeployment> {
+        self.inner.plan(h)?; // fail fast on a dangling handle
+        Ok(ClusterDeployment { inner: self.inner.clone(), h })
     }
 
     /// Direct (client-side) KVS access for dataset setup.

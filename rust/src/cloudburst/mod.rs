@@ -17,6 +17,6 @@ pub mod cluster;
 pub mod executor;
 pub mod metrics;
 
-pub use cluster::{Admit, Cluster, DagHandle, ExecFuture, StageProvision};
+pub use cluster::{Admit, Cluster, ClusterDeployment, DagHandle, ExecFuture, StageProvision};
 pub use executor::StageTelemetry;
 pub use metrics::PlanMetrics;

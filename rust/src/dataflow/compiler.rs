@@ -22,11 +22,17 @@ use std::collections::HashMap;
 
 use crate::simulation::gpu::Device;
 
-use super::flow::Dataflow;
-use super::operator::{Arity, LookupKey, OpKind};
+use super::expr::Expr;
+use super::flow::{Dataflow, NodeRef};
+use super::operator::{AggFn, Arity, Func, FuncBody, LookupKey, OpKind};
 
 /// Optimization selection (paper §4: the user only selects *which*
 /// optimizations to enable; application is automatic).
+///
+/// `Default` is [`OptFlags::all`] — the standard optimized configuration;
+/// use the `without_*` toggles to switch individual rewrites off
+/// (`OptFlags::all().without_fusion()`), or start from [`OptFlags::none`]
+/// and opt in with the `with_*` builders.
 #[derive(Debug, Clone)]
 pub struct OptFlags {
     /// Fuse chains of single-input operators into one stage.
@@ -41,6 +47,21 @@ pub struct OptFlags {
     pub locality_dispatch: bool,
     /// Enable batched dequeue for batch-aware stages.
     pub batching: bool,
+    /// Push inspectable filters (threshold / `Expr` predicates) below
+    /// upstream maps and lookups that do not produce the filtered
+    /// columns, so selective filters run before expensive stages.
+    /// Closure predicates and closure maps are opaque and left in place.
+    pub filter_pushdown: bool,
+    /// Insert projections that drop columns no downstream operator reads,
+    /// so unused payloads never cross a stage boundary.  Closure ops
+    /// conservatively count as reading everything.
+    pub projection_pruning: bool,
+}
+
+impl Default for OptFlags {
+    fn default() -> Self {
+        OptFlags::all()
+    }
 }
 
 impl OptFlags {
@@ -52,14 +73,19 @@ impl OptFlags {
             competitive: HashMap::new(),
             locality_dispatch: false,
             batching: false,
+            filter_pushdown: false,
+            projection_pruning: false,
         }
     }
 
-    /// The paper's standard optimized configuration.
+    /// The standard optimized configuration: fusion, locality dispatch,
+    /// batching, filter pushdown, and projection pruning.
     pub fn all() -> Self {
         OptFlags { fusion: true, ..OptFlags::none() }
             .with_locality()
             .with_batching()
+            .with_pushdown()
+            .with_pruning()
     }
 
     pub fn with_fusion(mut self) -> Self {
@@ -82,9 +108,52 @@ impl OptFlags {
         self
     }
 
+    pub fn with_pushdown(mut self) -> Self {
+        self.filter_pushdown = true;
+        self
+    }
+
+    pub fn with_pruning(mut self) -> Self {
+        self.projection_pruning = true;
+        self
+    }
+
     pub fn with_competitive(mut self, func_name: &str, replicas: usize) -> Self {
         self.competitive.insert(func_name.to_string(), replicas);
         self
+    }
+
+    // Negative toggles: carve exceptions out of `OptFlags::all()`.
+
+    pub fn without_fusion(mut self) -> Self {
+        self.fusion = false;
+        self
+    }
+
+    pub fn without_locality(mut self) -> Self {
+        self.locality_dispatch = false;
+        self
+    }
+
+    pub fn without_batching(mut self) -> Self {
+        self.batching = false;
+        self
+    }
+
+    pub fn without_pushdown(mut self) -> Self {
+        self.filter_pushdown = false;
+        self
+    }
+
+    pub fn without_pruning(mut self) -> Self {
+        self.projection_pruning = false;
+        self
+    }
+
+    /// Both expression rewrites off (the pre-rewrite data path, used by
+    /// benches as the comparison baseline).
+    pub fn without_rewrites(self) -> Self {
+        self.without_pushdown().without_pruning()
     }
 }
 
@@ -158,6 +227,9 @@ pub struct Plan {
     pub name: String,
     pub segments: Vec<Segment>,
     pub opts: OptFlags,
+    /// Schema of the request table this plan accepts (the serving facade
+    /// typechecks every call against it).
+    pub input_schema: super::table::Schema,
 }
 
 impl Plan {
@@ -187,7 +259,7 @@ impl Plan {
 /// Compile a dataflow under the given optimization flags.
 pub fn compile(flow: &Dataflow, opts: &OptFlags) -> Result<Plan> {
     flow.validate()?;
-    let flow = apply_competitive(flow, &opts.competitive)?;
+    let flow = rewrite_flow(flow, opts)?;
 
     // 1:1 proto-stages from flow nodes (skipping Input).
     let mut stages: Vec<PlanStage> = Vec::new();
@@ -248,7 +320,23 @@ pub fn compile(flow: &Dataflow, opts: &OptFlags) -> Result<Plan> {
         vec![Segment { stages, output, dispatch_key: None }]
     };
 
-    Ok(Plan { name: flow.name.clone(), segments, opts: opts.clone() })
+    Ok(Plan {
+        name: flow.name.clone(),
+        segments,
+        opts: opts.clone(),
+        input_schema: flow.input_schema().clone(),
+    })
+}
+
+/// Apply all flow-level (dataflow→dataflow) rewrites selected by `opts`:
+/// competitive replication, filter pushdown, projection pruning.  Exposed
+/// so equivalence tests can execute the rewritten flow through the local
+/// oracle and compare against the original.
+pub fn rewrite_flow(flow: &Dataflow, opts: &OptFlags) -> Result<Dataflow> {
+    let flow = apply_competitive(flow, &opts.competitive)?;
+    let flow = if opts.filter_pushdown { push_filters(&flow)? } else { flow };
+    let flow = if opts.projection_pruning { prune_projections(&flow)? } else { flow };
+    Ok(flow)
 }
 
 /// Planner-driven compilation (the SLO front door): profile the flow,
@@ -338,6 +426,287 @@ fn apply_competitive(flow: &Dataflow, competitive: &HashMap<String, usize>) -> R
     }
     let old_out = flow.output().context("no output")?;
     out.set_output(remap[&old_out.0])?;
+    Ok(out)
+}
+
+/// Re-add one operator to a flow under construction (shared plumbing for
+/// the flow-level rewrite passes, which rebuild through the builder API
+/// so every typecheck re-runs on the rewritten graph).
+fn add_op(out: &mut Dataflow, op: &OpKind, parents: &[NodeRef]) -> Result<NodeRef> {
+    Ok(match op {
+        OpKind::Map(f) => out.map(parents[0], f.clone())?,
+        OpKind::Filter(p) => out.filter(parents[0], p.clone())?,
+        OpKind::Groupby { column } => out.groupby(parents[0], column)?,
+        OpKind::Agg { agg, column } => out.agg(parents[0], *agg, column)?,
+        OpKind::Lookup { key, as_col } => out.lookup(parents[0], key.clone(), as_col)?,
+        OpKind::Join { key, how } => {
+            out.join(parents[0], parents[1], key.as_deref(), *how)?
+        }
+        OpKind::Union => out.union(parents)?,
+        OpKind::Anyof => out.anyof(parents)?,
+        OpKind::Input => bail!("cannot re-add the Input node"),
+        OpKind::Fuse(_) => bail!("fuse node before lowering"),
+    })
+}
+
+// ---------------------------------------------------------------------
+// Filter pushdown (flow-level rewrite)
+// ---------------------------------------------------------------------
+
+/// Push inspectable filters below upstream maps/lookups that do not
+/// produce the filtered columns, to fixpoint.  A selective filter then
+/// runs *before* an expensive stage, shrinking both its input row count
+/// and the bytes shipped to it.  Opaque (closure) predicates and closure
+/// maps are left untouched.
+fn push_filters(flow: &Dataflow) -> Result<Dataflow> {
+    let mut cur = flow.clone();
+    while let Some((m_idx, f_idx)) = find_pushdown(&cur) {
+        cur = swap_filter_up(&cur, m_idx, f_idx)?;
+    }
+    Ok(cur)
+}
+
+/// Find one (map-or-lookup, filter) pair where the filter can move above
+/// its parent: the parent is single-input, has the filter as its only
+/// child, does not produce or modify any column the predicate reads, and
+/// the grandparent exposes those columns with identical dtypes.
+fn find_pushdown(flow: &Dataflow) -> Option<(usize, usize)> {
+    let nodes = flow.nodes();
+    let children = flow.children();
+    let out_idx = flow.output().map(|r| r.0);
+    for (fi, fnode) in nodes.iter().enumerate() {
+        let OpKind::Filter(pred) = &fnode.op else { continue };
+        let Some(cols) = pred.body.columns() else { continue };
+        let mi = fnode.parents[0];
+        let mnode = &nodes[mi];
+        if children[mi].len() != 1 || mnode.parents.len() != 1 {
+            continue;
+        }
+        // The parent's value must be consumed *only* through the filter:
+        // if the parent is the flow output, swapping would filter the
+        // output itself (e.g. a dead filter branch hanging off the
+        // output node).
+        if out_idx == Some(mi) {
+            continue;
+        }
+        let transparent = match &mnode.op {
+            OpKind::Map(func) => match &func.body {
+                FuncBody::Identity | FuncBody::Sleep(_) => true,
+                // A projection is transparent for a column it passes
+                // through unmodified (bound as a bare `Col` of itself).
+                FuncBody::Select(binds) => cols.iter().all(|c| {
+                    binds.iter().any(
+                        |(n, e)| n == c && matches!(e, Expr::Col(src) if src == c),
+                    )
+                }),
+                FuncBody::Model(b) => cols.iter().all(|c| b.passthrough.contains(c)),
+                FuncBody::Rust(_) => false,
+            },
+            OpKind::Lookup { as_col, .. } => !cols.contains(as_col),
+            _ => false,
+        };
+        if !transparent {
+            continue;
+        }
+        let gp = &nodes[mnode.parents[0]];
+        let types_match = cols.iter().all(|c| {
+            matches!(
+                (gp.schema.dtype_of(c), mnode.schema.dtype_of(c)),
+                (Ok(a), Ok(b)) if a == b
+            )
+        });
+        if types_match {
+            return Some((mi, fi));
+        }
+    }
+    None
+}
+
+/// Rebuild the flow with the filter at `f_idx` moved above its parent at
+/// `m_idx` (the filter now feeds the parent; everything that consumed the
+/// filter consumes the parent instead).
+fn swap_filter_up(flow: &Dataflow, m_idx: usize, f_idx: usize) -> Result<Dataflow> {
+    let nodes = flow.nodes();
+    let OpKind::Filter(pred) = &nodes[f_idx].op else {
+        bail!("pushdown target is not a filter");
+    };
+    let mut out = Dataflow::new(&flow.name, flow.input_schema().clone());
+    let mut remap: Vec<NodeRef> = vec![out.input(); nodes.len()];
+    for (i, node) in nodes.iter().enumerate().skip(1) {
+        if i == f_idx {
+            // The filter's consumers now read the (post-filter) parent.
+            remap[i] = remap[m_idx];
+            continue;
+        }
+        let parents: Vec<NodeRef> = node.parents.iter().map(|&p| remap[p]).collect();
+        remap[i] = if i == m_idx {
+            let filt = out.filter(parents[0], pred.clone())?;
+            add_op(&mut out, &node.op, &[filt])?
+        } else {
+            add_op(&mut out, &node.op, &parents)?
+        };
+    }
+    let old_out = flow.output().context("no output")?;
+    out.set_output(remap[old_out.0])?;
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------
+// Projection pruning (flow-level rewrite)
+// ---------------------------------------------------------------------
+
+/// Columns of `parents[slot]`'s output that `node` reads, given the set
+/// of `node`'s own output columns demanded downstream (`None` = all).
+/// Returns `None` when the node is opaque or structurally requires every
+/// parent column (closures, joins, unions).
+fn parent_reads(
+    node: &super::flow::FlowNode,
+    my_need: &Option<std::collections::BTreeSet<String>>,
+    parent_grouping: Option<&str>,
+) -> Option<std::collections::BTreeSet<String>> {
+    use std::collections::BTreeSet;
+    let passthrough = |extra: &[&String]| -> Option<BTreeSet<String>> {
+        let mut s = my_need.as_ref()?.clone();
+        s.extend(extra.iter().map(|c| (*c).clone()));
+        Some(s)
+    };
+    let mut req: BTreeSet<String> = match &node.op {
+        OpKind::Map(f) => match &f.body {
+            FuncBody::Identity | FuncBody::Sleep(_) => passthrough(&[])?,
+            FuncBody::Select(binds) => {
+                binds.iter().flat_map(|(_, e)| e.columns()).collect()
+            }
+            FuncBody::Model(b) => {
+                b.input_cols.iter().chain(b.passthrough.iter()).cloned().collect()
+            }
+            FuncBody::Rust(_) => return None,
+        },
+        OpKind::Filter(p) => {
+            let cols = p.body.columns()?;
+            passthrough(&cols.iter().collect::<Vec<_>>())?
+        }
+        OpKind::Groupby { column } => {
+            if column == "__rowid" {
+                passthrough(&[])?
+            } else {
+                passthrough(&[column])?
+            }
+        }
+        OpKind::Agg { agg, column } => {
+            if *agg == AggFn::ArgMax {
+                // ArgMax returns whole attaining rows: output schema ==
+                // input schema, so parent needs downstream's columns too.
+                passthrough(&[column])?
+            } else {
+                std::iter::once(column.clone()).collect()
+            }
+        }
+        OpKind::Lookup { key, as_col } => {
+            let mut s = my_need.as_ref()?.clone();
+            s.remove(as_col);
+            if let LookupKey::Column(c) = key {
+                s.insert(c.clone());
+            }
+            s
+        }
+        // Joins concatenate (and rename) both sides; unions require
+        // schema-identical parents that may have other consumers.  Treat
+        // both as reading everything rather than risk schema drift.
+        OpKind::Join { .. } | OpKind::Union | OpKind::Anyof => return None,
+        OpKind::Input | OpKind::Fuse(_) => return None,
+    };
+    // The grouping column must survive any inserted projection: grouped
+    // tables re-assert their grouping after every op.
+    if let Some(g) = parent_grouping {
+        if g != "__rowid" {
+            req.insert(g.to_string());
+        }
+    }
+    Some(req)
+}
+
+/// Insert projections that drop columns no downstream operator reads, so
+/// unused payloads never cross a stage boundary.  Conservative: closure
+/// ops demand every column, and join/union parents are never narrowed.
+fn prune_projections(flow: &Dataflow) -> Result<Dataflow> {
+    use std::collections::BTreeSet;
+    let nodes = flow.nodes();
+    let out_idx = flow.output().context("no output")?.0;
+    // needed[i]: Some(cols) = columns of node i's output read downstream;
+    // None = all (the output node, or an opaque/structural consumer).
+    let mut needed: Vec<Option<BTreeSet<String>>> =
+        vec![Some(BTreeSet::new()); nodes.len()];
+    needed[out_idx] = None;
+    for i in (1..nodes.len()).rev() {
+        let my_need = needed[i].clone();
+        for &p in &nodes[i].parents {
+            let req = parent_reads(&nodes[i], &my_need, nodes[p].grouping.as_deref());
+            match (req, &mut needed[p]) {
+                (None, slot) => *slot = None,
+                (Some(r), Some(acc)) => acc.extend(r),
+                (Some(_), None) => {}
+            }
+        }
+    }
+    // Decide insertions: keep schema order; skip full/empty/no-op cases.
+    let mut prune: Vec<Option<Vec<String>>> = vec![None; nodes.len()];
+    let mut any = false;
+    for (i, node) in nodes.iter().enumerate() {
+        if i == out_idx {
+            continue;
+        }
+        let Some(need) = &needed[i] else { continue };
+        if need.is_empty() {
+            continue; // dead branch or nothing read: leave untouched
+        }
+        let keep: Vec<String> = node
+            .schema
+            .cols()
+            .iter()
+            .map(|(n, _)| n.clone())
+            .filter(|n| need.contains(n))
+            .collect();
+        if keep.is_empty() || keep.len() == node.schema.cols().len() {
+            continue;
+        }
+        prune[i] = Some(keep);
+        any = true;
+    }
+    if !any {
+        return Ok(flow.clone());
+    }
+    // Rebuild with a projection inserted after each narrowed producer.
+    let mut out = Dataflow::new(&flow.name, flow.input_schema().clone());
+    let mut remap: Vec<NodeRef> = vec![out.input(); nodes.len()];
+    let insert = |out: &mut Dataflow, at: NodeRef, i: usize| -> Result<NodeRef> {
+        match &prune[i] {
+            None => Ok(at),
+            Some(keep) => {
+                // An upstream prune may already have narrowed this node's
+                // rebuilt schema to exactly `keep` — skip the no-op.
+                let cur = out.node(at).schema.cols();
+                if cur.len() == keep.len()
+                    && cur.iter().zip(keep).all(|((n, _), k)| n == k)
+                {
+                    return Ok(at);
+                }
+                let cols: Vec<&str> = keep.iter().map(String::as_str).collect();
+                // Inherit the producer's device class so the projection
+                // fuses into the producing stage instead of splitting a
+                // same-device chain.
+                let (dev, _) = op_traits(&nodes[i].op, false);
+                out.map(at, Func::project(&format!("prune{i}"), &cols).with_device(dev))
+            }
+        }
+    };
+    let at0 = out.input();
+    remap[0] = insert(&mut out, at0, 0)?;
+    for (i, node) in nodes.iter().enumerate().skip(1) {
+        let parents: Vec<NodeRef> = node.parents.iter().map(|&p| remap[p]).collect();
+        let r = add_op(&mut out, &node.op, &parents)?;
+        remap[i] = insert(&mut out, r, i)?;
+    }
+    out.set_output(remap[out_idx])?;
     Ok(out)
 }
 
@@ -754,6 +1123,161 @@ mod tests {
         let plan = compile(&fl, &OptFlags::none().with_fusion()).unwrap();
         assert_eq!(plan.n_stages(), 1);
         assert_eq!(plan.segments[0].stages[0].ops.len(), 3);
+    }
+
+    #[test]
+    fn pushdown_moves_filter_below_transparent_map() {
+        use crate::dataflow::expr::{col, lit};
+        let mut fl = Dataflow::new(
+            "pd",
+            Schema::new(vec![("conf", DType::F64), ("img", DType::F32s)]),
+        );
+        let emb = fl.map(fl.input(), Func::identity("embed")).unwrap();
+        let f = fl
+            .filter(emb, Predicate::expr(col("conf").lt(lit(0.3))))
+            .unwrap();
+        fl.set_output(f).unwrap();
+        let rewritten = rewrite_flow(&fl, &OptFlags::none().with_pushdown()).unwrap();
+        let labels: Vec<String> =
+            rewritten.nodes().iter().map(|n| n.op.label()).collect();
+        let fpos = labels.iter().position(|l| l.starts_with("filter")).unwrap();
+        let mpos = labels.iter().position(|l| l == "map:embed").unwrap();
+        assert!(fpos < mpos, "filter not pushed below map: {labels:?}");
+        // Threshold predicates are inspectable too.
+        let mut fl2 = Dataflow::new("pd2", Schema::new(vec![("conf", DType::F64)]));
+        let m = fl2.map(fl2.input(), Func::identity("id")).unwrap();
+        let f2 = fl2
+            .filter(m, Predicate::threshold("conf", CmpOp::Lt, 0.5))
+            .unwrap();
+        fl2.set_output(f2).unwrap();
+        let r2 = rewrite_flow(&fl2, &OptFlags::none().with_pushdown()).unwrap();
+        assert!(r2.nodes()[1].op.label().starts_with("filter"), "{:?}",
+            r2.nodes().iter().map(|n| n.op.label()).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn pushdown_never_filters_the_output_via_a_dead_branch() {
+        use crate::dataflow::expr::{col, lit};
+        // A dangling filter is the output map's only child; pushing it
+        // above the map would filter the *output*.  The rewrite must
+        // leave the flow alone.
+        let mut fl = Dataflow::new("dead", Schema::new(vec![("conf", DType::F64)]));
+        let m = fl.map(fl.input(), Func::identity("embed")).unwrap();
+        let _dead = fl
+            .filter(m, Predicate::expr(col("conf").lt(lit(0.5))))
+            .unwrap();
+        fl.set_output(m).unwrap();
+        let r = rewrite_flow(&fl, &OptFlags::none().with_pushdown()).unwrap();
+        let out = r.output().unwrap();
+        assert_eq!(r.node(out).op.label(), "map:embed");
+        // The output map must still read the input directly, not a filter.
+        let parent = r.node(out).parents[0];
+        assert_eq!(r.nodes()[parent].op.label(), "input");
+    }
+
+    #[test]
+    fn pushdown_skips_opaque_and_producing_ops() {
+        use crate::dataflow::expr::{col, lit};
+        // Closure map: opaque, must not move.
+        let mut fl = Dataflow::new("opq", Schema::new(vec![("conf", DType::F64)]));
+        let m = fl
+            .map(
+                fl.input(),
+                Func::rust("black_box", None, std::sync::Arc::new(|_, t: &crate::dataflow::table::Table| Ok(t.clone()))),
+            )
+            .unwrap();
+        let f = fl
+            .filter(m, Predicate::expr(col("conf").lt(lit(0.5))))
+            .unwrap();
+        fl.set_output(f).unwrap();
+        let r = rewrite_flow(&fl, &OptFlags::none().with_pushdown()).unwrap();
+        assert_eq!(r.nodes()[1].op.label(), "map:black_box");
+        // Select that computes the filtered column: produces it, must not move.
+        let mut fl2 = Dataflow::new("sel", Schema::new(vec![("conf", DType::F64)]));
+        let s = fl2
+            .map(
+                fl2.input(),
+                Func::select("scale", vec![("conf", col("conf") * lit(2.0))]),
+            )
+            .unwrap();
+        let f2 = fl2
+            .filter(s, Predicate::expr(col("conf").lt(lit(0.5))))
+            .unwrap();
+        fl2.set_output(f2).unwrap();
+        let r2 = rewrite_flow(&fl2, &OptFlags::none().with_pushdown()).unwrap();
+        assert_eq!(r2.nodes()[1].op.label(), "map:scale");
+    }
+
+    #[test]
+    fn pruning_drops_unread_columns() {
+        use crate::dataflow::expr::{col, lit};
+        // input{conf, img} -> embed(identity) -> select{score}: img is never
+        // read, so a projection lands right after the input.
+        let mut fl = Dataflow::new(
+            "pr",
+            Schema::new(vec![("conf", DType::F64), ("img", DType::F32s)]),
+        );
+        let emb = fl.map(fl.input(), Func::identity("embed")).unwrap();
+        let s = fl
+            .map(
+                emb,
+                Func::select("out", vec![("score", col("conf") * lit(100.0))]),
+            )
+            .unwrap();
+        fl.set_output(s).unwrap();
+        let r = rewrite_flow(&fl, &OptFlags::none().with_pruning()).unwrap();
+        // First non-input node is the inserted projection, narrowed to conf.
+        assert!(r.nodes()[1].op.label().starts_with("map:prune"), "{:?}",
+            r.nodes().iter().map(|n| n.op.label()).collect::<Vec<_>>());
+        assert_eq!(r.nodes()[1].schema.cols().len(), 1);
+        assert!(r.nodes()[1].schema.has("conf"));
+        // The embed stage now carries only the narrow schema.
+        let emb_node = r
+            .nodes()
+            .iter()
+            .find(|n| n.op.label() == "map:embed")
+            .unwrap();
+        assert_eq!(emb_node.schema.cols().len(), 1);
+        // Output schema unchanged.
+        let out = r.output().unwrap();
+        assert!(r.node(out).schema.has("score"));
+    }
+
+    #[test]
+    fn pruning_leaves_opaque_and_full_flows_alone() {
+        // A Rust map reads everything: nothing may be pruned above it.
+        let mut fl = Dataflow::new(
+            "nopr",
+            Schema::new(vec![("conf", DType::F64), ("img", DType::F32s)]),
+        );
+        let m = fl
+            .map(
+                fl.input(),
+                Func::rust("opaque", None, std::sync::Arc::new(|_, t: &crate::dataflow::table::Table| Ok(t.clone()))),
+            )
+            .unwrap();
+        fl.set_output(m).unwrap();
+        let r = rewrite_flow(&fl, &OptFlags::none().with_pruning()).unwrap();
+        assert_eq!(r.nodes().len(), fl.nodes().len());
+    }
+
+    #[test]
+    fn all_flags_enable_rewrites_and_default_is_all() {
+        let a = OptFlags::all();
+        assert!(a.filter_pushdown && a.projection_pruning);
+        let d = OptFlags::default();
+        assert!(d.fusion && d.filter_pushdown && d.projection_pruning);
+        let off = OptFlags::all().without_rewrites();
+        assert!(!off.filter_pushdown && !off.projection_pruning);
+        assert!(!OptFlags::all().without_fusion().fusion);
+        assert!(!OptFlags::all().without_batching().batching);
+        assert!(!OptFlags::all().without_locality().locality_dispatch);
+    }
+
+    #[test]
+    fn compiled_plan_records_input_schema() {
+        let plan = compile(&chain_flow(2), &OptFlags::none()).unwrap();
+        assert!(plan.input_schema.has("p"));
     }
 
     #[test]

@@ -134,6 +134,18 @@ pub fn apply_map(ctx: &ExecCtx, f: &Func, table: Table) -> Result<Table> {
             }
             table
         }
+        FuncBody::Select(binds) => {
+            // Vectorized projection: each output column is one expression
+            // evaluation; bare column refs are handle copies.
+            let out_schema = super::flow::out_schema_of(f, table.schema())?;
+            let mut cols = Vec::with_capacity(binds.len());
+            for (name, e) in binds {
+                cols.push(e.eval(&table).with_context(|| {
+                    format!("select {:?} output column {name:?}", f.name)
+                })?);
+            }
+            Table::from_columns(out_schema, table.ids(), cols)?
+        }
         FuncBody::Rust(body) => {
             let out = body(ctx, &table)?;
             // Runtime type check (paper §3.1): declared schema must hold.
@@ -299,6 +311,13 @@ pub fn apply_filter(ctx: &ExecCtx, p: &Predicate, table: Table) -> Result<Table>
                 }
             }
             keep
+        }
+        PredBody::Expr(e) => {
+            let mask = e.eval_bool(&table)?;
+            mask.iter()
+                .enumerate()
+                .filter_map(|(i, &k)| if k { Some(i as u32) } else { None })
+                .collect()
         }
         PredBody::Rust(f) => {
             // Black-box predicates see materialized rows (compat path).

@@ -1,0 +1,499 @@
+//! The expression DSL: a small *inspectable* language for predicates and
+//! scalar projections (paper §3.1's declarative hints, PRETZEL's white-box
+//! pipeline stages).
+//!
+//! Wherever a `Predicate` or a simple column-rewriting map is used today,
+//! an [`Expr`] can be used instead — and unlike a Rust closure, the
+//! compiler can *see* it: which columns it reads ([`Expr::columns`]), what
+//! it produces ([`Expr::dtype`]), and therefore whether a filter can be
+//! pushed below a map or an unused column pruned.  Closure-based ops keep
+//! working; they are simply opaque to the new rewrites.
+//!
+//! Construction is fluent: `col("conf").lt(lit(0.85))`,
+//! `(col("a") + col("b")).ge(lit(1.0)).and(col("ok").eq(lit(true)))`.
+
+use std::collections::BTreeSet;
+use std::fmt;
+
+use anyhow::{bail, Context, Result};
+
+use super::operator::CmpOp;
+use super::table::{Column, DType, Schema, Table, Value};
+
+/// Binary arithmetic operators over numeric columns.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArithOp {
+    Add,
+    Sub,
+    Mul,
+    Div,
+}
+
+impl ArithOp {
+    fn symbol(self) -> &'static str {
+        match self {
+            ArithOp::Add => "+",
+            ArithOp::Sub => "-",
+            ArithOp::Mul => "*",
+            ArithOp::Div => "/",
+        }
+    }
+}
+
+/// An inspectable scalar expression over a table's columns.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Expr {
+    /// A column reference (any dtype; vector/blob columns may only be
+    /// passed through, not computed on).
+    Col(String),
+    /// A literal value.
+    Lit(Value),
+    /// Comparison producing a boolean.
+    Cmp { op: CmpOp, lhs: Box<Expr>, rhs: Box<Expr> },
+    /// Numeric arithmetic.
+    Arith { op: ArithOp, lhs: Box<Expr>, rhs: Box<Expr> },
+    And(Box<Expr>, Box<Expr>),
+    Or(Box<Expr>, Box<Expr>),
+    Not(Box<Expr>),
+}
+
+/// Column reference: `col("conf")`.
+pub fn col(name: &str) -> Expr {
+    Expr::Col(name.to_string())
+}
+
+/// Literal: `lit(0.85)`, `lit(3i64)`, `lit("fr")`, `lit(true)`.
+pub fn lit<T: Into<Expr>>(v: T) -> Expr {
+    v.into()
+}
+
+impl From<f64> for Expr {
+    fn from(v: f64) -> Expr {
+        Expr::Lit(Value::F64(v))
+    }
+}
+
+impl From<i64> for Expr {
+    fn from(v: i64) -> Expr {
+        Expr::Lit(Value::I64(v))
+    }
+}
+
+impl From<&str> for Expr {
+    fn from(v: &str) -> Expr {
+        Expr::Lit(Value::Str(v.to_string()))
+    }
+}
+
+impl From<bool> for Expr {
+    fn from(v: bool) -> Expr {
+        Expr::Lit(Value::Bool(v))
+    }
+}
+
+macro_rules! cmp_method {
+    ($name:ident, $op:expr) => {
+        pub fn $name(self, rhs: impl Into<Expr>) -> Expr {
+            Expr::Cmp { op: $op, lhs: Box::new(self), rhs: Box::new(rhs.into()) }
+        }
+    };
+}
+
+impl Expr {
+    cmp_method!(lt, CmpOp::Lt);
+    cmp_method!(le, CmpOp::Le);
+    cmp_method!(gt, CmpOp::Gt);
+    cmp_method!(ge, CmpOp::Ge);
+    cmp_method!(eq, CmpOp::Eq);
+    cmp_method!(ne, CmpOp::Ne);
+
+    /// Comparison with a runtime-chosen operator (generators, config-
+    /// driven thresholds).
+    pub fn cmp_with(self, op: CmpOp, rhs: impl Into<Expr>) -> Expr {
+        Expr::Cmp { op, lhs: Box::new(self), rhs: Box::new(rhs.into()) }
+    }
+
+    pub fn and(self, rhs: impl Into<Expr>) -> Expr {
+        Expr::And(Box::new(self), Box::new(rhs.into()))
+    }
+
+    pub fn or(self, rhs: impl Into<Expr>) -> Expr {
+        Expr::Or(Box::new(self), Box::new(rhs.into()))
+    }
+
+    #[allow(clippy::should_implement_trait)]
+    pub fn not(self) -> Expr {
+        Expr::Not(Box::new(self))
+    }
+
+    /// The set of column names this expression reads.
+    pub fn columns(&self) -> BTreeSet<String> {
+        let mut out = BTreeSet::new();
+        self.collect_columns(&mut out);
+        out
+    }
+
+    fn collect_columns(&self, out: &mut BTreeSet<String>) {
+        match self {
+            Expr::Col(c) => {
+                out.insert(c.clone());
+            }
+            Expr::Lit(_) => {}
+            Expr::Cmp { lhs, rhs, .. } | Expr::Arith { lhs, rhs, .. } => {
+                lhs.collect_columns(out);
+                rhs.collect_columns(out);
+            }
+            Expr::And(a, b) | Expr::Or(a, b) => {
+                a.collect_columns(out);
+                b.collect_columns(out);
+            }
+            Expr::Not(a) => a.collect_columns(out),
+        }
+    }
+
+    /// Typecheck against an input schema; returns the produced dtype.
+    pub fn dtype(&self, schema: &Schema) -> Result<DType> {
+        match self {
+            Expr::Col(c) => schema
+                .dtype_of(c)
+                .with_context(|| format!("expr column {c:?}")),
+            Expr::Lit(v) => Ok(v.dtype()),
+            Expr::Arith { op, lhs, rhs } => {
+                let (l, r) = (lhs.dtype(schema)?, rhs.dtype(schema)?);
+                if !is_numeric(l) || !is_numeric(r) {
+                    bail!("arithmetic {} over non-numeric operands ({l}, {r})", op.symbol());
+                }
+                Ok(if *op == ArithOp::Div || l == DType::F64 || r == DType::F64 {
+                    DType::F64
+                } else {
+                    DType::I64
+                })
+            }
+            Expr::Cmp { op, lhs, rhs } => {
+                let (l, r) = (lhs.dtype(schema)?, rhs.dtype(schema)?);
+                let ok = (is_numeric(l) && is_numeric(r))
+                    || (l == r
+                        && matches!(l, DType::Str | DType::Bool)
+                        && matches!(op, CmpOp::Eq | CmpOp::Ne));
+                if !ok {
+                    bail!("comparison {op:?} over incompatible operands ({l}, {r})");
+                }
+                Ok(DType::Bool)
+            }
+            Expr::And(a, b) | Expr::Or(a, b) => {
+                for e in [a, b] {
+                    let t = e.dtype(schema)?;
+                    if t != DType::Bool {
+                        bail!("boolean operator over non-bool operand ({t})");
+                    }
+                }
+                Ok(DType::Bool)
+            }
+            Expr::Not(a) => {
+                let t = a.dtype(schema)?;
+                if t != DType::Bool {
+                    bail!("not over non-bool operand ({t})");
+                }
+                Ok(DType::Bool)
+            }
+        }
+    }
+
+    /// Vectorized evaluation to a full column.
+    pub fn eval(&self, table: &Table) -> Result<Column> {
+        Ok(match self.eval_inner(table)? {
+            Ev::I64(v) => Column::I64(v),
+            Ev::F64(v) => Column::F64(v),
+            Ev::Bool(v) => Column::Bool(v),
+            Ev::Str(v) => Column::Str(v),
+            Ev::Passthrough(c) => c,
+        })
+    }
+
+    /// Evaluate a boolean expression to a per-row mask.
+    pub fn eval_bool(&self, table: &Table) -> Result<Vec<bool>> {
+        match self.eval_inner(table)? {
+            Ev::Bool(v) => Ok(v),
+            other => bail!("predicate expression is not boolean ({})", other.label()),
+        }
+    }
+
+    fn eval_inner(&self, table: &Table) -> Result<Ev> {
+        let n = table.len();
+        Ok(match self {
+            Expr::Col(c) => match table.schema().dtype_of(c)? {
+                DType::I64 => Ev::I64(table.col_i64(c)?.iter().copied().collect()),
+                DType::F64 => Ev::F64(table.col_f64(c)?.iter().copied().collect()),
+                DType::Bool => Ev::Bool(table.col_bool(c)?.iter().copied().collect()),
+                DType::Str => Ev::Str(table.col_str(c)?.iter().cloned().collect()),
+                // Vector/blob columns: handle-copy passthrough only.
+                _ => Ev::Passthrough(table.column(c)?),
+            },
+            Expr::Lit(v) => match v {
+                Value::I64(x) => Ev::I64(vec![*x; n]),
+                Value::F64(x) => Ev::F64(vec![*x; n]),
+                Value::Bool(x) => Ev::Bool(vec![*x; n]),
+                Value::Str(x) => Ev::Str(vec![x.clone(); n]),
+                other => bail!("unsupported literal dtype {}", other.dtype()),
+            },
+            Expr::Arith { op, lhs, rhs } => {
+                let (l, r) = (lhs.eval_inner(table)?, rhs.eval_inner(table)?);
+                match (l, r) {
+                    (Ev::I64(a), Ev::I64(b)) if *op != ArithOp::Div => Ev::I64(
+                        a.iter()
+                            .zip(&b)
+                            .map(|(&x, &y)| match op {
+                                ArithOp::Add => x.wrapping_add(y),
+                                ArithOp::Sub => x.wrapping_sub(y),
+                                ArithOp::Mul => x.wrapping_mul(y),
+                                ArithOp::Div => unreachable!(),
+                            })
+                            .collect(),
+                    ),
+                    (l, r) => {
+                        let (a, b) = (l.to_f64()?, r.to_f64()?);
+                        Ev::F64(
+                            a.iter()
+                                .zip(&b)
+                                .map(|(&x, &y)| match op {
+                                    ArithOp::Add => x + y,
+                                    ArithOp::Sub => x - y,
+                                    ArithOp::Mul => x * y,
+                                    ArithOp::Div => x / y,
+                                })
+                                .collect(),
+                        )
+                    }
+                }
+            }
+            Expr::Cmp { op, lhs, rhs } => {
+                let (l, r) = (lhs.eval_inner(table)?, rhs.eval_inner(table)?);
+                let eq_only = |x_eq_y: bool| match op {
+                    CmpOp::Eq => Ok(x_eq_y),
+                    CmpOp::Ne => Ok(!x_eq_y),
+                    other => bail!("ordering comparison {other:?} over non-numeric operands"),
+                };
+                match (&l, &r) {
+                    (Ev::Str(a), Ev::Str(b)) => Ev::Bool(
+                        a.iter()
+                            .zip(b)
+                            .map(|(x, y)| eq_only(x == y))
+                            .collect::<Result<_>>()?,
+                    ),
+                    (Ev::Bool(a), Ev::Bool(b)) => Ev::Bool(
+                        a.iter()
+                            .zip(b)
+                            .map(|(x, y)| eq_only(x == y))
+                            .collect::<Result<_>>()?,
+                    ),
+                    // Exact integer comparison: no f64 round-trip, which
+                    // would mis-compare magnitudes beyond 2^53.
+                    (Ev::I64(a), Ev::I64(b)) => Ev::Bool(
+                        a.iter()
+                            .zip(b)
+                            .map(|(x, y)| match op {
+                                CmpOp::Lt => x < y,
+                                CmpOp::Le => x <= y,
+                                CmpOp::Gt => x > y,
+                                CmpOp::Ge => x >= y,
+                                CmpOp::Eq => x == y,
+                                CmpOp::Ne => x != y,
+                            })
+                            .collect(),
+                    ),
+                    _ => {
+                        let (a, b) = (l.to_f64()?, r.to_f64()?);
+                        Ev::Bool(a.iter().zip(&b).map(|(&x, &y)| op.eval(x, y)).collect())
+                    }
+                }
+            }
+            Expr::And(a, b) => {
+                let (x, y) = (a.eval_bool(table)?, b.eval_bool(table)?);
+                Ev::Bool(x.iter().zip(&y).map(|(&p, &q)| p && q).collect())
+            }
+            Expr::Or(a, b) => {
+                let (x, y) = (a.eval_bool(table)?, b.eval_bool(table)?);
+                Ev::Bool(x.iter().zip(&y).map(|(&p, &q)| p || q).collect())
+            }
+            Expr::Not(a) => Ev::Bool(a.eval_bool(table)?.into_iter().map(|p| !p).collect()),
+        })
+    }
+}
+
+impl fmt::Display for Expr {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Expr::Col(c) => write!(f, "{c}"),
+            Expr::Lit(v) => match v {
+                Value::Str(s) => write!(f, "{s:?}"),
+                Value::F64(x) => write!(f, "{x}"),
+                Value::I64(x) => write!(f, "{x}"),
+                Value::Bool(x) => write!(f, "{x}"),
+                other => write!(f, "<{}>", other.dtype()),
+            },
+            Expr::Cmp { op, lhs, rhs } => write!(f, "({lhs} {op:?} {rhs})"),
+            Expr::Arith { op, lhs, rhs } => write!(f, "({lhs} {} {rhs})", op.symbol()),
+            Expr::And(a, b) => write!(f, "({a} & {b})"),
+            Expr::Or(a, b) => write!(f, "({a} | {b})"),
+            Expr::Not(a) => write!(f, "!{a}"),
+        }
+    }
+}
+
+/// Evaluation intermediate: typed vectors plus a passthrough arm for
+/// vector/blob columns (handle copies, never payload copies).
+enum Ev {
+    I64(Vec<i64>),
+    F64(Vec<f64>),
+    Bool(Vec<bool>),
+    Str(Vec<String>),
+    Passthrough(Column),
+}
+
+impl Ev {
+    fn label(&self) -> &'static str {
+        match self {
+            Ev::I64(_) => "i64",
+            Ev::F64(_) => "f64",
+            Ev::Bool(_) => "bool",
+            Ev::Str(_) => "str",
+            Ev::Passthrough(_) => "passthrough",
+        }
+    }
+
+    fn to_f64(&self) -> Result<Vec<f64>> {
+        Ok(match self {
+            Ev::F64(v) => v.clone(),
+            Ev::I64(v) => v.iter().map(|&x| x as f64).collect(),
+            other => bail!("expected numeric operand, got {}", other.label()),
+        })
+    }
+}
+
+fn is_numeric(t: DType) -> bool {
+    matches!(t, DType::I64 | DType::F64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn schema() -> Schema {
+        Schema::new(vec![
+            ("name", DType::Str),
+            ("conf", DType::F64),
+            ("n", DType::I64),
+            ("img", DType::F32s),
+        ])
+    }
+
+    fn table() -> Table {
+        let mut t = Table::new(schema());
+        for (name, conf, n) in [("a", 0.9, 1), ("b", 0.3, 2), ("a", 0.7, 3)] {
+            t.push_fresh(vec![
+                Value::Str(name.into()),
+                Value::F64(conf),
+                Value::I64(n),
+                Value::f32s(vec![n as f32]),
+            ])
+            .unwrap();
+        }
+        t
+    }
+
+    #[test]
+    fn typecheck_and_columns() {
+        let e = col("conf").lt(lit(0.85)).and(col("n").ge(lit(2i64)));
+        assert_eq!(e.dtype(&schema()).unwrap(), DType::Bool);
+        let cols: Vec<String> = e.columns().into_iter().collect();
+        assert_eq!(cols, vec!["conf".to_string(), "n".to_string()]);
+        // arithmetic promotion
+        assert_eq!(
+            (col("n") + lit(1i64)).dtype(&schema()).unwrap(),
+            DType::I64
+        );
+        assert_eq!(
+            (col("n") / lit(2i64)).dtype(&schema()).unwrap(),
+            DType::F64
+        );
+        assert_eq!(
+            (col("conf") * lit(2.0)).dtype(&schema()).unwrap(),
+            DType::F64
+        );
+    }
+
+    #[test]
+    fn typecheck_rejects() {
+        // unknown column, named in the error
+        let err = col("nope").dtype(&schema()).unwrap_err().to_string();
+        assert!(err.contains("nope"), "{err}");
+        // arithmetic on strings
+        assert!((col("name") + lit(1i64)).dtype(&schema()).is_err());
+        // ordering comparison on strings
+        assert!(col("name").lt(lit("z")).dtype(&schema()).is_err());
+        // boolean op on non-bool
+        assert!(col("conf").and(lit(true)).dtype(&schema()).is_err());
+        assert!(col("conf").not().dtype(&schema()).is_err());
+        // vector column in arithmetic
+        assert!((col("img") + lit(1.0)).dtype(&schema()).is_err());
+    }
+
+    #[test]
+    fn eval_bool_masks() {
+        let t = table();
+        let mask = col("conf").lt(lit(0.85)).eval_bool(&t).unwrap();
+        assert_eq!(mask, vec![false, true, true]);
+        // i64 comparisons are exact (no f64 round-trip)
+        let big = 9_007_199_254_740_993i64; // 2^53 + 1
+        let mask = col("n").lt(lit(big)).eval_bool(&t).unwrap();
+        assert_eq!(mask, vec![true, true, true]);
+        // untypechecked ordering on strings errors instead of lying
+        assert!(col("name").lt(lit("z")).eval_bool(&t).is_err());
+        let mask = col("name").eq(lit("a")).and(col("n").gt(lit(1i64)));
+        assert_eq!(mask.eval_bool(&t).unwrap(), vec![false, false, true]);
+        let mask = col("name").ne(lit("a")).or(col("conf").ge(lit(0.9)));
+        assert_eq!(mask.eval_bool(&t).unwrap(), vec![true, true, false]);
+    }
+
+    #[test]
+    fn eval_projection_columns() {
+        let t = table();
+        // Power-of-two factor: scaling is exact, so equality is too.
+        match (col("conf") * lit(2.0)).eval(&t).unwrap() {
+            Column::F64(v) => assert_eq!(v, vec![1.8, 0.6, 1.4]),
+            other => panic!("{other:?}"),
+        }
+        match (col("n") + col("n")).eval(&t).unwrap() {
+            Column::I64(v) => assert_eq!(v, vec![2, 4, 6]),
+            other => panic!("{other:?}"),
+        }
+        // passthrough of a vector column is a handle copy
+        match col("img").eval(&t).unwrap() {
+            Column::F32s(v) => assert_eq!(v.len(), 3),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn display_roundtrips_shape() {
+        let e = col("conf").lt(lit(0.85)).and(col("name").eq(lit("fr")));
+        assert_eq!(format!("{e}"), "((conf Lt 0.85) & (name Eq \"fr\"))");
+    }
+}
+
+// Fluent arithmetic via std operators: `col("a") + col("b") * lit(2.0)`.
+macro_rules! arith_impl {
+    ($trait:ident, $method:ident, $op:expr) => {
+        impl<T: Into<Expr>> std::ops::$trait<T> for Expr {
+            type Output = Expr;
+            fn $method(self, rhs: T) -> Expr {
+                Expr::Arith { op: $op, lhs: Box::new(self), rhs: Box::new(rhs.into()) }
+            }
+        }
+    };
+}
+
+arith_impl!(Add, add, ArithOp::Add);
+arith_impl!(Sub, sub, ArithOp::Sub);
+arith_impl!(Mul, mul, ArithOp::Mul);
+arith_impl!(Div, div, ArithOp::Div);

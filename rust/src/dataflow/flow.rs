@@ -32,6 +32,9 @@ pub struct FlowNode {
 pub struct Dataflow {
     pub name: String,
     nodes: Vec<FlowNode>,
+    /// Child adjacency, maintained incrementally on every `push` so the
+    /// compiler's rewrite passes never recompute it.
+    children: Vec<Vec<usize>>,
     output: Option<usize>,
 }
 
@@ -46,6 +49,7 @@ impl Dataflow {
                 schema: input_schema,
                 grouping: None,
             }],
+            children: vec![Vec::new()],
             output: None,
         }
     }
@@ -70,20 +74,21 @@ impl Dataflow {
         self.output.map(NodeRef)
     }
 
-    /// Children indices of each node (computed).
-    pub fn children(&self) -> Vec<Vec<usize>> {
-        let mut ch = vec![Vec::new(); self.nodes.len()];
-        for (i, n) in self.nodes.iter().enumerate() {
-            for &p in &n.parents {
-                ch[p].push(i);
-            }
-        }
-        ch
+    /// Children indices of each node.  Maintained incrementally as nodes
+    /// are pushed (no per-call allocation; the compiler's rewrite passes
+    /// call this repeatedly).
+    pub fn children(&self) -> &[Vec<usize>] {
+        &self.children
     }
 
     fn push(&mut self, node: FlowNode) -> NodeRef {
+        let idx = self.nodes.len();
+        self.children.push(Vec::new());
+        for &p in &node.parents {
+            self.children[p].push(idx);
+        }
         self.nodes.push(node);
-        NodeRef(self.nodes.len() - 1)
+        NodeRef(idx)
     }
 
     fn check_parent(&self, r: NodeRef) -> Result<&FlowNode> {
@@ -108,6 +113,15 @@ impl Dataflow {
         }
         let schema = out_schema_of(&func, &p.schema)?;
         let grouping = p.grouping.clone();
+        if let Some(g) = &grouping {
+            if g != "__rowid" && !schema.has(g) {
+                bail!(
+                    "map {:?}: output schema {} drops the grouping column {g:?}",
+                    func.name,
+                    schema
+                );
+            }
+        }
         Ok(self.push(FlowNode {
             op: OpKind::Map(func),
             parents: vec![parent.0],
@@ -119,11 +133,31 @@ impl Dataflow {
     /// Keep rows satisfying a predicate (Table 1: filter).
     pub fn filter(&mut self, parent: NodeRef, pred: Predicate) -> Result<NodeRef> {
         let p = self.check_parent(parent)?;
-        if let super::operator::PredBody::Threshold { column, .. } = &pred.body {
-            let t = p.schema.dtype_of(column)?;
-            if t != DType::F64 {
-                bail!("filter threshold column {column:?} must be f64, got {t}");
+        match &pred.body {
+            super::operator::PredBody::Threshold { column, .. } => {
+                let t = p
+                    .schema
+                    .dtype_of(column)
+                    .with_context(|| format!("filter {:?}", pred.name))?;
+                if t != DType::F64 {
+                    bail!(
+                        "filter {:?}: threshold column {column:?} must be f64, got {t}",
+                        pred.name
+                    );
+                }
             }
+            super::operator::PredBody::Expr(e) => {
+                let t = e
+                    .dtype(&p.schema)
+                    .with_context(|| format!("filter {:?}", pred.name))?;
+                if t != DType::Bool {
+                    bail!(
+                        "filter {:?}: predicate expression must be bool, got {t}",
+                        pred.name
+                    );
+                }
+            }
+            super::operator::PredBody::Rust(_) => {}
         }
         let schema = p.schema.clone();
         let grouping = p.grouping.clone();
@@ -139,13 +173,16 @@ impl Dataflow {
     /// pseudo-column `"__rowid"` groups by the automatic row ID (Fig 1).
     pub fn groupby(&mut self, parent: NodeRef, column: &str) -> Result<NodeRef> {
         let p = self.check_parent(parent)?;
-        if p.grouping.is_some() {
-            bail!("groupby requires an ungrouped table");
+        if let Some(g) = &p.grouping {
+            bail!("groupby {column:?}: input is already grouped by {g:?}");
         }
         if column != "__rowid" {
-            let t = p.schema.dtype_of(column)?;
+            let t = p
+                .schema
+                .dtype_of(column)
+                .with_context(|| format!("groupby {column:?}"))?;
             if matches!(t, DType::Blob | DType::F32s | DType::I32s) {
-                bail!("cannot group by vector column {column:?}");
+                bail!("groupby {column:?}: cannot group by vector column ({t})");
             }
         }
         let schema = p.schema.clone();
@@ -160,8 +197,8 @@ impl Dataflow {
     /// Aggregate a column (Table 1: agg).
     pub fn agg(&mut self, parent: NodeRef, agg: AggFn, column: &str) -> Result<NodeRef> {
         let p = self.check_parent(parent)?;
-        let (schema, grouping) =
-            agg_output(agg, column, &p.schema, p.grouping.as_deref())?;
+        let (schema, grouping) = agg_output(agg, column, &p.schema, p.grouping.as_deref())
+            .with_context(|| format!("agg {}:{column:?}", agg.name()))?;
         Ok(self.push(FlowNode {
             op: OpKind::Agg { agg, column: column.to_string() },
             parents: vec![parent.0],
@@ -174,7 +211,10 @@ impl Dataflow {
     pub fn lookup(&mut self, parent: NodeRef, key: LookupKey, as_col: &str) -> Result<NodeRef> {
         let p = self.check_parent(parent)?;
         if let LookupKey::Column(c) = &key {
-            let t = p.schema.dtype_of(c)?;
+            let t = p
+                .schema
+                .dtype_of(c)
+                .with_context(|| format!("lookup {as_col:?} key column"))?;
             if t != DType::Str {
                 bail!("lookup column {c:?} must be str, got {t}");
             }
@@ -208,8 +248,8 @@ impl Dataflow {
             bail!("join requires ungrouped inputs");
         }
         if let Some(k) = key {
-            let lt = l.schema.dtype_of(k)?;
-            let rt = r.schema.dtype_of(k)?;
+            let lt = l.schema.dtype_of(k).with_context(|| format!("join key {k:?} (left)"))?;
+            let rt = r.schema.dtype_of(k).with_context(|| format!("join key {k:?} (right)"))?;
             if lt != rt {
                 bail!("join key {k:?} type mismatch: {lt} vs {rt}");
             }
@@ -238,21 +278,26 @@ impl Dataflow {
     }
 
     fn nary(&mut self, parts: &[NodeRef], any: bool) -> Result<NodeRef> {
+        let label = if any { "anyof" } else { "union" };
         if parts.len() < 2 {
-            bail!("union/anyof needs at least 2 inputs");
+            bail!("{label}: needs at least 2 inputs, got {}", parts.len());
         }
         let first = self.check_parent(parts[0])?.clone();
         for p in &parts[1..] {
             let n = self.check_parent(*p)?;
             if n.schema != first.schema {
                 bail!(
-                    "union/anyof schema mismatch: {} vs {}",
+                    "{label}: schema mismatch: {} vs {}",
                     first.schema,
                     n.schema
                 );
             }
             if n.grouping != first.grouping {
-                bail!("union/anyof grouping mismatch");
+                bail!(
+                    "{label}: grouping mismatch: {:?} vs {:?}",
+                    first.grouping,
+                    n.grouping
+                );
             }
         }
         let op = if any { OpKind::Anyof } else { OpKind::Union };
@@ -292,7 +337,7 @@ impl Dataflow {
             let mut node = n.clone();
             node.parents = node.parents.iter().map(|&p| map_idx(p)).collect();
             debug_assert_eq!(map_idx(i), self.nodes.len());
-            self.nodes.push(node);
+            self.push(node);
         }
         Ok(NodeRef(map_idx(out)))
     }
@@ -357,6 +402,22 @@ pub fn out_schema_of(func: &Func, input: &Schema) -> Result<Schema> {
             Ok(Schema::from_owned(cols))
         }
         FuncBody::Identity | FuncBody::Sleep(_) => Ok(input.clone()),
+        FuncBody::Select(binds) => {
+            if binds.is_empty() {
+                bail!("select {:?}: no output columns", func.name);
+            }
+            let mut cols = Vec::with_capacity(binds.len());
+            for (name, e) in binds {
+                if cols.iter().any(|(n, _): &(String, DType)| n == name) {
+                    bail!("select {:?}: duplicate output column {name:?}", func.name);
+                }
+                let t = e.dtype(input).with_context(|| {
+                    format!("select {:?} output column {name:?}", func.name)
+                })?;
+                cols.push((name.clone(), t));
+            }
+            Ok(Schema::from_owned(cols))
+        }
         FuncBody::Rust(_) => Ok(match &func.out_schema {
             Some(cols) => Schema::from_owned(cols.clone()),
             None => input.clone(),

@@ -2,18 +2,34 @@
 //! the operator set of Table 1, the `Dataflow` builder API with
 //! typechecking, a reference local executor (the semantics oracle), and
 //! the compiler that rewrites and lowers flows onto Cloudburst DAGs (§4).
+//!
+//! Two user-facing builder surfaces exist:
+//! * [`v2::Flow`] — the fluent, arena-shared handle API
+//!   (`flow.map(f)?.filter(p)?`), the recommended way to author
+//!   pipelines; it compiles down to a [`Dataflow`].
+//! * [`Dataflow`] — the original imperative builder, retained as the
+//!   compiler-facing IR (`v2::Flow::into_dataflow` targets it).
+//!
+//! The [`expr`] module is the inspectable expression DSL: predicates and
+//! projections written as [`expr::Expr`] are visible to the compiler's
+//! filter-pushdown and projection-pruning rewrites, while closure-based
+//! ops remain opaque (and are simply skipped by those rewrites).
 
 pub mod compiler;
 pub mod exec_local;
+pub mod expr;
 pub mod flow;
 pub mod operator;
 pub mod rowref;
 pub mod table;
+pub mod v2;
 
 pub use compiler::{compile, compile_for_slo, OptFlags, Plan};
+pub use expr::{col, lit, ArithOp, Expr};
 pub use flow::{Dataflow, NodeRef};
 pub use operator::{
     AggFn, CmpOp, ExecCtx, Func, FuncBody, JoinHow, LookupKey, ModelBinding, OpKind,
     PredBody, Predicate, SleepDist,
 };
 pub use table::{ColView, Column, DType, Row, Schema, Table, Value};
+pub use v2::Flow;

@@ -211,6 +211,12 @@ pub enum FuncBody {
     Sleep(SleepDist),
     /// Pass-through (data-movement benchmarks).
     Identity,
+    /// Declarative projection: each output column is an inspectable
+    /// [`Expr`](super::expr::Expr) over the input columns.  Unlike `Rust`
+    /// bodies, the compiler can see exactly which columns are read and
+    /// produced, which is what enables filter pushdown and projection
+    /// pruning across it.
+    Select(Vec<(String, super::expr::Expr)>),
 }
 
 impl fmt::Debug for FuncBody {
@@ -220,6 +226,11 @@ impl fmt::Debug for FuncBody {
             FuncBody::Model(m) => write!(f, "Model({})", m.model),
             FuncBody::Sleep(d) => write!(f, "Sleep({d:?})"),
             FuncBody::Identity => write!(f, "Identity"),
+            FuncBody::Select(binds) => {
+                let cols: Vec<String> =
+                    binds.iter().map(|(n, e)| format!("{n}={e}")).collect();
+                write!(f, "Select[{}]", cols.join(", "))
+            }
         }
     }
 }
@@ -285,6 +296,33 @@ impl Func {
         }
     }
 
+    /// Declarative projection map: each output column is an inspectable
+    /// [`Expr`](super::expr::Expr).  Projections are trivially
+    /// batch-aware and rewrite-eligible (pushdown/pruning see through
+    /// them).
+    pub fn select(name: &str, bindings: Vec<(&str, super::expr::Expr)>) -> Func {
+        Func {
+            name: name.to_string(),
+            expect_input: None,
+            out_schema: None, // inferred from the exprs at typecheck
+            body: FuncBody::Select(
+                bindings.into_iter().map(|(n, e)| (n.to_string(), e)).collect(),
+            ),
+            device: Device::Cpu,
+            batch_aware: true,
+            service_model: None,
+        }
+    }
+
+    /// Pure column-subset projection (`Select` of bare column refs) —
+    /// also what the projection-pruning rewrite inserts.
+    pub fn project(name: &str, cols: &[&str]) -> Func {
+        Func::select(
+            name,
+            cols.iter().map(|c| (*c, super::expr::Expr::Col(c.to_string()))).collect(),
+        )
+    }
+
     /// Model-backed function with the registry's device/batch defaults.
     pub fn model(binding: ModelBinding) -> Func {
         let info = crate::models::info(&binding.model);
@@ -327,12 +365,29 @@ impl Func {
     }
 }
 
-/// Filter predicates: closures or declarative threshold comparisons.
+/// Filter predicates: closures, declarative threshold comparisons, or
+/// inspectable boolean expressions.
 #[derive(Clone)]
 pub enum PredBody {
     Rust(RowPred),
     /// `column <op> value` on an F64 column.
     Threshold { column: String, op: CmpOp, value: f64 },
+    /// A boolean [`Expr`](super::expr::Expr) evaluated per row.
+    Expr(super::expr::Expr),
+}
+
+impl PredBody {
+    /// Columns an inspectable predicate reads; `None` for opaque closures
+    /// (this is the pushdown-eligibility signal).
+    pub fn columns(&self) -> Option<std::collections::BTreeSet<String>> {
+        match self {
+            PredBody::Rust(_) => None,
+            PredBody::Threshold { column, .. } => {
+                Some(std::iter::once(column.clone()).collect())
+            }
+            PredBody::Expr(e) => Some(e.columns()),
+        }
+    }
 }
 
 impl fmt::Debug for PredBody {
@@ -342,6 +397,7 @@ impl fmt::Debug for PredBody {
             PredBody::Threshold { column, op, value } => {
                 write!(f, "{column} {op:?} {value}")
             }
+            PredBody::Expr(e) => write!(f, "{e}"),
         }
     }
 }
@@ -385,6 +441,11 @@ impl Predicate {
             name: format!("{column}_{op:?}_{value}"),
             body: PredBody::Threshold { column: column.to_string(), op, value },
         }
+    }
+
+    /// Inspectable boolean-expression predicate (rewrite-eligible).
+    pub fn expr(e: super::expr::Expr) -> Predicate {
+        Predicate { name: format!("{e}"), body: PredBody::Expr(e) }
     }
 }
 

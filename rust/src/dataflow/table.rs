@@ -1002,6 +1002,16 @@ impl Table {
         })
     }
 
+    /// One column materialized as owned storage (selection resolved);
+    /// vector/blob cells are handle copies.
+    pub fn column(&self, col: &str) -> Result<Column> {
+        let i = self.schema.index_of(col)?;
+        match &self.sel {
+            None => Ok(self.data.cols[i].clone()),
+            Some(s) => Ok(self.data.cols[i].gather(s)),
+        }
+    }
+
     /// Project to a subset of columns: whole-column clones (memcpy for
     /// scalar buffers, handle copies for vector/blob cells), never
     /// per-cell `Value` boxing.  Fails like `set_grouping` if the current

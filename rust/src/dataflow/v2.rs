@@ -1,0 +1,388 @@
+//! Flow API v2: the fluent, typed builder (paper §3.1, Table 1).
+//!
+//! A [`Flow`] is a cheap handle — a node reference into an arena-shared
+//! DAG — so pipelines chain without threading `&mut Dataflow` through
+//! every call:
+//!
+//! ```
+//! use cloudflow::dataflow::v2::Flow;
+//! use cloudflow::dataflow::{col, lit, Func, Schema, DType, OptFlags};
+//!
+//! let src = Flow::source("quickstart", Schema::new(vec![
+//!     ("url", DType::Str), ("conf", DType::F64),
+//! ]));
+//! let out = src
+//!     .map(Func::identity("preproc")).unwrap()
+//!     .filter_expr(col("conf").lt(lit(0.85))).unwrap();
+//! let plan = out.compile(&OptFlags::all()).unwrap();
+//! assert_eq!(plan.name, "quickstart");
+//! ```
+//!
+//! Branching is plain handle reuse (`let a = src.map(..)?;` then use `a`
+//! twice), and multi-input ops take the other handles by reference:
+//! `left.join(&right, None, JoinHow::Left)?`,
+//! `p1.union(&[&p2, &p3])?`.  Typechecking stays eager — every method
+//! returns `Result` and fails at construction with the offending op and
+//! column named, exactly like the legacy builder (which remains the
+//! compiler-facing IR underneath: [`Flow::into_dataflow`] is the bridge,
+//! so `compiler.rs`, `planner/` and `adaptive/` are untouched).
+
+use std::sync::{Arc, Mutex};
+
+use anyhow::{bail, Context, Result};
+
+use super::compiler::{compile, OptFlags, Plan};
+use super::expr::Expr;
+use super::flow::{Dataflow, NodeRef};
+use super::operator::{AggFn, Func, JoinHow, LookupKey, Predicate};
+use super::table::Schema;
+
+/// A fluent handle onto one node of an arena-shared dataflow DAG.
+///
+/// Handles are `Clone` (cheap: an `Arc` + a node index); every builder
+/// method returns a *new* handle over the same arena, so the API feels
+/// immutable while the DAG grows underneath.
+#[derive(Clone)]
+pub struct Flow {
+    dag: Arc<Mutex<Dataflow>>,
+    node: NodeRef,
+}
+
+impl std::fmt::Debug for Flow {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let dag = self.dag.lock().unwrap();
+        write!(
+            f,
+            "Flow({} @ {} : {})",
+            dag.name,
+            dag.node(self.node).op.label(),
+            dag.node(self.node).schema
+        )
+    }
+}
+
+impl Flow {
+    /// Start a new flow whose input table has the given schema; the
+    /// returned handle points at the distinguished input node.
+    pub fn source(name: &str, input_schema: Schema) -> Flow {
+        let dag = Dataflow::new(name, input_schema);
+        let node = dag.input();
+        Flow { dag: Arc::new(Mutex::new(dag)), node }
+    }
+
+    /// Wrap an existing legacy-built DAG; the handle points at its input.
+    pub fn from_dataflow(dag: Dataflow) -> Flow {
+        let node = dag.input();
+        Flow { dag: Arc::new(Mutex::new(dag)), node }
+    }
+
+    fn derive(&self, f: impl FnOnce(&mut Dataflow) -> Result<NodeRef>) -> Result<Flow> {
+        let mut dag = self.dag.lock().unwrap();
+        let node = f(&mut dag)?;
+        Ok(Flow { dag: self.dag.clone(), node })
+    }
+
+    fn same_arena(&self, other: &Flow, op: &str) -> Result<()> {
+        if !Arc::ptr_eq(&self.dag, &other.dag) {
+            bail!(
+                "{op}: operands belong to different flows ({:?} vs {:?}); build \
+                 branches from one Flow::source, or splice a finished flow in \
+                 with Flow::extend",
+                self.dag.lock().unwrap().name,
+                other.dag.lock().unwrap().name,
+            );
+        }
+        Ok(())
+    }
+
+    // ---- Table 1 operators -------------------------------------------
+
+    /// Apply a function to each row (Table 1: map).
+    pub fn map(&self, func: Func) -> Result<Flow> {
+        let at = self.node;
+        self.derive(|dag| dag.map(at, func))
+    }
+
+    /// Declarative projection: each output column is an inspectable
+    /// [`Expr`] (rewrite-eligible, unlike a closure map).
+    pub fn select(&self, bindings: &[(&str, Expr)]) -> Result<Flow> {
+        self.named_select("select", bindings)
+    }
+
+    /// [`Flow::select`] with an explicit stage name.
+    pub fn named_select(&self, name: &str, bindings: &[(&str, Expr)]) -> Result<Flow> {
+        let func = Func::select(
+            name,
+            bindings.iter().map(|(n, e)| (*n, e.clone())).collect(),
+        );
+        self.map(func)
+    }
+
+    /// Keep a subset of columns (a pure passthrough projection).
+    pub fn project(&self, cols: &[&str]) -> Result<Flow> {
+        self.map(Func::project("project", cols))
+    }
+
+    /// Keep rows satisfying a predicate (Table 1: filter).
+    pub fn filter(&self, pred: Predicate) -> Result<Flow> {
+        let at = self.node;
+        self.derive(|dag| dag.filter(at, pred))
+    }
+
+    /// Keep rows where the boolean [`Expr`] holds (rewrite-eligible).
+    pub fn filter_expr(&self, e: Expr) -> Result<Flow> {
+        self.filter(Predicate::expr(e))
+    }
+
+    /// Group by a column (Table 1: groupby); `"__rowid"` groups by the
+    /// automatic row ID.
+    pub fn groupby(&self, column: &str) -> Result<Flow> {
+        let at = self.node;
+        self.derive(|dag| dag.groupby(at, column))
+    }
+
+    /// Aggregate a column (Table 1: agg).
+    pub fn agg(&self, agg: AggFn, column: &str) -> Result<Flow> {
+        let at = self.node;
+        self.derive(|dag| dag.agg(at, agg, column))
+    }
+
+    /// Retrieve a KVS object per row (Table 1: lookup).
+    pub fn lookup(&self, key: LookupKey, as_col: &str) -> Result<Flow> {
+        let at = self.node;
+        self.derive(|dag| dag.lookup(at, key, as_col))
+    }
+
+    /// Join with another branch of the same flow (Table 1: join);
+    /// `key = None` joins on the automatic row ID.
+    pub fn join(&self, right: &Flow, key: Option<&str>, how: JoinHow) -> Result<Flow> {
+        self.same_arena(right, "join")?;
+        let (l, r) = (self.node, right.node);
+        self.derive(|dag| dag.join(l, r, key, how))
+    }
+
+    /// Union with other branches of the same flow (Table 1: union).
+    pub fn union(&self, others: &[&Flow]) -> Result<Flow> {
+        self.nary(others, false)
+    }
+
+    /// Runtime takes whichever input finishes first (Table 1: anyof).
+    pub fn anyof(&self, others: &[&Flow]) -> Result<Flow> {
+        self.nary(others, true)
+    }
+
+    fn nary(&self, others: &[&Flow], any: bool) -> Result<Flow> {
+        let label = if any { "anyof" } else { "union" };
+        let mut parts = Vec::with_capacity(others.len() + 1);
+        parts.push(self.node);
+        for o in others {
+            self.same_arena(o, label)?;
+            parts.push(o.node);
+        }
+        self.derive(|dag| if any { dag.anyof(&parts) } else { dag.union(&parts) })
+    }
+
+    /// Append a finished flow's DAG after this node (paper §3.3 `extend`);
+    /// the returned handle is the appended flow's output.
+    pub fn extend(&self, other: &Dataflow) -> Result<Flow> {
+        let at = self.node;
+        self.derive(|dag| dag.extend(at, other))
+    }
+
+    // ---- introspection ------------------------------------------------
+
+    /// Output schema at this handle.
+    pub fn schema(&self) -> Schema {
+        self.dag.lock().unwrap().node(self.node).schema.clone()
+    }
+
+    /// Grouping column at this handle (None = ungrouped).
+    pub fn grouping(&self) -> Option<String> {
+        self.dag.lock().unwrap().node(self.node).grouping.clone()
+    }
+
+    /// The underlying node reference (legacy-API interop).
+    pub fn node(&self) -> NodeRef {
+        self.node
+    }
+
+    /// Number of nodes in the shared arena (input included).
+    pub fn n_nodes(&self) -> usize {
+        self.dag.lock().unwrap().nodes().len()
+    }
+
+    // ---- lowering -----------------------------------------------------
+
+    /// Materialize the legacy [`Dataflow`] with this handle as the
+    /// output — the compile target everything downstream consumes.
+    pub fn into_dataflow(&self) -> Result<Dataflow> {
+        let mut dag = self.dag.lock().unwrap().clone();
+        dag.set_output(self.node)
+            .context("into_dataflow: marking output")?;
+        dag.validate()?;
+        Ok(dag)
+    }
+
+    /// Compile this handle as the flow output under `opts`.
+    pub fn compile(&self, opts: &OptFlags) -> Result<Plan> {
+        compile(&self.into_dataflow()?, opts)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataflow::expr::{col, lit};
+    use crate::dataflow::operator::{CmpOp, Derive, ModelBinding, SleepDist};
+    use crate::dataflow::table::DType;
+
+    fn img_schema() -> Schema {
+        Schema::new(vec![("url", DType::Str), ("img", DType::F32s)])
+    }
+
+    #[test]
+    fn fluent_chain_builds_and_compiles() {
+        let out = Flow::source("t", img_schema())
+            .map(Func::identity("a"))
+            .unwrap()
+            .map(Func::sleep("b", SleepDist::ConstMs(1.0)))
+            .unwrap();
+        let fl = out.into_dataflow().unwrap();
+        assert_eq!(fl.nodes().len(), 3);
+        assert_eq!(fl.node(out.node()).schema, img_schema());
+        let plan = out.compile(&OptFlags::none()).unwrap();
+        assert_eq!(plan.n_stages(), 2);
+        assert_eq!(plan.input_schema, img_schema());
+    }
+
+    #[test]
+    fn ensemble_shape_fig1_v2() {
+        let src = Flow::source("ensemble", img_schema());
+        let img = src.map(Func::identity("preproc")).unwrap();
+        let classify = |m: &str| {
+            img.map(Func::model(
+                ModelBinding::new(m, &["img"], &[("probs", DType::F32s)]).with_derive(
+                    Derive::MaxF64 { src: "probs".into(), as_col: "conf".into() },
+                ),
+            ))
+        };
+        let p1 = classify("resnet").unwrap();
+        let p2 = classify("vgg").unwrap();
+        let p3 = classify("inception").unwrap();
+        let best = p1
+            .union(&[&p2, &p3])
+            .unwrap()
+            .groupby("__rowid")
+            .unwrap()
+            .agg(AggFn::ArgMax, "conf")
+            .unwrap();
+        assert!(best.schema().has("conf"));
+        assert!(best.grouping().is_none());
+        let fl = best.into_dataflow().unwrap();
+        fl.validate().unwrap();
+        assert_eq!(fl.nodes().len(), 8);
+    }
+
+    #[test]
+    fn expr_filter_and_select() {
+        let src = Flow::source(
+            "e",
+            Schema::new(vec![("name", DType::Str), ("conf", DType::F64)]),
+        );
+        let out = src
+            .filter_expr(col("conf").ge(lit(0.5)).and(col("name").ne(lit(""))))
+            .unwrap()
+            .select(&[("score", col("conf") * lit(100.0)), ("name", col("name"))])
+            .unwrap();
+        let s = out.schema();
+        assert_eq!(s.cols()[0], ("score".to_string(), DType::F64));
+        out.into_dataflow().unwrap().validate().unwrap();
+        // non-bool filter expression is rejected eagerly
+        let err = src.filter_expr(col("conf") + lit(1.0)).unwrap_err().to_string();
+        assert!(err.contains("bool"), "{err}");
+    }
+
+    #[test]
+    fn cross_arena_ops_rejected() {
+        let a = Flow::source("a", img_schema());
+        let b = Flow::source("b", img_schema());
+        let err = a.join(&b, None, JoinHow::Inner).unwrap_err().to_string();
+        assert!(err.contains("different flows"), "{err}");
+        assert!(a.union(&[&b]).is_err());
+    }
+
+    #[test]
+    fn extend_splices_legacy_flow() {
+        let mut cls = Dataflow::new("cls", img_schema());
+        let c = cls.map(cls.input(), Func::identity("classify")).unwrap();
+        cls.set_output(c).unwrap();
+
+        let out = Flow::source("pre", img_schema())
+            .map(Func::identity("shared_preproc"))
+            .unwrap()
+            .extend(&cls)
+            .unwrap();
+        let fl = out.into_dataflow().unwrap();
+        assert_eq!(fl.nodes().len(), 3);
+        assert_eq!(fl.node(out.node()).op.label(), "map:classify");
+    }
+
+    #[test]
+    fn typecheck_errors_name_op_and_column() {
+        let src = Flow::source(
+            "t",
+            Schema::new(vec![("url", DType::Str), ("conf", DType::F64)]),
+        );
+        // threshold on a non-f64 column names the filter and column
+        let err = src
+            .filter(Predicate::threshold("url", CmpOp::Lt, 1.0))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("filter") && err.contains("url"), "{err}");
+        // groupby on an unknown column
+        let err = format!(
+            "{:#}",
+            src.groupby("nope").unwrap_err()
+        );
+        assert!(err.contains("groupby") && err.contains("nope"), "{err}");
+        // double grouping names both columns
+        let g = src.groupby("url").unwrap();
+        let err = g.groupby("url").unwrap_err().to_string();
+        assert!(err.contains("already grouped"), "{err}");
+        // anyof arity
+        let err = src.anyof(&[]).unwrap_err().to_string();
+        assert!(err.contains("anyof") && err.contains("2 inputs"), "{err}");
+    }
+
+    #[test]
+    fn select_duplicate_and_unknown_columns_rejected() {
+        let src = Flow::source("t", img_schema());
+        let err = src
+            .select(&[("x", col("url")), ("x", col("url"))])
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("duplicate") && err.contains("x"), "{err}");
+        let err = format!("{:#}", src.select(&[("y", col("missing"))]).unwrap_err());
+        assert!(err.contains("missing"), "{err}");
+    }
+
+    #[test]
+    fn project_subsets_columns() {
+        let src = Flow::source("t", img_schema());
+        let p = src.project(&["url"]).unwrap();
+        assert_eq!(p.schema().cols().len(), 1);
+        assert!(p.project(&["img"]).is_err()); // already dropped
+    }
+
+    #[test]
+    fn handles_are_cheap_and_branchable() {
+        let src = Flow::source("t", img_schema());
+        let a = src.map(Func::identity("a")).unwrap();
+        let b = a.map(Func::identity("b")).unwrap();
+        let c = a.map(Func::identity("c")).unwrap();
+        let u = b.union(&[&c]).unwrap();
+        assert_eq!(u.n_nodes(), 5);
+        // the original handle still works after branching
+        assert_eq!(src.schema(), img_schema());
+    }
+}

@@ -25,9 +25,19 @@
 //! profile, live re-planning with zero-drop plan hot-swap, and overload
 //! protection via deterministic admission control.
 //!
-//! Start with [`dataflow::Dataflow`] (the user API) and
+//! The user-facing surface is the **Flow API v2**: author pipelines with
+//! the fluent [`dataflow::v2::Flow`] builder and the inspectable
+//! [`dataflow::expr::Expr`] DSL (which unlocks the compiler's
+//! filter-pushdown and projection-pruning rewrites), and serve every
+//! engine — local oracle, cluster, baselines — through the unified
+//! [`serve::Deployment`] facade with typed [`serve::ServeError`]s and
+//! per-request [`serve::CallOpts`] (deadline, priority).  The original
+//! [`dataflow::Dataflow`] builder remains the compiler-facing IR.
+//!
+//! Start with [`dataflow::v2::Flow`] (the user API) and
 //! [`cloudburst::Cluster`] (the runtime), or the `examples/` directory
-//! (`examples/slo_planner.rs` for the planner path,
+//! (`examples/quickstart.rs` for the v2 + `Deployment` path,
+//! `examples/slo_planner.rs` for the planner,
 //! `examples/adaptive_serving.rs` for the adaptive controller).
 
 pub mod adaptive;
@@ -40,6 +50,7 @@ pub mod models;
 pub mod net;
 pub mod planner;
 pub mod runtime;
+pub mod serve;
 pub mod simulation;
 pub mod util;
 pub mod workloads;

@@ -138,10 +138,11 @@ fn serve(args: &[String]) -> Result<()> {
     }
     let h = cluster.register(plan, replicas)?;
 
+    let dep = cluster.deployment(h)?;
     println!("warm-up ...");
-    closed_loop(&cluster, h, clients, requests / 5 + 1, |i| (spec.make_input)(i));
+    closed_loop(&dep, clients, requests / 5 + 1, |i| (spec.make_input)(i));
     println!("serving {requests} requests from {clients} clients ...");
-    let mut r = closed_loop(&cluster, h, clients, requests, |i| {
+    let mut r = closed_loop(&dep, clients, requests, |i| {
         (spec.make_input)(i + requests)
     });
     let (med, p99, rps) = r.report();

@@ -1,0 +1,296 @@
+//! The unified serving facade: one [`Deployment`] trait in front of every
+//! execution engine (Clipper's "uniform frontend" argument applied to our
+//! stack).
+//!
+//! A deployment is anything that accepts a request [`Table`] and serves a
+//! prediction: the local reference executor ([`LocalServer`]), a
+//! Cloudburst [`Cluster`](crate::cloudburst::Cluster) plan — plain,
+//! planner-tuned, or adaptive-controlled, all via
+//! [`Cluster::deployment`](crate::cloudburst::Cluster::deployment) — and
+//! the microservice baselines ([`Baseline`](crate::baselines::Baseline)).
+//! Workload drivers ([`workloads::loadgen`](crate::workloads::loadgen)),
+//! examples and benches are written against `&dyn Deployment`, so a
+//! pipeline can be re-pointed from oracle to cluster to baseline without
+//! touching the driving code.
+//!
+//! The serving path gets *typed* errors ([`ServeError`]) instead of bare
+//! `anyhow`: callers can distinguish admission sheds, deadline misses and
+//! input-schema mismatches from genuine execution failures, and react
+//! (back off, retry elsewhere, fix the request) instead of string-matching.
+
+use std::fmt;
+use std::sync::Arc;
+
+use crate::cloudburst::metrics::PlanMetrics;
+use crate::cloudburst::ExecFuture;
+use crate::dataflow::exec_local;
+use crate::dataflow::operator::ExecCtx;
+use crate::dataflow::table::Table;
+use crate::dataflow::Dataflow;
+use crate::simulation::clock::Clock;
+
+/// Typed serving error (replaces bare `anyhow` on the request path).
+#[derive(Debug)]
+pub enum ServeError {
+    /// Rejected by admission control (overload guard) — never enqueued.
+    Shed,
+    /// The caller's deadline elapsed before the result arrived.  The
+    /// request keeps executing server-side; only the wait is abandoned.
+    DeadlineExceeded {
+        /// The deadline that was missed (virtual ms).
+        deadline_ms: f64,
+    },
+    /// The request table does not match the deployment's input schema.
+    TypeMismatch(String),
+    /// Execution failed (stage error, shutdown, ...).
+    Internal(anyhow::Error),
+}
+
+impl ServeError {
+    pub fn internal(e: anyhow::Error) -> ServeError {
+        ServeError::Internal(e)
+    }
+
+    pub fn is_shed(&self) -> bool {
+        matches!(self, ServeError::Shed)
+    }
+}
+
+impl fmt::Display for ServeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ServeError::Shed => write!(f, "request shed by admission control"),
+            ServeError::DeadlineExceeded { deadline_ms } => {
+                write!(f, "deadline of {deadline_ms}ms exceeded")
+            }
+            ServeError::TypeMismatch(msg) => write!(f, "input type mismatch: {msg}"),
+            ServeError::Internal(e) => write!(f, "serving failed: {e:#}"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+impl From<anyhow::Error> for ServeError {
+    fn from(e: anyhow::Error) -> ServeError {
+        ServeError::Internal(e)
+    }
+}
+
+/// Request priority tag.  Under overload (admission fraction < 1), `High`
+/// requests bypass shedding entirely and `Low` requests are shed at twice
+/// the prevailing rate — load drains from the least important traffic
+/// first.  At full admission all classes behave identically.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Priority {
+    High,
+    #[default]
+    Normal,
+    Low,
+}
+
+/// Per-request serving options.
+#[derive(Debug, Clone, Default)]
+pub struct CallOpts {
+    /// Give up waiting after this many *virtual* milliseconds
+    /// ([`ServeError::DeadlineExceeded`]).  `None` waits indefinitely.
+    pub deadline_ms: Option<f64>,
+    /// Admission priority under overload.
+    pub priority: Priority,
+}
+
+impl CallOpts {
+    pub fn new() -> CallOpts {
+        CallOpts::default()
+    }
+
+    pub fn with_deadline_ms(mut self, ms: f64) -> CallOpts {
+        self.deadline_ms = Some(ms);
+        self
+    }
+
+    pub fn with_priority(mut self, p: Priority) -> CallOpts {
+        self.priority = p;
+        self
+    }
+}
+
+/// A deployed prediction pipeline: the one serving interface every
+/// engine implements.
+pub trait Deployment: Sync {
+    /// Human-readable deployment label (pipeline name).
+    fn label(&self) -> String;
+
+    /// Submit a request; returns a future for its result.  Admission
+    /// control, schema checking and priority handling happen here —
+    /// synchronously, before the request enters the system.
+    fn call_async(&self, input: Table, opts: &CallOpts) -> Result<ExecFuture, ServeError>;
+
+    /// Serving metrics (latency window, offered/shed/completed counters).
+    fn metrics(&self) -> Arc<PlanMetrics>;
+
+    /// Synchronous call honoring `opts` (deadline enforced on the wait).
+    fn call_with(&self, input: Table, opts: &CallOpts) -> Result<Table, ServeError> {
+        let fut = self.call_async(input, opts)?;
+        match opts.deadline_ms {
+            None => fut.result().map_err(ServeError::internal),
+            Some(ms) => match fut.result_within(ms) {
+                Ok(Some(t)) => Ok(t),
+                Ok(None) => Err(ServeError::DeadlineExceeded { deadline_ms: ms }),
+                Err(e) => Err(ServeError::Internal(e)),
+            },
+        }
+    }
+
+    /// Synchronous call with default options.
+    fn call(&self, input: Table) -> Result<Table, ServeError> {
+        self.call_with(input, &CallOpts::default())
+    }
+
+    /// Submit a batch of independent requests and gather every result
+    /// (per-request errors; a shed or failed request does not poison its
+    /// neighbours).  Requests overlap: all are in flight before the
+    /// first wait.
+    fn call_batch(&self, inputs: Vec<Table>) -> Vec<Result<Table, ServeError>> {
+        let opts = CallOpts::default();
+        let futs: Vec<Result<ExecFuture, ServeError>> = inputs
+            .into_iter()
+            .map(|t| self.call_async(t, &opts))
+            .collect();
+        futs.into_iter()
+            .map(|f| f.and_then(|fut| fut.result().map_err(ServeError::internal)))
+            .collect()
+    }
+}
+
+/// The local reference executor behind the [`Deployment`] facade: no
+/// cluster, no modeled costs — the semantics oracle as a server.  Each
+/// call executes on its own thread so `call_async`/`call_batch` overlap.
+pub struct LocalServer {
+    flow: Arc<Dataflow>,
+    ctx: Arc<ExecCtx>,
+    metrics: Arc<PlanMetrics>,
+    clock: Clock,
+}
+
+impl LocalServer {
+    /// Serve `flow` through the local oracle (no KVS, no inference
+    /// service; use [`LocalServer::with_ctx`] to provide either).
+    pub fn new(flow: Dataflow) -> anyhow::Result<LocalServer> {
+        LocalServer::with_ctx(flow, ExecCtx::local())
+    }
+
+    pub fn with_ctx(flow: Dataflow, ctx: ExecCtx) -> anyhow::Result<LocalServer> {
+        flow.validate()?;
+        Ok(LocalServer {
+            flow: Arc::new(flow),
+            ctx: Arc::new(ctx),
+            metrics: Arc::new(PlanMetrics::default()),
+            clock: Clock::new(),
+        })
+    }
+}
+
+impl Deployment for LocalServer {
+    fn label(&self) -> String {
+        format!("local:{}", self.flow.name)
+    }
+
+    fn call_async(&self, input: Table, _opts: &CallOpts) -> Result<ExecFuture, ServeError> {
+        if input.schema() != self.flow.input_schema() {
+            return Err(ServeError::TypeMismatch(format!(
+                "deployment {:?} expects {}, got {}",
+                self.label(),
+                self.flow.input_schema(),
+                input.schema()
+            )));
+        }
+        self.metrics.note_offered();
+        let flow = self.flow.clone();
+        let ctx = self.ctx.clone();
+        let metrics = self.metrics.clone();
+        let clock = self.clock;
+        let submitted = clock.now_ms();
+        Ok(ExecFuture::spawn(submitted, move || {
+            let out = exec_local::execute(&flow, input, &ctx)?;
+            let now = clock.now_ms();
+            metrics.record(now, now - submitted);
+            Ok(out)
+        }))
+    }
+
+    fn metrics(&self) -> Arc<PlanMetrics> {
+        self.metrics.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataflow::expr::{col, lit};
+    use crate::dataflow::operator::Func;
+    use crate::dataflow::table::{DType, Schema, Value};
+    use crate::dataflow::v2::Flow;
+
+    fn flow() -> Dataflow {
+        Flow::source("t", Schema::new(vec![("x", DType::F64)]))
+            .map(Func::identity("a"))
+            .unwrap()
+            .filter_expr(col("x").ge(lit(1.0)))
+            .unwrap()
+            .into_dataflow()
+            .unwrap()
+    }
+
+    fn input(n: usize) -> Table {
+        let mut t = Table::new(Schema::new(vec![("x", DType::F64)]));
+        for i in 0..n {
+            t.push_fresh(vec![Value::F64(i as f64)]).unwrap();
+        }
+        t
+    }
+
+    #[test]
+    fn local_server_serves_and_records() {
+        let d = LocalServer::new(flow()).unwrap();
+        let out = d.call(input(3)).unwrap();
+        assert_eq!(out.len(), 2);
+        assert_eq!(d.metrics().completed(), 1);
+        assert_eq!(d.metrics().offered(), 1);
+        assert!(d.label().contains("t"));
+    }
+
+    #[test]
+    fn local_server_type_mismatch_is_typed() {
+        let d = LocalServer::new(flow()).unwrap();
+        let mut bad = Table::new(Schema::new(vec![("y", DType::I64)]));
+        bad.push_fresh(vec![Value::I64(1)]).unwrap();
+        match d.call(bad) {
+            Err(ServeError::TypeMismatch(msg)) => {
+                assert!(msg.contains('y') && msg.contains('x'), "{msg}");
+            }
+            other => panic!("expected TypeMismatch, got {other:?}"),
+        }
+        // nothing counted as offered/completed
+        assert_eq!(d.metrics().offered(), 0);
+    }
+
+    #[test]
+    fn call_batch_gathers_everything() {
+        let d = LocalServer::new(flow()).unwrap();
+        let outs = d.call_batch((0..8).map(|_| input(2)).collect());
+        assert_eq!(outs.len(), 8);
+        assert!(outs.iter().all(|r| r.is_ok()));
+        assert_eq!(d.metrics().completed(), 8);
+    }
+
+    #[test]
+    fn serve_error_display() {
+        assert!(format!("{}", ServeError::Shed).contains("shed"));
+        assert!(
+            format!("{}", ServeError::DeadlineExceeded { deadline_ms: 5.0 })
+                .contains("5ms")
+        );
+        assert!(ServeError::Shed.is_shed());
+    }
+}

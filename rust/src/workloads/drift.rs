@@ -10,7 +10,7 @@ use anyhow::Result;
 
 use crate::dataflow::operator::{DriftKnob, Func, SleepDist};
 use crate::dataflow::table::{DType, Schema, Table, Value};
-use crate::dataflow::Dataflow;
+use crate::dataflow::v2::Flow;
 use crate::util::rng;
 
 use super::pipelines::PipelineSpec;
@@ -29,21 +29,14 @@ pub struct DriftScenario {
 /// bottleneck-targeted re-planning are observable.
 pub fn drifting_chain(front_ms: f64, heavy_ms: f64) -> Result<DriftScenario> {
     let knob = DriftKnob::new();
-    let mut fl = Dataflow::new("drift_chain", Schema::new(vec![("x", DType::F64)]));
-    let front = fl.map(
-        fl.input(),
-        Func::sleep("front", SleepDist::ConstMs(front_ms)),
-    )?;
-    let heavy = fl.map(
-        front,
-        Func::sleep(
+    let heavy = Flow::source("drift_chain", Schema::new(vec![("x", DType::F64)]))
+        .map(Func::sleep("front", SleepDist::ConstMs(front_ms)))?
+        .map(Func::sleep(
             "heavy",
             SleepDist::ConstMs(heavy_ms).scaled_by(knob.clone()),
-        ),
-    )?;
-    fl.set_output(heavy)?;
+        ))?;
     let spec = PipelineSpec {
-        flow: fl,
+        flow: heavy.into_dataflow()?,
         make_input: Arc::new(|i| {
             let mut t = Table::new(Schema::new(vec![("x", DType::F64)]));
             t.push_fresh(vec![Value::F64(rng::for_case(0xD81F, i as u64).f64())])
@@ -58,14 +51,10 @@ pub fn drifting_chain(front_ms: f64, heavy_ms: f64) -> Result<DriftScenario> {
 /// Single-stage pipeline used by the overload scenario: capacity is easy
 /// to reason about (1000/`service_ms` per replica).
 pub fn overload_stage(service_ms: f64) -> Result<PipelineSpec> {
-    let mut fl = Dataflow::new("overload", Schema::new(vec![("x", DType::F64)]));
-    let s = fl.map(
-        fl.input(),
-        Func::sleep("serve", SleepDist::ConstMs(service_ms)),
-    )?;
-    fl.set_output(s)?;
+    let serve = Flow::source("overload", Schema::new(vec![("x", DType::F64)]))
+        .map(Func::sleep("serve", SleepDist::ConstMs(service_ms)))?;
     Ok(PipelineSpec {
-        flow: fl,
+        flow: serve.into_dataflow()?,
         make_input: Arc::new(|i| {
             let mut t = Table::new(Schema::new(vec![("x", DType::F64)]));
             t.push_fresh(vec![Value::F64(rng::for_case(0x01AD, i as u64).f64())])
@@ -82,14 +71,10 @@ pub fn overload_stage(service_ms: f64) -> Result<PipelineSpec> {
 /// service times stay calibrated, exercising the SLO-attainment trend
 /// path of the detector rather than the per-stage ratio path.
 pub fn payload_shift(base_kb: usize, shifted_kb: usize, shift_at: usize) -> Result<PipelineSpec> {
-    let mut fl = Dataflow::new(
-        "payload_shift",
-        Schema::new(vec![("blob", DType::Blob)]),
-    );
-    let s = fl.map(fl.input(), Func::identity("carry"))?;
-    fl.set_output(s)?;
+    let carry = Flow::source("payload_shift", Schema::new(vec![("blob", DType::Blob)]))
+        .map(Func::identity("carry"))?;
     Ok(PipelineSpec {
-        flow: fl,
+        flow: carry.into_dataflow()?,
         make_input: Arc::new(move |i| {
             let kb = if i < shift_at { base_kb } else { shifted_kb };
             let mut r = rng::for_case(0x5128, i as u64);

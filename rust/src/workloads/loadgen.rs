@@ -3,12 +3,16 @@
 //! plus open-loop drivers — a timed closed-loop phase for the Fig 6 load
 //! spike and a trace-paced open loop (through admission control) for the
 //! adaptive drift/overload scenarios.
+//!
+//! All drivers take `&dyn Deployment` — the unified serving facade — so
+//! the same loop measures a Cloudburst cluster, the local oracle, or a
+//! microservice baseline without changes.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
-use crate::cloudburst::{Admit, Cluster, DagHandle};
 use crate::dataflow::table::Table;
+use crate::serve::{CallOpts, Deployment, ServeError};
 use crate::simulation::clock::{self, Clock};
 use crate::util::stats::Summary;
 
@@ -38,8 +42,7 @@ impl LoadResult {
 /// Run `total` requests from `clients` closed-loop threads; per-request
 /// inputs come from `make_input(request_index)`.
 pub fn closed_loop(
-    cluster: &Cluster,
-    h: DagHandle,
+    dep: &dyn Deployment,
     clients: usize,
     total: usize,
     make_input: impl Fn(usize) -> Table + Sync,
@@ -56,13 +59,10 @@ pub fn closed_loop(
                     return;
                 }
                 let t0 = Clock::new();
-                let r = cluster
-                    .execute(h, make_input(i))
-                    .and_then(|f| f.result());
-                match r {
+                match dep.call(make_input(i)) {
                     Ok(_) => lat.lock().unwrap().add(t0.now_ms()),
                     Err(e) => {
-                        log::warn!("request {i} failed: {e:#}");
+                        log::warn!("request {i} failed: {e}");
                         errors.fetch_add(1, Ordering::Relaxed);
                     }
                 }
@@ -82,8 +82,7 @@ pub fn closed_loop(
 /// request count (Fig 6's pre/post-spike phases). Returns when the clock
 /// passes `duration_ms`.
 pub fn timed_phase(
-    cluster: &Cluster,
-    h: DagHandle,
+    dep: &dyn Deployment,
     clients: usize,
     duration_ms: f64,
     make_input: impl Fn(usize) -> Table + Sync,
@@ -98,7 +97,7 @@ pub fn timed_phase(
                 while clock.now_ms() < duration_ms {
                     let i = next.fetch_add(1, Ordering::Relaxed);
                     let t0 = Clock::new();
-                    match cluster.execute(h, make_input(i)).and_then(|f| f.result()) {
+                    match dep.call(make_input(i)) {
                         Ok(_) => lat.lock().unwrap().add(t0.now_ms()),
                         Err(_) => {
                             errors.fetch_add(1, Ordering::Relaxed);
@@ -152,18 +151,29 @@ impl OpenLoopResult {
     }
 }
 
-/// Drive `trace` open-loop through [`Cluster::submit`]: arrivals are
-/// paced on the virtual clock regardless of completions (so overload
-/// actually overloads, unlike a closed loop which self-clocks), shed
-/// requests are counted, and each admitted request is awaited on its own
-/// scoped thread.  Thread-per-request is deliberate: a bounded waiter
-/// pool would observe completions late under backlog and inflate the
-/// measured latencies; concurrency is bounded by the trace length, which
-/// at bench scale is a few hundred blocked threads at worst.
+/// Drive `trace` open-loop through the deployment's admission control:
+/// arrivals are paced on the virtual clock regardless of completions (so
+/// overload actually overloads, unlike a closed loop which self-clocks),
+/// shed requests ([`ServeError::Shed`]) are counted, and each admitted
+/// request is awaited on its own scoped thread.  Thread-per-request is
+/// deliberate: a bounded waiter pool would observe completions late under
+/// backlog and inflate the measured latencies; concurrency is bounded by
+/// the trace length, which at bench scale is a few hundred blocked
+/// threads at worst.
 pub fn open_loop(
-    cluster: &Cluster,
-    h: DagHandle,
+    dep: &dyn Deployment,
     trace: &ArrivalTrace,
+    make_input: impl Fn(usize) -> Table + Sync,
+) -> OpenLoopResult {
+    open_loop_with(dep, trace, &CallOpts::default(), make_input)
+}
+
+/// [`open_loop`] with explicit per-request options (priority tag,
+/// deadline).
+pub fn open_loop_with(
+    dep: &dyn Deployment,
+    trace: &ArrivalTrace,
+    opts: &CallOpts,
     make_input: impl Fn(usize) -> Table + Sync,
 ) -> OpenLoopResult {
     let clock = Clock::new();
@@ -178,8 +188,8 @@ pub fn open_loop(
                 clock::sleep_ms(wait);
             }
             let t0 = Clock::new();
-            match cluster.submit(h, make_input(i)) {
-                Ok(Admit::Accepted(fut)) => {
+            match dep.call_async(make_input(i), opts) {
+                Ok(fut) => {
                     admitted.fetch_add(1, Ordering::Relaxed);
                     let lat = &lat;
                     let errors = &errors;
@@ -190,7 +200,7 @@ pub fn open_loop(
                         }
                     });
                 }
-                Ok(Admit::Shed) => {
+                Err(ServeError::Shed) => {
                     shed.fetch_add(1, Ordering::Relaxed);
                 }
                 Err(_) => {
@@ -212,18 +222,19 @@ pub fn open_loop(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::cloudburst::Cluster;
     use crate::dataflow::compiler::{compile, OptFlags};
     use crate::dataflow::operator::{Func, SleepDist};
     use crate::dataflow::table::{DType, Schema, Value};
+    use crate::dataflow::v2::Flow;
     use crate::dataflow::Dataflow;
 
     fn sleep_flow(ms: f64) -> Dataflow {
-        let mut fl = Dataflow::new("lg", Schema::new(vec![("x", DType::F64)]));
-        let a = fl
-            .map(fl.input(), Func::sleep("s", SleepDist::ConstMs(ms)))
-            .unwrap();
-        fl.set_output(a).unwrap();
-        fl
+        Flow::source("lg", Schema::new(vec![("x", DType::F64)]))
+            .map(Func::sleep("s", SleepDist::ConstMs(ms)))
+            .unwrap()
+            .into_dataflow()
+            .unwrap()
     }
 
     fn one_row(_: usize) -> Table {
@@ -238,7 +249,8 @@ mod tests {
         let h = cluster
             .register(compile(&sleep_flow(5.0), &OptFlags::none()).unwrap(), 4)
             .unwrap();
-        let mut r = closed_loop(&cluster, h, 4, 20, one_row);
+        let dep = cluster.deployment(h).unwrap();
+        let mut r = closed_loop(&dep, 4, 20, one_row);
         assert_eq!(r.completed, 20);
         assert_eq!(r.errors, 0);
         let (med, p99, rps) = r.report();
@@ -255,7 +267,8 @@ mod tests {
             .unwrap();
         let trace = crate::workloads::traces::ArrivalTrace::constant(100.0, 500.0);
         cluster.set_admission(h, 0.5).unwrap();
-        let mut r = open_loop(&cluster, h, &trace, one_row);
+        let dep = cluster.deployment(h).unwrap();
+        let mut r = open_loop(&dep, &trace, one_row);
         assert_eq!(r.offered, trace.len());
         assert_eq!(r.admitted + r.shed, r.offered);
         assert!(r.shed > 0, "nothing shed at 50% admission");
@@ -274,12 +287,40 @@ mod tests {
     }
 
     #[test]
+    fn open_loop_priorities_shift_shedding() {
+        use crate::serve::Priority;
+        let cluster = Cluster::new(None);
+        let h = cluster
+            .register(compile(&sleep_flow(1.0), &OptFlags::none()).unwrap(), 2)
+            .unwrap();
+        cluster.set_admission(h, 0.5).unwrap();
+        let dep = cluster.deployment(h).unwrap();
+        let trace = crate::workloads::traces::ArrivalTrace::constant(200.0, 400.0);
+        let hi = open_loop_with(
+            &dep,
+            &trace,
+            &CallOpts::new().with_priority(Priority::High),
+            one_row,
+        );
+        assert_eq!(hi.shed, 0, "high priority must bypass shedding");
+        let lo = open_loop_with(
+            &dep,
+            &trace,
+            &CallOpts::new().with_priority(Priority::Low),
+            one_row,
+        );
+        // At admission 0.5, low priority admits 2*0.5-1 = 0 of traffic.
+        assert_eq!(lo.admitted, 0, "low priority must shed first");
+    }
+
+    #[test]
     fn timed_phase_stops() {
         let cluster = Cluster::new(None);
         let h = cluster
             .register(compile(&sleep_flow(2.0), &OptFlags::none()).unwrap(), 2)
             .unwrap();
-        let r = timed_phase(&cluster, h, 2, 100.0, one_row);
+        let dep = cluster.deployment(h).unwrap();
+        let r = timed_phase(&dep, 2, 100.0, one_row);
         assert!(r.completed > 0);
         assert!(r.wall_ms >= 100.0);
         assert!(r.wall_ms < 3_000.0);

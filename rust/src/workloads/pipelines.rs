@@ -1,19 +1,28 @@
 //! The paper's prediction pipelines (§5.2.1, Figs 1/9/10/11/12) expressed
-//! in the Cloudflow API, plus their input generators and KVS setup.
+//! in the Flow API v2 (fluent builder + expression DSL), plus their input
+//! generators and KVS setup.
 //!
 //! Models are the AOT-compiled zoo stand-ins; confidence thresholds come
 //! from the manifest's calibration block (our untrained ResNet stand-in
 //! has a different confidence distribution than a trained ResNet-101, so
 //! the cascade threshold is set at the calibrated percentile that
 //! reproduces the paper's ~40-60% forwarding rate — DESIGN.md §4).
+//!
+//! Filters and simple projections use the inspectable [`Expr`] DSL
+//! (`col("conf").lt(lit(t))`, `.project(..)`), so the compiler's
+//! filter-pushdown and projection-pruning rewrites see through them;
+//! genuinely computational stages stay columnar Rust closures, which the
+//! rewrites skip.
 
 use std::sync::Arc;
 
 use anyhow::Result;
 
 use crate::anna::KvsClient;
-use crate::dataflow::operator::{CmpOp, Derive, Func, ModelBinding, Predicate};
+use crate::dataflow::expr::{col, lit};
+use crate::dataflow::operator::{Derive, Func, ModelBinding};
 use crate::dataflow::table::{Column, DType, Schema, Table, Value};
+use crate::dataflow::v2::Flow;
 use crate::dataflow::{AggFn, Dataflow, JoinHow, LookupKey};
 use crate::runtime::Manifest;
 use crate::simulation::gpu::Device;
@@ -38,36 +47,34 @@ pub struct PipelineSpec {
 /// `preproc → {resnet, vgg, inception} → union → groupby(rowid) →
 /// agg(argmax conf)`.
 pub fn ensemble() -> Result<PipelineSpec> {
-    let mut fl = Dataflow::new("ensemble", Schema::new(vec![("img", DType::F32s)]));
-    let img = fl.map(
-        fl.input(),
-        Func::model(ModelBinding::new("preproc", &["img"], &[("img", DType::F32s)])),
-    )?;
-    let classify = |fl: &mut Dataflow, at, m: &str| {
-        fl.map(
-            at,
-            Func::model(
-                ModelBinding::new(m, &["img"], &[("probs", DType::F32s)])
-                    .with_derive(Derive::ArgMaxI64 {
-                        src: "probs".into(),
-                        as_col: "pred".into(),
-                    })
-                    .with_derive(Derive::MaxF64 {
-                        src: "probs".into(),
-                        as_col: "conf".into(),
-                    }),
-            ),
-        )
+    let src = Flow::source("ensemble", Schema::new(vec![("img", DType::F32s)]));
+    let img = src.map(Func::model(ModelBinding::new(
+        "preproc",
+        &["img"],
+        &[("img", DType::F32s)],
+    )))?;
+    let classify = |m: &str| {
+        img.map(Func::model(
+            ModelBinding::new(m, &["img"], &[("probs", DType::F32s)])
+                .with_derive(Derive::ArgMaxI64 {
+                    src: "probs".into(),
+                    as_col: "pred".into(),
+                })
+                .with_derive(Derive::MaxF64 {
+                    src: "probs".into(),
+                    as_col: "conf".into(),
+                }),
+        ))
     };
-    let p1 = classify(&mut fl, img, "resnet")?;
-    let p2 = classify(&mut fl, img, "vgg")?;
-    let p3 = classify(&mut fl, img, "inception")?;
-    let u = fl.union(&[p1, p2, p3])?;
-    let g = fl.groupby(u, "__rowid")?;
-    let best = fl.agg(g, AggFn::ArgMax, "conf")?;
-    fl.set_output(best)?;
+    let p1 = classify("resnet")?;
+    let p2 = classify("vgg")?;
+    let p3 = classify("inception")?;
+    let best = p1
+        .union(&[&p2, &p3])?
+        .groupby("__rowid")?
+        .agg(AggFn::ArgMax, "conf")?;
     Ok(PipelineSpec {
-        flow: fl,
+        flow: best.into_dataflow()?,
         make_input: Arc::new(|i| {
             datagen::image_table(&mut rng::for_case(0xE17, i as u64), 1)
         }),
@@ -87,14 +94,14 @@ pub fn image_cascade(manifest: &Manifest) -> Result<PipelineSpec> {
         .get("conf_p60")
         .copied()
         .unwrap_or(0.85);
-    let mut fl = Dataflow::new("cascade", Schema::new(vec![("img", DType::F32s)]));
-    let pre = fl.map(
-        fl.input(),
-        Func::model(ModelBinding::new("preproc", &["img"], &[("img", DType::F32s)])),
-    )?;
-    let simple = fl.map(
-        pre,
-        Func::model(
+    let src = Flow::source("cascade", Schema::new(vec![("img", DType::F32s)]));
+    let simple = src
+        .map(Func::model(ModelBinding::new(
+            "preproc",
+            &["img"],
+            &[("img", DType::F32s)],
+        )))?
+        .map(Func::model(
             ModelBinding::new("resnet", &["img"], &[("probs", DType::F32s)])
                 .with_passthrough(&["img"])
                 .with_derive(Derive::ArgMaxI64 {
@@ -105,12 +112,10 @@ pub fn image_cascade(manifest: &Manifest) -> Result<PipelineSpec> {
                     src: "probs".into(),
                     as_col: "conf".into(),
                 }),
-        ),
-    )?;
-    let low = fl.filter(simple, Predicate::threshold("conf", CmpOp::Lt, threshold))?;
-    let complexm = fl.map(
-        low,
-        Func::model(
+        ))?;
+    let complexm = simple
+        .filter_expr(col("conf").lt(lit(threshold)))?
+        .map(Func::model(
             ModelBinding::new("inception", &["img"], &[("probs2", DType::F32s)])
                 .with_derive(Derive::ArgMaxI64 {
                     src: "probs2".into(),
@@ -120,31 +125,14 @@ pub fn image_cascade(manifest: &Manifest) -> Result<PipelineSpec> {
                     src: "probs2".into(),
                     as_col: "conf2".into(),
                 }),
-        ),
-    )?;
-    // Drop bulky columns before the join; keep the predictions.
-    let simple_small = fl.map(
-        simple,
-        Func::rust(
-            "strip",
-            Some(vec![("pred", DType::I64), ("conf", DType::F64)]),
-            Arc::new(|_, t: &Table| {
-                project(t, &["pred", "conf"])
-            }),
-        ),
-    )?;
-    let complex_small = fl.map(
-        complexm,
-        Func::rust(
-            "strip2",
-            Some(vec![("pred2", DType::I64), ("conf2", DType::F64)]),
-            Arc::new(|_, t: &Table| project(t, &["pred2", "conf2"])),
-        ),
-    )?;
-    let joined = fl.join(simple_small, complex_small, None, JoinHow::Left)?;
-    let best = fl.map(
-        joined,
-        Func::rust(
+        ))?;
+    // Drop bulky columns before the join; keep the predictions.  Pure
+    // projections — the pruning rewrite sees through them.
+    let simple_small = simple.map(Func::project("strip", &["pred", "conf"]))?;
+    let complex_small = complexm.map(Func::project("strip2", &["pred2", "conf2"]))?;
+    let best = simple_small
+        .join(&complex_small, None, JoinHow::Left)?
+        .map(Func::rust(
             "max_conf",
             Some(vec![("pred", DType::I64), ("conf", DType::F64)]),
             Arc::new(|_, t: &Table| {
@@ -172,11 +160,9 @@ pub fn image_cascade(manifest: &Manifest) -> Result<PipelineSpec> {
                     vec![Column::I64(preds), Column::F64(confs)],
                 )
             }),
-        ),
-    )?;
-    fl.set_output(best)?;
+        ))?;
     Ok(PipelineSpec {
-        flow: fl,
+        flow: best.into_dataflow()?,
         make_input: Arc::new(|i| {
             datagen::image_table(&mut rng::for_case(0xCA5, i as u64), 1)
         }),
@@ -189,18 +175,14 @@ pub fn image_cascade(manifest: &Manifest) -> Result<PipelineSpec> {
 // -------------------------------------------------------------------------
 
 pub fn video_stream() -> Result<PipelineSpec> {
-    let mut fl = Dataflow::new("video", Schema::new(vec![("img", DType::F32s)]));
-    let yolo = fl.map(
-        fl.input(),
-        Func::model(
+    let src = Flow::source("video", Schema::new(vec![("img", DType::F32s)]));
+    // Objectness-weighted class scores, max over the 8x8 grid cells.
+    let flags = src
+        .map(Func::model(
             ModelBinding::new("yolo", &["img"], &[("grid", DType::F32s)])
                 .with_passthrough(&["img"]),
-        ),
-    )?;
-    // Objectness-weighted class scores, max over the 8x8 grid cells.
-    let flags = fl.map(
-        yolo,
-        Func::rust(
+        ))?
+        .map(Func::rust(
             "detect_flags",
             Some(vec![
                 ("img", DType::F32s),
@@ -239,49 +221,43 @@ pub fn video_stream() -> Result<PipelineSpec> {
                     ],
                 )
             }),
-        ),
-    )?;
-    let classify = |fl: &mut Dataflow, at, col: &str, model: &str, label: &str| {
-        let keep = fl.filter(at, Predicate::threshold(col, CmpOp::Ge, 0.4))?;
-        let m = fl.map(
-            keep,
-            Func::model(
+        ))?;
+    let classify = |score_col: &str, model: &str, label: &str| -> Result<Flow> {
+        let m = flags
+            .filter_expr(col(score_col).ge(lit(0.4)))?
+            .map(Func::model(
                 ModelBinding::new(model, &["img"], &[("probs", DType::F32s)])
                     .with_derive(Derive::ArgMaxI64 {
                         src: "probs".into(),
                         as_col: "pred".into(),
                     }),
-            ),
-        )?;
+            ))?;
         let lbl = label.to_string();
-        fl.map(
-            m,
-            Func::rust(
-                &format!("label_{label}"),
-                Some(vec![("class", DType::Str)]),
-                Arc::new(move |_, t: &Table| {
-                    let classes: Vec<String> = t
-                        .col_i64("pred")?
-                        .iter()
-                        .map(|p| format!("{lbl}-{p}"))
-                        .collect();
-                    Table::from_columns(
-                        Schema::new(vec![("class", DType::Str)]),
-                        t.ids(),
-                        vec![Column::Str(classes)],
-                    )
-                }),
-            ),
-        )
+        m.map(Func::rust(
+            &format!("label_{label}"),
+            Some(vec![("class", DType::Str)]),
+            Arc::new(move |_, t: &Table| {
+                let classes: Vec<String> = t
+                    .col_i64("pred")?
+                    .iter()
+                    .map(|p| format!("{lbl}-{p}"))
+                    .collect();
+                Table::from_columns(
+                    Schema::new(vec![("class", DType::Str)]),
+                    t.ids(),
+                    vec![Column::Str(classes)],
+                )
+            }),
+        ))
     };
-    let people = classify(&mut fl, flags, "person", "resnet_person", "person")?;
-    let vehicles = classify(&mut fl, flags, "vehicle", "resnet_vehicle", "vehicle")?;
-    let u = fl.union(&[people, vehicles])?;
-    let g = fl.groupby(u, "class")?;
-    let counts = fl.agg(g, AggFn::Count, "class")?;
-    fl.set_output(counts)?;
+    let people = classify("person", "resnet_person", "person")?;
+    let vehicles = classify("vehicle", "resnet_vehicle", "vehicle")?;
+    let counts = people
+        .union(&[&vehicles])?
+        .groupby("class")?
+        .agg(AggFn::Count, "class")?;
     Ok(PipelineSpec {
-        flow: fl,
+        flow: counts.into_dataflow()?,
         make_input: Arc::new(|i| datagen::clip_table(&mut rng::for_case(0xF1D, i as u64))),
         setup: None,
     })
@@ -292,40 +268,31 @@ pub fn video_stream() -> Result<PipelineSpec> {
 // -------------------------------------------------------------------------
 
 pub fn nmt() -> Result<PipelineSpec> {
-    let mut fl = Dataflow::new(
+    let src = Flow::source(
         "nmt",
         Schema::new(vec![("text", DType::F32s), ("tokens", DType::I32s)]),
     );
-    let lang = fl.map(
-        fl.input(),
-        Func::model(
-            ModelBinding::new("langid", &["text"], &[("lang_probs", DType::F32s)])
-                .with_passthrough(&["tokens"])
-                .with_derive(Derive::IndexF64 {
-                    src: "lang_probs".into(),
-                    index: 0,
-                    as_col: "p_fr".into(),
-                }),
-        ),
-    )?;
-    let translate = |fl: &mut Dataflow, at, model: &str| {
-        fl.map(
-            at,
-            Func::model(ModelBinding::new(
-                model,
-                &["tokens"],
-                &[("out_ids", DType::I32s), ("conf", DType::F64)],
-            )),
-        )
+    let lang = src.map(Func::model(
+        ModelBinding::new("langid", &["text"], &[("lang_probs", DType::F32s)])
+            .with_passthrough(&["tokens"])
+            .with_derive(Derive::IndexF64 {
+                src: "lang_probs".into(),
+                index: 0,
+                as_col: "p_fr".into(),
+            }),
+    ))?;
+    let translate = |routed: &Flow, model: &str| {
+        routed.map(Func::model(ModelBinding::new(
+            model,
+            &["tokens"],
+            &[("out_ids", DType::I32s), ("conf", DType::F64)],
+        )))
     };
-    let fr_in = fl.filter(lang, Predicate::threshold("p_fr", CmpOp::Ge, 0.5))?;
-    let fr = translate(&mut fl, fr_in, "nmt_fr")?;
-    let de_in = fl.filter(lang, Predicate::threshold("p_fr", CmpOp::Lt, 0.5))?;
-    let de = translate(&mut fl, de_in, "nmt_de")?;
-    let u = fl.union(&[fr, de])?;
-    fl.set_output(u)?;
+    let fr = translate(&lang.filter_expr(col("p_fr").ge(lit(0.5)))?, "nmt_fr")?;
+    let de = translate(&lang.filter_expr(col("p_fr").lt(lit(0.5)))?, "nmt_de")?;
+    let out = fr.union(&[&de])?;
     Ok(PipelineSpec {
-        flow: fl,
+        flow: out.into_dataflow()?,
         make_input: Arc::new(|i| datagen::nmt_table(&mut rng::for_case(0x107, i as u64), 1)),
         setup: None,
     })
@@ -350,7 +317,7 @@ impl Default for RecsysScale {
 }
 
 pub fn recommender(scale: RecsysScale) -> Result<PipelineSpec> {
-    let mut fl = Dataflow::new(
+    let src = Flow::source(
         "recsys",
         Schema::new(vec![
             ("user_key", DType::Str),
@@ -358,11 +325,10 @@ pub fn recommender(scale: RecsysScale) -> Result<PipelineSpec> {
             ("cat_key", DType::Str),
         ]),
     );
-    let ulk = fl.lookup(fl.input(), LookupKey::Column("user_key".into()), "ublob")?;
-    let clk = fl.lookup(ulk, LookupKey::Column("cat_key".into()), "cblob")?;
-    let decode = fl.map(
-        clk,
-        Func::rust(
+    let score = src
+        .lookup(LookupKey::Column("user_key".into()), "ublob")?
+        .lookup(LookupKey::Column("cat_key".into()), "cblob")?
+        .map(Func::rust(
             "decode",
             Some(vec![("uvec", DType::F32s), ("cmat", DType::F32s)]),
             Arc::new(|_, t: &Table| {
@@ -382,20 +348,15 @@ pub fn recommender(scale: RecsysScale) -> Result<PipelineSpec> {
                     vec![Column::F32s(uvec), Column::F32s(cmat)],
                 )
             }),
-        ),
-    )?;
-    let score = fl.map(
-        decode,
-        Func::model(ModelBinding::new(
+        ))?
+        .map(Func::model(ModelBinding::new(
             "recsys",
             &["uvec", "cmat"],
             &[("top_idx", DType::I32s), ("top_scores", DType::F32s)],
-        )),
-    )?;
-    fl.set_output(score)?;
+        )))?;
     let (nu, nc) = (scale.n_users, scale.n_categories);
     Ok(PipelineSpec {
-        flow: fl,
+        flow: score.into_dataflow()?,
         make_input: Arc::new(move |i| {
             datagen::recsys_table(&mut rng::for_case(0x4EC, i as u64), nu, nc)
         }),
@@ -417,53 +378,49 @@ pub fn recommender(scale: RecsysScale) -> Result<PipelineSpec> {
 /// (first pixel), forwarding ~60% of requests like the calibrated real
 /// cascade.
 pub fn synthetic_cascade() -> Result<PipelineSpec> {
-    let mut fl = Dataflow::new("syn_cascade", Schema::new(vec![("img", DType::F32s)]));
-    let pre = fl.map(
-        fl.input(),
-        Func::identity("preproc")
-            .with_service_model("preproc")
+    let src = Flow::source("syn_cascade", Schema::new(vec![("img", DType::F32s)]));
+    let simple = src
+        .map(
+            Func::identity("preproc")
+                .with_service_model("preproc")
+                .with_batch_aware(true),
+        )?
+        .map(
+            Func::rust(
+                "simple",
+                Some(vec![("pred", DType::I64), ("conf", DType::F64)]),
+                Arc::new(|_, t: &Table| {
+                    let imgs = t.col_f32s("img")?;
+                    let n = t.len();
+                    let mut preds = Vec::with_capacity(n);
+                    let mut confs = Vec::with_capacity(n);
+                    for i in 0..n {
+                        let x = (imgs.get(i).first().copied().unwrap_or(0.0) as f64
+                            / 255.0)
+                            .clamp(0.0, 1.0);
+                        preds.push((x * 1000.0) as i64);
+                        confs.push(x);
+                    }
+                    Table::from_columns(
+                        Schema::new(vec![("pred", DType::I64), ("conf", DType::F64)]),
+                        t.ids(),
+                        vec![Column::I64(preds), Column::F64(confs)],
+                    )
+                }),
+            )
+            .with_service_model("resnet")
+            .with_device(Device::Gpu)
             .with_batch_aware(true),
-    )?;
-    let simple = fl.map(
-        pre,
-        Func::rust(
-            "simple",
-            Some(vec![("pred", DType::I64), ("conf", DType::F64)]),
-            Arc::new(|_, t: &Table| {
-                let imgs = t.col_f32s("img")?;
-                let n = t.len();
-                let mut preds = Vec::with_capacity(n);
-                let mut confs = Vec::with_capacity(n);
-                for i in 0..n {
-                    let x = (imgs.get(i).first().copied().unwrap_or(0.0) as f64
-                        / 255.0)
-                        .clamp(0.0, 1.0);
-                    preds.push((x * 1000.0) as i64);
-                    confs.push(x);
-                }
-                Table::from_columns(
-                    Schema::new(vec![("pred", DType::I64), ("conf", DType::F64)]),
-                    t.ids(),
-                    vec![Column::I64(preds), Column::F64(confs)],
-                )
-            }),
-        )
-        .with_service_model("resnet")
-        .with_device(Device::Gpu)
-        .with_batch_aware(true),
-    )?;
-    let low = fl.filter(simple, Predicate::threshold("conf", CmpOp::Lt, 0.6))?;
-    let complexm = fl.map(
-        low,
+        )?;
+    let complexm = simple.filter_expr(col("conf").lt(lit(0.6)))?.map(
         Func::identity("complex")
             .with_service_model("inception")
             .with_device(Device::Gpu)
             .with_batch_aware(true),
     )?;
-    let joined = fl.join(simple, complexm, None, JoinHow::Left)?;
-    fl.set_output(joined)?;
+    let joined = simple.join(&complexm, None, JoinHow::Left)?;
     Ok(PipelineSpec {
-        flow: fl,
+        flow: joined.into_dataflow()?,
         make_input: Arc::new(|i| {
             datagen::image_table(&mut rng::for_case(0x5CA5, i as u64), 1)
         }),
@@ -476,36 +433,28 @@ pub fn synthetic_cascade() -> Result<PipelineSpec> {
 /// The high variance is what makes competitive execution profitable, so
 /// this is the planner's competitive-candidate showcase.
 pub fn synthetic_nmt() -> Result<PipelineSpec> {
-    let mut fl = Dataflow::new(
+    let src = Flow::source(
         "syn_nmt",
         Schema::new(vec![("p_fr", DType::F64), ("tokens", DType::I32s)]),
     );
-    let lang = fl.map(
-        fl.input(),
+    let lang = src.map(
         Func::identity("langid")
             .with_service_model("langid")
             .with_batch_aware(true),
     )?;
-    let fr_in = fl.filter(lang, Predicate::threshold("p_fr", CmpOp::Ge, 0.5))?;
-    let fr = fl.map(
-        fr_in,
-        Func::identity("nmt_fr")
-            .with_service_model("nmt_fr")
-            .with_device(Device::Gpu)
-            .with_batch_aware(true),
-    )?;
-    let de_in = fl.filter(lang, Predicate::threshold("p_fr", CmpOp::Lt, 0.5))?;
-    let de = fl.map(
-        de_in,
-        Func::identity("nmt_de")
-            .with_service_model("nmt_de")
-            .with_device(Device::Gpu)
-            .with_batch_aware(true),
-    )?;
-    let u = fl.union(&[fr, de])?;
-    fl.set_output(u)?;
+    let translate = |routed: &Flow, model: &str| {
+        routed.map(
+            Func::identity(model)
+                .with_service_model(model)
+                .with_device(Device::Gpu)
+                .with_batch_aware(true),
+        )
+    };
+    let fr = translate(&lang.filter_expr(col("p_fr").ge(lit(0.5)))?, "nmt_fr")?;
+    let de = translate(&lang.filter_expr(col("p_fr").lt(lit(0.5)))?, "nmt_de")?;
+    let out = fr.union(&[&de])?;
     Ok(PipelineSpec {
-        flow: fl,
+        flow: out.into_dataflow()?,
         make_input: Arc::new(|i| {
             let mut r = rng::for_case(0x5107, i as u64);
             let mut t = Table::new(Schema::new(vec![
@@ -521,12 +470,6 @@ pub fn synthetic_nmt() -> Result<PipelineSpec> {
         }),
         setup: None,
     })
-}
-
-/// Project a table to a subset of columns (helper for strip stages):
-/// whole-column clones, no per-row Value boxing.
-fn project(t: &Table, cols: &[&str]) -> Result<Table> {
-    t.project(cols)
 }
 
 #[cfg(test)]
@@ -585,6 +528,17 @@ mod tests {
     }
 
     #[test]
+    fn synthetic_pipelines_serve_through_local_deployment() {
+        use crate::serve::{Deployment, LocalServer};
+        for spec in [synthetic_cascade().unwrap(), synthetic_nmt().unwrap()] {
+            let dep = LocalServer::new(spec.flow.clone()).unwrap();
+            let out = dep.call((spec.make_input)(3)).unwrap();
+            assert_eq!(out.len(), 1);
+            assert_eq!(dep.metrics().completed(), 1);
+        }
+    }
+
+    #[test]
     fn make_input_reproducible_run_to_run() {
         // Row IDs are globally fresh, so compare payload values only.
         let vals = |t: &Table| {
@@ -603,18 +557,5 @@ mod tests {
             assert_eq!(vals(&a), vals(&b), "{:?} not deterministic", spec.flow.name);
             assert_ne!(vals(&a), vals(&(spec.make_input)(8)));
         }
-    }
-
-    #[test]
-    fn project_helper() {
-        let mut t = Table::new(Schema::new(vec![
-            ("a", DType::I64),
-            ("b", DType::F64),
-        ]));
-        t.push_fresh(vec![Value::I64(1), Value::F64(2.0)]).unwrap();
-        let p = project(&t, &["b"]).unwrap();
-        assert_eq!(p.schema().cols().len(), 1);
-        assert_eq!(p.value(0, "b").unwrap().as_f64().unwrap(), 2.0);
-        assert!(project(&t, &["nope"]).is_err());
     }
 }

@@ -1,0 +1,136 @@
+//! Error-path coverage for builder typechecking (both API surfaces): the
+//! paper's "Cloudflow raises an error" behavior must fail *eagerly*, and
+//! the message must name the offending operator and column so misbuilt
+//! pipelines are debuggable from the error alone.
+
+use cloudflow::dataflow::expr::{col, lit};
+use cloudflow::dataflow::operator::{CmpOp, Func, Predicate, SleepDist};
+use cloudflow::dataflow::table::{DType, Schema};
+use cloudflow::dataflow::v2::Flow;
+use cloudflow::dataflow::{AggFn, Dataflow, JoinHow};
+
+fn schema() -> Schema {
+    Schema::new(vec![
+        ("url", DType::Str),
+        ("conf", DType::F64),
+        ("img", DType::F32s),
+    ])
+}
+
+/// Full anyhow chain as a string (contexts included).
+fn chain(e: anyhow::Error) -> String {
+    format!("{e:#}")
+}
+
+#[test]
+fn filter_errors_name_filter_and_column() {
+    let src = Flow::source("t", schema());
+    // threshold on a non-f64 column
+    let err = chain(src.filter(Predicate::threshold("url", CmpOp::Lt, 0.5)).unwrap_err());
+    assert!(err.contains("filter") && err.contains("url"), "{err}");
+    // threshold on a missing column
+    let err = chain(src.filter(Predicate::threshold("nope", CmpOp::Lt, 0.5)).unwrap_err());
+    assert!(err.contains("filter") && err.contains("nope"), "{err}");
+    // non-bool expression predicate
+    let err = chain(src.filter_expr(col("conf") + lit(1.0)).unwrap_err());
+    assert!(err.contains("filter") && err.contains("bool"), "{err}");
+    // expression reading a missing column
+    let err = chain(src.filter_expr(col("ghost").lt(lit(1.0))).unwrap_err());
+    assert!(err.contains("ghost"), "{err}");
+}
+
+#[test]
+fn schema_mismatch_errors_name_both_sides() {
+    let a = Flow::source("t", schema());
+    let wide = a.map(Func::identity("wide")).unwrap();
+    let narrow = a.project(&["conf"]).unwrap();
+    // union schema mismatch names the op and prints both schemas
+    let err = chain(wide.union(&[&narrow]).unwrap_err());
+    assert!(err.contains("union") && err.contains("conf"), "{err}");
+    // map input-type annotation mismatch names the map
+    let bad = Func::identity("picky").with_expect_input(vec![DType::F64]);
+    let err = chain(a.map(bad).unwrap_err());
+    assert!(err.contains("picky") && err.contains("mismatch"), "{err}");
+    // extend schema mismatch
+    let mut other = Dataflow::new("o", Schema::new(vec![("z", DType::I64)]));
+    let o = other.map(other.input(), Func::identity("x")).unwrap();
+    other.set_output(o).unwrap();
+    let err = chain(a.extend(&other).unwrap_err());
+    assert!(err.contains("extend") && err.contains("mismatch"), "{err}");
+}
+
+#[test]
+fn grouping_misuse_errors_name_columns() {
+    let src = Flow::source("t", schema());
+    // groupby on a vector column
+    let err = chain(src.groupby("img").unwrap_err());
+    assert!(err.contains("groupby") && err.contains("img"), "{err}");
+    // double groupby names the existing grouping
+    let g = src.groupby("url").unwrap();
+    let err = chain(g.groupby("conf").unwrap_err());
+    assert!(err.contains("already grouped") && err.contains("url"), "{err}");
+    // join on a grouped input
+    let err = chain(g.join(&src, None, JoinHow::Inner).unwrap_err());
+    assert!(err.contains("join") && err.contains("ungrouped"), "{err}");
+    // a map whose declared schema drops the grouping column
+    let err = chain(g.project(&["conf"]).unwrap_err());
+    assert!(err.contains("grouping column") && err.contains("url"), "{err}");
+    // agg over a non-numeric column names the agg and column
+    let err = chain(g.agg(AggFn::Sum, "url").unwrap_err());
+    assert!(err.contains("sum") && err.contains("url"), "{err}");
+}
+
+#[test]
+fn dangling_node_ref_rejected() {
+    // A NodeRef taken from a *different*, larger flow points past this
+    // flow's arena — every builder method must reject it eagerly.
+    let mut big = Dataflow::new("big", schema());
+    let mut tail = big.map(big.input(), Func::identity("a")).unwrap();
+    for i in 0..8 {
+        tail = big.map(tail, Func::identity(&format!("b{i}"))).unwrap();
+    }
+    let dangling = tail; // index 9, far beyond `fl`'s two nodes
+
+    let mut fl = Dataflow::new("t", schema());
+    let real = fl.map(fl.input(), Func::identity("a")).unwrap();
+    let err = chain(fl.map(dangling, Func::identity("b")).unwrap_err());
+    assert!(err.contains("dangling"), "{err}");
+    assert!(fl.filter(dangling, Predicate::threshold("conf", CmpOp::Lt, 0.5)).is_err());
+    assert!(fl.groupby(dangling, "url").is_err());
+    assert!(fl.join(real, dangling, None, JoinHow::Left).is_err());
+    assert!(fl.union(&[real, dangling]).is_err());
+    assert!(fl.set_output(dangling).is_err());
+}
+
+#[test]
+fn anyof_and_union_arity_errors() {
+    let src = Flow::source("t", schema());
+    let err = chain(src.anyof(&[]).unwrap_err());
+    assert!(err.contains("anyof") && err.contains("at least 2"), "{err}");
+    // legacy surface too
+    let mut fl = Dataflow::new("t", schema());
+    let a = fl.map(fl.input(), Func::sleep("s", SleepDist::ConstMs(1.0))).unwrap();
+    let err = chain(fl.anyof(&[a]).unwrap_err());
+    assert!(err.contains("anyof"), "{err}");
+    let err = chain(fl.union(&[a]).unwrap_err());
+    assert!(err.contains("union"), "{err}");
+}
+
+#[test]
+fn select_errors_name_stage_and_column() {
+    let src = Flow::source("t", schema());
+    let err = chain(src.named_select("proj", &[("x", col("missing"))]).unwrap_err());
+    assert!(err.contains("proj") && err.contains("missing"), "{err}");
+    let err = chain(
+        src.named_select("proj", &[("x", col("conf")), ("x", col("conf"))])
+            .unwrap_err(),
+    );
+    assert!(err.contains("duplicate") && err.contains('x'), "{err}");
+    let err = chain(src.named_select("proj", &[]).unwrap_err());
+    assert!(err.contains("no output columns"), "{err}");
+    // vector columns cannot be computed on, only passed through
+    let err = chain(
+        src.named_select("proj", &[("y", col("img") + lit(1.0))]).unwrap_err(),
+    );
+    assert!(err.contains("non-numeric"), "{err}");
+}

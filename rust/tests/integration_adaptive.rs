@@ -120,8 +120,7 @@ fn controller_recovers_from_drift() {
 
     // Calm traffic: no action.
     open_loop(
-        &cluster,
-        h,
+        &cluster.deployment(h).unwrap(),
         &ArrivalTrace::constant(30.0, 600.0),
         |i| (sc.spec.make_input)(i),
     );
@@ -133,8 +132,7 @@ fn controller_recovers_from_drift() {
     let mut replanned = false;
     for round in 0..6 {
         open_loop(
-            &cluster,
-            h,
+            &cluster.deployment(h).unwrap(),
             &ArrivalTrace::constant(30.0, 500.0),
             |i| (sc.spec.make_input)(1000 * (round + 1) + i),
         );
@@ -150,8 +148,7 @@ fn controller_recovers_from_drift() {
 
     // Post-swap traffic attains the SLO again (40ms effective service).
     let tail = open_loop(
-        &cluster,
-        h,
+        &cluster.deployment(h).unwrap(),
         &ArrivalTrace::constant(30.0, 1_000.0),
         |i| (sc.spec.make_input)(50_000 + i),
     );
@@ -193,8 +190,7 @@ fn overload_sheds_and_bounds_admitted_tail() {
     let mut shed_seen = false;
     for round in 0..6 {
         open_loop(
-            &cluster,
-            h,
+            &cluster.deployment(h).unwrap(),
             &ArrivalTrace::constant(200.0, 300.0),
             |i| (sc.make_input)(1000 * round + i),
         );
@@ -225,8 +221,7 @@ fn overload_sheds_and_bounds_admitted_tail() {
         cloudflow::simulation::clock::sleep_ms(100.0);
     }
     let mut steady = open_loop(
-        &cluster,
-        h,
+        &cluster.deployment(h).unwrap(),
         &ArrivalTrace::constant(200.0, 1_200.0),
         |i| (sc.make_input)(90_000 + i),
     );

@@ -61,7 +61,8 @@ fn fusion_latency_improves_with_chain_length() {
         let h = cluster.register(compile(&chain(n), opts).unwrap(), 1).unwrap();
         // warm-up + measure a few
         cluster.execute(h, input()).unwrap().result().unwrap();
-        let r = cloudflow::workloads::closed_loop(&cluster, h, 1, 5, |_| input());
+        let dep = cluster.deployment(h).unwrap();
+        let r = cloudflow::workloads::closed_loop(&dep, 1, 5, |_| input());
         let mut s = r.latencies;
         s.median()
     };
@@ -238,7 +239,7 @@ fn competitive_execution_cuts_tail_latency() {
             t.push_fresh(vec![Value::F64(0.0)]).unwrap();
             t
         };
-        let r = cloudflow::workloads::closed_loop(&cluster, h, 1, 60, input);
+        let r = cloudflow::workloads::closed_loop(&cluster.deployment(h).unwrap(), 1, 60, input);
         let mut s = r.latencies;
         s.percentile(95.0)
     };

@@ -467,3 +467,219 @@ fn prop_filter_partition() {
         Ok(())
     });
 }
+
+// ---------------------------------------------------------------------
+// Flow API v2 + expression rewrites (this PR)
+// ---------------------------------------------------------------------
+
+/// A random *inspectable* pipeline over (name, conf, n, v): expr filters,
+/// expr selects, identity maps, and an optional trailing groupby+agg —
+/// built through BOTH builders from one op list so the v2-vs-legacy and
+/// rewrite-equivalence properties share a generator.
+#[derive(Debug, Clone)]
+enum ROp {
+    Identity(usize),
+    FilterConf(CmpOp, f64),
+    FilterAnd(f64, i64),
+    SelectScaled(f64),
+    GroupCount,
+}
+
+fn random_ops(rng: &mut Rng) -> Vec<ROp> {
+    let mut ops = Vec::new();
+    let steps = 1 + rng.below(5);
+    for s in 0..steps as usize {
+        match rng.below(3) {
+            0 => ops.push(ROp::Identity(s)),
+            1 => {
+                let op = *rng.choice(&[CmpOp::Lt, CmpOp::Ge]);
+                ops.push(ROp::FilterConf(op, rng.f64() * 1.2));
+            }
+            _ => ops.push(ROp::FilterAnd(rng.f64(), rng.range(-40, 40))),
+        }
+    }
+    // A schema-narrowing select exercises pruning interplay; keep the
+    // grouping columns alive for the optional trailing groupby.
+    if rng.bool(0.5) {
+        ops.push(ROp::SelectScaled(0.5 + rng.f64()));
+    }
+    if rng.bool(0.3) {
+        ops.push(ROp::GroupCount);
+    }
+    ops
+}
+
+fn prop_schema() -> Schema {
+    Schema::new(vec![
+        ("name", DType::Str),
+        ("conf", DType::F64),
+        ("n", DType::I64),
+        ("v", DType::F32s),
+    ])
+}
+
+fn prop_input(rng: &mut Rng, max_rows: usize) -> Table {
+    let mut t = Table::new(prop_schema());
+    for _ in 0..rng.below(max_rows as u64 + 1) {
+        t.push_fresh(vec![
+            Value::Str(format!("k{}", rng.below(3))),
+            Value::F64(rng.f64()),
+            Value::I64(rng.range(-50, 50)),
+            Value::f32s(vec![rng.f64() as f32; rng.below(6) as usize]),
+        ])
+        .unwrap();
+    }
+    t
+}
+
+fn build_legacy(ops: &[ROp]) -> Dataflow {
+    use cloudflow::dataflow::{col, lit};
+    let mut fl = Dataflow::new("rand_v2", prop_schema());
+    let mut cur = fl.input();
+    for op in ops {
+        cur = match op {
+            ROp::Identity(s) => fl.map(cur, Func::identity(&format!("id{s}"))).unwrap(),
+            ROp::FilterConf(op, t) => fl
+                .filter(cur, Predicate::expr(col("conf").cmp_with(*op, lit(*t))))
+                .unwrap(),
+            ROp::FilterAnd(t, k) => fl
+                .filter(
+                    cur,
+                    Predicate::expr(
+                        col("conf").ge(lit(*t)).or(col("n").lt(lit(*k))),
+                    ),
+                )
+                .unwrap(),
+            ROp::SelectScaled(m) => fl
+                .map(
+                    cur,
+                    Func::select(
+                        "scaled",
+                        vec![
+                            ("name", col("name")),
+                            ("conf", col("conf") * lit(*m)),
+                            ("n", col("n")),
+                        ],
+                    ),
+                )
+                .unwrap(),
+            ROp::GroupCount => {
+                let g = fl.groupby(cur, "name").unwrap();
+                fl.agg(g, AggFn::Count, "conf").unwrap()
+            }
+        };
+    }
+    fl.set_output(cur).unwrap();
+    fl
+}
+
+fn build_v2(ops: &[ROp]) -> Dataflow {
+    use cloudflow::dataflow::v2::Flow;
+    use cloudflow::dataflow::{col, lit};
+    let mut cur = Flow::source("rand_v2", prop_schema());
+    for op in ops {
+        cur = match op {
+            ROp::Identity(s) => cur.map(Func::identity(&format!("id{s}"))).unwrap(),
+            ROp::FilterConf(op, t) => {
+                cur.filter_expr(col("conf").cmp_with(*op, lit(*t))).unwrap()
+            }
+            ROp::FilterAnd(t, k) => cur
+                .filter_expr(col("conf").ge(lit(*t)).or(col("n").lt(lit(*k))))
+                .unwrap(),
+            ROp::SelectScaled(m) => cur
+                .named_select(
+                    "scaled",
+                    &[
+                        ("name", col("name")),
+                        ("conf", col("conf") * lit(*m)),
+                        ("n", col("n")),
+                    ],
+                )
+                .unwrap(),
+            ROp::GroupCount => cur.groupby("name").unwrap().agg(AggFn::Count, "conf").unwrap(),
+        };
+    }
+    cur.into_dataflow().unwrap()
+}
+
+#[test]
+fn prop_v2_and_legacy_compile_to_identical_plans() {
+    check("v2 and legacy builders compile identically", 40, |rng| {
+        let ops = random_ops(rng);
+        let legacy = build_legacy(&ops);
+        let v2 = build_v2(&ops);
+        // Random flag combinations, including the new rewrites.
+        let opts = match rng.below(4) {
+            0 => OptFlags::none(),
+            1 => OptFlags::none().with_fusion(),
+            2 => OptFlags::all(),
+            _ => OptFlags::all().without_pruning(),
+        };
+        let pa = compile(&legacy, &opts).map_err(|e| format!("legacy: {e:#}"))?;
+        let pb = compile(&v2, &opts).map_err(|e| format!("v2: {e:#}"))?;
+        // Byte-identical modulo the opaque-closure placeholder: these op
+        // lists contain no closures, so Debug is a full serialization.
+        let (da, db) = (format!("{pa:?}"), format!("{pb:?}"));
+        cloudflow::prop_assert!(da == db, "plans differ:\n{da}\nvs\n{db}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_rewrites_preserve_results() {
+    use cloudflow::dataflow::compiler::rewrite_flow;
+    check("pushdown/pruning preserve results", 60, |rng| {
+        let ops = random_ops(rng);
+        let fl = build_v2(&ops);
+        let input = prop_input(rng, 14);
+        let ctx = ExecCtx::local();
+        let reference = exec_local::execute(&fl, input.clone(), &ctx)
+            .map_err(|e| format!("oracle: {e:#}"))?;
+        for opts in [
+            OptFlags::none().with_pushdown(),
+            OptFlags::none().with_pruning(),
+            OptFlags::all(),
+        ] {
+            let rewritten = rewrite_flow(&fl, &opts).map_err(|e| format!("rewrite: {e:#}"))?;
+            let out = exec_local::execute(&rewritten, input.clone(), &ctx)
+                .map_err(|e| format!("rewritten exec: {e:#}"))?;
+            // Pruning may drop columns the output op no longer carries?
+            // No: the output node's columns are always preserved.
+            cloudflow::prop_assert!(
+                out.schema() == reference.schema(),
+                "schema changed: {} vs {}",
+                out.schema(),
+                reference.schema()
+            );
+            cloudflow::prop_assert!(
+                canon(&out) == canon(&reference),
+                "rewritten results differ under {opts:?}"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_rewritten_cluster_matches_oracle() {
+    check("cluster under OptFlags::all matches oracle", 25, |rng| {
+        let ops = random_ops(rng);
+        let fl = build_v2(&ops);
+        let input = prop_input(rng, 10);
+        let ctx = ExecCtx::local();
+        let reference = exec_local::execute(&fl, input.clone(), &ctx)
+            .map_err(|e| format!("oracle: {e:#}"))?;
+        let cluster = Cluster::new(None);
+        let plan = compile(&fl, &OptFlags::all()).map_err(|e| format!("{e:#}"))?;
+        let h = cluster.register(plan, 1).map_err(|e| format!("{e:#}"))?;
+        let out = cluster
+            .execute(h, input)
+            .and_then(|f| f.result())
+            .map_err(|e| format!("cluster: {e:#}"))?;
+        cloudflow::prop_assert!(
+            canon(&out) == canon(&reference),
+            "rewritten cluster != oracle\n{out}\nvs\n{reference}"
+        );
+        Ok(())
+    });
+}
