@@ -63,7 +63,7 @@ fn main() {
     println!("\nallocation (t, slow replicas, fast replicas):");
     let alloc = cluster.metrics(h).allocation.lock().unwrap().clone();
     let mut last = (0usize, 0usize);
-    for (t, stage, n) in &alloc {
+    for (t, stage, n) in alloc.iter() {
         let mut cur = last;
         if stage.contains("slow") {
             cur.0 = *n;

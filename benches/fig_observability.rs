@@ -1,0 +1,103 @@
+//! Observability: tracing overhead and critical-path attribution.
+//!
+//! Phase 1 (overhead): the model-free `synthetic_cascade` through a live
+//! cluster at sampling fractions 0.0 / 0.1 / 1.0; p50/p99/throughput per
+//! rate.  The headline number is the p99 delta vs tracing off — the
+//! integration suite holds the >=10% row to within 5%.
+//!
+//! Phase 2 (attribution): rate 1.0 over the same pipeline, then the
+//! per-stage critical-path blame table, the observed selectivity the
+//! planner can fold back into its `Profile`, and the tiling check (path
+//! durations sum to each trace's recorded e2e latency).
+
+mod bench_common;
+
+use bench_common::{header, jnum, jstr, json_row, scaled, standard_flags, write_bench_json};
+use cloudflow::cloudburst::Cluster;
+use cloudflow::dataflow::compiler::compile;
+use cloudflow::obs;
+use cloudflow::obs::trace;
+use cloudflow::workloads::{closed_loop, pipelines};
+
+fn main() {
+    let mut rows_json = Vec::new();
+
+    header("observability: tracing overhead on synthetic_cascade");
+    let requests = scaled(240);
+    println!("{:<12} {:>10} {:>10} {:>10}", "sample_rate", "p50(ms)", "p99(ms)", "r/s");
+    for rate in [0.0, 0.1, 1.0] {
+        trace::set_sample_rate(rate);
+        let spec = pipelines::synthetic_cascade().unwrap();
+        let plan = compile(&spec.flow, &standard_flags()).unwrap();
+        let cluster = Cluster::new(None);
+        let h = cluster.register(plan, 2).unwrap();
+        let dep = cluster.deployment(h).unwrap();
+        closed_loop(&dep, 8, requests / 4 + 2, |i| (spec.make_input)(i));
+        let mut r = closed_loop(&dep, 8, requests, |i| (spec.make_input)(i + 1000));
+        let (med, p99, rps) = r.report();
+        println!("{rate:<12} {med:>10.1} {p99:>10.1} {rps:>10.1}");
+        rows_json.push(json_row(&[
+            ("case", jstr("overhead")),
+            ("sample_rate", jnum(rate)),
+            ("p50_ms", jnum(med)),
+            ("p99_ms", jnum(p99)),
+            ("throughput_rps", jnum(rps)),
+        ]));
+        // Don't let one phase's traces leak into the next.
+        let _ = trace::drain_finished();
+    }
+
+    header("observability: critical-path attribution (rate 1.0)");
+    trace::set_sample_rate(1.0);
+    let spec = pipelines::synthetic_cascade().unwrap();
+    let plan = compile(&spec.flow, &standard_flags()).unwrap();
+    let cluster = Cluster::new(None);
+    let h = cluster.register(plan, 2).unwrap();
+    let dep = cluster.deployment(h).unwrap();
+    let attributed = scaled(120);
+    closed_loop(&dep, 4, attributed, |i| (spec.make_input)(i + 5000));
+    trace::set_sample_rate(0.0);
+    let traces = trace::drain_finished_for("syn_cascade");
+    let report = obs::report::analyze(&traces);
+    print!("{}", report.render());
+
+    let mut worst = 0.0f64;
+    for tr in &traces {
+        let Some(e2e) = tr.e2e_ms() else { continue };
+        if e2e <= 0.0 {
+            continue;
+        }
+        let sum: f64 = obs::report::critical_path(tr).iter().map(|e| e.duration_ms).sum();
+        worst = worst.max((sum - e2e).abs() / e2e);
+    }
+    println!(
+        "tiling: worst |path_sum - e2e| / e2e = {worst:.2e} over {} trace(s)",
+        report.traces
+    );
+
+    for e in &report.entries {
+        rows_json.push(json_row(&[
+            ("case", jstr("blame")),
+            ("stage", jstr(&e.label)),
+            ("kind", jstr(e.kind.label())),
+            ("total_ms", jnum(e.total_ms)),
+            ("share", jnum(e.share(report.total_e2e_ms))),
+        ]));
+    }
+    for s in &report.selectivity {
+        rows_json.push(json_row(&[
+            ("case", jstr("selectivity")),
+            ("stage", jstr(&s.label)),
+            ("invoke_fraction", jnum(s.invoke_fraction)),
+            ("mean_rows_in", jnum(s.mean_rows_in)),
+            ("mean_rows_out", jnum(s.mean_rows_out)),
+        ]));
+    }
+    rows_json.push(json_row(&[
+        ("case", jstr("tiling_check")),
+        ("traces", jnum(report.traces as f64)),
+        ("worst_rel_residue", jnum(worst)),
+    ]));
+
+    write_bench_json("observability", &rows_json);
+}

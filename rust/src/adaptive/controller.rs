@@ -29,6 +29,8 @@ use anyhow::Result;
 use crate::cloudburst::cluster::{ClusterInner, DagHandle};
 use crate::cloudburst::Cluster;
 use crate::dataflow::compiler::Plan;
+use crate::obs;
+use crate::obs::journal::EventKind;
 use crate::planner::{plan_max_throughput, tune_profile, DeploymentPlan, Slo, TunerOptions};
 use crate::util::shutdown::ShutdownGate;
 
@@ -254,11 +256,18 @@ impl AdaptiveController {
             &mut self.state,
             &snap,
         );
+        let reg = obs::metrics::global();
         match (&mut action, dp) {
             (Action::Replan { replicas_before, .. }, Some(dp)) => {
                 if let Ok(p) = self.inner.plan(self.h) {
                     *replicas_before = p.total_replicas();
                 }
+                obs::journal::record(
+                    snap.t_ms,
+                    &self.plan.name,
+                    EventKind::DriftDetected { max_ratio, attainment: snap.attainment },
+                );
+                reg.counter("adaptive_replan_total", &[]).inc();
                 if let Err(e) = self.inner.apply_plan(self.h, &dp) {
                     log::warn!("adaptive: plan swap failed: {e:#}");
                 } else {
@@ -273,7 +282,16 @@ impl AdaptiveController {
                     self.collector.reset_windows();
                 }
             }
-            (Action::Shed { admit_fraction, .. }, Some(dp)) => {
+            (Action::Shed { admit_fraction, ceiling_qps }, Some(dp)) => {
+                obs::journal::record(
+                    snap.t_ms,
+                    &self.plan.name,
+                    EventKind::OverloadShed {
+                        admit_fraction: *admit_fraction,
+                        ceiling_qps: *ceiling_qps,
+                    },
+                );
+                reg.counter("adaptive_shed_total", &[]).inc();
                 if let Err(e) = self.inner.apply_plan(self.h, &dp) {
                     log::warn!("adaptive: ceiling swap failed: {e:#}");
                 }
@@ -283,6 +301,12 @@ impl AdaptiveController {
                 self.collector.reset_windows();
             }
             (Action::Restore, _) => {
+                obs::journal::record(
+                    snap.t_ms,
+                    &self.plan.name,
+                    EventKind::AdmissionRestore,
+                );
+                reg.counter("adaptive_restore_total", &[]).inc();
                 let _ = self.inner.set_admission(self.h, 1.0);
                 self.collector.reset_windows();
             }

@@ -44,6 +44,7 @@ impl KvsClient {
 
     /// Get with modeled cost; `Ok(None)` when the key is absent.
     pub fn get(&self, key: &str) -> Option<Bytes> {
+        let _span = crate::obs::trace::span(crate::obs::trace::SpanKind::KvsGet, key);
         if let Some(cache) = &self.cache {
             if let Some(v) = cache.get(key) {
                 clock::sleep_ms(config::global().kvs.cache_hit_ms);
@@ -61,6 +62,7 @@ impl KvsClient {
     /// Get bypassing the cache entirely (used by baselines with external
     /// stores and by cache-bypass ablations).
     pub fn get_uncached(&self, key: &str) -> Option<Bytes> {
+        let _span = crate::obs::trace::span(crate::obs::trace::SpanKind::KvsGet, key);
         let v = self.store.get(key)?;
         clock::sleep_ms(Self::remote_cost_ms(v.len()));
         Some(v)
@@ -70,6 +72,7 @@ impl KvsClient {
     /// `Writer::into_bytes`) or plain vectors; the payload is never
     /// copied on the way into the store.
     pub fn put(&self, key: &str, value: impl Into<Bytes>) {
+        let _span = crate::obs::trace::span(crate::obs::trace::SpanKind::KvsPut, key);
         let value: Bytes = value.into();
         clock::sleep_ms(Self::remote_cost_ms(value.len()));
         self.store.put(key, value);

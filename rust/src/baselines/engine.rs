@@ -1,7 +1,7 @@
 //! Microservice baseline engine: per-stage endpoints + proxy driver.
 
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::time::Duration;
 
@@ -16,6 +16,7 @@ use crate::dataflow::operator::ExecCtx;
 use crate::dataflow::table::{Schema, Table};
 use crate::dataflow::Dataflow;
 use crate::net::{Fabric, NodeId};
+use crate::obs::trace::{self, Span, SpanKind, TraceCtx};
 use crate::runtime::InferClient;
 use crate::serve::{CallOpts, Deployment, ServeError};
 use crate::simulation::clock::{self, Clock};
@@ -43,6 +44,13 @@ impl BaselineKind {
 struct Invocation {
     tables: Vec<Table>,
     resp: mpsc::Sender<Result<Table>>,
+    /// Trace of the request this invocation belongs to (`None` unsampled).
+    trace: TraceCtx,
+    /// `(segment, stage)` position of the target endpoint (always seg 0:
+    /// the baseline lowering is single-segment).
+    stage_pos: (usize, usize),
+    /// Virtual enqueue time (queue-wait span start; 0 when unsampled).
+    enqueued_ms: f64,
 }
 
 struct Worker {
@@ -103,6 +111,7 @@ pub struct Baseline {
     rng: Mutex<Rng>,
     metrics: Arc<PlanMetrics>,
     clock: Clock,
+    next_req: AtomicU64,
 }
 
 impl Baseline {
@@ -150,6 +159,7 @@ impl Baseline {
             rng: Mutex::new(Rng::new(0xBA5E)),
             metrics: Arc::new(PlanMetrics::default()),
             clock: Clock::new(),
+            next_req: AtomicU64::new(1),
         });
         for i in 0..b.stages.len() {
             b.add_worker(i);
@@ -232,7 +242,7 @@ impl Baseline {
     /// Invoke one endpoint like an RPC: request ships to the worker,
     /// response ships back to the proxy (2 transfers per stage — the
     /// microservice data-movement tax).
-    fn invoke(&self, idx: usize, tables: Vec<Table>) -> Result<Table> {
+    fn invoke(&self, idx: usize, tables: Vec<Table>, req_trace: &TraceCtx) -> Result<Table> {
         let ep = &self.endpoints[idx];
         let worker = {
             let ws = ep.workers.lock().unwrap();
@@ -240,22 +250,52 @@ impl Baseline {
             // Round-robin: no structural visibility, no locality dispatch.
             ws[i].clone()
         };
+        let sampled = req_trace.is_sampled();
         let in_bytes: usize = tables.iter().map(Table::size_bytes).sum();
+        let t_in = if sampled { self.clock.now_ms() } else { 0.0 };
         clock::sleep_ms(self.fabric.transfer_ms(in_bytes));
         self.fabric.note_shipped(in_bytes);
+        let enqueued_ms = if sampled { self.clock.now_ms() } else { 0.0 };
+        if let Some(tr) = req_trace.get() {
+            tr.record(Span {
+                kind: SpanKind::Transfer,
+                stage: Some((0, idx)),
+                label: ep.stage.name.clone(),
+                start_ms: t_in,
+                end_ms: enqueued_ms,
+                rows_in: 0,
+                rows_out: 0,
+                parent: None,
+            });
+        }
         let (tx, rx) = mpsc::channel();
-        worker
-            .queue
-            .lock()
-            .unwrap()
-            .push_back(Invocation { tables, resp: tx });
+        worker.queue.lock().unwrap().push_back(Invocation {
+            tables,
+            resp: tx,
+            trace: req_trace.clone(),
+            stage_pos: (0, idx),
+            enqueued_ms,
+        });
         worker.cv.notify_one();
         let out = rx
             .recv()
             .context("baseline worker dropped the invocation")??;
         let out_bytes = out.size_bytes();
+        let t_ret = if sampled { self.clock.now_ms() } else { 0.0 };
         clock::sleep_ms(self.fabric.transfer_ms(out_bytes));
         self.fabric.note_shipped(out_bytes);
+        if let Some(tr) = req_trace.get() {
+            tr.record(Span {
+                kind: SpanKind::Transfer,
+                stage: Some((0, idx)),
+                label: ep.stage.name.clone(),
+                start_ms: t_ret,
+                end_ms: self.clock.now_ms(),
+                rows_in: 0,
+                rows_out: 0,
+                parent: None,
+            });
+        }
         Ok(out)
     }
 
@@ -264,15 +304,33 @@ impl Baseline {
     pub fn execute(self: &Arc<Self>, input: Table) -> Result<Table> {
         self.metrics.note_offered();
         let submitted = self.clock.now_ms();
-        let out = self.execute_inner(input);
-        if out.is_ok() {
+        let id = self.next_req.fetch_add(1, Ordering::Relaxed);
+        let req_trace = TraceCtx::for_request(&self.name, id, self.clock, submitted);
+        let out = self.execute_inner(input, &req_trace);
+        if let Ok(t) = &out {
             let now = self.clock.now_ms();
             self.metrics.record(now, now - submitted);
+            if let Some(tr) = req_trace.get() {
+                // Sealed at the metrics timestamp: the trace's e2e equals
+                // the reported latency, and the zero-width return span
+                // anchors the critical-path tiling at `now`.
+                tr.record(Span {
+                    kind: SpanKind::Return,
+                    stage: None,
+                    label: "return".to_string(),
+                    start_ms: now,
+                    end_ms: now,
+                    rows_in: 0,
+                    rows_out: t.len(),
+                    parent: None,
+                });
+                tr.finish(now);
+            }
         }
         out
     }
 
-    fn execute_inner(self: &Arc<Self>, input: Table) -> Result<Table> {
+    fn execute_inner(self: &Arc<Self>, input: Table, req_trace: &TraceCtx) -> Result<Table> {
         let n = self.stages.len();
         let results: Vec<Mutex<Option<Table>>> = (0..n).map(|_| Mutex::new(None)).collect();
         let mut done = vec![false; n];
@@ -304,7 +362,8 @@ impl Baseline {
                         })
                         .collect();
                     let me = self.clone();
-                    handles.push((i, s.spawn(move || me.invoke(i, tables))));
+                    let tr = req_trace.clone();
+                    handles.push((i, s.spawn(move || me.invoke(i, tables, &tr))));
                 }
                 for (i, h) in handles {
                     let t = h.join().expect("baseline branch panicked")?;
@@ -400,10 +459,52 @@ fn stage_is_model(stage: &PlanStage) -> bool {
     })
 }
 
+/// Record the worker-side queue-wait and service spans for one sampled
+/// invocation (`t0`/`t1` bound the stage execution).
+fn note_served(
+    inv: &Invocation,
+    stage: &PlanStage,
+    t0: f64,
+    t1: f64,
+    rows_in: usize,
+    rows_out: usize,
+) {
+    let Some(tr) = inv.trace.get() else { return };
+    tr.record(Span {
+        kind: SpanKind::Queue,
+        stage: Some(inv.stage_pos),
+        label: stage.name.clone(),
+        start_ms: inv.enqueued_ms,
+        end_ms: t0,
+        rows_in: 0,
+        rows_out: 0,
+        parent: None,
+    });
+    tr.record(Span {
+        kind: SpanKind::Service,
+        stage: Some(inv.stage_pos),
+        label: stage.name.clone(),
+        start_ms: t0,
+        end_ms: t1,
+        rows_in,
+        rows_out,
+        parent: None,
+    });
+}
+
 fn serve(stage: &PlanStage, ctx: &ExecCtx, mut invs: Vec<Invocation>) {
     if invs.len() == 1 {
-        let inv = invs.pop().unwrap();
-        let out = run_stage(stage, ctx, inv.tables);
+        let mut inv = invs.pop().unwrap();
+        let tables = std::mem::take(&mut inv.tables);
+        let rows_in: usize = tables.iter().map(Table::len).sum();
+        let t0 = inv.trace.get().map(|tr| tr.now_ms());
+        let guard = inv.trace.is_sampled().then(|| trace::enter(&inv.trace));
+        let out = run_stage(stage, ctx, tables);
+        drop(guard);
+        if let Some(t0) = t0 {
+            let t1 = inv.trace.get().map_or(t0, |tr| tr.now_ms());
+            note_served(&inv, stage, t0, t1, rows_in, out.as_ref().map_or(0, |t| t.len()));
+        }
         let _ = inv.resp.send(out);
         return;
     }
@@ -412,6 +513,7 @@ fn serve(stage: &PlanStage, ctx: &ExecCtx, mut invs: Vec<Invocation>) {
         .iter()
         .map(|i| i.tables[0].ids().into_iter().collect())
         .collect();
+    let rows: Vec<usize> = invs.iter().map(|i| i.tables[0].len()).collect();
     let combined = match apply_union(invs.iter().map(|i| i.tables[0].clone()).collect()) {
         Ok(t) => t,
         Err(e) => {
@@ -422,11 +524,27 @@ fn serve(stage: &PlanStage, ctx: &ExecCtx, mut invs: Vec<Invocation>) {
             return;
         }
     };
-    match run_stage(stage, ctx, vec![combined]) {
+    // Shared batch execution: nested spans (KVS, codec) attach to the
+    // first sampled member; the service interval is shared by all.
+    let t0 = invs
+        .iter()
+        .find_map(|i| i.trace.get())
+        .map(|tr| tr.now_ms());
+    let guard = invs
+        .iter()
+        .find(|i| i.trace.is_sampled())
+        .map(|i| trace::enter(&i.trace));
+    let result = run_stage(stage, ctx, vec![combined]);
+    drop(guard);
+    match result {
         Ok(out) => {
-            for (inv, ids) in invs.into_iter().zip(id_sets) {
+            for ((inv, ids), rows_in) in invs.into_iter().zip(id_sets).zip(rows) {
                 // Zero-copy demultiplex: a selection over the shared output.
                 let part = out.subset_by_ids(&ids);
+                if let Some(t0) = t0 {
+                    let t1 = inv.trace.get().map_or(t0, |tr| tr.now_ms());
+                    note_served(&inv, stage, t0, t1, rows_in, part.len());
+                }
                 let _ = inv.resp.send(Ok(part));
             }
         }

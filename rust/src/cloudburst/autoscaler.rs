@@ -17,6 +17,8 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use crate::config;
+use crate::obs;
+use crate::obs::journal::EventKind;
 
 use super::cluster::ClusterInner;
 
@@ -32,6 +34,9 @@ pub fn spawn(cluster: Arc<ClusterInner>) -> std::thread::JoinHandle<()> {
 
 fn run(cluster: Arc<ClusterInner>) {
     let cfg = config::global();
+    let reg = obs::metrics::global();
+    let up_total = reg.counter("autoscaler_scale_up_total", &[]);
+    let down_total = reg.counter("autoscaler_scale_down_total", &[]);
     let interval_real =
         Duration::from_secs_f64(cfg.autoscaler.interval_ms * cfg.time_scale / 1e3);
     // Idle bookkeeping: (plan idx, seg, stage) -> (last processed, idle count)
@@ -87,6 +92,16 @@ fn run(cluster: Arc<ClusterInner>) {
                             if want > replicas {
                                 *stage.last_scale_up_ms.lock().unwrap() = now;
                                 stage.slack_added.store(false, Ordering::Relaxed);
+                                up_total.add((want - replicas) as u64);
+                                obs::journal::record(
+                                    now,
+                                    &plan.plan.name,
+                                    EventKind::AutoscalerResize {
+                                        stage: stage.spec.name.clone(),
+                                        from: replicas,
+                                        to: want,
+                                    },
+                                );
                             }
                         }
                     } else if queued == 0.0 {
@@ -100,16 +115,44 @@ fn run(cluster: Arc<ClusterInner>) {
                         {
                             let ceiling =
                                 cfg.autoscaler.max_replicas.min(stage.max_ceiling());
+                            let before = stage.replica_count();
                             for _ in 0..cfg.autoscaler.slack_replicas {
                                 if stage.replica_count() < ceiling {
                                     cluster.spawn_replica(&plan, stage);
                                 }
                             }
+                            let after = stage.replica_count();
+                            if after > before {
+                                up_total.add((after - before) as u64);
+                                obs::journal::record(
+                                    now,
+                                    &plan.plan.name,
+                                    EventKind::AutoscalerResize {
+                                        stage: stage.spec.name.clone(),
+                                        from: before,
+                                        to: after,
+                                    },
+                                );
+                            }
                         }
                         // Idle long enough: shed one replica.
                         if entry.1 >= cfg.autoscaler.down_idle_intervals {
+                            let before = stage.replica_count();
                             cluster.remove_replica(stage);
                             entry.1 = 0;
+                            let after = stage.replica_count();
+                            if after < before {
+                                down_total.inc();
+                                obs::journal::record(
+                                    now,
+                                    &plan.plan.name,
+                                    EventKind::AutoscalerResize {
+                                        stage: stage.spec.name.clone(),
+                                        from: before,
+                                        to: after,
+                                    },
+                                );
+                            }
                         }
                     }
                     plan.metrics.note_allocation(

@@ -15,6 +15,10 @@ use crate::dataflow::operator::ExecCtx;
 use crate::dataflow::table::Table;
 use crate::dataflow::LookupKey;
 use crate::net::{Fabric, NodeId};
+use crate::obs;
+use crate::obs::journal::EventKind;
+use crate::obs::metrics::{Sample, Value};
+use crate::obs::trace::{Span, SpanKind, TraceCtx};
 use crate::runtime::InferClient;
 use crate::simulation::clock::{self, Clock};
 use crate::simulation::gpu::Device;
@@ -106,6 +110,8 @@ pub struct RequestCtx {
     pub id: u64,
     pub plan_idx: usize,
     pub submitted_ms: f64,
+    /// Trace handle for this request (`None` when unsampled).
+    pub trace: TraceCtx,
     gather: Mutex<HashMap<(usize, usize), Gather>>,
     done: Mutex<Option<mpsc::Sender<Result<Table>>>>,
 }
@@ -113,6 +119,9 @@ pub struct RequestCtx {
 struct Gather {
     slots: Vec<Option<TableMsg>>,
     fired: bool,
+    /// Virtual time of the first arrival (gather-wait span start; only
+    /// meaningful for sampled requests, 0 otherwise).
+    first_ms: f64,
 }
 
 impl RequestCtx {
@@ -179,6 +188,73 @@ impl RegisteredPlan {
             .map(|s| s.replica_count())
             .sum()
     }
+}
+
+/// Register a pull source for one plan's serving metrics in the global
+/// [`obs::metrics`] registry: offered/completed/shed counters, admission
+/// fraction, replica gauges (total and per stage), and the windowed
+/// latency histogram.  The closure holds only a `Weak`, so a dropped plan
+/// prunes itself from the registry on the next snapshot.
+fn register_plan_source(plan: &Arc<RegisteredPlan>) {
+    let weak = Arc::downgrade(plan);
+    obs::metrics::global().register_source(move || {
+        let p = weak.upgrade()?;
+        let name = p.plan.name.clone();
+        let labels = vec![("plan".to_string(), name.clone())];
+        let sketch = p.metrics.sketch();
+        let mut out = vec![
+            Sample {
+                name: "cloudflow_offered_total".into(),
+                labels: labels.clone(),
+                value: Value::Counter(p.metrics.offered()),
+            },
+            Sample {
+                name: "cloudflow_completed_total".into(),
+                labels: labels.clone(),
+                value: Value::Counter(p.metrics.completed()),
+            },
+            Sample {
+                name: "cloudflow_shed_total".into(),
+                labels: labels.clone(),
+                value: Value::Counter(p.metrics.shed_count()),
+            },
+            Sample {
+                name: "cloudflow_admit_fraction".into(),
+                labels: labels.clone(),
+                value: Value::Gauge(
+                    p.admit_ppm.load(Ordering::Relaxed) as f64 / ADMIT_ALL_PPM as f64,
+                ),
+            },
+            Sample {
+                name: "cloudflow_replicas".into(),
+                labels: labels.clone(),
+                value: Value::Gauge(p.total_replicas() as f64),
+            },
+            Sample {
+                name: "cloudflow_latency_ms".into(),
+                labels,
+                value: Value::Histogram {
+                    count: sketch.count(),
+                    mean: sketch.mean(),
+                    p50: sketch.median(),
+                    p99: sketch.p99(),
+                },
+            },
+        ];
+        for seg in &p.segs {
+            for st in seg {
+                out.push(Sample {
+                    name: "cloudflow_stage_replicas".into(),
+                    labels: vec![
+                        ("plan".to_string(), name.clone()),
+                        ("stage".to_string(), st.spec.name.clone()),
+                    ],
+                    value: Value::Gauge(st.replica_count() as f64),
+                });
+            }
+        }
+        Some(out)
+    });
 }
 
 /// Node pool: CPU nodes host 2 workers (paper: c5.2xlarge, 2 executors per
@@ -279,6 +355,10 @@ pub struct ClusterInner {
 impl ClusterInner {
     /// Deliver a table to one input slot of a stage; fires the stage when
     /// its wait policy is satisfied (wait-for-any vs wait-for-all).
+    /// `from` is the producing stage (`None` from the client), recorded on
+    /// the gather span as the edge that fired the task — the link the
+    /// critical-path analysis walks backwards.
+    #[allow(clippy::too_many_arguments)]
     pub fn deliver(
         self: &Arc<Self>,
         plan: &Arc<RegisteredPlan>,
@@ -287,35 +367,53 @@ impl ClusterInner {
         stage_idx: usize,
         slot: usize,
         msg: TableMsg,
+        from: Option<(usize, usize)>,
         hint: Option<&str>,
     ) {
         let stage = &plan.segs[seg][stage_idx];
-        let inputs = {
+        let traced = req.trace.is_sampled();
+        let fired = {
             let mut g = req.gather.lock().unwrap();
             let entry = g.entry((seg, stage_idx)).or_insert_with(|| Gather {
                 slots: vec![None; stage.spec.inputs.len()],
                 fired: false,
+                first_ms: if traced { self.clock.now_ms() } else { 0.0 },
             });
             if entry.fired {
                 return; // wait-any already satisfied; drop the straggler
             }
             if stage.spec.wait_any {
                 entry.fired = true;
-                Some(vec![msg])
+                Some((vec![msg], entry.first_ms))
             } else {
                 entry.slots[slot] = Some(msg);
                 if entry.slots.iter().all(Option::is_some) {
                     entry.fired = true;
-                    Some(entry.slots.iter_mut().map(|s| s.take().unwrap()).collect())
+                    let inputs = entry.slots.iter_mut().map(|s| s.take().unwrap()).collect();
+                    Some((inputs, entry.first_ms))
                 } else {
                     None
                 }
             }
         };
-        if let Some(inputs) = inputs {
+        if let Some((inputs, first_ms)) = fired {
             stage.telemetry.note_arrival();
             stage.inflight.fetch_add(1, Ordering::Relaxed);
-            let mut task = Task { req: req.clone(), seg, stage: stage_idx, inputs };
+            let enqueued_ms = if traced { self.clock.now_ms() } else { 0.0 };
+            if let Some(tr) = req.trace.get() {
+                tr.record(Span {
+                    kind: SpanKind::Gather,
+                    stage: Some((seg, stage_idx)),
+                    label: stage.spec.name.clone(),
+                    start_ms: first_ms,
+                    end_ms: enqueued_ms,
+                    rows_in: 0,
+                    rows_out: 0,
+                    parent: from,
+                });
+            }
+            let mut task =
+                Task { req: req.clone(), seg, stage: stage_idx, inputs, enqueued_ms };
             // A replica that drained out after a scale-down refuses the
             // push; retry on another (the stage always keeps >= 1 live,
             // except during cluster shutdown, when the request is failed
@@ -399,7 +497,12 @@ impl ClusterInner {
                         seg,
                         ci,
                         slot,
-                        TableMsg { table: table.clone(), from: node },
+                        TableMsg {
+                            table: table.clone(),
+                            from: node,
+                            trace: req.trace.clone(),
+                        },
+                        Some((seg, stage_idx)),
                         None,
                     );
                 }
@@ -434,7 +537,12 @@ impl ClusterInner {
                             seg + 1,
                             si,
                             slot,
-                            TableMsg { table: table.clone(), from: node },
+                            TableMsg {
+                                table: table.clone(),
+                                from: node,
+                                trace: req.trace.clone(),
+                            },
+                            Some((seg, stage_idx)),
                             hint.as_deref(),
                         );
                     }
@@ -443,6 +551,7 @@ impl ClusterInner {
             return;
         }
         // Final output: charge the return hop and complete the request.
+        let t_ret = if req.trace.is_sampled() { self.clock.now_ms() } else { 0.0 };
         clock::sleep_ms(self.fabric.transfer_ms(table.size_bytes()));
         self.fabric.note_shipped(table.size_bytes());
         // Record metrics before releasing the client so counters are
@@ -450,6 +559,21 @@ impl ClusterInner {
         if let Some(tx) = req.take_done() {
             let now = self.clock.now_ms();
             plan.metrics.record(now, now - req.submitted_ms);
+            if let Some(tr) = req.trace.get() {
+                // Sealed at the same timestamp the metrics record, so the
+                // trace's e2e equals the deployment-reported latency.
+                tr.record(Span {
+                    kind: SpanKind::Return,
+                    stage: Some((seg, stage_idx)),
+                    label: "return".to_string(),
+                    start_ms: t_ret,
+                    end_ms: now,
+                    rows_in: 0,
+                    rows_out: 0,
+                    parent: None,
+                });
+                tr.finish(now);
+            }
             // Resolve any selection view at the client boundary: a small
             // demuxed/filtered result must not pin the whole batch's
             // backing storage for as long as the caller holds it.
@@ -588,6 +712,11 @@ impl ClusterInner {
                 }
             }
         }
+        obs::journal::record(
+            self.clock.now_ms(),
+            &plan.plan.name,
+            EventKind::PlanSwap { replicas: plan.total_replicas() },
+        );
         Ok(())
     }
 
@@ -597,6 +726,11 @@ impl ClusterInner {
         let plan = self.plan(h)?;
         let ppm = (fraction.clamp(0.0, 1.0) * ADMIT_ALL_PPM as f64).round() as u32;
         plan.admit_ppm.store(ppm.min(ADMIT_ALL_PPM), Ordering::Relaxed);
+        obs::journal::record(
+            self.clock.now_ms(),
+            &plan.plan.name,
+            EventKind::AdmissionChange { fraction: fraction.clamp(0.0, 1.0) },
+        );
         Ok(())
     }
 
@@ -623,6 +757,7 @@ impl ClusterInner {
             id,
             plan_idx: plan.idx,
             submitted_ms,
+            trace: TraceCtx::for_request(&plan.plan.name, id, self.clock, submitted_ms),
             gather: Mutex::new(HashMap::new()),
             done: Mutex::new(Some(tx)),
         });
@@ -649,7 +784,12 @@ impl ClusterInner {
                         0,
                         si,
                         slot,
-                        TableMsg { table: input.clone(), from: NodeId::CLIENT },
+                        TableMsg {
+                            table: input.clone(),
+                            from: NodeId::CLIENT,
+                            trace: req.trace.clone(),
+                        },
+                        None,
                         hint.as_deref(),
                     );
                     seeded = true;
@@ -828,6 +968,7 @@ impl Cluster {
             metrics: Arc::new(PlanMetrics::default()),
             admit_ppm: AtomicU32::new(ADMIT_ALL_PPM),
         });
+        register_plan_source(&registered);
         for seg in &registered.segs {
             for stage in seg {
                 let p = provision(stage.seg, stage.idx);

@@ -18,6 +18,7 @@ use crate::dataflow::exec_local::{apply_op, apply_union};
 use crate::dataflow::operator::ExecCtx;
 use crate::dataflow::table::Table;
 use crate::net::NodeId;
+use crate::obs::trace::{self, Span, SpanKind, TraceCtx};
 use crate::simulation::clock;
 use crate::util::stats::WindowSketch;
 
@@ -30,6 +31,9 @@ use super::cluster::{ClusterInner, RegisteredPlan, RequestCtx};
 pub struct TableMsg {
     pub table: Arc<Table>,
     pub from: NodeId,
+    /// Trace handle of the owning request; `None` when unsampled, so
+    /// cloning the message stays free on the untraced hot path.
+    pub trace: TraceCtx,
 }
 
 /// One stage invocation for one request.
@@ -38,6 +42,8 @@ pub struct Task {
     pub seg: usize,
     pub stage: usize,
     pub inputs: Vec<TableMsg>,
+    /// Virtual enqueue time for the queue-wait span (0 when unsampled).
+    pub enqueued_ms: f64,
 }
 
 /// Live per-stage observations the adaptive telemetry collector samples:
@@ -269,6 +275,8 @@ fn process_batch(
                 .sum::<f64>()
         })
         .fold(0.0, f64::max);
+    let traced = tasks.iter().any(|t| t.req.trace.is_sampled());
+    let t_dequeue = if traced { cluster.clock.now_ms() } else { 0.0 };
     clock::sleep_ms(ship_ms);
     cluster.fabric.note_shipped(
         tasks
@@ -282,17 +290,66 @@ fn process_batch(
             })
             .sum(),
     );
+    if traced {
+        // Queue-wait and (shared) transfer spans for the sampled tasks.
+        let t_shipped = cluster.clock.now_ms();
+        for t in &tasks {
+            if let Some(tr) = t.req.trace.get() {
+                let stage = Some((t.seg, t.stage));
+                tr.record(Span {
+                    kind: SpanKind::Queue,
+                    stage,
+                    label: stage_rt.spec.name.clone(),
+                    start_ms: t.enqueued_ms,
+                    end_ms: t_dequeue,
+                    rows_in: 0,
+                    rows_out: 0,
+                    parent: None,
+                });
+                if ship_ms > 0.0 {
+                    tr.record(Span {
+                        kind: SpanKind::Transfer,
+                        stage,
+                        label: stage_rt.spec.name.clone(),
+                        start_ms: t_dequeue,
+                        end_ms: t_shipped,
+                        rows_in: 0,
+                        rows_out: 0,
+                        parent: None,
+                    });
+                }
+            }
+        }
+    }
 
     if tasks.len() == 1 {
         let task = tasks.pop().unwrap();
         // Shallow clones: schema + Arc'd column buffers, never cells.
         let inputs: Vec<Table> =
             task.inputs.iter().map(|m| (*m.table).clone()).collect();
+        let rows_in: usize = inputs.iter().map(|t| t.len()).sum();
         let t0 = cluster.clock.now_ms();
+        let staged = task
+            .req
+            .trace
+            .is_sampled()
+            .then(|| trace::enter_staged(&task.req.trace, Some((task.seg, task.stage))));
         let out = run_ops(ctx, &stage_rt.spec, inputs);
-        stage_rt
-            .telemetry
-            .note_invocation(1, cluster.clock.now_ms() - t0);
+        drop(staged);
+        let t1 = cluster.clock.now_ms();
+        stage_rt.telemetry.note_invocation(1, t1 - t0);
+        if let Some(tr) = task.req.trace.get() {
+            tr.record(Span {
+                kind: SpanKind::Service,
+                stage: Some((task.seg, task.stage)),
+                label: stage_rt.spec.name.clone(),
+                start_ms: t0,
+                end_ms: t1,
+                rows_in,
+                rows_out: out.as_ref().map_or(0, |t| t.len()),
+                parent: None,
+            });
+        }
         finish(cluster, plan, task, out, replica.node);
         return Ok(());
     }
@@ -310,16 +367,35 @@ fn process_batch(
         parts.push((*t.inputs[0].table).clone());
     }
     let combined = apply_union(parts).context("batch combine")?;
+    let batch_rows: Vec<usize> = id_sets.iter().map(|s| s.len()).collect();
     let t0 = cluster.clock.now_ms();
+    // Nested spans (KVS/codec) of a shared batch invocation attach to the
+    // first sampled request in it.
+    let staged = tasks
+        .iter()
+        .find(|t| t.req.trace.is_sampled())
+        .map(|t| trace::enter_staged(&t.req.trace, Some((t.seg, t.stage))));
     let out = run_ops(ctx, &stage_rt.spec, vec![combined]);
-    stage_rt
-        .telemetry
-        .note_invocation(tasks.len(), cluster.clock.now_ms() - t0);
+    drop(staged);
+    let t1 = cluster.clock.now_ms();
+    stage_rt.telemetry.note_invocation(tasks.len(), t1 - t0);
     match out {
         Ok(out) => {
-            for (t, ids) in tasks.into_iter().zip(id_sets) {
+            for ((t, ids), rows) in tasks.into_iter().zip(id_sets).zip(batch_rows) {
                 // Demultiplex: a selection over the shared output buffers.
                 let part = out.subset_by_ids(&ids);
+                if let Some(tr) = t.req.trace.get() {
+                    tr.record(Span {
+                        kind: SpanKind::Service,
+                        stage: Some((t.seg, t.stage)),
+                        label: stage_rt.spec.name.clone(),
+                        start_ms: t0,
+                        end_ms: t1,
+                        rows_in: rows,
+                        rows_out: part.len(),
+                        parent: None,
+                    });
+                }
                 finish(cluster, plan, t, Ok(part), replica.node);
             }
         }

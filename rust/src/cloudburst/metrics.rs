@@ -6,12 +6,72 @@
 //! unbounded sample vector: long-running serving never grows memory, and
 //! percentile queries reflect the recent window — which is what both the
 //! paper-style (median, p99) reporting over a bench phase and the adaptive
-//! controller's SLO-attainment estimates need.
+//! controller's SLO-attainment estimates need.  The replica-allocation
+//! history follows the same policy via [`BoundedLog`].
 
+use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
 use crate::util::stats::{Summary, Timeline, WindowSketch};
+
+/// Retained allocation samples per plan (matches the fixed-memory policy
+/// of the latency window).
+pub const ALLOCATION_LOG_CAP: usize = 4096;
+
+/// Fixed-capacity append log: the oldest entries are evicted past `cap`,
+/// with an eviction counter so readers know history was truncated — the
+/// event-shaped counterpart of [`WindowSketch`].
+#[derive(Debug, Clone)]
+pub struct BoundedLog<T> {
+    buf: VecDeque<T>,
+    cap: usize,
+    dropped: u64,
+}
+
+impl<T> Default for BoundedLog<T> {
+    fn default() -> Self {
+        BoundedLog::new(ALLOCATION_LOG_CAP)
+    }
+}
+
+impl<T> BoundedLog<T> {
+    pub fn new(cap: usize) -> Self {
+        BoundedLog { buf: VecDeque::new(), cap: cap.max(1), dropped: 0 }
+    }
+
+    pub fn push(&mut self, v: T) {
+        if self.buf.len() == self.cap {
+            self.buf.pop_front();
+            self.dropped += 1;
+        }
+        self.buf.push_back(v);
+    }
+
+    /// Retained entries (≤ cap).
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Entries evicted so far.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Oldest-first iteration over the retained entries.
+    pub fn iter(&self) -> impl Iterator<Item = &T> {
+        self.buf.iter()
+    }
+
+    /// Most recent entry.
+    pub fn back(&self) -> Option<&T> {
+        self.buf.back()
+    }
+}
 
 #[derive(Debug, Default)]
 pub struct PlanMetrics {
@@ -19,8 +79,10 @@ pub struct PlanMetrics {
     pub latency: Mutex<WindowSketch>,
     /// Optional completion timeline (enabled for Fig 6-style runs).
     pub timeline: Mutex<Option<Timeline>>,
-    /// (t_ms, stage_label, replicas) samples from the autoscaler.
-    pub allocation: Mutex<Vec<(f64, String, usize)>>,
+    /// (t_ms, stage_label, replicas) samples from the autoscaler; bounded,
+    /// oldest evicted (`replica_seconds` then extends the first retained
+    /// sample backwards, like any stepwise integrator would).
+    pub allocation: Mutex<BoundedLog<(f64, String, usize)>>,
     /// Completed request count.
     pub completed: AtomicU64,
     /// Requests presented to the plan (admitted or not).
@@ -190,7 +252,37 @@ mod tests {
         m.note_allocation(1000.0, "slow", 19);
         let a = m.allocation.lock().unwrap();
         assert_eq!(a.len(), 2);
-        assert_eq!(a[1].2, 19);
+        assert_eq!(a.back().unwrap().2, 19);
+        assert_eq!(a.dropped(), 0);
+    }
+
+    #[test]
+    fn bounded_log_evicts_oldest() {
+        let mut log = BoundedLog::new(3);
+        for i in 0..5 {
+            log.push(i);
+        }
+        assert_eq!(log.len(), 3);
+        assert_eq!(log.dropped(), 2);
+        assert_eq!(log.iter().copied().collect::<Vec<_>>(), vec![2, 3, 4]);
+        assert_eq!(log.back(), Some(&4));
+    }
+
+    #[test]
+    fn replica_seconds_survives_eviction() {
+        // Evicting old samples must not panic or change the integration
+        // shape for the retained window.
+        let m = PlanMetrics::default();
+        {
+            let mut log = m.allocation.lock().unwrap();
+            *log = BoundedLog::new(2);
+        }
+        m.note_allocation(0.0, "a", 7); // evicted
+        m.note_allocation(1000.0, "a", 2);
+        m.note_allocation(2000.0, "a", 4);
+        // First retained sample (2 replicas) extends back to t=0.
+        let rs = m.replica_seconds(3000.0, &[]);
+        assert!((rs - 8.0).abs() < 1e-9, "rs={rs}");
     }
 
     #[test]

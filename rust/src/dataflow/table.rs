@@ -1113,6 +1113,7 @@ impl Table {
         if self.sel.is_some() {
             return self.compacted().encode();
         }
+        let _span = crate::obs::trace::span(crate::obs::SpanKind::CodecEncode, "table_encode");
         let mut w = Writer::with_capacity(self.size_bytes());
         w.u8(2); // columnar format version
         self.schema.encode(&mut w);
@@ -1182,6 +1183,7 @@ impl Table {
     }
 
     fn decode_impl(bytes: &[u8], shared: Option<&Bytes>) -> Result<Table> {
+        let _span = crate::obs::trace::span(crate::obs::SpanKind::CodecDecode, "table_decode");
         let mut r = Reader::new(bytes);
         let version = r.u8()?;
         if version != 2 {

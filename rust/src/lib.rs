@@ -25,6 +25,11 @@
 //! profile, live re-planning with zero-drop plan hot-swap, and overload
 //! protection via deterministic admission control.
 //!
+//! The [`obs`] subsystem makes all of it debuggable: deterministic
+//! per-request tracing with critical-path attribution ([`obs::report`]),
+//! a unified metrics registry with JSON/Prometheus exporters, and a
+//! structured journal of control-plane decisions.
+//!
 //! The user-facing surface is the **Flow API v2**: author pipelines with
 //! the fluent [`dataflow::v2::Flow`] builder and the inspectable
 //! [`dataflow::expr::Expr`] DSL (which unlocks the compiler's
@@ -48,6 +53,7 @@ pub mod config;
 pub mod dataflow;
 pub mod models;
 pub mod net;
+pub mod obs;
 pub mod planner;
 pub mod runtime;
 pub mod serve;

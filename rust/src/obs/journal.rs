@@ -1,0 +1,176 @@
+//! Structured control-plane event journal.
+//!
+//! Every consequential control decision — plan swaps, drift detections,
+//! autoscaler resizes, admission changes, overload sheds — is appended
+//! here as a typed [`Event`] stamped with virtual time and the plan it
+//! concerns. The journal is a process-global bounded ring (oldest events
+//! evicted past [`JOURNAL_CAP`]) and exports as JSONL, one event per
+//! line, for offline correlation with traces and bench output.
+
+use std::collections::VecDeque;
+use std::path::Path;
+use std::sync::Mutex;
+
+use once_cell::sync::OnceCell;
+
+/// Events retained before the oldest are evicted.
+pub const JOURNAL_CAP: usize = 8192;
+
+/// What happened.
+#[derive(Debug, Clone, PartialEq)]
+pub enum EventKind {
+    /// A new deployment plan was applied (`apply_plan`).
+    PlanSwap { replicas: usize },
+    /// The adaptive controller saw service-time drift and re-planned.
+    DriftDetected { max_ratio: f64, attainment: f64 },
+    /// The autoscaler resized one stage.
+    AutoscalerResize { stage: String, from: usize, to: usize },
+    /// Admission fraction changed (`set_admission`).
+    AdmissionChange { fraction: f64 },
+    /// The overload guard started shedding.
+    OverloadShed { admit_fraction: f64, ceiling_qps: f64 },
+    /// The overload guard restored full admission.
+    AdmissionRestore,
+}
+
+impl EventKind {
+    /// Stable snake-case tag used in the JSONL `event` field.
+    pub fn name(&self) -> &'static str {
+        match self {
+            EventKind::PlanSwap { .. } => "plan_swap",
+            EventKind::DriftDetected { .. } => "drift_detected",
+            EventKind::AutoscalerResize { .. } => "autoscaler_resize",
+            EventKind::AdmissionChange { .. } => "admission_change",
+            EventKind::OverloadShed { .. } => "overload_shed",
+            EventKind::AdmissionRestore => "admission_restore",
+        }
+    }
+}
+
+/// One journal entry.
+#[derive(Debug, Clone)]
+pub struct Event {
+    /// Virtual time the decision was made.
+    pub t_ms: f64,
+    /// Plan (deployment) the decision concerns.
+    pub plan: String,
+    pub kind: EventKind,
+}
+
+fn jf(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v:.3}")
+    } else {
+        "null".to_string()
+    }
+}
+
+impl Event {
+    /// One JSON object (a single JSONL line, without the newline).
+    pub fn to_json(&self) -> String {
+        let head = format!(
+            "\"t_ms\":{},\"plan\":{:?},\"event\":{:?}",
+            jf(self.t_ms),
+            self.plan,
+            self.kind.name()
+        );
+        let tail = match &self.kind {
+            EventKind::PlanSwap { replicas } => format!(",\"replicas\":{replicas}"),
+            EventKind::DriftDetected { max_ratio, attainment } => {
+                format!(",\"max_ratio\":{},\"attainment\":{}", jf(*max_ratio), jf(*attainment))
+            }
+            EventKind::AutoscalerResize { stage, from, to } => {
+                format!(",\"stage\":{stage:?},\"from\":{from},\"to\":{to}")
+            }
+            EventKind::AdmissionChange { fraction } => {
+                format!(",\"fraction\":{}", jf(*fraction))
+            }
+            EventKind::OverloadShed { admit_fraction, ceiling_qps } => format!(
+                ",\"admit_fraction\":{},\"ceiling_qps\":{}",
+                jf(*admit_fraction),
+                jf(*ceiling_qps)
+            ),
+            EventKind::AdmissionRestore => String::new(),
+        };
+        format!("{{{head}{tail}}}")
+    }
+}
+
+fn journal() -> &'static Mutex<VecDeque<Event>> {
+    static J: OnceCell<Mutex<VecDeque<Event>>> = OnceCell::new();
+    J.get_or_init(|| Mutex::new(VecDeque::new()))
+}
+
+/// Append an event, evicting the oldest past [`JOURNAL_CAP`].
+pub fn record(t_ms: f64, plan: &str, kind: EventKind) {
+    let mut j = journal().lock().unwrap();
+    if j.len() == JOURNAL_CAP {
+        j.pop_front();
+    }
+    j.push_back(Event { t_ms, plan: plan.to_string(), kind });
+}
+
+/// Snapshot of all retained events, oldest first.
+pub fn events() -> Vec<Event> {
+    journal().lock().unwrap().iter().cloned().collect()
+}
+
+/// Snapshot of the retained events for one plan, oldest first.
+pub fn events_for(plan: &str) -> Vec<Event> {
+    journal().lock().unwrap().iter().filter(|e| e.plan == plan).cloned().collect()
+}
+
+/// Drop every retained event (test isolation).
+pub fn clear() {
+    journal().lock().unwrap().clear();
+}
+
+/// The retained journal as JSONL (one event per line).
+pub fn to_jsonl() -> String {
+    let mut out = String::new();
+    for e in events() {
+        out.push_str(&e.to_json());
+        out.push('\n');
+    }
+    out
+}
+
+/// Write the retained journal to `path` as JSONL.
+pub fn write_jsonl(path: impl AsRef<Path>) -> std::io::Result<()> {
+    std::fs::write(path, to_jsonl())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn events_roundtrip_and_filter() {
+        record(1.0, "jr_plan_a", EventKind::PlanSwap { replicas: 3 });
+        record(
+            2.0,
+            "jr_plan_a",
+            EventKind::AutoscalerResize { stage: "m0".into(), from: 1, to: 2 },
+        );
+        record(3.0, "jr_plan_b", EventKind::AdmissionRestore);
+        let a = events_for("jr_plan_a");
+        assert_eq!(a.len(), 2);
+        assert_eq!(a[0].kind, EventKind::PlanSwap { replicas: 3 });
+        assert!(!events_for("jr_plan_b").is_empty());
+    }
+
+    #[test]
+    fn jsonl_lines_parse() {
+        record(4.5, "jr_plan_c", EventKind::OverloadShed { admit_fraction: 0.5, ceiling_qps: 80.0 });
+        record(5.5, "jr_plan_c", EventKind::DriftDetected { max_ratio: 2.0, attainment: 0.8 });
+        for e in events_for("jr_plan_c") {
+            let line = e.to_json();
+            let parsed = crate::util::json::Json::parse(&line).expect("valid JSON line");
+            assert_eq!(
+                parsed.get("event").and_then(|v| v.as_str()),
+                Some(e.kind.name()),
+                "{line}"
+            );
+        }
+    }
+}

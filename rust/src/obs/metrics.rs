@@ -1,0 +1,384 @@
+//! Unified metrics registry: lock-light named counters, gauges, and
+//! histograms plus pull-style sources, with JSON and Prometheus-text
+//! snapshot exporters.
+//!
+//! Push instruments ([`Counter`], [`Gauge`], [`Histogram`]) are cheap
+//! handles over atomics (histograms over a `Mutex<WindowSketch>`); asking
+//! the registry for the same name + label set twice returns handles to the
+//! same underlying instrument, so the autoscaler, overload guard, and
+//! adaptive controller can all bump shared series without coordination.
+//!
+//! Components that already keep their own state — each deployment's
+//! `PlanMetrics` — register a *source*: a closure returning samples on
+//! demand. A source returning `None` declares itself dead (its deployment
+//! was dropped) and is pruned at the next snapshot, so the global registry
+//! stays bounded across many short-lived clusters.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use once_cell::sync::OnceCell;
+
+use crate::util::stats::{WindowSketch, DEFAULT_SKETCH_WINDOW};
+
+/// Label set: ordered `(key, value)` pairs.
+pub type Labels = Vec<(String, String)>;
+
+/// A point-in-time reading of one series.
+#[derive(Debug, Clone)]
+pub struct Sample {
+    pub name: String,
+    pub labels: Labels,
+    pub value: Value,
+}
+
+/// The value of a sample.
+#[derive(Debug, Clone)]
+pub enum Value {
+    Counter(u64),
+    Gauge(f64),
+    /// Windowed distribution summary (see `util::stats::WindowSketch`).
+    Histogram { count: u64, mean: f64, p50: f64, p99: f64 },
+}
+
+/// Monotonic counter handle.
+#[derive(Debug, Clone, Default)]
+pub struct Counter(Arc<AtomicU64>);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-value gauge handle (f64 stored as bits in an atomic).
+#[derive(Debug, Clone, Default)]
+pub struct Gauge(Arc<AtomicU64>);
+
+impl Gauge {
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+/// Windowed histogram handle backed by a `WindowSketch`.
+#[derive(Debug, Clone)]
+pub struct Histogram(Arc<Mutex<WindowSketch>>);
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram(Arc::new(Mutex::new(WindowSketch::new(DEFAULT_SKETCH_WINDOW))))
+    }
+}
+
+impl Histogram {
+    pub fn observe(&self, v: f64) {
+        self.0.lock().unwrap().add(v);
+    }
+
+    /// Summarize the retained window.
+    pub fn snapshot(&self) -> Value {
+        let s = self.0.lock().unwrap();
+        Value::Histogram { count: s.count(), mean: s.mean(), p50: s.median(), p99: s.p99() }
+    }
+}
+
+#[derive(Debug)]
+enum Instrument {
+    Counter(Counter),
+    Gauge(Gauge),
+    Histogram(Histogram),
+}
+
+type SourceFn = Box<dyn Fn() -> Option<Vec<Sample>> + Send + Sync>;
+
+/// The registry. Use [`global`] for the process-wide instance.
+pub struct Registry {
+    instruments: Mutex<BTreeMap<(String, Labels), Instrument>>,
+    sources: Mutex<Vec<SourceFn>>,
+}
+
+impl Default for Registry {
+    fn default() -> Self {
+        Registry::new()
+    }
+}
+
+fn key_of(name: &str, labels: &[(&str, &str)]) -> (String, Labels) {
+    (
+        name.to_string(),
+        labels.iter().map(|(k, v)| (k.to_string(), v.to_string())).collect(),
+    )
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Registry { instruments: Mutex::new(BTreeMap::new()), sources: Mutex::new(Vec::new()) }
+    }
+
+    /// Counter handle for `name` + `labels`, creating it on first use.
+    /// If the series already exists as a different instrument type, a
+    /// detached (unregistered) handle is returned.
+    pub fn counter(&self, name: &str, labels: &[(&str, &str)]) -> Counter {
+        let mut map = self.instruments.lock().unwrap();
+        match map
+            .entry(key_of(name, labels))
+            .or_insert_with(|| Instrument::Counter(Counter::default()))
+        {
+            Instrument::Counter(c) => c.clone(),
+            _ => Counter::default(),
+        }
+    }
+
+    /// Gauge handle for `name` + `labels` (see [`Registry::counter`]).
+    pub fn gauge(&self, name: &str, labels: &[(&str, &str)]) -> Gauge {
+        let mut map = self.instruments.lock().unwrap();
+        match map
+            .entry(key_of(name, labels))
+            .or_insert_with(|| Instrument::Gauge(Gauge::default()))
+        {
+            Instrument::Gauge(g) => g.clone(),
+            _ => Gauge::default(),
+        }
+    }
+
+    /// Histogram handle for `name` + `labels` (see [`Registry::counter`]).
+    pub fn histogram(&self, name: &str, labels: &[(&str, &str)]) -> Histogram {
+        let mut map = self.instruments.lock().unwrap();
+        match map
+            .entry(key_of(name, labels))
+            .or_insert_with(|| Instrument::Histogram(Histogram::default()))
+        {
+            Instrument::Histogram(h) => h.clone(),
+            _ => Histogram::default(),
+        }
+    }
+
+    /// Register a pull source. Returning `None` marks the source dead and
+    /// it is dropped at the next snapshot.
+    pub fn register_source(&self, f: impl Fn() -> Option<Vec<Sample>> + Send + Sync + 'static) {
+        self.sources.lock().unwrap().push(Box::new(f));
+    }
+
+    /// Read every instrument and live source.
+    pub fn snapshot(&self) -> Vec<Sample> {
+        let mut out = Vec::new();
+        for ((name, labels), inst) in self.instruments.lock().unwrap().iter() {
+            let value = match inst {
+                Instrument::Counter(c) => Value::Counter(c.get()),
+                Instrument::Gauge(g) => Value::Gauge(g.get()),
+                Instrument::Histogram(h) => h.snapshot(),
+            };
+            out.push(Sample { name: name.clone(), labels: labels.clone(), value });
+        }
+        let mut sources = self.sources.lock().unwrap();
+        sources.retain(|src| match src() {
+            Some(mut samples) => {
+                out.append(&mut samples);
+                true
+            }
+            None => false,
+        });
+        out
+    }
+
+    /// Snapshot as a JSON array (one object per series).
+    pub fn to_json(&self) -> String {
+        let mut items = Vec::new();
+        for s in self.snapshot() {
+            let labels = s
+                .labels
+                .iter()
+                .map(|(k, v)| format!("{k:?}:{v:?}"))
+                .collect::<Vec<_>>()
+                .join(",");
+            let body = match s.value {
+                Value::Counter(v) => format!("\"type\":\"counter\",\"value\":{v}"),
+                Value::Gauge(v) => format!("\"type\":\"gauge\",\"value\":{}", jf(v)),
+                Value::Histogram { count, mean, p50, p99 } => format!(
+                    "\"type\":\"histogram\",\"count\":{count},\"mean\":{},\"p50\":{},\"p99\":{}",
+                    jf(mean),
+                    jf(p50),
+                    jf(p99)
+                ),
+            };
+            items.push(format!("{{\"name\":{:?},\"labels\":{{{labels}}},{body}}}", s.name));
+        }
+        format!("[{}]", items.join(","))
+    }
+
+    /// Snapshot in the Prometheus text exposition format.
+    pub fn to_prometheus(&self) -> String {
+        let mut out = String::new();
+        for s in self.snapshot() {
+            let name = prom_name(&s.name);
+            match s.value {
+                Value::Counter(v) => {
+                    out.push_str(&format!("{name}{} {v}\n", prom_labels(&s.labels, None)));
+                }
+                Value::Gauge(v) => {
+                    out.push_str(&format!("{name}{} {}\n", prom_labels(&s.labels, None), pf(v)));
+                }
+                Value::Histogram { count, mean, p50, p99 } => {
+                    let plain = prom_labels(&s.labels, None);
+                    out.push_str(&format!("{name}_count{plain} {count}\n"));
+                    out.push_str(&format!("{name}_mean{plain} {}\n", pf(mean)));
+                    out.push_str(&format!(
+                        "{name}{} {}\n",
+                        prom_labels(&s.labels, Some(("quantile", "0.5"))),
+                        pf(p50)
+                    ));
+                    out.push_str(&format!(
+                        "{name}{} {}\n",
+                        prom_labels(&s.labels, Some(("quantile", "0.99"))),
+                        pf(p99)
+                    ));
+                }
+            }
+        }
+        out
+    }
+}
+
+/// JSON number: `null` when non-finite.
+fn jf(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "null".to_string()
+    }
+}
+
+/// Prometheus number: `NaN` is a legal literal there.
+fn pf(v: f64) -> String {
+    if v.is_nan() {
+        "NaN".to_string()
+    } else {
+        format!("{v}")
+    }
+}
+
+fn prom_name(name: &str) -> String {
+    name.chars()
+        .map(|c| if c.is_ascii_alphanumeric() || c == '_' || c == ':' { c } else { '_' })
+        .collect()
+}
+
+fn prom_labels(labels: &Labels, extra: Option<(&str, &str)>) -> String {
+    let mut parts: Vec<String> = labels
+        .iter()
+        .map(|(k, v)| format!("{}={:?}", prom_name(k), v))
+        .collect();
+    if let Some((k, v)) = extra {
+        parts.push(format!("{k}={v:?}"));
+    }
+    if parts.is_empty() {
+        String::new()
+    } else {
+        format!("{{{}}}", parts.join(","))
+    }
+}
+
+/// Process-wide registry.
+pub fn global() -> &'static Registry {
+    static REG: OnceCell<Registry> = OnceCell::new();
+    REG.get_or_init(Registry::new)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_dedupe_by_name_and_labels() {
+        let reg = Registry::new();
+        let a = reg.counter("reqs", &[("plan", "x")]);
+        let b = reg.counter("reqs", &[("plan", "x")]);
+        let other = reg.counter("reqs", &[("plan", "y")]);
+        a.inc();
+        b.add(2);
+        other.inc();
+        assert_eq!(a.get(), 3);
+        assert_eq!(other.get(), 1);
+    }
+
+    #[test]
+    fn gauge_and_histogram_roundtrip() {
+        let reg = Registry::new();
+        let g = reg.gauge("depth", &[]);
+        g.set(2.5);
+        assert_eq!(reg.gauge("depth", &[]).get(), 2.5);
+        let h = reg.histogram("lat_ms", &[]);
+        for v in [1.0, 2.0, 3.0, 4.0] {
+            h.observe(v);
+        }
+        match reg.histogram("lat_ms", &[]).snapshot() {
+            Value::Histogram { count, mean, .. } => {
+                assert_eq!(count, 4);
+                assert!((mean - 2.5).abs() < 1e-9);
+            }
+            other => panic!("expected histogram, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn type_mismatch_returns_detached_handle() {
+        let reg = Registry::new();
+        let c = reg.counter("series", &[]);
+        c.inc();
+        let g = reg.gauge("series", &[]);
+        g.set(9.0);
+        // The registered series is still the counter.
+        assert_eq!(reg.counter("series", &[]).get(), 1);
+    }
+
+    #[test]
+    fn dead_sources_are_pruned() {
+        let reg = Registry::new();
+        let live = Arc::new(AtomicU64::new(7));
+        let weak = Arc::downgrade(&live);
+        reg.register_source(move || {
+            let v = weak.upgrade()?;
+            Some(vec![Sample {
+                name: "from_source".into(),
+                labels: vec![],
+                value: Value::Counter(v.load(Ordering::Relaxed)),
+            }])
+        });
+        let snap = reg.snapshot();
+        assert!(snap.iter().any(|s| s.name == "from_source"));
+        drop(live);
+        let snap = reg.snapshot();
+        assert!(!snap.iter().any(|s| s.name == "from_source"));
+        // Pruned: a third snapshot doesn't even call it.
+        assert!(reg.snapshot().is_empty());
+    }
+
+    #[test]
+    fn exporters_render() {
+        let reg = Registry::new();
+        reg.counter("cloudflow_offered_total", &[("plan", "demo")]).add(5);
+        reg.gauge("cloudflow_admit_fraction", &[("plan", "demo")]).set(1.0);
+        reg.histogram("cloudflow_latency_ms", &[("plan", "demo")]).observe(3.0);
+        let json = reg.to_json();
+        assert!(json.contains("\"cloudflow_offered_total\""), "{json}");
+        assert!(json.contains("\"value\":5"), "{json}");
+        let prom = reg.to_prometheus();
+        assert!(prom.contains("cloudflow_offered_total{plan=\"demo\"} 5"), "{prom}");
+        assert!(prom.contains("cloudflow_latency_ms_count{plan=\"demo\"} 1"), "{prom}");
+        assert!(prom.contains("quantile=\"0.99\""), "{prom}");
+    }
+}

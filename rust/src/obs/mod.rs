@@ -1,0 +1,32 @@
+//! Observability: end-to-end request tracing, a unified metrics
+//! registry, and a structured control-plane event journal.
+//!
+//! Three planes, all on the virtual clock:
+//!
+//! * [`trace`] — per-request traces of typed spans (queue wait, service,
+//!   transfer, gather, KVS, codec, return) behind a deterministic
+//!   per-request sampling decision. Enable with
+//!   [`trace::set_sample_rate`] or `CLOUDFLOW_TRACE_SAMPLE`; the default
+//!   rate is 0 and the untraced hot path stays clone-free.
+//! * [`metrics`] — named counters/gauges/histograms plus pull sources
+//!   (each deployment's `PlanMetrics` registers one), exported as JSON or
+//!   Prometheus text from [`metrics::global`].
+//! * [`journal`] — bounded JSONL journal of control-plane decisions:
+//!   plan swaps, drift detections, autoscaler resizes, shed events.
+//!
+//! [`report`] turns drained traces into critical-path attribution — which
+//! stage, queue, or codec hop a request's latency went to — and exposes
+//! the observed per-stage selectivity as planner `Profile` input.
+
+pub mod journal;
+pub mod metrics;
+pub mod report;
+pub mod trace;
+
+pub use journal::{Event, EventKind};
+pub use metrics::{Registry, Sample, Value};
+pub use report::{analyze, critical_path, BlameReport, PathEntry};
+pub use trace::{
+    drain_finished, drain_finished_for, sample_rate, set_sample_rate, Span, SpanKind, Trace,
+    TraceCtx,
+};

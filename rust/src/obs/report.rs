@@ -1,0 +1,352 @@
+//! Critical-path analysis and SLO-debugging reports over sampled traces.
+//!
+//! [`critical_path`] reconstructs where one request's latency went: it
+//! follows the gather edges backwards from the final `Return` span to find
+//! the chain of stages that gated completion, then *tiles* the interval
+//! `[submitted, end]` with those stages' spans (sorted by end time, each
+//! entry charged the time since the previous entry ended). Tiling makes
+//! the attribution exhaustive by construction — entry durations sum to the
+//! recorded end-to-end latency exactly, with any residue surfaced as an
+//! explicit `unattributed` entry rather than silently dropped.
+//!
+//! [`analyze`] aggregates critical paths across many traces into a
+//! per-stage blame table ([`BlameReport`]), and additionally extracts the
+//! observed per-stage selectivity (invoke fraction, rows in/out) from the
+//! service spans — the live-profiling signal the planner can fold back
+//! into a `Profile` via `Profile::with_observed_selectivity`.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use super::trace::{Span, SpanKind, Trace};
+
+/// One tile of a request's critical path.
+#[derive(Debug, Clone)]
+pub struct PathEntry {
+    pub kind: SpanKind,
+    pub stage: Option<(usize, usize)>,
+    pub label: String,
+    /// Time this entry is charged for (tiled, not the raw span width).
+    pub duration_ms: f64,
+}
+
+/// Critical path of a finished trace. Returns an empty vec for traces
+/// that never finished. The entries' durations sum to
+/// `trace.e2e_ms()` exactly (see module docs).
+pub fn critical_path(trace: &Trace) -> Vec<PathEntry> {
+    let Some(end) = trace.end_ms() else {
+        return Vec::new();
+    };
+    let spans = trace.spans();
+
+    // Chain of gating stages: Return stage, then backwards along the
+    // gather edge that fired each task.
+    let mut chain: Vec<(usize, usize)> = Vec::new();
+    if let Some(ret) = spans.iter().find(|s| s.kind == SpanKind::Return) {
+        let mut cur = ret.stage;
+        while let Some(st) = cur {
+            if chain.contains(&st) {
+                break; // defensive: plans are DAGs, but never loop here
+            }
+            chain.push(st);
+            cur = spans
+                .iter()
+                .find(|s| s.kind == SpanKind::Gather && s.stage == Some(st))
+                .and_then(|s| s.parent);
+        }
+    }
+
+    // Contributing spans: the chain's spans (including stage-attributed
+    // nested KVS/codec work) plus the terminal Return hop. Traces without
+    // stage structure (local oracle, baselines) tile over everything.
+    let mut path: Vec<&Span> = if chain.is_empty() {
+        spans.iter().collect()
+    } else {
+        spans
+            .iter()
+            .filter(|s| match s.stage {
+                Some(st) => chain.contains(&st),
+                None => s.kind == SpanKind::Return,
+            })
+            .collect()
+    };
+    path.sort_by(|a, b| a.end_ms.total_cmp(&b.end_ms));
+
+    let mut entries = Vec::new();
+    let mut prev = trace.submitted_ms;
+    for s in path {
+        let d = (s.end_ms - prev).max(0.0);
+        prev = prev.max(s.end_ms);
+        entries.push(PathEntry {
+            kind: s.kind,
+            stage: s.stage,
+            label: s.label.clone(),
+            duration_ms: d,
+        });
+    }
+    if end > prev {
+        entries.push(PathEntry {
+            kind: SpanKind::Return,
+            stage: None,
+            label: "unattributed".to_string(),
+            duration_ms: end - prev,
+        });
+    }
+    entries
+}
+
+/// Aggregated blame for one `(stage, kind)` across traces.
+#[derive(Debug, Clone)]
+pub struct BlameEntry {
+    pub stage: Option<(usize, usize)>,
+    pub kind: SpanKind,
+    pub label: String,
+    /// Total critical-path milliseconds charged across all traces.
+    pub total_ms: f64,
+    /// Number of path entries aggregated.
+    pub count: u64,
+}
+
+impl BlameEntry {
+    /// Share of all analyzed end-to-end time this entry accounts for.
+    pub fn share(&self, total_e2e_ms: f64) -> f64 {
+        if total_e2e_ms > 0.0 {
+            self.total_ms / total_e2e_ms
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Observed selectivity of one stage across the sampled traces.
+#[derive(Debug, Clone)]
+pub struct StageSelectivity {
+    pub stage: (usize, usize),
+    pub label: String,
+    /// Fraction of sampled requests whose data reached this stage.
+    pub invoke_fraction: f64,
+    /// Mean input rows over the requests that did reach it.
+    pub mean_rows_in: f64,
+    /// Mean output rows over the requests that did reach it.
+    pub mean_rows_out: f64,
+}
+
+/// Per-stage blame over a set of finished traces.
+#[derive(Debug)]
+pub struct BlameReport {
+    /// Traces analyzed (unfinished ones are skipped).
+    pub traces: usize,
+    /// Sum of the analyzed traces' end-to-end latencies.
+    pub total_e2e_ms: f64,
+    /// Blame entries, heaviest first.
+    pub entries: Vec<BlameEntry>,
+    /// Observed selectivity per stage, in `(seg, idx)` order.
+    pub selectivity: Vec<StageSelectivity>,
+}
+
+/// Aggregate critical paths and selectivity over `traces`.
+pub fn analyze(traces: &[Arc<Trace>]) -> BlameReport {
+    let mut blame: BTreeMap<(Option<(usize, usize)>, SpanKind), (String, f64, u64)> =
+        BTreeMap::new();
+    let mut sel: BTreeMap<(usize, usize), (String, u64, f64, f64)> = BTreeMap::new();
+    let mut analyzed = 0usize;
+    let mut total_e2e = 0.0;
+
+    for tr in traces {
+        let Some(e2e) = tr.e2e_ms() else {
+            continue;
+        };
+        analyzed += 1;
+        total_e2e += e2e;
+        for entry in critical_path(tr) {
+            let slot = blame
+                .entry((entry.stage, entry.kind))
+                .or_insert_with(|| (entry.label.clone(), 0.0, 0));
+            slot.1 += entry.duration_ms;
+            slot.2 += 1;
+        }
+        for s in tr.spans() {
+            if s.kind != SpanKind::Service || s.rows_in == 0 {
+                continue;
+            }
+            let Some(st) = s.stage else {
+                continue;
+            };
+            let slot = sel.entry(st).or_insert_with(|| (s.label.clone(), 0, 0.0, 0.0));
+            slot.1 += 1;
+            slot.2 += s.rows_in as f64;
+            slot.3 += s.rows_out as f64;
+        }
+    }
+
+    let mut entries: Vec<BlameEntry> = blame
+        .into_iter()
+        .map(|((stage, kind), (label, total_ms, count))| BlameEntry {
+            stage,
+            kind,
+            label,
+            total_ms,
+            count,
+        })
+        .collect();
+    entries.sort_by(|a, b| b.total_ms.total_cmp(&a.total_ms));
+
+    let selectivity = sel
+        .into_iter()
+        .map(|(stage, (label, hits, rows_in, rows_out))| StageSelectivity {
+            stage,
+            label,
+            invoke_fraction: if analyzed > 0 { hits as f64 / analyzed as f64 } else { 0.0 },
+            mean_rows_in: if hits > 0 { rows_in / hits as f64 } else { 0.0 },
+            mean_rows_out: if hits > 0 { rows_out / hits as f64 } else { 0.0 },
+        })
+        .collect();
+
+    BlameReport { traces: analyzed, total_e2e_ms: total_e2e, entries, selectivity }
+}
+
+impl BlameReport {
+    /// Selectivity in the shape `Profile::with_observed_selectivity`
+    /// consumes: `((seg, idx), invoke_prob, mean_rows_in)`.
+    pub fn observed_selectivity(&self) -> Vec<((usize, usize), f64, f64)> {
+        self.selectivity
+            .iter()
+            .map(|s| (s.stage, s.invoke_fraction, s.mean_rows_in))
+            .collect()
+    }
+
+    /// Render the blame table (heaviest entries first) plus the observed
+    /// selectivity, as fixed-width text.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "critical-path blame over {} trace(s), {:.1} ms total e2e\n",
+            self.traces, self.total_e2e_ms
+        ));
+        out.push_str(&format!(
+            "{:<28} {:<13} {:>7} {:>11} {:>7}\n",
+            "stage", "kind", "count", "total_ms", "share"
+        ));
+        for e in &self.entries {
+            let stage = match e.stage {
+                Some((seg, idx)) => format!("{} ({seg}/{idx})", e.label),
+                None => e.label.clone(),
+            };
+            out.push_str(&format!(
+                "{:<28} {:<13} {:>7} {:>11.2} {:>6.1}%\n",
+                stage,
+                e.kind.label(),
+                e.count,
+                e.total_ms,
+                100.0 * e.share(self.total_e2e_ms)
+            ));
+        }
+        if !self.selectivity.is_empty() {
+            out.push_str(&format!(
+                "{:<28} {:>8} {:>10} {:>10}\n",
+                "observed selectivity", "invoke", "rows_in", "rows_out"
+            ));
+            for s in &self.selectivity {
+                out.push_str(&format!(
+                    "{:<28} {:>7.0}% {:>10.1} {:>10.1}\n",
+                    format!("{} ({}/{})", s.label, s.stage.0, s.stage.1),
+                    100.0 * s.invoke_fraction,
+                    s.mean_rows_in,
+                    s.mean_rows_out
+                ));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::trace::test_trace;
+
+    fn traced(req_id: u64) -> Arc<Trace> {
+        test_trace("report_test", req_id)
+    }
+
+    fn span(
+        kind: SpanKind,
+        stage: Option<(usize, usize)>,
+        label: &str,
+        start: f64,
+        end: f64,
+    ) -> Span {
+        Span {
+            kind,
+            stage,
+            label: label.to_string(),
+            start_ms: start,
+            end_ms: end,
+            rows_in: 0,
+            rows_out: 0,
+            parent: None,
+        }
+    }
+
+    /// Two-stage chain with an off-path straggler; path durations must
+    /// tile [0, 20] exactly and skip the straggler.
+    #[test]
+    fn critical_path_tiles_e2e_exactly() {
+        let tr = traced(1);
+        tr.record(span(SpanKind::Queue, Some((0, 0)), "a", 0.0, 1.0));
+        tr.record(span(SpanKind::Service, Some((0, 0)), "a", 1.0, 8.0));
+        // Straggler branch that did NOT gate the join:
+        tr.record(span(SpanKind::Service, Some((0, 1)), "b", 1.0, 4.0));
+        let mut gather = span(SpanKind::Gather, Some((0, 2)), "join", 4.0, 8.0);
+        gather.parent = Some((0, 0));
+        tr.record(gather);
+        tr.record(span(SpanKind::Service, Some((0, 2)), "join", 8.0, 18.0));
+        tr.record(span(SpanKind::Return, Some((0, 2)), "return", 18.0, 20.0));
+        tr.finish(20.0);
+
+        let path = critical_path(&tr);
+        assert!(!path.is_empty());
+        assert!(path.iter().all(|e| e.stage != Some((0, 1))), "straggler on path: {path:?}");
+        let sum: f64 = path.iter().map(|e| e.duration_ms).sum();
+        assert!((sum - 20.0).abs() < 1e-9, "sum={sum} path={path:?}");
+    }
+
+    #[test]
+    fn residue_is_surfaced_not_dropped() {
+        let tr = traced(2);
+        tr.record(span(SpanKind::Service, None, "local", 0.0, 6.0));
+        tr.finish(10.0);
+        let path = critical_path(&tr);
+        let sum: f64 = path.iter().map(|e| e.duration_ms).sum();
+        assert!((sum - 10.0).abs() < 1e-9, "{path:?}");
+        assert!(path.iter().any(|e| e.label == "unattributed"));
+    }
+
+    #[test]
+    fn analyze_aggregates_blame_and_selectivity() {
+        let mut traces = Vec::new();
+        for id in 10..14 {
+            let tr = traced(id);
+            let mut sv = span(SpanKind::Service, Some((0, 0)), "m", 0.0, 5.0);
+            sv.rows_in = 4;
+            // Half the requests are filtered down to 1 row.
+            sv.rows_out = if id % 2 == 0 { 4 } else { 1 };
+            tr.record(sv);
+            tr.record(span(SpanKind::Return, Some((0, 0)), "return", 5.0, 6.0));
+            tr.finish(6.0);
+            traces.push(tr);
+        }
+        let report = analyze(&traces);
+        assert_eq!(report.traces, 4);
+        assert!((report.total_e2e_ms - 24.0).abs() < 1e-9);
+        let path_total: f64 = report.entries.iter().map(|e| e.total_ms).sum();
+        assert!((path_total - report.total_e2e_ms).abs() < 1e-9);
+        assert_eq!(report.selectivity.len(), 1);
+        let s = &report.selectivity[0];
+        assert!((s.invoke_fraction - 1.0).abs() < 1e-9);
+        assert!((s.mean_rows_in - 4.0).abs() < 1e-9);
+        assert!((s.mean_rows_out - 2.5).abs() < 1e-9);
+        assert_eq!(report.observed_selectivity(), vec![((0, 0), 1.0, 4.0)]);
+        assert!(report.render().contains("service"));
+    }
+}

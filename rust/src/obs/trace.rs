@@ -1,0 +1,437 @@
+//! Per-request tracing on the virtual clock.
+//!
+//! A sampled request carries a [`TraceCtx`] — an `Option<Arc<Trace>>` —
+//! through the executor's `TableMsg`s, the serve facade, and the
+//! baselines. The sampling decision is made once per request from the
+//! request id and `CLOUDFLOW_SEED` (see [`TraceCtx::for_request`]), so a
+//! given seed samples the same requests run-to-run and trace ids are
+//! reproducible. Unsampled requests carry `None`: the hot path pays one
+//! hash-and-compare at admission and clones nothing afterwards.
+//!
+//! Spans record wall intervals in virtual-clock milliseconds, tagged with
+//! a [`SpanKind`] and, for executor-side spans, the `(segment, stage)`
+//! position in the deployed plan. Code that cannot see the request — the
+//! KVS client, the table codec — records spans through a thread-local
+//! "current trace" installed by [`enter`] around stage execution.
+//!
+//! Finished traces land in a bounded global sink; drain them with
+//! [`drain_finished`] / [`drain_finished_for`] and feed them to
+//! [`crate::obs::report::analyze`] for critical-path attribution.
+
+use std::cell::RefCell;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU32, Ordering};
+use std::sync::{Arc, Mutex};
+
+use once_cell::sync::OnceCell;
+
+use crate::simulation::clock::Clock;
+use crate::util::rng;
+
+/// Parts-per-million denominator for the sampling decision (the same
+/// fixed-point scheme the admission gate uses).
+pub const SAMPLE_PPM: u32 = 1_000_000;
+
+/// Finished traces retained before the oldest are evicted.
+pub const SINK_CAP: usize = 1024;
+
+const SAMPLE_STREAM: u64 = 0x0B55_0001;
+const TRACE_ID_STREAM: u64 = 0x0B55_0002;
+
+/// What a span measures.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum SpanKind {
+    /// Time between a task being enqueued on a replica and dequeued.
+    Queue,
+    /// Operator execution (one stage's fused op chain).
+    Service,
+    /// Simulated network shipping of input tables between nodes.
+    Transfer,
+    /// Waiting for the last upstream input of a multi-input stage.
+    Gather,
+    /// KVS read (cache hit or remote).
+    KvsGet,
+    /// KVS write.
+    KvsPut,
+    /// Table serialization.
+    CodecEncode,
+    /// Table deserialization.
+    CodecDecode,
+    /// Final result hop back to the client.
+    Return,
+}
+
+impl SpanKind {
+    /// Stable lowercase label for reports and JSON.
+    pub fn label(self) -> &'static str {
+        match self {
+            SpanKind::Queue => "queue",
+            SpanKind::Service => "service",
+            SpanKind::Transfer => "transfer",
+            SpanKind::Gather => "gather",
+            SpanKind::KvsGet => "kvs_get",
+            SpanKind::KvsPut => "kvs_put",
+            SpanKind::CodecEncode => "codec_encode",
+            SpanKind::CodecDecode => "codec_decode",
+            SpanKind::Return => "return",
+        }
+    }
+}
+
+/// One timed interval inside a trace.
+#[derive(Debug, Clone)]
+pub struct Span {
+    pub kind: SpanKind,
+    /// `(segment, stage index)` in the deployed plan for executor-side
+    /// spans; `None` for spans recorded outside a plan stage (the local
+    /// oracle, client-side codec work).
+    pub stage: Option<(usize, usize)>,
+    /// Human label: stage name, KVS key, etc.
+    pub label: String,
+    pub start_ms: f64,
+    pub end_ms: f64,
+    /// Input rows for service spans (0 elsewhere).
+    pub rows_in: usize,
+    /// Output rows for service spans (0 elsewhere).
+    pub rows_out: usize,
+    /// For gather spans: the `(seg, idx)` of the upstream stage whose
+    /// arrival fired this task — the edge the critical path follows.
+    pub parent: Option<(usize, usize)>,
+}
+
+impl Span {
+    pub fn duration_ms(&self) -> f64 {
+        (self.end_ms - self.start_ms).max(0.0)
+    }
+}
+
+/// All spans recorded for one sampled request.
+#[derive(Debug)]
+pub struct Trace {
+    /// Deterministic id derived from the request id and `CLOUDFLOW_SEED`.
+    pub trace_id: u64,
+    pub req_id: u64,
+    /// Deployment label the request ran against (plan name).
+    pub plan: String,
+    /// Virtual submit time; spans and `end_ms` share this clock origin.
+    pub submitted_ms: f64,
+    clock: Clock,
+    spans: Mutex<Vec<Span>>,
+    end_ms: Mutex<Option<f64>>,
+}
+
+impl Trace {
+    /// Current virtual time on the clock this trace was created with.
+    pub fn now_ms(&self) -> f64 {
+        self.clock.now_ms()
+    }
+
+    pub fn record(&self, span: Span) {
+        self.spans.lock().unwrap().push(span);
+    }
+
+    /// Snapshot of the spans recorded so far.
+    pub fn spans(&self) -> Vec<Span> {
+        self.spans.lock().unwrap().clone()
+    }
+
+    /// Completion time, once [`Trace::finish`] has run.
+    pub fn end_ms(&self) -> Option<f64> {
+        *self.end_ms.lock().unwrap()
+    }
+
+    /// End-to-end latency of the finished request.
+    pub fn e2e_ms(&self) -> Option<f64> {
+        self.end_ms().map(|e| e - self.submitted_ms)
+    }
+
+    /// Seal the trace at `end_ms` (the same timestamp the deployment's
+    /// `PlanMetrics` records) and publish it to the global sink. Idempotent:
+    /// only the first call wins.
+    pub fn finish(self: &Arc<Self>, end_ms: f64) {
+        {
+            let mut slot = self.end_ms.lock().unwrap();
+            if slot.is_some() {
+                return;
+            }
+            *slot = Some(end_ms);
+        }
+        sink_push(self.clone());
+    }
+}
+
+/// Per-request trace handle: `None` when the request was not sampled.
+/// Cloning an unsampled ctx is free; a sampled one bumps one refcount.
+#[derive(Debug, Clone, Default)]
+pub struct TraceCtx(pub Option<Arc<Trace>>);
+
+impl TraceCtx {
+    pub fn none() -> Self {
+        TraceCtx(None)
+    }
+
+    pub fn is_sampled(&self) -> bool {
+        self.0.is_some()
+    }
+
+    pub fn get(&self) -> Option<&Arc<Trace>> {
+        self.0.as_ref()
+    }
+
+    /// Make the sampling decision for one request and, if it is sampled,
+    /// allocate its trace. Both the decision and the trace id hash only
+    /// the request id through seed-derived streams, so they are identical
+    /// across runs with the same `CLOUDFLOW_SEED`.
+    pub fn for_request(plan: &str, req_id: u64, clock: Clock, submitted_ms: f64) -> Self {
+        let ppm = sample_ppm().load(Ordering::Relaxed);
+        if ppm == 0 {
+            return TraceCtx(None);
+        }
+        if rng::for_case(SAMPLE_STREAM, req_id).next_u64() % SAMPLE_PPM as u64 >= ppm as u64 {
+            return TraceCtx(None);
+        }
+        let trace_id = rng::for_case(TRACE_ID_STREAM, req_id).next_u64();
+        TraceCtx(Some(Arc::new(Trace {
+            trace_id,
+            req_id,
+            plan: plan.to_string(),
+            submitted_ms,
+            clock,
+            spans: Mutex::new(Vec::new()),
+            end_ms: Mutex::new(None),
+        })))
+    }
+}
+
+fn frac_to_ppm(fraction: f64) -> u32 {
+    if !fraction.is_finite() {
+        return 0;
+    }
+    (fraction.clamp(0.0, 1.0) * SAMPLE_PPM as f64).round() as u32
+}
+
+fn sample_ppm() -> &'static AtomicU32 {
+    static PPM: OnceCell<AtomicU32> = OnceCell::new();
+    PPM.get_or_init(|| {
+        let frac = std::env::var("CLOUDFLOW_TRACE_SAMPLE")
+            .ok()
+            .and_then(|v| v.parse::<f64>().ok())
+            .unwrap_or(0.0);
+        AtomicU32::new(frac_to_ppm(frac))
+    })
+}
+
+/// Set the process-wide sampling fraction in `[0, 1]`. Overrides the
+/// `CLOUDFLOW_TRACE_SAMPLE` environment default.
+pub fn set_sample_rate(fraction: f64) {
+    sample_ppm().store(frac_to_ppm(fraction), Ordering::Relaxed);
+}
+
+/// Current process-wide sampling fraction.
+pub fn sample_rate() -> f64 {
+    sample_ppm().load(Ordering::Relaxed) as f64 / SAMPLE_PPM as f64
+}
+
+// Thread-local "current trace": the trace (and plan stage) whose work is
+// executing on this thread, so layers without a request handle — the KVS
+// client, the table codec — can attach spans.
+thread_local! {
+    #[allow(clippy::type_complexity)]
+    static CURRENT: RefCell<Option<(Arc<Trace>, Option<(usize, usize)>)>> =
+        const { RefCell::new(None) };
+}
+
+/// RAII guard restoring the previous current trace on drop.
+#[derive(Debug)]
+pub struct CurrentGuard {
+    prev: Option<(Arc<Trace>, Option<(usize, usize)>)>,
+}
+
+impl Drop for CurrentGuard {
+    fn drop(&mut self) {
+        let prev = self.prev.take();
+        CURRENT.with(|c| *c.borrow_mut() = prev);
+    }
+}
+
+/// Install `ctx` as this thread's current trace (no stage attribution).
+pub fn enter(ctx: &TraceCtx) -> CurrentGuard {
+    enter_staged(ctx, None)
+}
+
+/// Install `ctx` as this thread's current trace, attributing nested spans
+/// to the given `(segment, stage)` of the running plan.
+pub fn enter_staged(ctx: &TraceCtx, stage: Option<(usize, usize)>) -> CurrentGuard {
+    let prev = CURRENT.with(|c| c.replace(ctx.0.clone().map(|t| (t, stage))));
+    CurrentGuard { prev }
+}
+
+/// RAII span: records on drop with the interval it was alive, against the
+/// trace that was current when it was opened.
+#[derive(Debug)]
+pub struct SpanGuard {
+    trace: Arc<Trace>,
+    kind: SpanKind,
+    stage: Option<(usize, usize)>,
+    label: String,
+    start_ms: f64,
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        let end_ms = self.trace.now_ms();
+        self.trace.record(Span {
+            kind: self.kind,
+            stage: self.stage,
+            label: std::mem::take(&mut self.label),
+            start_ms: self.start_ms,
+            end_ms,
+            rows_in: 0,
+            rows_out: 0,
+            parent: None,
+        });
+    }
+}
+
+/// Open a span against the thread's current trace. Returns `None` — and
+/// costs a single thread-local read — when the request is not sampled.
+pub fn span(kind: SpanKind, label: &str) -> Option<SpanGuard> {
+    let (trace, stage) = CURRENT.with(|c| c.borrow().clone())?;
+    let start_ms = trace.now_ms();
+    Some(SpanGuard { trace, kind, stage, label: label.to_string(), start_ms })
+}
+
+/// Bare trace for unit tests — bypasses the sampling decision so tests
+/// don't have to touch the process-global rate.
+#[cfg(test)]
+pub(crate) fn test_trace(plan: &str, req_id: u64) -> Arc<Trace> {
+    Arc::new(Trace {
+        trace_id: req_id,
+        req_id,
+        plan: plan.to_string(),
+        submitted_ms: 0.0,
+        clock: Clock::new(),
+        spans: Mutex::new(Vec::new()),
+        end_ms: Mutex::new(None),
+    })
+}
+
+fn sink() -> &'static Mutex<VecDeque<Arc<Trace>>> {
+    static SINK: OnceCell<Mutex<VecDeque<Arc<Trace>>>> = OnceCell::new();
+    SINK.get_or_init(|| Mutex::new(VecDeque::new()))
+}
+
+fn sink_push(trace: Arc<Trace>) {
+    let mut s = sink().lock().unwrap();
+    if s.len() == SINK_CAP {
+        s.pop_front();
+    }
+    s.push_back(trace);
+}
+
+/// Drain every finished trace from the global sink.
+pub fn drain_finished() -> Vec<Arc<Trace>> {
+    sink().lock().unwrap().drain(..).collect()
+}
+
+/// Drain finished traces for one deployment (by plan name), leaving
+/// other deployments' traces in the sink.
+pub fn drain_finished_for(plan: &str) -> Vec<Arc<Trace>> {
+    let mut s = sink().lock().unwrap();
+    let mut out = Vec::new();
+    let mut keep = VecDeque::new();
+    for t in s.drain(..) {
+        if t.plan == plan {
+            out.push(t);
+        } else {
+            keep.push_back(t);
+        }
+    }
+    *s = keep;
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // The sampling rate is process-global; serialize the tests that set it.
+    static RATE_LOCK: Mutex<()> = Mutex::new(());
+
+    fn rate_lock() -> std::sync::MutexGuard<'static, ()> {
+        RATE_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    fn mk_trace(req_id: u64) -> TraceCtx {
+        TraceCtx::for_request("test_plan", req_id, Clock::new(), 0.0)
+    }
+
+    #[test]
+    fn rate_zero_samples_nothing() {
+        let _l = rate_lock();
+        set_sample_rate(0.0);
+        for id in 0..64 {
+            assert!(!mk_trace(id).is_sampled());
+        }
+    }
+
+    #[test]
+    fn rate_one_samples_everything_deterministically() {
+        let _l = rate_lock();
+        set_sample_rate(1.0);
+        for id in 0..16 {
+            let a = mk_trace(id);
+            let b = mk_trace(id);
+            assert!(a.is_sampled());
+            assert_eq!(a.get().unwrap().trace_id, b.get().unwrap().trace_id);
+        }
+        assert_ne!(mk_trace(1).get().unwrap().trace_id, mk_trace(2).get().unwrap().trace_id);
+        set_sample_rate(0.0);
+    }
+
+    #[test]
+    fn fractional_rate_is_a_fixed_subset() {
+        let _l = rate_lock();
+        set_sample_rate(0.5);
+        let first: Vec<bool> = (0..256).map(|id| mk_trace(id).is_sampled()).collect();
+        let second: Vec<bool> = (0..256).map(|id| mk_trace(id).is_sampled()).collect();
+        assert_eq!(first, second);
+        let hits = first.iter().filter(|&&s| s).count();
+        assert!(hits > 64 && hits < 192, "hits={hits}");
+        set_sample_rate(0.0);
+    }
+
+    #[test]
+    fn span_guard_records_against_current() {
+        let _l = rate_lock();
+        set_sample_rate(1.0);
+        let ctx = mk_trace(7);
+        set_sample_rate(0.0);
+        {
+            let _g = enter_staged(&ctx, Some((1, 2)));
+            let _s = span(SpanKind::KvsGet, "k");
+        }
+        // Outside the guard nothing is current.
+        assert!(span(SpanKind::KvsGet, "k2").is_none());
+        let spans = ctx.get().unwrap().spans();
+        assert_eq!(spans.len(), 1);
+        assert_eq!(spans[0].kind, SpanKind::KvsGet);
+        assert_eq!(spans[0].stage, Some((1, 2)));
+        assert!(spans[0].end_ms >= spans[0].start_ms);
+    }
+
+    #[test]
+    fn finish_is_idempotent_and_publishes_once() {
+        let _l = rate_lock();
+        set_sample_rate(1.0);
+        let ctx = TraceCtx::for_request("finish_once_plan", 9, Clock::new(), 0.0);
+        set_sample_rate(0.0);
+        let tr = ctx.get().unwrap();
+        tr.finish(5.0);
+        tr.finish(9.0);
+        assert_eq!(tr.end_ms(), Some(5.0));
+        let drained = drain_finished_for("finish_once_plan");
+        assert_eq!(drained.len(), 1);
+        assert_eq!(drained[0].e2e_ms(), Some(5.0));
+    }
+}

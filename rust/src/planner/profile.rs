@@ -134,6 +134,31 @@ impl Profile {
         }
         out
     }
+
+    /// A copy with per-stage selectivity overridden by *observed* values
+    /// from sampled traces (`((seg, idx), invoke_fraction, mean_rows_in)`,
+    /// the shape [`crate::obs::report::BlameReport::observed_selectivity`]
+    /// returns).  Stages without an observation — or with a non-finite /
+    /// out-of-range one — keep their calibration values, so a thin trace
+    /// sample can only refine the profile, never poison it.
+    pub fn with_observed_selectivity(
+        &self,
+        observed: &[((usize, usize), f64, f64)],
+    ) -> Profile {
+        let mut out = self.clone();
+        for ((seg, idx), invoke_prob, rows_in) in observed {
+            let Some(sp) = out.stages.get_mut(*seg).and_then(|s| s.get_mut(*idx)) else {
+                continue;
+            };
+            if invoke_prob.is_finite() && *invoke_prob > 0.0 {
+                sp.invoke_prob = invoke_prob.min(1.0);
+            }
+            if rows_in.is_finite() && *rows_in > 0.0 {
+                sp.rows_in = *rows_in;
+            }
+        }
+        out
+    }
 }
 
 #[cfg(test)]
@@ -188,6 +213,28 @@ mod tests {
         assert!((p.get(0, 0).mean_ms(1) - 15.0).abs() < 1e-9);
         let nan = p.scale_service(|_, _| f64::NAN);
         assert!((nan.get(0, 0).mean_ms(1) - 15.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn observed_selectivity_overrides_in_range_only() {
+        let p = Profile {
+            stages: vec![vec![prof(vec![(1, vec![10.0])])]],
+            input_bytes: 1.0,
+            output_bytes: 1.0,
+            calib_requests: 1,
+        };
+        let refined = p.with_observed_selectivity(&[((0, 0), 0.4, 3.0)]);
+        assert!((refined.get(0, 0).invoke_prob - 0.4).abs() < 1e-9);
+        assert!((refined.get(0, 0).rows_in - 3.0).abs() < 1e-9);
+        // Out-of-range stage positions and bad values are ignored.
+        let bad = p.with_observed_selectivity(&[
+            ((5, 0), 0.5, 2.0),
+            ((0, 0), f64::NAN, -1.0),
+            ((0, 0), 1.7, 0.0),
+        ]);
+        // 1.7 clamps to 1.0; NaN/non-positive leave the calibration value.
+        assert!((bad.get(0, 0).invoke_prob - 1.0).abs() < 1e-9);
+        assert!((bad.get(0, 0).rows_in - 1.0).abs() < 1e-9);
     }
 
     #[test]

@@ -19,6 +19,7 @@
 //! (back off, retry elsewhere, fix the request) instead of string-matching.
 
 use std::fmt;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
 use crate::cloudburst::metrics::PlanMetrics;
@@ -27,6 +28,7 @@ use crate::dataflow::exec_local;
 use crate::dataflow::operator::ExecCtx;
 use crate::dataflow::table::Table;
 use crate::dataflow::Dataflow;
+use crate::obs::trace::{self, Span, SpanKind, TraceCtx};
 use crate::simulation::clock::Clock;
 
 /// Typed serving error (replaces bare `anyhow` on the request path).
@@ -171,6 +173,7 @@ pub struct LocalServer {
     ctx: Arc<ExecCtx>,
     metrics: Arc<PlanMetrics>,
     clock: Clock,
+    next_req: AtomicU64,
 }
 
 impl LocalServer {
@@ -187,6 +190,7 @@ impl LocalServer {
             ctx: Arc::new(ctx),
             metrics: Arc::new(PlanMetrics::default()),
             clock: Clock::new(),
+            next_req: AtomicU64::new(1),
         })
     }
 }
@@ -211,10 +215,29 @@ impl Deployment for LocalServer {
         let metrics = self.metrics.clone();
         let clock = self.clock;
         let submitted = clock.now_ms();
+        let id = self.next_req.fetch_add(1, Ordering::Relaxed);
+        let tctx = TraceCtx::for_request(&flow.name, id, clock, submitted);
+        let rows_in = input.len();
         Ok(ExecFuture::spawn(submitted, move || {
+            let guard = tctx.is_sampled().then(|| trace::enter(&tctx));
+            let t0 = clock.now_ms();
             let out = exec_local::execute(&flow, input, &ctx)?;
+            drop(guard);
             let now = clock.now_ms();
             metrics.record(now, now - submitted);
+            if let Some(tr) = tctx.get() {
+                tr.record(Span {
+                    kind: SpanKind::Service,
+                    stage: None,
+                    label: flow.name.clone(),
+                    start_ms: t0,
+                    end_ms: now,
+                    rows_in,
+                    rows_out: out.len(),
+                    parent: None,
+                });
+                tr.finish(now);
+            }
             Ok(out)
         }))
     }

@@ -461,6 +461,105 @@ mod tests {
     }
 
     #[test]
+    fn window_sketch_empty_percentiles_are_nan() {
+        let w = WindowSketch::new(16);
+        assert!(w.percentile(0.0).is_nan());
+        assert!(w.percentile(50.0).is_nan());
+        assert!(w.percentile(100.0).is_nan());
+        let (med, p99) = w.report();
+        assert!(med.is_nan() && p99.is_nan());
+    }
+
+    #[test]
+    fn window_sketch_single_sample_is_every_percentile() {
+        let mut w = WindowSketch::new(16);
+        w.add(42.5);
+        for q in [0.0, 1.0, 50.0, 99.0, 100.0] {
+            assert_eq!(w.percentile(q), 42.5, "q={q}");
+        }
+        assert_eq!(w.mean(), 42.5);
+    }
+
+    #[test]
+    fn window_sketch_all_equal_values() {
+        let mut w = WindowSketch::new(8);
+        for _ in 0..20 {
+            w.add(3.0); // overfills: evictions replace equals with equals
+        }
+        assert_eq!(w.window_len(), 8);
+        for q in [0.0, 25.0, 50.0, 99.0, 100.0] {
+            assert_eq!(w.percentile(q), 3.0, "q={q}");
+        }
+        assert!((w.mean() - 3.0).abs() < 1e-12);
+        assert_eq!(w.fraction_le(3.0), 1.0);
+        assert_eq!(w.fraction_le(2.9), 0.0);
+    }
+
+    #[test]
+    fn window_sketch_eviction_at_window_boundary() {
+        // cap 4, add 1..=8: exactly one full wrap; window must be {5,6,7,8}.
+        let mut w = WindowSketch::new(4);
+        for v in 1..=8 {
+            w.add(v as f64);
+        }
+        assert_eq!(w.window_len(), 4);
+        assert_eq!(w.count(), 8);
+        assert_eq!(w.percentile(0.0), 5.0);
+        assert_eq!(w.percentile(100.0), 8.0);
+        assert!((w.median() - 6.5).abs() < 1e-9);
+        // One more sample evicts 5 and only 5.
+        w.add(100.0);
+        assert_eq!(w.percentile(0.0), 6.0);
+        assert_eq!(w.percentile(100.0), 100.0);
+    }
+
+    #[test]
+    fn window_sketch_percentiles_bounded_by_window() {
+        use crate::util::quickcheck::check;
+        check("sketch percentiles within window min/max", 100, |r| {
+            let cap = 1 + r.below(16) as usize;
+            let n = r.below(64) as usize;
+            let mut w = WindowSketch::new(cap);
+            let mut vals = Vec::new();
+            for _ in 0..n {
+                let v = r.f64() * 1000.0;
+                w.add(v);
+                vals.push(v);
+            }
+            if n == 0 {
+                crate::prop_assert!(w.median().is_nan(), "empty window not NaN");
+                return Ok(());
+            }
+            // The retained window is exactly the last min(n, cap) samples.
+            let tail = &vals[n.saturating_sub(cap)..];
+            let lo = tail.iter().cloned().fold(f64::INFINITY, f64::min);
+            let hi = tail.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+            crate::prop_assert!(
+                w.window_len() == tail.len(),
+                "window {} != tail {}",
+                w.window_len(),
+                tail.len()
+            );
+            for q in [0.0, 10.0, 50.0, 99.0, 100.0] {
+                let p = w.percentile(q);
+                crate::prop_assert!(
+                    p >= lo - 1e-9 && p <= hi + 1e-9,
+                    "q={q} p={p} outside [{lo}, {hi}]"
+                );
+            }
+            crate::prop_assert!(
+                (w.percentile(0.0) - lo).abs() < 1e-9,
+                "min mismatch"
+            );
+            crate::prop_assert!(
+                (w.percentile(100.0) - hi).abs() < 1e-9,
+                "max mismatch"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
     fn from_durations() {
         let mut s = Summary::from_durations(&[
             Duration::from_millis(10),

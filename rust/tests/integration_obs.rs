@@ -1,0 +1,172 @@
+//! Observability integration: the PR acceptance criteria.
+//!
+//! * Tracing is cheap: with a sampling fraction >= 10%, closed-loop p99
+//!   stays within 5% of the tracing-off baseline.
+//! * Attribution is exhaustive: critical-path entry durations sum to the
+//!   recorded end-to-end latency within 1%.
+//! * Tracing is deterministic: same `CLOUDFLOW_SEED` + same arrival order
+//!   give identical trace ids and span structure across runs.
+//! * The journal and metrics exporters see control-plane activity.
+//!
+//! The sampling rate is process-global, so every test here serializes on
+//! one lock and restores rate 0 before releasing it.
+
+use std::sync::{Mutex, MutexGuard};
+
+use cloudflow::cloudburst::Cluster;
+use cloudflow::dataflow::compiler::{compile, OptFlags};
+use cloudflow::dataflow::operator::{Func, SleepDist};
+use cloudflow::dataflow::table::{DType, Schema, Table, Value};
+use cloudflow::dataflow::Dataflow;
+use cloudflow::obs;
+use cloudflow::obs::trace::{self, SpanKind};
+
+static RATE_LOCK: Mutex<()> = Mutex::new(());
+
+fn lock() -> MutexGuard<'static, ()> {
+    RATE_LOCK.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+fn sleep_chain(name: &str, stages: usize, ms: f64) -> Dataflow {
+    let mut fl = Dataflow::new(name, Schema::new(vec![("x", DType::F64)]));
+    let mut cur = fl.input();
+    for i in 0..stages {
+        cur = fl
+            .map(cur, Func::sleep(&format!("s{i}"), SleepDist::ConstMs(ms)))
+            .unwrap();
+    }
+    fl.set_output(cur).unwrap();
+    fl
+}
+
+fn one_row() -> Table {
+    let mut t = Table::new(Schema::new(vec![("x", DType::F64)]));
+    t.push_fresh(vec![Value::F64(0.0)]).unwrap();
+    t
+}
+
+#[test]
+fn critical_path_sums_to_recorded_e2e() {
+    let _g = lock();
+    trace::set_sample_rate(1.0);
+    let _ = trace::drain_finished_for("obs_cp_chain");
+    let cluster = Cluster::new(None);
+    let plan = compile(&sleep_chain("obs_cp_chain", 3, 10.0), &OptFlags::none()).unwrap();
+    let h = cluster.register(plan, 1).unwrap();
+    for _ in 0..10 {
+        cluster.execute(h, one_row()).unwrap().result().unwrap();
+    }
+    trace::set_sample_rate(0.0);
+    let traces = trace::drain_finished_for("obs_cp_chain");
+    assert_eq!(traces.len(), 10, "rate 1.0 must sample every request");
+    for tr in &traces {
+        let e2e = tr.e2e_ms().expect("trace finished");
+        assert!(e2e > 0.0, "e2e={e2e}");
+        assert!(
+            tr.spans().iter().any(|s| s.kind == SpanKind::Return),
+            "missing return span: {:?}",
+            tr.spans()
+        );
+        let path = obs::report::critical_path(tr);
+        let sum: f64 = path.iter().map(|e| e.duration_ms).sum();
+        assert!(
+            (sum - e2e).abs() <= 0.01 * e2e + 1e-9,
+            "critical path sums to {sum}, e2e is {e2e}: {path:?}"
+        );
+    }
+}
+
+#[test]
+fn tracing_overhead_p99_within_5_percent() {
+    let _g = lock();
+    // Each run uses a fresh cluster and a unique plan name; latency is
+    // read from the deployment's own sketch, exactly what a user sees.
+    let run = |name: &str, rate: f64| -> f64 {
+        trace::set_sample_rate(rate);
+        let cluster = Cluster::new(None);
+        let plan = compile(&sleep_chain(name, 2, 40.0), &OptFlags::none()).unwrap();
+        let h = cluster.register(plan, 2).unwrap();
+        let dep = cluster.deployment(h).unwrap();
+        let _ = cloudflow::workloads::closed_loop(&dep, 2, 36, |_| one_row());
+        let (_, p99) = cluster.metrics(h).report();
+        trace::set_sample_rate(0.0);
+        let _ = trace::drain_finished_for(name);
+        p99
+    };
+    let base = run("obs_ovh_off", 0.0);
+    let traced = run("obs_ovh_on", 0.25);
+    // 5% relative per the acceptance bar, plus 1 virtual ms of slack so a
+    // scheduler hiccup on a ~85 ms p99 can't flake the build.
+    assert!(
+        traced <= base * 1.05 + 1.0,
+        "tracing overhead too high: off p99 {base} vs on p99 {traced}"
+    );
+}
+
+#[test]
+fn trace_ids_and_span_structure_deterministic_across_runs() {
+    let _g = lock();
+    type Shape = Vec<(&'static str, Option<(usize, usize)>, Option<(usize, usize)>)>;
+    let run = || -> Vec<(u64, u64, Shape)> {
+        trace::set_sample_rate(0.5);
+        let _ = trace::drain_finished_for("obs_det");
+        // A fresh cluster restarts request ids at 1, so the seed-derived
+        // sampling decisions and trace ids line up run to run.
+        let cluster = Cluster::new(None);
+        let plan = compile(&sleep_chain("obs_det", 2, 5.0), &OptFlags::none()).unwrap();
+        let h = cluster.register(plan, 1).unwrap();
+        for _ in 0..20 {
+            cluster.execute(h, one_row()).unwrap().result().unwrap();
+        }
+        trace::set_sample_rate(0.0);
+        let mut traces = trace::drain_finished_for("obs_det");
+        traces.sort_by_key(|t| t.req_id);
+        traces
+            .iter()
+            .map(|t| {
+                // Span *timings* differ run to run (virtual clocks track
+                // real threads); identity and structure must not.
+                let mut shape: Shape = t
+                    .spans()
+                    .iter()
+                    .map(|s| (s.kind.label(), s.stage, s.parent))
+                    .collect();
+                shape.sort();
+                (t.req_id, t.trace_id, shape)
+            })
+            .collect()
+    };
+    let a = run();
+    let b = run();
+    assert!(!a.is_empty(), "rate 0.5 sampled none of 20 requests");
+    assert_eq!(a, b, "same seed + same arrivals must yield identical traces");
+}
+
+#[test]
+fn journal_and_exporters_see_control_plane() {
+    let _g = lock();
+    trace::set_sample_rate(0.0);
+    let cluster = Cluster::new(None);
+    let plan = compile(&sleep_chain("obs_smoke", 1, 2.0), &OptFlags::none()).unwrap();
+    let h = cluster.register(plan, 1).unwrap();
+    cluster.execute(h, one_row()).unwrap().result().unwrap();
+    cluster.set_admission(h, 0.5).unwrap();
+    cluster.set_admission(h, 1.0).unwrap();
+
+    let ev = obs::journal::events_for("obs_smoke");
+    let admission = |e: &obs::journal::Event, want: f64| {
+        matches!(e.kind,
+            obs::journal::EventKind::AdmissionChange { fraction } if (fraction - want).abs() < 1e-9)
+    };
+    assert!(ev.iter().any(|e| admission(e, 0.5)), "missing shed admission: {ev:?}");
+    assert!(ev.iter().any(|e| admission(e, 1.0)), "missing restore admission: {ev:?}");
+    for e in &ev {
+        cloudflow::util::json::Json::parse(&e.to_json()).expect("journal line parses");
+    }
+
+    let prom = obs::metrics::global().to_prometheus();
+    assert!(prom.contains("cloudflow_offered_total"), "{prom}");
+    assert!(prom.contains("obs_smoke"), "{prom}");
+    let json = obs::metrics::global().to_json();
+    cloudflow::util::json::Json::parse(&json).expect("metrics snapshot parses");
+}
