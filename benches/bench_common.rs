@@ -109,3 +109,158 @@ pub fn write_bench_json(name: &str, rows: &[String]) {
         Err(e) => eprintln!("warn: cannot write {path}: {e}"),
     }
 }
+
+// ---- golden-baseline regression checks ----
+//
+// `benches/baselines/BENCH_<name>.json` holds hand-vetted golden rows for
+// a bench.  `check_baseline` compares freshly emitted rows field by
+// field: numbers within a relative tolerance (generous by default —
+// virtual-time runs still jitter under CI load; a row can widen it
+// further with a `_tol` field), strings and booleans exactly.  Only
+// fields present in the baseline are checked, so benches may add columns
+// without invalidating their baselines; rows are matched by their
+// `case` field when present, by position otherwise.  A missing golden
+// file skips the check with a notice (most benches have none yet).
+
+/// Default relative tolerance for numeric baseline fields.
+pub const BASELINE_REL_TOL: f64 = 0.5;
+
+/// Absolute slack floor: numeric differences below this never fail,
+/// whatever the relative tolerance says (small-ms metrics jitter).
+pub const BASELINE_ABS_FLOOR: f64 = 2.0;
+
+fn baseline_path(name: &str) -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("../benches/baselines")
+        .join(format!("BENCH_{name}.json"))
+}
+
+/// Baseline comparison runs in the CI smoke mode, or anywhere when
+/// forced with `CLOUDFLOW_BENCH_CHECK=1`.
+pub fn baseline_check_enabled() -> bool {
+    smoke()
+        || std::env::var("CLOUDFLOW_BENCH_CHECK")
+            .map(|v| v == "1")
+            .unwrap_or(false)
+}
+
+fn render_json(v: &cloudflow::util::json::Json) -> String {
+    use cloudflow::util::json::Json;
+    match v {
+        Json::Null => "null".into(),
+        Json::Bool(b) => b.to_string(),
+        Json::Num(n) => jnum(*n),
+        Json::Str(s) => s.clone(),
+        _ => "<nested>".into(),
+    }
+}
+
+fn compare_field(
+    base: &cloudflow::util::json::Json,
+    cur: Option<&cloudflow::util::json::Json>,
+    tol: f64,
+) -> (bool, String) {
+    use cloudflow::util::json::Json;
+    let Some(cur) = cur else {
+        return (false, "<absent>".into());
+    };
+    let shown = render_json(cur);
+    let pass = match (base, cur) {
+        (Json::Num(b), Json::Num(c)) => {
+            (c - b).abs() <= (tol * b.abs()).max(BASELINE_ABS_FLOOR)
+        }
+        _ => base == cur,
+    };
+    (pass, shown)
+}
+
+/// Compare emitted rows against the golden baseline for `name`.
+/// Returns `true` when the check passes, is disabled, or no baseline
+/// exists; prints a per-field pass/fail table either way.
+pub fn check_baseline(name: &str, rows: &[String]) -> bool {
+    use cloudflow::util::json::Json;
+    if !baseline_check_enabled() {
+        return true;
+    }
+    let path = baseline_path(name);
+    let Ok(text) = std::fs::read_to_string(&path) else {
+        println!("baseline: no golden file for {name}, skipping check");
+        return true;
+    };
+    let base = match Json::parse(&text) {
+        Ok(j) => j,
+        Err(e) => {
+            eprintln!("baseline: cannot parse {}: {e}", path.display());
+            return false;
+        }
+    };
+    let cur = match Json::parse(&format!("[{}]", rows.join(","))) {
+        Ok(j) => j,
+        Err(e) => {
+            eprintln!("baseline: emitted rows are not valid JSON: {e}");
+            return false;
+        }
+    };
+    let (Some(base_rows), Some(cur_rows)) = (base.as_arr(), cur.as_arr()) else {
+        eprintln!("baseline: expected JSON arrays of rows");
+        return false;
+    };
+    println!("\n-- baseline check: {name} --");
+    let mut ok = true;
+    let mut checked = 0usize;
+    for (bi, brow) in base_rows.iter().enumerate() {
+        let key = brow.get("case").and_then(Json::as_str);
+        let crow = match key {
+            Some(k) => cur_rows
+                .iter()
+                .find(|r| r.get("case").and_then(Json::as_str) == Some(k)),
+            None => cur_rows.get(bi),
+        };
+        let label = key.map(str::to_string).unwrap_or_else(|| format!("row {bi}"));
+        let Some(crow) = crow else {
+            println!("  {label:<20} MISSING in current output");
+            ok = false;
+            continue;
+        };
+        let Some(fields) = brow.as_obj() else {
+            println!("  {label:<20} baseline row is not an object");
+            ok = false;
+            continue;
+        };
+        let tol = brow
+            .get("_tol")
+            .and_then(Json::as_f64)
+            .unwrap_or(BASELINE_REL_TOL);
+        for (k, bv) in fields {
+            if k.starts_with('_') || k == "case" {
+                continue;
+            }
+            checked += 1;
+            let (pass, shown) = compare_field(bv, crow.get(k), tol);
+            if !pass {
+                ok = false;
+            }
+            println!(
+                "  {label:<20} {k:<26} base={:<12} cur={:<12} {}",
+                render_json(bv),
+                shown,
+                if pass { "ok" } else { "FAIL" },
+            );
+        }
+    }
+    println!(
+        "baseline {name}: {} ({checked} fields vs {})",
+        if ok { "PASS" } else { "FAIL" },
+        path.display()
+    );
+    ok
+}
+
+/// [`check_baseline`], but a failure terminates the bench with a nonzero
+/// exit so the CI bench-smoke job goes red on a regression.
+pub fn enforce_baseline(name: &str, rows: &[String]) {
+    if !check_baseline(name, rows) {
+        eprintln!("baseline regression: {name} exceeded tolerance (see table above)");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,157 @@
+//! SLO monitor: detection latency and explain-attribution accuracy.
+//!
+//! Phase 1 (detection): a driftable two-stage chain is planned for its
+//! SLO, driven open-loop at the planned rate, and hit mid-run with a 4x
+//! service-time drift on the heavy stage.  The burn-rate watcher runs on
+//! a background thread; the headline number is the virtual-time gap from
+//! drift onset to the first critical latency alert — bounded by the fast
+//! window plus a couple of sampling intervals.
+//!
+//! Phase 2 (attribution): the end-of-run `obs::explain` report must rank
+//! the drifted stage first and attribute the regression to queueing,
+//! with observed queueing delay above the plan's M/M/c prediction.
+//!
+//! Emits `BENCH_slo_monitor.json` and **enforces** the golden baseline in
+//! `benches/baselines/` — a detection or attribution regression beyond
+//! tolerance fails the CI bench-smoke job.
+
+mod bench_common;
+
+use bench_common::{
+    enforce_baseline, header, jbool, jnum, jstr, json_row, scaled_ms, write_bench_json,
+};
+use cloudflow::adaptive::TelemetryCollector;
+use cloudflow::cloudburst::Cluster;
+use cloudflow::obs;
+use cloudflow::obs::slo::{Severity, SloPolicy, WindowPair};
+use cloudflow::planner::{plan_for_slo, PlannerCtx, Slo};
+use cloudflow::simulation::clock;
+use cloudflow::workloads::{drifting_chain, open_loop, ArrivalTrace};
+
+/// Tight windows so smoke runs detect within their budget; the bench
+/// measures detection latency *relative to this policy*, so the policy
+/// is fixed here rather than read from the environment.
+fn bench_policy() -> SloPolicy {
+    SloPolicy {
+        pairs: vec![WindowPair {
+            severity: Severity::Critical,
+            fast_ms: 1_500.0,
+            slow_ms: 3_500.0,
+            burn_threshold: 1.5,
+        }],
+        min_events: 5,
+        ..SloPolicy::default()
+    }
+}
+
+fn main() {
+    let mut rows = Vec::new();
+    let duration_ms = scaled_ms(16_000.0);
+    let onset_ms = 0.35 * duration_ms;
+    let qps = 40.0;
+    let interval_ms = 250.0;
+    let fast_ms = bench_policy().pairs[0].fast_ms;
+
+    header("slo_monitor: detection latency under injected drift");
+    let sc = drifting_chain(2.0, 20.0).unwrap();
+    let slo = Slo::new(250.0, qps);
+    let dp = plan_for_slo(&sc.spec.flow, &slo, &PlannerCtx::default().quick()).unwrap();
+    println!(
+        "plan {}: {} replicas, predicted p99 {:.1}ms, ceiling {:.0} req/s",
+        dp.plan.name,
+        dp.n_replicas(),
+        dp.estimate.p99_ms,
+        dp.estimate.max_qps
+    );
+
+    let cluster = Cluster::new(None);
+    let h = cluster.register_planned(&dp).unwrap();
+    let dep = cluster.deployment(h).unwrap();
+    obs::trace::set_sample_rate(0.25);
+    let watcher = cluster
+        .slo_watcher(h, slo.p99_ms)
+        .unwrap()
+        .with_policy(bench_policy())
+        .with_interval_ms(interval_ms);
+    let mut collector = TelemetryCollector::new(&cluster, h, dp.profile.clone(), slo).unwrap();
+    let clock = watcher.clock();
+    let handle = watcher.spawn();
+
+    let knob = sc.knob.clone();
+    let make_input = sc.spec.make_input.clone();
+    let trace = ArrivalTrace::constant(qps, duration_ms);
+    let result = std::thread::scope(|s| {
+        let load = s.spawn(|| open_loop(&dep, &trace, |i| make_input(i)));
+        while clock.now_ms() < onset_ms {
+            clock::sleep_ms(10.0);
+        }
+        knob.set(4.0);
+        load.join().expect("load thread panicked")
+    });
+    // Let the watcher observe the tail of the run before stopping it.
+    clock::sleep_ms(2.0 * interval_ms);
+    let mut watcher = handle.stop();
+    watcher.tick();
+
+    let fired = watcher
+        .alerts()
+        .iter()
+        .find(|a| a.fired && a.is_critical() && a.t_ms >= onset_ms)
+        .cloned();
+    let detection_ms = fired.as_ref().map(|a| a.t_ms - onset_ms);
+    println!(
+        "offered={} admitted={} shed={} errors={} wall={:.0}ms",
+        result.offered, result.admitted, result.shed, result.errors, result.wall_ms
+    );
+    match (&fired, detection_ms) {
+        (Some(a), Some(d)) => println!(
+            "first critical alert: t={:.0}ms (onset {:.0}ms) -> detection latency {:.0}ms \
+             (fast window {:.0}ms, burn_fast={:.1})",
+            a.t_ms, onset_ms, d, fast_ms, a.burn_fast
+        ),
+        _ => println!("NO critical alert fired after onset at {onset_ms:.0}ms"),
+    }
+    rows.push(json_row(&[
+        ("case", jstr("detection")),
+        ("fired", jbool(fired.is_some())),
+        ("detection_latency_ms", jnum(detection_ms.unwrap_or(f64::NAN))),
+        ("fast_window_ms", jnum(fast_ms)),
+        ("interval_ms", jnum(interval_ms)),
+        ("bundles", jnum(watcher.bundles().count() as f64)),
+    ]));
+
+    header("slo_monitor: explain-attribution accuracy");
+    let snap = collector.sample();
+    let blame = obs::analyze(&watcher.recorder().traces());
+    let admit = cluster.admission(h).unwrap_or(1.0);
+    let report = obs::explain(&dp, &snap, Some(&blame), None, admit);
+    print!("{}", report.render());
+    let top = report.top();
+    let (top_stage, cause, obs_wait, pred_wait) = match top {
+        Some(f) => (
+            f.label.clone(),
+            f.cause.label().to_string(),
+            f.observed_wait_ms,
+            f.predicted_wait_ms,
+        ),
+        None => ("<none>".to_string(), "nominal".to_string(), 0.0, 0.0),
+    };
+    let correct = top_stage == "heavy";
+    println!(
+        "attribution: top={top_stage} cause={cause} correct={correct} \
+         observed_wait={obs_wait:.1}ms predicted_wait={pred_wait:.1}ms"
+    );
+    rows.push(json_row(&[
+        ("case", jstr("attribution")),
+        ("top_stage", jstr(&top_stage)),
+        ("correct", jbool(correct)),
+        ("cause", jstr(&cause)),
+        ("observed_wait_ms", jnum(obs_wait)),
+        ("predicted_wait_ms", jnum(pred_wait)),
+        ("observed_p99_ms", jnum(report.observed_p99_ms)),
+        ("predicted_p99_ms", jnum(report.predicted_p99_ms)),
+    ]));
+
+    write_bench_json("slo_monitor", &rows);
+    enforce_baseline("slo_monitor", &rows);
+}

@@ -1,0 +1,107 @@
+//! SLO monitoring tour: burn-rate alerting, the flight recorder, and the
+//! regression-explain engine, end to end.
+//!
+//! Plans a driftable two-stage chain for a 250ms p99 SLO, serves it
+//! open-loop at the planned rate, and injects a 4x service-time drift on
+//! the heavy stage mid-run.  The burn-rate watcher detects the
+//! violation, freezes a flight-recorder bundle, and the final
+//! `obs::explain` report ranks the drifted stage with its
+//! observed-vs-predicted queueing numbers.
+//!
+//! Run: `cargo run --release --example slo_monitor_demo`
+
+use cloudflow::adaptive::TelemetryCollector;
+use cloudflow::cloudburst::Cluster;
+use cloudflow::obs;
+use cloudflow::obs::slo::{Severity, SloPolicy, WindowPair};
+use cloudflow::planner::{plan_for_slo, PlannerCtx, Slo};
+use cloudflow::simulation::clock;
+use cloudflow::workloads::{drifting_chain, open_loop, ArrivalTrace};
+
+fn main() -> anyhow::Result<()> {
+    let duration_ms = 12_000.0;
+    let onset_ms = 4_000.0;
+    let qps = 40.0;
+
+    // Plan the chain for its SLO while the drift knob still reads 1.0.
+    let sc = drifting_chain(2.0, 20.0)?;
+    let slo = Slo::new(250.0, qps);
+    let dp = plan_for_slo(&sc.spec.flow, &slo, &PlannerCtx::default().quick())?;
+    println!(
+        "plan {}: {} replicas, predicted p99 {:.1}ms (target {:.0}ms)",
+        dp.plan.name,
+        dp.n_replicas(),
+        dp.estimate.p99_ms,
+        slo.p99_ms
+    );
+
+    let cluster = Cluster::new(None);
+    let h = cluster.register_planned(&dp)?;
+    let dep = cluster.deployment(h)?;
+    obs::trace::set_sample_rate(0.25);
+
+    // Tight windows so the demo fires within its 12s run; production
+    // policies come from CLOUDFLOW_SLO_WINDOWS / SloPolicy::default().
+    let policy = SloPolicy {
+        pairs: vec![WindowPair {
+            severity: Severity::Critical,
+            fast_ms: 1_500.0,
+            slow_ms: 3_500.0,
+            burn_threshold: 1.5,
+        }],
+        min_events: 5,
+        ..SloPolicy::default()
+    };
+    let watcher = cluster
+        .slo_watcher(h, slo.p99_ms)?
+        .with_policy(policy)
+        .with_interval_ms(250.0);
+    let mut collector = TelemetryCollector::new(&cluster, h, dp.profile.clone(), slo)?;
+    let clock = watcher.clock();
+    let handle = watcher.spawn();
+
+    println!("serving at {qps:.0} req/s; drifting heavy stage 4x at t={onset_ms:.0}ms ...");
+    let knob = sc.knob.clone();
+    let make_input = sc.spec.make_input.clone();
+    let trace = ArrivalTrace::constant(qps, duration_ms);
+    std::thread::scope(|s| {
+        let load = s.spawn(|| open_loop(&dep, &trace, |i| make_input(i)));
+        while clock.now_ms() < onset_ms {
+            clock::sleep_ms(10.0);
+        }
+        knob.set(4.0);
+        load.join().expect("load thread panicked")
+    });
+    clock::sleep_ms(500.0);
+    let mut watcher = handle.stop();
+    watcher.tick();
+
+    println!("\nalert transitions:");
+    for a in watcher.alerts() {
+        println!(
+            "  t={:>7.0}ms {} {}:{} burn_fast={:.1} burn_slow={:.1}",
+            a.t_ms,
+            if a.fired { "FIRE " } else { "clear" },
+            a.objective.label(),
+            a.severity.label(),
+            a.burn_fast,
+            a.burn_slow,
+        );
+    }
+    if let Some(bundle) = watcher.bundles().last() {
+        println!(
+            "\nflight-recorder bundle frozen at t={:.0}ms ({}): {} bytes of JSON",
+            bundle.t_ms,
+            bundle.reason,
+            bundle.json.len(),
+        );
+    }
+
+    // The explain report: observed vs planned, stage by stage.
+    let snap = collector.sample();
+    let blame = obs::analyze(&watcher.recorder().traces());
+    let admit = cluster.admission(h).unwrap_or(1.0);
+    let report = obs::explain(&dp, &snap, Some(&blame), None, admit);
+    println!("\n{}", report.render());
+    Ok(())
+}

@@ -38,6 +38,36 @@ use super::drift::{DriftConfig, DriftDetector};
 use super::guard;
 use super::telemetry::{live_profile, LiveSnapshot, TelemetryCollector};
 
+/// A clone-able handle external observers use to ask the controller for
+/// an immediate re-plan: a critical SLO alert hands its explain verdict
+/// here ([`crate::obs::explain`]) and the next control step re-tunes
+/// against the live profile, bypassing the cooldown and the sustained-
+/// drift gate.  Firing again before the controller consumes the pending
+/// reason replaces it (the latest verdict wins).
+#[derive(Clone, Default)]
+pub struct ReplanTrigger(Arc<std::sync::Mutex<Option<String>>>);
+
+impl ReplanTrigger {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Request a re-plan with a human-readable reason (journaled as a
+    /// `replan_trigger` event when consumed).
+    pub fn fire(&self, reason: impl Into<String>) {
+        *self.0.lock().unwrap() = Some(reason.into());
+    }
+
+    /// Consume the pending reason, if any.
+    pub fn take(&self) -> Option<String> {
+        self.0.lock().unwrap().take()
+    }
+
+    pub fn is_pending(&self) -> bool {
+        self.0.lock().unwrap().is_some()
+    }
+}
+
 /// Knobs of the control loop.
 #[derive(Debug, Clone)]
 pub struct ControllerOptions {
@@ -111,6 +141,9 @@ pub struct DecisionState {
     pub cooldown: usize,
     pub shedding: bool,
     pub last_ceiling_qps: f64,
+    /// Set by an external [`ReplanTrigger`]: the next [`decide`] call
+    /// re-plans immediately, bypassing cooldown and the drift verdict.
+    pub force_replan: bool,
 }
 
 impl DecisionState {
@@ -120,6 +153,7 @@ impl DecisionState {
             cooldown: 0,
             shedding: false,
             last_ceiling_qps: f64::INFINITY,
+            force_replan: false,
         }
     }
 }
@@ -141,11 +175,12 @@ pub fn decide(
     snap: &LiveSnapshot,
 ) -> (Action, Option<DeploymentPlan>) {
     let verdict = state.detector.observe(snap);
-    if state.cooldown > 0 {
+    let forced = std::mem::take(&mut state.force_replan);
+    if state.cooldown > 0 && !forced {
         state.cooldown -= 1;
         return (Action::None, None);
     }
-    if verdict.sustained() {
+    if verdict.sustained() || forced {
         let live = live_profile(base, snap, opts.drift.min_window);
         // Hold the SLO's latency target, but require capacity for the
         // *observed* arrival rate when it exceeds the planned floor.
@@ -209,6 +244,7 @@ pub struct AdaptiveController {
     collector: TelemetryCollector,
     state: DecisionState,
     events: Vec<ControlEvent>,
+    trigger: ReplanTrigger,
 }
 
 impl AdaptiveController {
@@ -232,7 +268,15 @@ impl AdaptiveController {
             opts,
             collector,
             events: Vec::new(),
+            trigger: ReplanTrigger::new(),
         })
+    }
+
+    /// A clone-able handle that asks this controller for an immediate
+    /// re-plan on its next control step (e.g. wired to a critical SLO
+    /// alert's explain verdict via [`crate::obs::slo::SloWatcher::on_alert`]).
+    pub fn replan_trigger(&self) -> ReplanTrigger {
+        self.trigger.clone()
     }
 
     pub fn events(&self) -> &[ControlEvent] {
@@ -247,6 +291,15 @@ impl AdaptiveController {
     /// recorded event.
     pub fn step(&mut self) -> ControlEvent {
         let snap = self.collector.sample();
+        if let Some(reason) = self.trigger.take() {
+            obs::journal::record(
+                snap.t_ms,
+                &self.plan.name,
+                EventKind::ReplanTrigger { reason },
+            );
+            obs::metrics::global().counter("adaptive_trigger_total", &[]).inc();
+            self.state.force_replan = true;
+        }
         let max_ratio = snap.max_ratio(self.opts.drift.min_window);
         let (mut action, dp) = decide(
             &self.plan,

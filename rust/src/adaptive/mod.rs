@@ -46,7 +46,7 @@ pub mod telemetry;
 
 pub use controller::{
     decide, Action, AdaptiveController, AdaptiveHandle, ControlEvent, ControllerOptions,
-    DecisionState,
+    DecisionState, ReplanTrigger,
 };
 pub use drift::{DriftConfig, DriftDetector, DriftVerdict};
 pub use guard::{admit_fraction, can_restore};

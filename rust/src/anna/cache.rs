@@ -44,6 +44,13 @@ impl Cache {
     }
 
     pub fn get(&self, key: &str) -> Option<Bytes> {
+        // Spanned so direct cache probes (scheduler locality checks,
+        // executor fast paths that skip `KvsClient`) still show up as KVS
+        // time in critical-path tiling instead of inflating "service".
+        let _span = crate::obs::trace::span(
+            crate::obs::trace::SpanKind::KvsGet,
+            &format!("cache:{key}"),
+        );
         let mut c = self.inner.lock().unwrap();
         c.tick += 1;
         let tick = c.tick;
@@ -64,6 +71,10 @@ impl Cache {
         if value.len() > self.capacity {
             return; // would evict everything and still not fit
         }
+        let _span = crate::obs::trace::span(
+            crate::obs::trace::SpanKind::KvsPut,
+            &format!("cache:{key}"),
+        );
         let mut c = self.inner.lock().unwrap();
         c.tick += 1;
         let tick = c.tick;
@@ -87,6 +98,10 @@ impl Cache {
     }
 
     pub fn invalidate(&self, key: &str) {
+        let _span = crate::obs::trace::span(
+            crate::obs::trace::SpanKind::KvsPut,
+            &format!("cache_invalidate:{key}"),
+        );
         let mut c = self.inner.lock().unwrap();
         if let Some((v, t)) = c.map.remove(key) {
             c.order.remove(&t);
@@ -233,5 +248,25 @@ mod tests {
         let (c, _) = mk(10);
         c.invalidate("nothing");
         assert!(c.is_empty());
+    }
+
+    #[test]
+    fn cache_ops_record_kvs_spans() {
+        use crate::obs::trace::{enter, test_trace, SpanKind, TraceCtx};
+        let tr = test_trace("cache_span_t", 1);
+        let ctx = TraceCtx(Some(tr.clone()));
+        let g = enter(&ctx);
+        let (c, _) = mk(100);
+        c.get("a"); // miss
+        c.insert("a", val(10));
+        c.get("a"); // hit
+        c.invalidate("a");
+        drop(g);
+        let spans = tr.spans();
+        let gets = spans.iter().filter(|s| s.kind == SpanKind::KvsGet).count();
+        let puts = spans.iter().filter(|s| s.kind == SpanKind::KvsPut).count();
+        assert_eq!(gets, 2, "{spans:?}");
+        assert_eq!(puts, 2, "{spans:?}");
+        assert!(spans.iter().any(|s| s.label == "cache_invalidate:a"));
     }
 }

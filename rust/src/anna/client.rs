@@ -78,8 +78,11 @@ impl KvsClient {
         self.store.put(key, value);
     }
 
-    /// Put without sleeping (test/bench setup paths).
+    /// Put without sleeping (test/bench setup paths).  Still spanned:
+    /// critical-path tiling must see the store write even when the cost
+    /// model is bypassed.
     pub fn put_free(&self, key: &str, value: impl Into<Bytes>) {
+        let _span = crate::obs::trace::span(crate::obs::trace::SpanKind::KvsPut, key);
         self.store.put(key, value);
     }
 
@@ -153,6 +156,23 @@ mod tests {
         cl.put_free("k", vec![1; 10]);
         cl.get_uncached("k");
         assert_eq!(cache.len(), 0);
+    }
+
+    #[test]
+    fn put_free_records_kvs_span() {
+        use crate::obs::trace::{enter, test_trace, SpanKind, TraceCtx};
+        let tr = test_trace("client_span_t", 1);
+        let ctx = TraceCtx(Some(tr.clone()));
+        let g = enter(&ctx);
+        let store = Arc::new(Store::new(2));
+        let cl = KvsClient::direct(store, NodeId::CLIENT);
+        cl.put_free("k", vec![1, 2, 3]);
+        drop(g);
+        let spans = tr.spans();
+        assert!(
+            spans.iter().any(|s| s.kind == SpanKind::KvsPut && s.label == "k"),
+            "{spans:?}"
+        );
     }
 
     #[test]

@@ -913,7 +913,7 @@ impl Cluster {
     ) -> Result<DagHandle> {
         let stages = dp.stages.clone();
         let default_cap = config::global().autoscaler.max_replicas;
-        self.register_with(dp.plan.clone(), move |seg, idx| {
+        let h = self.register_with(dp.plan.clone(), move |seg, idx| {
             match stages.iter().find(|s| s.seg == seg && s.idx == idx) {
                 Some(sp) => {
                     let floor = sp.replicas.max(1);
@@ -926,7 +926,11 @@ impl Cluster {
                 }
                 None => StageProvision { initial: 1, min: 1, max: default_cap, batch_cap: 0 },
             }
-        })
+        })?;
+        // Arm the cumulative SLO good/bad split so the burn-rate monitor
+        // has per-request counts from the first completion on.
+        self.metrics(h).set_slo_threshold(dp.slo.p99_ms);
+        Ok(h)
     }
 
     /// Shared registration path with per-stage provisioning directives.
@@ -1032,6 +1036,17 @@ impl Cluster {
 
     pub fn metrics(&self, h: DagHandle) -> Arc<PlanMetrics> {
         self.inner.plans.read().unwrap()[h.0].metrics.clone()
+    }
+
+    /// A burn-rate SLO watcher for one registered plan, aligned to the
+    /// cluster's virtual clock (its recorder timestamps and alert times
+    /// land on the same axis as the traces and journal).
+    pub fn slo_watcher(&self, h: DagHandle, p99_target_ms: f64) -> Result<crate::obs::slo::SloWatcher> {
+        let plan = self.inner.plan(h)?;
+        Ok(
+            crate::obs::slo::SloWatcher::new(&plan.plan.name, plan.metrics.clone(), p99_target_ms)
+                .with_clock(self.inner.clock),
+        )
     }
 
     /// Replica counts per stage label (allocation snapshots for Fig 6).

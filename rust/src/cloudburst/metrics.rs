@@ -89,6 +89,14 @@ pub struct PlanMetrics {
     pub offered: AtomicU64,
     /// Requests rejected by admission control (overload guard).
     pub shed: AtomicU64,
+    /// p99 target (f64 bits) for the cumulative SLO good/bad split below;
+    /// 0 bits (the default) disables counting.
+    slo_threshold_bits: AtomicU64,
+    /// Completions within the SLO threshold (cumulative, never windowed —
+    /// the burn-rate monitor diffs these itself).
+    slo_good: AtomicU64,
+    /// Completions over the SLO threshold.
+    slo_bad: AtomicU64,
 }
 
 impl PlanMetrics {
@@ -98,6 +106,38 @@ impl PlanMetrics {
             tl.record(t_ms, latency_ms);
         }
         self.completed.fetch_add(1, Ordering::Relaxed);
+        let bits = self.slo_threshold_bits.load(Ordering::Relaxed);
+        if bits != 0 {
+            if latency_ms <= f64::from_bits(bits) {
+                self.slo_good.fetch_add(1, Ordering::Relaxed);
+            } else {
+                self.slo_bad.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Arm cumulative SLO good/bad counting against a p99 target.
+    /// Non-positive targets disarm it.
+    pub fn set_slo_threshold(&self, p99_ms: f64) {
+        let bits = if p99_ms > 0.0 { p99_ms.to_bits() } else { 0 };
+        self.slo_threshold_bits.store(bits, Ordering::Relaxed);
+    }
+
+    /// The armed SLO threshold, if any.
+    pub fn slo_threshold(&self) -> Option<f64> {
+        match self.slo_threshold_bits.load(Ordering::Relaxed) {
+            0 => None,
+            bits => Some(f64::from_bits(bits)),
+        }
+    }
+
+    /// Cumulative (good, bad) completion counts against the armed SLO
+    /// threshold; both zero while disarmed.
+    pub fn slo_counts(&self) -> (u64, u64) {
+        (
+            self.slo_good.load(Ordering::Relaxed),
+            self.slo_bad.load(Ordering::Relaxed),
+        )
     }
 
     pub fn enable_timeline(&self, bucket_ms: f64, horizon_ms: f64) {
@@ -222,6 +262,23 @@ mod tests {
         m.reset_latency_window();
         assert!(m.attainment(50.0).is_nan());
         assert_eq!(m.completed(), 4); // counters survive the reset
+    }
+
+    #[test]
+    fn slo_counts_split_on_threshold() {
+        let m = PlanMetrics::default();
+        m.record(0.0, 10.0); // disarmed: not counted
+        assert_eq!(m.slo_counts(), (0, 0));
+        assert_eq!(m.slo_threshold(), None);
+        m.set_slo_threshold(50.0);
+        m.record(0.0, 10.0);
+        m.record(0.0, 50.0); // inclusive boundary is good
+        m.record(0.0, 80.0);
+        assert_eq!(m.slo_counts(), (2, 1));
+        assert_eq!(m.slo_threshold(), Some(50.0));
+        m.set_slo_threshold(0.0); // disarm
+        m.record(0.0, 500.0);
+        assert_eq!(m.slo_counts(), (2, 1));
     }
 
     #[test]

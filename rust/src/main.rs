@@ -4,10 +4,16 @@
 //! cloudflow info                       # artifacts + model zoo summary
 //! cloudflow serve <pipeline> [opts]    # run a pipeline under load
 //! cloudflow pipelines                  # list available pipelines
+//! cloudflow top [opts]                 # live SLO dashboard over a demo workload
 //! ```
 //!
 //! Pipelines: ensemble | cascade | video | nmt | recsys.
 //! Options: --requests N --clients N --replicas N --no-opt --competitive K
+//!
+//! `top` drives a driftable two-stage pipeline under open-loop load,
+//! injects a mid-run service-time drift, and renders burn rates,
+//! per-stage blame, and recent alerts each interval — ending with the
+//! `obs::explain` root-cause report.
 
 use std::collections::HashMap;
 
@@ -39,9 +45,11 @@ fn run() -> Result<()> {
             Ok(())
         }
         Some("serve") => serve(&args[1..]),
+        Some("top") => top(&args[1..]),
         _ => {
-            println!("usage: cloudflow <info|pipelines|serve> ...");
+            println!("usage: cloudflow <info|pipelines|serve|top> ...");
             println!("  cloudflow serve cascade --requests 200 --clients 10");
+            println!("  cloudflow top --duration-ms 14000 --qps 40 --drift 5");
             Ok(())
         }
     }
@@ -157,5 +165,126 @@ fn serve(args: &[String]) -> Result<()> {
     for (stage, n) in cluster.replica_counts(h) {
         println!("  {stage:<48} x{n}");
     }
+    Ok(())
+}
+
+/// `cloudflow top`: a live text dashboard over a self-contained demo —
+/// a driftable chain planned for its SLO, open-loop load, a mid-run
+/// service-time drift, and the burn-rate watcher reacting to it.
+fn top(args: &[String]) -> Result<()> {
+    use cloudflow::adaptive::TelemetryCollector;
+    use cloudflow::obs;
+    use cloudflow::planner::{plan_for_slo, PlannerCtx, Slo};
+    use cloudflow::workloads::{drifting_chain, open_loop, ArrivalTrace};
+
+    let flags = parse_flags(args);
+    let getf = |k: &str, d: f64| -> f64 { flags.get(k).and_then(|v| v.parse().ok()).unwrap_or(d) };
+    let duration_ms = getf("duration-ms", 14_000.0);
+    let qps = getf("qps", 40.0);
+    let drift = getf("drift", 5.0);
+    let drift_at_ms = getf("drift-at-ms", duration_ms * 0.4);
+    let interval_ms = getf("interval-ms", 500.0);
+    let p99_target_ms = getf("slo-ms", 100.0);
+
+    let sc = drifting_chain(2.0, 20.0)?;
+    let slo = Slo::new(p99_target_ms, qps);
+    let dp = plan_for_slo(&sc.spec.flow, &slo, &PlannerCtx::default().quick())?;
+    println!(
+        "plan {}: {} replicas, predicted p99 {:.1}ms (target {:.0}ms), ceiling {:.0} req/s",
+        dp.plan.name,
+        dp.n_replicas(),
+        dp.estimate.p99_ms,
+        slo.p99_ms,
+        dp.estimate.max_qps
+    );
+
+    let cluster = Cluster::new(None);
+    let h = cluster.register_planned(&dp)?;
+    let dep = cluster.deployment(h)?;
+    obs::trace::set_sample_rate(0.25);
+    let mut watcher = cluster.slo_watcher(h, slo.p99_ms)?;
+    let mut collector =
+        TelemetryCollector::new(&cluster, h, dp.profile.clone(), slo)?;
+    let clock = watcher.clock();
+
+    // Load + drift injection run beside the render loop.
+    let knob = sc.knob.clone();
+    let trace = ArrivalTrace::constant(qps, duration_ms);
+    let make_input = sc.spec.make_input.clone();
+    std::thread::scope(|s| -> Result<()> {
+        let load = s.spawn(|| open_loop(&dep, &trace, |i| make_input(i)));
+        let drift_clock = clock;
+        let knob2 = knob.clone();
+        s.spawn(move || {
+            while drift_clock.now_ms() < drift_at_ms {
+                cloudflow::simulation::clock::sleep_ms(10.0);
+            }
+            knob2.set(drift);
+        });
+
+        while clock.now_ms() < duration_ms {
+            cloudflow::simulation::clock::sleep_ms(interval_ms);
+            watcher.tick();
+            let now = clock.now_ms();
+            let m = cluster.metrics(h);
+            let (p50, p99) = m.report();
+            println!("\n== cloudflow top — {} @ {:.0}ms ==", dp.plan.name, now);
+            println!(
+                "p50={} p99={} completed={} offered={} shed={} drift_knob={:.1}",
+                fmt_ms(p50),
+                fmt_ms(p99),
+                m.completed(),
+                m.offered(),
+                m.shed_count(),
+                knob.get(),
+            );
+            print!("{}", watcher.status().render());
+            let blame = obs::analyze(&watcher.recorder().traces());
+            let mut entries = blame.entries.clone();
+            entries.sort_by(|a, b| b.total_ms.total_cmp(&a.total_ms));
+            if !entries.is_empty() {
+                println!("critical-path blame (recent traces):");
+                for e in entries.iter().take(5) {
+                    println!(
+                        "  {:<28} {:<12} {:>6.1}ms {:>5.1}%",
+                        e.label,
+                        e.kind.label(),
+                        e.total_ms,
+                        100.0 * e.share(blame.total_e2e_ms),
+                    );
+                }
+            }
+            let alerts = watcher.alerts();
+            if !alerts.is_empty() {
+                println!("recent alerts:");
+                for a in alerts.iter().rev().take(4) {
+                    println!(
+                        "  t={:.0}ms {} {}:{} burn_fast={:.1} burn_slow={:.1}",
+                        a.t_ms,
+                        if a.fired { "FIRE " } else { "clear" },
+                        a.objective.label(),
+                        a.severity.label(),
+                        a.burn_fast,
+                        a.burn_slow,
+                    );
+                }
+            }
+        }
+        load.join().expect("load thread panicked");
+        Ok(())
+    })?;
+
+    // Final root-cause report.
+    watcher.tick();
+    let snap = collector.sample();
+    let blame = obs::analyze(&watcher.recorder().traces());
+    let admit = cluster.admission(h).unwrap_or(1.0);
+    let report = obs::explain(&dp, &snap, Some(&blame), None, admit);
+    println!("\n{}", report.render());
+    println!(
+        "{} alert transitions, {} diagnostic bundles captured",
+        watcher.alerts().len(),
+        watcher.bundles().count(),
+    );
     Ok(())
 }

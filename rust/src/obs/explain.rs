@@ -1,0 +1,474 @@
+//! Automated regression explanation: join what was *observed* (live
+//! telemetry, critical-path blame, flight-recorder contents) with what
+//! the planner *promised* (the [`DeploymentPlan`]'s profile run through
+//! the M/M/c cost model at the observed arrival rate) and rank the
+//! stages by how much unplanned latency each one contributes.
+//!
+//! For every stage the report carries observed-vs-predicted **service**
+//! time (live sketch mean vs the profile's expectation at the observed
+//! batch) and observed-vs-predicted **queueing** (a Little's-law estimate
+//! from the live queue depth vs the Sakasegawa wait the cost model
+//! predicts at the observed load), plus the critical-path blame shift
+//! against a baseline window, the per-stage drift ratios, and the
+//! admission/shed attribution — everything needed to say "p99 regressed
+//! because stage X queueing grew Nx over plan" and hand that verdict to
+//! the adaptive controller as a re-plan trigger.
+
+use crate::adaptive::LiveSnapshot;
+use crate::obs::report::BlameReport;
+use crate::planner::{estimate, DeployConfig, DeploymentPlan};
+use crate::util::rng;
+
+/// Drift ratios at or above this are listed as drifted stages.
+pub const DRIFT_NOTE_RATIO: f64 = 1.3;
+
+/// Excess per-request milliseconds below which a stage reads as nominal.
+pub const NOMINAL_EXCESS_MS: f64 = 1.0;
+
+/// Monte-Carlo samples for the predicted estimate re-run.
+const ESTIMATE_SAMPLES: usize = 200;
+
+/// What dominates a stage's excess latency.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Cause {
+    /// Queue wait grew beyond the plan's Sakasegawa prediction.
+    Queueing,
+    /// The service time itself drifted from the profile.
+    ServiceDrift,
+    /// Within plan.
+    Nominal,
+}
+
+impl Cause {
+    pub fn label(self) -> &'static str {
+        match self {
+            Cause::Queueing => "queueing",
+            Cause::ServiceDrift => "service_drift",
+            Cause::Nominal => "nominal",
+        }
+    }
+}
+
+/// One stage's observed-vs-predicted diagnosis.
+#[derive(Debug, Clone)]
+pub struct StageFinding {
+    pub seg: usize,
+    pub idx: usize,
+    pub label: String,
+    pub replicas: usize,
+    pub batch_cap: usize,
+    /// Live mean per-invocation service time (window mean, virtual ms).
+    pub observed_service_ms: f64,
+    /// The plan profile's mean at the observed batch size.
+    pub predicted_service_ms: f64,
+    /// observed / predicted service (1.0 without evidence).
+    pub service_ratio: f64,
+    /// Little's-law wait estimate from the live queue depth.
+    pub observed_wait_ms: f64,
+    /// Sakasegawa M/M/c wait at the observed load under the plan profile.
+    pub predicted_wait_ms: f64,
+    /// observed / predicted wait (against a small floor).
+    pub wait_ratio: f64,
+    pub queue_depth: i64,
+    /// Critical-path share in the current blame window (0 if no traces).
+    pub blame_share: f64,
+    /// Critical-path share in the baseline window (0 if none given).
+    pub baseline_share: f64,
+    /// `blame_share - baseline_share`: where the critical path moved.
+    pub blame_shift: f64,
+    /// Per-request unplanned milliseconds this stage adds (ranking key).
+    pub excess_ms: f64,
+    pub cause: Cause,
+}
+
+/// The ranked root-cause report.
+#[derive(Debug, Clone)]
+pub struct ExplainReport {
+    pub plan: String,
+    pub t_ms: f64,
+    pub slo_p99_ms: f64,
+    pub observed_p99_ms: f64,
+    /// Cost-model p99 at the evaluated load under the plan profile.
+    pub predicted_p99_ms: f64,
+    pub observed_qps: f64,
+    /// Load the predictions were evaluated at (observed, clamped into
+    /// the plan's stable region — see `qps_clamped`).
+    pub eval_qps: f64,
+    /// True when the observed rate exceeded the plan's ceiling and the
+    /// prediction was evaluated just under it instead.
+    pub qps_clamped: bool,
+    pub attainment: f64,
+    pub admit_fraction: f64,
+    /// Lifetime shed fraction at explain time.
+    pub shed_fraction: f64,
+    /// Stages whose live service ratio exceeds [`DRIFT_NOTE_RATIO`].
+    pub drifted: Vec<(usize, usize, f64)>,
+    /// Findings ranked by `excess_ms`, worst first.
+    pub findings: Vec<StageFinding>,
+    /// One-line human conclusion.
+    pub verdict: String,
+}
+
+impl ExplainReport {
+    /// The top-ranked (most regressed) stage, if any is non-nominal.
+    pub fn top(&self) -> Option<&StageFinding> {
+        self.findings.first().filter(|f| f.cause != Cause::Nominal)
+    }
+
+    /// Fixed-width report table.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "explain {} @ {:.0}ms: observed p99 {:.1}ms vs predicted {:.1}ms (SLO {:.0}ms, attainment {:.2})\n",
+            self.plan, self.t_ms, self.observed_p99_ms, self.predicted_p99_ms,
+            self.slo_p99_ms, self.attainment
+        ));
+        out.push_str(&format!(
+            "load: observed {:.1} req/s (evaluated at {:.1}{}), admit {:.2}, shed fraction {:.3}\n",
+            self.observed_qps,
+            self.eval_qps,
+            if self.qps_clamped { ", over plan ceiling" } else { "" },
+            self.admit_fraction,
+            self.shed_fraction
+        ));
+        out.push_str(&format!(
+            "{:<18} {:<13} {:>6} {:>22} {:>22} {:>7} {:>7}\n",
+            "stage", "cause", "excess", "service obs/pred", "wait obs/pred", "queue", "shift"
+        ));
+        for f in &self.findings {
+            out.push_str(&format!(
+                "{:<18} {:<13} {:>4.0}ms {:>10.1}/{:<9.1}ms {:>10.1}/{:<9.1}ms {:>7} {:>+6.2}\n",
+                format!("{} ({},{})", f.label, f.seg, f.idx),
+                f.cause.label(),
+                f.excess_ms,
+                f.observed_service_ms,
+                f.predicted_service_ms,
+                f.observed_wait_ms,
+                f.predicted_wait_ms,
+                f.queue_depth,
+                f.blame_shift,
+            ));
+        }
+        out.push_str(&format!("verdict: {}\n", self.verdict));
+        out
+    }
+
+    /// Deterministic JSON encoding of the report.
+    pub fn to_json(&self) -> String {
+        let mut out = String::from("{");
+        out.push_str(&format!("\"plan\":{:?}", self.plan));
+        out.push_str(&format!(",\"t_ms\":{}", jf(self.t_ms)));
+        out.push_str(&format!(",\"slo_p99_ms\":{}", jf(self.slo_p99_ms)));
+        out.push_str(&format!(",\"observed_p99_ms\":{}", jf(self.observed_p99_ms)));
+        out.push_str(&format!(",\"predicted_p99_ms\":{}", jf(self.predicted_p99_ms)));
+        out.push_str(&format!(",\"observed_qps\":{}", jf(self.observed_qps)));
+        out.push_str(&format!(",\"eval_qps\":{}", jf(self.eval_qps)));
+        out.push_str(&format!(",\"qps_clamped\":{}", self.qps_clamped));
+        out.push_str(&format!(",\"attainment\":{}", jf(self.attainment)));
+        out.push_str(&format!(",\"admit_fraction\":{}", jf(self.admit_fraction)));
+        out.push_str(&format!(",\"shed_fraction\":{}", jf(self.shed_fraction)));
+        out.push_str(",\"drifted\":[");
+        for (i, (seg, idx, ratio)) in self.drifted.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!("[{seg},{idx},{}]", jf(*ratio)));
+        }
+        out.push_str("],\"findings\":[");
+        for (i, f) in self.findings.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!(
+                "{{\"seg\":{},\"idx\":{},\"label\":{:?},\"cause\":{:?},\"excess_ms\":{},\"observed_service_ms\":{},\"predicted_service_ms\":{},\"service_ratio\":{},\"observed_wait_ms\":{},\"predicted_wait_ms\":{},\"wait_ratio\":{},\"queue_depth\":{},\"blame_share\":{},\"baseline_share\":{},\"blame_shift\":{}}}",
+                f.seg, f.idx, f.label, f.cause.label(), jf(f.excess_ms),
+                jf(f.observed_service_ms), jf(f.predicted_service_ms), jf(f.service_ratio),
+                jf(f.observed_wait_ms), jf(f.predicted_wait_ms), jf(f.wait_ratio),
+                f.queue_depth, jf(f.blame_share), jf(f.baseline_share), jf(f.blame_shift),
+            ));
+        }
+        out.push_str(&format!("],\"verdict\":{:?}}}", self.verdict));
+        out
+    }
+}
+
+fn jf(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v:.3}")
+    } else {
+        "null".to_string()
+    }
+}
+
+/// Critical-path share of `(seg, idx)` in a blame window (all span kinds
+/// charged to the stage).
+fn stage_share(blame: Option<&BlameReport>, seg: usize, idx: usize) -> f64 {
+    let Some(b) = blame else { return 0.0 };
+    b.entries
+        .iter()
+        .filter(|e| e.stage == Some((seg, idx)))
+        .map(|e| e.share(b.total_e2e_ms))
+        .sum()
+}
+
+/// Build the ranked root-cause report for one deployment.
+///
+/// * `dp` — the deployed plan (profile + per-stage replicas/batch caps).
+/// * `snap` — a fresh [`LiveSnapshot`] of the regressed window.
+/// * `blame` — critical-path blame over the regressed window's traces
+///   (e.g. from the flight recorder), if any were sampled.
+/// * `baseline` — blame over a healthy baseline window, for shift
+///   attribution.
+/// * `admit_fraction` — current admission fraction (1.0 = no shedding).
+pub fn explain(
+    dp: &DeploymentPlan,
+    snap: &LiveSnapshot,
+    blame: Option<&BlameReport>,
+    baseline: Option<&BlameReport>,
+    admit_fraction: f64,
+) -> ExplainReport {
+    // Reconstruct the deployed configuration and re-run the cost model at
+    // the observed load (clamped just under the plan's ceiling: Sakasegawa
+    // diverges at saturation, and "what the plan promised" is only defined
+    // inside its stable region — `qps_clamped` records the overflow).
+    let mut cfg = DeployConfig::uniform(&dp.plan, 1, 1);
+    for sp in &dp.stages {
+        let c = cfg.get_mut(sp.seg, sp.idx);
+        c.replicas = sp.replicas;
+        c.batch_cap = sp.batch_cap;
+    }
+    let ceiling = dp.estimate.max_qps;
+    let observed_qps = snap.offered_qps.max(0.0);
+    let qps_clamped = observed_qps > 0.95 * ceiling;
+    let eval_qps = if qps_clamped { (0.95 * ceiling).max(1e-3) } else { observed_qps.max(1e-3) };
+    let predicted = estimate(
+        &dp.plan,
+        &dp.profile,
+        &cfg,
+        eval_qps,
+        ESTIMATE_SAMPLES,
+        rng::base_seed(),
+    );
+
+    let shed_fraction = if snap.shed + snap.completed > 0 {
+        snap.shed as f64 / (snap.shed + snap.completed) as f64
+    } else {
+        0.0
+    };
+
+    let mut drifted: Vec<(usize, usize, f64)> = snap
+        .stages
+        .iter()
+        .filter(|o| o.ratio >= DRIFT_NOTE_RATIO && o.window > 0)
+        .map(|o| (o.seg, o.idx, o.ratio))
+        .collect();
+    drifted.sort_by(|a, b| b.2.total_cmp(&a.2));
+
+    let mut findings = Vec::new();
+    for obs in &snap.stages {
+        let stage_plan = dp.stage_plan(obs.seg, obs.idx);
+        let (replicas, batch_cap) =
+            stage_plan.map(|s| (s.replicas, s.batch_cap)).unwrap_or((1, 1));
+        let prof = dp.profile.get(obs.seg, obs.idx);
+        let expect = prof.expectation(obs.mean_batch.round().max(1.0) as usize);
+        let observed_service = if obs.observed_ms.is_finite() && obs.window > 0 {
+            obs.observed_ms
+        } else {
+            expect.mean_ms
+        };
+        let predicted_service = expect.mean_ms;
+        let service_ratio = if predicted_service > 1e-9 && obs.window > 0 {
+            observed_service / predicted_service
+        } else {
+            1.0
+        };
+        // Little's law: tasks ahead of a new arrival each occupy one
+        // batch slot across the stage's replicas.
+        let observed_wait = (obs.queue.max(0) as f64 * observed_service
+            / (replicas.max(1) as f64 * obs.mean_batch.max(1.0)))
+        .max(0.0);
+        let predicted_wait = predicted
+            .wait_ms
+            .get(obs.seg)
+            .and_then(|s| s.get(obs.idx))
+            .copied()
+            .unwrap_or(0.0);
+        let wait_ratio = observed_wait / predicted_wait.max(0.5);
+        let blame_share = stage_share(blame, obs.seg, obs.idx);
+        let baseline_share = stage_share(baseline, obs.seg, obs.idx);
+        let service_excess = (observed_service - predicted_service).max(0.0);
+        let wait_excess = (observed_wait - predicted_wait).max(0.0);
+        let excess = service_excess + wait_excess;
+        let cause = if excess < NOMINAL_EXCESS_MS {
+            Cause::Nominal
+        } else if wait_excess >= service_excess {
+            Cause::Queueing
+        } else {
+            Cause::ServiceDrift
+        };
+        findings.push(StageFinding {
+            seg: obs.seg,
+            idx: obs.idx,
+            label: obs.label.clone(),
+            replicas,
+            batch_cap,
+            observed_service_ms: observed_service,
+            predicted_service_ms: predicted_service,
+            service_ratio,
+            observed_wait_ms: observed_wait,
+            predicted_wait_ms: predicted_wait,
+            wait_ratio,
+            queue_depth: obs.queue,
+            blame_share,
+            baseline_share,
+            blame_shift: blame_share - baseline_share,
+            excess_ms: excess,
+            cause,
+        });
+    }
+    findings.sort_by(|a, b| {
+        b.excess_ms
+            .total_cmp(&a.excess_ms)
+            .then_with(|| (a.seg, a.idx).cmp(&(b.seg, b.idx)))
+    });
+
+    let regressed = snap.p99_ms.is_finite() && snap.p99_ms > dp.slo.p99_ms;
+    let verdict = match findings.first().filter(|f| f.cause != Cause::Nominal) {
+        Some(top) if regressed => {
+            let (what, ratio) = match top.cause {
+                Cause::Queueing => ("queueing", top.wait_ratio),
+                _ => ("service time", top.service_ratio),
+            };
+            format!(
+                "p99 regressed to {:.0}ms (target {:.0}ms) because stage {} ({},{}) {what} grew {:.1}x over plan: wait {:.1}ms vs {:.1}ms predicted, service {:.1}ms vs {:.1}ms profiled",
+                snap.p99_ms, dp.slo.p99_ms, top.label, top.seg, top.idx, ratio,
+                top.observed_wait_ms, top.predicted_wait_ms,
+                top.observed_service_ms, top.predicted_service_ms,
+            )
+        }
+        Some(top) => format!(
+            "p99 {:.0}ms within target {:.0}ms; largest off-plan contributor is stage {} ({},{}) at +{:.1}ms",
+            snap.p99_ms, dp.slo.p99_ms, top.label, top.seg, top.idx, top.excess_ms
+        ),
+        None => format!(
+            "p99 {:.0}ms vs target {:.0}ms: every stage within plan",
+            snap.p99_ms, dp.slo.p99_ms
+        ),
+    };
+
+    ExplainReport {
+        plan: dp.plan.name.clone(),
+        t_ms: snap.t_ms,
+        slo_p99_ms: dp.slo.p99_ms,
+        observed_p99_ms: snap.p99_ms,
+        predicted_p99_ms: predicted.p99_ms,
+        observed_qps,
+        eval_qps,
+        qps_clamped,
+        attainment: snap.attainment,
+        admit_fraction,
+        shed_fraction,
+        drifted,
+        findings,
+        verdict,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::adaptive::StageObs;
+    use crate::dataflow::operator::{Func, SleepDist};
+    use crate::dataflow::table::{DType, Schema};
+    use crate::dataflow::v2::Flow;
+    use crate::planner::{plan_for_slo, PlannerCtx, Slo};
+
+    fn two_stage_dp() -> DeploymentPlan {
+        let flow = Flow::source("exp_t", Schema::new(vec![("x", DType::F64)]))
+            .map(Func::sleep("front", SleepDist::ConstMs(2.0)))
+            .unwrap()
+            .map(Func::sleep("heavy", SleepDist::ConstMs(20.0)))
+            .unwrap()
+            .into_dataflow()
+            .unwrap();
+        let slo = Slo::new(250.0, 40.0);
+        plan_for_slo(&flow, &slo, &PlannerCtx::default().quick()).unwrap()
+    }
+
+    fn obs(
+        dp: &DeploymentPlan,
+        label: &str,
+        ratio: f64,
+        queue: i64,
+        qps: f64,
+    ) -> StageObs {
+        let sp = dp
+            .profile
+            .iter()
+            .find(|s| s.label.contains(label))
+            .expect("stage in profile");
+        StageObs {
+            seg: sp.seg,
+            idx: sp.idx,
+            label: sp.label.clone(),
+            observed_ms: sp.mean_ms(1) * ratio,
+            profiled_ms: sp.mean_ms(1),
+            ratio,
+            mean_batch: 1.0,
+            queue,
+            arrival_qps: qps,
+            window: 64,
+        }
+    }
+
+    #[test]
+    fn drifted_queueing_stage_ranks_top() {
+        let dp = two_stage_dp();
+        let snap = LiveSnapshot {
+            t_ms: 5_000.0,
+            stages: vec![obs(&dp, "front", 1.0, 0, 40.0), obs(&dp, "heavy", 3.0, 120, 40.0)],
+            offered_qps: 40.0,
+            attainment: 0.4,
+            p99_ms: 900.0,
+            latency_window: 256,
+            completed: 400,
+            shed: 0,
+        };
+        let report = explain(&dp, &snap, None, None, 1.0);
+        let top = report.top().expect("a non-nominal top cause");
+        assert!(top.label.contains("heavy"), "top={top:?}");
+        assert!(top.observed_wait_ms > top.predicted_wait_ms, "{top:?}");
+        assert!(top.excess_ms > 0.0);
+        assert_eq!(top.cause, Cause::Queueing);
+        assert!(report.verdict.contains("queueing"), "{}", report.verdict);
+        assert!(
+            report.drifted.iter().any(|(s, i, r)| (*s, *i) == (top.seg, top.idx) && *r > 2.0),
+            "{:?}",
+            report.drifted
+        );
+        // JSON is parseable and carries the findings.
+        let j = crate::util::json::Json::parse(&report.to_json()).unwrap();
+        assert_eq!(
+            j.get("findings").and_then(|v| v.as_arr()).map(|a| a.len()),
+            Some(report.findings.len())
+        );
+    }
+
+    #[test]
+    fn healthy_snapshot_reads_nominal() {
+        let dp = two_stage_dp();
+        let snap = LiveSnapshot {
+            t_ms: 1_000.0,
+            stages: vec![obs(&dp, "front", 1.0, 0, 40.0), obs(&dp, "heavy", 1.0, 1, 40.0)],
+            offered_qps: 40.0,
+            attainment: 1.0,
+            p99_ms: 30.0,
+            latency_window: 256,
+            completed: 400,
+            shed: 0,
+        };
+        let report = explain(&dp, &snap, None, None, 1.0);
+        assert!(report.top().is_none(), "{:?}", report.findings);
+        assert!(report.verdict.contains("within"), "{}", report.verdict);
+    }
+}

@@ -31,6 +31,18 @@ pub enum EventKind {
     OverloadShed { admit_fraction: f64, ceiling_qps: f64 },
     /// The overload guard restored full admission.
     AdmissionRestore,
+    /// A burn-rate SLO alert fired (`obs::slo`).
+    AlertFire {
+        objective: String,
+        severity: String,
+        burn_fast: f64,
+        burn_slow: f64,
+    },
+    /// A previously firing SLO alert recovered.
+    AlertClear { objective: String, severity: String },
+    /// An external re-plan trigger (e.g. an explain verdict handed to the
+    /// adaptive controller by a critical alert).
+    ReplanTrigger { reason: String },
 }
 
 impl EventKind {
@@ -43,6 +55,9 @@ impl EventKind {
             EventKind::AdmissionChange { .. } => "admission_change",
             EventKind::OverloadShed { .. } => "overload_shed",
             EventKind::AdmissionRestore => "admission_restore",
+            EventKind::AlertFire { .. } => "alert_fire",
+            EventKind::AlertClear { .. } => "alert_clear",
+            EventKind::ReplanTrigger { .. } => "replan_trigger",
         }
     }
 }
@@ -91,6 +106,15 @@ impl Event {
                 jf(*ceiling_qps)
             ),
             EventKind::AdmissionRestore => String::new(),
+            EventKind::AlertFire { objective, severity, burn_fast, burn_slow } => format!(
+                ",\"objective\":{objective:?},\"severity\":{severity:?},\"burn_fast\":{},\"burn_slow\":{}",
+                jf(*burn_fast),
+                jf(*burn_slow)
+            ),
+            EventKind::AlertClear { objective, severity } => {
+                format!(",\"objective\":{objective:?},\"severity\":{severity:?}")
+            }
+            EventKind::ReplanTrigger { reason } => format!(",\"reason\":{reason:?}"),
         };
         format!("{{{head}{tail}}}")
     }

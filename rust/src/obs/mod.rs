@@ -17,15 +17,38 @@
 //! [`report`] turns drained traces into critical-path attribution — which
 //! stage, queue, or codec hop a request's latency went to — and exposes
 //! the observed per-stage selectivity as planner `Profile` input.
+//!
+//! On top of those, three consumers turn the data into decisions:
+//!
+//! * [`slo`] — multi-window burn-rate SLO monitoring over the p99 target
+//!   and shed budget, emitting typed [`slo::Alert`]s into the journal.
+//!   Windows configurable via `CLOUDFLOW_SLO_WINDOWS`.
+//! * [`recorder`] — an always-on bounded flight recorder (sampled traces
+//!   with histogram-bucket exemplar links, rolling metric snapshots,
+//!   journal tail) that freezes a deterministic JSON diagnostic
+//!   [`recorder::Bundle`] when an alert fires.
+//! * [`explain`] — automated root-cause reports joining observations
+//!   with planner expectations: per-stage observed-vs-predicted service
+//!   and queueing, blame shifts vs a baseline window, drift state, and
+//!   admission/shed attribution, ranked worst first.
 
+pub mod explain;
 pub mod journal;
 pub mod metrics;
+pub mod recorder;
 pub mod report;
+pub mod slo;
 pub mod trace;
 
+pub use explain::{explain, Cause, ExplainReport, StageFinding};
 pub use journal::{Event, EventKind};
 pub use metrics::{Registry, Sample, Value};
+pub use recorder::{Bundle, FlightRecorder, MetricSnap};
 pub use report::{analyze, critical_path, BlameReport, PathEntry};
+pub use slo::{
+    Alert, Objective, Severity, SloCounts, SloMonitor, SloPolicy, SloStatus, SloWatchHandle,
+    SloWatcher, WindowPair,
+};
 pub use trace::{
     drain_finished, drain_finished_for, sample_rate, set_sample_rate, Span, SpanKind, Trace,
     TraceCtx,

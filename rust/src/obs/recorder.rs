@@ -1,0 +1,401 @@
+//! Always-on bounded flight recorder.
+//!
+//! A [`FlightRecorder`] keeps the recent past of one deployment in fixed
+//! memory: the last sampled traces (ingested from the trace sink),
+//! rolling latency/counter snapshots, and — at freeze time — the journal
+//! tail for its plan. When an SLO alert fires,
+//! [`freeze`](FlightRecorder::freeze) serializes all of it into a
+//! deterministic JSON [`Bundle`]: traces sorted by request id, spans
+//! sorted by interval, every float printed at fixed precision, and an
+//! *exemplar index* linking each latency-histogram bucket to the trace
+//! ids that landed in it — the jump from "p99 moved" to "look at this
+//! request". Identical recorder contents always produce byte-identical
+//! bundles (the determinism test relies on this), so bundles can be
+//! diffed across runs with the same seed.
+//!
+//! Capacity comes from `CLOUDFLOW_RECORDER_CAP` (traces retained,
+//! default [`DEFAULT_TRACE_CAP`]).
+
+use std::collections::VecDeque;
+use std::path::Path;
+use std::sync::Arc;
+
+use crate::cloudburst::metrics::{BoundedLog, PlanMetrics};
+use crate::obs::journal;
+use crate::obs::trace::{self, Span, Trace};
+
+/// Traces retained by default (override with `CLOUDFLOW_RECORDER_CAP`).
+pub const DEFAULT_TRACE_CAP: usize = 256;
+
+/// Rolling metric snapshots retained.
+pub const SNAPSHOT_CAP: usize = 1024;
+
+/// Journal-tail events included in a frozen bundle.
+pub const JOURNAL_TAIL: usize = 64;
+
+/// Exemplar trace ids kept per latency bucket.
+pub const EXEMPLARS_PER_BUCKET: usize = 3;
+
+/// Latency-histogram bucket upper bounds (virtual ms); a final +inf
+/// bucket catches the rest.
+pub const EXEMPLAR_BOUNDS_MS: &[f64] =
+    &[1.0, 2.0, 5.0, 10.0, 25.0, 50.0, 100.0, 250.0, 500.0, 1000.0, 2500.0, 5000.0, 10000.0];
+
+/// One rolling snapshot of a deployment's metrics.
+#[derive(Debug, Clone, Copy)]
+pub struct MetricSnap {
+    pub t_ms: f64,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    /// Latency samples in the window at snapshot time.
+    pub window: usize,
+    pub completed: u64,
+    pub offered: u64,
+    pub shed: u64,
+}
+
+/// A frozen diagnostic bundle (deterministic JSON).
+#[derive(Debug, Clone)]
+pub struct Bundle {
+    pub plan: String,
+    /// Virtual time of the freeze.
+    pub t_ms: f64,
+    /// Why it was frozen (alert description).
+    pub reason: String,
+    pub json: String,
+}
+
+impl Bundle {
+    /// Write the bundle JSON to `path`.
+    pub fn write(&self, path: impl AsRef<Path>) -> std::io::Result<()> {
+        std::fs::write(path, &self.json)
+    }
+}
+
+/// Bounded rings of recent traces and metric snapshots for one plan.
+pub struct FlightRecorder {
+    plan: String,
+    cap: usize,
+    traces: VecDeque<Arc<Trace>>,
+    snaps: BoundedLog<MetricSnap>,
+}
+
+impl FlightRecorder {
+    /// Recorder for `plan` with capacity from `CLOUDFLOW_RECORDER_CAP`.
+    pub fn new(plan: &str) -> FlightRecorder {
+        let cap = std::env::var("CLOUDFLOW_RECORDER_CAP")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+            .filter(|c| *c > 0)
+            .unwrap_or(DEFAULT_TRACE_CAP);
+        FlightRecorder::with_capacity(plan, cap)
+    }
+
+    pub fn with_capacity(plan: &str, cap: usize) -> FlightRecorder {
+        FlightRecorder {
+            plan: plan.to_string(),
+            cap: cap.max(1),
+            traces: VecDeque::new(),
+            snaps: BoundedLog::new(SNAPSHOT_CAP),
+        }
+    }
+
+    pub fn plan(&self) -> &str {
+        &self.plan
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Pull this plan's finished traces out of the global sink into the
+    /// ring; returns how many were ingested.
+    pub fn ingest(&mut self) -> usize {
+        let drained = trace::drain_finished_for(&self.plan);
+        let n = drained.len();
+        for tr in drained {
+            self.add_trace(tr);
+        }
+        n
+    }
+
+    /// Append one finished trace (oldest evicted past capacity).
+    pub fn add_trace(&mut self, tr: Arc<Trace>) {
+        if self.traces.len() == self.cap {
+            self.traces.pop_front();
+        }
+        self.traces.push_back(tr);
+    }
+
+    /// Snapshot `metrics` at `t_ms` into the rolling ring.
+    pub fn note(&mut self, metrics: &PlanMetrics, t_ms: f64) {
+        let sketch = metrics.sketch();
+        let (p50_ms, p99_ms) = sketch.report();
+        self.push_snapshot(MetricSnap {
+            t_ms,
+            p50_ms,
+            p99_ms,
+            window: sketch.window_len(),
+            completed: metrics.completed(),
+            offered: metrics.offered(),
+            shed: metrics.shed_count(),
+        });
+    }
+
+    pub fn push_snapshot(&mut self, snap: MetricSnap) {
+        self.snaps.push(snap);
+    }
+
+    /// Retained traces, oldest first (shared handles, cheap).
+    pub fn traces(&self) -> Vec<Arc<Trace>> {
+        self.traces.iter().cloned().collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.traces.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.traces.is_empty()
+    }
+
+    pub fn snapshots(&self) -> impl Iterator<Item = &MetricSnap> {
+        self.snaps.iter()
+    }
+
+    /// Freeze the recorder contents into a deterministic JSON bundle.
+    pub fn freeze(&self, t_ms: f64, reason: &str) -> Bundle {
+        let mut ordered: Vec<&Arc<Trace>> = self.traces.iter().collect();
+        ordered.sort_by_key(|t| (t.req_id, t.trace_id));
+
+        let mut out = String::with_capacity(4096);
+        out.push('{');
+        out.push_str(&format!("\"plan\":{:?}", self.plan));
+        out.push_str(&format!(",\"frozen_at_ms\":{}", jf(t_ms)));
+        out.push_str(&format!(",\"reason\":{reason:?}"));
+
+        // Exemplar index: latency bucket -> first few trace ids in it.
+        out.push_str(",\"exemplars\":[");
+        let mut first = true;
+        for bucket in 0..=EXEMPLAR_BOUNDS_MS.len() {
+            let le = EXEMPLAR_BOUNDS_MS.get(bucket).copied();
+            let lo = if bucket == 0 { -1.0 } else { EXEMPLAR_BOUNDS_MS[bucket - 1] };
+            let in_bucket = |ms: f64| ms > lo && le.map(|u| ms <= u).unwrap_or(true);
+            let mut ids = Vec::new();
+            let mut count = 0u64;
+            for tr in &ordered {
+                let Some(e2e) = tr.e2e_ms() else { continue };
+                if in_bucket(e2e) {
+                    count += 1;
+                    if ids.len() < EXEMPLARS_PER_BUCKET {
+                        ids.push(tr.trace_id);
+                    }
+                }
+            }
+            if count == 0 {
+                continue;
+            }
+            if !first {
+                out.push(',');
+            }
+            first = false;
+            let le_s = le.map(jf).unwrap_or_else(|| "null".into());
+            let ids_s = ids
+                .iter()
+                .map(|id| format!("\"{id:#018x}\""))
+                .collect::<Vec<_>>()
+                .join(",");
+            out.push_str(&format!(
+                "{{\"le_ms\":{le_s},\"count\":{count},\"trace_ids\":[{ids_s}]}}"
+            ));
+        }
+        out.push(']');
+
+        // Rolling metric snapshots, oldest first.
+        out.push_str(",\"metrics\":[");
+        let mut first = true;
+        for s in self.snaps.iter() {
+            if !first {
+                out.push(',');
+            }
+            first = false;
+            out.push_str(&format!(
+                "{{\"t_ms\":{},\"p50_ms\":{},\"p99_ms\":{},\"window\":{},\"completed\":{},\"offered\":{},\"shed\":{}}}",
+                jf(s.t_ms), jf(s.p50_ms), jf(s.p99_ms), s.window, s.completed, s.offered, s.shed
+            ));
+        }
+        out.push(']');
+
+        // Journal tail for this plan.
+        out.push_str(",\"journal\":[");
+        let events = journal::events_for(&self.plan);
+        let tail = events.len().saturating_sub(JOURNAL_TAIL);
+        for (i, e) in events[tail..].iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&e.to_json());
+        }
+        out.push(']');
+
+        // Full retained traces, spans sorted by interval.
+        out.push_str(",\"traces\":[");
+        for (i, tr) in ordered.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&trace_json(tr));
+        }
+        out.push_str("]}");
+
+        Bundle { plan: self.plan.clone(), t_ms, reason: reason.to_string(), json: out }
+    }
+}
+
+fn jf(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v:.3}")
+    } else {
+        "null".to_string()
+    }
+}
+
+fn span_json(s: &Span) -> String {
+    let (seg, idx) = match s.stage {
+        Some((a, b)) => (a.to_string(), b.to_string()),
+        None => ("null".into(), "null".into()),
+    };
+    let parent = match s.parent {
+        Some((a, b)) => format!("[{a},{b}]"),
+        None => "null".into(),
+    };
+    format!(
+        "{{\"kind\":{:?},\"seg\":{seg},\"idx\":{idx},\"label\":{:?},\"start_ms\":{},\"end_ms\":{},\"rows_in\":{},\"rows_out\":{},\"parent\":{parent}}}",
+        s.kind.label(),
+        s.label,
+        jf(s.start_ms),
+        jf(s.end_ms),
+        s.rows_in,
+        s.rows_out,
+    )
+}
+
+fn trace_json(tr: &Trace) -> String {
+    let mut spans = tr.spans();
+    spans.sort_by(|a, b| {
+        (a.start_ms, a.end_ms, a.kind.label(), a.label.as_str()).partial_cmp(&(
+            b.start_ms,
+            b.end_ms,
+            b.kind.label(),
+            b.label.as_str(),
+        ))
+        .unwrap_or(std::cmp::Ordering::Equal)
+    });
+    let spans_s = spans.iter().map(span_json).collect::<Vec<_>>().join(",");
+    format!(
+        "{{\"trace_id\":\"{:#018x}\",\"req_id\":{},\"submitted_ms\":{},\"e2e_ms\":{},\"spans\":[{spans_s}]}}",
+        tr.trace_id,
+        tr.req_id,
+        jf(tr.submitted_ms),
+        tr.e2e_ms().map(jf).unwrap_or_else(|| "null".into()),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::trace::{test_trace, SpanKind};
+
+    fn sample_trace(plan: &str, req_id: u64, service_ms: f64) -> Arc<Trace> {
+        let tr = test_trace(plan, req_id);
+        tr.record(Span {
+            kind: SpanKind::Queue,
+            stage: Some((0, 0)),
+            label: "s".into(),
+            start_ms: 0.0,
+            end_ms: 1.0,
+            rows_in: 0,
+            rows_out: 0,
+            parent: None,
+        });
+        tr.record(Span {
+            kind: SpanKind::Service,
+            stage: Some((0, 0)),
+            label: "s".into(),
+            start_ms: 1.0,
+            end_ms: 1.0 + service_ms,
+            rows_in: 1,
+            rows_out: 1,
+            parent: None,
+        });
+        tr.finish(1.0 + service_ms);
+        tr
+    }
+
+    fn build(plan: &str) -> FlightRecorder {
+        let mut rec = FlightRecorder::with_capacity(plan, 16);
+        for (i, svc) in [3.0, 40.0, 450.0, 7.0].into_iter().enumerate() {
+            rec.add_trace(sample_trace(plan, i as u64, svc));
+        }
+        rec.push_snapshot(MetricSnap {
+            t_ms: 100.0,
+            p50_ms: 8.0,
+            p99_ms: 450.0,
+            window: 4,
+            completed: 4,
+            offered: 5,
+            shed: 1,
+        });
+        rec
+    }
+
+    #[test]
+    fn same_contents_freeze_byte_identical() {
+        let a = build("rec_t_det").freeze(123.456, "test");
+        let b = build("rec_t_det").freeze(123.456, "test");
+        assert_eq!(a.json, b.json);
+        assert!(!a.json.is_empty());
+    }
+
+    #[test]
+    fn bundle_parses_and_links_exemplars() {
+        let bundle = build("rec_t_parse").freeze(99.0, "latency_p99:critical");
+        let j = crate::util::json::Json::parse(&bundle.json).expect("valid JSON");
+        assert_eq!(j.get("plan").and_then(|v| v.as_str()), Some("rec_t_parse"));
+        assert_eq!(j.get("reason").and_then(|v| v.as_str()), Some("latency_p99:critical"));
+        let traces = j.get("traces").and_then(|v| v.as_arr()).unwrap();
+        assert_eq!(traces.len(), 4);
+        // Exemplars cover every e2e bucket and reference real trace ids.
+        let ex = j.get("exemplars").and_then(|v| v.as_arr()).unwrap();
+        assert!(!ex.is_empty());
+        let total: f64 = ex
+            .iter()
+            .map(|b| b.get("count").and_then(|v| v.as_f64()).unwrap_or(0.0))
+            .sum();
+        assert!((total - 4.0).abs() < 1e-9, "bucket counts sum to trace count");
+        let ids: Vec<String> = traces
+            .iter()
+            .filter_map(|t| t.get("trace_id").and_then(|v| v.as_str()).map(str::to_string))
+            .collect();
+        for b in ex {
+            for id in b.get("trace_ids").and_then(|v| v.as_arr()).unwrap() {
+                let id = id.as_str().unwrap();
+                assert!(ids.iter().any(|t| t == id), "exemplar {id} not among traces");
+            }
+        }
+        // Snapshot ring made it in.
+        let snaps = j.get("metrics").and_then(|v| v.as_arr()).unwrap();
+        assert_eq!(snaps.len(), 1);
+        assert_eq!(snaps[0].get("shed").and_then(|v| v.as_f64()), Some(1.0));
+    }
+
+    #[test]
+    fn capacity_evicts_oldest() {
+        let mut rec = FlightRecorder::with_capacity("rec_t_cap", 2);
+        for i in 0..5 {
+            rec.add_trace(sample_trace("rec_t_cap", i, 1.0));
+        }
+        assert_eq!(rec.len(), 2);
+        assert_eq!(rec.traces()[0].req_id, 3);
+    }
+}

@@ -1,0 +1,838 @@
+//! Multi-window burn-rate SLO monitoring.
+//!
+//! A deployment's SLO defines two error budgets: the fraction of
+//! completed requests allowed over the p99 latency target, and the
+//! fraction of offered requests allowed to be shed. The *burn rate* over
+//! a time window is the observed error fraction divided by the budget —
+//! 1.0 means the budget is being consumed exactly as provisioned, 10.0
+//! means ten times too fast. Following the SRE multi-window discipline,
+//! an alert fires only when **both** a fast and a slow window burn above
+//! the pair's threshold: the slow window supplies sustained evidence (a
+//! single-window spike cannot fire), the fast window supplies fresh
+//! evidence (a long-recovered incident cannot keep firing) — and the
+//! alert clears as soon as the fast window recovers.
+//!
+//! [`SloMonitor`] is the pure state machine: feed it cumulative
+//! [`SloCounts`] stamped with virtual time and it returns fire/clear
+//! [`Alert`] transitions (also recorded in [`journal`](crate::obs::journal)
+//! and exported through the metrics registry). [`SloWatcher`] binds a
+//! monitor plus a [`FlightRecorder`](crate::obs::recorder::FlightRecorder)
+//! to one deployment's [`PlanMetrics`], samples them on the virtual
+//! clock, and freezes a diagnostic bundle whenever an alert fires.
+//!
+//! Window pairs come from `CLOUDFLOW_SLO_WINDOWS`
+//! (`severity:fast_ms:slow_ms:burn_threshold`, comma-separated) or
+//! [`SloPolicy::default`].
+
+use std::collections::VecDeque;
+use std::sync::Arc;
+
+use crate::cloudburst::metrics::PlanMetrics;
+use crate::obs::journal::{self, EventKind};
+use crate::obs::metrics as reg;
+use crate::obs::recorder::{Bundle, FlightRecorder};
+use crate::simulation::clock::Clock;
+use crate::util::shutdown::ShutdownGate;
+
+/// Rate buckets retained by a monitor (newest-first eviction past the
+/// slowest window happens first; this is the hard cap behind it).
+pub const BUCKET_CAP: usize = 8192;
+
+/// Diagnostic bundles a watcher retains (oldest evicted).
+pub const BUNDLE_CAP: usize = 8;
+
+/// Alert severity, ordered: `Critical > Warning`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Severity {
+    Warning,
+    Critical,
+}
+
+impl Severity {
+    /// Stable lowercase label for journal/JSON/labels.
+    pub fn label(self) -> &'static str {
+        match self {
+            Severity::Warning => "warning",
+            Severity::Critical => "critical",
+        }
+    }
+}
+
+/// Which error budget a window pair watches.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Objective {
+    /// Fraction of completed requests over the p99 latency target.
+    Latency,
+    /// Fraction of offered requests shed by admission control.
+    Shed,
+}
+
+impl Objective {
+    /// Stable lowercase label for journal/JSON/labels.
+    pub fn label(self) -> &'static str {
+        match self {
+            Objective::Latency => "latency_p99",
+            Objective::Shed => "shed_budget",
+        }
+    }
+}
+
+/// One fast/slow window pair with its burn-rate threshold.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct WindowPair {
+    pub severity: Severity,
+    /// Fast (short) window, virtual ms.
+    pub fast_ms: f64,
+    /// Slow (long) window, virtual ms.
+    pub slow_ms: f64,
+    /// Both windows must burn at or above this rate to fire.
+    pub burn_threshold: f64,
+}
+
+/// The monitor's configuration: error budgets plus window pairs.
+#[derive(Debug, Clone)]
+pub struct SloPolicy {
+    /// Allowed fraction of completed requests over the p99 target.
+    pub latency_budget: f64,
+    /// Allowed fraction of offered requests shed.
+    pub shed_budget: f64,
+    pub pairs: Vec<WindowPair>,
+    /// Minimum events inside the fast window before a pair may fire
+    /// (hair-trigger guard for near-empty windows).
+    pub min_events: u64,
+}
+
+impl Default for SloPolicy {
+    fn default() -> Self {
+        SloPolicy {
+            latency_budget: 0.05,
+            shed_budget: 0.05,
+            pairs: vec![
+                WindowPair {
+                    severity: Severity::Critical,
+                    fast_ms: 1_500.0,
+                    slow_ms: 5_000.0,
+                    burn_threshold: 6.0,
+                },
+                WindowPair {
+                    severity: Severity::Warning,
+                    fast_ms: 3_000.0,
+                    slow_ms: 12_000.0,
+                    burn_threshold: 2.0,
+                },
+            ],
+            min_events: 8,
+        }
+    }
+}
+
+impl SloPolicy {
+    /// Default policy with window pairs overridden by
+    /// `CLOUDFLOW_SLO_WINDOWS` when set and parseable.
+    pub fn from_env() -> SloPolicy {
+        let mut p = SloPolicy::default();
+        if let Ok(s) = std::env::var("CLOUDFLOW_SLO_WINDOWS") {
+            if let Some(pairs) = parse_windows(&s) {
+                p.pairs = pairs;
+            } else {
+                log::warn!("CLOUDFLOW_SLO_WINDOWS unparseable: {s:?} (using defaults)");
+            }
+        }
+        p
+    }
+
+    /// The slowest window any pair watches (bucket retention horizon).
+    pub fn max_window_ms(&self) -> f64 {
+        self.pairs.iter().map(|p| p.slow_ms.max(p.fast_ms)).fold(0.0, f64::max)
+    }
+}
+
+/// Parse `severity:fast_ms:slow_ms:burn_threshold[,...]` — e.g.
+/// `critical:1500:5000:6,warning:3000:12000:2`. Returns `None` on any
+/// malformed entry (callers fall back to defaults).
+pub fn parse_windows(s: &str) -> Option<Vec<WindowPair>> {
+    let mut out = Vec::new();
+    for part in s.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        let f: Vec<&str> = part.split(':').collect();
+        if f.len() != 4 {
+            return None;
+        }
+        let severity = match f[0].trim() {
+            "critical" | "crit" => Severity::Critical,
+            "warning" | "warn" => Severity::Warning,
+            _ => return None,
+        };
+        let fast_ms: f64 = f[1].trim().parse().ok()?;
+        let slow_ms: f64 = f[2].trim().parse().ok()?;
+        let burn_threshold: f64 = f[3].trim().parse().ok()?;
+        if !(fast_ms > 0.0 && slow_ms >= fast_ms && burn_threshold > 0.0) {
+            return None;
+        }
+        out.push(WindowPair { severity, fast_ms, slow_ms, burn_threshold });
+    }
+    if out.is_empty() {
+        None
+    } else {
+        Some(out)
+    }
+}
+
+/// Cumulative counters the monitor diffs between observations.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SloCounts {
+    /// Completed requests within the p99 target (lifetime).
+    pub good: u64,
+    /// Completed requests over the p99 target (lifetime).
+    pub bad: u64,
+    /// Requests shed by admission control (lifetime).
+    pub shed: u64,
+    /// Requests offered, admitted or not (lifetime).
+    pub offered: u64,
+}
+
+impl SloCounts {
+    /// Sample a deployment's [`PlanMetrics`] (requires
+    /// [`PlanMetrics::set_slo_threshold`] so good/bad are counted).
+    pub fn sample(m: &PlanMetrics) -> SloCounts {
+        let (good, bad) = m.slo_counts();
+        SloCounts { good, bad, shed: m.shed_count(), offered: m.offered() }
+    }
+}
+
+/// One fire or clear transition.
+#[derive(Debug, Clone)]
+pub struct Alert {
+    /// Virtual time of the observation that transitioned.
+    pub t_ms: f64,
+    pub plan: String,
+    pub objective: Objective,
+    pub severity: Severity,
+    /// `true` = fired, `false` = cleared.
+    pub fired: bool,
+    /// Burn rate over the pair's fast window at transition time.
+    pub burn_fast: f64,
+    /// Burn rate over the pair's slow window at transition time.
+    pub burn_slow: f64,
+    pub fast_ms: f64,
+    pub slow_ms: f64,
+}
+
+impl Alert {
+    pub fn is_critical(&self) -> bool {
+        self.severity == Severity::Critical
+    }
+}
+
+/// Live burn rates of one pair (dashboard row).
+#[derive(Debug, Clone)]
+pub struct PairStatus {
+    pub objective: Objective,
+    pub severity: Severity,
+    pub fast_ms: f64,
+    pub slow_ms: f64,
+    pub threshold: f64,
+    pub burn_fast: f64,
+    pub burn_slow: f64,
+    pub firing: bool,
+}
+
+/// Full monitor status at an instant.
+#[derive(Debug, Clone)]
+pub struct SloStatus {
+    pub plan: String,
+    pub t_ms: f64,
+    pub pairs: Vec<PairStatus>,
+}
+
+impl SloStatus {
+    pub fn any_firing(&self) -> bool {
+        self.pairs.iter().any(|p| p.firing)
+    }
+
+    /// Fixed-width text table (the `cloudflow top` SLO panel).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "{:<14} {:<9} {:>9} {:>9} {:>7} {:>10} {:>10}  {}\n",
+            "objective", "severity", "fast", "slow", "thresh", "burn_fast", "burn_slow", "state"
+        ));
+        for p in &self.pairs {
+            out.push_str(&format!(
+                "{:<14} {:<9} {:>7.0}ms {:>7.0}ms {:>7.1} {:>10.2} {:>10.2}  {}\n",
+                p.objective.label(),
+                p.severity.label(),
+                p.fast_ms,
+                p.slow_ms,
+                p.threshold,
+                p.burn_fast,
+                p.burn_slow,
+                if p.firing { "FIRING" } else { "ok" },
+            ));
+        }
+        out
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+struct Bucket {
+    t_ms: f64,
+    good: u64,
+    bad: u64,
+    shed: u64,
+    offered: u64,
+}
+
+/// The burn-rate state machine for one deployment. Deterministic: the
+/// alert sequence is a pure function of the `(t_ms, SloCounts)` stream.
+pub struct SloMonitor {
+    plan: String,
+    policy: SloPolicy,
+    buckets: VecDeque<Bucket>,
+    last: Option<SloCounts>,
+    last_t_ms: f64,
+    /// `active[objective][pair]` — currently-firing flags.
+    active: [Vec<bool>; 2],
+}
+
+impl SloMonitor {
+    pub fn new(plan: &str, policy: SloPolicy) -> SloMonitor {
+        let n = policy.pairs.len();
+        SloMonitor {
+            plan: plan.to_string(),
+            policy,
+            buckets: VecDeque::new(),
+            last: None,
+            last_t_ms: 0.0,
+            active: [vec![false; n], vec![false; n]],
+        }
+    }
+
+    pub fn policy(&self) -> &SloPolicy {
+        &self.policy
+    }
+
+    pub fn plan(&self) -> &str {
+        &self.plan
+    }
+
+    /// Currently-firing `(objective, severity)` pairs.
+    pub fn firing(&self) -> Vec<(Objective, Severity)> {
+        let mut out = Vec::new();
+        for (oi, obj) in [Objective::Latency, Objective::Shed].into_iter().enumerate() {
+            for (pi, pair) in self.policy.pairs.iter().enumerate() {
+                if self.active[oi][pi] {
+                    out.push((obj, pair.severity));
+                }
+            }
+        }
+        out
+    }
+
+    /// Feed one observation of the cumulative counters; returns the
+    /// fire/clear transitions it caused (also journaled and exported to
+    /// the metrics registry).
+    pub fn observe(&mut self, t_ms: f64, counts: SloCounts) -> Vec<Alert> {
+        let prev = self.last.unwrap_or_default();
+        self.last = Some(counts);
+        self.last_t_ms = t_ms;
+        self.buckets.push_back(Bucket {
+            t_ms,
+            good: counts.good.saturating_sub(prev.good),
+            bad: counts.bad.saturating_sub(prev.bad),
+            shed: counts.shed.saturating_sub(prev.shed),
+            offered: counts.offered.saturating_sub(prev.offered),
+        });
+        let horizon = t_ms - self.policy.max_window_ms() - 1.0;
+        while self.buckets.len() > BUCKET_CAP
+            || self.buckets.front().is_some_and(|b| b.t_ms < horizon)
+        {
+            self.buckets.pop_front();
+        }
+
+        let mut alerts = Vec::new();
+        let registry = reg::global();
+        let pairs = self.policy.pairs.clone();
+        for (oi, obj) in [Objective::Latency, Objective::Shed].into_iter().enumerate() {
+            for (pi, pair) in pairs.iter().enumerate() {
+                let (burn_fast, events_fast) = self.burn(t_ms, pair.fast_ms, obj);
+                let (burn_slow, _) = self.burn(t_ms, pair.slow_ms, obj);
+                let labels = [
+                    ("plan", self.plan.as_str()),
+                    ("objective", obj.label()),
+                    ("severity", pair.severity.label()),
+                ];
+                registry.gauge("cloudflow_slo_burn_fast", &labels).set(burn_fast);
+                registry.gauge("cloudflow_slo_burn_slow", &labels).set(burn_slow);
+                let was = self.active[oi][pi];
+                let fire = !was
+                    && burn_fast >= pair.burn_threshold
+                    && burn_slow >= pair.burn_threshold
+                    && events_fast >= self.policy.min_events;
+                let clear = was && burn_fast < pair.burn_threshold;
+                if !(fire || clear) {
+                    continue;
+                }
+                self.active[oi][pi] = fire;
+                registry
+                    .gauge("cloudflow_alert_active", &labels)
+                    .set(if fire { 1.0 } else { 0.0 });
+                if fire {
+                    registry.counter("cloudflow_alerts_fired_total", &labels).inc();
+                    journal::record(
+                        t_ms,
+                        &self.plan,
+                        EventKind::AlertFire {
+                            objective: obj.label().to_string(),
+                            severity: pair.severity.label().to_string(),
+                            burn_fast,
+                            burn_slow,
+                        },
+                    );
+                } else {
+                    journal::record(
+                        t_ms,
+                        &self.plan,
+                        EventKind::AlertClear {
+                            objective: obj.label().to_string(),
+                            severity: pair.severity.label().to_string(),
+                        },
+                    );
+                }
+                alerts.push(Alert {
+                    t_ms,
+                    plan: self.plan.clone(),
+                    objective: obj,
+                    severity: pair.severity,
+                    fired: fire,
+                    burn_fast,
+                    burn_slow,
+                    fast_ms: pair.fast_ms,
+                    slow_ms: pair.slow_ms,
+                });
+            }
+        }
+        alerts
+    }
+
+    /// `(burn_rate, events)` of `objective` over the trailing
+    /// `window_ms`. An empty window burns 0 (nothing is being spent).
+    fn burn(&self, now_ms: f64, window_ms: f64, objective: Objective) -> (f64, u64) {
+        let from = now_ms - window_ms;
+        let (mut badd, mut total) = (0u64, 0u64);
+        for b in self.buckets.iter().rev() {
+            if b.t_ms < from {
+                break;
+            }
+            match objective {
+                Objective::Latency => {
+                    badd += b.bad;
+                    total += b.good + b.bad;
+                }
+                Objective::Shed => {
+                    badd += b.shed;
+                    total += b.offered;
+                }
+            }
+        }
+        if total == 0 {
+            return (0.0, 0);
+        }
+        let budget = match objective {
+            Objective::Latency => self.policy.latency_budget,
+            Objective::Shed => self.policy.shed_budget,
+        };
+        ((badd as f64 / total as f64) / budget.max(1e-9), total)
+    }
+
+    /// Burn rates of every pair at the latest observation time.
+    pub fn status(&self) -> SloStatus {
+        let t_ms = self.last_t_ms;
+        let mut pairs = Vec::new();
+        for (oi, obj) in [Objective::Latency, Objective::Shed].into_iter().enumerate() {
+            for (pi, pair) in self.policy.pairs.iter().enumerate() {
+                let (burn_fast, _) = self.burn(t_ms, pair.fast_ms, obj);
+                let (burn_slow, _) = self.burn(t_ms, pair.slow_ms, obj);
+                pairs.push(PairStatus {
+                    objective: obj,
+                    severity: pair.severity,
+                    fast_ms: pair.fast_ms,
+                    slow_ms: pair.slow_ms,
+                    threshold: pair.burn_threshold,
+                    burn_fast,
+                    burn_slow,
+                    firing: self.active[oi][pi],
+                });
+            }
+        }
+        SloStatus { plan: self.plan.clone(), t_ms, pairs }
+    }
+}
+
+/// A monitor + flight recorder bound to one deployment: each [`tick`]
+/// ingests finished traces, snapshots the latency sketch, feeds the
+/// burn-rate monitor, and freezes a [`Bundle`] when an alert fires.
+/// Drive it manually (deterministic tests) or [`spawn`] it on a
+/// background thread.
+///
+/// [`tick`]: SloWatcher::tick
+/// [`spawn`]: SloWatcher::spawn
+pub struct SloWatcher {
+    metrics: Arc<PlanMetrics>,
+    clock: Clock,
+    monitor: SloMonitor,
+    recorder: FlightRecorder,
+    bundles: VecDeque<Bundle>,
+    alerts: Vec<Alert>,
+    hooks: Vec<Box<dyn Fn(&Alert) + Send>>,
+    interval_ms: f64,
+}
+
+impl SloWatcher {
+    /// Watch `metrics` against `p99_target_ms` under the env policy
+    /// ([`SloPolicy::from_env`]). Arms the metrics' good/bad counting at
+    /// the target.
+    pub fn new(plan: &str, metrics: Arc<PlanMetrics>, p99_target_ms: f64) -> SloWatcher {
+        metrics.set_slo_threshold(p99_target_ms);
+        SloWatcher {
+            metrics,
+            clock: Clock::new(),
+            monitor: SloMonitor::new(plan, SloPolicy::from_env()),
+            recorder: FlightRecorder::new(plan),
+            bundles: VecDeque::new(),
+            alerts: Vec::new(),
+            hooks: Vec::new(),
+            interval_ms: 250.0,
+        }
+    }
+
+    /// Replace the policy (keeps the plan binding; resets alert state).
+    pub fn with_policy(mut self, policy: SloPolicy) -> SloWatcher {
+        let plan = self.monitor.plan.clone();
+        self.monitor = SloMonitor::new(&plan, policy);
+        self
+    }
+
+    /// Share the producer's clock so bucket timestamps and alert times
+    /// line up with the deployment's own metrics and journal entries.
+    pub fn with_clock(mut self, clock: Clock) -> SloWatcher {
+        self.clock = clock;
+        self
+    }
+
+    /// Background sampling period, virtual ms (default 250).
+    pub fn with_interval_ms(mut self, ms: f64) -> SloWatcher {
+        self.interval_ms = ms.max(1.0);
+        self
+    }
+
+    /// Replace the flight recorder (e.g. a different capacity).
+    pub fn with_recorder(mut self, recorder: FlightRecorder) -> SloWatcher {
+        self.recorder = recorder;
+        self
+    }
+
+    /// Run `hook` on every fire/clear transition (after the bundle for a
+    /// fire has been frozen) — the place to hand a critical alert to the
+    /// adaptive controller's re-plan trigger.
+    pub fn on_alert(&mut self, hook: impl Fn(&Alert) + Send + 'static) {
+        self.hooks.push(Box::new(hook));
+    }
+
+    /// The watcher's clock (Copy) — callers use it to timestamp events,
+    /// e.g. a drift-injection onset, on the same axis as alert times.
+    pub fn clock(&self) -> Clock {
+        self.clock
+    }
+
+    pub fn now_ms(&self) -> f64 {
+        self.clock.now_ms()
+    }
+
+    /// One observation: ingest traces, snapshot metrics, feed the
+    /// monitor; freeze a bundle per fired alert. Returns the transitions.
+    pub fn tick(&mut self) -> Vec<Alert> {
+        let now = self.clock.now_ms();
+        self.recorder.ingest();
+        self.recorder.note(&self.metrics, now);
+        let alerts = self.monitor.observe(now, SloCounts::sample(&self.metrics));
+        for a in &alerts {
+            if a.fired {
+                let reason = format!(
+                    "{}:{} burn_fast={:.2} burn_slow={:.2}",
+                    a.objective.label(),
+                    a.severity.label(),
+                    a.burn_fast,
+                    a.burn_slow
+                );
+                if self.bundles.len() == BUNDLE_CAP {
+                    self.bundles.pop_front();
+                }
+                self.bundles.push_back(self.recorder.freeze(now, &reason));
+            }
+            for h in &self.hooks {
+                h(a);
+            }
+        }
+        self.alerts.extend(alerts.iter().cloned());
+        alerts
+    }
+
+    /// Burn rates + firing flags at the latest tick.
+    pub fn status(&self) -> SloStatus {
+        self.monitor.status()
+    }
+
+    /// Every transition observed so far (oldest first).
+    pub fn alerts(&self) -> &[Alert] {
+        &self.alerts
+    }
+
+    /// Diagnostic bundles frozen on alert fires (oldest first, bounded).
+    pub fn bundles(&self) -> impl Iterator<Item = &Bundle> {
+        self.bundles.iter()
+    }
+
+    pub fn recorder(&self) -> &FlightRecorder {
+        &self.recorder
+    }
+
+    pub fn monitor(&self) -> &SloMonitor {
+        &self.monitor
+    }
+
+    /// Sample on a background thread every `interval_ms` of virtual time
+    /// until stopped; the handle joins and returns the watcher.
+    pub fn spawn(self) -> SloWatchHandle {
+        let gate = Arc::new(ShutdownGate::new());
+        let g = gate.clone();
+        let scale = crate::config::global().time_scale;
+        let interval =
+            std::time::Duration::from_secs_f64((self.interval_ms * scale / 1e3).max(1e-3));
+        let thread = std::thread::Builder::new()
+            .name("slo-watcher".into())
+            .spawn(move || {
+                let mut w = self;
+                loop {
+                    if g.wait_timeout(interval) {
+                        return w;
+                    }
+                    w.tick();
+                }
+            })
+            .expect("spawning slo watcher");
+        SloWatchHandle { gate, thread: Some(thread) }
+    }
+}
+
+/// Join handle for a spawned [`SloWatcher`]; stopping returns the
+/// watcher (with its alert log and bundles). Dropping also stops/joins.
+pub struct SloWatchHandle {
+    gate: Arc<ShutdownGate>,
+    thread: Option<std::thread::JoinHandle<SloWatcher>>,
+}
+
+impl SloWatchHandle {
+    pub fn stop(mut self) -> SloWatcher {
+        self.gate.trigger();
+        self.thread
+            .take()
+            .expect("watcher thread already joined")
+            .join()
+            .expect("slo watcher panicked")
+    }
+}
+
+impl Drop for SloWatchHandle {
+    fn drop(&mut self) {
+        self.gate.trigger();
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::quickcheck::check;
+
+    fn policy() -> SloPolicy {
+        SloPolicy {
+            latency_budget: 0.05,
+            shed_budget: 0.05,
+            pairs: vec![
+                WindowPair {
+                    severity: Severity::Critical,
+                    fast_ms: 1_000.0,
+                    slow_ms: 5_000.0,
+                    burn_threshold: 6.0,
+                },
+                WindowPair {
+                    severity: Severity::Warning,
+                    fast_ms: 2_500.0,
+                    slow_ms: 10_000.0,
+                    burn_threshold: 2.0,
+                },
+            ],
+            min_events: 5,
+        }
+    }
+
+    /// Drive `mon` for `dur_ms` at `rate` events per second with
+    /// `bad_frac` of them violating; returns the transitions.
+    fn drive(
+        mon: &mut SloMonitor,
+        t0: f64,
+        dur_ms: f64,
+        rate: f64,
+        bad_frac: f64,
+        counts: &mut SloCounts,
+    ) -> Vec<Alert> {
+        let mut out = Vec::new();
+        let step = 100.0;
+        let mut t = t0;
+        let mut carry_events = 0.0;
+        let mut carry_bad = 0.0;
+        while t < t0 + dur_ms {
+            t += step;
+            carry_events += rate * step / 1000.0;
+            let ev = carry_events as u64;
+            carry_events -= ev as f64;
+            carry_bad += ev as f64 * bad_frac;
+            let bad = carry_bad as u64;
+            carry_bad -= bad as f64;
+            counts.bad += bad;
+            counts.good += ev - bad.min(ev);
+            counts.offered += ev;
+            out.extend(mon.observe(t, *counts));
+        }
+        out
+    }
+
+    #[test]
+    fn sustained_violation_fires_critical_and_clears_after_recovery() {
+        let mut mon = SloMonitor::new("slo_t_sustained", policy());
+        let mut c = SloCounts::default();
+        // Calm 6s, then a hard violation for 8s, then 12s of recovery.
+        let calm = drive(&mut mon, 0.0, 6_000.0, 40.0, 0.0, &mut c);
+        assert!(calm.is_empty(), "{calm:?}");
+        let fired = drive(&mut mon, 6_000.0, 8_000.0, 40.0, 0.9, &mut c);
+        assert!(
+            fired.iter().any(|a| a.fired
+                && a.severity == Severity::Critical
+                && a.objective == Objective::Latency),
+            "{fired:?}"
+        );
+        let cleared = drive(&mut mon, 14_000.0, 12_000.0, 40.0, 0.0, &mut c);
+        assert!(cleared.iter().any(|a| !a.fired && a.severity == Severity::Critical));
+        assert!(mon.firing().is_empty(), "{:?}", mon.firing());
+    }
+
+    #[test]
+    fn single_window_spike_does_not_fire() {
+        let mut mon = SloMonitor::new("slo_t_spike", policy());
+        let mut c = SloCounts::default();
+        // Long calm baseline, then a 400ms full-bad burst: the fast
+        // window saturates but neither slow window accumulates enough.
+        drive(&mut mon, 0.0, 12_000.0, 40.0, 0.0, &mut c);
+        let spike = drive(&mut mon, 12_000.0, 400.0, 40.0, 1.0, &mut c);
+        let tail = drive(&mut mon, 12_400.0, 4_000.0, 40.0, 0.0, &mut c);
+        assert!(spike.is_empty() && tail.is_empty(), "{spike:?} {tail:?}");
+    }
+
+    #[test]
+    fn shed_objective_fires_independently() {
+        let mut mon = SloMonitor::new("slo_t_shed", policy());
+        let mut c = SloCounts::default();
+        drive(&mut mon, 0.0, 6_000.0, 40.0, 0.0, &mut c);
+        // All requests admitted fine latency-wise, but 60% shed.
+        let mut t = 6_000.0;
+        let mut alerts = Vec::new();
+        while t < 16_000.0 {
+            t += 100.0;
+            c.offered += 10;
+            c.shed += 6;
+            c.good += 4;
+            alerts.extend(mon.observe(t, c));
+        }
+        assert!(alerts
+            .iter()
+            .any(|a| a.fired && a.objective == Objective::Shed && a.is_critical()));
+        assert!(!alerts.iter().any(|a| a.objective == Objective::Latency && a.fired));
+    }
+
+    #[test]
+    fn property_fire_requires_sustained_and_always_clears() {
+        check("slo burn-rate semantics", 40, |r| {
+            let mut mon = SloMonitor::new("slo_t_prop", policy());
+            let mut c = SloCounts::default();
+            let rate = r.range_f64(20.0, 120.0);
+            // Random calm lead-in, then either a sub-fast-window spike or
+            // a sustained violation, then full recovery.
+            let calm_ms = r.range_f64(6_000.0, 14_000.0);
+            drive(&mut mon, 0.0, calm_ms, rate, 0.0, &mut c);
+            let sustained = r.bool(0.5);
+            let viol_ms = if sustained {
+                r.range_f64(6_000.0, 10_000.0)
+            } else {
+                r.range_f64(100.0, 350.0)
+            };
+            let bad_frac = r.range_f64(0.8, 1.0);
+            let fired =
+                drive(&mut mon, calm_ms, viol_ms, rate, bad_frac, &mut c);
+            if sustained {
+                prop_assert!(
+                    fired.iter().any(|a| a.fired && a.is_critical()),
+                    "sustained {viol_ms:.0}ms violation at rate {rate:.0} did not fire: {fired:?}"
+                );
+            } else {
+                prop_assert!(
+                    fired.iter().all(|a| !a.fired),
+                    "spike of {viol_ms:.0}ms fired: {fired:?}"
+                );
+            }
+            // Recovery longer than every window always clears everything.
+            drive(&mut mon, calm_ms + viol_ms, 14_000.0, rate, 0.0, &mut c);
+            prop_assert!(
+                mon.firing().is_empty(),
+                "still firing after recovery: {:?}",
+                mon.firing()
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn env_window_parsing() {
+        let pairs = parse_windows("critical:1000:4000:8, warning:2000:8000:2").unwrap();
+        assert_eq!(pairs.len(), 2);
+        assert_eq!(pairs[0].severity, Severity::Critical);
+        assert!((pairs[0].fast_ms - 1000.0).abs() < 1e-9);
+        assert!((pairs[1].slow_ms - 8000.0).abs() < 1e-9);
+        assert!(parse_windows("nope").is_none());
+        assert!(parse_windows("critical:5000:1000:8").is_none()); // slow < fast
+        assert!(parse_windows("critical:0:1000:8").is_none());
+        assert!(parse_windows("").is_none());
+    }
+
+    #[test]
+    fn alerts_land_in_journal_with_burn_rates() {
+        let mut mon = SloMonitor::new("slo_t_journal", policy());
+        let mut c = SloCounts::default();
+        drive(&mut mon, 0.0, 6_000.0, 50.0, 0.0, &mut c);
+        drive(&mut mon, 6_000.0, 8_000.0, 50.0, 1.0, &mut c);
+        let events = journal::events_for("slo_t_journal");
+        let fire = events
+            .iter()
+            .find(|e| matches!(e.kind, EventKind::AlertFire { .. }))
+            .expect("alert_fire journaled");
+        let parsed = crate::util::json::Json::parse(&fire.to_json()).unwrap();
+        assert_eq!(parsed.get("event").and_then(|v| v.as_str()), Some("alert_fire"));
+        assert!(parsed.get("burn_fast").and_then(|v| v.as_f64()).unwrap() >= 6.0);
+    }
+}

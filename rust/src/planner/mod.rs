@@ -37,7 +37,7 @@ pub mod profiler;
 pub mod tuner;
 
 pub use cost::{estimate, CostEstimate, DeployConfig, StageConfig};
-pub use profile::{Profile, StageProfile, CANDIDATE_BATCHES};
+pub use profile::{Profile, ServiceExpectation, StageProfile, CANDIDATE_BATCHES};
 pub use profiler::{profile_plan, PlannerCtx};
 pub use tuner::{
     plan_for_slo, plan_max_throughput, tune, tune_profile, DeploymentPlan, StagePlan,

@@ -70,6 +70,17 @@ impl StageProfile {
         }
     }
 
+    /// The planner's full service-time expectation at one batch size, in
+    /// the shape `obs::explain` compares live observations against.
+    pub fn expectation(&self, batch: usize) -> ServiceExpectation {
+        ServiceExpectation {
+            batch,
+            mean_ms: self.mean_ms(batch),
+            p99_ms: self.p99_ms(batch),
+            cv: self.service_cv(),
+        }
+    }
+
     /// Coefficient of variation of the batch-1 service time (the tuner's
     /// competitive-execution signal: high-variance stages profit from
     /// racing replicas).
@@ -85,6 +96,16 @@ impl StageProfile {
         let var = s.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / s.len() as f64;
         var.sqrt() / mean
     }
+}
+
+/// What the profile promises about one stage at one batch size: the
+/// planner-side half of an observed-vs-predicted comparison.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ServiceExpectation {
+    pub batch: usize,
+    pub mean_ms: f64,
+    pub p99_ms: f64,
+    pub cv: f64,
 }
 
 /// A full pipeline profile: per-stage records mirroring

@@ -131,6 +131,15 @@ pub trait Deployment: Sync {
     /// Serving metrics (latency window, offered/shed/completed counters).
     fn metrics(&self) -> Arc<PlanMetrics>;
 
+    /// A burn-rate SLO watcher over this deployment's metrics with the
+    /// default window policy (override windows via `CLOUDFLOW_SLO_WINDOWS`).
+    /// Runs on a fresh virtual clock; deployments that carry their own
+    /// clock (e.g. `Cluster`) expose a clock-aligned variant instead
+    /// (`Cluster::slo_watcher`).
+    fn slo_watcher(&self, p99_target_ms: f64) -> crate::obs::slo::SloWatcher {
+        crate::obs::slo::SloWatcher::new(&self.label(), self.metrics(), p99_target_ms)
+    }
+
     /// Synchronous call honoring `opts` (deadline enforced on the wait).
     fn call_with(&self, input: Table, opts: &CallOpts) -> Result<Table, ServeError> {
         let fut = self.call_async(input, opts)?;
