@@ -19,7 +19,9 @@
 
 mod bench_common;
 
-use bench_common::{header, jbool, jnum, json_row, jstr, scaled_ms, write_bench_json};
+use bench_common::{
+    enforce_baseline, header, jbool, jnum, json_row, jstr, scaled_ms, write_bench_json,
+};
 use cloudflow::adaptive::{Action, AdaptiveController, ControllerOptions, DriftConfig};
 use cloudflow::cloudburst::{Cluster, DagHandle};
 use cloudflow::planner::{plan_for_slo, PlannerCtx, ResourceCaps, Slo, TunerOptions};
@@ -37,6 +39,9 @@ fn main() {
     rows.push(service_drift_scenario());
     rows.push(overload_scenario());
     write_bench_json("adaptive", &rows);
+    // Promoted golden: the goal booleans (drift recovery, bounded
+    // admitted tail) are enforced — a regression fails the bench run.
+    enforce_baseline("adaptive", &rows);
     println!(
         "\ngoal: adaptive attainment within 5% of fresh after drift; \
          admitted p99 within SLO under overload"

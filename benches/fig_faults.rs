@@ -1,0 +1,178 @@
+//! Fault-injection bench: recovered tail latency and time-to-recover
+//! under injected replica crashes, against the fault-free baseline.
+//!
+//! A front/heavy sleep chain is planned for its SLO (so the heavy stage
+//! gets a replica floor > 1), then driven open-loop while a deterministic
+//! [`FaultPlan`] crashes heavy-stage replicas mid-run.  The recovery
+//! supervisor must detect each crash, re-dispatch the orphaned in-flight
+//! work to surviving replicas, and respawn capacity back to the planned
+//! floor — so every offered request still completes (`errors == 0`,
+//! `completed_fraction == 1`) and the only cost is a bounded tail bump on
+//! the handful of requests that were in flight at crash time.
+//!
+//! Reported per crash count (0 = fault-free baseline with the recovery
+//! bookkeeping *on*, isolating the cost of crashes from the cost of the
+//! machinery): completed fraction, errors, p99, journaled crash /
+//! respawn / re-dispatch counts, and MTTR (mean crash → respawn gap).
+//!
+//! Results land in `BENCH_faults.json`; the golden baseline in
+//! `benches/baselines/` is report-only (crash-case tails jitter under CI
+//! load), checked by `check_baseline` in smoke mode.
+
+mod bench_common;
+
+use std::sync::Arc;
+
+use bench_common::{check_baseline, header, jnum, json_row, jstr, scaled_ms, write_bench_json};
+use cloudflow::cloudburst::Cluster;
+use cloudflow::dataflow::operator::{Func, SleepDist};
+use cloudflow::dataflow::table::{DType, Schema, Table, Value};
+use cloudflow::dataflow::Flow;
+use cloudflow::faults::FaultPlan;
+use cloudflow::obs::journal::{self, EventKind};
+use cloudflow::planner::{plan_for_slo, PlannerCtx, Slo};
+use cloudflow::util::stats::fmt_ms;
+use cloudflow::workloads::{open_loop, ArrivalTrace};
+
+const QPS: f64 = 60.0;
+const FRONT_MS: f64 = 2.0;
+const HEAVY_MS: f64 = 12.0;
+/// Virtual times of the injected crashes; every case uses a prefix.
+const CRASH_TIMES_MS: [f64; 2] = [200.0, 420.0];
+
+fn main() {
+    if std::env::var("CLOUDFLOW_TIME_SCALE").is_err() {
+        std::env::set_var("CLOUDFLOW_TIME_SCALE", "1.0");
+    }
+    header("fault injection: recovered tail + MTTR vs injected crash count");
+    let mut rows = Vec::new();
+    for crashes in 0..=CRASH_TIMES_MS.len() {
+        rows.push(run_case(crashes));
+    }
+    write_bench_json("faults", &rows);
+    // Report-only: crash-case tails depend on exactly which requests were
+    // in flight at crash time, which jitters under CI load.
+    let _ = check_baseline("faults", &rows);
+    println!(
+        "\ngoal: every request completes across crashes (errors=0, \
+         completed_fraction=1) with bounded MTTR"
+    );
+}
+
+fn one_f64_row(i: usize) -> Table {
+    let mut t = Table::new(Schema::new(vec![("x", DType::F64)]));
+    t.push_fresh(vec![Value::F64(i as f64)]).unwrap();
+    t
+}
+
+/// Drive the chain at [`QPS`] with `crashes` heavy-stage replica crashes
+/// injected; return the bench row.
+fn run_case(crashes: usize) -> String {
+    let name = format!("faults_c{crashes}");
+    let flow = Flow::source(&name, Schema::new(vec![("x", DType::F64)]))
+        .map(Func::sleep("front", SleepDist::ConstMs(FRONT_MS)))
+        .expect("front stage")
+        .map(Func::sleep("heavy", SleepDist::ConstMs(HEAVY_MS)))
+        .expect("heavy stage")
+        .into_dataflow()
+        .expect("dataflow");
+    // Min-QPS 150 over a ~12ms stage forces a heavy-stage floor >= 2, so
+    // a crash leaves survivors to absorb re-dispatched work.
+    let slo = Slo::new(400.0, 150.0);
+    let ctx = PlannerCtx::default().quick().with_make_input(Arc::new(one_f64_row));
+    let dp = plan_for_slo(&flow, &slo, &ctx).expect("plan");
+
+    let cluster = Cluster::new(None);
+    let mut plan = FaultPlan::new(42);
+    for t in &CRASH_TIMES_MS[..crashes] {
+        plan = plan.crash_at("heavy", *t);
+    }
+    if crashes > 0 {
+        cluster.install_faults(plan);
+    } else {
+        // Fault-free baseline still pays for the recovery bookkeeping.
+        cluster.set_resilience(true);
+    }
+    let h = cluster.register_planned(&dp).expect("register");
+
+    let mut res = open_loop(
+        &cluster.deployment(h).expect("deployment"),
+        &ArrivalTrace::constant(QPS, scaled_ms(2_500.0)),
+        one_f64_row,
+    );
+    // Let the supervisor finish respawning and sweep the in-flight table.
+    let t0 = std::time::Instant::now();
+    while cluster.inflight_len() > 0 && t0.elapsed().as_secs() < 30 {
+        std::thread::sleep(std::time::Duration::from_millis(10));
+    }
+
+    let events = journal::events_for(&name);
+    let crash_ts: Vec<(String, f64)> = events
+        .iter()
+        .filter_map(|e| match &e.kind {
+            EventKind::ReplicaCrash { stage, .. } => Some((stage.clone(), e.t_ms)),
+            _ => None,
+        })
+        .collect();
+    let respawn_ts: Vec<(String, f64)> = events
+        .iter()
+        .filter_map(|e| match &e.kind {
+            EventKind::ReplicaRespawn { stage, .. } => Some((stage.clone(), e.t_ms)),
+            _ => None,
+        })
+        .collect();
+    let redispatches = events
+        .iter()
+        .filter(|e| matches!(e.kind, EventKind::TaskRedispatch { .. }))
+        .count();
+    // MTTR: each crash paired with the first respawn of its stage at or
+    // after the crash time.
+    let gaps: Vec<f64> = crash_ts
+        .iter()
+        .filter_map(|(stage, t)| {
+            respawn_ts
+                .iter()
+                .filter(|(s, r)| s == stage && r >= t)
+                .map(|(_, r)| r - t)
+                .fold(None, |m: Option<f64>, g| Some(m.map_or(g, |m| m.min(g))))
+        })
+        .collect();
+    let mttr_ms = if gaps.is_empty() {
+        f64::NAN
+    } else {
+        gaps.iter().sum::<f64>() / gaps.len() as f64
+    };
+
+    let (med, p99, rps) = res.report();
+    let completed_fraction = if res.offered == 0 {
+        0.0
+    } else {
+        res.latencies.len() as f64 / res.offered as f64
+    };
+    println!(
+        "{name:<12} offered={:<5} completed={:<5} errors={:<3} median={} p99={} \
+         rps={rps:<6.0} crashes={} respawns={} redispatches={redispatches} mttr={}",
+        res.offered,
+        res.latencies.len(),
+        res.errors,
+        fmt_ms(med),
+        fmt_ms(p99),
+        crash_ts.len(),
+        respawn_ts.len(),
+        if mttr_ms.is_finite() { fmt_ms(mttr_ms) } else { "n/a".into() },
+    );
+
+    json_row(&[
+        ("case", jstr(&name)),
+        ("injected_crashes", jnum(crashes as f64)),
+        ("offered", jnum(res.offered as f64)),
+        ("completed_fraction", jnum(completed_fraction)),
+        ("errors", jnum(res.errors as f64)),
+        ("median_ms", jnum(med)),
+        ("p99_ms", jnum(p99)),
+        ("crash_events", jnum(crash_ts.len() as f64)),
+        ("respawn_events", jnum(respawn_ts.len() as f64)),
+        ("redispatches", jnum(redispatches as f64)),
+        ("mttr_ms", jnum(mttr_ms)),
+    ])
+}

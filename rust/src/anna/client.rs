@@ -8,8 +8,10 @@
 use std::sync::Arc;
 
 use crate::config;
+use crate::faults::FaultInjector;
 use crate::net::NodeId;
 use crate::simulation::clock;
+use crate::simulation::clock::Clock;
 
 use super::cache::Cache;
 use super::store::{Bytes, Store};
@@ -19,18 +21,37 @@ pub struct KvsClient {
     store: Arc<Store>,
     cache: Option<Arc<Cache>>,
     node: NodeId,
+    faults: Option<(Arc<FaultInjector>, Clock)>,
 }
 
 impl KvsClient {
     /// Client colocated with an executor cache.
     pub fn cached(store: Arc<Store>, cache: Arc<Cache>) -> Self {
         let node = cache.node();
-        KvsClient { store, cache: Some(cache), node }
+        KvsClient { store, cache: Some(cache), node, faults: None }
     }
 
     /// Cache-less client (e.g. the benchmark driver writing inputs).
     pub fn direct(store: Arc<Store>, node: NodeId) -> Self {
-        KvsClient { store, cache: None, node }
+        KvsClient { store, cache: None, node, faults: None }
+    }
+
+    /// Attach the deterministic fault layer: reads issued during a
+    /// configured KVS outage window stall (in virtual time) until the
+    /// window closes, then proceed — unavailability, not data loss.
+    pub fn with_faults(mut self, inj: Arc<FaultInjector>, clock: Clock) -> Self {
+        self.faults = Some((inj, clock));
+        self
+    }
+
+    /// Block (virtual time) while the fault plan holds the KVS down.
+    fn stall_for_outage(&self) {
+        if let Some((inj, clock)) = &self.faults {
+            let now = clock.now_ms();
+            if let Some(until) = inj.kvs_hold_until(now) {
+                clock::sleep_ms((until - now).max(0.0));
+            }
+        }
     }
 
     pub fn node(&self) -> NodeId {
@@ -45,6 +66,7 @@ impl KvsClient {
     /// Get with modeled cost; `Ok(None)` when the key is absent.
     pub fn get(&self, key: &str) -> Option<Bytes> {
         let _span = crate::obs::trace::span(crate::obs::trace::SpanKind::KvsGet, key);
+        self.stall_for_outage();
         if let Some(cache) = &self.cache {
             if let Some(v) = cache.get(key) {
                 clock::sleep_ms(config::global().kvs.cache_hit_ms);
@@ -63,6 +85,7 @@ impl KvsClient {
     /// stores and by cache-bypass ablations).
     pub fn get_uncached(&self, key: &str) -> Option<Bytes> {
         let _span = crate::obs::trace::span(crate::obs::trace::SpanKind::KvsGet, key);
+        self.stall_for_outage();
         let v = self.store.get(key)?;
         clock::sleep_ms(Self::remote_cost_ms(v.len()));
         Some(v)
@@ -173,6 +196,20 @@ mod tests {
             spans.iter().any(|s| s.kind == SpanKind::KvsPut && s.label == "k"),
             "{spans:?}"
         );
+    }
+
+    #[test]
+    fn outage_window_stalls_reads_then_succeeds() {
+        use crate::faults::{FaultInjector, FaultPlan};
+        let store = Arc::new(Store::new(2));
+        let clock = Clock::new();
+        let inj = Arc::new(FaultInjector::new(FaultPlan::new(1).kvs_outage(0.0, 5.0)));
+        let cl = KvsClient::direct(store, NodeId::CLIENT).with_faults(inj, clock);
+        cl.put_free("k", vec![1, 2]);
+        // The read issued inside the window stalls until it closes, then
+        // returns the value — unavailability never becomes data loss.
+        assert_eq!(cl.get("k").unwrap().as_slice(), &[1, 2]);
+        assert!(clock.now_ms() >= 5.0, "did not stall: {}", clock.now_ms());
     }
 
     #[test]

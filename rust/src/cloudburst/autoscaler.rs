@@ -39,6 +39,7 @@ fn run(cluster: Arc<ClusterInner>) {
     let down_total = reg.counter("autoscaler_scale_down_total", &[]);
     let interval_real =
         Duration::from_secs_f64(cfg.autoscaler.interval_ms * cfg.time_scale / 1e3);
+    let tick_cap = Duration::from_secs_f64(cfg.autoscaler.tick_cap_ms.max(1.0) / 1e3);
     // Idle bookkeeping: (plan idx, seg, stage) -> (last processed, idle count)
     let mut idle: std::collections::HashMap<(usize, usize, usize), (u64, usize)> =
         std::collections::HashMap::new();
@@ -48,10 +49,7 @@ fn run(cluster: Arc<ClusterInner>) {
     let mut hot: std::collections::HashMap<(usize, usize, usize), usize> =
         std::collections::HashMap::new();
     loop {
-        if cluster
-            .gate
-            .wait_timeout(interval_real.min(Duration::from_millis(200)))
-        {
+        if cluster.gate.wait_timeout(interval_real.min(tick_cap)) {
             return;
         }
         if cluster.shutdown.load(Ordering::Relaxed) {

@@ -14,6 +14,7 @@ use crate::dataflow::compiler::{Plan, StageInput};
 use crate::dataflow::operator::ExecCtx;
 use crate::dataflow::table::Table;
 use crate::dataflow::LookupKey;
+use crate::faults::{FaultInjector, FaultPlan, MsgFault};
 use crate::net::{Fabric, NodeId};
 use crate::obs;
 use crate::obs::journal::EventKind;
@@ -27,6 +28,7 @@ use crate::util::shutdown::ShutdownGate;
 
 use super::executor::{self, Replica, StageRuntime, Task, TableMsg};
 use super::metrics::PlanMetrics;
+use super::recovery::InflightTable;
 
 /// Admission parts-per-million meaning "admit everything".
 const ADMIT_ALL_PPM: u32 = 1_000_000;
@@ -49,6 +51,28 @@ pub struct StageProvision {
     pub batch_cap: usize,
 }
 
+/// Why a bounded wait on an [`ExecFuture`] returned without a result.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WaitError {
+    /// The wait budget elapsed; the request keeps executing.
+    Timeout,
+    /// The cluster dropped the request (shutdown); no result will come.
+    Disconnected,
+}
+
+impl std::fmt::Display for WaitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WaitError::Timeout => write!(f, "wait timed out"),
+            WaitError::Disconnected => {
+                write!(f, "cluster dropped the request (shutdown?)")
+            }
+        }
+    }
+}
+
+impl std::error::Error for WaitError {}
+
 /// Future for one executed request (paper: `execute` returns a future).
 pub struct ExecFuture {
     rx: mpsc::Receiver<Result<Table>>,
@@ -63,9 +87,34 @@ impl ExecFuture {
             .context("cluster dropped the request (shutdown?)")?
     }
 
+    /// Bounded wait, shared by every timeout flavor: `Ok` carries the
+    /// request's own result, `Err` the typed reason no result arrived.
+    /// Non-consuming, so callers (retry/hedge loops) can wait in slices.
+    pub fn wait_real(
+        &self,
+        real: std::time::Duration,
+    ) -> std::result::Result<Result<Table>, WaitError> {
+        match self.rx.recv_timeout(real) {
+            Ok(r) => Ok(r),
+            Err(mpsc::RecvTimeoutError::Timeout) => Err(WaitError::Timeout),
+            Err(mpsc::RecvTimeoutError::Disconnected) => Err(WaitError::Disconnected),
+        }
+    }
+
+    /// [`ExecFuture::wait_real`] with the budget in virtual milliseconds.
+    pub fn wait_virtual(
+        &self,
+        virtual_ms: f64,
+    ) -> std::result::Result<Result<Table>, WaitError> {
+        let real = std::time::Duration::from_secs_f64(
+            (virtual_ms * crate::config::global().time_scale / 1e3).max(0.0),
+        );
+        self.wait_real(real)
+    }
+
     /// Block with a real-time timeout.
     pub fn result_timeout(self, real: std::time::Duration) -> Result<Table> {
-        match self.rx.recv_timeout(real) {
+        match self.wait_real(real) {
             Ok(r) => r,
             Err(e) => bail!("request timed out: {e}"),
         }
@@ -75,15 +124,10 @@ impl ExecFuture {
     /// elapse; `Ok(None)` means the deadline passed (the request keeps
     /// executing — only the wait is abandoned).
     pub fn result_within(self, virtual_ms: f64) -> Result<Option<Table>> {
-        let real = std::time::Duration::from_secs_f64(
-            (virtual_ms * crate::config::global().time_scale / 1e3).max(0.0),
-        );
-        match self.rx.recv_timeout(real) {
+        match self.wait_virtual(virtual_ms) {
             Ok(r) => r.map(Some),
-            Err(mpsc::RecvTimeoutError::Timeout) => Ok(None),
-            Err(mpsc::RecvTimeoutError::Disconnected) => {
-                bail!("cluster dropped the request (shutdown?)")
-            }
+            Err(WaitError::Timeout) => Ok(None),
+            Err(e @ WaitError::Disconnected) => bail!("{e}"),
         }
     }
 
@@ -133,6 +177,13 @@ impl RequestCtx {
 
     fn take_done(&self) -> Option<mpsc::Sender<Result<Table>>> {
         self.done.lock().unwrap().take()
+    }
+
+    /// True once the request has resolved (completed or failed): its
+    /// completion channel has been taken.  The recovery supervisor uses
+    /// this to sweep in-flight entries that can no longer matter.
+    pub fn is_done(&self) -> bool {
+        self.done.lock().unwrap().is_none()
     }
 }
 
@@ -350,9 +401,64 @@ pub struct ClusterInner {
     /// Wakes sleeping background loops (autoscaler, adaptive controller)
     /// so `Cluster` drop can join them promptly.
     pub gate: ShutdownGate,
+    /// Active fault injector, if any ([`Cluster::install_faults`] or
+    /// `CLOUDFLOW_FAULT_PLAN`).  Installing one also enables resilience.
+    faults: RwLock<Option<Arc<FaultInjector>>>,
+    /// Authoritative ownership table for crash recovery: which
+    /// stage/replica currently owns each delivered-but-unfinished task.
+    pub(crate) inflight: InflightTable,
+    /// When set, delivered tasks are registered in the in-flight table and
+    /// the supervisor re-dispatches orphans.  Off by default: the
+    /// fault-free hot path then skips all recovery bookkeeping.
+    resilience: AtomicBool,
 }
 
 impl ClusterInner {
+    /// The active fault injector, if any.
+    pub fn fault_injector(&self) -> Option<Arc<FaultInjector>> {
+        self.faults.read().unwrap().clone()
+    }
+
+    /// Whether crash-recovery bookkeeping (in-flight tracking + orphan
+    /// re-dispatch) is enabled.
+    pub fn resilience_on(&self) -> bool {
+        self.resilience.load(Ordering::Relaxed)
+    }
+
+    /// Return a crashed replica's node slot to the pool (supervisor use).
+    pub(crate) fn release_node(&self, d: Device, node: NodeId) {
+        self.nodes.lock().unwrap().release(d, node);
+    }
+
+    /// Push an already-registered task straight onto a live replica of its
+    /// stage, bypassing gather (the inputs were gathered on first
+    /// delivery).  Returns the receiving replica's id, or `None` when the
+    /// stage currently has no live replica — the task is dropped here, but
+    /// its inputs stay parked in the in-flight table, so the supervisor
+    /// simply tries again next tick.  Never touches the stage's inflight
+    /// counter: the original `deliver` increment is still outstanding and
+    /// the worker's decrement fires when the re-dispatched task runs.
+    pub(crate) fn dispatch_existing(
+        &self,
+        plan: &Arc<RegisteredPlan>,
+        stage: &Arc<StageRuntime>,
+        task: Task,
+    ) -> Option<u64> {
+        let mut task = task;
+        loop {
+            let replica = self.choose_replica(plan, stage, None)?;
+            let id = replica.id;
+            match replica.push(task) {
+                Ok(()) => return Some(id),
+                Err(t) => {
+                    if self.shutdown.load(Ordering::Relaxed) {
+                        return None;
+                    }
+                    task = t;
+                }
+            }
+        }
+    }
     /// Deliver a table to one input slot of a stage; fires the stage when
     /// its wait policy is satisfied (wait-for-any vs wait-for-all).
     /// `from` is the producing stage (`None` from the client), recorded on
@@ -414,14 +520,88 @@ impl ClusterInner {
             }
             let mut task =
                 Task { req: req.clone(), seg, stage: stage_idx, inputs, enqueued_ms };
+            let resilient = self.resilience_on();
+            if resilient {
+                // Authoritative in-flight record: if the receiving replica
+                // crashes before finishing this task, the supervisor
+                // rebuilds it from here and re-dispatches.
+                self.inflight
+                    .register(req, seg, stage_idx, &task.inputs, self.clock.now_ms());
+                // Message-level faults apply to inter-stage hops only
+                // (source seeding runs on the caller's thread).
+                if from.is_some() {
+                    if let Some(inj) = self.fault_injector() {
+                        let now = self.clock.now_ms();
+                        match inj.msg_fault(&stage.spec.name, now) {
+                            MsgFault::Drop => {
+                                obs::journal::record(
+                                    now,
+                                    &plan.plan.name,
+                                    EventKind::FaultInjected {
+                                        kind: format!("drop:{}", stage.spec.name),
+                                    },
+                                );
+                                obs::metrics::global()
+                                    .counter("faults_msg_drop_total", &[])
+                                    .inc();
+                                // The message is lost, not the request: the
+                                // entry stays ownerless until the
+                                // supervisor re-dispatches it.
+                                let backoff =
+                                    config::global().resilience.retry_backoff_ms;
+                                self.inflight.mark_lost(
+                                    task.req.id,
+                                    seg,
+                                    stage_idx,
+                                    now + backoff,
+                                );
+                                return;
+                            }
+                            MsgFault::Delay(d) => {
+                                obs::metrics::global()
+                                    .counter("faults_msg_delay_total", &[])
+                                    .inc();
+                                clock::sleep_ms(d);
+                            }
+                            MsgFault::Deliver => {}
+                        }
+                    }
+                }
+            }
             // A replica that drained out after a scale-down refuses the
             // push; retry on another (the stage always keeps >= 1 live,
             // except during cluster shutdown, when the request is failed
-            // rather than spinning on all-dead replicas).
+            // rather than spinning on all-dead replicas, and after
+            // crashes, when the task parks for the supervisor).
             loop {
-                let replica = self.choose_replica(plan, stage, hint);
+                let Some(replica) = self.choose_replica(plan, stage, hint) else {
+                    if self.shutdown.load(Ordering::Relaxed) {
+                        stage.inflight.fetch_sub(1, Ordering::Relaxed);
+                        task.req.fail(anyhow::anyhow!("cluster shutting down"));
+                        return;
+                    }
+                    if resilient {
+                        // Every replica is dead (crash storm): park the
+                        // task; the supervisor re-dispatches once respawn
+                        // restores capacity.
+                        let now = self.clock.now_ms();
+                        let backoff = config::global().resilience.retry_backoff_ms;
+                        self.inflight.mark_lost(task.req.id, seg, stage_idx, now + backoff);
+                        return;
+                    }
+                    // Non-resilient and momentarily empty (scale churn):
+                    // yield briefly and retry.
+                    std::thread::sleep(std::time::Duration::from_millis(1));
+                    continue;
+                };
+                let replica_id = replica.id;
                 match replica.push(task) {
-                    Ok(()) => break,
+                    Ok(()) => {
+                        if resilient {
+                            self.inflight.set_owner(req.id, seg, stage_idx, replica_id);
+                        }
+                        break;
+                    }
                     Err(t) => {
                         if self.shutdown.load(Ordering::Relaxed) {
                             stage.inflight.fetch_sub(1, Ordering::Relaxed);
@@ -437,39 +617,45 @@ impl ClusterInner {
 
     /// Scheduler: locality-aware when a hint is given and the plan enables
     /// dynamic dispatch; otherwise least-loaded with round-robin ties.
+    /// Dead replicas (crashed, or drained out of a scale-down) are never
+    /// candidates; `None` means the stage has no live replica right now
+    /// (crash storm or shutdown) and the caller must park or fail.
     fn choose_replica(
         &self,
         plan: &RegisteredPlan,
         stage: &StageRuntime,
         hint: Option<&str>,
-    ) -> Arc<Replica> {
+    ) -> Option<Arc<Replica>> {
         let replicas = stage.replicas.read().unwrap();
-        assert!(!replicas.is_empty(), "stage {} has no replicas", stage.spec.name);
+        let live: Vec<&Arc<Replica>> = replicas.iter().filter(|r| !r.is_dead()).collect();
+        if live.is_empty() {
+            return None;
+        }
         if plan.plan.opts.locality_dispatch {
             if let Some(key) = hint {
                 let holders = self.directory.holders(key);
-                if let Some(r) = replicas
+                if let Some(r) = live
                     .iter()
                     .filter(|r| holders.contains(&r.node))
                     .min_by_key(|r| r.queue_len())
                 {
-                    return r.clone();
+                    return Some((*r).clone());
                 }
             }
         }
         // Least-loaded; round-robin among equally-loaded.
-        let start = stage.rr.fetch_add(1, Ordering::Relaxed) % replicas.len();
-        let mut best = replicas[start].clone();
+        let start = stage.rr.fetch_add(1, Ordering::Relaxed) % live.len();
+        let mut best = live[start].clone();
         let mut best_len = best.queue_len();
-        for i in 0..replicas.len() {
-            let r = &replicas[(start + i) % replicas.len()];
+        for i in 1..live.len() {
+            let r = live[(start + i) % live.len()];
             let l = r.queue_len();
             if l < best_len {
                 best = r.clone();
                 best_len = l;
             }
         }
-        best
+        Some(best)
     }
 
     /// A stage finished: route its output to children, the next segment,
@@ -551,6 +737,11 @@ impl ClusterInner {
             return;
         }
         // Final output: charge the return hop and complete the request.
+        if self.resilience_on() {
+            // The request is resolving: drop any remaining in-flight
+            // entries so nothing is ever re-dispatched for it.
+            self.inflight.purge_req(req.id);
+        }
         let t_ret = if req.trace.is_sampled() { self.clock.now_ms() } else { 0.0 };
         clock::sleep_ms(self.fabric.transfer_ms(table.size_bytes()));
         self.fabric.note_shipped(table.size_bytes());
@@ -603,7 +794,12 @@ impl ClusterInner {
             .unwrap()
             .alloc(stage.spec.device, &self.directory);
         let replica = Replica::new(node);
-        let kvs = KvsClient::cached(self.store.clone(), cache);
+        let mut kvs = KvsClient::cached(self.store.clone(), cache);
+        // Executors spawned while a fault plan is active observe its KVS
+        // outage windows (install faults before registering plans).
+        if let Some(inj) = self.fault_injector() {
+            kvs = kvs.with_faults(inj, self.clock);
+        }
         let rng = self.rng.lock().unwrap().split();
         let ctx = ExecCtx {
             kvs: Some(kvs),
@@ -888,9 +1084,49 @@ impl Cluster {
             shutdown: AtomicBool::new(false),
             autoscale: AtomicBool::new(false),
             gate: ShutdownGate::new(),
+            faults: RwLock::new(None),
+            inflight: InflightTable::new(),
+            resilience: AtomicBool::new(false),
         });
-        let scaler = super::autoscaler::spawn(inner.clone());
-        Cluster { inner, bg: vec![scaler] }
+        let cluster = Cluster {
+            inner: inner.clone(),
+            bg: vec![
+                super::autoscaler::spawn(inner.clone()),
+                super::recovery::spawn(inner),
+            ],
+        };
+        // Env-configured chaos: every cluster in the process runs under
+        // the plan (CI's chaos job smoke-tests the suite this way).
+        if let Some(plan) = FaultPlan::from_env() {
+            cluster.install_faults(plan);
+        }
+        cluster
+    }
+
+    /// Install a fault plan on this cluster (before registering plans, so
+    /// every executor observes it) and enable crash recovery.
+    pub fn install_faults(&self, plan: FaultPlan) {
+        log::info!("installing fault plan: {plan}");
+        *self.inner.faults.write().unwrap() = Some(Arc::new(FaultInjector::new(plan)));
+        self.set_resilience(true);
+    }
+
+    /// Enable/disable crash-recovery bookkeeping (in-flight tracking +
+    /// supervisor re-dispatch).  Installing a fault plan turns it on;
+    /// turning it on without faults measures the bookkeeping overhead.
+    pub fn set_resilience(&self, on: bool) {
+        self.inner.resilience.store(on, Ordering::Relaxed);
+    }
+
+    /// Whether crash-recovery bookkeeping is enabled.
+    pub fn resilience(&self) -> bool {
+        self.inner.resilience_on()
+    }
+
+    /// Entries currently tracked by the recovery in-flight table (0 once
+    /// all work is finished or swept — the chaos tests' leak check).
+    pub fn inflight_len(&self) -> usize {
+        self.inner.inflight.len()
     }
 
     /// Register a compiled plan; spawns `initial_replicas` per stage.

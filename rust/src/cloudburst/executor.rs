@@ -18,6 +18,7 @@ use crate::dataflow::exec_local::{apply_op, apply_union};
 use crate::dataflow::operator::ExecCtx;
 use crate::dataflow::table::Table;
 use crate::net::NodeId;
+use crate::obs::journal::{self, EventKind};
 use crate::obs::trace::{self, Span, SpanKind, TraceCtx};
 use crate::simulation::clock;
 use crate::util::stats::WindowSketch;
@@ -159,6 +160,15 @@ pub struct Replica {
     /// has already exited — the scheduler retries on another replica and
     /// scale-down provably drops no in-flight work.
     dead: AtomicBool,
+    /// Set on an *abrupt* (injected) crash: unlike graceful `dead`, the
+    /// queue is stranded, not drained — the recovery supervisor detects
+    /// this flag, reclaims the stranded work, and respawns capacity.
+    crashed: AtomicBool,
+    /// Virtual-ms heartbeat (f64 bit pattern), stamped by the worker at
+    /// the top of every serve-loop iteration.  A stale heartbeat on a
+    /// replica with queued work is the supervisor's secondary (liveness)
+    /// crash signal alongside the explicit `crashed` flag.
+    last_beat: AtomicU64,
 }
 
 impl Replica {
@@ -170,7 +180,49 @@ impl Replica {
             cv: Condvar::new(),
             shutdown: AtomicBool::new(false),
             dead: AtomicBool::new(false),
+            crashed: AtomicBool::new(false),
+            last_beat: AtomicU64::new(0f64.to_bits()),
         })
+    }
+
+    /// True once this replica will never dequeue again (graceful drain
+    /// completion or abrupt crash).
+    pub fn is_dead(&self) -> bool {
+        self.dead.load(Ordering::Relaxed)
+    }
+
+    /// True when this replica died abruptly (injected crash), stranding
+    /// its queue.
+    pub fn is_crashed(&self) -> bool {
+        self.crashed.load(Ordering::Relaxed)
+    }
+
+    /// Stamp the worker heartbeat (virtual ms).
+    pub fn beat(&self, now_ms: f64) {
+        self.last_beat.store(now_ms.to_bits(), Ordering::Relaxed);
+    }
+
+    /// Last worker heartbeat (virtual ms).
+    pub fn last_beat_ms(&self) -> f64 {
+        f64::from_bits(self.last_beat.load(Ordering::Relaxed))
+    }
+
+    /// Crash abruptly: mark dead *without* draining, stranding whatever is
+    /// queued.  Taken under the queue lock so no `push` can slip past the
+    /// dead flag mid-crash; the supervisor later reclaims the stranded
+    /// queue via [`Replica::take_queue`].
+    pub fn crash(&self) {
+        let q = self.queue.lock().unwrap();
+        self.crashed.store(true, Ordering::Relaxed);
+        self.dead.store(true, Ordering::Relaxed);
+        self.shutdown.store(true, Ordering::Relaxed);
+        drop(q);
+        self.cv.notify_all();
+    }
+
+    /// Drain the stranded queue of a crashed replica (supervisor reclaim).
+    pub fn take_queue(&self) -> Vec<Task> {
+        self.queue.lock().unwrap().drain(..).collect()
     }
 
     /// Enqueue a task; returns it back if this replica has permanently
@@ -230,6 +282,29 @@ pub fn replica_loop(
     ctx: ExecCtx,
 ) {
     loop {
+        let now = cluster.clock.now_ms();
+        replica.beat(now);
+        // Injected-crash hook: checked before dequeueing, so a crash never
+        // interrupts a task mid-service — it strands *queued* work, which
+        // the recovery supervisor reclaims from the in-flight table.
+        if let Some(inj) = cluster.fault_injector() {
+            if inj.crash_due(&stage_rt.spec.name, now) {
+                replica.crash();
+                journal::record(
+                    now,
+                    &plan.plan.name,
+                    EventKind::FaultInjected {
+                        kind: format!("crash:{}", stage_rt.spec.name),
+                    },
+                );
+                log::info!(
+                    "injected crash: replica {} of stage {} at {now:.1}ms",
+                    replica.id,
+                    stage_rt.spec.name
+                );
+                return;
+            }
+        }
         let pinned = stage_rt.pinned_batch_cap();
         let max_batch = if !stage_rt.spec.batchable {
             1
@@ -427,6 +502,9 @@ fn finish(
     out: Result<Table>,
     node: NodeId,
 ) {
+    // Whether this invocation succeeded or failed, the (req, stage) entry
+    // is no longer orphanable — retire it before delivering downstream.
+    cluster.inflight.note_done(task.req.id, task.seg, task.stage);
     match out {
         Ok(table) => {
             cluster.complete_stage(plan, &task.req, task.seg, task.stage, table, node)

@@ -7,7 +7,10 @@
 //! * a locality-aware, resource-class-partitioned scheduler with
 //!   **to-be-continued** dynamic dispatch of plan segments,
 //! * a fine-grained per-function **autoscaler**,
-//! * **batched dequeue** for batch-aware functions.
+//! * **batched dequeue** for batch-aware functions,
+//! * a crash-recovery **supervisor** (heartbeats, an in-flight ownership
+//!   table, bounded re-dispatch of orphaned work, replica respawn) driven
+//!   by the deterministic [`crate::faults`] injection layer.
 //!
 //! Entry points: [`Cluster::new`] → [`Cluster::register`] →
 //! [`Cluster::execute`].
@@ -16,7 +19,11 @@ pub mod autoscaler;
 pub mod cluster;
 pub mod executor;
 pub mod metrics;
+pub mod recovery;
 
-pub use cluster::{Admit, Cluster, ClusterDeployment, DagHandle, ExecFuture, StageProvision};
+pub use cluster::{
+    Admit, Cluster, ClusterDeployment, DagHandle, ExecFuture, StageProvision, WaitError,
+};
 pub use executor::StageTelemetry;
 pub use metrics::PlanMetrics;
+pub use recovery::InflightTable;

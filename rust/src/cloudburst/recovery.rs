@@ -1,0 +1,391 @@
+//! Crash recovery: the in-flight ownership table and the supervisor
+//! thread that together make replica death survivable.
+//!
+//! When resilience is on (a fault plan is installed, or
+//! [`Cluster::set_resilience`](super::Cluster::set_resilience)), every
+//! gather-fired task is recorded in the [`InflightTable`] before it is
+//! pushed to a replica, keyed `(request, seg, stage)` and stamped with the
+//! owning replica id.  The supervisor detects crashed replicas — the
+//! explicit `crashed` flag set by an injected crash, or a stale heartbeat
+//! on a replica with queued work — removes them from their stage, reclaims
+//! their ownership records, respawns capacity up to the stage floor
+//! (honoring the active deployment plan), and re-dispatches ownerless
+//! tasks to surviving replicas with bounded retries and exponential
+//! backoff.  A request whose task exhausts its retries fails with a typed
+//! error instead of hanging forever.
+//!
+//! The table is authoritative for *recovery only*: the fast path never
+//! reads it, completed stages retire their entries in `finish`, and a
+//! resolving request purges all of its entries, so with resilience off the
+//! data plane is untouched and with it on a quiet table is the invariant
+//! the chaos tests assert (`Cluster::inflight_len() == 0` after drain).
+
+use std::collections::{HashMap, HashSet};
+use std::sync::{Arc, Mutex};
+
+use crate::config;
+use crate::obs::journal::{self, EventKind};
+use crate::obs::metrics;
+
+use super::cluster::{ClusterInner, RequestCtx};
+use super::executor::{Task, TableMsg};
+
+/// One delivered-but-unfinished task: enough to rebuild and re-dispatch
+/// it if its owning replica crashes.  Inputs are `Arc`-shared with the
+/// live task, so a record costs a few pointers, not a table copy.
+struct InflightEntry {
+    req: Arc<RequestCtx>,
+    inputs: Vec<TableMsg>,
+    /// Replica currently holding the task; `None` = lost (dropped message
+    /// or reclaimed from a crash) and awaiting re-dispatch.
+    owner: Option<u64>,
+    /// Dispatch attempts so far (the first delivery counts as one).
+    attempts: u32,
+    /// Virtual time before which the supervisor must not re-dispatch.
+    next_retry_ms: f64,
+}
+
+/// A task the supervisor should re-dispatch now.
+pub(crate) struct Redispatch {
+    pub req: Arc<RequestCtx>,
+    pub seg: usize,
+    pub stage: usize,
+    pub inputs: Vec<TableMsg>,
+    pub attempts: u32,
+}
+
+/// A task that ran out of retries; its request must be failed.
+pub(crate) struct Exhausted {
+    pub req: Arc<RequestCtx>,
+    pub seg: usize,
+    pub stage: usize,
+}
+
+/// Ownership table for all delivered-but-unfinished tasks of a cluster.
+pub struct InflightTable {
+    entries: Mutex<HashMap<(u64, usize, usize), InflightEntry>>,
+}
+
+impl Default for InflightTable {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl InflightTable {
+    pub fn new() -> Self {
+        InflightTable { entries: Mutex::new(HashMap::new()) }
+    }
+
+    /// Record a gather-fired task before it is pushed to a replica.
+    pub(crate) fn register(
+        &self,
+        req: &Arc<RequestCtx>,
+        seg: usize,
+        stage: usize,
+        inputs: &[TableMsg],
+        now_ms: f64,
+    ) {
+        self.entries.lock().unwrap().insert(
+            (req.id, seg, stage),
+            InflightEntry {
+                req: req.clone(),
+                inputs: inputs.to_vec(),
+                owner: None,
+                attempts: 1,
+                next_retry_ms: now_ms,
+            },
+        );
+    }
+
+    /// Stamp the replica that accepted the task.  A no-op when the entry
+    /// is already retired (the worker can finish a task before the
+    /// dispatching thread gets here — completion wins).
+    pub(crate) fn set_owner(&self, req_id: u64, seg: usize, stage: usize, replica: u64) {
+        if let Some(e) = self.entries.lock().unwrap().get_mut(&(req_id, seg, stage)) {
+            e.owner = Some(replica);
+        }
+    }
+
+    /// Park a task as ownerless (dropped message / no live replica); the
+    /// supervisor re-dispatches it at `next_retry_ms`.
+    pub(crate) fn mark_lost(&self, req_id: u64, seg: usize, stage: usize, next_retry_ms: f64) {
+        if let Some(e) = self.entries.lock().unwrap().get_mut(&(req_id, seg, stage)) {
+            e.owner = None;
+            e.next_retry_ms = next_retry_ms;
+        }
+    }
+
+    /// Retire one finished (succeeded or failed) task.
+    pub(crate) fn note_done(&self, req_id: u64, seg: usize, stage: usize) {
+        self.entries.lock().unwrap().remove(&(req_id, seg, stage));
+    }
+
+    /// Drop every entry of a resolving request.
+    pub(crate) fn purge_req(&self, req_id: u64) {
+        self.entries.lock().unwrap().retain(|k, _| k.0 != req_id);
+    }
+
+    /// Drop entries whose request has already resolved (failed elsewhere).
+    fn purge_done(&self) {
+        self.entries.lock().unwrap().retain(|_, e| !e.req.is_done());
+    }
+
+    /// Orphan every entry owned by a crashed replica: ownership is
+    /// cleared and the entry becomes eligible for re-dispatch.  Returns
+    /// how many tasks were reclaimed.
+    fn reclaim_owner(&self, replica: u64, next_retry_ms: f64) -> usize {
+        let mut n = 0;
+        for e in self.entries.lock().unwrap().values_mut() {
+            if e.owner == Some(replica) {
+                e.owner = None;
+                e.next_retry_ms = next_retry_ms;
+                n += 1;
+            }
+        }
+        n
+    }
+
+    /// Pull the ownerless entries due for re-dispatch.  `dispatchable`
+    /// lists the `(plan, seg, stage)` triples that currently have a live
+    /// replica — entries for other stages stay parked without burning an
+    /// attempt, so retries only count actual dispatches.  Entries past
+    /// `max_attempts` are removed and returned as exhausted.
+    fn take_redispatchable(
+        &self,
+        now_ms: f64,
+        max_attempts: u32,
+        backoff_ms: f64,
+        dispatchable: &HashSet<(usize, usize, usize)>,
+    ) -> (Vec<Redispatch>, Vec<Exhausted>) {
+        let mut ready = Vec::new();
+        let mut exhausted = Vec::new();
+        let mut entries = self.entries.lock().unwrap();
+        entries.retain(|&(_req_id, seg, stage), e| {
+            if e.owner.is_some() || now_ms < e.next_retry_ms {
+                return true;
+            }
+            if e.attempts >= max_attempts {
+                exhausted.push(Exhausted { req: e.req.clone(), seg, stage });
+                return false;
+            }
+            if !dispatchable.contains(&(e.req.plan_idx, seg, stage)) {
+                return true; // stage fully down; park until respawn
+            }
+            e.attempts += 1;
+            // Exponential backoff (capped) before the *next* retry, if
+            // this dispatch is lost too.
+            let exp = 1u32 << (e.attempts.min(6) - 1);
+            e.next_retry_ms = now_ms + backoff_ms * exp as f64;
+            ready.push(Redispatch {
+                req: e.req.clone(),
+                seg,
+                stage,
+                inputs: e.inputs.clone(),
+                attempts: e.attempts,
+            });
+            true
+        });
+        (ready, exhausted)
+    }
+
+    /// Entries currently tracked (the chaos tests' leak check).
+    pub fn len(&self) -> usize {
+        self.entries.lock().unwrap().len()
+    }
+
+    /// True when nothing is tracked.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Spawn the recovery supervisor for a cluster.  Idles cheaply while
+/// resilience is off; joined by `Cluster::drop` via the shutdown gate.
+pub fn spawn(cluster: Arc<ClusterInner>) -> std::thread::JoinHandle<()> {
+    std::thread::Builder::new()
+        .name("supervisor".into())
+        .spawn(move || run(cluster))
+        .expect("spawning supervisor thread")
+}
+
+fn run(cluster: Arc<ClusterInner>) {
+    use std::sync::atomic::Ordering;
+    let cfg = config::global();
+    let interval_real = std::time::Duration::from_secs_f64(
+        cfg.resilience.supervisor_interval_ms * cfg.time_scale / 1e3,
+    );
+    // Cap the real-time wait so shutdown joins promptly and detection
+    // latency stays bounded even at large time scales.
+    let tick = interval_real.min(std::time::Duration::from_millis(50));
+    // Stages currently below their floor because of a crash, keyed by
+    // (plan, seg, stage) → virtual time of the first detection; closed
+    // (and observed as MTTR) when the floor is restored.
+    let mut down_since: HashMap<(usize, usize, usize), f64> = HashMap::new();
+    loop {
+        if cluster.gate.wait_timeout(tick) || cluster.shutdown.load(Ordering::Relaxed) {
+            return;
+        }
+        if !cluster.resilience_on() {
+            continue;
+        }
+        let now = cluster.clock.now_ms();
+        let backoff = cfg.resilience.retry_backoff_ms;
+        let mut dispatchable: HashSet<(usize, usize, usize)> = HashSet::new();
+        for plan in cluster.plans() {
+            for seg in &plan.segs {
+                for stage in seg {
+                    let key = (plan.idx, stage.seg, stage.idx);
+                    // 1) Detect crashed replicas: the explicit flag, or a
+                    // stale heartbeat with work queued (the worker beats
+                    // on every loop iteration, so silence + backlog means
+                    // the thread is gone or wedged).
+                    let crashed: Vec<Arc<super::executor::Replica>> = {
+                        let reps = stage.replicas.read().unwrap();
+                        reps.iter()
+                            .filter(|r| {
+                                r.is_crashed()
+                                    || (!r.is_dead()
+                                        && r.queue_len() > 0
+                                        && now - r.last_beat_ms()
+                                            > cfg.resilience.heartbeat_stale_ms)
+                            })
+                            .cloned()
+                            .collect()
+                    };
+                    for r in crashed {
+                        stage.replicas.write().unwrap().retain(|x| x.id != r.id);
+                        // Idempotent for already-crashed replicas; strands
+                        // the queue of a heartbeat-detected wedge.
+                        r.crash();
+                        cluster.release_node(stage.spec.device, r.node);
+                        let stranded = r.take_queue().len();
+                        let reclaimed = cluster.inflight.reclaim_owner(r.id, now + backoff);
+                        down_since.entry(key).or_insert(now);
+                        journal::record(
+                            now,
+                            &plan.plan.name,
+                            EventKind::ReplicaCrash {
+                                stage: stage.spec.name.clone(),
+                                replica: r.id,
+                            },
+                        );
+                        metrics::global().counter("faults_replica_crash_total", &[]).inc();
+                        log::info!(
+                            "supervisor: stage {} replica {} crashed ({stranded} stranded, \
+                             {reclaimed} reclaimed) at {now:.1}ms",
+                            stage.spec.name,
+                            r.id
+                        );
+                    }
+                    // 2) Respawn to the planned floor (unless a down:
+                    // window holds the stage).
+                    let floor = stage.min_floor().max(1);
+                    let held = cluster
+                        .fault_injector()
+                        .is_some_and(|inj| inj.respawn_held(&stage.spec.name, now));
+                    while !held && stage.replica_count() < floor {
+                        let before = stage.replica_count();
+                        cluster.spawn_replica(&plan, stage);
+                        if stage.replica_count() == before {
+                            break; // shutting down
+                        }
+                        let id = stage
+                            .replicas
+                            .read()
+                            .unwrap()
+                            .last()
+                            .map(|r| r.id)
+                            .unwrap_or(0);
+                        journal::record(
+                            now,
+                            &plan.plan.name,
+                            EventKind::ReplicaRespawn {
+                                stage: stage.spec.name.clone(),
+                                replica: id,
+                            },
+                        );
+                        metrics::global()
+                            .counter("faults_replica_respawn_total", &[])
+                            .inc();
+                    }
+                    // 3) Close the MTTR window once capacity is back.
+                    if stage.replica_count() >= floor {
+                        if let Some(t0) = down_since.remove(&key) {
+                            metrics::global()
+                                .histogram(
+                                    "cloudflow_mttr_ms",
+                                    &[("plan", plan.plan.name.as_str())],
+                                )
+                                .observe(now - t0);
+                        }
+                    }
+                    if stage.replicas.read().unwrap().iter().any(|r| !r.is_dead()) {
+                        dispatchable.insert(key);
+                    }
+                }
+            }
+        }
+        // 4) Sweep entries of requests that already resolved, then
+        // re-dispatch orphaned tasks to surviving replicas.
+        cluster.inflight.purge_done();
+        let (ready, exhausted) = cluster.inflight.take_redispatchable(
+            now,
+            cfg.resilience.max_task_retries,
+            backoff,
+            &dispatchable,
+        );
+        let plans = cluster.plans();
+        for rd in ready {
+            let Some(plan) = plans.get(rd.req.plan_idx) else { continue };
+            let stage = &plan.segs[rd.seg][rd.stage];
+            let enqueued_ms = if rd.req.trace.is_sampled() { now } else { 0.0 };
+            let task = Task {
+                req: rd.req.clone(),
+                seg: rd.seg,
+                stage: rd.stage,
+                inputs: rd.inputs,
+                enqueued_ms,
+            };
+            journal::record(
+                now,
+                &plan.plan.name,
+                EventKind::TaskRedispatch {
+                    stage: stage.spec.name.clone(),
+                    attempt: rd.attempts,
+                },
+            );
+            metrics::global().counter("faults_task_redispatch_total", &[]).inc();
+            match cluster.dispatch_existing(plan, stage, task) {
+                Some(replica) => {
+                    cluster.inflight.set_owner(rd.req.id, rd.seg, rd.stage, replica);
+                }
+                None => {
+                    // Lost the race with another crash; the entry is still
+                    // parked and will come around next tick.
+                }
+            }
+        }
+        for ex in exhausted {
+            let Some(plan) = plans.get(ex.req.plan_idx) else { continue };
+            let stage = &plan.segs[ex.seg][ex.stage];
+            // The deliver-time increment never got its worker decrement.
+            stage
+                .inflight
+                .fetch_sub(1, std::sync::atomic::Ordering::Relaxed);
+            log::warn!(
+                "supervisor: request {} stage {} exhausted {} dispatch attempts",
+                ex.req.id,
+                stage.spec.name,
+                cfg.resilience.max_task_retries
+            );
+            ex.req.fail(anyhow::anyhow!(
+                "stage {} unavailable: task exhausted {} dispatch attempts after replica \
+                 crashes",
+                stage.spec.name,
+                cfg.resilience.max_task_retries
+            ));
+            cluster.inflight.purge_req(ex.req.id);
+        }
+    }
+}

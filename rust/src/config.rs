@@ -48,6 +48,26 @@ pub struct AutoscalerConfig {
     pub slack_replicas: usize,
     /// Hard cap on replicas per function.
     pub max_replicas: usize,
+    /// Cap on the *real*-time sleep between autoscaler wake-ups, ms
+    /// (bounds shutdown-join latency; chaos tests lower it to tick the
+    /// scaler deterministically fast).  `CLOUDFLOW_AUTOSCALER_TICK_MS`.
+    pub tick_cap_ms: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct ResilienceConfig {
+    /// Recovery supervisor decision period, virtual ms
+    /// (`CLOUDFLOW_SUPERVISOR_MS`).
+    pub supervisor_interval_ms: f64,
+    /// A replica whose heartbeat is older than this (virtual ms) while it
+    /// has queued work is declared crashed.  Generous by default: the
+    /// explicit crash flag is the primary signal, staleness the backstop.
+    pub heartbeat_stale_ms: f64,
+    /// Dispatch attempts per task (first delivery included) before its
+    /// request fails with a typed error.
+    pub max_task_retries: u32,
+    /// Base re-dispatch backoff, virtual ms (doubles per attempt, capped).
+    pub retry_backoff_ms: f64,
 }
 
 #[derive(Debug, Clone)]
@@ -76,6 +96,7 @@ pub struct Config {
     pub autoscaler: AutoscalerConfig,
     pub batch: BatchConfig,
     pub cluster: ClusterConfig,
+    pub resilience: ResilienceConfig,
 }
 
 impl Default for Config {
@@ -102,9 +123,16 @@ impl Default for Config {
                 down_idle_intervals: 10,
                 slack_replicas: 2,
                 max_replicas: 64,
+                tick_cap_ms: 200.0,
             },
             batch: BatchConfig { max_batch: 10, batch_wait_ms: 2.0 },
             cluster: ClusterConfig { cpu_pool_nodes: 24, gpu_pool_nodes: 12 },
+            resilience: ResilienceConfig {
+                supervisor_interval_ms: 100.0,
+                heartbeat_stale_ms: 5000.0,
+                max_task_retries: 4,
+                retry_backoff_ms: 25.0,
+            },
         }
     }
 }
@@ -121,6 +149,12 @@ impl Config {
         }
         if let Some(v) = env_f64("CLOUDFLOW_CACHE_MB") {
             c.kvs.cache_capacity = (v * 1024.0 * 1024.0) as usize;
+        }
+        if let Some(v) = env_f64("CLOUDFLOW_AUTOSCALER_TICK_MS") {
+            c.autoscaler.tick_cap_ms = v.max(1.0);
+        }
+        if let Some(v) = env_f64("CLOUDFLOW_SUPERVISOR_MS") {
+            c.resilience.supervisor_interval_ms = v.max(1.0);
         }
         c
     }

@@ -1,0 +1,526 @@
+//! Deterministic fault injection: seed-derived [`FaultPlan`]s describing
+//! *what breaks when* in virtual time, and a [`FaultInjector`] the runtime
+//! polls at its hook points (the executor serve loop, `TableMsg` dispatch
+//! in the cluster, and `anna::client` reads).
+//!
+//! Faults are declarative and reproducible: a plan is either built
+//! programmatically ([`FaultPlan::crash_at`] and friends), derived from a
+//! seed ([`FaultPlan::random`]), or parsed from the `CLOUDFLOW_FAULT_PLAN`
+//! environment variable using a compact grammar of `;`-separated clauses:
+//!
+//! ```text
+//! seed=42;crash:heavy@800;drop:preproc@500-900:0.3;delay:complex@0-2000:15;kvs@1000-1500;down:heavy@800-1600
+//! ```
+//!
+//! * `crash:STAGE@T` — one replica of the first stage whose label contains
+//!   `STAGE` crashes abruptly (queue stranded, no drain) at virtual ms `T`.
+//! * `drop:STAGE@FROM-UNTIL:P` — inter-stage messages bound for `STAGE`
+//!   are dropped with probability `P` inside the window.
+//! * `delay:STAGE@FROM-UNTIL:MS` — messages bound for `STAGE` are delayed
+//!   `MS` virtual ms inside the window.
+//! * `kvs@FROM-UNTIL` — KVS reads stall (reads block until the window
+//!   closes, preserving correctness while surfacing the latency).
+//! * `down:STAGE@FROM-UNTIL` — the supervisor may not respawn `STAGE`
+//!   replicas inside the window (models a fully-down stage).
+//!
+//! All times are virtual milliseconds on the owning cluster's clock.
+//! Crash times are exact and claimed once per clause; probabilistic drops
+//! draw from the plan-seeded stream, so a plan is reproducible given the
+//! same arrival order.
+
+use std::fmt;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::rng::Rng;
+
+/// One declarative fault clause (times in virtual ms).
+#[derive(Debug, Clone, PartialEq)]
+pub enum FaultKind {
+    /// One replica of the matching stage crashes abruptly at `at_ms`.
+    CrashReplica {
+        /// Substring matched against stage labels.
+        stage: String,
+        /// Virtual time of the crash.
+        at_ms: f64,
+    },
+    /// Inter-stage messages to the matching stage are dropped with
+    /// probability `prob` inside `[from_ms, until_ms)`.
+    DropMsg {
+        /// Substring matched against stage labels.
+        stage: String,
+        /// Window start (virtual ms).
+        from_ms: f64,
+        /// Window end (virtual ms, exclusive).
+        until_ms: f64,
+        /// Per-message drop probability in `[0, 1]`.
+        prob: f64,
+    },
+    /// Inter-stage messages to the matching stage are delayed `delay_ms`
+    /// inside `[from_ms, until_ms)`.
+    DelayMsg {
+        /// Substring matched against stage labels.
+        stage: String,
+        /// Window start (virtual ms).
+        from_ms: f64,
+        /// Window end (virtual ms, exclusive).
+        until_ms: f64,
+        /// Added latency per message (virtual ms).
+        delay_ms: f64,
+    },
+    /// KVS reads stall until the window closes (availability fault that
+    /// preserves read-your-writes correctness).
+    KvsOutage {
+        /// Window start (virtual ms).
+        from_ms: f64,
+        /// Window end (virtual ms, exclusive).
+        until_ms: f64,
+    },
+    /// The supervisor may not respawn replicas of the matching stage
+    /// inside the window — models a stage that stays fully down.
+    HoldDown {
+        /// Substring matched against stage labels.
+        stage: String,
+        /// Window start (virtual ms).
+        from_ms: f64,
+        /// Window end (virtual ms, exclusive).
+        until_ms: f64,
+    },
+}
+
+/// A deterministic fault schedule: a seed (driving any probabilistic
+/// clauses) plus an ordered list of [`FaultKind`] clauses.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct FaultPlan {
+    /// Seed for the injector's probabilistic draws (message drops).
+    pub seed: u64,
+    /// The fault clauses, in declaration order.
+    pub faults: Vec<FaultKind>,
+}
+
+impl FaultPlan {
+    /// An empty plan with the given seed.
+    pub fn new(seed: u64) -> Self {
+        FaultPlan { seed, faults: Vec::new() }
+    }
+
+    /// True when the plan injects nothing.
+    pub fn is_empty(&self) -> bool {
+        self.faults.is_empty()
+    }
+
+    /// Add a `crash:stage@at_ms` clause.
+    pub fn crash_at(mut self, stage: &str, at_ms: f64) -> Self {
+        self.faults
+            .push(FaultKind::CrashReplica { stage: stage.to_string(), at_ms });
+        self
+    }
+
+    /// Add a `drop:stage@from-until:prob` clause.
+    pub fn drop_msgs(mut self, stage: &str, from_ms: f64, until_ms: f64, prob: f64) -> Self {
+        self.faults.push(FaultKind::DropMsg {
+            stage: stage.to_string(),
+            from_ms,
+            until_ms,
+            prob,
+        });
+        self
+    }
+
+    /// Add a `delay:stage@from-until:delay_ms` clause.
+    pub fn delay_msgs(
+        mut self,
+        stage: &str,
+        from_ms: f64,
+        until_ms: f64,
+        delay_ms: f64,
+    ) -> Self {
+        self.faults.push(FaultKind::DelayMsg {
+            stage: stage.to_string(),
+            from_ms,
+            until_ms,
+            delay_ms,
+        });
+        self
+    }
+
+    /// Add a `kvs@from-until` read-stall clause.
+    pub fn kvs_outage(mut self, from_ms: f64, until_ms: f64) -> Self {
+        self.faults.push(FaultKind::KvsOutage { from_ms, until_ms });
+        self
+    }
+
+    /// Add a `down:stage@from-until` respawn-hold clause.
+    pub fn hold_down(mut self, stage: &str, from_ms: f64, until_ms: f64) -> Self {
+        self.faults
+            .push(FaultKind::HoldDown { stage: stage.to_string(), from_ms, until_ms });
+        self
+    }
+
+    /// Parse the `CLOUDFLOW_FAULT_PLAN` grammar (see the module docs).
+    pub fn parse(s: &str) -> Result<FaultPlan> {
+        let mut plan = FaultPlan::new(0);
+        for clause in s.split(';') {
+            let clause = clause.trim();
+            if clause.is_empty() {
+                continue;
+            }
+            if let Some(v) = clause.strip_prefix("seed=") {
+                plan.seed =
+                    v.trim().parse().with_context(|| format!("bad seed in {clause:?}"))?;
+            } else if let Some(rest) = clause.strip_prefix("crash:") {
+                let (stage, at) = split_at_sign(rest, clause)?;
+                plan = plan.crash_at(stage, parse_ms(at, clause)?);
+            } else if let Some(rest) = clause.strip_prefix("drop:") {
+                let (stage, tail) = split_at_sign(rest, clause)?;
+                let (win, prob) = tail
+                    .split_once(':')
+                    .with_context(|| format!("missing :prob in {clause:?}"))?;
+                let (from, until) = parse_window(win, clause)?;
+                plan = plan.drop_msgs(stage, from, until, parse_ms(prob, clause)?);
+            } else if let Some(rest) = clause.strip_prefix("delay:") {
+                let (stage, tail) = split_at_sign(rest, clause)?;
+                let (win, delay) = tail
+                    .split_once(':')
+                    .with_context(|| format!("missing :delay_ms in {clause:?}"))?;
+                let (from, until) = parse_window(win, clause)?;
+                plan = plan.delay_msgs(stage, from, until, parse_ms(delay, clause)?);
+            } else if let Some(rest) = clause.strip_prefix("kvs@") {
+                let (from, until) = parse_window(rest, clause)?;
+                plan = plan.kvs_outage(from, until);
+            } else if let Some(rest) = clause.strip_prefix("down:") {
+                let (stage, win) = split_at_sign(rest, clause)?;
+                let (from, until) = parse_window(win, clause)?;
+                plan = plan.hold_down(stage, from, until);
+            } else {
+                bail!("fault plan: unrecognized clause {clause:?}");
+            }
+        }
+        Ok(plan)
+    }
+
+    /// Read and parse `CLOUDFLOW_FAULT_PLAN`; `None` when unset, empty, or
+    /// unparseable (the latter is logged, never fatal).
+    pub fn from_env() -> Option<FaultPlan> {
+        let s = std::env::var("CLOUDFLOW_FAULT_PLAN").ok()?;
+        if s.trim().is_empty() {
+            return None;
+        }
+        match FaultPlan::parse(&s) {
+            Ok(p) if !p.is_empty() => Some(p),
+            Ok(_) => None,
+            Err(e) => {
+                log::warn!("ignoring CLOUDFLOW_FAULT_PLAN: {e:#}");
+                None
+            }
+        }
+    }
+
+    /// A seed-derived random plan over `stages` within `[0, horizon_ms)`:
+    /// 1–3 replica crashes (at most two per stage so bounded retries plus
+    /// respawn always recover), and possibly a delay window, a lossy drop
+    /// window, and a KVS stall — all strictly inside the horizon.  Never
+    /// emits [`FaultKind::HoldDown`], so every generated plan is fully
+    /// recoverable (the chaos property tests rely on this).
+    pub fn random(seed: u64, horizon_ms: f64, stages: &[String]) -> FaultPlan {
+        let mut rng = Rng::new(seed);
+        let mut plan = FaultPlan::new(seed);
+        if stages.is_empty() || horizon_ms <= 0.0 {
+            return plan;
+        }
+        let mut crashes_per_stage = std::collections::HashMap::new();
+        for _ in 0..rng.range(1, 3) {
+            let stage = rng.choice(stages).clone();
+            let n = crashes_per_stage.entry(stage.clone()).or_insert(0usize);
+            if *n >= 2 {
+                continue;
+            }
+            *n += 1;
+            let at = rng.range_f64(0.1, 0.6) * horizon_ms;
+            plan = plan.crash_at(&stage, at);
+        }
+        if rng.bool(0.5) {
+            let stage = rng.choice(stages).clone();
+            let from = rng.range_f64(0.0, 0.4) * horizon_ms;
+            let len = rng.range_f64(0.1, 0.3) * horizon_ms;
+            plan = plan.delay_msgs(&stage, from, from + len, rng.range_f64(1.0, 8.0));
+        }
+        if rng.bool(0.4) {
+            let stage = rng.choice(stages).clone();
+            let from = rng.range_f64(0.0, 0.4) * horizon_ms;
+            let len = rng.range_f64(0.05, 0.2) * horizon_ms;
+            plan = plan.drop_msgs(&stage, from, from + len, rng.range_f64(0.1, 0.5));
+        }
+        if rng.bool(0.3) {
+            let from = rng.range_f64(0.1, 0.5) * horizon_ms;
+            let len = rng.range_f64(0.05, 0.15) * horizon_ms;
+            plan = plan.kvs_outage(from, from + len);
+        }
+        plan
+    }
+}
+
+impl fmt::Display for FaultPlan {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let mut parts = vec![format!("seed={}", self.seed)];
+        for fault in &self.faults {
+            parts.push(match fault {
+                FaultKind::CrashReplica { stage, at_ms } => format!("crash:{stage}@{at_ms}"),
+                FaultKind::DropMsg { stage, from_ms, until_ms, prob } => {
+                    format!("drop:{stage}@{from_ms}-{until_ms}:{prob}")
+                }
+                FaultKind::DelayMsg { stage, from_ms, until_ms, delay_ms } => {
+                    format!("delay:{stage}@{from_ms}-{until_ms}:{delay_ms}")
+                }
+                FaultKind::KvsOutage { from_ms, until_ms } => {
+                    format!("kvs@{from_ms}-{until_ms}")
+                }
+                FaultKind::HoldDown { stage, from_ms, until_ms } => {
+                    format!("down:{stage}@{from_ms}-{until_ms}")
+                }
+            });
+        }
+        write!(f, "{}", parts.join(";"))
+    }
+}
+
+fn split_at_sign<'a>(rest: &'a str, clause: &str) -> Result<(&'a str, &'a str)> {
+    rest.split_once('@').with_context(|| format!("missing @ in {clause:?}"))
+}
+
+fn parse_ms(s: &str, clause: &str) -> Result<f64> {
+    s.trim().parse().with_context(|| format!("bad number {s:?} in {clause:?}"))
+}
+
+fn parse_window(s: &str, clause: &str) -> Result<(f64, f64)> {
+    let (a, b) = s
+        .split_once('-')
+        .with_context(|| format!("missing from-until window in {clause:?}"))?;
+    Ok((parse_ms(a, clause)?, parse_ms(b, clause)?))
+}
+
+/// Verdict for one inter-stage message dispatch.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum MsgFault {
+    /// Deliver normally.
+    Deliver,
+    /// Drop the message (the recovery supervisor will re-dispatch it).
+    Drop,
+    /// Deliver after the given virtual-ms delay.
+    Delay(f64),
+}
+
+/// Runtime side of a [`FaultPlan`]: the hook-point queries the cluster,
+/// executor, and KVS client poll.  Crash clauses are claimed exactly once
+/// (the first matching replica to poll past the deadline takes it).
+#[derive(Debug)]
+pub struct FaultInjector {
+    plan: FaultPlan,
+    claimed: Vec<AtomicBool>,
+    rng: Mutex<Rng>,
+}
+
+impl FaultInjector {
+    /// Build an injector for `plan`.
+    pub fn new(plan: FaultPlan) -> Self {
+        let claimed = plan.faults.iter().map(|_| AtomicBool::new(false)).collect();
+        let rng = Mutex::new(Rng::new(plan.seed ^ 0xFA01_75EE));
+        FaultInjector { plan, claimed, rng }
+    }
+
+    /// The plan this injector executes.
+    pub fn plan(&self) -> &FaultPlan {
+        &self.plan
+    }
+
+    /// Polled by each replica worker at the top of its serve loop: true
+    /// exactly once per matching crash clause whose time has come — the
+    /// polling replica must then crash abruptly.
+    pub fn crash_due(&self, stage_label: &str, now_ms: f64) -> bool {
+        for (i, f) in self.plan.faults.iter().enumerate() {
+            if let FaultKind::CrashReplica { stage, at_ms } = f {
+                if now_ms >= *at_ms
+                    && stage_label.contains(stage.as_str())
+                    && self.claimed[i]
+                        .compare_exchange(false, true, Ordering::Relaxed, Ordering::Relaxed)
+                        .is_ok()
+                {
+                    return true;
+                }
+            }
+        }
+        false
+    }
+
+    /// Polled on each inter-stage message dispatch to `stage_label`.
+    pub fn msg_fault(&self, stage_label: &str, now_ms: f64) -> MsgFault {
+        for f in &self.plan.faults {
+            match f {
+                FaultKind::DropMsg { stage, from_ms, until_ms, prob }
+                    if stage_label.contains(stage.as_str())
+                        && now_ms >= *from_ms
+                        && now_ms < *until_ms =>
+                {
+                    if self.rng.lock().unwrap().bool(*prob) {
+                        return MsgFault::Drop;
+                    }
+                }
+                FaultKind::DelayMsg { stage, from_ms, until_ms, delay_ms }
+                    if stage_label.contains(stage.as_str())
+                        && now_ms >= *from_ms
+                        && now_ms < *until_ms =>
+                {
+                    return MsgFault::Delay(*delay_ms);
+                }
+                _ => {}
+            }
+        }
+        MsgFault::Deliver
+    }
+
+    /// When a KVS read at `now_ms` falls in an outage window, the virtual
+    /// time until which the read must stall.
+    pub fn kvs_hold_until(&self, now_ms: f64) -> Option<f64> {
+        let mut until: Option<f64> = None;
+        for f in &self.plan.faults {
+            if let FaultKind::KvsOutage { from_ms, until_ms } = f {
+                if now_ms >= *from_ms && now_ms < *until_ms {
+                    until = Some(until.map_or(*until_ms, |u| u.max(*until_ms)));
+                }
+            }
+        }
+        until
+    }
+
+    /// True while a `down:` clause forbids respawning `stage_label`.
+    pub fn respawn_held(&self, stage_label: &str, now_ms: f64) -> bool {
+        self.plan.faults.iter().any(|f| {
+            matches!(f, FaultKind::HoldDown { stage, from_ms, until_ms }
+                if stage_label.contains(stage.as_str())
+                    && now_ms >= *from_ms
+                    && now_ms < *until_ms)
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grammar_roundtrip() {
+        let plan = FaultPlan::new(42)
+            .crash_at("heavy", 800.0)
+            .drop_msgs("preproc", 500.0, 900.0, 0.3)
+            .delay_msgs("complex", 0.0, 2000.0, 15.0)
+            .kvs_outage(1000.0, 1500.0)
+            .hold_down("heavy", 800.0, 1600.0);
+        let text = plan.to_string();
+        let parsed = FaultPlan::parse(&text).expect("reparse");
+        assert_eq!(parsed, plan, "grammar roundtrip: {text}");
+    }
+
+    #[test]
+    fn parse_handles_whitespace_and_empty_clauses() {
+        let plan = FaultPlan::parse(" seed=7 ; crash:heavy@120 ;; ").expect("parse");
+        assert_eq!(plan.seed, 7);
+        assert_eq!(
+            plan.faults,
+            vec![FaultKind::CrashReplica { stage: "heavy".into(), at_ms: 120.0 }]
+        );
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(FaultPlan::parse("explode:everything").is_err());
+        assert!(FaultPlan::parse("crash:heavy").is_err());
+        assert!(FaultPlan::parse("drop:a@1-2").is_err());
+        assert!(FaultPlan::parse("kvs@5").is_err());
+        assert!(FaultPlan::parse("seed=notanumber").is_err());
+    }
+
+    #[test]
+    fn crash_claimed_exactly_once() {
+        let inj = FaultInjector::new(FaultPlan::new(1).crash_at("heavy", 100.0));
+        assert!(!inj.crash_due("heavy", 50.0), "not due yet");
+        assert!(!inj.crash_due("front", 150.0), "wrong stage");
+        assert!(inj.crash_due("heavy", 150.0), "first poll claims");
+        assert!(!inj.crash_due("heavy", 200.0), "claimed once");
+    }
+
+    #[test]
+    fn two_crashes_same_stage_claim_independently() {
+        let inj =
+            FaultInjector::new(FaultPlan::new(1).crash_at("s", 10.0).crash_at("s", 20.0));
+        assert!(inj.crash_due("s", 25.0));
+        assert!(inj.crash_due("s", 25.0));
+        assert!(!inj.crash_due("s", 25.0));
+    }
+
+    #[test]
+    fn msg_fault_windows() {
+        let inj = FaultInjector::new(
+            FaultPlan::new(3)
+                .drop_msgs("a", 100.0, 200.0, 1.0)
+                .delay_msgs("b", 100.0, 200.0, 9.0),
+        );
+        assert_eq!(inj.msg_fault("stage-a", 150.0), MsgFault::Drop);
+        assert_eq!(inj.msg_fault("stage-a", 250.0), MsgFault::Deliver);
+        assert_eq!(inj.msg_fault("stage-b", 150.0), MsgFault::Delay(9.0));
+        assert_eq!(inj.msg_fault("stage-c", 150.0), MsgFault::Deliver);
+    }
+
+    #[test]
+    fn kvs_and_hold_windows() {
+        let inj = FaultInjector::new(
+            FaultPlan::new(4).kvs_outage(100.0, 300.0).hold_down("h", 50.0, 80.0),
+        );
+        assert_eq!(inj.kvs_hold_until(150.0), Some(300.0));
+        assert_eq!(inj.kvs_hold_until(350.0), None);
+        assert!(inj.respawn_held("h", 60.0));
+        assert!(!inj.respawn_held("h", 90.0));
+        assert!(!inj.respawn_held("x", 60.0));
+    }
+
+    #[test]
+    fn random_plans_are_deterministic_and_bounded() {
+        let stages = vec!["front".to_string(), "heavy".to_string()];
+        for seed in 0..32 {
+            let a = FaultPlan::random(seed, 1000.0, &stages);
+            let b = FaultPlan::random(seed, 1000.0, &stages);
+            assert_eq!(a, b, "seed {seed} not deterministic");
+            assert!(!a.is_empty(), "seed {seed} produced no faults");
+            let mut crashes = std::collections::HashMap::new();
+            for f in &a.faults {
+                match f {
+                    FaultKind::CrashReplica { stage, at_ms } => {
+                        assert!(*at_ms > 0.0 && *at_ms < 1000.0);
+                        *crashes.entry(stage.clone()).or_insert(0usize) += 1;
+                    }
+                    FaultKind::DropMsg { from_ms, until_ms, prob, .. } => {
+                        assert!(*from_ms >= 0.0 && until_ms > from_ms);
+                        assert!(*prob > 0.0 && *prob <= 0.5);
+                    }
+                    FaultKind::DelayMsg { from_ms, until_ms, delay_ms, .. } => {
+                        assert!(*from_ms >= 0.0 && until_ms > from_ms);
+                        assert!(*delay_ms > 0.0 && *delay_ms <= 8.0);
+                    }
+                    FaultKind::KvsOutage { from_ms, until_ms } => {
+                        assert!(*from_ms >= 0.0 && until_ms > from_ms);
+                    }
+                    FaultKind::HoldDown { .. } => {
+                        panic!("random plans must be fully recoverable (no down:)")
+                    }
+                }
+                assert!(crashes.values().all(|&n| n <= 2), "seed {seed}: >2 crashes/stage");
+            }
+        }
+    }
+
+    #[test]
+    fn empty_stage_list_yields_empty_plan() {
+        assert!(FaultPlan::random(9, 1000.0, &[]).is_empty());
+    }
+}

@@ -30,6 +30,14 @@
 //! a unified metrics registry with JSON/Prometheus exporters, and a
 //! structured journal of control-plane decisions.
 //!
+//! The [`faults`] subsystem makes it survivable — seed-deterministic
+//! fault plans (replica crashes, message drops/delays, KVS outages)
+//! injected into the runtime, a crash-recovery supervisor
+//! ([`cloudburst::recovery`]) that re-dispatches orphaned work and
+//! respawns replicas, and request-level retries, hedging and graceful
+//! degradation on the serving facade ([`serve::RetryPolicy`],
+//! [`serve::Hedge`], [`serve::Resilient`]).
+//!
 //! The user-facing surface is the **Flow API v2**: author pipelines with
 //! the fluent [`dataflow::v2::Flow`] builder and the inspectable
 //! [`dataflow::expr::Expr`] DSL (which unlocks the compiler's
@@ -51,6 +59,7 @@ pub mod baselines;
 pub mod cloudburst;
 pub mod config;
 pub mod dataflow;
+pub mod faults;
 pub mod models;
 pub mod net;
 pub mod obs;

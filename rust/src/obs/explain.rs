@@ -15,6 +15,7 @@
 //! the adaptive controller as a re-plan trigger.
 
 use crate::adaptive::LiveSnapshot;
+use crate::obs::journal;
 use crate::obs::report::BlameReport;
 use crate::planner::{estimate, DeployConfig, DeploymentPlan};
 use crate::util::rng;
@@ -35,6 +36,9 @@ pub enum Cause {
     Queueing,
     /// The service time itself drifted from the profile.
     ServiceDrift,
+    /// A replica of this stage crashed in the window (journaled by the
+    /// recovery supervisor); the excess is recovery fallout, not drift.
+    Crash,
     /// Within plan.
     Nominal,
 }
@@ -44,6 +48,7 @@ impl Cause {
         match self {
             Cause::Queueing => "queueing",
             Cause::ServiceDrift => "service_drift",
+            Cause::Crash => "crash",
             Cause::Nominal => "nominal",
         }
     }
@@ -101,6 +106,9 @@ pub struct ExplainReport {
     pub admit_fraction: f64,
     /// Lifetime shed fraction at explain time.
     pub shed_fraction: f64,
+    /// Replica crashes journaled for this plan up to the snapshot time:
+    /// `(stage label, virtual crash time)`.
+    pub crashes: Vec<(String, f64)>,
     /// Stages whose live service ratio exceeds [`DRIFT_NOTE_RATIO`].
     pub drifted: Vec<(usize, usize, f64)>,
     /// Findings ranked by `excess_ms`, worst first.
@@ -131,6 +139,14 @@ impl ExplainReport {
             self.admit_fraction,
             self.shed_fraction
         ));
+        if !self.crashes.is_empty() {
+            let list: Vec<String> = self
+                .crashes
+                .iter()
+                .map(|(s, t)| format!("{s}@{t:.0}ms"))
+                .collect();
+            out.push_str(&format!("crashes in window: {}\n", list.join(", ")));
+        }
         out.push_str(&format!(
             "{:<18} {:<13} {:>6} {:>22} {:>22} {:>7} {:>7}\n",
             "stage", "cause", "excess", "service obs/pred", "wait obs/pred", "queue", "shift"
@@ -167,6 +183,14 @@ impl ExplainReport {
         out.push_str(&format!(",\"attainment\":{}", jf(self.attainment)));
         out.push_str(&format!(",\"admit_fraction\":{}", jf(self.admit_fraction)));
         out.push_str(&format!(",\"shed_fraction\":{}", jf(self.shed_fraction)));
+        out.push_str(",\"crashes\":[");
+        for (i, (stage, t)) in self.crashes.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!("[{stage:?},{}]", jf(*t)));
+        }
+        out.push(']');
         out.push_str(",\"drifted\":[");
         for (i, (seg, idx, ratio)) in self.drifted.iter().enumerate() {
             if i > 0 {
@@ -256,6 +280,19 @@ pub fn explain(
         0.0
     };
 
+    // Replica crashes journaled for this plan up to the snapshot time: a
+    // crash explains a stage's excess better than drift or queueing does.
+    let crashes: Vec<(String, f64)> = journal::events_for(&dp.plan.name)
+        .iter()
+        .filter(|e| e.t_ms <= snap.t_ms)
+        .filter_map(|e| match &e.kind {
+            journal::EventKind::ReplicaCrash { stage, .. } => {
+                Some((stage.clone(), e.t_ms))
+            }
+            _ => None,
+        })
+        .collect();
+
     let mut drifted: Vec<(usize, usize, f64)> = snap
         .stages
         .iter()
@@ -299,7 +336,14 @@ pub fn explain(
         let service_excess = (observed_service - predicted_service).max(0.0);
         let wait_excess = (observed_wait - predicted_wait).max(0.0);
         let excess = service_excess + wait_excess;
-        let cause = if excess < NOMINAL_EXCESS_MS {
+        // Journal labels are runtime stage names, observation labels come
+        // from the profile; either may embed the other after fusion.
+        let crashed_here = crashes
+            .iter()
+            .any(|(s, _)| s.contains(&obs.label) || obs.label.contains(s.as_str()));
+        let cause = if crashed_here && excess >= NOMINAL_EXCESS_MS {
+            Cause::Crash
+        } else if excess < NOMINAL_EXCESS_MS {
             Cause::Nominal
         } else if wait_excess >= service_excess {
             Cause::Queueing
@@ -334,6 +378,11 @@ pub fn explain(
 
     let regressed = snap.p99_ms.is_finite() && snap.p99_ms > dp.slo.p99_ms;
     let verdict = match findings.first().filter(|f| f.cause != Cause::Nominal) {
+        Some(top) if regressed && top.cause == Cause::Crash => format!(
+            "p99 regressed to {:.0}ms (target {:.0}ms) because stage {} ({},{}) crashed: {} replica crash(es) journaled in the window, +{:.1}ms excess while recovery re-dispatched orphaned work",
+            snap.p99_ms, dp.slo.p99_ms, top.label, top.seg, top.idx,
+            crashes.len(), top.excess_ms,
+        ),
         Some(top) if regressed => {
             let (what, ratio) = match top.cause {
                 Cause::Queueing => ("queueing", top.wait_ratio),
@@ -368,6 +417,7 @@ pub fn explain(
         attainment: snap.attainment,
         admit_fraction,
         shed_fraction,
+        crashes,
         drifted,
         findings,
         verdict,
@@ -384,7 +434,11 @@ mod tests {
     use crate::planner::{plan_for_slo, PlannerCtx, Slo};
 
     fn two_stage_dp() -> DeploymentPlan {
-        let flow = Flow::source("exp_t", Schema::new(vec![("x", DType::F64)]))
+        two_stage_dp_named("exp_t")
+    }
+
+    fn two_stage_dp_named(name: &str) -> DeploymentPlan {
+        let flow = Flow::source(name, Schema::new(vec![("x", DType::F64)]))
             .map(Func::sleep("front", SleepDist::ConstMs(2.0)))
             .unwrap()
             .map(Func::sleep("heavy", SleepDist::ConstMs(20.0)))
@@ -470,5 +524,40 @@ mod tests {
         let report = explain(&dp, &snap, None, None, 1.0);
         assert!(report.top().is_none(), "{:?}", report.findings);
         assert!(report.verdict.contains("within"), "{}", report.verdict);
+    }
+
+    #[test]
+    fn crashed_stage_is_attributed() {
+        // Unique plan name: the journal is process-global and the crash
+        // event must not leak into the other explain tests.
+        let dp = two_stage_dp_named("exp_crash_t");
+        journal::record(
+            1_000.0,
+            &dp.plan.name,
+            journal::EventKind::ReplicaCrash { stage: "heavy".into(), replica: 3 },
+        );
+        let snap = LiveSnapshot {
+            t_ms: 5_000.0,
+            stages: vec![obs(&dp, "front", 1.0, 0, 40.0), obs(&dp, "heavy", 2.0, 40, 40.0)],
+            offered_qps: 40.0,
+            attainment: 0.6,
+            p99_ms: 600.0,
+            latency_window: 256,
+            completed: 300,
+            shed: 0,
+        };
+        let report = explain(&dp, &snap, None, None, 1.0);
+        assert_eq!(report.crashes.len(), 1);
+        assert_eq!(report.crashes[0].0, "heavy");
+        let top = report.top().expect("a non-nominal top cause");
+        assert!(top.label.contains("heavy"), "top={top:?}");
+        assert_eq!(top.cause, Cause::Crash);
+        assert!(report.verdict.contains("crashed"), "{}", report.verdict);
+        assert!(report.render().contains("crash"), "{}", report.render());
+        let j = crate::util::json::Json::parse(&report.to_json()).unwrap();
+        assert_eq!(
+            j.get("crashes").and_then(|v| v.as_arr()).map(|a| a.len()),
+            Some(1)
+        );
     }
 }

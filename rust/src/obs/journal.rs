@@ -43,6 +43,20 @@ pub enum EventKind {
     /// An external re-plan trigger (e.g. an explain verdict handed to the
     /// adaptive controller by a critical alert).
     ReplanTrigger { reason: String },
+    /// A replica crashed (injected fault or stale heartbeat).
+    ReplicaCrash { stage: String, replica: u64 },
+    /// The recovery supervisor respawned a replica to restore capacity.
+    ReplicaRespawn { stage: String, replica: u64 },
+    /// An orphaned in-flight task was re-dispatched to a live replica.
+    TaskRedispatch { stage: String, attempt: u32 },
+    /// A request-level retry attempt started (`serve::RetryPolicy`).
+    RequestRetry { attempt: u32 },
+    /// A hedged second attempt was fired after the latency trigger.
+    HedgeFired,
+    /// A request was answered by its fallback (graceful degradation).
+    Degraded { reason: String },
+    /// The deterministic fault layer injected a fault.
+    FaultInjected { kind: String },
 }
 
 impl EventKind {
@@ -58,6 +72,13 @@ impl EventKind {
             EventKind::AlertFire { .. } => "alert_fire",
             EventKind::AlertClear { .. } => "alert_clear",
             EventKind::ReplanTrigger { .. } => "replan_trigger",
+            EventKind::ReplicaCrash { .. } => "replica_crash",
+            EventKind::ReplicaRespawn { .. } => "replica_respawn",
+            EventKind::TaskRedispatch { .. } => "task_redispatch",
+            EventKind::RequestRetry { .. } => "request_retry",
+            EventKind::HedgeFired => "hedge_fired",
+            EventKind::Degraded { .. } => "degraded",
+            EventKind::FaultInjected { .. } => "fault_injected",
         }
     }
 }
@@ -115,6 +136,17 @@ impl Event {
                 format!(",\"objective\":{objective:?},\"severity\":{severity:?}")
             }
             EventKind::ReplanTrigger { reason } => format!(",\"reason\":{reason:?}"),
+            EventKind::ReplicaCrash { stage, replica }
+            | EventKind::ReplicaRespawn { stage, replica } => {
+                format!(",\"stage\":{stage:?},\"replica\":{replica}")
+            }
+            EventKind::TaskRedispatch { stage, attempt } => {
+                format!(",\"stage\":{stage:?},\"attempt\":{attempt}")
+            }
+            EventKind::RequestRetry { attempt } => format!(",\"attempt\":{attempt}"),
+            EventKind::HedgeFired => String::new(),
+            EventKind::Degraded { reason } => format!(",\"reason\":{reason:?}"),
+            EventKind::FaultInjected { kind } => format!(",\"kind\":{kind:?}"),
         };
         format!("{{{head}{tail}}}")
     }

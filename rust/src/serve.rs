@@ -17,19 +17,33 @@
 //! `anyhow`: callers can distinguish admission sheds, deadline misses and
 //! input-schema mismatches from genuine execution failures, and react
 //! (back off, retry elsewhere, fix the request) instead of string-matching.
+//!
+//! Request-level resilience lives here too, composed per call through
+//! [`CallOpts`]: bounded retries with exponential backoff
+//! ([`RetryPolicy`]), hedged second attempts after a latency trigger
+//! ([`Hedge`]), and graceful degradation to a configured fallback output
+//! ([`Fallback`], surfaced as [`ServeError::Degraded`] so callers always
+//! know they got a stand-in).  [`Resilient`] wraps any deployment with a
+//! reusable options template plus a cached last-good response.  Every
+//! retry, hedge and degradation is journaled and counted, so the
+//! observability plane can attribute them.
 
 use std::fmt;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
+use crate::anna::{KvsClient, Store};
 use crate::cloudburst::metrics::PlanMetrics;
-use crate::cloudburst::ExecFuture;
+use crate::cloudburst::{ExecFuture, WaitError};
 use crate::dataflow::exec_local;
 use crate::dataflow::operator::ExecCtx;
 use crate::dataflow::table::Table;
 use crate::dataflow::Dataflow;
+use crate::net::NodeId;
+use crate::obs::journal::{self, EventKind};
+use crate::obs::metrics as obs_metrics;
 use crate::obs::trace::{self, Span, SpanKind, TraceCtx};
-use crate::simulation::clock::Clock;
+use crate::simulation::clock::{self, Clock};
 
 /// Typed serving error (replaces bare `anyhow` on the request path).
 #[derive(Debug)]
@@ -46,6 +60,16 @@ pub enum ServeError {
     TypeMismatch(String),
     /// Execution failed (stage error, shutdown, ...).
     Internal(anyhow::Error),
+    /// Every attempt failed but a fallback was configured: `output` is the
+    /// stand-in response ([`Fallback`] default, or [`Resilient`]'s cached
+    /// last-good).  Reported as an error so callers can never mistake a
+    /// degraded answer for a fresh one.
+    Degraded {
+        /// What the final attempt died of.
+        reason: String,
+        /// The fallback response served in place of a real result.
+        output: Table,
+    },
 }
 
 impl ServeError {
@@ -55,6 +79,18 @@ impl ServeError {
 
     pub fn is_shed(&self) -> bool {
         matches!(self, ServeError::Shed)
+    }
+
+    pub fn is_degraded(&self) -> bool {
+        matches!(self, ServeError::Degraded { .. })
+    }
+
+    /// The fallback output, when this is a degraded response.
+    pub fn degraded_output(self) -> Option<Table> {
+        match self {
+            ServeError::Degraded { output, .. } => Some(output),
+            _ => None,
+        }
     }
 }
 
@@ -67,6 +103,9 @@ impl fmt::Display for ServeError {
             }
             ServeError::TypeMismatch(msg) => write!(f, "input type mismatch: {msg}"),
             ServeError::Internal(e) => write!(f, "serving failed: {e:#}"),
+            ServeError::Degraded { reason, .. } => {
+                write!(f, "degraded response (fallback served): {reason}")
+            }
         }
     }
 }
@@ -91,6 +130,87 @@ pub enum Priority {
     Low,
 }
 
+/// Bounded retry with exponential backoff for [`Deployment::call_with`].
+/// The default is a single attempt (no retries) so plain calls behave
+/// exactly as before.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RetryPolicy {
+    /// Total attempts including the first (≥ 1).
+    pub max_attempts: u32,
+    /// Per-attempt wait budget in virtual ms; an attempt exceeding it is
+    /// abandoned (the work keeps executing server-side) and retried.
+    /// `None` lets each attempt run to the overall deadline.
+    pub per_attempt_ms: Option<f64>,
+    /// Base backoff before the second attempt, virtual ms; doubles per
+    /// further attempt (capped at 64x).
+    pub backoff_ms: f64,
+    /// Whether an admission shed counts as retryable.  Off by default:
+    /// hammering an overloaded deployment defeats the shedding guard.
+    pub retry_shed: bool,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy {
+            max_attempts: 1,
+            per_attempt_ms: None,
+            backoff_ms: 10.0,
+            retry_shed: false,
+        }
+    }
+}
+
+impl RetryPolicy {
+    pub fn new(max_attempts: u32) -> RetryPolicy {
+        RetryPolicy { max_attempts: max_attempts.max(1), ..Default::default() }
+    }
+
+    pub fn with_per_attempt_ms(mut self, ms: f64) -> RetryPolicy {
+        self.per_attempt_ms = Some(ms);
+        self
+    }
+
+    pub fn with_backoff_ms(mut self, ms: f64) -> RetryPolicy {
+        self.backoff_ms = ms.max(0.0);
+        self
+    }
+
+    pub fn with_retry_shed(mut self, on: bool) -> RetryPolicy {
+        self.retry_shed = on;
+        self
+    }
+
+    /// True when this policy adds nothing over a single plain wait.
+    fn is_plain(&self) -> bool {
+        self.max_attempts <= 1 && self.per_attempt_ms.is_none()
+    }
+}
+
+/// Hedging policy: fire one backup request when the primary is slow, and
+/// take whichever finishes first ("the tail at scale" defense).  Hedges
+/// go through normal admission, so an overloaded deployment sheds them.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub enum Hedge {
+    /// Never hedge.
+    #[default]
+    Off,
+    /// Hedge once the primary has been in flight this many virtual ms.
+    AfterMs(f64),
+    /// Hedge at the deployment's observed p99 latency (never below
+    /// `floor_ms`; used as-is while the latency window is empty).
+    AfterP99 { floor_ms: f64 },
+}
+
+/// What to serve when every attempt fails ([`ServeError::Degraded`]).
+#[derive(Debug, Clone, Default)]
+pub enum Fallback {
+    /// No fallback: the final error propagates.
+    #[default]
+    None,
+    /// Serve this constant table (e.g. a neutral prediction).
+    Default(Table),
+}
+
 /// Per-request serving options.
 #[derive(Debug, Clone, Default)]
 pub struct CallOpts {
@@ -99,6 +219,12 @@ pub struct CallOpts {
     pub deadline_ms: Option<f64>,
     /// Admission priority under overload.
     pub priority: Priority,
+    /// Retry policy (default: one attempt, no retries).
+    pub retry: RetryPolicy,
+    /// Hedging policy (default: off).
+    pub hedge: Hedge,
+    /// Graceful-degradation fallback (default: none).
+    pub fallback: Fallback,
 }
 
 impl CallOpts {
@@ -113,6 +239,22 @@ impl CallOpts {
 
     pub fn with_priority(mut self, p: Priority) -> CallOpts {
         self.priority = p;
+        self
+    }
+
+    pub fn with_retry(mut self, r: RetryPolicy) -> CallOpts {
+        self.retry = r;
+        self
+    }
+
+    pub fn with_hedge(mut self, h: Hedge) -> CallOpts {
+        self.hedge = h;
+        self
+    }
+
+    /// Degrade to this constant output when every attempt fails.
+    pub fn with_fallback_default(mut self, t: Table) -> CallOpts {
+        self.fallback = Fallback::Default(t);
         self
     }
 }
@@ -140,17 +282,26 @@ pub trait Deployment: Sync {
         crate::obs::slo::SloWatcher::new(&self.label(), self.metrics(), p99_target_ms)
     }
 
-    /// Synchronous call honoring `opts` (deadline enforced on the wait).
+    /// Synchronous call honoring `opts`: deadline enforced on the wait,
+    /// plus any configured [`RetryPolicy`], [`Hedge`] and [`Fallback`].
+    /// With default resilience options this is exactly the old
+    /// single-attempt wait (no clone, no extra bookkeeping).
     fn call_with(&self, input: Table, opts: &CallOpts) -> Result<Table, ServeError> {
-        let fut = self.call_async(input, opts)?;
-        match opts.deadline_ms {
-            None => fut.result().map_err(ServeError::internal),
-            Some(ms) => match fut.result_within(ms) {
-                Ok(Some(t)) => Ok(t),
-                Ok(None) => Err(ServeError::DeadlineExceeded { deadline_ms: ms }),
-                Err(e) => Err(ServeError::Internal(e)),
-            },
+        if opts.retry.is_plain()
+            && matches!(opts.hedge, Hedge::Off)
+            && matches!(opts.fallback, Fallback::None)
+        {
+            let fut = self.call_async(input, opts)?;
+            return match opts.deadline_ms {
+                None => fut.result().map_err(ServeError::internal),
+                Some(ms) => match fut.result_within(ms) {
+                    Ok(Some(t)) => Ok(t),
+                    Ok(None) => Err(ServeError::DeadlineExceeded { deadline_ms: ms }),
+                    Err(e) => Err(ServeError::Internal(e)),
+                },
+            };
         }
+        resilient_call(self, input, opts)
     }
 
     /// Synchronous call with default options.
@@ -171,6 +322,222 @@ pub trait Deployment: Sync {
         futs.into_iter()
             .map(|f| f.and_then(|fut| fut.result().map_err(ServeError::internal)))
             .collect()
+    }
+}
+
+/// Shared context for one resilient call (keeps [`wait_attempt`]'s
+/// signature small).
+struct AttemptCtx<'a, D: ?Sized> {
+    dep: &'a D,
+    input: &'a Table,
+    opts: &'a CallOpts,
+    label: &'a str,
+    clock: Clock,
+    hedge_total: obs_metrics::Counter,
+}
+
+/// Outcome of waiting out one attempt (a primary and possibly a hedge).
+enum AttemptWait {
+    /// A future completed; the flag is true when the hedge won the race.
+    Done(Table, bool),
+    /// Every in-flight future failed or disconnected.
+    Failed(anyhow::Error),
+    /// The attempt budget elapsed; the futures were abandoned (their work
+    /// continues server-side, only the wait stops).
+    TimedOut,
+}
+
+/// Wait on `primary` within `budget_ms`, firing at most one hedge after
+/// `hedge_after_ms`, then racing the two with short alternating polls.
+fn wait_attempt<D: Deployment + ?Sized>(
+    ctx: &AttemptCtx<'_, D>,
+    primary: ExecFuture,
+    budget_ms: Option<f64>,
+    hedge_after_ms: Option<f64>,
+) -> AttemptWait {
+    // Alternation quantum while two futures race, and the longest single
+    // blocking wait before the loop re-checks (both virtual ms).
+    const SLICE_MS: f64 = 2.0;
+    const MAX_WAIT_MS: f64 = 60_000.0;
+    let t0 = ctx.clock.now_ms();
+    let mut primary = Some(primary);
+    let mut hedge: Option<ExecFuture> = None;
+    let mut hedge_pending = hedge_after_ms;
+    let mut exec_err: Option<anyhow::Error> = None;
+    let mut round = 0u64;
+    loop {
+        let spent = ctx.clock.now_ms() - t0;
+        if budget_ms.is_some_and(|b| spent >= b) {
+            return AttemptWait::TimedOut;
+        }
+        if primary.is_none() && hedge.is_none() {
+            return AttemptWait::Failed(exec_err.unwrap_or_else(|| {
+                anyhow::anyhow!("cluster dropped the request (shutdown?)")
+            }));
+        }
+        // Fire the hedge once its trigger elapses.  Best-effort: a shed
+        // or submit error simply means this attempt goes unhedged.
+        if hedge_pending.is_some_and(|h| spent >= h) && primary.is_some() {
+            hedge_pending = None;
+            if let Ok(f) = ctx.dep.call_async(ctx.input.clone(), ctx.opts) {
+                ctx.hedge_total.inc();
+                journal::record(ctx.clock.now_ms(), ctx.label, EventKind::HedgeFired);
+                hedge = Some(f);
+            }
+        }
+        let mut slice = MAX_WAIT_MS;
+        if let Some(b) = budget_ms {
+            slice = slice.min(b - spent);
+        }
+        if let Some(h) = hedge_pending {
+            slice = slice.min((h - spent).max(0.0));
+        }
+        if hedge.is_some() && primary.is_some() {
+            slice = slice.min(SLICE_MS);
+        }
+        let poll_hedge = hedge.is_some() && (primary.is_none() || round % 2 == 1);
+        round += 1;
+        let res = {
+            let fut = if poll_hedge {
+                hedge.as_ref().expect("hedge in flight")
+            } else {
+                primary.as_ref().expect("primary in flight")
+            };
+            fut.wait_virtual(slice.max(0.0))
+        };
+        match res {
+            Ok(Ok(t)) => return AttemptWait::Done(t, poll_hedge),
+            Ok(Err(e)) => {
+                exec_err = Some(e);
+                if poll_hedge {
+                    hedge = None;
+                } else {
+                    primary = None;
+                }
+            }
+            Err(WaitError::Timeout) => {}
+            Err(WaitError::Disconnected) => {
+                if poll_hedge {
+                    hedge = None;
+                } else {
+                    primary = None;
+                }
+            }
+        }
+    }
+}
+
+/// The retry/hedge/degrade engine behind [`Deployment::call_with`] when
+/// any resilience option is set.  Free-standing and `?Sized`-generic so
+/// the trait's default method can hand itself over.
+fn resilient_call<D: Deployment + ?Sized>(
+    dep: &D,
+    input: Table,
+    opts: &CallOpts,
+) -> Result<Table, ServeError> {
+    let call_clock = Clock::new();
+    let label = dep.label();
+    let reg = obs_metrics::global();
+    let retry_total = reg.counter("serve_retry_total", &[("deployment", label.as_str())]);
+    let hedge_win_total =
+        reg.counter("serve_hedge_win_total", &[("deployment", label.as_str())]);
+    let degraded_total =
+        reg.counter("serve_degraded_total", &[("deployment", label.as_str())]);
+    // Resolve the hedge trigger once per call: a fixed latency, or the
+    // deployment's observed p99 (floored) when history exists.
+    let hedge_after_ms = match opts.hedge {
+        Hedge::Off => None,
+        Hedge::AfterMs(ms) => Some(ms.max(0.0)),
+        Hedge::AfterP99 { floor_ms } => {
+            let sketch = dep.metrics().sketch();
+            if sketch.is_empty() {
+                Some(floor_ms)
+            } else {
+                Some(sketch.p99().max(floor_ms))
+            }
+        }
+    };
+    let ctx = AttemptCtx {
+        dep,
+        input: &input,
+        opts,
+        label: label.as_str(),
+        clock: call_clock,
+        hedge_total: reg.counter("serve_hedge_total", &[("deployment", label.as_str())]),
+    };
+    let max_attempts = opts.retry.max_attempts.max(1);
+    let mut last_err: Option<ServeError> = None;
+    for attempt in 1..=max_attempts {
+        if attempt > 1 {
+            let backoff =
+                opts.retry.backoff_ms.max(0.0) * (1u32 << (attempt - 2).min(6)) as f64;
+            clock::sleep_ms(backoff);
+        }
+        let spent = call_clock.now_ms();
+        let overall_left = opts.deadline_ms.map(|d| d - spent);
+        if overall_left.is_some_and(|l| l <= 0.0) {
+            last_err = Some(ServeError::DeadlineExceeded {
+                deadline_ms: opts.deadline_ms.unwrap_or_default(),
+            });
+            break;
+        }
+        if attempt > 1 {
+            retry_total.inc();
+            journal::record(call_clock.now_ms(), &label, EventKind::RequestRetry { attempt });
+        }
+        let budget_ms = match (opts.retry.per_attempt_ms, overall_left) {
+            (Some(p), Some(o)) => Some(p.min(o)),
+            (Some(p), None) => Some(p),
+            (None, o) => o,
+        };
+        let primary = match dep.call_async(input.clone(), opts) {
+            Ok(f) => f,
+            Err(e @ ServeError::TypeMismatch(_)) => return Err(e),
+            Err(ServeError::Shed) if !opts.retry.retry_shed => {
+                last_err = Some(ServeError::Shed);
+                break;
+            }
+            Err(e) => {
+                last_err = Some(e);
+                continue;
+            }
+        };
+        match wait_attempt(&ctx, primary, budget_ms, hedge_after_ms) {
+            AttemptWait::Done(t, from_hedge) => {
+                if from_hedge {
+                    hedge_win_total.inc();
+                }
+                return Ok(t);
+            }
+            AttemptWait::Failed(e) => last_err = Some(ServeError::Internal(e)),
+            AttemptWait::TimedOut => {
+                let now = call_clock.now_ms();
+                if opts.deadline_ms.is_some_and(|d| now >= d) {
+                    last_err = Some(ServeError::DeadlineExceeded {
+                        deadline_ms: opts.deadline_ms.unwrap_or_default(),
+                    });
+                    break;
+                }
+                last_err = Some(ServeError::DeadlineExceeded {
+                    deadline_ms: budget_ms.unwrap_or_default(),
+                });
+            }
+        }
+    }
+    let err = last_err
+        .unwrap_or_else(|| ServeError::Internal(anyhow::anyhow!("no attempt ran")));
+    match &opts.fallback {
+        Fallback::None => Err(err),
+        Fallback::Default(t) => {
+            degraded_total.inc();
+            let reason = err.to_string();
+            journal::record(
+                call_clock.now_ms(),
+                &label,
+                EventKind::Degraded { reason: reason.clone() },
+            );
+            Err(ServeError::Degraded { reason, output: t.clone() })
+        }
     }
 }
 
@@ -256,6 +623,128 @@ impl Deployment for LocalServer {
     }
 }
 
+/// A [`Deployment`] wrapper that applies a resilience [`CallOpts`]
+/// template to every call and (optionally) degrades to the *last good*
+/// response — cached through an [`anna`](crate::anna) client — when the
+/// wrapped deployment fails outright.  Explicit per-call options still
+/// win over the template, field by field.
+pub struct Resilient<D> {
+    inner: D,
+    template: CallOpts,
+    kvs: KvsClient,
+    key: String,
+    use_last_good: bool,
+    clock: Clock,
+}
+
+impl<D: Deployment> Resilient<D> {
+    pub fn new(inner: D) -> Resilient<D> {
+        let key = format!("lastgood:{}", inner.label());
+        Resilient {
+            inner,
+            template: CallOpts::default(),
+            kvs: KvsClient::direct(Arc::new(Store::new(1)), NodeId::CLIENT),
+            key,
+            use_last_good: false,
+            clock: Clock::new(),
+        }
+    }
+
+    /// Apply `template` to calls that don't override it.
+    pub fn with_opts(mut self, template: CallOpts) -> Resilient<D> {
+        self.template = template;
+        self
+    }
+
+    /// Cache each successful response and serve it (as
+    /// [`ServeError::Degraded`]) when a later call fails outright.
+    pub fn with_last_good(mut self) -> Resilient<D> {
+        self.use_last_good = true;
+        self
+    }
+
+    /// Use `kvs` for the last-good cache instead of a private store (lets
+    /// callers share the cluster's KVS / inspect the cached entry).
+    pub fn with_kvs(mut self, kvs: KvsClient) -> Resilient<D> {
+        self.kvs = kvs;
+        self
+    }
+
+    /// Template fields apply wherever the per-call options kept defaults.
+    fn merged(&self, opts: &CallOpts) -> CallOpts {
+        let mut m = self.template.clone();
+        if opts.deadline_ms.is_some() {
+            m.deadline_ms = opts.deadline_ms;
+        }
+        if opts.priority != Priority::default() {
+            m.priority = opts.priority;
+        }
+        if opts.retry != RetryPolicy::default() {
+            m.retry = opts.retry;
+        }
+        if opts.hedge != Hedge::Off {
+            m.hedge = opts.hedge;
+        }
+        if !matches!(opts.fallback, Fallback::None) {
+            m.fallback = opts.fallback.clone();
+        }
+        m
+    }
+}
+
+impl<D: Deployment> Deployment for Resilient<D> {
+    fn label(&self) -> String {
+        self.inner.label()
+    }
+
+    fn call_async(&self, input: Table, opts: &CallOpts) -> Result<ExecFuture, ServeError> {
+        self.inner.call_async(input, opts)
+    }
+
+    fn metrics(&self) -> Arc<PlanMetrics> {
+        self.inner.metrics()
+    }
+
+    fn call_with(&self, input: Table, opts: &CallOpts) -> Result<Table, ServeError> {
+        let merged = self.merged(opts);
+        match self.inner.call_with(input, &merged) {
+            Ok(t) => {
+                if self.use_last_good {
+                    self.kvs.put_free(&self.key, t.encode());
+                }
+                Ok(t)
+            }
+            Err(e @ ServeError::Degraded { .. }) => Err(e),
+            Err(e) if self.use_last_good && !e.is_shed() => {
+                let cached = self
+                    .kvs
+                    .get(&self.key)
+                    .and_then(|b| Table::decode(b.as_slice()).ok());
+                match cached {
+                    Some(t) => {
+                        let label = self.label();
+                        obs_metrics::global()
+                            .counter(
+                                "serve_degraded_total",
+                                &[("deployment", label.as_str())],
+                            )
+                            .inc();
+                        let reason = e.to_string();
+                        journal::record(
+                            self.clock.now_ms(),
+                            &label,
+                            EventKind::Degraded { reason: reason.clone() },
+                        );
+                        Err(ServeError::Degraded { reason, output: t })
+                    }
+                    None => Err(e),
+                }
+            }
+            Err(e) => Err(e),
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -324,5 +813,153 @@ mod tests {
                 .contains("5ms")
         );
         assert!(ServeError::Shed.is_shed());
+        let d = ServeError::Degraded { reason: "boom".into(), output: input(1) };
+        assert!(d.is_degraded());
+        assert!(format!("{d}").contains("boom"));
+        assert_eq!(d.degraded_output().unwrap().len(), 1);
+    }
+
+    /// Test deployment: fails its first `fail_first` submissions (and any
+    /// while `failing` is set), with configurable service delays.
+    struct Flaky {
+        label: String,
+        fail_first: u64,
+        delay_first_ms: f64,
+        delay_rest_ms: f64,
+        calls: AtomicU64,
+        failing: std::sync::atomic::AtomicBool,
+        metrics: Arc<PlanMetrics>,
+    }
+
+    impl Flaky {
+        fn new(label: &str, fail_first: u64) -> Flaky {
+            Flaky {
+                label: label.into(),
+                fail_first,
+                delay_first_ms: 0.0,
+                delay_rest_ms: 0.0,
+                calls: AtomicU64::new(0),
+                failing: Default::default(),
+                metrics: Arc::new(PlanMetrics::default()),
+            }
+        }
+    }
+
+    impl Deployment for Flaky {
+        fn label(&self) -> String {
+            self.label.clone()
+        }
+
+        fn call_async(
+            &self,
+            input: Table,
+            _opts: &CallOpts,
+        ) -> Result<ExecFuture, ServeError> {
+            let n = self.calls.fetch_add(1, Ordering::Relaxed);
+            let fail = n < self.fail_first || self.failing.load(Ordering::Relaxed);
+            let delay =
+                if n == 0 { self.delay_first_ms } else { self.delay_rest_ms };
+            Ok(ExecFuture::spawn(0.0, move || {
+                if delay > 0.0 {
+                    clock::sleep_ms(delay);
+                }
+                if fail {
+                    anyhow::bail!("injected flaky failure #{n}")
+                }
+                Ok(input)
+            }))
+        }
+
+        fn metrics(&self) -> Arc<PlanMetrics> {
+            self.metrics.clone()
+        }
+    }
+
+    #[test]
+    fn retry_recovers_from_transient_failures() {
+        let d = Flaky::new("serve_retry_t", 2);
+        let opts = CallOpts::new()
+            .with_retry(RetryPolicy::new(3).with_backoff_ms(0.5));
+        let out = d.call_with(input(2), &opts).unwrap();
+        assert_eq!(out.len(), 2);
+        assert_eq!(d.calls.load(Ordering::Relaxed), 3);
+        let retries = obs_metrics::global()
+            .counter("serve_retry_total", &[("deployment", "serve_retry_t")])
+            .get();
+        assert_eq!(retries, 2);
+    }
+
+    #[test]
+    fn exhausted_attempts_degrade_to_default() {
+        let d = Flaky::new("serve_degrade_t", u64::MAX);
+        let fb = input(1);
+        let opts = CallOpts::new()
+            .with_retry(RetryPolicy::new(2).with_backoff_ms(0.5))
+            .with_fallback_default(fb);
+        match d.call_with(input(2), &opts) {
+            Err(ServeError::Degraded { reason, output }) => {
+                assert!(reason.contains("flaky"), "{reason}");
+                assert_eq!(output.len(), 1);
+            }
+            other => panic!("expected Degraded, got {other:?}"),
+        }
+        assert!(journal::events_for("serve_degrade_t")
+            .iter()
+            .any(|e| matches!(e.kind, EventKind::Degraded { .. })));
+    }
+
+    #[test]
+    fn hedge_fires_and_second_attempt_wins() {
+        let mut d = Flaky::new("serve_hedge_t", 0);
+        d.delay_first_ms = 40.0;
+        d.delay_rest_ms = 1.0;
+        let opts = CallOpts::new().with_hedge(Hedge::AfterMs(5.0));
+        let out = d.call_with(input(2), &opts).unwrap();
+        assert_eq!(out.len(), 2);
+        assert_eq!(d.calls.load(Ordering::Relaxed), 2, "hedge not fired");
+        let hedges = obs_metrics::global()
+            .counter("serve_hedge_total", &[("deployment", "serve_hedge_t")])
+            .get();
+        assert_eq!(hedges, 1);
+    }
+
+    #[test]
+    fn overall_deadline_bounds_retries() {
+        let d = Flaky::new("serve_deadline_t", u64::MAX);
+        let opts = CallOpts::new()
+            .with_deadline_ms(8.0)
+            .with_retry(RetryPolicy::new(10).with_backoff_ms(10.0));
+        match d.call_with(input(1), &opts) {
+            Err(ServeError::DeadlineExceeded { deadline_ms }) => {
+                assert_eq!(deadline_ms, 8.0)
+            }
+            other => panic!("expected DeadlineExceeded, got {other:?}"),
+        }
+        // Far fewer than 10 attempts fit in an 8ms deadline.
+        assert!(d.calls.load(Ordering::Relaxed) < 4);
+    }
+
+    #[test]
+    fn resilient_serves_last_good_on_failure() {
+        let d = Resilient::new(Flaky::new("serve_lastgood_t", 0)).with_last_good();
+        let first = d.call(input(3)).unwrap();
+        assert_eq!(first.len(), 3);
+        d.inner.failing.store(true, Ordering::Relaxed);
+        match d.call(input(2)) {
+            Err(ServeError::Degraded { output, .. }) => {
+                assert_eq!(output.len(), first.len());
+            }
+            other => panic!("expected Degraded, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn resilient_template_applies_to_plain_calls() {
+        let d = Resilient::new(Flaky::new("serve_template_t", 2)).with_opts(
+            CallOpts::new().with_retry(RetryPolicy::new(3).with_backoff_ms(0.5)),
+        );
+        let out = d.call(input(2)).unwrap();
+        assert_eq!(out.len(), 2);
+        assert_eq!(d.inner.calls.load(Ordering::Relaxed), 3);
     }
 }
