@@ -12,14 +12,15 @@
 //! decode) on both layouts, then runs the model-free `synthetic_cascade`
 //! pipeline end-to-end through a cluster for p50/p99.  Emits
 //! `BENCH_dataplane.json` so the perf trajectory tracks the data plane
-//! across PRs.
+//! across PRs; in smoke mode the golden baseline is *enforced* — a
+//! columnar-plane regression past the (wide) tolerances fails the run.
 
 mod bench_common;
 
 use std::collections::HashSet;
 use std::time::Instant;
 
-use bench_common::{header, jnum, json_row, jstr, scaled, write_bench_json};
+use bench_common::{enforce_baseline, header, jnum, json_row, jstr, scaled, write_bench_json};
 use cloudflow::cloudburst::Cluster;
 use cloudflow::dataflow::compiler::compile;
 use cloudflow::dataflow::exec_local::{apply_filter, apply_union};
@@ -210,4 +211,5 @@ fn main() {
     ]));
 
     write_bench_json("dataplane", &rows_json);
+    enforce_baseline("dataplane", &rows_json);
 }

@@ -1,0 +1,330 @@
+//! Fused Expr-kernel bench: single-pass vectorized kernels vs staged
+//! operator execution vs the row-at-a-time reference plane.
+//!
+//! Two scalar-heavy chain shapes, matching the serving workloads:
+//! * **cascade_chain** — rescale → confidence gate → conditional tag →
+//!   compound gate (the image-cascade control path once models are
+//!   stripped to their Expr skeletons);
+//! * **string_chain** — string assembly → prefix routing → rescale (the
+//!   NMT-style pre/post-processing shape).
+//!
+//! For each shape it measures requests/s three ways: staged (one
+//! `apply_op` per operator, materializing every intermediate table), a
+//! single [`FusedKernel`] built by `FusedKernel::from_ops` (one pass,
+//! combined selection vector, no intermediates), and the `rowref`
+//! row-at-a-time oracle.  It also times the compiler's pass pipeline
+//! (`rewrite_flow_journaled` under `OptFlags::all()`) and runs the
+//! cascade chain end-to-end through a cluster with kernel fusion on and
+//! off for per-request p50/p99.
+//!
+//! Byte-identity of all three execution strategies (including on an
+//! empty input) is asserted up front — a perf win that changes results
+//! is a bug, not a win.  Emits `BENCH_fusion_kernels.json`; the golden
+//! baseline is report-only (`check_baseline`).
+
+mod bench_common;
+
+use std::time::Instant;
+
+use bench_common::{
+    check_baseline, header, jbool, jnum, json_row, jstr, scaled, standard_flags,
+    write_bench_json,
+};
+use cloudflow::cloudburst::Cluster;
+use cloudflow::dataflow::compiler::rewrite_flow_journaled;
+use cloudflow::dataflow::exec_local::apply_op;
+use cloudflow::dataflow::expr::{col, lit};
+use cloudflow::dataflow::operator::{
+    CmpOp, ExecCtx, Func, FuncBody, OpKind, PredBody, Predicate,
+};
+use cloudflow::dataflow::rowref::{self, RowTable};
+use cloudflow::dataflow::table::{DType, Schema, Table, Value};
+use cloudflow::dataflow::v2::Flow;
+use cloudflow::dataflow::FusedKernel;
+use cloudflow::util::rng::Rng;
+use cloudflow::util::stats::fmt_ms;
+use cloudflow::workloads::closed_loop;
+
+const ROWS_PER_REQUEST: usize = 8;
+
+fn scalar_schema() -> Schema {
+    Schema::new(vec![
+        ("name", DType::Str),
+        ("conf", DType::F64),
+        ("n", DType::I64),
+    ])
+}
+
+fn scalar_table(seed: u64, rows: usize) -> Table {
+    let mut rng = Rng::new(seed);
+    let mut t = Table::new(scalar_schema());
+    for i in 0..rows {
+        t.push_fresh(vec![
+            Value::Str(format!("k{}-{i}", rng.below(4))),
+            Value::F64(rng.f64()),
+            Value::I64(rng.range(-50, 50)),
+        ])
+        .unwrap();
+    }
+    t
+}
+
+/// Cascade-shaped chain: rescale, gate, conditional tag, compound gate.
+/// A staged executor materializes three intermediate tables for this.
+fn cascade_chain() -> Vec<OpKind> {
+    vec![
+        OpKind::Map(Func::select(
+            "rescale",
+            vec![
+                ("name", col("name")),
+                ("conf", col("conf") * lit(0.9) + lit(0.05)),
+                ("n", col("n") + lit(1i64)),
+            ],
+        )),
+        OpKind::Filter(Predicate::threshold("conf", CmpOp::Lt, 0.8)),
+        OpKind::Map(Func::select(
+            "tag",
+            vec![
+                (
+                    "name",
+                    col("conf")
+                        .ge(lit(0.4))
+                        .if_then_else(lit("hot-").concat(col("name")), col("name")),
+                ),
+                ("conf", col("conf")),
+                ("n", col("name").length() + col("n")),
+            ],
+        )),
+        OpKind::Filter(Predicate::expr(
+            col("conf").ge(lit(0.1)).and(col("n").gt(lit(-40i64))),
+        )),
+    ]
+}
+
+/// NMT-shaped chain: string assembly, prefix routing, rescale.
+fn string_chain() -> Vec<OpKind> {
+    vec![
+        OpKind::Map(Func::select(
+            "assemble",
+            vec![
+                ("name", lit("src:").concat(col("name")).concat(lit("/"))),
+                ("conf", col("conf")),
+                ("n", col("name").length()),
+            ],
+        )),
+        OpKind::Filter(Predicate::expr(col("name").starts_with("src:k"))),
+        OpKind::Map(Func::select(
+            "route",
+            vec![
+                ("name", col("name")),
+                ("conf", col("conf") * lit(2.0)),
+                ("n", col("n") * lit(3i64)),
+            ],
+        )),
+    ]
+}
+
+fn staged_run(ctx: &ExecCtx, ops: &[OpKind], input: Table) -> Table {
+    let mut cur = input;
+    for op in ops {
+        cur = apply_op(ctx, op, vec![cur]).unwrap();
+    }
+    cur
+}
+
+fn rowref_run(ops: &[OpKind], input: &Table) -> Table {
+    let mut cur = RowTable::from_table(input);
+    for op in ops {
+        cur = match op {
+            OpKind::Map(f) => match &f.body {
+                FuncBody::Select(binds) => rowref::map_select(&cur, binds).unwrap(),
+                _ => unreachable!("chains contain only Select maps"),
+            },
+            OpKind::Filter(p) => match &p.body {
+                PredBody::Expr(e) => rowref::filter_expr(&cur, e).unwrap(),
+                PredBody::Threshold { column, op, value } => {
+                    rowref::filter_threshold(&cur, column, *op, *value).unwrap()
+                }
+                PredBody::Rust(_) => unreachable!("chains contain no opaque predicates"),
+            },
+            _ => unreachable!("chains contain only maps and filters"),
+        };
+    }
+    cur.to_table().unwrap()
+}
+
+/// Byte-identity of staged, fused and row-oracle execution on `input`.
+fn equivalent(ops: &[OpKind], input: &Table) -> (bool, bool) {
+    let ctx = ExecCtx::local();
+    let staged = staged_run(&ctx, ops, input.clone());
+    let kernel = FusedKernel::from_ops(ops).unwrap();
+    let fused = kernel.execute(input.clone()).unwrap();
+    let oracle = rowref_run(ops, input);
+    (
+        fused.encode() == staged.encode(),
+        oracle.encode() == staged.encode(),
+    )
+}
+
+/// Time `f` over `iters` runs; returns requests/s.
+fn reqs_per_s<F: FnMut()>(iters: usize, mut f: F) -> f64 {
+    for _ in 0..(iters / 10).max(1) {
+        f(); // warm-up
+    }
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    iters as f64 / t0.elapsed().as_secs_f64()
+}
+
+fn micro(pipeline: &str, ops: &[OpKind], input: &Table, iters: usize) -> String {
+    let ctx = ExecCtx::local();
+    let kernel = FusedKernel::from_ops(ops).unwrap();
+
+    let staged = reqs_per_s(iters, || {
+        std::hint::black_box(staged_run(&ctx, ops, input.clone()));
+    });
+    let fused = reqs_per_s(iters, || {
+        std::hint::black_box(kernel.execute(input.clone()).unwrap());
+    });
+    let row = reqs_per_s(iters, || {
+        std::hint::black_box(rowref_run(ops, input));
+    });
+
+    println!(
+        "{pipeline:<14} staged={staged:>10.0} req/s  fused={fused:>10.0} req/s  \
+         rowref={row:>10.0} req/s  fused/staged={:.2}x",
+        fused / staged
+    );
+    json_row(&[
+        ("case", jstr(&format!("micro_{pipeline}"))),
+        ("staged_req_per_s", jnum(staged)),
+        ("fused_req_per_s", jnum(fused)),
+        ("rowref_req_per_s", jnum(row)),
+        ("fused_vs_staged_x", jnum(fused / staged)),
+        ("fused_vs_rowref_x", jnum(fused / row)),
+    ])
+}
+
+fn e2e(label: &str, opts: &cloudflow::dataflow::OptFlags, requests: usize) -> (f64, f64, f64) {
+    let mut fl = Flow::source("fusion_kernels", scalar_schema());
+    for op in cascade_chain() {
+        fl = match op {
+            OpKind::Map(f) => fl.map(f).unwrap(),
+            OpKind::Filter(p) => fl.filter(p).unwrap(),
+            _ => unreachable!(),
+        };
+    }
+    let plan = fl.compile(opts).unwrap();
+    let cluster = Cluster::new(None);
+    let h = cluster.register(plan, 2).unwrap();
+    let dep = cluster.deployment(h).unwrap();
+    let input = |i: usize| scalar_table(0xF00D + i as u64, ROWS_PER_REQUEST);
+    closed_loop(&dep, 4, requests / 4 + 2, input);
+    let mut r = closed_loop(&dep, 4, requests, |i| input(i + 1000));
+    let (med, p99, rps) = r.report();
+    println!(
+        "{label:<28} p50={:<9} p99={:<9} {rps:.1} req/s",
+        fmt_ms(med),
+        fmt_ms(p99)
+    );
+    (med, p99, rps)
+}
+
+fn main() {
+    header("fusion kernels: one-pass Expr chains vs staged execution");
+    let mut rows: Vec<String> = Vec::new();
+
+    // -- correctness gate: all three strategies byte-identical ----------
+    let sample = scalar_table(0xFE11, 64);
+    let empty = Table::new(scalar_schema());
+    let mut fused_ok = true;
+    let mut rowref_ok = true;
+    let mut empty_ok = true;
+    for ops in [cascade_chain(), string_chain()] {
+        let (f, r) = equivalent(&ops, &sample);
+        fused_ok &= f;
+        rowref_ok &= r;
+        let (fe, re) = equivalent(&ops, &empty);
+        empty_ok &= fe && re;
+    }
+    assert!(
+        fused_ok && rowref_ok && empty_ok,
+        "execution strategies disagree (fused={fused_ok} rowref={rowref_ok} empty={empty_ok})"
+    );
+    println!("staged / fused / rowref byte-identical (incl. empty input): ok");
+    rows.push(json_row(&[
+        ("case", jstr("equivalence")),
+        ("fused_matches_staged", jbool(fused_ok)),
+        ("rowref_matches_staged", jbool(rowref_ok)),
+        ("empty_input_ok", jbool(empty_ok)),
+    ]));
+
+    // -- single-request kernel throughput -------------------------------
+    let iters = scaled(2_000);
+    let small = scalar_table(0xFE12, ROWS_PER_REQUEST);
+    rows.push(micro("cascade_chain", &cascade_chain(), &small, iters));
+    rows.push(micro("string_chain", &string_chain(), &small, iters));
+
+    // -- pass-pipeline compile cost + fixpoint --------------------------
+    {
+        let mut fl = Flow::source("fusion_kernels", scalar_schema());
+        for op in cascade_chain() {
+            fl = match op {
+                OpKind::Map(f) => fl.map(f).unwrap(),
+                OpKind::Filter(p) => fl.filter(p).unwrap(),
+                _ => unreachable!(),
+            };
+        }
+        let legacy = fl.into_dataflow().unwrap();
+        let opts = standard_flags();
+        let (rewritten, journal) = rewrite_flow_journaled(&legacy, &opts).unwrap();
+        let (_, j2) = rewrite_flow_journaled(&rewritten, &opts).unwrap();
+        let n = scaled(400);
+        let t0 = Instant::now();
+        for _ in 0..n {
+            std::hint::black_box(rewrite_flow_journaled(&legacy, &opts).unwrap());
+        }
+        let ms = t0.elapsed().as_secs_f64() * 1e3 / n as f64;
+        println!(
+            "pass pipeline: {ms:.3} ms/flow, {} rewrites, fixpoint clean: {}",
+            journal.n_changes(),
+            j2.n_changes() == 0
+        );
+        rows.push(json_row(&[
+            ("case", jstr("pass_manager")),
+            ("rewrite_ms", jnum(ms)),
+            ("rewrites", jnum(journal.n_changes() as f64)),
+            ("fixpoint_clean", jbool(j2.n_changes() == 0)),
+        ]));
+    }
+
+    // -- end-to-end per-request latency through a cluster ---------------
+    header("fusion kernels: cascade chain end-to-end");
+    let requests = scaled(160);
+    let (s_med, s_p99, s_rps) = e2e(
+        "staged (kernel fusion off)",
+        &standard_flags().without_kernel_fusion(),
+        requests,
+    );
+    let (f_med, f_p99, f_rps) = e2e("fused kernels", &standard_flags(), requests);
+    println!(
+        "\nfused vs staged: p50 {:.2}x  p99 {:.2}x  throughput {:.2}x",
+        s_med / f_med,
+        s_p99 / f_p99,
+        f_rps / s_rps
+    );
+    rows.push(json_row(&[
+        ("case", jstr("e2e_cascade")),
+        ("staged_p50_ms", jnum(s_med)),
+        ("staged_p99_ms", jnum(s_p99)),
+        ("fused_p50_ms", jnum(f_med)),
+        ("fused_p99_ms", jnum(f_p99)),
+        ("p50_speedup_x", jnum(s_med / f_med)),
+        ("throughput_x", jnum(f_rps / s_rps)),
+    ]));
+
+    write_bench_json("fusion_kernels", &rows);
+    let _ = check_baseline("fusion_kernels", &rows);
+}

@@ -1,7 +1,12 @@
 //! The Cloudflow compiler (paper §4): dataflow→dataflow rewrites followed
 //! by lowering to a Cloudburst execution [`Plan`].
 //!
-//! Rewrites (all automatic; `OptFlags` selects which are enabled):
+//! The flow-level rewrites (competitive replication, canonicalize, CSE,
+//! DCE, filter pushdown, projection pruning) live in
+//! [`passes`](super::passes) and run under its
+//! [`PassManager`](super::passes::PassManager) via [`rewrite_flow`];
+//! this module owns the stage-level lowering (all automatic; `OptFlags`
+//! selects which optimizations are enabled):
 //! * **Operator fusion** — maximal single-input chains collapse into one
 //!   stage (one Cloudburst function ⇒ one placement, no data movement),
 //!   optionally refusing to fuse across resource classes.
@@ -22,9 +27,8 @@ use std::collections::HashMap;
 
 use crate::simulation::gpu::Device;
 
-use super::expr::Expr;
-use super::flow::{Dataflow, NodeRef};
-use super::operator::{AggFn, Arity, Func, FuncBody, LookupKey, OpKind};
+use super::flow::Dataflow;
+use super::operator::{Arity, LookupKey, OpKind};
 
 /// Optimization selection (paper §4: the user only selects *which*
 /// optimizations to enable; application is automatic).
@@ -56,6 +60,12 @@ pub struct OptFlags {
     /// so unused payloads never cross a stage boundary.  Closure ops
     /// conservatively count as reading everything.
     pub projection_pruning: bool,
+    /// Compile maximal runs of Expr-based map/filter ops inside each fused
+    /// stage into one vectorized [`FusedKernel`](super::fused::FusedKernel):
+    /// a single pass over the input columns with a combined selection
+    /// vector and no intermediate `Table` materialization (data-plane
+    /// fusion, on top of the stage-level colocation `fusion` provides).
+    pub kernel_fusion: bool,
 }
 
 impl Default for OptFlags {
@@ -75,21 +85,27 @@ impl OptFlags {
             batching: false,
             filter_pushdown: false,
             projection_pruning: false,
+            kernel_fusion: false,
         }
     }
 
-    /// The standard optimized configuration: fusion, locality dispatch,
-    /// batching, filter pushdown, and projection pruning.
+    /// The standard optimized configuration: fusion (stage + kernel),
+    /// locality dispatch, batching, filter pushdown, and projection
+    /// pruning.
     pub fn all() -> Self {
-        OptFlags { fusion: true, ..OptFlags::none() }
+        OptFlags::none()
+            .with_fusion()
             .with_locality()
             .with_batching()
             .with_pushdown()
             .with_pruning()
     }
 
+    /// Stage fusion *and* kernel fusion: fused stages additionally compile
+    /// their Expr-based op runs into single-pass vectorized kernels.
     pub fn with_fusion(mut self) -> Self {
         self.fusion = true;
+        self.kernel_fusion = true;
         self
     }
 
@@ -127,6 +143,15 @@ impl OptFlags {
 
     pub fn without_fusion(mut self) -> Self {
         self.fusion = false;
+        self.kernel_fusion = false;
+        self
+    }
+
+    /// Keep stage fusion (colocation) but skip the vectorized kernel
+    /// compilation — each fused op still materializes its intermediate
+    /// table.  The staged baseline for the kernel benches.
+    pub fn without_kernel_fusion(mut self) -> Self {
+        self.kernel_fusion = false;
         self
     }
 
@@ -313,6 +338,14 @@ pub fn compile(flow: &Dataflow, opts: &OptFlags) -> Result<Plan> {
         );
     }
 
+    // Kernel fusion: inside each stage, compile maximal runs of Expr-based
+    // map/filter ops into one vectorized single-pass kernel.
+    if opts.kernel_fusion {
+        for st in stages.iter_mut() {
+            fuse_kernels_in_stage(st)?;
+        }
+    }
+
     // Segment split for dynamic dispatch.
     let segments = if opts.locality_dispatch {
         split_segments(stages, output)?
@@ -328,15 +361,24 @@ pub fn compile(flow: &Dataflow, opts: &OptFlags) -> Result<Plan> {
     })
 }
 
-/// Apply all flow-level (dataflow→dataflow) rewrites selected by `opts`:
-/// competitive replication, filter pushdown, projection pruning.  Exposed
-/// so equivalence tests can execute the rewritten flow through the local
-/// oracle and compare against the original.
+/// Apply all flow-level (dataflow→dataflow) rewrites selected by `opts`
+/// by running the standard [`PassManager`](super::passes::PassManager)
+/// pipeline (competitive replication, canonicalize, CSE, DCE, filter
+/// pushdown, projection pruning) to fixpoint.  Exposed so equivalence
+/// tests can execute the rewritten flow through the local oracle and
+/// compare against the original.
 pub fn rewrite_flow(flow: &Dataflow, opts: &OptFlags) -> Result<Dataflow> {
-    let flow = apply_competitive(flow, &opts.competitive)?;
-    let flow = if opts.filter_pushdown { push_filters(&flow)? } else { flow };
-    let flow = if opts.projection_pruning { prune_projections(&flow)? } else { flow };
-    Ok(flow)
+    Ok(rewrite_flow_journaled(flow, opts)?.0)
+}
+
+/// As [`rewrite_flow`], additionally returning the
+/// [`RewriteJournal`](super::passes::RewriteJournal) recording which
+/// passes fired on which fixpoint sweep.
+pub fn rewrite_flow_journaled(
+    flow: &Dataflow,
+    opts: &OptFlags,
+) -> Result<(Dataflow, super::passes::RewriteJournal)> {
+    super::passes::PassManager::standard(opts).run(flow)
 }
 
 /// Planner-driven compilation (the SLO front door): profile the flow,
@@ -355,7 +397,7 @@ pub fn compile_for_slo(
 }
 
 /// Device class + batchability of a single operator.
-fn op_traits(op: &OpKind, batching: bool) -> (Device, bool) {
+pub(crate) fn op_traits(op: &OpKind, batching: bool) -> (Device, bool) {
     match op {
         OpKind::Map(f) => (f.device, batching && f.batch_aware),
         OpKind::Fuse(ops) => {
@@ -376,338 +418,46 @@ fn op_traits(op: &OpKind, batching: bool) -> (Device, bool) {
     }
 }
 
-/// Replicate competitive map nodes and merge with anyof.
-fn apply_competitive(flow: &Dataflow, competitive: &HashMap<String, usize>) -> Result<Dataflow> {
-    if competitive.is_empty()
-        || !flow.nodes().iter().any(|n| match &n.op {
-            OpKind::Map(f) => competitive.get(&f.name).copied().unwrap_or(1) > 1,
-            _ => false,
-        })
-    {
-        return Ok(flow.clone());
-    }
-    // Rebuild the flow, expanding marked nodes.
-    let mut out = Dataflow::new(&flow.name, flow.input_schema().clone());
-    let mut remap: HashMap<usize, super::flow::NodeRef> = HashMap::new();
-    remap.insert(0, out.input());
-    for (i, node) in flow.nodes().iter().enumerate().skip(1) {
-        let parents: Vec<super::flow::NodeRef> =
-            node.parents.iter().map(|p| remap[p]).collect();
-        let new_ref = match &node.op {
-            OpKind::Map(f) => {
-                let k = competitive.get(&f.name).copied().unwrap_or(1);
-                if k > 1 {
-                    let mut reps = Vec::with_capacity(k);
-                    for r in 0..k {
-                        let mut fr = f.clone();
-                        fr.name = format!("{}#{r}", f.name);
-                        reps.push(out.map(parents[0], fr)?);
-                    }
-                    out.anyof(&reps)?
-                } else {
-                    out.map(parents[0], f.clone())?
-                }
-            }
-            OpKind::Filter(p) => out.filter(parents[0], p.clone())?,
-            OpKind::Groupby { column } => out.groupby(parents[0], column)?,
-            OpKind::Agg { agg, column } => out.agg(parents[0], *agg, column)?,
-            OpKind::Lookup { key, as_col } => {
-                out.lookup(parents[0], key.clone(), as_col)?
-            }
-            OpKind::Join { key, how } => {
-                out.join(parents[0], parents[1], key.as_deref(), *how)?
-            }
-            OpKind::Union => out.union(&parents)?,
-            OpKind::Anyof => out.anyof(&parents)?,
-            OpKind::Input => unreachable!(),
-            OpKind::Fuse(_) => bail!("fuse before competitive rewrite"),
-        };
-        remap.insert(i, new_ref);
-    }
-    let old_out = flow.output().context("no output")?;
-    out.set_output(remap[&old_out.0])?;
-    Ok(out)
-}
-
-/// Re-add one operator to a flow under construction (shared plumbing for
-/// the flow-level rewrite passes, which rebuild through the builder API
-/// so every typecheck re-runs on the rewritten graph).
-fn add_op(out: &mut Dataflow, op: &OpKind, parents: &[NodeRef]) -> Result<NodeRef> {
-    Ok(match op {
-        OpKind::Map(f) => out.map(parents[0], f.clone())?,
-        OpKind::Filter(p) => out.filter(parents[0], p.clone())?,
-        OpKind::Groupby { column } => out.groupby(parents[0], column)?,
-        OpKind::Agg { agg, column } => out.agg(parents[0], *agg, column)?,
-        OpKind::Lookup { key, as_col } => out.lookup(parents[0], key.clone(), as_col)?,
-        OpKind::Join { key, how } => {
-            out.join(parents[0], parents[1], key.as_deref(), *how)?
-        }
-        OpKind::Union => out.union(parents)?,
-        OpKind::Anyof => out.anyof(parents)?,
-        OpKind::Input => bail!("cannot re-add the Input node"),
-        OpKind::Fuse(_) => bail!("fuse node before lowering"),
-    })
-}
-
 // ---------------------------------------------------------------------
-// Filter pushdown (flow-level rewrite)
+// Kernel fusion (stage-level lowering)
 // ---------------------------------------------------------------------
 
-/// Push inspectable filters below upstream maps/lookups that do not
-/// produce the filtered columns, to fixpoint.  A selective filter then
-/// runs *before* an expensive stage, shrinking both its input row count
-/// and the bytes shipped to it.  Opaque (closure) predicates and closure
-/// maps are left untouched.
-fn push_filters(flow: &Dataflow) -> Result<Dataflow> {
-    let mut cur = flow.clone();
-    while let Some((m_idx, f_idx)) = find_pushdown(&cur) {
-        cur = swap_filter_up(&cur, m_idx, f_idx)?;
+/// Replace every maximal run of ≥2 consecutive kernel-fusible ops (Expr
+/// selects, inspectable filters — see [`super::fused::fusible`]) in the
+/// stage's fused chain with one [`OpKind::FusedKernel`].  Runs of length
+/// 1 stay as plain ops: a kernel only pays off once it eliminates an
+/// intermediate materialization.  Multi-input heads and dispatch-boundary
+/// lookups are never fusible, so stage structure is unaffected.
+fn fuse_kernels_in_stage(st: &mut PlanStage) -> Result<()> {
+    if !st.ops.iter().any(super::fused::fusible) {
+        return Ok(());
     }
-    Ok(cur)
-}
-
-/// Find one (map-or-lookup, filter) pair where the filter can move above
-/// its parent: the parent is single-input, has the filter as its only
-/// child, does not produce or modify any column the predicate reads, and
-/// the grandparent exposes those columns with identical dtypes.
-fn find_pushdown(flow: &Dataflow) -> Option<(usize, usize)> {
-    let nodes = flow.nodes();
-    let children = flow.children();
-    let out_idx = flow.output().map(|r| r.0);
-    for (fi, fnode) in nodes.iter().enumerate() {
-        let OpKind::Filter(pred) = &fnode.op else { continue };
-        let Some(cols) = pred.body.columns() else { continue };
-        let mi = fnode.parents[0];
-        let mnode = &nodes[mi];
-        if children[mi].len() != 1 || mnode.parents.len() != 1 {
-            continue;
-        }
-        // The parent's value must be consumed *only* through the filter:
-        // if the parent is the flow output, swapping would filter the
-        // output itself (e.g. a dead filter branch hanging off the
-        // output node).
-        if out_idx == Some(mi) {
-            continue;
-        }
-        let transparent = match &mnode.op {
-            OpKind::Map(func) => match &func.body {
-                FuncBody::Identity | FuncBody::Sleep(_) => true,
-                // A projection is transparent for a column it passes
-                // through unmodified (bound as a bare `Col` of itself).
-                FuncBody::Select(binds) => cols.iter().all(|c| {
-                    binds.iter().any(
-                        |(n, e)| n == c && matches!(e, Expr::Col(src) if src == c),
-                    )
-                }),
-                FuncBody::Model(b) => cols.iter().all(|c| b.passthrough.contains(c)),
-                FuncBody::Rust(_) => false,
-            },
-            OpKind::Lookup { as_col, .. } => !cols.contains(as_col),
-            _ => false,
-        };
-        if !transparent {
-            continue;
-        }
-        let gp = &nodes[mnode.parents[0]];
-        let types_match = cols.iter().all(|c| {
-            matches!(
-                (gp.schema.dtype_of(c), mnode.schema.dtype_of(c)),
-                (Ok(a), Ok(b)) if a == b
-            )
-        });
-        if types_match {
-            return Some((mi, fi));
-        }
-    }
-    None
-}
-
-/// Rebuild the flow with the filter at `f_idx` moved above its parent at
-/// `m_idx` (the filter now feeds the parent; everything that consumed the
-/// filter consumes the parent instead).
-fn swap_filter_up(flow: &Dataflow, m_idx: usize, f_idx: usize) -> Result<Dataflow> {
-    let nodes = flow.nodes();
-    let OpKind::Filter(pred) = &nodes[f_idx].op else {
-        bail!("pushdown target is not a filter");
-    };
-    let mut out = Dataflow::new(&flow.name, flow.input_schema().clone());
-    let mut remap: Vec<NodeRef> = vec![out.input(); nodes.len()];
-    for (i, node) in nodes.iter().enumerate().skip(1) {
-        if i == f_idx {
-            // The filter's consumers now read the (post-filter) parent.
-            remap[i] = remap[m_idx];
-            continue;
-        }
-        let parents: Vec<NodeRef> = node.parents.iter().map(|&p| remap[p]).collect();
-        remap[i] = if i == m_idx {
-            let filt = out.filter(parents[0], pred.clone())?;
-            add_op(&mut out, &node.op, &[filt])?
+    let mut out: Vec<OpKind> = Vec::with_capacity(st.ops.len());
+    let mut run: Vec<OpKind> = Vec::new();
+    for op in st.ops.drain(..) {
+        if super::fused::fusible(&op) {
+            run.push(op);
         } else {
-            add_op(&mut out, &node.op, &parents)?
-        };
+            flush_kernel_run(&mut run, &mut out)?;
+            out.push(op);
+        }
     }
-    let old_out = flow.output().context("no output")?;
-    out.set_output(remap[old_out.0])?;
-    Ok(out)
+    flush_kernel_run(&mut run, &mut out)?;
+    st.ops = out;
+    Ok(())
 }
 
-// ---------------------------------------------------------------------
-// Projection pruning (flow-level rewrite)
-// ---------------------------------------------------------------------
-
-/// Columns of `parents[slot]`'s output that `node` reads, given the set
-/// of `node`'s own output columns demanded downstream (`None` = all).
-/// Returns `None` when the node is opaque or structurally requires every
-/// parent column (closures, joins, unions).
-fn parent_reads(
-    node: &super::flow::FlowNode,
-    my_need: &Option<std::collections::BTreeSet<String>>,
-    parent_grouping: Option<&str>,
-) -> Option<std::collections::BTreeSet<String>> {
-    use std::collections::BTreeSet;
-    let passthrough = |extra: &[&String]| -> Option<BTreeSet<String>> {
-        let mut s = my_need.as_ref()?.clone();
-        s.extend(extra.iter().map(|c| (*c).clone()));
-        Some(s)
-    };
-    let mut req: BTreeSet<String> = match &node.op {
-        OpKind::Map(f) => match &f.body {
-            FuncBody::Identity | FuncBody::Sleep(_) => passthrough(&[])?,
-            FuncBody::Select(binds) => {
-                binds.iter().flat_map(|(_, e)| e.columns()).collect()
-            }
-            FuncBody::Model(b) => {
-                b.input_cols.iter().chain(b.passthrough.iter()).cloned().collect()
-            }
-            FuncBody::Rust(_) => return None,
-        },
-        OpKind::Filter(p) => {
-            let cols = p.body.columns()?;
-            passthrough(&cols.iter().collect::<Vec<_>>())?
-        }
-        OpKind::Groupby { column } => {
-            if column == "__rowid" {
-                passthrough(&[])?
-            } else {
-                passthrough(&[column])?
-            }
-        }
-        OpKind::Agg { agg, column } => {
-            if *agg == AggFn::ArgMax {
-                // ArgMax returns whole attaining rows: output schema ==
-                // input schema, so parent needs downstream's columns too.
-                passthrough(&[column])?
-            } else {
-                std::iter::once(column.clone()).collect()
-            }
-        }
-        OpKind::Lookup { key, as_col } => {
-            let mut s = my_need.as_ref()?.clone();
-            s.remove(as_col);
-            if let LookupKey::Column(c) = key {
-                s.insert(c.clone());
-            }
-            s
-        }
-        // Joins concatenate (and rename) both sides; unions require
-        // schema-identical parents that may have other consumers.  Treat
-        // both as reading everything rather than risk schema drift.
-        OpKind::Join { .. } | OpKind::Union | OpKind::Anyof => return None,
-        OpKind::Input | OpKind::Fuse(_) => return None,
-    };
-    // The grouping column must survive any inserted projection: grouped
-    // tables re-assert their grouping after every op.
-    if let Some(g) = parent_grouping {
-        if g != "__rowid" {
-            req.insert(g.to_string());
-        }
+/// Emit the pending fusible run into `out`: as one kernel when it spans
+/// ≥2 ops, verbatim otherwise.
+fn flush_kernel_run(run: &mut Vec<OpKind>, out: &mut Vec<OpKind>) -> Result<()> {
+    if run.len() >= 2 {
+        let kernel = super::fused::FusedKernel::from_ops(run)?;
+        out.push(OpKind::FusedKernel(kernel));
+        run.clear();
+    } else {
+        out.append(run);
     }
-    Some(req)
-}
-
-/// Insert projections that drop columns no downstream operator reads, so
-/// unused payloads never cross a stage boundary.  Conservative: closure
-/// ops demand every column, and join/union parents are never narrowed.
-fn prune_projections(flow: &Dataflow) -> Result<Dataflow> {
-    use std::collections::BTreeSet;
-    let nodes = flow.nodes();
-    let out_idx = flow.output().context("no output")?.0;
-    // needed[i]: Some(cols) = columns of node i's output read downstream;
-    // None = all (the output node, or an opaque/structural consumer).
-    let mut needed: Vec<Option<BTreeSet<String>>> =
-        vec![Some(BTreeSet::new()); nodes.len()];
-    needed[out_idx] = None;
-    for i in (1..nodes.len()).rev() {
-        let my_need = needed[i].clone();
-        for &p in &nodes[i].parents {
-            let req = parent_reads(&nodes[i], &my_need, nodes[p].grouping.as_deref());
-            match (req, &mut needed[p]) {
-                (None, slot) => *slot = None,
-                (Some(r), Some(acc)) => acc.extend(r),
-                (Some(_), None) => {}
-            }
-        }
-    }
-    // Decide insertions: keep schema order; skip full/empty/no-op cases.
-    let mut prune: Vec<Option<Vec<String>>> = vec![None; nodes.len()];
-    let mut any = false;
-    for (i, node) in nodes.iter().enumerate() {
-        if i == out_idx {
-            continue;
-        }
-        let Some(need) = &needed[i] else { continue };
-        if need.is_empty() {
-            continue; // dead branch or nothing read: leave untouched
-        }
-        let keep: Vec<String> = node
-            .schema
-            .cols()
-            .iter()
-            .map(|(n, _)| n.clone())
-            .filter(|n| need.contains(n))
-            .collect();
-        if keep.is_empty() || keep.len() == node.schema.cols().len() {
-            continue;
-        }
-        prune[i] = Some(keep);
-        any = true;
-    }
-    if !any {
-        return Ok(flow.clone());
-    }
-    // Rebuild with a projection inserted after each narrowed producer.
-    let mut out = Dataflow::new(&flow.name, flow.input_schema().clone());
-    let mut remap: Vec<NodeRef> = vec![out.input(); nodes.len()];
-    let insert = |out: &mut Dataflow, at: NodeRef, i: usize| -> Result<NodeRef> {
-        match &prune[i] {
-            None => Ok(at),
-            Some(keep) => {
-                // An upstream prune may already have narrowed this node's
-                // rebuilt schema to exactly `keep` — skip the no-op.
-                let cur = out.node(at).schema.cols();
-                if cur.len() == keep.len()
-                    && cur.iter().zip(keep).all(|((n, _), k)| n == k)
-                {
-                    return Ok(at);
-                }
-                let cols: Vec<&str> = keep.iter().map(String::as_str).collect();
-                // Inherit the producer's device class so the projection
-                // fuses into the producing stage instead of splitting a
-                // same-device chain.
-                let (dev, _) = op_traits(&nodes[i].op, false);
-                out.map(at, Func::project(&format!("prune{i}"), &cols).with_device(dev))
-            }
-        }
-    };
-    let at0 = out.input();
-    remap[0] = insert(&mut out, at0, 0)?;
-    for (i, node) in nodes.iter().enumerate().skip(1) {
-        let parents: Vec<NodeRef> = node.parents.iter().map(|&p| remap[p]).collect();
-        let r = add_op(&mut out, &node.op, &parents)?;
-        remap[i] = insert(&mut out, r, i)?;
-    }
-    out.set_output(remap[out_idx])?;
-    Ok(out)
+    Ok(())
 }
 
 /// Is this stage headed by a column-keyed lookup (a dynamic-dispatch
@@ -1278,6 +1028,89 @@ mod tests {
     fn compiled_plan_records_input_schema() {
         let plan = compile(&chain_flow(2), &OptFlags::none()).unwrap();
         assert!(plan.input_schema.has("p"));
+    }
+
+    #[test]
+    fn kernel_fusion_compiles_expr_runs_into_one_kernel() {
+        use crate::dataflow::expr::{col, lit};
+        let mut fl = Dataflow::new("k", Schema::new(vec![("conf", DType::F64)]));
+        let s = fl
+            .map(fl.input(), Func::select("scale", vec![("x", col("conf") * lit(2.0))]))
+            .unwrap();
+        let f = fl.filter(s, Predicate::expr(col("x").ge(lit(0.5)))).unwrap();
+        let s2 = fl
+            .map(f, Func::select("out", vec![("y", col("x") + lit(1.0))]))
+            .unwrap();
+        fl.set_output(s2).unwrap();
+        let plan = compile(&fl, &OptFlags::none().with_fusion()).unwrap();
+        assert_eq!(plan.n_stages(), 1);
+        let st = &plan.segments[0].stages[0];
+        assert_eq!(st.ops.len(), 1, "{:?}", st.label());
+        assert!(matches!(st.ops[0], OpKind::FusedKernel(_)));
+        assert!(st.label().starts_with("kernel["), "{}", st.label());
+        // The staged baseline keeps the three materializing ops.
+        let staged =
+            compile(&fl, &OptFlags::none().with_fusion().without_kernel_fusion()).unwrap();
+        assert_eq!(staged.segments[0].stages[0].ops.len(), 3);
+    }
+
+    #[test]
+    fn kernel_fusion_breaks_runs_at_opaque_ops() {
+        use crate::dataflow::expr::{col, lit};
+        // select+select | rust | select+filter: two kernels around the
+        // opaque closure map.
+        let mut fl = Dataflow::new("k2", Schema::new(vec![("conf", DType::F64)]));
+        let a = fl
+            .map(fl.input(), Func::select("a", vec![("conf", col("conf") * lit(2.0))]))
+            .unwrap();
+        let b = fl
+            .map(a, Func::select("b", vec![("conf", col("conf") + lit(1.0))]))
+            .unwrap();
+        let opaque = fl
+            .map(
+                b,
+                Func::rust(
+                    "opaque",
+                    None,
+                    std::sync::Arc::new(|_, t: &crate::dataflow::table::Table| Ok(t.clone())),
+                ),
+            )
+            .unwrap();
+        let c = fl
+            .map(opaque, Func::select("c", vec![("conf", col("conf") * lit(0.5))]))
+            .unwrap();
+        let d = fl
+            .filter(c, Predicate::expr(col("conf").lt(lit(10.0))))
+            .unwrap();
+        fl.set_output(d).unwrap();
+        let plan = compile(
+            &fl,
+            &OptFlags::none().with_fusion().with_fuse_across_devices(),
+        )
+        .unwrap();
+        let st = &plan.segments[0].stages[0];
+        assert_eq!(st.ops.len(), 3, "{}", st.label());
+        assert!(matches!(st.ops[0], OpKind::FusedKernel(_)));
+        assert!(matches!(st.ops[1], OpKind::Map(_)));
+        assert!(matches!(st.ops[2], OpKind::FusedKernel(_)));
+    }
+
+    #[test]
+    fn single_fusible_ops_are_not_kernelized() {
+        use crate::dataflow::expr::{col, lit};
+        // identity | filter | identity: the lone filter is a run of 1 —
+        // a kernel would save nothing, so the ops stay plain.
+        let mut fl = Dataflow::new("k1", Schema::new(vec![("conf", DType::F64)]));
+        let m = fl.map(fl.input(), Func::identity("m")).unwrap();
+        let f = fl
+            .filter(m, Predicate::expr(col("conf").lt(lit(0.5))))
+            .unwrap();
+        let m2 = fl.map(f, Func::identity("m2")).unwrap();
+        fl.set_output(m2).unwrap();
+        let plan = compile(&fl, &OptFlags::none().with_fusion()).unwrap();
+        let st = &plan.segments[0].stages[0];
+        assert_eq!(st.ops.len(), 3);
+        assert!(st.ops.iter().all(|o| !matches!(o, OpKind::FusedKernel(_))));
     }
 
     #[test]

@@ -102,6 +102,9 @@ pub fn apply_op(ctx: &ExecCtx, op: &OpKind, mut inputs: Vec<Table>) -> Result<Ta
             }
             Ok(t)
         }
+        // One vectorized pass: combined selection vector + direct output
+        // column evaluation, no intermediate tables (see [`super::fused`]).
+        OpKind::FusedKernel(k) => k.execute(take1(&mut inputs)?),
     }
 }
 
@@ -312,13 +315,9 @@ pub fn apply_filter(ctx: &ExecCtx, p: &Predicate, table: Table) -> Result<Table>
             }
             keep
         }
-        PredBody::Expr(e) => {
-            let mask = e.eval_bool(&table)?;
-            mask.iter()
-                .enumerate()
-                .filter_map(|(i, &k)| if k { Some(i as u32) } else { None })
-                .collect()
-        }
+        // Direct selection-vector evaluation: `and` chains narrow one
+        // shrinking selection instead of allocating per-conjunct masks.
+        PredBody::Expr(e) => e.eval_sel(&table)?,
         PredBody::Rust(f) => {
             // Black-box predicates see materialized rows (compat path).
             let mut keep = Vec::new();

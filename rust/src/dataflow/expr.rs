@@ -12,7 +12,7 @@
 //! Construction is fluent: `col("conf").lt(lit(0.85))`,
 //! `(col("a") + col("b")).ge(lit(1.0)).and(col("ok").eq(lit(true)))`.
 
-use std::collections::BTreeSet;
+use std::collections::{BTreeMap, BTreeSet};
 use std::fmt;
 
 use anyhow::{bail, Context, Result};
@@ -55,6 +55,17 @@ pub enum Expr {
     And(Box<Expr>, Box<Expr>),
     Or(Box<Expr>, Box<Expr>),
     Not(Box<Expr>),
+    /// Per-row conditional select over scalar operands of one dtype.
+    /// Both branches are evaluated vectorized, then merged by the mask —
+    /// branch expressions must therefore be total (no per-row errors).
+    If { cond: Box<Expr>, then: Box<Expr>, els: Box<Expr> },
+    /// String concatenation; non-string scalar operands are formatted
+    /// with their `Display` form (`format!` semantics).
+    Concat(Box<Expr>, Box<Expr>),
+    /// String prefix test producing a boolean.
+    StartsWith { expr: Box<Expr>, prefix: Box<Expr> },
+    /// String length in bytes, as i64.
+    Len(Box<Expr>),
 }
 
 /// Column reference: `col("conf")`.
@@ -126,6 +137,127 @@ impl Expr {
         Expr::Not(Box::new(self))
     }
 
+    /// Conditional select: `self` is the per-row condition.
+    /// `col("ok").if_then_else(col("a"), col("b"))`.
+    pub fn if_then_else(self, then: impl Into<Expr>, els: impl Into<Expr>) -> Expr {
+        Expr::If {
+            cond: Box::new(self),
+            then: Box::new(then.into()),
+            els: Box::new(els.into()),
+        }
+    }
+
+    /// String concatenation: `lit("person-").concat(col("pred"))`.
+    /// Non-string scalars are rendered with `Display` (`format!` style).
+    pub fn concat(self, rhs: impl Into<Expr>) -> Expr {
+        Expr::Concat(Box::new(self), Box::new(rhs.into()))
+    }
+
+    /// String prefix test: `col("name").starts_with(lit("person-"))`.
+    pub fn starts_with(self, prefix: impl Into<Expr>) -> Expr {
+        Expr::StartsWith { expr: Box::new(self), prefix: Box::new(prefix.into()) }
+    }
+
+    /// String length in bytes, as an i64 column.
+    pub fn length(self) -> Expr {
+        Expr::Len(Box::new(self))
+    }
+
+    /// Rewrite every column reference through `env` (references without a
+    /// binding are kept).  Kernel fusion uses this to compose a stage's
+    /// expressions over the producing stage's bindings, so a whole chain
+    /// evaluates against the chain's input schema.
+    pub fn substitute(&self, env: &BTreeMap<String, Expr>) -> Expr {
+        let sub = |e: &Expr| Box::new(e.substitute(env));
+        match self {
+            Expr::Col(c) => env.get(c).cloned().unwrap_or_else(|| self.clone()),
+            Expr::Lit(_) => self.clone(),
+            Expr::Cmp { op, lhs, rhs } => {
+                Expr::Cmp { op: *op, lhs: sub(lhs), rhs: sub(rhs) }
+            }
+            Expr::Arith { op, lhs, rhs } => {
+                Expr::Arith { op: *op, lhs: sub(lhs), rhs: sub(rhs) }
+            }
+            Expr::And(a, b) => Expr::And(sub(a), sub(b)),
+            Expr::Or(a, b) => Expr::Or(sub(a), sub(b)),
+            Expr::Not(a) => Expr::Not(sub(a)),
+            Expr::If { cond, then, els } => {
+                Expr::If { cond: sub(cond), then: sub(then), els: sub(els) }
+            }
+            Expr::Concat(a, b) => Expr::Concat(sub(a), sub(b)),
+            Expr::StartsWith { expr, prefix } => {
+                Expr::StartsWith { expr: sub(expr), prefix: sub(prefix) }
+            }
+            Expr::Len(a) => Expr::Len(sub(a)),
+        }
+    }
+
+    /// Structure-preserving simplification to a canonical form: double
+    /// negation elimination, boolean-literal folding in `and`/`or`/`not`,
+    /// and literal conditions in `if_then_else`.  Idempotent, and safe on
+    /// typechecked expressions (folding never widens the row visibility a
+    /// vectorized evaluation would have had).  The canonicalize rewrite
+    /// pass applies this to every inspectable predicate and binding.
+    pub fn simplified(&self) -> Expr {
+        let as_bool = |e: &Expr| match e {
+            Expr::Lit(Value::Bool(b)) => Some(*b),
+            _ => None,
+        };
+        match self {
+            Expr::Col(_) | Expr::Lit(_) => self.clone(),
+            Expr::Cmp { op, lhs, rhs } => Expr::Cmp {
+                op: *op,
+                lhs: Box::new(lhs.simplified()),
+                rhs: Box::new(rhs.simplified()),
+            },
+            Expr::Arith { op, lhs, rhs } => Expr::Arith {
+                op: *op,
+                lhs: Box::new(lhs.simplified()),
+                rhs: Box::new(rhs.simplified()),
+            },
+            Expr::And(a, b) => {
+                let (a, b) = (a.simplified(), b.simplified());
+                match (as_bool(&a), as_bool(&b)) {
+                    (Some(false), _) | (_, Some(false)) => Expr::Lit(Value::Bool(false)),
+                    (Some(true), _) => b,
+                    (_, Some(true)) => a,
+                    _ => Expr::And(Box::new(a), Box::new(b)),
+                }
+            }
+            Expr::Or(a, b) => {
+                let (a, b) = (a.simplified(), b.simplified());
+                match (as_bool(&a), as_bool(&b)) {
+                    (Some(true), _) | (_, Some(true)) => Expr::Lit(Value::Bool(true)),
+                    (Some(false), _) => b,
+                    (_, Some(false)) => a,
+                    _ => Expr::Or(Box::new(a), Box::new(b)),
+                }
+            }
+            Expr::Not(a) => match a.simplified() {
+                Expr::Not(inner) => *inner,
+                Expr::Lit(Value::Bool(b)) => Expr::Lit(Value::Bool(!b)),
+                other => Expr::Not(Box::new(other)),
+            },
+            Expr::If { cond, then, els } => match cond.simplified() {
+                Expr::Lit(Value::Bool(true)) => then.simplified(),
+                Expr::Lit(Value::Bool(false)) => els.simplified(),
+                c => Expr::If {
+                    cond: Box::new(c),
+                    then: Box::new(then.simplified()),
+                    els: Box::new(els.simplified()),
+                },
+            },
+            Expr::Concat(a, b) => {
+                Expr::Concat(Box::new(a.simplified()), Box::new(b.simplified()))
+            }
+            Expr::StartsWith { expr, prefix } => Expr::StartsWith {
+                expr: Box::new(expr.simplified()),
+                prefix: Box::new(prefix.simplified()),
+            },
+            Expr::Len(a) => Expr::Len(Box::new(a.simplified())),
+        }
+    }
+
     /// The set of column names this expression reads.
     pub fn columns(&self) -> BTreeSet<String> {
         let mut out = BTreeSet::new();
@@ -143,11 +275,20 @@ impl Expr {
                 lhs.collect_columns(out);
                 rhs.collect_columns(out);
             }
-            Expr::And(a, b) | Expr::Or(a, b) => {
+            Expr::And(a, b) | Expr::Or(a, b) | Expr::Concat(a, b) => {
                 a.collect_columns(out);
                 b.collect_columns(out);
             }
-            Expr::Not(a) => a.collect_columns(out),
+            Expr::Not(a) | Expr::Len(a) => a.collect_columns(out),
+            Expr::If { cond, then, els } => {
+                cond.collect_columns(out);
+                then.collect_columns(out);
+                els.collect_columns(out);
+            }
+            Expr::StartsWith { expr, prefix } => {
+                expr.collect_columns(out);
+                prefix.collect_columns(out);
+            }
         }
     }
 
@@ -196,6 +337,45 @@ impl Expr {
                 }
                 Ok(DType::Bool)
             }
+            Expr::If { cond, then, els } => {
+                let c = cond.dtype(schema)?;
+                if c != DType::Bool {
+                    bail!("if_then_else condition is not bool ({c})");
+                }
+                let (a, b) = (then.dtype(schema)?, els.dtype(schema)?);
+                if a != b {
+                    bail!("if_then_else branches disagree ({a} vs {b})");
+                }
+                if !matches!(a, DType::I64 | DType::F64 | DType::Bool | DType::Str) {
+                    bail!("if_then_else over non-scalar branches ({a})");
+                }
+                Ok(a)
+            }
+            Expr::Concat(a, b) => {
+                for e in [a, b] {
+                    let t = e.dtype(schema)?;
+                    if !matches!(t, DType::I64 | DType::F64 | DType::Bool | DType::Str) {
+                        bail!("concat over non-formattable operand ({t})");
+                    }
+                }
+                Ok(DType::Str)
+            }
+            Expr::StartsWith { expr, prefix } => {
+                for e in [expr, prefix] {
+                    let t = e.dtype(schema)?;
+                    if t != DType::Str {
+                        bail!("starts_with over non-string operand ({t})");
+                    }
+                }
+                Ok(DType::Bool)
+            }
+            Expr::Len(a) => {
+                let t = a.dtype(schema)?;
+                if t != DType::Str {
+                    bail!("len over non-string operand ({t})");
+                }
+                Ok(DType::I64)
+            }
         }
     }
 
@@ -211,10 +391,69 @@ impl Expr {
     }
 
     /// Evaluate a boolean expression to a per-row mask.
+    ///
+    /// Built on [`Expr::eval_sel`], so chained (`and`ed) predicates share
+    /// one shrinking selection vector instead of allocating a full-width
+    /// `Vec<bool>` per conjunct.
     pub fn eval_bool(&self, table: &Table) -> Result<Vec<bool>> {
-        match self.eval_inner(table)? {
-            Ev::Bool(v) => Ok(v),
-            other => bail!("predicate expression is not boolean ({})", other.label()),
+        let sel = self.eval_sel(table)?;
+        let mut mask = vec![false; table.len()];
+        for &i in &sel {
+            mask[i as usize] = true;
+        }
+        Ok(mask)
+    }
+
+    /// Evaluate a boolean expression to the (view-relative) selection
+    /// vector of rows where it holds.  `And` chains narrow the selection
+    /// incrementally: each conjunct is evaluated only over the rows that
+    /// survived the previous ones, so a chain of k predicates does one
+    /// shrinking pass instead of k full-width mask allocations.  This is
+    /// the fused-kernel filter path.
+    pub fn eval_sel(&self, table: &Table) -> Result<Vec<u32>> {
+        // Typecheck up front: narrowing skips evaluation over empty
+        // selections, which must not also skip type errors.
+        let t = self.dtype(table.schema())?;
+        if t != DType::Bool {
+            bail!("predicate expression is not boolean ({t})");
+        }
+        let mut sel: Vec<u32> = (0..table.len() as u32).collect();
+        self.narrow_sel(table, &mut sel)?;
+        Ok(sel)
+    }
+
+    /// Keep only the rows of `sel` (view-relative indices into `table`)
+    /// where `self` holds.
+    fn narrow_sel(&self, table: &Table, sel: &mut Vec<u32>) -> Result<()> {
+        match self {
+            Expr::And(a, b) => {
+                a.narrow_sel(table, sel)?;
+                b.narrow_sel(table, sel)
+            }
+            _ => {
+                if sel.is_empty() {
+                    return Ok(());
+                }
+                // Evaluate only over the surviving rows via a selection
+                // view (no payload copies).
+                let whole = sel.len() == table.len();
+                let view = if whole { table.clone() } else { table.select(sel.clone()) };
+                let mask = match self.eval_inner(&view)? {
+                    Ev::Bool(v) => v,
+                    other => {
+                        bail!("predicate expression is not boolean ({})", other.label())
+                    }
+                };
+                let mut w = 0;
+                for (i, keep) in mask.into_iter().enumerate() {
+                    if keep {
+                        sel[w] = sel[i];
+                        w += 1;
+                    }
+                }
+                sel.truncate(w);
+                Ok(())
+            }
         }
     }
 
@@ -316,6 +555,63 @@ impl Expr {
                 Ev::Bool(x.iter().zip(&y).map(|(&p, &q)| p || q).collect())
             }
             Expr::Not(a) => Ev::Bool(a.eval_bool(table)?.into_iter().map(|p| !p).collect()),
+            Expr::If { cond, then, els } => {
+                let mask = cond.eval_bool(table)?;
+                let (t, e) = (then.eval_inner(table)?, els.eval_inner(table)?);
+                let pick = |m: &[bool]| m.iter().copied().enumerate();
+                match (t, e) {
+                    (Ev::I64(a), Ev::I64(b)) => {
+                        Ev::I64(pick(&mask).map(|(i, p)| if p { a[i] } else { b[i] }).collect())
+                    }
+                    (Ev::F64(a), Ev::F64(b)) => {
+                        Ev::F64(pick(&mask).map(|(i, p)| if p { a[i] } else { b[i] }).collect())
+                    }
+                    (Ev::Bool(a), Ev::Bool(b)) => {
+                        Ev::Bool(pick(&mask).map(|(i, p)| if p { a[i] } else { b[i] }).collect())
+                    }
+                    (Ev::Str(a), Ev::Str(b)) => Ev::Str(
+                        pick(&mask)
+                            .map(|(i, p)| if p { a[i].clone() } else { b[i].clone() })
+                            .collect(),
+                    ),
+                    (a, b) => bail!(
+                        "if_then_else branches disagree or are non-scalar ({}, {})",
+                        a.label(),
+                        b.label()
+                    ),
+                }
+            }
+            Expr::Concat(a, b) => {
+                let (x, y) = (a.eval_inner(table)?.to_str()?, b.eval_inner(table)?.to_str()?);
+                Ev::Str(
+                    x.iter()
+                        .zip(&y)
+                        .map(|(l, r)| {
+                            let mut s = String::with_capacity(l.len() + r.len());
+                            s.push_str(l);
+                            s.push_str(r);
+                            s
+                        })
+                        .collect(),
+                )
+            }
+            Expr::StartsWith { expr, prefix } => {
+                let (x, y) = (expr.eval_inner(table)?, prefix.eval_inner(table)?);
+                match (&x, &y) {
+                    (Ev::Str(a), Ev::Str(b)) => {
+                        Ev::Bool(a.iter().zip(b).map(|(s, p)| s.starts_with(p.as_str())).collect())
+                    }
+                    (a, b) => bail!(
+                        "starts_with over non-string operands ({}, {})",
+                        a.label(),
+                        b.label()
+                    ),
+                }
+            }
+            Expr::Len(a) => match a.eval_inner(table)? {
+                Ev::Str(v) => Ev::I64(v.iter().map(|s| s.len() as i64).collect()),
+                other => bail!("len over non-string operand ({})", other.label()),
+            },
         })
     }
 }
@@ -336,6 +632,12 @@ impl fmt::Display for Expr {
             Expr::And(a, b) => write!(f, "({a} & {b})"),
             Expr::Or(a, b) => write!(f, "({a} | {b})"),
             Expr::Not(a) => write!(f, "!{a}"),
+            Expr::If { cond, then, els } => write!(f, "if({cond}, {then}, {els})"),
+            Expr::Concat(a, b) => write!(f, "({a} ++ {b})"),
+            Expr::StartsWith { expr, prefix } => {
+                write!(f, "starts_with({expr}, {prefix})")
+            }
+            Expr::Len(a) => write!(f, "len({a})"),
         }
     }
 }
@@ -366,6 +668,18 @@ impl Ev {
             Ev::F64(v) => v.clone(),
             Ev::I64(v) => v.iter().map(|&x| x as f64).collect(),
             other => bail!("expected numeric operand, got {}", other.label()),
+        })
+    }
+
+    /// Render each cell with its `Display` form (`format!` semantics) for
+    /// string concatenation.
+    fn to_str(self) -> Result<Vec<String>> {
+        Ok(match self {
+            Ev::Str(v) => v,
+            Ev::I64(v) => v.into_iter().map(|x| x.to_string()).collect(),
+            Ev::F64(v) => v.into_iter().map(|x| x.to_string()).collect(),
+            Ev::Bool(v) => v.into_iter().map(|x| x.to_string()).collect(),
+            other => bail!("expected formattable scalar operand, got {}", other.label()),
         })
     }
 }
@@ -478,6 +792,115 @@ mod tests {
     fn display_roundtrips_shape() {
         let e = col("conf").lt(lit(0.85)).and(col("name").eq(lit("fr")));
         assert_eq!(format!("{e}"), "((conf Lt 0.85) & (name Eq \"fr\"))");
+        let e = lit("p-").concat(col("n")).starts_with(lit("p"));
+        assert_eq!(format!("{e}"), "starts_with((\"p-\" ++ n), \"p\")");
+    }
+
+    #[test]
+    fn eval_sel_narrows_and_chains() {
+        let t = table();
+        // conf < 0.85 keeps rows 1, 2; n > 2 then keeps only row 2.
+        let e = col("conf").lt(lit(0.85)).and(col("n").gt(lit(2i64)));
+        assert_eq!(e.eval_sel(&t).unwrap(), vec![2]);
+        assert_eq!(e.eval_bool(&t).unwrap(), vec![false, false, true]);
+        // All-false chains short-circuit to an empty selection.
+        let e = col("conf").lt(lit(0.0)).and(col("n").gt(lit(0i64)));
+        assert_eq!(e.eval_sel(&t).unwrap(), Vec::<u32>::new());
+        // Selection views compose: evaluating over an existing view
+        // returns view-relative indices.
+        let v = t.select(vec![1, 2]);
+        assert_eq!(col("conf").lt(lit(0.5)).eval_sel(&v).unwrap(), vec![0]);
+        // Type errors surface even when an earlier conjunct empties the
+        // selection.
+        let e = col("conf").lt(lit(0.0)).and(col("name").lt(lit("z")));
+        assert!(e.eval_sel(&t).is_err());
+    }
+
+    #[test]
+    fn conditional_and_string_ops() {
+        let t = table();
+        // if_then_else picks per row.
+        let e = col("conf").ge(lit(0.5)).if_then_else(col("n"), lit(0i64));
+        match e.eval(&t).unwrap() {
+            Column::I64(v) => assert_eq!(v, vec![1, 0, 3]),
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(
+            col("conf")
+                .ge(lit(0.5))
+                .if_then_else(col("n"), lit(0i64))
+                .dtype(&schema())
+                .unwrap(),
+            DType::I64
+        );
+        // Branch dtypes must agree.
+        assert!(col("conf").ge(lit(0.5)).if_then_else(col("n"), lit(0.0)).dtype(&schema()).is_err());
+        // Condition must be boolean.
+        assert!(col("conf").if_then_else(col("n"), col("n")).dtype(&schema()).is_err());
+        // concat formats non-strings like format!.
+        let e = col("name").concat(lit("-")).concat(col("n"));
+        assert_eq!(e.dtype(&schema()).unwrap(), DType::Str);
+        match e.eval(&t).unwrap() {
+            Column::Str(v) => assert_eq!(v, vec!["a-1", "b-2", "a-3"]),
+            other => panic!("{other:?}"),
+        }
+        // starts_with and len.
+        let e = col("name").concat(col("n")).starts_with(lit("a"));
+        assert_eq!(e.eval_bool(&t).unwrap(), vec![true, false, true]);
+        match col("name").length().eval(&t).unwrap() {
+            Column::I64(v) => assert_eq!(v, vec![1, 1, 1]),
+            other => panic!("{other:?}"),
+        }
+        assert!(col("n").length().dtype(&schema()).is_err());
+        assert!(col("img").concat(lit("x")).dtype(&schema()).is_err());
+    }
+
+    #[test]
+    fn simplified_folds_and_is_idempotent() {
+        // Double negation.
+        let e = col("conf").lt(lit(0.5)).not().not();
+        assert_eq!(e.simplified(), col("conf").lt(lit(0.5)));
+        // Boolean-literal folding in and/or/not.
+        let e = col("conf").lt(lit(0.5)).and(lit(true));
+        assert_eq!(e.simplified(), col("conf").lt(lit(0.5)));
+        let e = lit(false).and(col("conf").lt(lit(0.5)));
+        assert_eq!(e.simplified(), lit(false));
+        let e = lit(false).or(col("conf").lt(lit(0.5)));
+        assert_eq!(e.simplified(), col("conf").lt(lit(0.5)));
+        let e = col("conf").lt(lit(0.5)).or(lit(true));
+        assert_eq!(e.simplified(), lit(true));
+        assert_eq!(lit(true).not().simplified(), lit(false));
+        // Literal conditions in if_then_else.
+        let e = lit(true).if_then_else(col("n"), lit(0i64));
+        assert_eq!(e.simplified(), col("n"));
+        let e = lit(false).if_then_else(col("n"), lit(0i64));
+        assert_eq!(e.simplified(), lit(0i64));
+        // Folding recurses through nested structure.
+        let e = (col("conf") * lit(2.0)).ge(lit(1.0)).and(lit(true).not().not());
+        assert_eq!(e.simplified(), (col("conf") * lit(2.0)).ge(lit(1.0)));
+        // Idempotent, and a no-op on already-canonical expressions.
+        let e = col("name").eq(lit("a")).and(col("n").gt(lit(1i64)));
+        assert_eq!(e.simplified(), e);
+        assert_eq!(e.simplified().simplified(), e.simplified());
+        // Semantics preserved on a real table.
+        let t = table();
+        let e = col("conf").lt(lit(0.85)).not().not().and(lit(true));
+        assert_eq!(e.simplified().eval_bool(&t).unwrap(), e.eval_bool(&t).unwrap());
+    }
+
+    #[test]
+    fn substitute_composes_through_bindings() {
+        use std::collections::BTreeMap;
+        let mut env = BTreeMap::new();
+        env.insert("x".to_string(), col("conf") * lit(2.0));
+        let e = col("x").ge(lit(1.0)).and(col("n").gt(lit(0i64)));
+        let s = e.substitute(&env);
+        assert_eq!(
+            s,
+            (col("conf") * lit(2.0)).ge(lit(1.0)).and(col("n").gt(lit(0i64)))
+        );
+        let t = table();
+        assert_eq!(s.eval_bool(&t).unwrap(), vec![true, false, true]);
     }
 }
 

@@ -1,0 +1,377 @@
+//! Fused vectorized kernels (§4 Operator Fusion, made real at the data
+//! plane): a maximal chain of Expr-based map / filter / projection stages
+//! compiled into **one** evaluation over the input columns.
+//!
+//! Stage-level fusion (`OpKind::Fuse`) merely colocates operators in one
+//! Cloudburst stage — each op still materializes a full intermediate
+//! [`Table`].  A [`FusedKernel`] eliminates those intermediates:
+//!
+//! * every filter predicate in the chain is composed (via
+//!   [`Expr::substitute`]) over the *chain input's* columns and conjoined
+//!   into a single [`Expr::And`] chain, evaluated with
+//!   [`Expr::eval_sel`] — one shrinking selection vector, later
+//!   conjuncts only ever see surviving rows;
+//! * the chain's final output columns are composed the same way and
+//!   evaluated directly against the (filtered view of the) input — no
+//!   per-stage `Table` is ever built.
+//!
+//! Because `Select` bindings and `Expr` predicates are per-row pure and
+//! total, evaluating the composed expressions over the final surviving
+//! rows is observably identical to running the stages one at a time; the
+//! proptests in `tests/proptests.rs` pin byte-identity against both the
+//! staged plan and the `rowref` oracle.  Flows are typechecked by the
+//! builder before they reach the compiler, so substitution can never
+//! resurrect a column the staged chain would have rejected.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+use super::expr::{col, lit, Expr};
+use super::operator::{FuncBody, OpKind, PredBody};
+use super::table::{Column, Schema, Table};
+
+/// A compiled chain of fusible map/filter stages: at most one combined
+/// filter predicate plus the chain's final output bindings, both
+/// expressed over the chain *input's* columns.
+#[derive(Debug, Clone)]
+pub struct FusedKernel {
+    /// Labels of the original ops, in chain order (diagnostics only).
+    steps: Vec<String>,
+    /// All filter predicates conjoined, composed over the input schema.
+    filter: Option<Expr>,
+    /// Final output bindings composed over the input schema; `None`
+    /// means the chain was filter-only and the input columns pass
+    /// through unchanged.
+    bindings: Option<Vec<(String, Expr)>>,
+}
+
+/// Is `op` eligible for kernel fusion?  Inspectable, per-row pure, and
+/// free of modeled service time: `Select` maps and `Threshold`/`Expr`
+/// filters.  Closures, models, sleeps, and identity maps are not —
+/// identity maps exist precisely to carry service-time models, so fusing
+/// them would change what the cluster charges for.
+pub fn fusible(op: &OpKind) -> bool {
+    match op {
+        OpKind::Map(f) => {
+            matches!(f.body, FuncBody::Select(_)) && f.service_model.is_none()
+        }
+        OpKind::Filter(p) => {
+            matches!(p.body, PredBody::Threshold { .. } | PredBody::Expr(_))
+        }
+        _ => false,
+    }
+}
+
+impl FusedKernel {
+    /// Compile a chain of fusible ops into one kernel.  Each filter is
+    /// substituted through the bindings active at its position in the
+    /// chain and conjoined left-to-right (so `eval_sel` narrows in chain
+    /// order); each `Select` replaces the active bindings with its own,
+    /// composed through the previous ones.
+    pub fn from_ops(ops: &[OpKind]) -> Result<FusedKernel> {
+        let mut steps = Vec::with_capacity(ops.len());
+        let mut env: BTreeMap<String, Expr> = BTreeMap::new();
+        let mut bindings: Option<Vec<(String, Expr)>> = None;
+        let mut filter: Option<Expr> = None;
+        for op in ops {
+            match op {
+                OpKind::Map(f) => match &f.body {
+                    FuncBody::Select(binds) if f.service_model.is_none() => {
+                        let composed: Vec<(String, Expr)> = binds
+                            .iter()
+                            .map(|(n, e)| (n.clone(), e.substitute(&env)))
+                            .collect();
+                        env = composed
+                            .iter()
+                            .map(|(n, e)| (n.clone(), e.clone()))
+                            .collect();
+                        bindings = Some(composed);
+                    }
+                    other => bail!("non-fusible map body {other:?} in fused kernel"),
+                },
+                OpKind::Filter(p) => {
+                    let e = match &p.body {
+                        PredBody::Expr(e) => e.substitute(&env),
+                        // Thresholds compare an f64 column to an f64
+                        // literal; `Expr::Cmp` over the same operands
+                        // evaluates with the identical `CmpOp::eval`.
+                        PredBody::Threshold { column, op, value } => {
+                            col(column).cmp_with(*op, lit(*value)).substitute(&env)
+                        }
+                        PredBody::Rust(_) => {
+                            bail!("opaque predicate {:?} in fused kernel", p.name)
+                        }
+                    };
+                    filter = Some(match filter.take() {
+                        None => e,
+                        Some(acc) => acc.and(e),
+                    });
+                }
+                other => bail!("non-fusible op {} in fused kernel", other.label()),
+            }
+            steps.push(op.label());
+        }
+        if steps.is_empty() {
+            bail!("fused kernel over an empty op chain");
+        }
+        Ok(FusedKernel { steps, filter, bindings })
+    }
+
+    /// Labels of the fused ops, in chain order.
+    pub fn steps(&self) -> &[String] {
+        &self.steps
+    }
+
+    /// The output schema for a given chain-input schema.
+    pub fn out_schema(&self, input: &Schema) -> Result<Schema> {
+        match &self.bindings {
+            None => Ok(input.clone()),
+            Some(binds) => {
+                let mut cols = Vec::with_capacity(binds.len());
+                for (n, e) in binds {
+                    let t = e
+                        .dtype(input)
+                        .with_context(|| format!("kernel binding {n:?}"))?;
+                    cols.push((n.clone(), t));
+                }
+                Ok(Schema::from_owned(cols))
+            }
+        }
+    }
+
+    /// Run the kernel: one selection pass for all filters, then each
+    /// output column evaluated directly over the surviving rows.  The
+    /// only table built is the output (and a filter-only chain returns a
+    /// zero-copy selection view, building nothing at all).
+    pub fn execute(&self, table: Table) -> Result<Table> {
+        let grouping = table.grouping().map(|s| s.to_string());
+        let view = match &self.filter {
+            Some(pred) => {
+                let sel = pred
+                    .eval_sel(&table)
+                    .with_context(|| format!("kernel filter in {}", self.label()))?;
+                table.select(sel)
+            }
+            None => table,
+        };
+        let Some(binds) = &self.bindings else {
+            // Filter-only chain: the selection view *is* the result.
+            return Ok(view);
+        };
+        let out_schema = self.out_schema(view.schema())?;
+        // Duplicate bindings (common after substitution re-inlines a
+        // shared subtree) evaluate once and share the column.
+        let mut memo: BTreeMap<String, Column> = BTreeMap::new();
+        let mut cols = Vec::with_capacity(binds.len());
+        for (name, e) in binds {
+            let key = format!("{e}");
+            let c = match memo.get(&key) {
+                Some(c) => c.clone(),
+                None => {
+                    let c = e
+                        .eval(&view)
+                        .with_context(|| format!("kernel binding {name:?}"))?;
+                    memo.insert(key, c.clone());
+                    c
+                }
+            };
+            cols.push(c);
+        }
+        let mut out = Table::from_columns(out_schema, view.ids(), cols)?;
+        out.set_grouping(grouping)?;
+        Ok(out)
+    }
+
+    /// Display label, e.g. `kernel[map:a+filter:(conf Lt 0.5)]`.
+    pub fn label(&self) -> String {
+        format!("kernel[{}]", self.steps.join("+"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataflow::operator::{CmpOp, Func, Predicate};
+    use crate::dataflow::table::{DType, Value};
+
+    fn table() -> Table {
+        let mut t = Table::new(Schema::new(vec![
+            ("name", DType::Str),
+            ("conf", DType::F64),
+            ("n", DType::I64),
+        ]));
+        for (name, conf, n) in
+            [("a", 0.9, 1), ("b", 0.3, 2), ("a", 0.7, 3), ("c", 0.1, 4)]
+        {
+            t.push_fresh(vec![
+                Value::Str(name.into()),
+                Value::F64(conf),
+                Value::I64(n),
+            ])
+            .unwrap();
+        }
+        t
+    }
+
+    fn chain() -> Vec<OpKind> {
+        vec![
+            OpKind::Map(Func::select(
+                "scale",
+                vec![
+                    ("name", col("name")),
+                    ("x", col("conf") * lit(2.0)),
+                    ("n", col("n")),
+                ],
+            )),
+            OpKind::Filter(Predicate::expr(col("x").ge(lit(0.6)))),
+            OpKind::Map(Func::select(
+                "tag",
+                vec![
+                    ("label", col("name").concat(lit("-")).concat(col("n"))),
+                    ("x", col("x")),
+                ],
+            )),
+        ]
+    }
+
+    /// Staged reference: run the chain one op at a time through the
+    /// local executor's semantics (select → eval bindings, filter →
+    /// selection view).
+    fn staged(ops: &[OpKind], mut t: Table) -> Table {
+        use crate::dataflow::exec_local::apply_op;
+        use crate::dataflow::operator::ExecCtx;
+        let ctx = ExecCtx::local();
+        for op in ops {
+            t = apply_op(&ctx, op, vec![t]).unwrap();
+        }
+        t
+    }
+
+    #[test]
+    fn kernel_matches_staged_chain() {
+        let ops = chain();
+        assert!(ops.iter().all(fusible));
+        let k = FusedKernel::from_ops(&ops).unwrap();
+        let t = table();
+        let fused = k.execute(t.clone()).unwrap();
+        let want = staged(&ops, t);
+        assert_eq!(fused, want);
+        assert_eq!(fused.encode(), want.encode());
+        // rows b (0.6) and a#2 (1.4) and a#0 (1.8) survive x >= 0.6.
+        assert_eq!(fused.len(), 3);
+        let labels: Vec<&String> =
+            fused.col_str("label").unwrap().iter().collect();
+        assert_eq!(labels, vec!["a-1", "b-2", "a-3"]);
+    }
+
+    #[test]
+    fn kernel_out_schema_and_label() {
+        let k = FusedKernel::from_ops(&chain()).unwrap();
+        let input = table();
+        let out = k.out_schema(input.schema()).unwrap();
+        assert_eq!(
+            out.cols(),
+            &[("label".to_string(), DType::Str), ("x".to_string(), DType::F64)]
+        );
+        assert!(k.label().starts_with("kernel[map:scale+filter:"));
+        assert_eq!(k.steps().len(), 3);
+    }
+
+    #[test]
+    fn empty_tables_and_all_false_selections() {
+        let ops = chain();
+        let k = FusedKernel::from_ops(&ops).unwrap();
+        // Empty input.
+        let empty = Table::new(table().schema().clone());
+        let fused = k.execute(empty.clone()).unwrap();
+        let want = staged(&ops, empty);
+        assert_eq!(fused, want);
+        assert_eq!(fused.encode(), want.encode());
+        assert!(fused.is_empty());
+        // All-false filter.
+        let ops = vec![
+            OpKind::Filter(Predicate::expr(col("conf").lt(lit(0.0)))),
+            OpKind::Map(Func::select("keep", vec![("n", col("n"))])),
+        ];
+        let k = FusedKernel::from_ops(&ops).unwrap();
+        let fused = k.execute(table()).unwrap();
+        let want = staged(&ops, table());
+        assert_eq!(fused.len(), 0);
+        assert_eq!(fused.schema(), want.schema());
+        assert_eq!(fused.encode(), want.encode());
+    }
+
+    #[test]
+    fn filter_only_chain_is_a_view() {
+        let ops = vec![
+            OpKind::Filter(Predicate::expr(col("n").ge(lit(2i64)))),
+            OpKind::Filter(Predicate::threshold("conf", CmpOp::Gt, 0.2)),
+        ];
+        assert!(ops.iter().all(fusible));
+        let k = FusedKernel::from_ops(&ops).unwrap();
+        let t = table();
+        let out = k.execute(t.clone()).unwrap();
+        assert_eq!(out.schema(), t.schema());
+        assert_eq!(out.len(), 2);
+        assert_eq!(out.value(0, "name").unwrap().as_str().unwrap(), "b");
+        assert_eq!(out.value(1, "name").unwrap().as_str().unwrap(), "a");
+        // Threshold filters convert to the identical comparison.
+        let want = staged(&ops, t);
+        assert_eq!(out, want);
+        assert_eq!(out.encode(), want.encode());
+    }
+
+    #[test]
+    fn grouping_survives_the_kernel() {
+        let ops = vec![
+            OpKind::Map(Func::select(
+                "keep",
+                vec![("name", col("name")), ("n", col("n"))],
+            )),
+            OpKind::Filter(Predicate::expr(col("n").gt(lit(1i64)))),
+        ];
+        let k = FusedKernel::from_ops(&ops).unwrap();
+        let mut t = table();
+        t.set_grouping(Some("name".to_string())).unwrap();
+        let out = k.execute(t).unwrap();
+        assert_eq!(out.grouping(), Some("name"));
+        assert_eq!(out.len(), 3);
+    }
+
+    #[test]
+    fn filters_interleave_with_selects_in_order() {
+        // filter → select → filter: the second filter reads a select
+        // output and must narrow only surviving rows.
+        let ops = vec![
+            OpKind::Filter(Predicate::expr(col("conf").gt(lit(0.2)))),
+            OpKind::Map(Func::select("x2", vec![("y", col("conf") * lit(10.0))])),
+            OpKind::Filter(Predicate::expr(col("y").lt(lit(8.0)))),
+        ];
+        let k = FusedKernel::from_ops(&ops).unwrap();
+        let t = table();
+        let fused = k.execute(t.clone()).unwrap();
+        let want = staged(&ops, t);
+        assert_eq!(fused, want);
+        assert_eq!(fused.len(), 2); // 0.3 and 0.7 pass both
+    }
+
+    #[test]
+    fn rejects_opaque_ops() {
+        use std::sync::Arc;
+        let rust_map = OpKind::Map(Func::rust(
+            "opaque",
+            None,
+            Arc::new(|_, t: &Table| Ok(t.clone())),
+        ));
+        assert!(!fusible(&rust_map));
+        assert!(FusedKernel::from_ops(&[rust_map]).is_err());
+        let sleepy = OpKind::Map(
+            Func::select("timed", vec![("n", col("n"))]).with_service_model("m"),
+        );
+        assert!(!fusible(&sleepy));
+        assert!(!fusible(&OpKind::Map(Func::identity("id"))));
+        assert!(!fusible(&OpKind::Union));
+        assert!(FusedKernel::from_ops(&[]).is_err());
+    }
+}

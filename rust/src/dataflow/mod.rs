@@ -12,14 +12,19 @@
 //!
 //! The [`expr`] module is the inspectable expression DSL: predicates and
 //! projections written as [`expr::Expr`] are visible to the compiler's
-//! filter-pushdown and projection-pruning rewrites, while closure-based
-//! ops remain opaque (and are simply skipped by those rewrites).
+//! rewrites, while closure-based ops remain opaque (and are simply
+//! skipped by those rewrites).  Flow-level rewrites (canonicalize, CSE,
+//! DCE, filter pushdown, projection pruning) run under the [`passes`]
+//! pass manager; [`fused`] compiles maximal Expr-op chains into
+//! single-pass vectorized kernels.
 
 pub mod compiler;
 pub mod exec_local;
 pub mod expr;
 pub mod flow;
+pub mod fused;
 pub mod operator;
+pub mod passes;
 pub mod rowref;
 pub mod table;
 pub mod v2;
@@ -27,6 +32,8 @@ pub mod v2;
 pub use compiler::{compile, compile_for_slo, OptFlags, Plan};
 pub use expr::{col, lit, ArithOp, Expr};
 pub use flow::{Dataflow, NodeRef};
+pub use fused::FusedKernel;
+pub use passes::{Pass, PassManager, RewriteJournal};
 pub use operator::{
     AggFn, CmpOp, ExecCtx, Func, FuncBody, JoinHow, LookupKey, ModelBinding, OpKind,
     PredBody, Predicate, SleepDist,

@@ -506,6 +506,10 @@ pub enum OpKind {
     /// Encapsulated chain of single-input operators (created by the
     /// fusion rewrite; §4 Operator Fusion).
     Fuse(Vec<OpKind>),
+    /// A chain of Expr-based map/filter stages compiled into one
+    /// vectorized single-pass evaluation (data-plane fusion; created by
+    /// the compiler's kernel-fusion pass, never by the builder API).
+    FusedKernel(super::fused::FusedKernel),
 }
 
 impl OpKind {
@@ -524,6 +528,7 @@ impl OpKind {
                 let inner: Vec<String> = ops.iter().map(|o| o.label()).collect();
                 format!("fuse[{}]", inner.join("+"))
             }
+            OpKind::FusedKernel(k) => k.label(),
         }
     }
 

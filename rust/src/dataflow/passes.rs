@@ -1,0 +1,1259 @@
+//! The flow-level rewrite pass manager.
+//!
+//! Every dataflow→dataflow rewrite is a [`Pass`]: a named in-place
+//! transformation that reports whether it changed the flow.  The
+//! [`PassManager`] runs a pipeline of passes in repeated sweeps until a
+//! whole sweep fires nothing (fixpoint), recording one
+//! [`JournalEntry`] per pass application in a [`RewriteJournal`] so
+//! callers — tests, benches, the planner's explain path — can assert
+//! exactly which rewrites fired.
+//!
+//! The standard pipeline ([`PassManager::standard`]) is
+//!
+//! 1. **competitive** — replicate marked map operators k ways behind an
+//!    `anyof` (only when [`OptFlags::competitive`] is non-empty),
+//! 2. **canonicalize** — [`Expr::simplified`] over every inspectable
+//!    predicate and select binding,
+//! 3. **cse** — dedupe identical sibling stages (consumers of the
+//!    duplicate are remapped onto the survivor; the orphan is left for
+//!    DCE) and hoist structurally-identical `Expr` subtrees repeated
+//!    within one select into a chained select computing the subtree
+//!    once,
+//! 4. **dce** — drop operators whose outputs can never reach the flow
+//!    output,
+//! 5. **filter-pushdown** / **projection-pruning** — the PR 5 rewrites,
+//!    gated by their [`OptFlags`] as before.
+//!
+//! Cost-based ordering: [`PassManager::with_selectivity_hint`] (fed from
+//! profiler-observed selectivity, see
+//! [`Profile::with_observed_selectivity`](crate::planner::Profile::with_observed_selectivity))
+//! promotes filter pushdown to the front of the structural passes when
+//! profiling shows selective filters, so the flow shrinks before the
+//! more expensive analyses run.  Ordering only affects how much work the
+//! fixpoint does — every ordering converges to an equivalent flow.
+//!
+//! Passes rebuild flows exclusively through the [`Dataflow`] builder
+//! API, so every typecheck re-runs on each rewritten graph.
+
+use anyhow::{bail, Context, Result};
+use std::collections::{BTreeMap, BTreeSet, HashMap};
+
+use super::compiler::{op_traits, OptFlags};
+use super::expr::{col, Expr};
+use super::flow::{Dataflow, NodeRef};
+use super::operator::{AggFn, Func, FuncBody, LookupKey, OpKind, PredBody, Predicate};
+
+/// One named flow-level rewrite.
+pub trait Pass {
+    fn name(&self) -> &'static str;
+    /// Apply the rewrite in place; `Ok(true)` iff the flow changed.
+    fn run(&self, flow: &mut Dataflow) -> Result<bool>;
+}
+
+/// One pass application inside a [`RewriteJournal`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct JournalEntry {
+    /// Which fixpoint sweep this application belongs to (0-based).
+    pub sweep: usize,
+    pub pass: String,
+    pub changed: bool,
+}
+
+/// The record of every pass application in one [`PassManager::run`].
+#[derive(Debug, Clone, Default)]
+pub struct RewriteJournal {
+    pub entries: Vec<JournalEntry>,
+}
+
+impl RewriteJournal {
+    /// Did the named pass change the flow at least once?
+    pub fn fired(&self, pass: &str) -> bool {
+        self.entries.iter().any(|e| e.pass == pass && e.changed)
+    }
+
+    /// Total number of flow-changing pass applications.
+    pub fn n_changes(&self) -> usize {
+        self.entries.iter().filter(|e| e.changed).count()
+    }
+
+    /// Number of fixpoint sweeps run (the last sweep fires nothing).
+    pub fn sweeps(&self) -> usize {
+        self.entries.last().map_or(0, |e| e.sweep + 1)
+    }
+}
+
+/// Runs a pass pipeline to fixpoint over a [`Dataflow`].
+pub struct PassManager {
+    passes: Vec<Box<dyn Pass>>,
+    max_sweeps: usize,
+}
+
+impl PassManager {
+    /// An empty pipeline; add passes with [`PassManager::with_pass`].
+    pub fn empty() -> Self {
+        PassManager { passes: Vec::new(), max_sweeps: 10 }
+    }
+
+    /// The standard pipeline for the given optimization flags (see the
+    /// module docs for the pass list and order).
+    pub fn standard(opts: &OptFlags) -> Self {
+        let mut pm = PassManager::empty();
+        if !opts.competitive.is_empty() {
+            pm.passes
+                .push(Box::new(CompetitivePass { replicas: opts.competitive.clone() }));
+        }
+        pm.passes.push(Box::new(Canonicalize));
+        pm.passes.push(Box::new(CommonSubexpr));
+        pm.passes.push(Box::new(DeadCode));
+        if opts.filter_pushdown {
+            pm.passes.push(Box::new(FilterPushdown));
+        }
+        if opts.projection_pruning {
+            pm.passes.push(Box::new(ProjectionPruning));
+        }
+        pm
+    }
+
+    /// The standard pipeline, cost-ordered by profiler-observed
+    /// selectivity: the minimum stage invoke probability in `profile`
+    /// (see [`observed_selectivity`]) becomes the
+    /// [`with_selectivity_hint`](PassManager::with_selectivity_hint).
+    pub fn standard_with_profile(
+        opts: &OptFlags,
+        profile: &crate::planner::Profile,
+    ) -> Self {
+        PassManager::standard(opts).with_selectivity_hint(observed_selectivity(profile))
+    }
+
+    pub fn with_pass(mut self, pass: Box<dyn Pass>) -> Self {
+        self.passes.push(pass);
+        self
+    }
+
+    /// Cost-based pass ordering from profiler-observed selectivity.
+    /// `hint` is the minimum observed stage invoke probability (see
+    /// [`observed_selectivity`]); below 0.5 — fewer than half the
+    /// calibration rows reach the most-filtered stage — filter pushdown
+    /// is promoted to run right after canonicalize, so the selective
+    /// filters move (and shrink the flow) before the structural passes.
+    pub fn with_selectivity_hint(mut self, hint: f64) -> Self {
+        if hint < 0.5 {
+            if let Some(from) =
+                self.passes.iter().position(|p| p.name() == "filter-pushdown")
+            {
+                let pass = self.passes.remove(from);
+                let to = self
+                    .passes
+                    .iter()
+                    .position(|p| p.name() == "canonicalize")
+                    .map_or(0, |i| i + 1);
+                self.passes.insert(to, pass);
+            }
+        }
+        self
+    }
+
+    /// Pipeline order, for inspection and ordering tests.
+    pub fn pass_names(&self) -> Vec<&'static str> {
+        self.passes.iter().map(|p| p.name()).collect()
+    }
+
+    /// Run every pass in repeated sweeps until a whole sweep changes
+    /// nothing, journaling each application.
+    pub fn run(&self, flow: &Dataflow) -> Result<(Dataflow, RewriteJournal)> {
+        let mut cur = flow.clone();
+        let mut journal = RewriteJournal::default();
+        for sweep in 0..self.max_sweeps {
+            let mut any = false;
+            for pass in &self.passes {
+                let changed = pass
+                    .run(&mut cur)
+                    .with_context(|| format!("rewrite pass {:?}", pass.name()))?;
+                journal.entries.push(JournalEntry {
+                    sweep,
+                    pass: pass.name().to_string(),
+                    changed,
+                });
+                any |= changed;
+            }
+            if !any {
+                break;
+            }
+        }
+        Ok((cur, journal))
+    }
+}
+
+/// Minimum observed invoke probability across a profiled plan's stages —
+/// the pass manager's selectivity hint.  A stage skipped for most
+/// calibration requests means an upstream filter is selective; feeding
+/// this into [`PassManager::with_selectivity_hint`] orders pushdown
+/// first.  Profiles updated via
+/// [`Profile::with_observed_selectivity`](crate::planner::Profile::with_observed_selectivity)
+/// carry live-traffic selectivity here.
+pub fn observed_selectivity(profile: &crate::planner::Profile) -> f64 {
+    profile.iter().map(|s| s.invoke_prob).fold(1.0, f64::min)
+}
+
+// ---------------------------------------------------------------------
+// Shared rebuild plumbing
+// ---------------------------------------------------------------------
+
+/// Re-add one operator to a flow under construction (shared plumbing for
+/// the passes, which rebuild through the builder API so every typecheck
+/// re-runs on the rewritten graph).
+pub(crate) fn add_op(out: &mut Dataflow, op: &OpKind, parents: &[NodeRef]) -> Result<NodeRef> {
+    Ok(match op {
+        OpKind::Map(f) => out.map(parents[0], f.clone())?,
+        OpKind::Filter(p) => out.filter(parents[0], p.clone())?,
+        OpKind::Groupby { column } => out.groupby(parents[0], column)?,
+        OpKind::Agg { agg, column } => out.agg(parents[0], *agg, column)?,
+        OpKind::Lookup { key, as_col } => out.lookup(parents[0], key.clone(), as_col)?,
+        OpKind::Join { key, how } => {
+            out.join(parents[0], parents[1], key.as_deref(), *how)?
+        }
+        OpKind::Union => out.union(parents)?,
+        OpKind::Anyof => out.anyof(parents)?,
+        OpKind::Input => bail!("cannot re-add the Input node"),
+        OpKind::Fuse(_) => bail!("fuse node before lowering"),
+        OpKind::FusedKernel(_) => bail!("kernel node before lowering"),
+    })
+}
+
+/// Rebuild the flow with each node's op replaced by `op_of(index, op)`.
+fn rebuild_with(
+    flow: &Dataflow,
+    op_of: impl Fn(usize, &OpKind) -> OpKind,
+) -> Result<Dataflow> {
+    let nodes = flow.nodes();
+    let mut out = Dataflow::new(&flow.name, flow.input_schema().clone());
+    let mut remap: Vec<NodeRef> = vec![out.input(); nodes.len()];
+    for (i, node) in nodes.iter().enumerate().skip(1) {
+        let parents: Vec<NodeRef> = node.parents.iter().map(|&p| remap[p]).collect();
+        remap[i] = add_op(&mut out, &op_of(i, &node.op), &parents)?;
+    }
+    out.set_output(remap[flow.output().context("no output")?.0])?;
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------
+// Competitive replication
+// ---------------------------------------------------------------------
+
+/// Replicate marked map operators k ways behind an `anyof` (the paper's
+/// competitive execution).  Idempotent: replicas are renamed `f#0..`, so
+/// a second sweep finds nothing to expand.
+struct CompetitivePass {
+    replicas: HashMap<String, usize>,
+}
+
+impl Pass for CompetitivePass {
+    fn name(&self) -> &'static str {
+        "competitive"
+    }
+
+    fn run(&self, flow: &mut Dataflow) -> Result<bool> {
+        let out = apply_competitive(flow, &self.replicas)?;
+        let changed = out.nodes().len() != flow.nodes().len();
+        *flow = out;
+        Ok(changed)
+    }
+}
+
+/// Replicate competitive map nodes and merge with anyof.
+fn apply_competitive(flow: &Dataflow, competitive: &HashMap<String, usize>) -> Result<Dataflow> {
+    if competitive.is_empty()
+        || !flow.nodes().iter().any(|n| match &n.op {
+            OpKind::Map(f) => competitive.get(&f.name).copied().unwrap_or(1) > 1,
+            _ => false,
+        })
+    {
+        return Ok(flow.clone());
+    }
+    // Rebuild the flow, expanding marked nodes.
+    let mut out = Dataflow::new(&flow.name, flow.input_schema().clone());
+    let mut remap: HashMap<usize, NodeRef> = HashMap::new();
+    remap.insert(0, out.input());
+    for (i, node) in flow.nodes().iter().enumerate().skip(1) {
+        let parents: Vec<NodeRef> = node.parents.iter().map(|p| remap[p]).collect();
+        let new_ref = match &node.op {
+            OpKind::Map(f) => {
+                let k = competitive.get(&f.name).copied().unwrap_or(1);
+                if k > 1 {
+                    let mut reps = Vec::with_capacity(k);
+                    for r in 0..k {
+                        let mut fr = f.clone();
+                        fr.name = format!("{}#{r}", f.name);
+                        reps.push(out.map(parents[0], fr)?);
+                    }
+                    out.anyof(&reps)?
+                } else {
+                    out.map(parents[0], f.clone())?
+                }
+            }
+            other => add_op(&mut out, other, &parents)?,
+        };
+        remap.insert(i, new_ref);
+    }
+    let old_out = flow.output().context("no output")?;
+    out.set_output(remap[&old_out.0])?;
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------
+// Canonicalize
+// ---------------------------------------------------------------------
+
+/// [`Expr::simplified`] over every inspectable predicate and select
+/// binding (double negation, boolean-literal folding, literal
+/// `if_then_else` conditions).  Simplified predicates regenerate their
+/// display-derived name.
+struct Canonicalize;
+
+impl Pass for Canonicalize {
+    fn name(&self) -> &'static str {
+        "canonicalize"
+    }
+
+    fn run(&self, flow: &mut Dataflow) -> Result<bool> {
+        let nodes = flow.nodes();
+        let mut repl: Vec<Option<OpKind>> = vec![None; nodes.len()];
+        for (i, node) in nodes.iter().enumerate() {
+            match &node.op {
+                OpKind::Filter(p) => {
+                    if let PredBody::Expr(e) = &p.body {
+                        let s = e.simplified();
+                        if s != *e {
+                            repl[i] = Some(OpKind::Filter(Predicate::expr(s)));
+                        }
+                    }
+                }
+                OpKind::Map(f) => {
+                    if let FuncBody::Select(binds) = &f.body {
+                        let simplified: Vec<(String, Expr)> = binds
+                            .iter()
+                            .map(|(n, e)| (n.clone(), e.simplified()))
+                            .collect();
+                        if simplified.iter().zip(binds).any(|(a, b)| a.1 != b.1) {
+                            let mut f2 = f.clone();
+                            f2.body = FuncBody::Select(simplified);
+                            repl[i] = Some(OpKind::Map(f2));
+                        }
+                    }
+                }
+                _ => {}
+            }
+        }
+        if repl.iter().all(Option::is_none) {
+            return Ok(false);
+        }
+        *flow = rebuild_with(flow, |i, op| repl[i].clone().unwrap_or_else(|| op.clone()))?;
+        Ok(true)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Common-subexpression elimination
+// ---------------------------------------------------------------------
+
+/// Dedupe identical sibling stages and hoist `Expr` subtrees repeated
+/// within one select.
+///
+/// Sibling merge only considers *inspectable, pure* single-input ops —
+/// Expr-based selects without a service model and threshold/Expr filters.
+/// Closures, models, identities, sleeps and lookups are never merged
+/// (opaque, timed, or stateful), and competitive replicas never collide
+/// because their names differ (`f#0` vs `f#1`).  Consumers of the
+/// duplicate are remapped onto the survivor; the orphaned duplicate is
+/// left in place for DCE to collect (the classic CSE-then-DCE split, so
+/// the journal shows both passes firing).
+struct CommonSubexpr;
+
+impl Pass for CommonSubexpr {
+    fn name(&self) -> &'static str {
+        "cse"
+    }
+
+    fn run(&self, flow: &mut Dataflow) -> Result<bool> {
+        let mut changed = false;
+        loop {
+            if let Some((keep, dup)) = find_duplicate(flow) {
+                *flow = merge_duplicate(flow, keep, dup)?;
+                changed = true;
+                continue;
+            }
+            if let Some((idx, sub)) = find_hoist(flow) {
+                *flow = hoist_subtree(flow, idx, &sub)?;
+                changed = true;
+                continue;
+            }
+            break;
+        }
+        Ok(changed)
+    }
+}
+
+/// The structural identity of an op for sibling merging, or `None` when
+/// the op must never be merged.
+fn cse_key(op: &OpKind) -> Option<String> {
+    match op {
+        OpKind::Map(f) => match &f.body {
+            FuncBody::Select(binds) if f.service_model.is_none() => Some(format!(
+                "select:{}|{:?}|{}",
+                f.name,
+                f.device,
+                binds
+                    .iter()
+                    .map(|(n, e)| format!("{n}={e}"))
+                    .collect::<Vec<_>>()
+                    .join(","),
+            )),
+            _ => None,
+        },
+        OpKind::Filter(p) => match &p.body {
+            PredBody::Expr(e) => Some(format!("expr-filter:{e}")),
+            PredBody::Threshold { column, op, value } => {
+                Some(format!("threshold-filter:{column} {op:?} {value}"))
+            }
+            PredBody::Rust(_) => None,
+        },
+        _ => None,
+    }
+}
+
+/// Find one (survivor, duplicate) pair of structurally-identical sibling
+/// stages.  Already-orphaned duplicates (no consumers) are skipped — they
+/// are DCE's job.
+fn find_duplicate(flow: &Dataflow) -> Option<(usize, usize)> {
+    let nodes = flow.nodes();
+    let children = flow.children();
+    let out_idx = flow.output().map(|r| r.0);
+    let mut seen: HashMap<(Vec<usize>, String), usize> = HashMap::new();
+    for (i, node) in nodes.iter().enumerate().skip(1) {
+        let Some(key) = cse_key(&node.op) else { continue };
+        match seen.entry((node.parents.clone(), key)) {
+            std::collections::hash_map::Entry::Occupied(e) => {
+                // Keep the first occurrence (lower index, so the survivor
+                // is already rebuilt when the duplicate's consumers remap
+                // onto it).  If the duplicate is the flow output, the
+                // output itself remaps onto the survivor.
+                if children[i].is_empty() && out_idx != Some(i) {
+                    continue; // already merged, awaiting DCE
+                }
+                return Some((*e.get(), i));
+            }
+            std::collections::hash_map::Entry::Vacant(v) => {
+                v.insert(i);
+            }
+        }
+    }
+    None
+}
+
+/// Rebuild with every consumer of `dup` remapped onto `keep`.  `dup`
+/// itself is re-added (now childless) for DCE to collect.
+fn merge_duplicate(flow: &Dataflow, keep: usize, dup: usize) -> Result<Dataflow> {
+    let nodes = flow.nodes();
+    let mut out = Dataflow::new(&flow.name, flow.input_schema().clone());
+    let mut remap: Vec<NodeRef> = vec![out.input(); nodes.len()];
+    let mut kept: Vec<NodeRef> = vec![out.input(); nodes.len()];
+    for (i, node) in nodes.iter().enumerate().skip(1) {
+        let parents: Vec<NodeRef> = node.parents.iter().map(|&p| remap[p]).collect();
+        kept[i] = add_op(&mut out, &node.op, &parents)?;
+        remap[i] = if i == dup { kept[keep] } else { kept[i] };
+    }
+    out.set_output(remap[flow.output().context("no output")?.0])?;
+    Ok(out)
+}
+
+/// The children of an expression node (empty for leaves).
+fn expr_children(e: &Expr) -> Vec<&Expr> {
+    match e {
+        Expr::Col(_) | Expr::Lit(_) => Vec::new(),
+        Expr::Cmp { lhs, rhs, .. } | Expr::Arith { lhs, rhs, .. } => vec![lhs, rhs],
+        Expr::And(a, b) | Expr::Or(a, b) | Expr::Concat(a, b) => vec![a, b],
+        Expr::Not(a) | Expr::Len(a) => vec![a],
+        Expr::If { cond, then, els } => vec![cond, then, els],
+        Expr::StartsWith { expr, prefix } => vec![expr, prefix],
+    }
+}
+
+/// Number of operator (non-leaf) nodes in the expression.
+fn expr_weight(e: &Expr) -> usize {
+    let kids = expr_children(e);
+    if kids.is_empty() {
+        0
+    } else {
+        1 + kids.iter().map(|c| expr_weight(c)).sum::<usize>()
+    }
+}
+
+/// Count every subexpression of weight ≥ 2 by its rendered form.
+fn count_subexprs(e: &Expr, counts: &mut BTreeMap<String, (Expr, usize)>) {
+    if expr_weight(e) >= 2 {
+        counts.entry(e.to_string()).or_insert_with(|| (e.clone(), 0)).1 += 1;
+    }
+    for child in expr_children(e) {
+        count_subexprs(child, counts);
+    }
+}
+
+/// Replace every occurrence of `target` (structural equality) in `e`.
+fn replace_expr(e: &Expr, target: &Expr, with: &Expr) -> Expr {
+    if e == target {
+        return with.clone();
+    }
+    let sub = |x: &Expr| Box::new(replace_expr(x, target, with));
+    match e {
+        Expr::Col(_) | Expr::Lit(_) => e.clone(),
+        Expr::Cmp { op, lhs, rhs } => {
+            Expr::Cmp { op: *op, lhs: sub(lhs), rhs: sub(rhs) }
+        }
+        Expr::Arith { op, lhs, rhs } => {
+            Expr::Arith { op: *op, lhs: sub(lhs), rhs: sub(rhs) }
+        }
+        Expr::And(a, b) => Expr::And(sub(a), sub(b)),
+        Expr::Or(a, b) => Expr::Or(sub(a), sub(b)),
+        Expr::Not(a) => Expr::Not(sub(a)),
+        Expr::If { cond, then, els } => {
+            Expr::If { cond: sub(cond), then: sub(then), els: sub(els) }
+        }
+        Expr::Concat(a, b) => Expr::Concat(sub(a), sub(b)),
+        Expr::StartsWith { expr, prefix } => {
+            Expr::StartsWith { expr: sub(expr), prefix: sub(prefix) }
+        }
+        Expr::Len(a) => Expr::Len(sub(a)),
+    }
+}
+
+/// Find a select whose bindings repeat a non-trivial subtree (weight ≥ 2,
+/// occurring ≥ 2 times); returns the heaviest such subtree.
+fn find_hoist(flow: &Dataflow) -> Option<(usize, Expr)> {
+    for (i, node) in flow.nodes().iter().enumerate().skip(1) {
+        let OpKind::Map(f) = &node.op else { continue };
+        if f.service_model.is_some() {
+            continue;
+        }
+        let FuncBody::Select(binds) = &f.body else { continue };
+        let mut counts: BTreeMap<String, (Expr, usize)> = BTreeMap::new();
+        for (_, e) in binds {
+            count_subexprs(e, &mut counts);
+        }
+        let best = counts
+            .into_iter()
+            .filter(|(_, (_, n))| *n >= 2)
+            .map(|(render, (expr, _))| (expr_weight(&expr), render, expr))
+            .max_by(|a, b| (a.0, &a.1).cmp(&(b.0, &b.1)));
+        if let Some((_, _, sub)) = best {
+            return Some((i, sub));
+        }
+    }
+    None
+}
+
+/// Split the select at `idx` into two chained selects: the first computes
+/// `sub` once as a `__cse{k}` temporary (plus passthroughs of every input
+/// column the rewritten bindings still read), the second is the original
+/// bindings with `sub` replaced by the temporary.  Output schema is
+/// unchanged; the staged path evaluates the shared subtree once, and
+/// kernel fusion re-inlines the pair into a single-pass kernel.
+fn hoist_subtree(flow: &Dataflow, idx: usize, sub: &Expr) -> Result<Dataflow> {
+    let nodes = flow.nodes();
+    let OpKind::Map(f) = &nodes[idx].op else {
+        bail!("hoist target is not a map");
+    };
+    let FuncBody::Select(binds) = &f.body else {
+        bail!("hoist target is not a select");
+    };
+    let parent = nodes[idx].parents[0];
+    let input_schema = &nodes[parent].schema;
+    // A temp name free in both the input schema and the bindings.
+    let mut k = 0;
+    let tmp = loop {
+        let cand = format!("__cse{k}");
+        if !input_schema.has(&cand) && !binds.iter().any(|(n, _)| n == &cand) {
+            break cand;
+        }
+        k += 1;
+    };
+    let rewritten: Vec<(String, Expr)> = binds
+        .iter()
+        .map(|(n, e)| (n.clone(), replace_expr(e, sub, &col(&tmp))))
+        .collect();
+    // Input columns the rewritten bindings still read, plus the parent's
+    // grouping column (grouped tables re-assert grouping after every op).
+    let mut reads: BTreeSet<String> = rewritten
+        .iter()
+        .flat_map(|(_, e)| e.columns())
+        .filter(|c| c != &tmp)
+        .collect();
+    if let Some(g) = nodes[parent].grouping.as_deref() {
+        if g != "__rowid" && input_schema.has(g) {
+            reads.insert(g.to_string());
+        }
+    }
+    let mut first: Vec<(String, Expr)> = input_schema
+        .cols()
+        .iter()
+        .filter(|(n, _)| reads.contains(n))
+        .map(|(n, _)| (n.clone(), col(n)))
+        .collect();
+    first.push((tmp.clone(), sub.clone()));
+
+    let mut out = Dataflow::new(&flow.name, flow.input_schema().clone());
+    let mut remap: Vec<NodeRef> = vec![out.input(); nodes.len()];
+    for (i, node) in nodes.iter().enumerate().skip(1) {
+        let parents: Vec<NodeRef> = node.parents.iter().map(|&p| remap[p]).collect();
+        remap[i] = if i == idx {
+            let mut f1 = Func::select(
+                &format!("{}.cse", f.name),
+                first.iter().map(|(n, e)| (n.as_str(), e.clone())).collect(),
+            );
+            f1.device = f.device;
+            let mut f2 = Func::select(
+                &f.name,
+                rewritten.iter().map(|(n, e)| (n.as_str(), e.clone())).collect(),
+            );
+            f2.device = f.device;
+            let mid = out.map(parents[0], f1)?;
+            out.map(mid, f2)?
+        } else {
+            add_op(&mut out, &node.op, &parents)?
+        };
+    }
+    out.set_output(remap[flow.output().context("no output")?.0])?;
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------
+// Dead-code elimination
+// ---------------------------------------------------------------------
+
+/// Drop every operator that cannot reach the flow output.  Serving flows
+/// have no side effects, so a stage whose output is never consumed is
+/// pure waste — including the orphans the CSE sibling merge leaves
+/// behind.
+struct DeadCode;
+
+impl Pass for DeadCode {
+    fn name(&self) -> &'static str {
+        "dce"
+    }
+
+    fn run(&self, flow: &mut Dataflow) -> Result<bool> {
+        let nodes = flow.nodes();
+        let out_idx = flow.output().context("no output")?.0;
+        let mut live = vec![false; nodes.len()];
+        live[0] = true; // the input node is always live
+        let mut stack = vec![out_idx];
+        while let Some(i) = stack.pop() {
+            if std::mem::replace(&mut live[i], true) {
+                continue;
+            }
+            stack.extend(nodes[i].parents.iter().copied());
+        }
+        if live.iter().all(|&l| l) {
+            return Ok(false);
+        }
+        let mut out = Dataflow::new(&flow.name, flow.input_schema().clone());
+        let mut remap: Vec<NodeRef> = vec![out.input(); nodes.len()];
+        for (i, node) in nodes.iter().enumerate().skip(1) {
+            if !live[i] {
+                continue;
+            }
+            let parents: Vec<NodeRef> = node.parents.iter().map(|&p| remap[p]).collect();
+            remap[i] = add_op(&mut out, &node.op, &parents)?;
+        }
+        out.set_output(remap[out_idx])?;
+        *flow = out;
+        Ok(true)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Filter pushdown
+// ---------------------------------------------------------------------
+
+/// Push inspectable filters below upstream maps/lookups that do not
+/// produce the filtered columns, to fixpoint.  A selective filter then
+/// runs *before* an expensive stage, shrinking both its input row count
+/// and the bytes shipped to it.  Opaque (closure) predicates and closure
+/// maps are left untouched.
+struct FilterPushdown;
+
+impl Pass for FilterPushdown {
+    fn name(&self) -> &'static str {
+        "filter-pushdown"
+    }
+
+    fn run(&self, flow: &mut Dataflow) -> Result<bool> {
+        let mut changed = false;
+        while let Some((m_idx, f_idx)) = find_pushdown(flow) {
+            *flow = swap_filter_up(flow, m_idx, f_idx)?;
+            changed = true;
+        }
+        Ok(changed)
+    }
+}
+
+/// Is this op a pure projection — a select whose every binding passes an
+/// input column through unmodified?
+fn is_pure_projection(op: &OpKind) -> bool {
+    matches!(op, OpKind::Map(f) if matches!(&f.body, FuncBody::Select(binds)
+        if binds.iter().all(|(n, e)| matches!(e, Expr::Col(src) if src == n))))
+}
+
+/// Find one (map-or-lookup, filter) pair where the filter can move above
+/// its parent: the parent is single-input, has the filter as its only
+/// child, does not produce or modify any column the predicate reads, and
+/// the grandparent exposes those columns with identical dtypes.
+fn find_pushdown(flow: &Dataflow) -> Option<(usize, usize)> {
+    let nodes = flow.nodes();
+    let children = flow.children();
+    let out_idx = flow.output().map(|r| r.0);
+    for (fi, fnode) in nodes.iter().enumerate() {
+        let OpKind::Filter(pred) = &fnode.op else { continue };
+        let Some(cols) = pred.body.columns() else { continue };
+        let mi = fnode.parents[0];
+        let mnode = &nodes[mi];
+        if children[mi].len() != 1 || mnode.parents.len() != 1 {
+            continue;
+        }
+        // The parent's value must be consumed *only* through the filter:
+        // if the parent is the flow output, swapping would filter the
+        // output itself (e.g. a dead filter branch hanging off the
+        // output node).
+        if out_idx == Some(mi) {
+            continue;
+        }
+        // Hoisting above a pure projection gains nothing (it computes no
+        // columns and only narrows the rows) and would ping-pong with
+        // projection pruning's inserted projections — skip for a stable
+        // fixpoint.
+        if is_pure_projection(&mnode.op) {
+            continue;
+        }
+        let transparent = match &mnode.op {
+            OpKind::Map(func) => match &func.body {
+                FuncBody::Identity | FuncBody::Sleep(_) => true,
+                // A projection is transparent for a column it passes
+                // through unmodified (bound as a bare `Col` of itself).
+                FuncBody::Select(binds) => cols.iter().all(|c| {
+                    binds.iter().any(
+                        |(n, e)| n == c && matches!(e, Expr::Col(src) if src == c),
+                    )
+                }),
+                FuncBody::Model(b) => cols.iter().all(|c| b.passthrough.contains(c)),
+                FuncBody::Rust(_) => false,
+            },
+            OpKind::Lookup { as_col, .. } => !cols.contains(as_col),
+            _ => false,
+        };
+        if !transparent {
+            continue;
+        }
+        let gp = &nodes[mnode.parents[0]];
+        let types_match = cols.iter().all(|c| {
+            matches!(
+                (gp.schema.dtype_of(c), mnode.schema.dtype_of(c)),
+                (Ok(a), Ok(b)) if a == b
+            )
+        });
+        if types_match {
+            return Some((mi, fi));
+        }
+    }
+    None
+}
+
+/// Rebuild the flow with the filter at `f_idx` moved above its parent at
+/// `m_idx` (the filter now feeds the parent; everything that consumed the
+/// filter consumes the parent instead).
+fn swap_filter_up(flow: &Dataflow, m_idx: usize, f_idx: usize) -> Result<Dataflow> {
+    let nodes = flow.nodes();
+    let OpKind::Filter(pred) = &nodes[f_idx].op else {
+        bail!("pushdown target is not a filter");
+    };
+    let mut out = Dataflow::new(&flow.name, flow.input_schema().clone());
+    let mut remap: Vec<NodeRef> = vec![out.input(); nodes.len()];
+    for (i, node) in nodes.iter().enumerate().skip(1) {
+        if i == f_idx {
+            // The filter's consumers now read the (post-filter) parent.
+            remap[i] = remap[m_idx];
+            continue;
+        }
+        let parents: Vec<NodeRef> = node.parents.iter().map(|&p| remap[p]).collect();
+        remap[i] = if i == m_idx {
+            let filt = out.filter(parents[0], pred.clone())?;
+            add_op(&mut out, &node.op, &[filt])?
+        } else {
+            add_op(&mut out, &node.op, &parents)?
+        };
+    }
+    let old_out = flow.output().context("no output")?;
+    out.set_output(remap[old_out.0])?;
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------
+// Projection pruning
+// ---------------------------------------------------------------------
+
+/// Insert projections that drop columns no downstream operator reads, so
+/// unused payloads never cross a stage boundary.  Conservative: closure
+/// ops demand every column, and join/union parents are never narrowed.
+struct ProjectionPruning;
+
+impl Pass for ProjectionPruning {
+    fn name(&self) -> &'static str {
+        "projection-pruning"
+    }
+
+    fn run(&self, flow: &mut Dataflow) -> Result<bool> {
+        match prune_projections(flow)? {
+            Some(pruned) => {
+                *flow = pruned;
+                Ok(true)
+            }
+            None => Ok(false),
+        }
+    }
+}
+
+/// Columns of `parents[slot]`'s output that `node` reads, given the set
+/// of `node`'s own output columns demanded downstream (`None` = all).
+/// Returns `None` when the node is opaque or structurally requires every
+/// parent column (closures, joins, unions).
+fn parent_reads(
+    node: &super::flow::FlowNode,
+    my_need: &Option<BTreeSet<String>>,
+    parent_grouping: Option<&str>,
+) -> Option<BTreeSet<String>> {
+    let passthrough = |extra: &[&String]| -> Option<BTreeSet<String>> {
+        let mut s = my_need.as_ref()?.clone();
+        s.extend(extra.iter().map(|c| (*c).clone()));
+        Some(s)
+    };
+    let mut req: BTreeSet<String> = match &node.op {
+        OpKind::Map(f) => match &f.body {
+            FuncBody::Identity | FuncBody::Sleep(_) => passthrough(&[])?,
+            FuncBody::Select(binds) => {
+                binds.iter().flat_map(|(_, e)| e.columns()).collect()
+            }
+            FuncBody::Model(b) => {
+                b.input_cols.iter().chain(b.passthrough.iter()).cloned().collect()
+            }
+            FuncBody::Rust(_) => return None,
+        },
+        OpKind::Filter(p) => {
+            let cols = p.body.columns()?;
+            passthrough(&cols.iter().collect::<Vec<_>>())?
+        }
+        OpKind::Groupby { column } => {
+            if column == "__rowid" {
+                passthrough(&[])?
+            } else {
+                passthrough(&[column])?
+            }
+        }
+        OpKind::Agg { agg, column } => {
+            if *agg == AggFn::ArgMax {
+                // ArgMax returns whole attaining rows: output schema ==
+                // input schema, so parent needs downstream's columns too.
+                passthrough(&[column])?
+            } else {
+                std::iter::once(column.clone()).collect()
+            }
+        }
+        OpKind::Lookup { key, as_col } => {
+            let mut s = my_need.as_ref()?.clone();
+            s.remove(as_col);
+            if let LookupKey::Column(c) = key {
+                s.insert(c.clone());
+            }
+            s
+        }
+        // Joins concatenate (and rename) both sides; unions require
+        // schema-identical parents that may have other consumers.  Treat
+        // both as reading everything rather than risk schema drift.
+        OpKind::Join { .. } | OpKind::Union | OpKind::Anyof => return None,
+        OpKind::Input | OpKind::Fuse(_) | OpKind::FusedKernel(_) => return None,
+    };
+    // The grouping column must survive any inserted projection: grouped
+    // tables re-assert their grouping after every op.
+    if let Some(g) = parent_grouping {
+        if g != "__rowid" {
+            req.insert(g.to_string());
+        }
+    }
+    Some(req)
+}
+
+/// Compute and apply projection insertions; `None` when nothing to do.
+fn prune_projections(flow: &Dataflow) -> Result<Option<Dataflow>> {
+    let nodes = flow.nodes();
+    let children = flow.children();
+    let out_idx = flow.output().context("no output")?.0;
+    // needed[i]: Some(cols) = columns of node i's output read downstream;
+    // None = all (the output node, or an opaque/structural consumer).
+    let mut needed: Vec<Option<BTreeSet<String>>> =
+        vec![Some(BTreeSet::new()); nodes.len()];
+    needed[out_idx] = None;
+    for i in (1..nodes.len()).rev() {
+        let my_need = needed[i].clone();
+        for &p in &nodes[i].parents {
+            let req = parent_reads(&nodes[i], &my_need, nodes[p].grouping.as_deref());
+            match (req, &mut needed[p]) {
+                (None, slot) => *slot = None,
+                (Some(r), Some(acc)) => acc.extend(r),
+                (Some(_), None) => {}
+            }
+        }
+    }
+    // Decide insertions: keep schema order; skip full/empty/no-op cases.
+    let mut prune: Vec<Option<Vec<String>>> = vec![None; nodes.len()];
+    let mut any = false;
+    for (i, node) in nodes.iter().enumerate() {
+        if i == out_idx {
+            continue;
+        }
+        let Some(need) = &needed[i] else { continue };
+        if need.is_empty() {
+            continue; // dead branch or nothing read: leave untouched
+        }
+        // Already narrowed: the sole consumer is a pure projection
+        // (inserted by an earlier sweep) — re-inserting would stack
+        // projections forever.
+        if children[i].len() == 1 && is_pure_projection(&nodes[children[i][0]].op) {
+            continue;
+        }
+        let keep: Vec<String> = node
+            .schema
+            .cols()
+            .iter()
+            .map(|(n, _)| n.clone())
+            .filter(|n| need.contains(n))
+            .collect();
+        if keep.is_empty() || keep.len() == node.schema.cols().len() {
+            continue;
+        }
+        prune[i] = Some(keep);
+        any = true;
+    }
+    if !any {
+        return Ok(None);
+    }
+    // Rebuild with a projection inserted after each narrowed producer.
+    let mut out = Dataflow::new(&flow.name, flow.input_schema().clone());
+    let mut remap: Vec<NodeRef> = vec![out.input(); nodes.len()];
+    let insert = |out: &mut Dataflow, at: NodeRef, i: usize| -> Result<NodeRef> {
+        match &prune[i] {
+            None => Ok(at),
+            Some(keep) => {
+                // An upstream prune may already have narrowed this node's
+                // rebuilt schema to exactly `keep` — skip the no-op.
+                let cur = out.node(at).schema.cols();
+                if cur.len() == keep.len()
+                    && cur.iter().zip(keep).all(|((n, _), k)| n == k)
+                {
+                    return Ok(at);
+                }
+                let cols: Vec<&str> = keep.iter().map(String::as_str).collect();
+                // Inherit the producer's device class so the projection
+                // fuses into the producing stage instead of splitting a
+                // same-device chain.
+                let (dev, _) = op_traits(&nodes[i].op, false);
+                out.map(at, Func::project(&format!("prune{i}"), &cols).with_device(dev))
+            }
+        }
+    };
+    let at0 = out.input();
+    remap[0] = insert(&mut out, at0, 0)?;
+    for (i, node) in nodes.iter().enumerate().skip(1) {
+        let parents: Vec<NodeRef> = node.parents.iter().map(|&p| remap[p]).collect();
+        let r = add_op(&mut out, &node.op, &parents)?;
+        remap[i] = insert(&mut out, r, i)?;
+    }
+    out.set_output(remap[out_idx])?;
+    Ok(Some(out))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataflow::exec_local::execute;
+    use crate::dataflow::expr::lit;
+    use crate::dataflow::operator::{CmpOp, ExecCtx};
+    use crate::dataflow::table::{DType, Schema, Table, Value};
+
+    fn schema() -> Schema {
+        Schema::new(vec![("name", DType::Str), ("conf", DType::F64), ("n", DType::I64)])
+    }
+
+    fn table() -> Table {
+        let mut t = Table::new(schema());
+        for (name, conf, n) in
+            [("a", 0.9, 1), ("b", 0.3, 2), ("a", 0.7, 3), ("c", 0.1, 4)]
+        {
+            t.push_fresh(vec![
+                Value::Str(name.into()),
+                Value::F64(conf),
+                Value::I64(n),
+            ])
+            .unwrap();
+        }
+        t
+    }
+
+    fn assert_equivalent(before: &Dataflow, after: &Dataflow) {
+        let ctx = ExecCtx::local();
+        let a = execute(before, table(), &ctx).unwrap();
+        let b = execute(after, table(), &ctx).unwrap();
+        assert_eq!(a.encode(), b.encode());
+    }
+
+    #[test]
+    fn canonicalize_folds_literal_booleans() {
+        let mut fl = Dataflow::new("c", schema());
+        let f = fl
+            .filter(
+                fl.input(),
+                Predicate::expr(col("conf").lt(lit(0.5)).not().not().and(lit(true))),
+            )
+            .unwrap();
+        let s = fl
+            .map(
+                f,
+                Func::select(
+                    "pick",
+                    vec![("n", lit(true).if_then_else(col("n"), lit(0i64)))],
+                ),
+            )
+            .unwrap();
+        fl.set_output(s).unwrap();
+        let (out, journal) =
+            PassManager::standard(&OptFlags::none()).run(&fl).unwrap();
+        assert!(journal.fired("canonicalize"), "{journal:?}");
+        let labels: Vec<String> = out.nodes().iter().map(|n| n.op.label()).collect();
+        assert!(
+            labels.iter().any(|l| l == "filter:(conf Lt 0.5)"),
+            "{labels:?}"
+        );
+        assert_equivalent(&fl, &out);
+        // Fixpoint: a second run changes nothing.
+        let (_, j2) = PassManager::standard(&OptFlags::none()).run(&out).unwrap();
+        assert_eq!(j2.n_changes(), 0, "{j2:?}");
+        assert_eq!(j2.sweeps(), 1);
+    }
+
+    #[test]
+    fn cse_merges_identical_siblings_and_dce_collects_the_orphan() {
+        // Twin selects (same name, same bindings, same parent) feeding a
+        // union: CSE remaps the union onto one survivor, DCE removes the
+        // orphaned twin.
+        let mut fl = Dataflow::new("twins", schema());
+        let norm = |fl: &mut Dataflow, at| {
+            fl.map(
+                at,
+                Func::select(
+                    "norm",
+                    vec![("name", col("name")), ("score", col("conf") * lit(100.0))],
+                ),
+            )
+            .unwrap()
+        };
+        let input = fl.input();
+        let a = norm(&mut fl, input);
+        let b = norm(&mut fl, input);
+        let u = fl.union(&[a, b]).unwrap();
+        fl.set_output(u).unwrap();
+        let (out, journal) =
+            PassManager::standard(&OptFlags::none()).run(&fl).unwrap();
+        assert!(journal.fired("cse"), "{journal:?}");
+        assert!(journal.fired("dce"), "{journal:?}");
+        // input + one select + union.
+        assert_eq!(out.nodes().len(), 3);
+        assert_equivalent(&fl, &out);
+    }
+
+    #[test]
+    fn cse_never_merges_opaque_or_timed_ops() {
+        use crate::dataflow::operator::SleepDist;
+        let mut fl = Dataflow::new("sleepy", schema());
+        let dist =
+            SleepDist::GammaMs { k: 3.0, theta: 2.0, unit_ms: 1.0, base_ms: 0.0 };
+        let input = fl.input();
+        let a = fl.map(input, Func::sleep("s", dist.clone())).unwrap();
+        let b = fl.map(input, Func::sleep("s", dist)).unwrap();
+        let u = fl.union(&[a, b]).unwrap();
+        fl.set_output(u).unwrap();
+        let (out, journal) =
+            PassManager::standard(&OptFlags::none()).run(&fl).unwrap();
+        assert!(!journal.fired("cse"), "{journal:?}");
+        assert_eq!(out.nodes().len(), fl.nodes().len());
+    }
+
+    #[test]
+    fn cse_hoists_repeated_subtrees_into_a_chained_select() {
+        // `cond` (weight 3) appears in both bindings: hoisted into a
+        // `__cse0` temporary computed once.
+        let mut fl = Dataflow::new("hoist", schema());
+        let cond = col("conf").ge(lit(0.5)).or(col("n").gt(lit(2i64)));
+        let s = fl
+            .map(
+                fl.input(),
+                Func::select(
+                    "pick",
+                    vec![
+                        ("n", cond.clone().if_then_else(col("n"), lit(0i64))),
+                        ("conf", cond.if_then_else(col("conf"), lit(0.0))),
+                    ],
+                ),
+            )
+            .unwrap();
+        fl.set_output(s).unwrap();
+        let (out, journal) =
+            PassManager::standard(&OptFlags::none()).run(&fl).unwrap();
+        assert!(journal.fired("cse"), "{journal:?}");
+        let labels: Vec<String> = out.nodes().iter().map(|n| n.op.label()).collect();
+        assert_eq!(labels, vec!["input", "map:pick.cse", "map:pick"], "{labels:?}");
+        // The first select computes the shared subtree once.
+        let OpKind::Map(f1) = &out.nodes()[1].op else { panic!() };
+        let FuncBody::Select(binds) = &f1.body else { panic!() };
+        assert!(binds.iter().any(|(n, _)| n == "__cse0"), "{binds:?}");
+        assert_equivalent(&fl, &out);
+        // Terminates: re-running finds nothing further to hoist.
+        let (_, j2) = PassManager::standard(&OptFlags::none()).run(&out).unwrap();
+        assert_eq!(j2.n_changes(), 0, "{j2:?}");
+    }
+
+    #[test]
+    fn dce_drops_dead_branches() {
+        let mut fl = Dataflow::new("dead", schema());
+        let m = fl.map(fl.input(), Func::identity("keep")).unwrap();
+        let _dead = fl
+            .filter(m, Predicate::expr(col("conf").lt(lit(0.5))))
+            .unwrap();
+        fl.set_output(m).unwrap();
+        let (out, journal) =
+            PassManager::standard(&OptFlags::none()).run(&fl).unwrap();
+        assert!(journal.fired("dce"), "{journal:?}");
+        assert_eq!(out.nodes().len(), 2); // input + keep
+        assert_equivalent(&fl, &out);
+    }
+
+    #[test]
+    fn competitive_runs_as_a_pass_and_is_idempotent() {
+        use crate::dataflow::operator::SleepDist;
+        let mut fl = Dataflow::new("comp", schema());
+        let slow = fl
+            .map(
+                fl.input(),
+                Func::sleep(
+                    "variable",
+                    SleepDist::GammaMs { k: 3.0, theta: 2.0, unit_ms: 1.0, base_ms: 0.0 },
+                ),
+            )
+            .unwrap();
+        fl.set_output(slow).unwrap();
+        let opts = OptFlags::none().with_competitive("variable", 3);
+        let (out, journal) = PassManager::standard(&opts).run(&fl).unwrap();
+        assert!(journal.fired("competitive"), "{journal:?}");
+        // input + 3 replicas + anyof.
+        assert_eq!(out.nodes().len(), 5);
+        let (out2, j2) = PassManager::standard(&opts).run(&out).unwrap();
+        assert!(!j2.fired("competitive"), "{j2:?}");
+        assert_eq!(out2.nodes().len(), 5);
+    }
+
+    #[test]
+    fn selectivity_hint_promotes_pushdown() {
+        let opts = OptFlags::none().with_pushdown().with_pruning();
+        let default_order = PassManager::standard(&opts).pass_names();
+        assert_eq!(
+            default_order,
+            vec!["canonicalize", "cse", "dce", "filter-pushdown", "projection-pruning"]
+        );
+        let selective =
+            PassManager::standard(&opts).with_selectivity_hint(0.1).pass_names();
+        assert_eq!(
+            selective,
+            vec!["canonicalize", "filter-pushdown", "cse", "dce", "projection-pruning"]
+        );
+        let unselective =
+            PassManager::standard(&opts).with_selectivity_hint(0.9).pass_names();
+        assert_eq!(unselective, default_order);
+    }
+
+    #[test]
+    fn pushdown_and_pruning_fixpoint_is_stable() {
+        // A flow that exercises both rewrites together: wide input, a
+        // transparent map, a selective filter, and a narrow output.
+        let mut fl = Dataflow::new(
+            "both",
+            Schema::new(vec![("conf", DType::F64), ("img", DType::F32s)]),
+        );
+        let emb = fl.map(fl.input(), Func::identity("embed")).unwrap();
+        let f = fl
+            .filter(emb, Predicate::expr(col("conf").lt(lit(0.5))))
+            .unwrap();
+        let s = fl
+            .map(f, Func::select("out", vec![("score", col("conf") * lit(2.0))]))
+            .unwrap();
+        fl.set_output(s).unwrap();
+        let opts = OptFlags::none().with_pushdown().with_pruning();
+        let (out, journal) = PassManager::standard(&opts).run(&fl).unwrap();
+        assert!(journal.fired("filter-pushdown"), "{journal:?}");
+        assert!(journal.fired("projection-pruning"), "{journal:?}");
+        assert!(journal.sweeps() < 10, "no fixpoint: {journal:?}");
+        // Stability: running the whole pipeline again changes nothing.
+        let (out2, j2) = PassManager::standard(&opts).run(&out).unwrap();
+        assert_eq!(j2.n_changes(), 0, "{j2:?}");
+        assert_eq!(out2.nodes().len(), out.nodes().len());
+        let ctx = ExecCtx::local();
+        let mut t = Table::new(Schema::new(vec![
+            ("conf", DType::F64),
+            ("img", DType::F32s),
+        ]));
+        for conf in [0.1, 0.6, 0.4] {
+            t.push_fresh(vec![Value::F64(conf), Value::f32s(vec![conf as f32])])
+                .unwrap();
+        }
+        let a = execute(&fl, t.clone(), &ctx).unwrap();
+        let b = execute(&out, t, &ctx).unwrap();
+        assert_eq!(a.encode(), b.encode());
+    }
+
+    #[test]
+    fn journal_records_sweeps_and_summary_counts() {
+        let mut fl = Dataflow::new("j", schema());
+        let m = fl.map(fl.input(), Func::identity("id")).unwrap();
+        fl.set_output(m).unwrap();
+        let (_, journal) = PassManager::standard(&OptFlags::none()).run(&fl).unwrap();
+        // Nothing fires on a trivial flow: one sweep, no changes.
+        assert_eq!(journal.sweeps(), 1);
+        assert_eq!(journal.n_changes(), 0);
+        assert!(!journal.fired("cse"));
+        let per_sweep = journal.entries.iter().filter(|e| e.sweep == 0).count();
+        assert_eq!(per_sweep, 3); // canonicalize, cse, dce
+    }
+
+    #[test]
+    fn threshold_filter_siblings_merge() {
+        let mut fl = Dataflow::new("tf", schema());
+        let input = fl.input();
+        let a = fl
+            .filter(input, Predicate::threshold("conf", CmpOp::Gt, 0.5))
+            .unwrap();
+        let b = fl
+            .filter(input, Predicate::threshold("conf", CmpOp::Gt, 0.5))
+            .unwrap();
+        let u = fl.union(&[a, b]).unwrap();
+        fl.set_output(u).unwrap();
+        let (out, journal) =
+            PassManager::standard(&OptFlags::none()).run(&fl).unwrap();
+        assert!(journal.fired("cse"), "{journal:?}");
+        assert_eq!(out.nodes().len(), 3); // input + filter + union
+        assert_equivalent(&fl, &out);
+    }
+}

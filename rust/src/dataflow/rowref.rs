@@ -21,6 +21,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::util::codec::{Reader, Writer};
 
+use super::expr::{ArithOp, Expr};
 use super::operator::{AggFn, CmpOp, JoinHow};
 use super::table::{DType, GroupKey, Row, Schema, Table, Value};
 
@@ -307,6 +308,161 @@ fn agg_rows(
     })
 }
 
+// ---------------------------------------------------------------------
+// Row-at-a-time Expr reference semantics
+// ---------------------------------------------------------------------
+
+/// Scalar (row-at-a-time) [`Expr`] evaluation: the reference semantics
+/// the vectorized evaluator in [`super::expr`] — and the fused kernels
+/// built on it — must reproduce cell-for-cell.  Mirrors the vectorized
+/// promotion rules exactly: wrapping i64 arithmetic except division,
+/// exact i64 comparison, f64 promotion otherwise, and `to_string`
+/// rendering for concatenation.
+pub fn eval_expr_row(schema: &Schema, row: &Row, e: &Expr) -> Result<Value> {
+    let num = |v: &Value| -> Result<f64> {
+        match v {
+            Value::I64(x) => Ok(*x as f64),
+            Value::F64(x) => Ok(*x),
+            other => bail!("expected numeric operand, got {}", other.dtype()),
+        }
+    };
+    let render = |v: Value| -> Result<String> {
+        Ok(match v {
+            Value::Str(s) => s,
+            Value::I64(x) => x.to_string(),
+            Value::F64(x) => x.to_string(),
+            Value::Bool(x) => x.to_string(),
+            other => bail!("expected formattable scalar operand, got {}", other.dtype()),
+        })
+    };
+    Ok(match e {
+        Expr::Col(c) => row.values[schema.index_of(c)?].clone(),
+        Expr::Lit(v) => match v {
+            Value::Str(_) | Value::I64(_) | Value::F64(_) | Value::Bool(_) => v.clone(),
+            other => bail!("unsupported literal dtype {}", other.dtype()),
+        },
+        Expr::Arith { op, lhs, rhs } => {
+            let l = eval_expr_row(schema, row, lhs)?;
+            let r = eval_expr_row(schema, row, rhs)?;
+            match (&l, &r) {
+                (Value::I64(x), Value::I64(y)) if *op != ArithOp::Div => {
+                    Value::I64(match op {
+                        ArithOp::Add => x.wrapping_add(*y),
+                        ArithOp::Sub => x.wrapping_sub(*y),
+                        ArithOp::Mul => x.wrapping_mul(*y),
+                        ArithOp::Div => unreachable!(),
+                    })
+                }
+                _ => {
+                    let (x, y) = (num(&l)?, num(&r)?);
+                    Value::F64(match op {
+                        ArithOp::Add => x + y,
+                        ArithOp::Sub => x - y,
+                        ArithOp::Mul => x * y,
+                        ArithOp::Div => x / y,
+                    })
+                }
+            }
+        }
+        Expr::Cmp { op, lhs, rhs } => {
+            let l = eval_expr_row(schema, row, lhs)?;
+            let r = eval_expr_row(schema, row, rhs)?;
+            let eq_only = |x_eq_y: bool| match op {
+                CmpOp::Eq => Ok(x_eq_y),
+                CmpOp::Ne => Ok(!x_eq_y),
+                other => bail!("ordering comparison {other:?} over non-numeric operands"),
+            };
+            Value::Bool(match (&l, &r) {
+                (Value::Str(x), Value::Str(y)) => eq_only(x == y)?,
+                (Value::Bool(x), Value::Bool(y)) => eq_only(x == y)?,
+                // Exact integer comparison, as in the vectorized path.
+                (Value::I64(x), Value::I64(y)) => match op {
+                    CmpOp::Lt => x < y,
+                    CmpOp::Le => x <= y,
+                    CmpOp::Gt => x > y,
+                    CmpOp::Ge => x >= y,
+                    CmpOp::Eq => x == y,
+                    CmpOp::Ne => x != y,
+                },
+                _ => op.eval(num(&l)?, num(&r)?),
+            })
+        }
+        Expr::And(a, b) => {
+            let x = eval_expr_row(schema, row, a)?.as_bool()?;
+            let y = eval_expr_row(schema, row, b)?.as_bool()?;
+            Value::Bool(x && y)
+        }
+        Expr::Or(a, b) => {
+            let x = eval_expr_row(schema, row, a)?.as_bool()?;
+            let y = eval_expr_row(schema, row, b)?.as_bool()?;
+            Value::Bool(x || y)
+        }
+        Expr::Not(a) => Value::Bool(!eval_expr_row(schema, row, a)?.as_bool()?),
+        Expr::If { cond, then, els } => {
+            let branch = if eval_expr_row(schema, row, cond)?.as_bool()? {
+                then
+            } else {
+                els
+            };
+            let v = eval_expr_row(schema, row, branch)?;
+            if !matches!(
+                v,
+                Value::Str(_) | Value::I64(_) | Value::F64(_) | Value::Bool(_)
+            ) {
+                bail!("if_then_else over non-scalar branches ({})", v.dtype());
+            }
+            v
+        }
+        Expr::Concat(a, b) => {
+            let l = render(eval_expr_row(schema, row, a)?)?;
+            let r = render(eval_expr_row(schema, row, b)?)?;
+            Value::Str(format!("{l}{r}"))
+        }
+        Expr::StartsWith { expr, prefix } => {
+            let s = eval_expr_row(schema, row, expr)?;
+            let p = eval_expr_row(schema, row, prefix)?;
+            Value::Bool(s.as_str()?.starts_with(p.as_str()?))
+        }
+        Expr::Len(a) => Value::I64(eval_expr_row(schema, row, a)?.as_str()?.len() as i64),
+    })
+}
+
+/// `Func::select` evaluated row-at-a-time via [`eval_expr_row`] (one
+/// `Vec<Value>` rebuild per row — the pre-columnar projection cost).
+pub fn map_select(table: &RowTable, bindings: &[(String, Expr)]) -> Result<RowTable> {
+    let mut cols = Vec::with_capacity(bindings.len());
+    for (name, e) in bindings {
+        cols.push((name.clone(), e.dtype(&table.schema)?));
+    }
+    let mut out = RowTable::new(Schema::from_owned(cols));
+    for row in &table.rows {
+        let values = bindings
+            .iter()
+            .map(|(_, e)| eval_expr_row(&table.schema, row, e))
+            .collect::<Result<Vec<_>>>()?;
+        out.push(row.id, values)?;
+    }
+    out.set_grouping(table.grouping.clone())?;
+    Ok(out)
+}
+
+/// Expr filter evaluated row-at-a-time: the scalar reference for the
+/// vectorized `eval_sel` selection-narrowing path.
+pub fn filter_expr(table: &RowTable, e: &Expr) -> Result<RowTable> {
+    let t = e.dtype(&table.schema)?;
+    if t != DType::Bool {
+        bail!("predicate expression is not boolean ({t})");
+    }
+    let mut out = RowTable::new(table.schema.clone());
+    out.set_grouping(table.grouping.clone())?;
+    for row in &table.rows {
+        if eval_expr_row(&table.schema, row, e)?.as_bool()? {
+            out.push(row.id, row.values.clone())?;
+        }
+    }
+    Ok(out)
+}
+
 pub fn join(
     left: RowTable,
     right: RowTable,
@@ -436,5 +592,58 @@ mod tests {
         let rg = groupby(RowTable::from_table(&t), "name").unwrap();
         let row = agg(rg, AggFn::Sum, "conf").unwrap();
         assert_eq!(row.to_table().unwrap().encode(), col.encode());
+    }
+
+    #[test]
+    fn expr_select_oracle_matches_vectorized_eval() {
+        use crate::dataflow::expr::{col, lit};
+        use crate::dataflow::operator::Func;
+        let t = sample();
+        let bindings = vec![
+            (
+                "tag",
+                col("conf")
+                    .ge(lit(0.5))
+                    .if_then_else(lit("hi-").concat(col("name")), col("name")),
+            ),
+            ("twice", col("conf") * lit(2.0)),
+            ("short", col("name").length().le(lit(1i64))),
+        ];
+        let owned: Vec<(String, Expr)> = bindings
+            .iter()
+            .map(|(n, e)| (n.to_string(), e.clone()))
+            .collect();
+        let ctx = ExecCtx::local();
+        let vectorized =
+            exec_local::apply_map(&ctx, &Func::select("pick", bindings), t.clone()).unwrap();
+        let oracle = map_select(&RowTable::from_table(&t), &owned).unwrap();
+        assert_eq!(oracle.to_table().unwrap().encode(), vectorized.encode());
+    }
+
+    #[test]
+    fn expr_filter_oracle_matches_vectorized_eval() {
+        use crate::dataflow::expr::{col, lit};
+        let ctx = ExecCtx::local();
+        let cases = [
+            col("conf").ge(lit(0.5)).and(col("name").eq(lit("a"))),
+            col("conf").gt(lit(10.0)), // all-false selection
+            col("name").starts_with(lit("a")).or(col("conf").lt(lit(0.0))),
+        ];
+        for e in cases {
+            for t in [sample(), Table::new(sample().schema().clone())] {
+                let vectorized = exec_local::apply_filter(
+                    &ctx,
+                    &Predicate::expr(e.clone()),
+                    t.clone(),
+                )
+                .unwrap();
+                let oracle = filter_expr(&RowTable::from_table(&t), &e).unwrap();
+                assert_eq!(
+                    oracle.to_table().unwrap().encode(),
+                    vectorized.encode(),
+                    "expr {e}"
+                );
+            }
+        }
     }
 }

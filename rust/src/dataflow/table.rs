@@ -9,9 +9,12 @@
 //!
 //! * `filter` produces a selection vector over the same buffers (no cell
 //!   is touched, let alone copied);
-//! * `union` bulk-appends typed buffers — scalar columns are `memcpy`s
-//!   and vector/blob cells are `Arc`/[`ByteBuf`] handle copies, so large
-//!   payloads (images, probability vectors) are never duplicated;
+//! * `union` ([`Table::concat`]) is an O(1)-per-input **chunk-list
+//!   splice**: each input's shared buffers (and selection view) are
+//!   appended to the output's segment list as-is, and the segments are
+//!   consolidated into contiguous storage lazily, only when a downstream
+//!   kernel first needs random access — so union trees and fan-in
+//!   ensembles never copy a cell per level;
 //! * batch demultiplexing in the executor is a selection split;
 //! * model-input extraction is a typed column read instead of per-row
 //!   `Value` matching.
@@ -33,6 +36,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
+use once_cell::sync::OnceCell;
 
 use crate::util::codec::{ByteBuf, Bytes, Reader, Writer};
 
@@ -634,9 +638,46 @@ impl TableData {
     }
 }
 
+/// One extra storage segment of a chunked table: shared buffers plus an
+/// optional row-selection view, exactly the shape of a table head.
+/// Produced by [`Table::concat`]'s O(1) splice.
+#[derive(Debug, Clone)]
+struct Chunk {
+    data: Arc<TableData>,
+    sel: Option<Arc<Vec<u32>>>,
+}
+
+impl Chunk {
+    fn len(&self) -> usize {
+        match &self.sel {
+            Some(s) => s.len(),
+            None => self.data.ids.len(),
+        }
+    }
+
+    fn sel_slice(&self) -> Option<&[u32]> {
+        self.sel.as_deref().map(|v| v.as_slice())
+    }
+}
+
+/// Base-storage index of view row `i` under an optional selection.
+#[inline]
+fn resolve(sel: Option<&[u32]>, i: usize) -> usize {
+    match sel {
+        Some(s) => s[i] as usize,
+        None => i,
+    }
+}
+
 /// The core relation type (paper Table 1 notation:
 /// `Table[c1,...,cn][grouping?]`): `Arc`-shared columnar storage plus an
 /// optional row-selection view.
+///
+/// Storage is **chunked**: the table is logically the head segment
+/// `(data, sel)` followed by the `tail` segments spliced on by
+/// [`Table::concat`].  Most tables have an empty tail and behave exactly
+/// as before; chunked tables consolidate lazily into `flat` the first
+/// time a kernel needs contiguous random access.
 #[derive(Debug, Clone)]
 pub struct Table {
     schema: Schema,
@@ -644,12 +685,25 @@ pub struct Table {
     data: Arc<TableData>,
     /// Row-selection view into `data` (base indices); `None` = all rows.
     sel: Option<Arc<Vec<u32>>>,
+    /// Extra storage segments appended by `concat` (in logical order).
+    tail: Vec<Chunk>,
+    /// Lazily consolidated contiguous storage for chunked tables, with
+    /// every segment's selection resolved.  Reset on splice; shared by
+    /// clones so repeated access consolidates once.
+    flat: OnceCell<Arc<TableData>>,
 }
 
 impl Table {
     pub fn new(schema: Schema) -> Self {
         let data = Arc::new(TableData::empty(&schema));
-        Table { schema, grouping: None, data, sel: None }
+        Table {
+            schema,
+            grouping: None,
+            data,
+            sel: None,
+            tail: Vec::new(),
+            flat: OnceCell::new(),
+        }
     }
 
     /// Build an input table, assigning fresh row IDs.
@@ -695,6 +749,8 @@ impl Table {
             grouping,
             data: Arc::new(TableData { ids, cols }),
             sel: None,
+            tail: Vec::new(),
+            flat: OnceCell::new(),
         }
     }
 
@@ -717,45 +773,80 @@ impl Table {
     }
 
     pub fn len(&self) -> usize {
-        match &self.sel {
+        let head = match &self.sel {
             Some(s) => s.len(),
             None => self.data.ids.len(),
-        }
+        };
+        head + self.tail.iter().map(Chunk::len).sum::<usize>()
     }
 
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
 
-    /// Base-storage index of view row `i`.
-    #[inline]
-    fn base(&self, i: usize) -> usize {
-        match &self.sel {
-            Some(s) => s[i] as usize,
-            None => i,
-        }
-    }
-
     pub(crate) fn sel_slice(&self) -> Option<&[u32]> {
         self.sel.as_deref().map(|v| v.as_slice())
     }
 
+    /// All storage segments in logical order: the head, then any tail
+    /// chunks spliced on by `concat`.
+    fn segments(&self) -> impl Iterator<Item = (&TableData, Option<&[u32]>)> {
+        std::iter::once((self.data.as_ref(), self.sel_slice()))
+            .chain(self.tail.iter().map(|c| (c.data.as_ref(), c.sel_slice())))
+    }
+
+    /// The consolidated contiguous storage of a chunked table, built on
+    /// first use (every segment's selection resolved) and cached.
+    fn flat_data(&self) -> &Arc<TableData> {
+        self.flat.get_or_init(|| {
+            let mut acc = TableData::empty(&self.schema);
+            acc.ids.reserve(self.len());
+            for (data, sel) in self.segments() {
+                match sel {
+                    None => acc.ids.extend_from_slice(&data.ids),
+                    Some(s) => acc.ids.extend(s.iter().map(|&i| data.ids[i as usize])),
+                }
+                for (dst, src) in acc.cols.iter_mut().zip(data.cols.iter()) {
+                    dst.append_from(src, sel)
+                        .expect("chunk schemas are validated at concat time");
+                }
+            }
+            Arc::new(acc)
+        })
+    }
+
+    /// Contiguous backing storage plus the active selection over it.
+    ///
+    /// Single-segment tables return their own buffers (keeping filter
+    /// views zero-copy); chunked tables return the lazily consolidated
+    /// storage, which carries no selection.
+    fn backing(&self) -> (&TableData, Option<&[u32]>) {
+        if self.tail.is_empty() {
+            (self.data.as_ref(), self.sel_slice())
+        } else {
+            (self.flat_data().as_ref(), None)
+        }
+    }
+
     /// Row ID of view row `i`.
     pub fn id_at(&self, i: usize) -> u64 {
-        self.data.ids[self.base(i)]
+        let (data, sel) = self.backing();
+        data.ids[resolve(sel, i)]
     }
 
     /// All row IDs in view order.
     pub fn ids(&self) -> Vec<u64> {
-        match &self.sel {
-            None => self.data.ids.clone(),
-            Some(s) => s.iter().map(|&i| self.data.ids[i as usize]).collect(),
+        let (data, sel) = self.backing();
+        match sel {
+            None => data.ids.clone(),
+            Some(s) => s.iter().map(|&i| data.ids[i as usize]).collect(),
         }
     }
 
     /// Materialize the cell at (view row, column index).
     pub fn cell(&self, row: usize, col: usize) -> Value {
-        self.data.cols[col].value_at(self.base(row))
+        let (data, sel) = self.backing();
+        data.cols[col].value_at(resolve(sel, row))
     }
 
     pub fn value(&self, row: usize, col: &str) -> Result<Value> {
@@ -772,56 +863,60 @@ impl Table {
 
     // ---- typed column views -------------------------------------------
 
-    fn col_named(&self, col: &str) -> Result<&Column> {
-        Ok(&self.data.cols[self.schema.index_of(col)?])
+    /// Backing column + active selection for `col` (consolidates chunked
+    /// storage first).
+    fn col_named(&self, col: &str) -> Result<(&Column, Option<&[u32]>)> {
+        let i = self.schema.index_of(col)?;
+        let (data, sel) = self.backing();
+        Ok((&data.cols[i], sel))
     }
 
     pub fn col_str(&self, col: &str) -> Result<ColView<'_, String>> {
         match self.col_named(col)? {
-            Column::Str(v) => Ok(ColView { cells: v, sel: self.sel_slice() }),
-            c => bail!("column {col:?} is {}, expected str", c.dtype()),
+            (Column::Str(v), sel) => Ok(ColView { cells: v, sel }),
+            (c, _) => bail!("column {col:?} is {}, expected str", c.dtype()),
         }
     }
 
     pub fn col_i64(&self, col: &str) -> Result<ColView<'_, i64>> {
         match self.col_named(col)? {
-            Column::I64(v) => Ok(ColView { cells: v, sel: self.sel_slice() }),
-            c => bail!("column {col:?} is {}, expected i64", c.dtype()),
+            (Column::I64(v), sel) => Ok(ColView { cells: v, sel }),
+            (c, _) => bail!("column {col:?} is {}, expected i64", c.dtype()),
         }
     }
 
     pub fn col_f64(&self, col: &str) -> Result<ColView<'_, f64>> {
         match self.col_named(col)? {
-            Column::F64(v) => Ok(ColView { cells: v, sel: self.sel_slice() }),
-            c => bail!("column {col:?} is {}, expected f64", c.dtype()),
+            (Column::F64(v), sel) => Ok(ColView { cells: v, sel }),
+            (c, _) => bail!("column {col:?} is {}, expected f64", c.dtype()),
         }
     }
 
     pub fn col_bool(&self, col: &str) -> Result<ColView<'_, bool>> {
         match self.col_named(col)? {
-            Column::Bool(v) => Ok(ColView { cells: v, sel: self.sel_slice() }),
-            c => bail!("column {col:?} is {}, expected bool", c.dtype()),
+            (Column::Bool(v), sel) => Ok(ColView { cells: v, sel }),
+            (c, _) => bail!("column {col:?} is {}, expected bool", c.dtype()),
         }
     }
 
     pub fn col_blob(&self, col: &str) -> Result<ColView<'_, ByteBuf>> {
         match self.col_named(col)? {
-            Column::Blob(v) => Ok(ColView { cells: v, sel: self.sel_slice() }),
-            c => bail!("column {col:?} is {}, expected blob", c.dtype()),
+            (Column::Blob(v), sel) => Ok(ColView { cells: v, sel }),
+            (c, _) => bail!("column {col:?} is {}, expected blob", c.dtype()),
         }
     }
 
     pub fn col_f32s(&self, col: &str) -> Result<ColView<'_, Arc<Vec<f32>>>> {
         match self.col_named(col)? {
-            Column::F32s(v) => Ok(ColView { cells: v, sel: self.sel_slice() }),
-            c => bail!("column {col:?} is {}, expected f32s", c.dtype()),
+            (Column::F32s(v), sel) => Ok(ColView { cells: v, sel }),
+            (c, _) => bail!("column {col:?} is {}, expected f32s", c.dtype()),
         }
     }
 
     pub fn col_i32s(&self, col: &str) -> Result<ColView<'_, Arc<Vec<i32>>>> {
         match self.col_named(col)? {
-            Column::I32s(v) => Ok(ColView { cells: v, sel: self.sel_slice() }),
-            c => bail!("column {col:?} is {}, expected i32s", c.dtype()),
+            (Column::I32s(v), sel) => Ok(ColView { cells: v, sel }),
+            (c, _) => bail!("column {col:?} is {}, expected i32s", c.dtype()),
         }
     }
 
@@ -829,10 +924,11 @@ impl Table {
 
     /// Materialize one row (handle copies for vector/blob cells).
     pub fn row_at(&self, i: usize) -> Row {
-        let b = self.base(i);
+        let (data, sel) = self.backing();
+        let b = resolve(sel, i);
         Row {
-            id: self.data.ids[b],
-            values: self.data.cols.iter().map(|c| c.value_at(b)).collect(),
+            id: data.ids[b],
+            values: data.cols.iter().map(|c| c.value_at(b)).collect(),
         }
     }
 
@@ -863,10 +959,10 @@ impl Table {
     }
 
     /// Mutable access to the backing storage: resolves any selection view
-    /// into owned buffers first, then clones shared storage (copy-on-write
-    /// append).  Fresh builder tables hit neither path.
+    /// or chunk tail into owned buffers first, then clones shared storage
+    /// (copy-on-write append).  Fresh builder tables hit neither path.
     fn data_mut(&mut self) -> &mut TableData {
-        if self.sel.is_some() {
+        if self.sel.is_some() || !self.tail.is_empty() {
             *self = self.compacted();
         }
         Arc::make_mut(&mut self.data)
@@ -919,6 +1015,19 @@ impl Table {
     /// the filter/demux primitive.  Shares the backing buffers; no cell
     /// is copied.
     pub fn select(&self, view_idx: Vec<u32>) -> Table {
+        if !self.tail.is_empty() {
+            // Chunked table: view the shared consolidation (built once,
+            // shared by every select over this table), under which view
+            // indices are already base indices.
+            return Table {
+                schema: self.schema.clone(),
+                grouping: self.grouping.clone(),
+                data: self.flat_data().clone(),
+                sel: Some(Arc::new(view_idx)),
+                tail: Vec::new(),
+                flat: OnceCell::new(),
+            };
+        }
         let base: Vec<u32> = match &self.sel {
             None => view_idx,
             Some(s) => view_idx.iter().map(|&i| s[i as usize]).collect(),
@@ -928,6 +1037,8 @@ impl Table {
             grouping: self.grouping.clone(),
             data: self.data.clone(),
             sel: Some(Arc::new(base)),
+            tail: Vec::new(),
+            flat: OnceCell::new(),
         }
     }
 
@@ -940,9 +1051,21 @@ impl Table {
         self.select(keep)
     }
 
-    /// A copy of this table with the selection resolved into fresh, owned,
-    /// contiguous storage (no-op storage share when there is no view).
+    /// A copy of this table with any selection view and chunk tail
+    /// resolved into contiguous storage (no-op storage share when the
+    /// table is already a single unselected segment).  Chunked tables
+    /// share the cached consolidation rather than re-gathering.
     pub fn compacted(&self) -> Table {
+        if !self.tail.is_empty() {
+            return Table {
+                schema: self.schema.clone(),
+                grouping: self.grouping.clone(),
+                data: self.flat_data().clone(),
+                sel: None,
+                tail: Vec::new(),
+                flat: OnceCell::new(),
+            };
+        }
         match &self.sel {
             None => self.clone(),
             Some(s) => {
@@ -953,62 +1076,38 @@ impl Table {
         }
     }
 
-    /// Take the backing storage for in-place extension: resolves the
-    /// selection, then moves the buffers out when uniquely owned (clones
-    /// otherwise).
-    fn take_data(self) -> TableData {
-        if self.sel.is_some() {
-            let c = self.compacted();
-            return Arc::try_unwrap(c.data).unwrap_or_else(|a| (*a).clone());
-        }
-        Arc::try_unwrap(self.data).unwrap_or_else(|a| (*a).clone())
-    }
-
-    /// Concatenate tables (the `union` kernel): the first input's storage
-    /// is moved when uniquely owned; subsequent inputs bulk-append —
-    /// scalar buffers by memcpy, vector/blob cells by handle copy.
+    /// Concatenate tables (the `union` kernel): an O(1)-per-input
+    /// chunk-list splice.  Each input's shared buffers (and any selection
+    /// view) join the output's segment list as-is — no cell is touched
+    /// here.  The first kernel downstream that needs contiguous storage
+    /// triggers one lazy consolidation; chunk-agnostic paths (`len`,
+    /// `size_bytes`, further `concat`s) never pay it.
     pub fn concat(parts: Vec<Table>) -> Result<Table> {
         let mut it = parts.into_iter();
-        let first = it.next().context("concat with no inputs")?;
-        let rest: Vec<Table> = it.collect();
-        if rest.is_empty() {
-            return Ok(first);
-        }
-        for t in &rest {
-            if t.schema != first.schema {
-                bail!("union schema mismatch: {} vs {}", first.schema, t.schema);
+        let mut acc = it.next().context("concat with no inputs")?;
+        for t in it {
+            if t.schema != acc.schema {
+                bail!("union schema mismatch: {} vs {}", acc.schema, t.schema);
             }
-            if t.grouping != first.grouping {
+            if t.grouping != acc.grouping {
                 bail!("union grouping mismatch");
             }
+            acc.tail.push(Chunk { data: t.data, sel: t.sel });
+            acc.tail.extend(t.tail);
         }
-        let schema = first.schema.clone();
-        let grouping = first.grouping.clone();
-        let mut acc = first.take_data();
-        for t in rest {
-            match t.sel_slice() {
-                None => acc.ids.extend_from_slice(&t.data.ids),
-                Some(s) => acc.ids.extend(s.iter().map(|&i| t.data.ids[i as usize])),
-            }
-            for (dst, src) in acc.cols.iter_mut().zip(t.data.cols.iter()) {
-                dst.append_from(src, t.sel_slice())?;
-            }
-        }
-        Ok(Table {
-            schema,
-            grouping,
-            data: Arc::new(acc),
-            sel: None,
-        })
+        // Any previously cached consolidation is stale after a splice.
+        acc.flat = OnceCell::new();
+        Ok(acc)
     }
 
     /// One column materialized as owned storage (selection resolved);
     /// vector/blob cells are handle copies.
     pub fn column(&self, col: &str) -> Result<Column> {
         let i = self.schema.index_of(col)?;
-        match &self.sel {
-            None => Ok(self.data.cols[i].clone()),
-            Some(s) => Ok(self.data.cols[i].gather(s)),
+        let (data, sel) = self.backing();
+        match sel {
+            None => Ok(data.cols[i].clone()),
+            Some(s) => Ok(data.cols[i].gather(s)),
         }
     }
 
@@ -1039,17 +1138,18 @@ impl Table {
     /// cells); translates through any active selection.  Join padding
     /// uses this.
     pub(crate) fn gather_cols(&self, view_idx: &[u32]) -> Vec<Column> {
+        let (data, sel) = self.backing();
         let base: Vec<u32> = view_idx
             .iter()
             .map(|&i| {
                 if i == NO_ROW {
                     NO_ROW
                 } else {
-                    self.base(i as usize) as u32
+                    resolve(sel, i as usize) as u32
                 }
             })
             .collect();
-        self.data.cols.iter().map(|c| c.gather(&base)).collect()
+        data.cols.iter().map(|c| c.gather(&base)).collect()
     }
 
     // ---- grouping -----------------------------------------------------
@@ -1060,8 +1160,9 @@ impl Table {
         if col == "__rowid" {
             return Ok(GroupKey::RowId(self.id_at(i)));
         }
-        let b = self.base(i);
-        match self.col_named(col)? {
+        let (c, sel) = self.col_named(col)?;
+        let b = resolve(sel, i);
+        match c {
             Column::Str(v) => Ok(GroupKey::Str(v[b].clone())),
             Column::I64(v) => Ok(GroupKey::I64(v[b])),
             Column::Bool(v) => Ok(GroupKey::Bool(v[b])),
@@ -1081,24 +1182,30 @@ impl Table {
 
     // ---- size accounting + wire format --------------------------------
 
-    /// Total payload size in bytes (network/KVS cost accounting).
+    /// Total payload size in bytes (network/KVS cost accounting).  Sums
+    /// per segment, so chunked tables are costed without consolidating.
     pub fn size_bytes(&self) -> usize {
         let header = 16 + self.schema.len() * 12;
-        let n = self.len();
-        let mut total = header + n * 8;
-        for col in &self.data.cols {
-            match (&self.sel, col) {
-                // Fixed-width columns need no per-cell scan.
-                (_, Column::I64(_)) | (_, Column::F64(_)) => total += 8 * n,
-                (_, Column::Bool(_)) => total += n,
-                (None, c) => {
-                    for i in 0..n {
-                        total += c.payload_bytes_at(i);
+        let mut total = header + self.len() * 8;
+        for (data, sel) in self.segments() {
+            let n = match sel {
+                Some(s) => s.len(),
+                None => data.ids.len(),
+            };
+            for col in &data.cols {
+                match (sel, col) {
+                    // Fixed-width columns need no per-cell scan.
+                    (_, Column::I64(_)) | (_, Column::F64(_)) => total += 8 * n,
+                    (_, Column::Bool(_)) => total += n,
+                    (None, c) => {
+                        for i in 0..n {
+                            total += c.payload_bytes_at(i);
+                        }
                     }
-                }
-                (Some(s), c) => {
-                    for &i in s.iter() {
-                        total += c.payload_bytes_at(i as usize);
+                    (Some(s), c) => {
+                        for &i in s.iter() {
+                            total += c.payload_bytes_at(i as usize);
+                        }
                     }
                 }
             }
@@ -1110,7 +1217,7 @@ impl Table {
     /// boundaries): bulk-copied primitive columns, length-prefixed
     /// payload regions for vectors and blobs.
     pub fn encode(&self) -> Vec<u8> {
-        if self.sel.is_some() {
+        if self.sel.is_some() || !self.tail.is_empty() {
             return self.compacted().encode();
         }
         let _span = crate::obs::trace::span(crate::obs::SpanKind::CodecEncode, "table_encode");
@@ -1264,18 +1371,24 @@ impl PartialEq for Table {
         {
             return false;
         }
-        if Arc::ptr_eq(&self.data, &other.data) && self.sel_slice() == other.sel_slice() {
+        if self.tail.is_empty()
+            && other.tail.is_empty()
+            && Arc::ptr_eq(&self.data, &other.data)
+            && self.sel_slice() == other.sel_slice()
+        {
             return true;
         }
         let n = self.len();
+        let (ad, asel) = self.backing();
+        let (bd, bsel) = other.backing();
         for i in 0..n {
-            if self.id_at(i) != other.id_at(i) {
+            if ad.ids[resolve(asel, i)] != bd.ids[resolve(bsel, i)] {
                 return false;
             }
         }
-        for (a, b) in self.data.cols.iter().zip(other.data.cols.iter()) {
+        for (a, b) in ad.cols.iter().zip(bd.cols.iter()) {
             for i in 0..n {
-                if !a.cell_eq(self.base(i), b, other.base(i)) {
+                if !a.cell_eq(resolve(asel, i), b, resolve(bsel, i)) {
                     return false;
                 }
             }
@@ -1516,6 +1629,84 @@ mod tests {
         assert_eq!(u.ids(), want);
         let other = Table::new(Schema::new(vec![("z", DType::I64)]));
         assert!(Table::concat(vec![u, other]).is_err());
+    }
+
+    #[test]
+    fn concat_splices_chunks_without_copying() {
+        let a = four_rows();
+        let b = four_rows().select(vec![1, 2]);
+        let a_data = Arc::clone(&a.data);
+        let b_data = Arc::clone(&b.data);
+        let u = Table::concat(vec![a, b]).unwrap();
+        // O(1) splice: the output aliases both inputs' buffers as
+        // segments; the view's selection rides along unresolved.
+        assert!(Arc::ptr_eq(&u.data, &a_data));
+        assert_eq!(u.tail.len(), 1);
+        assert!(Arc::ptr_eq(&u.tail[0].data, &b_data));
+        assert_eq!(u.tail[0].sel_slice(), Some(&[1u32, 2][..]));
+        assert_eq!(u.len(), 6);
+        // Splicing a chunked table flattens its segment list in order.
+        let c = four_rows();
+        let u2 = Table::concat(vec![c, u]).unwrap();
+        assert_eq!(u2.tail.len(), 2);
+        assert!(Arc::ptr_eq(&u2.tail[0].data, &a_data));
+        assert!(Arc::ptr_eq(&u2.tail[1].data, &b_data));
+        assert_eq!(u2.len(), 10);
+    }
+
+    #[test]
+    fn chunked_tables_read_like_contiguous_ones() {
+        let a = four_rows();
+        let b = four_rows().select(vec![3, 1]);
+        let want_ids: Vec<u64> = a.ids().into_iter().chain(b.ids()).collect();
+        let u = Table::concat(vec![a, b]).unwrap();
+        assert_eq!(u.ids(), want_ids);
+        // Random access consolidates lazily and agrees with the parts.
+        assert_eq!(u.value(3, "score").unwrap().as_f64().unwrap(), 4.0);
+        assert_eq!(u.value(5, "name").unwrap().as_str().unwrap(), "b");
+        let scores: Vec<f64> = u.col_f64("score").unwrap().iter().copied().collect();
+        assert_eq!(scores, vec![1.0, 2.0, 3.0, 4.0, 4.0, 2.0]);
+        assert_eq!(u.rows().len(), 6);
+        assert_eq!(u.group_key_at(5, "name").unwrap(), GroupKey::Str("b".into()));
+        // Selecting on a chunked table views the shared consolidation,
+        // then composes like any other selection.
+        let v = u.select(vec![0, 5]);
+        assert_eq!(v.len(), 2);
+        assert_eq!(v.id_at(1), want_ids[5]);
+        assert_eq!(v.value(1, "score").unwrap().as_f64().unwrap(), 2.0);
+    }
+
+    #[test]
+    fn chunked_tables_encode_compare_and_push_like_flat_ones() {
+        let a = four_rows();
+        let b = four_rows();
+        // Eagerly materialized twin built by row appends.
+        let mut flat = a.compacted();
+        for r in b.rows() {
+            flat.push(r.id, r.values).unwrap();
+        }
+        let u = Table::concat(vec![a, b]).unwrap();
+        assert_eq!(u, flat);
+        assert_eq!(u.encode(), flat.encode());
+        assert_eq!(Table::decode(&u.encode()).unwrap(), flat);
+        assert_eq!(u.size_bytes(), flat.size_bytes());
+        // Pushing onto a chunked table compacts it first; the shared
+        // segments (still referenced by `u`) are untouched.
+        let mut w = u.clone();
+        w.push(123, vec![Value::Str("z".into()), Value::F64(9.0)]).unwrap();
+        assert_eq!(w.len(), 9);
+        assert_eq!(w.id_at(8), 123);
+        assert_eq!(u.len(), 8);
+        // Empty segments splice cleanly.
+        let e = Table::concat(vec![
+            Table::new(schema()),
+            four_rows(),
+            Table::new(schema()),
+        ])
+        .unwrap();
+        assert_eq!(e.len(), 4);
+        assert_eq!(e.compacted().len(), 4);
+        assert!(Table::concat(vec![Table::new(schema())]).unwrap().is_empty());
     }
 
     #[test]

@@ -19,7 +19,7 @@ use std::sync::Arc;
 use anyhow::Result;
 
 use crate::anna::KvsClient;
-use crate::dataflow::expr::{col, lit};
+use crate::dataflow::expr::{col, lit, Expr};
 use crate::dataflow::operator::{Derive, Func, ModelBinding};
 use crate::dataflow::table::{Column, DType, Schema, Table, Value};
 use crate::dataflow::v2::Flow;
@@ -130,36 +130,22 @@ pub fn image_cascade(manifest: &Manifest) -> Result<PipelineSpec> {
     // projections — the pruning rewrite sees through them.
     let simple_small = simple.map(Func::project("strip", &["pred", "conf"]))?;
     let complex_small = complexm.map(Func::project("strip2", &["pred2", "conf2"]))?;
+    // Pick the higher-confidence prediction.  A NaN `conf2` marks a
+    // left-join miss (the complex model never ran), and NaN ≠ NaN, so
+    // `conf2 != conf2` is exactly the is-missing probe; the `>=` arm is
+    // false on NaN either way.  Written as an Expr select, the shared
+    // condition is hoisted by CSE and the whole stage kernel-fuses.
+    let keep_simple = col("conf2")
+        .ne(col("conf2"))
+        .or(col("conf").ge(col("conf2")));
     let best = simple_small
         .join(&complex_small, None, JoinHow::Left)?
-        .map(Func::rust(
+        .map(Func::select(
             "max_conf",
-            Some(vec![("pred", DType::I64), ("conf", DType::F64)]),
-            Arc::new(|_, t: &Table| {
-                // Columnar scan: typed views in, typed buffers out.
-                let conf = t.col_f64("conf")?;
-                let conf2 = t.col_f64("conf2")?;
-                let pred = t.col_i64("pred")?;
-                let pred2 = t.col_i64("pred2")?;
-                let n = t.len();
-                let mut preds = Vec::with_capacity(n);
-                let mut confs = Vec::with_capacity(n);
-                for i in 0..n {
-                    let (c, c2) = (*conf.get(i), *conf2.get(i));
-                    if c2.is_nan() || c >= c2 {
-                        preds.push(*pred.get(i));
-                        confs.push(c);
-                    } else {
-                        preds.push(*pred2.get(i));
-                        confs.push(c2);
-                    }
-                }
-                Table::from_columns(
-                    Schema::new(vec![("pred", DType::I64), ("conf", DType::F64)]),
-                    t.ids(),
-                    vec![Column::I64(preds), Column::F64(confs)],
-                )
-            }),
+            vec![
+                ("pred", keep_simple.clone().if_then_else(col("pred"), col("pred2"))),
+                ("conf", keep_simple.if_then_else(col("conf"), col("conf2"))),
+            ],
         ))?;
     Ok(PipelineSpec {
         flow: best.into_dataflow()?,
@@ -222,9 +208,23 @@ pub fn video_stream() -> Result<PipelineSpec> {
                 )
             }),
         ))?;
-    let classify = |score_col: &str, model: &str, label: &str| -> Result<Flow> {
-        let m = flags
-            .filter_expr(col(score_col).ge(lit(0.4)))?
+    // Each branch starts with the same boolean gate stage, written
+    // per-branch as its author naturally would: the compiler's CSE pass
+    // merges the structurally-identical twins and DCE collects the
+    // orphan, so only one gate executes.
+    let gate = |flags: &Flow| -> Result<Flow> {
+        flags.map(Func::select(
+            "detect_gate",
+            vec![
+                ("img", col("img")),
+                ("hot_person", col("person").ge(lit(0.4))),
+                ("hot_vehicle", col("vehicle").ge(lit(0.4))),
+            ],
+        ))
+    };
+    let classify = |gate_col: &str, model: &str, label: &str| -> Result<Flow> {
+        let m = gate(&flags)?
+            .filter_expr(col(gate_col))?
             .map(Func::model(
                 ModelBinding::new(model, &["img"], &[("probs", DType::F32s)])
                     .with_derive(Derive::ArgMaxI64 {
@@ -232,26 +232,17 @@ pub fn video_stream() -> Result<PipelineSpec> {
                         as_col: "pred".into(),
                     }),
             ))?;
-        let lbl = label.to_string();
-        m.map(Func::rust(
+        // `"{label}-" ++ pred` — string labelling as an inspectable Expr.
+        m.map(Func::select(
             &format!("label_{label}"),
-            Some(vec![("class", DType::Str)]),
-            Arc::new(move |_, t: &Table| {
-                let classes: Vec<String> = t
-                    .col_i64("pred")?
-                    .iter()
-                    .map(|p| format!("{lbl}-{p}"))
-                    .collect();
-                Table::from_columns(
-                    Schema::new(vec![("class", DType::Str)]),
-                    t.ids(),
-                    vec![Column::Str(classes)],
-                )
-            }),
+            vec![(
+                "class",
+                Expr::Lit(Value::Str(format!("{label}-"))).concat(col("pred")),
+            )],
         ))
     };
-    let people = classify("person", "resnet_person", "person")?;
-    let vehicles = classify("vehicle", "resnet_vehicle", "vehicle")?;
+    let people = classify("hot_person", "resnet_person", "person")?;
+    let vehicles = classify("hot_vehicle", "resnet_vehicle", "vehicle")?;
     let counts = people
         .union(&[&vehicles])?
         .groupby("class")?
@@ -498,6 +489,48 @@ mod tests {
             assert!(!t.is_empty());
             assert_eq!(t.schema(), spec.flow.input_schema());
         }
+    }
+
+    #[test]
+    fn compiler_passes_fire_on_workload_pipelines() {
+        use crate::dataflow::compiler::rewrite_flow_journaled;
+        // video_stream: both branches open with the same "detect_gate"
+        // select — CSE merges the twins, DCE collects the orphan.
+        let spec = video_stream().unwrap();
+        let (r, journal) =
+            rewrite_flow_journaled(&spec.flow, &OptFlags::all()).unwrap();
+        assert!(journal.fired("cse"), "{journal:?}");
+        assert!(journal.fired("dce"), "{journal:?}");
+        let gates = r
+            .nodes()
+            .iter()
+            .filter(|n| n.op.label() == "map:detect_gate")
+            .count();
+        assert_eq!(gates, 1, "{:?}", r.nodes().iter().map(|n| n.op.label()).collect::<Vec<_>>());
+        // image_cascade: max_conf repeats the keep-simple condition in
+        // both bindings — CSE hoists it into a chained select.
+        let man = Manifest::parse(
+            r#"{"models": {}, "artifacts": [], "calibration": {"conf_p60": 0.19}}"#,
+            std::path::PathBuf::new(),
+        )
+        .unwrap();
+        let spec = image_cascade(&man).unwrap();
+        let (r, journal) =
+            rewrite_flow_journaled(&spec.flow, &OptFlags::all()).unwrap();
+        assert!(journal.fired("cse"), "{journal:?}");
+        assert!(r
+            .nodes()
+            .iter()
+            .any(|n| n.op.label() == "map:max_conf.cse"), "{:?}",
+            r.nodes().iter().map(|n| n.op.label()).collect::<Vec<_>>());
+        // The retired closures are now kernel-fusible: the optimized
+        // cascade plan carries at least one vectorized kernel stage.
+        let plan = compile(&spec.flow, &OptFlags::all()).unwrap();
+        assert!(
+            plan.stage_labels().iter().any(|l| l.contains("kernel[")),
+            "{:?}",
+            plan.stage_labels()
+        );
     }
 
     #[test]

@@ -8,9 +8,9 @@ use std::sync::Arc;
 use cloudflow::cloudburst::Cluster;
 use cloudflow::dataflow::compiler::{compile, OptFlags};
 use cloudflow::dataflow::exec_local::{self, apply_agg, apply_groupby, apply_join, apply_union};
-use cloudflow::dataflow::operator::{CmpOp, ExecCtx, Func, Predicate};
+use cloudflow::dataflow::operator::{CmpOp, ExecCtx, Func, OpKind, Predicate};
 use cloudflow::dataflow::table::{DType, Schema, Table, Value};
-use cloudflow::dataflow::{AggFn, Dataflow, JoinHow};
+use cloudflow::dataflow::{col, lit, AggFn, Dataflow, JoinHow};
 use cloudflow::util::quickcheck::check;
 use cloudflow::util::rng::Rng;
 
@@ -656,6 +656,221 @@ fn prop_rewrites_preserve_results() {
                 "rewritten results differ under {opts:?}"
             );
         }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------
+// Fused Expr kernels: one-pass execution vs staged ops vs row oracle
+// ---------------------------------------------------------------------
+
+/// A random chain of fusible Expr stages over the `(name, conf, n)` schema.
+/// Every select rebinds all three columns so the schema stays stable along
+/// the chain; filters occasionally use an impossible bound so all-false
+/// selection vectors are routinely exercised.
+fn random_fusible_chain(rng: &mut Rng) -> Vec<OpKind> {
+    let mut ops = Vec::new();
+    let steps = 1 + rng.below(4) as usize;
+    for s in 0..steps {
+        match rng.below(5) {
+            0 => {
+                let m = 0.25 + rng.f64();
+                ops.push(OpKind::Map(Func::select(
+                    &format!("scale{s}"),
+                    vec![
+                        ("name", col("name")),
+                        ("conf", col("conf") * lit(m)),
+                        ("n", col("n") + lit(1i64)),
+                    ],
+                )));
+            }
+            1 => {
+                let t = rng.f64();
+                ops.push(OpKind::Map(Func::select(
+                    &format!("tag{s}"),
+                    vec![
+                        (
+                            "name",
+                            col("conf")
+                                .ge(lit(t))
+                                .if_then_else(lit("hi-").concat(col("name")), col("name")),
+                        ),
+                        ("conf", col("conf")),
+                        ("n", col("name").length() + col("n")),
+                    ],
+                )));
+            }
+            2 => {
+                let t = rng.f64();
+                let op = *rng.choice(&[CmpOp::Lt, CmpOp::Ge]);
+                ops.push(OpKind::Filter(Predicate::threshold("conf", op, t)));
+            }
+            3 => {
+                // `conf` starts in [0, 1), so a bound of 10.0 drives the
+                // combined selection vector all-false from here on.
+                let bound = if rng.bool(0.3) { 10.0 } else { rng.f64() };
+                ops.push(OpKind::Filter(Predicate::expr(
+                    col("conf").gt(lit(bound)).and(col("n").lt(lit(40i64))),
+                )));
+            }
+            _ => {
+                ops.push(OpKind::Filter(Predicate::expr(
+                    col("name")
+                        .starts_with("k1")
+                        .or(col("conf").le(lit(rng.f64()))),
+                )));
+            }
+        }
+    }
+    ops
+}
+
+/// Replays a fusible chain one row at a time through the `rowref` reference
+/// semantics — the pre-columnar oracle the vectorized plane must match.
+fn rowref_replay(input: &Table, ops: &[OpKind]) -> Result<Table, String> {
+    use cloudflow::dataflow::operator::{FuncBody, PredBody};
+    use cloudflow::dataflow::rowref::{self, RowTable};
+
+    let mut cur = RowTable::from_table(input);
+    for op in ops {
+        cur = match op {
+            OpKind::Map(f) => match &f.body {
+                FuncBody::Select(binds) => rowref::map_select(&cur, binds)
+                    .map_err(|e| format!("rowref select: {e:#}"))?,
+                _ => return Err("non-Select map in fusible chain".into()),
+            },
+            OpKind::Filter(p) => match &p.body {
+                PredBody::Expr(e) => {
+                    rowref::filter_expr(&cur, e).map_err(|e| format!("rowref filter: {e:#}"))?
+                }
+                PredBody::Threshold { column, op, value } => {
+                    rowref::filter_threshold(&cur, column, *op, *value)
+                        .map_err(|e| format!("rowref threshold: {e:#}"))?
+                }
+                PredBody::Rust(_) => return Err("opaque predicate in fusible chain".into()),
+            },
+            _ => return Err("non-fusible op in chain".into()),
+        };
+    }
+    cur.to_table().map_err(|e| format!("to_table: {e:#}"))
+}
+
+#[test]
+fn prop_fused_kernels_match_staged_and_rowref_oracle() {
+    use cloudflow::dataflow::FusedKernel;
+
+    check("fused kernel == staged ops == rowref oracle", 60, |rng| {
+        let ops = random_fusible_chain(rng);
+        // Empty inputs are a first-class case: the kernel must still
+        // typecheck its predicate and produce the right output schema.
+        let input = if rng.bool(0.2) {
+            Table::new(Schema::new(vec![
+                ("name", DType::Str),
+                ("conf", DType::F64),
+                ("n", DType::I64),
+            ]))
+        } else {
+            random_table(rng, 12)
+        };
+        let ctx = ExecCtx::local();
+
+        // (a) Staged: one vectorized operator at a time, with a
+        // materialized intermediate between every stage.
+        let mut staged = input.clone();
+        for op in &ops {
+            staged = exec_local::apply_op(&ctx, op, vec![staged])
+                .map_err(|e| format!("staged: {e:#}"))?;
+        }
+
+        // (b) The whole chain compiled into one single-pass kernel.
+        let kernel = FusedKernel::from_ops(&ops).map_err(|e| format!("fuse: {e:#}"))?;
+        let fused = kernel
+            .execute(input.clone())
+            .map_err(|e| format!("kernel exec: {e:#}"))?;
+        cloudflow::prop_assert!(
+            fused.encode() == staged.encode(),
+            "fused kernel differs from staged ops\n{fused}\nvs\n{staged}"
+        );
+        cloudflow::prop_assert!(
+            fused.schema() == staged.schema(),
+            "fused schema drifted: {} vs {}",
+            fused.schema(),
+            staged.schema()
+        );
+
+        // ...and dispatched through the executor like any other op.
+        let via_op = exec_local::apply_op(&ctx, &OpKind::FusedKernel(kernel), vec![input.clone()])
+            .map_err(|e| format!("apply_op kernel: {e:#}"))?;
+        cloudflow::prop_assert!(
+            via_op.encode() == staged.encode(),
+            "apply_op(FusedKernel) differs from staged ops"
+        );
+
+        // (c) Row-at-a-time reference semantics.
+        let oracle = rowref_replay(&input, &ops)?;
+        cloudflow::prop_assert!(
+            oracle.encode() == staged.encode(),
+            "rowref oracle differs from staged ops\n{oracle}\nvs\n{staged}"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_pass_manager_rewrites_are_byte_identical() {
+    use cloudflow::dataflow::compiler::rewrite_flow_journaled;
+
+    check("pass manager preserves bytes + reaches fixpoint", 40, |rng| {
+        let ops = random_fusible_chain(rng);
+        let schema = Schema::new(vec![
+            ("name", DType::Str),
+            ("conf", DType::F64),
+            ("n", DType::I64),
+        ]);
+        let mut fl = Dataflow::new("chain", schema.clone());
+        let mut cur = fl.input();
+        for op in &ops {
+            cur = match op {
+                OpKind::Map(f) => fl.map(cur, f.clone()).unwrap(),
+                OpKind::Filter(p) => fl.filter(cur, p.clone()).unwrap(),
+                _ => unreachable!("fusible chains contain only maps and filters"),
+            };
+        }
+        if rng.bool(0.4) {
+            // Twin branches: identical siblings are CSE bait, and the
+            // merged-away duplicate then becomes DCE garbage.
+            let e = col("conf").ge(lit(rng.f64()));
+            let l = fl.filter(cur, Predicate::expr(e.clone())).unwrap();
+            let r = fl.filter(cur, Predicate::expr(e)).unwrap();
+            cur = fl.union(&[l, r]).unwrap();
+        }
+        fl.set_output(cur).unwrap();
+
+        let input = if rng.bool(0.2) {
+            Table::new(schema)
+        } else {
+            random_table(rng, 12)
+        };
+        let ctx = ExecCtx::local();
+        let reference = exec_local::execute(&fl, input.clone(), &ctx)
+            .map_err(|e| format!("reference: {e:#}"))?;
+        let (rewritten, journal) = rewrite_flow_journaled(&fl, &OptFlags::all())
+            .map_err(|e| format!("rewrite: {e:#}"))?;
+        let out = exec_local::execute(&rewritten, input, &ctx)
+            .map_err(|e| format!("rewritten exec: {e:#}"))?;
+        cloudflow::prop_assert!(
+            out.encode() == reference.encode(),
+            "pass manager changed bytes after {} rewrites\n{out}\nvs\n{reference}",
+            journal.n_changes()
+        );
+        // The manager runs to fixpoint: rewriting its own output is a no-op.
+        let (_, j2) = rewrite_flow_journaled(&rewritten, &OptFlags::all())
+            .map_err(|e| format!("second rewrite: {e:#}"))?;
+        cloudflow::prop_assert!(
+            j2.n_changes() == 0,
+            "rewrite not at fixpoint: {} further changes",
+            j2.n_changes()
+        );
         Ok(())
     });
 }
