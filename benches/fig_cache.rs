@@ -1,0 +1,231 @@
+//! Result-cache bench: served latency, hit rate and replica cost under
+//! zipfian request popularity, cached vs uncached.
+//!
+//! A two-stage cascade (2ms front → 10ms heavy) is driven open-loop at a
+//! rate one replica cannot sustain, with request contents drawn from a
+//! deterministic zipfian rank distribution over a fixed key universe.
+//! Per skew exponent `alpha` the run is repeated with and without the
+//! content-keyed result cache ([`Cluster::cached_deployment`]): under
+//! skew the cache absorbs the popular head, so served p50 collapses to
+//! the modeled hit cost and the autoscaler holds fewer replicas
+//! (replica-seconds drop).  Two extra cases cover the tier's edges:
+//!
+//! * `disabled` — the wrapper present but switched off must track the
+//!   uncached p50 (the bypass is one atomic load; overhead ≤ ~5%).
+//! * `invalidation_storm` — repeated generation bumps mid-run collapse
+//!   the hit rate, which must recover to its warm level once the storm
+//!   passes (entries repopulate under the new generation).
+//!
+//! Results land in `BENCH_cache.json`; the golden baseline is
+//! report-only (hit rates at smoke scale depend on how many distinct
+//! ranks a short trace happens to draw).
+
+mod bench_common;
+
+use bench_common::{
+    check_baseline, header, jnum, json_row, jstr, scaled_ms, standard_flags, write_bench_json,
+};
+use cloudflow::cache::Cached;
+use cloudflow::cloudburst::{Cluster, ClusterDeployment};
+use cloudflow::dataflow::compile;
+use cloudflow::dataflow::operator::{Func, SleepDist};
+use cloudflow::dataflow::table::{DType, Schema, Table, Value};
+use cloudflow::dataflow::{Dataflow, Flow};
+use cloudflow::util::stats::fmt_ms;
+use cloudflow::workloads::{open_loop, zipfian, ArrivalTrace};
+
+const QPS: f64 = 150.0;
+const FRONT_MS: f64 = 2.0;
+const HEAVY_MS: f64 = 10.0;
+/// Key-universe size the zipfian ranks are drawn from.
+const N_KEYS: usize = 48;
+
+#[derive(Clone, Copy, PartialEq)]
+enum Mode {
+    Uncached,
+    Cached,
+    /// Cache wrapper installed but switched off: isolates the bypass
+    /// overhead.
+    Disabled,
+}
+
+impl Mode {
+    fn label(self) -> &'static str {
+        match self {
+            Mode::Uncached => "uncached",
+            Mode::Cached => "cached",
+            Mode::Disabled => "disabled",
+        }
+    }
+}
+
+fn main() {
+    if std::env::var("CLOUDFLOW_TIME_SCALE").is_err() {
+        std::env::set_var("CLOUDFLOW_TIME_SCALE", "1.0");
+    }
+    header("result cache: hit rate, served latency and replica cost vs zipf skew");
+    let mut rows = Vec::new();
+    let mut uncached_p50_mid = f64::NAN;
+    for &alpha in &[0.5, 1.0, 1.5] {
+        let (row_u, p50_u, rs_u) = run_case(alpha, Mode::Uncached);
+        let (row_c, p50_c, rs_c) = run_case(alpha, Mode::Cached);
+        println!(
+            "alpha {alpha:.1}: served-p50 speedup {:.1}x, replica-seconds ratio {:.2}",
+            p50_u / p50_c.max(1e-6),
+            rs_c / rs_u.max(1e-9),
+        );
+        if (alpha - 1.0).abs() < 1e-9 {
+            uncached_p50_mid = p50_u;
+        }
+        rows.push(row_u);
+        rows.push(row_c);
+    }
+    let (row_d, p50_d, _) = run_case(1.0, Mode::Disabled);
+    println!(
+        "disabled-wrapper p50 overhead vs uncached: {:+.1}%",
+        (p50_d / uncached_p50_mid.max(1e-9) - 1.0) * 100.0,
+    );
+    rows.push(row_d);
+    rows.push(run_storm());
+    write_bench_json("cache", &rows);
+    // Report-only: short smoke traces draw few distinct ranks, so hit
+    // rates (and the latencies they gate) move with the request budget.
+    let _ = check_baseline("cache", &rows);
+    println!(
+        "\ngoal: >=2x served-p50 and lower replica-seconds at alpha>=1.0, \
+         <=5% p50 overhead when disabled, hit rate recovers after an \
+         invalidation storm"
+    );
+}
+
+fn cascade(name: &str) -> Dataflow {
+    Flow::source(name, Schema::new(vec![("x", DType::F64)]))
+        .map(Func::sleep("front", SleepDist::ConstMs(FRONT_MS)))
+        .expect("front stage")
+        .map(Func::sleep("heavy", SleepDist::ConstMs(HEAVY_MS)))
+        .expect("heavy stage")
+        .into_dataflow()
+        .expect("dataflow")
+}
+
+/// The request table for zipfian rank `k`: fresh row ids, identical
+/// content — the content hash (id-independent) makes repeats of a rank
+/// cache hits.
+fn input_for_rank(k: usize) -> Table {
+    let mut t = Table::new(Schema::new(vec![("x", DType::F64)]));
+    t.push_fresh(vec![Value::F64(k as f64)]).unwrap();
+    t
+}
+
+/// Drive one (alpha, mode) cell; returns (json row, served p50 ms,
+/// replica-seconds).
+fn run_case(alpha: f64, mode: Mode) -> (String, f64, f64) {
+    let name = format!("cache_a{alpha:.1}_{}", mode.label());
+    let cluster = Cluster::new(None);
+    let h = cluster.register(compile(&cascade(&name), &standard_flags()).unwrap(), 1).unwrap();
+    let trace = ArrivalTrace::constant(QPS, scaled_ms(2_500.0));
+    let ranks = zipfian(alpha, N_KEYS).keys(trace.len());
+
+    let (mut res, hit_rate) = match mode {
+        Mode::Uncached => {
+            let d = cluster.deployment(h).expect("deployment");
+            (open_loop(&d, &trace, |i| input_for_rank(ranks[i])), f64::NAN)
+        }
+        Mode::Cached | Mode::Disabled => {
+            let d = cluster.cached_deployment(h).expect("cached deployment");
+            if mode == Mode::Disabled {
+                d.set_enabled(false);
+            }
+            let res = open_loop(&d, &trace, |i| input_for_rank(ranks[i]));
+            (res, d.stats().hit_rate().unwrap_or(f64::NAN))
+        }
+    };
+
+    let counts = cluster.replica_counts(h);
+    let horizon_ms = cluster.inner().clock.now_ms();
+    let rs = cluster.metrics(h).replica_seconds(horizon_ms, &counts);
+    let (med, p99, rps) = res.report();
+    println!(
+        "{name:<22} completed={:<5} errors={:<3} hit_rate={:<5} median={} p99={} rps={rps:<6.0} \
+         replica_s={rs:.2}",
+        res.latencies.len(),
+        res.errors,
+        if hit_rate.is_finite() { format!("{hit_rate:.2}") } else { "n/a".into() },
+        fmt_ms(med),
+        fmt_ms(p99),
+    );
+    let row = json_row(&[
+        ("case", jstr(&name)),
+        ("alpha", jnum(alpha)),
+        ("cached", (mode == Mode::Cached).to_string()),
+        ("hit_rate", jnum(hit_rate)),
+        ("median_ms", jnum(med)),
+        ("p99_ms", jnum(p99)),
+        ("replica_seconds", jnum(rs)),
+        ("errors", jnum(res.errors as f64)),
+    ]);
+    (row, med, rs)
+}
+
+/// Invalidation storm: a warm cached run, then repeated generation bumps
+/// with short trace slices between them (hit rate collapses), then a
+/// quiet phase where the repopulated cache must recover its warm rate.
+fn run_storm() -> String {
+    const ALPHA: f64 = 1.2;
+    const STORM_BUMPS: usize = 4;
+    let name = "cache_storm".to_string();
+    let cluster = Cluster::new(None);
+    let h = cluster.register(compile(&cascade(&name), &standard_flags()).unwrap(), 1).unwrap();
+    let d = cluster.cached_deployment(h).expect("cached deployment");
+
+    let warm_trace = ArrivalTrace::constant(QPS, scaled_ms(1_000.0));
+    let burst_trace = ArrivalTrace::constant(QPS, scaled_ms(400.0));
+    let recover_trace = ArrivalTrace::constant(QPS, scaled_ms(1_000.0));
+    let total = warm_trace.len() + STORM_BUMPS * burst_trace.len() + recover_trace.len();
+    let ranks = zipfian(ALPHA, N_KEYS).keys(total);
+
+    let mut offset = 0usize;
+    let mut phase = |trace: &ArrivalTrace, d: &Cached<ClusterDeployment>| {
+        let h0 = d.stats().hits();
+        let l0 = d.stats().lookups();
+        let base = offset;
+        let mut res = open_loop(d, trace, |i| input_for_rank(ranks[base + i]));
+        offset += trace.len();
+        let looked = (d.stats().lookups() - l0).max(1);
+        let rate = (d.stats().hits() - h0) as f64 / looked as f64;
+        let (med, _, _) = res.report();
+        (rate, med)
+    };
+
+    let (hit_warm, p50_warm) = phase(&warm_trace, &d);
+    let mut storm_rates = Vec::new();
+    let mut storm_p50s = Vec::new();
+    for _ in 0..STORM_BUMPS {
+        d.invalidate();
+        let (r, m) = phase(&burst_trace, &d);
+        storm_rates.push(r);
+        storm_p50s.push(m);
+    }
+    let hit_storm = storm_rates.iter().sum::<f64>() / storm_rates.len() as f64;
+    let p50_storm = storm_p50s.iter().sum::<f64>() / storm_p50s.len() as f64;
+    let (hit_recovered, p50_recovered) = phase(&recover_trace, &d);
+
+    println!(
+        "{name:<22} hit_rate warm={hit_warm:.2} storm={hit_storm:.2} \
+         recovered={hit_recovered:.2}  p50 warm={} storm={} recovered={}",
+        fmt_ms(p50_warm),
+        fmt_ms(p50_storm),
+        fmt_ms(p50_recovered),
+    );
+    json_row(&[
+        ("case", jstr(&name)),
+        ("alpha", jnum(ALPHA)),
+        ("invalidations", jnum(STORM_BUMPS as f64)),
+        ("hit_rate_warm", jnum(hit_warm)),
+        ("hit_rate_storm", jnum(hit_storm)),
+        ("hit_rate_recovered", jnum(hit_recovered)),
+        ("median_warm_ms", jnum(p50_warm)),
+        ("median_storm_ms", jnum(p50_storm)),
+        ("median_recovered_ms", jnum(p50_recovered)),
+    ])
+}

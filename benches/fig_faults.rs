@@ -16,14 +16,16 @@
 //! respawn / re-dispatch counts, and MTTR (mean crash → respawn gap).
 //!
 //! Results land in `BENCH_faults.json`; the golden baseline in
-//! `benches/baselines/` is report-only (crash-case tails jitter under CI
-//! load), checked by `check_baseline` in smoke mode.
+//! `benches/baselines/` is **enforced** in smoke mode — it pins the
+//! structural recovery invariants (zero errors, full completion, crash
+//! and respawn counts) and only bounds the fault-free tail loosely, so
+//! CI-load jitter on crash-case tails cannot flake it.
 
 mod bench_common;
 
 use std::sync::Arc;
 
-use bench_common::{check_baseline, header, jnum, json_row, jstr, scaled_ms, write_bench_json};
+use bench_common::{enforce_baseline, header, jnum, json_row, jstr, scaled_ms, write_bench_json};
 use cloudflow::cloudburst::Cluster;
 use cloudflow::dataflow::operator::{Func, SleepDist};
 use cloudflow::dataflow::table::{DType, Schema, Table, Value};
@@ -50,9 +52,10 @@ fn main() {
         rows.push(run_case(crashes));
     }
     write_bench_json("faults", &rows);
-    // Report-only: crash-case tails depend on exactly which requests were
-    // in flight at crash time, which jitters under CI load.
-    let _ = check_baseline("faults", &rows);
+    // Enforced: the golden pins recovery invariants (errors, completion,
+    // crash/respawn counts) and leaves crash-case tails unpinned, so the
+    // check is deterministic under CI load.
+    enforce_baseline("faults", &rows);
     println!(
         "\ngoal: every request completes across crashes (errors=0, \
          completed_fraction=1) with bounded MTTR"

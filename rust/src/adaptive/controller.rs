@@ -233,6 +233,17 @@ pub fn decide(
     (Action::None, None)
 }
 
+/// Cache-health watch state: the result cache's live stats, the raw
+/// (unscaled) calibration profile, and the hit rate the current plan
+/// assumed.  See [`AdaptiveController::with_cache_watch`].
+struct CacheWatch {
+    stats: Arc<crate::cache::CacheStats>,
+    raw_base: crate::planner::Profile,
+    expected: f64,
+    tolerance: f64,
+    min_lookups: u64,
+}
+
 /// The stateful controller bound to one registered plan.
 pub struct AdaptiveController {
     inner: Arc<ClusterInner>,
@@ -245,6 +256,7 @@ pub struct AdaptiveController {
     state: DecisionState,
     events: Vec<ControlEvent>,
     trigger: ReplanTrigger,
+    cache_watch: Option<CacheWatch>,
 }
 
 impl AdaptiveController {
@@ -269,7 +281,37 @@ impl AdaptiveController {
             collector,
             events: Vec::new(),
             trigger: ReplanTrigger::new(),
+            cache_watch: None,
         })
+    }
+
+    /// Watch a result cache's live hit rate and re-plan when it drifts
+    /// from `expected` (the rate the current plan's replica counts were
+    /// tuned for — `0.0` when planning ignored the cache) by more than
+    /// `tolerance`, once at least `min_lookups` lookups have been
+    /// observed.  On drift the controller fires its own
+    /// [`ReplanTrigger`] and rebases the planning profile on the raw
+    /// calibration profile rescaled by the *observed* hit rate
+    /// ([`crate::planner::Profile::with_expected_hit_rate`]), so the
+    /// next tune sizes replicas for the traffic that actually reaches
+    /// the pipeline — shrinking them as a zipfian cache warms up,
+    /// growing them back on hit-rate collapse (e.g. an invalidation
+    /// storm after repeated hot-swaps).
+    pub fn with_cache_watch(
+        mut self,
+        stats: Arc<crate::cache::CacheStats>,
+        expected: f64,
+        tolerance: f64,
+        min_lookups: u64,
+    ) -> Self {
+        self.cache_watch = Some(CacheWatch {
+            stats,
+            raw_base: self.base.clone(),
+            expected,
+            tolerance: tolerance.max(0.0),
+            min_lookups,
+        });
+        self
     }
 
     /// A clone-able handle that asks this controller for an immediate
@@ -291,6 +333,23 @@ impl AdaptiveController {
     /// recorded event.
     pub fn step(&mut self) -> ControlEvent {
         let snap = self.collector.sample();
+        if let Some(w) = &mut self.cache_watch {
+            if w.stats.lookups() >= w.min_lookups {
+                if let Some(observed) = w.stats.hit_rate() {
+                    if (observed - w.expected).abs() > w.tolerance {
+                        self.trigger.fire(format!(
+                            "cache hit rate drift: expected {:.2}, observed {observed:.2}",
+                            w.expected
+                        ));
+                        // Re-tune against the calibration profile scaled
+                        // by what the cache actually absorbs.
+                        self.base = w.raw_base.with_expected_hit_rate(observed);
+                        self.collector.set_base(self.base.clone());
+                        w.expected = observed;
+                    }
+                }
+            }
+        }
         if let Some(reason) = self.trigger.take() {
             obs::journal::record(
                 snap.t_ms,

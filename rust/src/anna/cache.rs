@@ -15,14 +15,24 @@ use crate::net::NodeId;
 
 use super::store::Bytes;
 
+#[derive(Debug)]
+struct Entry {
+    value: Bytes,
+    tick: u64,
+    /// Virtual-ms deadline after which the entry is dead; `None` never
+    /// expires (the pre-TTL behavior every existing caller gets).
+    expires_at_ms: Option<f64>,
+}
+
 #[derive(Debug, Default)]
 struct CacheInner {
-    map: HashMap<String, (Bytes, u64)>, // value, lru-tick
-    order: BTreeMap<u64, String>,       // lru-tick -> key
+    map: HashMap<String, Entry>,
+    order: BTreeMap<u64, String>, // lru-tick -> key
     bytes: usize,
     tick: u64,
     hits: u64,
     misses: u64,
+    evictions: u64,
 }
 
 /// Byte-capacity LRU cache bound to one executor node.
@@ -44,6 +54,16 @@ impl Cache {
     }
 
     pub fn get(&self, key: &str) -> Option<Bytes> {
+        // Legacy entry point: ignores TTL deadlines (an entry with a TTL is
+        // only expired by time-aware probes). Callers that set TTLs read
+        // through `get_at`.
+        self.get_at(key, f64::NEG_INFINITY)
+    }
+
+    /// Time-aware probe: an entry whose deadline has passed (`now_ms >=
+    /// expires_at_ms`, boundary inclusive) is removed and counted as a miss
+    /// plus an eviction.
+    pub fn get_at(&self, key: &str, now_ms: f64) -> Option<Bytes> {
         // Spanned so direct cache probes (scheduler locality checks,
         // executor fast paths that skip `KvsClient`) still show up as KVS
         // time in critical-path tiling instead of inflating "service".
@@ -54,9 +74,20 @@ impl Cache {
         let mut c = self.inner.lock().unwrap();
         c.tick += 1;
         let tick = c.tick;
-        if let Some((v, old)) = c.map.get_mut(key) {
-            let v = v.clone();
-            let old = std::mem::replace(old, tick);
+        let expired = matches!(c.map.get(key), Some(e) if e.expires_at_ms.is_some_and(|d| now_ms >= d));
+        if expired {
+            if let Some(e) = c.map.remove(key) {
+                c.order.remove(&e.tick);
+                c.bytes -= e.value.len();
+                c.evictions += 1;
+                self.directory.note_evicted(key, self.node);
+            }
+            c.misses += 1;
+            return None;
+        }
+        if let Some(e) = c.map.get_mut(key) {
+            let v = e.value.clone();
+            let old = std::mem::replace(&mut e.tick, tick);
             c.order.remove(&old);
             c.order.insert(tick, key.to_string());
             c.hits += 1;
@@ -68,6 +99,18 @@ impl Cache {
     }
 
     pub fn insert(&self, key: &str, value: Bytes) {
+        self.insert_entry(key, value, None);
+    }
+
+    /// Insert with a deadline of `now_ms + ttl_ms`; non-finite or
+    /// non-positive `ttl_ms` means the entry never expires.
+    pub fn insert_with_ttl(&self, key: &str, value: Bytes, now_ms: f64, ttl_ms: f64) {
+        let deadline =
+            (ttl_ms.is_finite() && ttl_ms > 0.0).then(|| now_ms + ttl_ms);
+        self.insert_entry(key, value, deadline);
+    }
+
+    fn insert_entry(&self, key: &str, value: Bytes, expires_at_ms: Option<f64>) {
         if value.len() > self.capacity {
             return; // would evict everything and still not fit
         }
@@ -78,20 +121,21 @@ impl Cache {
         let mut c = self.inner.lock().unwrap();
         c.tick += 1;
         let tick = c.tick;
-        if let Some((old_v, old_t)) = c.map.remove(key) {
-            c.order.remove(&old_t);
-            c.bytes -= old_v.len();
+        if let Some(old) = c.map.remove(key) {
+            c.order.remove(&old.tick);
+            c.bytes -= old.value.len();
         }
         c.bytes += value.len();
-        c.map.insert(key.to_string(), (value, tick));
+        c.map.insert(key.to_string(), Entry { value, tick, expires_at_ms });
         c.order.insert(tick, key.to_string());
         self.directory.note_cached(key, self.node);
         // Evict LRU until under capacity.
         while c.bytes > self.capacity {
             let (&t, _) = c.order.iter().next().unwrap();
             let victim = c.order.remove(&t).unwrap();
-            if let Some((v, _)) = c.map.remove(&victim) {
-                c.bytes -= v.len();
+            if let Some(e) = c.map.remove(&victim) {
+                c.bytes -= e.value.len();
+                c.evictions += 1;
                 self.directory.note_evicted(&victim, self.node);
             }
         }
@@ -103,9 +147,10 @@ impl Cache {
             &format!("cache_invalidate:{key}"),
         );
         let mut c = self.inner.lock().unwrap();
-        if let Some((v, t)) = c.map.remove(key) {
-            c.order.remove(&t);
-            c.bytes -= v.len();
+        if let Some(e) = c.map.remove(key) {
+            c.order.remove(&e.tick);
+            c.bytes -= e.value.len();
+            c.evictions += 1;
             self.directory.note_evicted(key, self.node);
         }
     }
@@ -126,6 +171,11 @@ impl Cache {
     pub fn stats(&self) -> (u64, u64) {
         let c = self.inner.lock().unwrap();
         (c.hits, c.misses)
+    }
+
+    /// Entries removed by capacity pressure, TTL expiry, or invalidation.
+    pub fn eviction_count(&self) -> u64 {
+        self.inner.lock().unwrap().evictions
     }
 }
 
@@ -248,6 +298,102 @@ mod tests {
         let (c, _) = mk(10);
         c.invalidate("nothing");
         assert!(c.is_empty());
+    }
+
+    #[test]
+    fn ttl_expires_exactly_at_boundary() {
+        let (c, d) = mk(100);
+        c.insert_with_ttl("a", val(10), 0.0, 50.0);
+        // Strictly before the deadline: alive.
+        assert!(c.get_at("a", 49.999).is_some());
+        // Exactly at the deadline: expired (boundary counts as dead).
+        assert!(c.get_at("a", 50.0).is_none());
+        assert!(c.get_at("a", 50.0).is_none(), "stays gone after removal");
+        assert_eq!(c.eviction_count(), 1, "expiry removes once");
+        assert!(d.holders("a").is_empty(), "directory learns of expiry");
+    }
+
+    #[test]
+    fn ttl_ignored_by_legacy_get() {
+        let (c, _) = mk(100);
+        c.insert_with_ttl("a", val(10), 0.0, 1.0);
+        // Plain `get` is time-blind: the entry survives regardless of TTL.
+        assert!(c.get("a").is_some());
+        // Non-positive / non-finite TTLs mean "never expires".
+        c.insert_with_ttl("b", val(10), 0.0, 0.0);
+        c.insert_with_ttl("c", val(10), 0.0, f64::INFINITY);
+        assert!(c.get_at("b", 1e12).is_some());
+        assert!(c.get_at("c", 1e12).is_some());
+    }
+
+    #[test]
+    fn reinsert_clears_ttl() {
+        let (c, _) = mk(100);
+        c.insert_with_ttl("a", val(10), 0.0, 10.0);
+        c.insert("a", val(10)); // plain reinsert: no deadline any more
+        assert!(c.get_at("a", 1e9).is_some());
+    }
+
+    #[test]
+    fn zero_capacity_rejects_everything() {
+        let (c, d) = mk(0);
+        c.insert("a", val(1));
+        c.insert_with_ttl("b", val(1), 0.0, 100.0);
+        assert!(c.is_empty());
+        assert_eq!(c.bytes_used(), 0);
+        assert!(c.get("a").is_none());
+        assert!(d.holders("a").is_empty());
+        // Zero-length values do fit in a zero-byte cache; no infinite
+        // eviction loop.
+        c.insert("empty", val(0));
+        assert!(c.get("empty").is_some());
+    }
+
+    #[test]
+    fn eviction_counter_tracks_pressure_and_invalidate() {
+        let (c, _) = mk(20);
+        c.insert("a", val(10));
+        c.insert("b", val(10));
+        c.insert("c", val(10)); // evicts a
+        assert_eq!(c.eviction_count(), 1);
+        c.invalidate("b");
+        assert_eq!(c.eviction_count(), 2);
+        c.invalidate("missing"); // no-op, not counted
+        assert_eq!(c.eviction_count(), 2);
+    }
+
+    #[test]
+    fn concurrent_get_put_is_consistent() {
+        use std::sync::atomic::{AtomicU64, Ordering};
+        let d = Directory::new();
+        let c = Arc::new(Cache::new(NodeId(1), 64, d));
+        let hits = Arc::new(AtomicU64::new(0));
+        let threads: Vec<_> = (0..4)
+            .map(|t| {
+                let c = c.clone();
+                let hits = hits.clone();
+                std::thread::spawn(move || {
+                    for i in 0..200u64 {
+                        let key = format!("k{}", (t * 7 + i) % 8);
+                        if i % 3 == 0 {
+                            c.insert_with_ttl(&key, val(8), i as f64, 50.0);
+                        } else if c.get_at(&key, i as f64).is_some() {
+                            hits.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        // Invariants survive the interleaving: capacity respected and the
+        // byte ledger matches the live entries.
+        assert!(c.bytes_used() <= 64);
+        assert_eq!(c.bytes_used(), c.len() * 8);
+        let (h, m) = c.stats();
+        assert_eq!(h, hits.load(Ordering::Relaxed));
+        assert!(h + m > 0);
     }
 
     #[test]

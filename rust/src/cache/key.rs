@@ -1,0 +1,195 @@
+//! Canonical, byte-stable content hashing for cache keys.
+//!
+//! The result cache and the per-stage memoizer both key on *what the
+//! request contains*, not on how it happens to be laid out in memory.
+//! [`table_hash`] therefore walks the table's **logical** row-major view
+//! (`Table::cell`), so a table assembled from several chunks hashes
+//! identically to its consolidated copy, and deliberately excludes the
+//! row ids (which are freshly minted per request) and any randomness
+//! (`CLOUDFLOW_SEED` never enters the digest). Schema names, dtypes,
+//! the grouping marker, the row count, and every cell value — with
+//! floats hashed by their exact bit patterns and variable-length
+//! payloads length-prefixed — are all folded into one 64-bit FNV-1a
+//! state, so no two distinct canonical encodings collide by framing.
+
+use crate::dataflow::table::{Table, Value};
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// Streaming FNV-1a over a canonical byte encoding.
+#[derive(Debug, Clone)]
+pub struct ContentHasher {
+    state: u64,
+}
+
+impl Default for ContentHasher {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ContentHasher {
+    pub fn new() -> Self {
+        ContentHasher { state: FNV_OFFSET }
+    }
+
+    pub fn bytes(&mut self, b: &[u8]) {
+        for &x in b {
+            self.state ^= x as u64;
+            self.state = self.state.wrapping_mul(FNV_PRIME);
+        }
+    }
+
+    pub fn u8(&mut self, v: u8) {
+        self.bytes(&[v]);
+    }
+
+    pub fn u64(&mut self, v: u64) {
+        self.bytes(&v.to_le_bytes());
+    }
+
+    /// Length-prefixed string (prefix keeps `"ab","c"` ≠ `"a","bc"`).
+    pub fn str(&mut self, s: &str) {
+        self.u64(s.len() as u64);
+        self.bytes(s.as_bytes());
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.state
+    }
+}
+
+fn hash_value(h: &mut ContentHasher, v: &Value) {
+    h.u8(v.dtype().tag());
+    match v {
+        Value::Str(s) => h.str(s),
+        Value::I64(x) => h.u64(*x as u64),
+        Value::F64(x) => h.u64(x.to_bits()),
+        Value::Bool(b) => h.u8(*b as u8),
+        Value::Blob(b) => {
+            h.u64(b.len() as u64);
+            h.bytes(b.as_slice());
+        }
+        Value::F32s(xs) => {
+            h.u64(xs.len() as u64);
+            for x in xs.iter() {
+                h.bytes(&x.to_bits().to_le_bytes());
+            }
+        }
+        Value::I32s(xs) => {
+            h.u64(xs.len() as u64);
+            for x in xs.iter() {
+                h.bytes(&x.to_le_bytes());
+            }
+        }
+    }
+}
+
+/// Canonical content hash of a table's logical view: schema (column
+/// names + dtypes), grouping marker, row count, and every cell in
+/// row-major order. Row ids and physical chunking are excluded, so two
+/// tables holding equal values hash identically whether their rows
+/// arrived chunked or consolidated, and the digest is independent of
+/// `CLOUDFLOW_SEED`.
+pub fn table_hash(t: &Table) -> u64 {
+    let mut h = ContentHasher::new();
+    let cols = t.schema().cols();
+    h.u64(cols.len() as u64);
+    for (name, dt) in cols {
+        h.str(name);
+        h.u8(dt.tag());
+    }
+    match t.grouping() {
+        Some(g) => {
+            h.u8(1);
+            h.str(g);
+        }
+        None => h.u8(0),
+    }
+    h.u64(t.len() as u64);
+    for row in 0..t.len() {
+        for col in 0..cols.len() {
+            hash_value(&mut h, &t.cell(row, col));
+        }
+    }
+    h.finish()
+}
+
+/// The result-cache key for one request: plan name, the plan's
+/// fingerprint generation (bumped on every `apply_plan`/model swap, so
+/// stale entries become unreachable atomically), and the input table's
+/// content hash.
+pub fn result_key(plan: &str, generation: u64, input: &Table) -> String {
+    format!("rc:{plan}:g{generation}:{:016x}", table_hash(input))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataflow::table::{DType, Schema, Table, Value};
+
+    fn schema() -> Schema {
+        Schema::new(vec![("name", DType::Str), ("conf", DType::F64), ("n", DType::I64)])
+    }
+
+    fn row(t: &mut Table, name: &str, conf: f64, n: i64) {
+        t.push_fresh(vec![
+            Value::Str(name.to_string()),
+            Value::F64(conf),
+            Value::I64(n),
+        ])
+        .unwrap();
+    }
+
+    #[test]
+    fn chunked_and_consolidated_layouts_hash_identically() {
+        let mut a = Table::new(schema());
+        row(&mut a, "a", 0.25, 1);
+        row(&mut a, "b", 0.75, 2);
+        let mut b = Table::new(schema());
+        row(&mut b, "c", 0.5, 3);
+        let chunked = Table::concat(vec![a, b]).unwrap();
+        let flat = chunked.compacted();
+        assert_eq!(table_hash(&chunked), table_hash(&flat));
+    }
+
+    #[test]
+    fn hash_ignores_row_ids_but_not_values() {
+        let mut a = Table::new(schema());
+        row(&mut a, "x", 1.0, 7);
+        let mut b = Table::new(schema());
+        row(&mut b, "x", 1.0, 7);
+        assert_ne!(a.ids(), b.ids(), "push_fresh mints distinct ids");
+        assert_eq!(table_hash(&a), table_hash(&b));
+
+        let mut c = Table::new(schema());
+        row(&mut c, "x", 1.0, 8);
+        assert_ne!(table_hash(&a), table_hash(&c));
+    }
+
+    #[test]
+    fn hash_covers_schema_grouping_and_framing() {
+        let mut a = Table::new(schema());
+        row(&mut a, "x", 1.0, 7);
+        let other = Schema::new(vec![("named", DType::Str), ("conf", DType::F64), ("n", DType::I64)]);
+        let mut b = Table::new(other);
+        row(&mut b, "x", 1.0, 7);
+        assert_ne!(table_hash(&a), table_hash(&b), "column rename changes the key");
+
+        let mut g = a.clone();
+        g.set_grouping(Some("name".to_string())).unwrap();
+        assert_ne!(table_hash(&a), table_hash(&g), "grouping marker changes the key");
+    }
+
+    #[test]
+    fn result_key_embeds_plan_and_generation() {
+        let mut t = Table::new(schema());
+        row(&mut t, "x", 1.0, 7);
+        let k0 = result_key("demo", 0, &t);
+        let k1 = result_key("demo", 1, &t);
+        assert!(k0.starts_with("rc:demo:g0:"), "{k0}");
+        assert_ne!(k0, k1, "a generation bump makes old entries unreachable");
+        assert_ne!(result_key("demo", 0, &t), result_key("other", 0, &t));
+    }
+}

@@ -1,0 +1,295 @@
+//! Per-stage memoization for deterministic pure stages.
+//!
+//! A stage qualifies only when its output is a pure function of its
+//! single input: Expr-only maps ([`FuncBody::Select`]), threshold/Expr
+//! filters, and the [`OpKind::FusedKernel`]s compiled from them — the
+//! same statically checkable set the fusion pass accepts. Closure
+//! (`Rust`) bodies, model bindings, sleeps, lookups, joins and
+//! multi-input stages never qualify, so memoization can never observe a
+//! side effect or a non-deterministic value.
+//!
+//! The memo store is a process-global, byte-bounded LRU keyed by
+//! `(plan, generation, segment, stage, input content hash)`. The
+//! generation component is the same plan fingerprint the result cache
+//! uses, so a `Cluster::apply_plan` hot-swap atomically orphans every
+//! memoized output. Memoization is **off by default**
+//! ([`set_enabled`]); the executor consults [`enabled`] per batch.
+//!
+//! [`FuncBody::Select`]: crate::dataflow::operator::FuncBody::Select
+//! [`OpKind::FusedKernel`]: crate::dataflow::operator::OpKind::FusedKernel
+
+use std::collections::{BTreeMap, HashMap, HashSet};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+
+use once_cell::sync::OnceCell;
+
+use crate::cache::key::table_hash;
+use crate::cache::result::remap_output;
+use crate::config;
+use crate::dataflow::compiler::PlanStage;
+use crate::dataflow::fused;
+use crate::dataflow::operator::OpKind;
+use crate::dataflow::table::Table;
+
+/// Is one operator pure (memoization-safe)?
+pub fn op_memoizable(op: &OpKind) -> bool {
+    match op {
+        OpKind::FusedKernel(_) => true,
+        OpKind::Fuse(ops) => ops.iter().all(op_memoizable),
+        _ => fused::fusible(op),
+    }
+}
+
+/// Does a compiled stage qualify for memoization? Single-input, at
+/// least one op, every op pure.
+pub fn stage_memoizable(stage: &PlanStage) -> bool {
+    stage.inputs.len() == 1 && !stage.ops.is_empty() && stage.ops.iter().all(op_memoizable)
+}
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+/// Turn per-stage memoization on or off (process-wide, default off).
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// `(plan, generation, segment, stage index, input content hash)`.
+type MemoKey = (String, u64, usize, usize, u64);
+
+struct MemoEntry {
+    input_ids: Vec<u64>,
+    output: Table,
+    bytes: usize,
+    tick: u64,
+}
+
+#[derive(Default)]
+struct MemoInner {
+    map: HashMap<MemoKey, MemoEntry>,
+    order: BTreeMap<u64, MemoKey>,
+    bytes: usize,
+    tick: u64,
+}
+
+/// Byte-bounded LRU of memoized stage outputs.
+pub struct MemoCache {
+    inner: Mutex<MemoInner>,
+    capacity: usize,
+}
+
+impl MemoCache {
+    pub fn with_capacity(capacity: usize) -> Self {
+        MemoCache { inner: Mutex::new(MemoInner::default()), capacity }
+    }
+
+    /// Probe for a memoized output of `(plan, generation, seg, idx)` on
+    /// an input with this content. On a hit the stored output is
+    /// re-stamped with the incoming input's row ids.
+    pub fn lookup(
+        &self,
+        plan: &str,
+        generation: u64,
+        seg: usize,
+        idx: usize,
+        input: &Table,
+    ) -> Option<Table> {
+        let k: MemoKey = (plan.to_string(), generation, seg, idx, table_hash(input));
+        let mut g = self.inner.lock().unwrap();
+        g.tick += 1;
+        let tick = g.tick;
+        let inner = &mut *g;
+        let out = match inner.map.get_mut(&k) {
+            Some(e) => {
+                inner.order.remove(&e.tick);
+                e.tick = tick;
+                inner.order.insert(tick, k.clone());
+                remap_output(&e.output, &e.input_ids, &input.ids())
+            }
+            None => None,
+        };
+        match out {
+            Some(_) => super::hit_counter().inc(),
+            None => super::miss_counter().inc(),
+        }
+        out
+    }
+
+    /// Memoize one stage output. Skipped when the stage minted fresh row
+    /// ids (cannot be replayed exactly) or the entry alone exceeds the
+    /// byte capacity.
+    pub fn store(
+        &self,
+        plan: &str,
+        generation: u64,
+        seg: usize,
+        idx: usize,
+        input: &Table,
+        output: &Table,
+    ) -> bool {
+        let input_ids = input.ids();
+        let idset: HashSet<u64> = input_ids.iter().copied().collect();
+        if idset.len() != input_ids.len() {
+            return false;
+        }
+        if !output.ids().iter().all(|id| idset.contains(id)) {
+            return false;
+        }
+        let bytes = output.size_bytes() + input_ids.len() * 8;
+        if bytes > self.capacity {
+            return false;
+        }
+        let k: MemoKey = (plan.to_string(), generation, seg, idx, table_hash(input));
+        let mut g = self.inner.lock().unwrap();
+        g.tick += 1;
+        let tick = g.tick;
+        let inner = &mut *g;
+        if let Some(old) = inner.map.remove(&k) {
+            inner.order.remove(&old.tick);
+            inner.bytes -= old.bytes;
+        }
+        inner.bytes += bytes;
+        inner.order.insert(tick, k.clone());
+        inner.map.insert(k, MemoEntry { input_ids, output: output.clone(), bytes, tick });
+        while inner.bytes > self.capacity {
+            let Some((&oldest, _)) = inner.order.iter().next() else { break };
+            let victim = inner.order.remove(&oldest).unwrap();
+            if let Some(e) = inner.map.remove(&victim) {
+                inner.bytes -= e.bytes;
+            }
+            super::evict_counter().inc();
+        }
+        true
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn bytes_used(&self) -> usize {
+        self.inner.lock().unwrap().bytes
+    }
+
+    /// Drop every entry (test isolation).
+    pub fn clear(&self) {
+        let mut g = self.inner.lock().unwrap();
+        g.map.clear();
+        g.order.clear();
+        g.bytes = 0;
+    }
+}
+
+/// The process-global memo store the cluster executor consults
+/// (capacity from `CLOUDFLOW_CACHE_CAP`).
+pub fn global() -> &'static MemoCache {
+    static MEMO: OnceCell<MemoCache> = OnceCell::new();
+    MEMO.get_or_init(|| MemoCache::with_capacity(config::global().cache.capacity_bytes))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    use crate::dataflow::operator::{ExecCtx, Func, Predicate, SleepDist};
+    use crate::dataflow::table::{DType, Schema, Value};
+    use crate::dataflow::v2::Flow;
+    use crate::dataflow::{col, compile, lit, OptFlags};
+
+    fn table(xs: &[f64]) -> Table {
+        let mut t = Table::new(Schema::new(vec![("x", DType::F64)]));
+        for &x in xs {
+            t.push_fresh(vec![Value::F64(x)]).unwrap();
+        }
+        t
+    }
+
+    #[test]
+    fn purity_is_statically_checkable() {
+        let select = OpKind::Map(Func::select("s", vec![("y", col("x") * lit(2.0))]));
+        assert!(op_memoizable(&select));
+        let expr_filter = OpKind::Filter(Predicate::expr(col("x").ge(lit(1.0))));
+        assert!(op_memoizable(&expr_filter));
+        let sleep = OpKind::Map(Func::sleep("z", SleepDist::ConstMs(1.0)));
+        assert!(!op_memoizable(&sleep), "sleep bodies are never memoized");
+        let closure = OpKind::Map(Func::rust(
+            "c",
+            None,
+            Arc::new(|_: &ExecCtx, t: &Table| Ok(t.clone())),
+        ));
+        assert!(!op_memoizable(&closure), "Rust closures are never memoized");
+    }
+
+    #[test]
+    fn compiled_expr_stages_qualify_and_lookups_never_do() {
+        let fl = Flow::source("memo_q", Schema::new(vec![("x", DType::F64)]))
+            .select(&[("x", col("x") * lit(3.0))])
+            .unwrap()
+            .filter_expr(col("x").ge(lit(0.0)))
+            .unwrap()
+            .into_dataflow()
+            .unwrap();
+        let plan = compile(&fl, &OptFlags::all()).unwrap();
+        let memoizable: usize = plan
+            .segments
+            .iter()
+            .flat_map(|s| s.stages.iter())
+            .filter(|st| stage_memoizable(st))
+            .count();
+        assert!(memoizable >= 1, "expr-only chain compiles to a memoizable stage");
+        // Source/input stages never qualify.
+        let first = &plan.segments[0].stages[0];
+        if matches!(first.ops[0], OpKind::Input) {
+            assert!(!stage_memoizable(first));
+        }
+    }
+
+    #[test]
+    fn memo_roundtrip_restamps_ids_and_respects_generation() {
+        let m = MemoCache::with_capacity(1 << 20);
+        let input = table(&[1.0, 2.0]);
+        let output = {
+            // Pretend the stage dropped row 1 (filter) but kept ids.
+            let mut t = Table::new(input.schema().clone());
+            t.push(input.ids()[0], vec![Value::F64(1.0)]).unwrap();
+            t
+        };
+        assert!(m.store("p", 0, 0, 1, &input, &output));
+
+        let replay = table(&[1.0, 2.0]);
+        let hit = m.lookup("p", 0, 0, 1, &replay).expect("hit");
+        assert_eq!(hit.ids(), vec![replay.ids()[0]]);
+        assert!(m.lookup("p", 1, 0, 1, &replay).is_none(), "generation bump misses");
+        assert!(m.lookup("p", 0, 0, 2, &replay).is_none(), "different stage misses");
+        assert!(m.lookup("p", 0, 0, 1, &table(&[9.0])).is_none(), "different input misses");
+    }
+
+    #[test]
+    fn lru_evicts_oldest_when_over_capacity() {
+        let one = table(&[1.0]);
+        let entry_bytes = one.size_bytes() + 8;
+        let m = MemoCache::with_capacity(2 * entry_bytes + entry_bytes / 2);
+        for (i, x) in [1.0, 2.0, 3.0].iter().enumerate() {
+            let t = table(&[*x]);
+            assert!(m.store("p", 0, 0, i, &t, &t));
+        }
+        assert!(m.len() <= 2, "oldest entry evicted, len={}", m.len());
+        assert!(m.bytes_used() <= 2 * entry_bytes + entry_bytes / 2);
+    }
+
+    #[test]
+    fn fresh_id_outputs_are_not_memoized() {
+        let m = MemoCache::with_capacity(1 << 20);
+        let input = table(&[1.0]);
+        let minted = table(&[1.0]); // fresh ids
+        assert!(!m.store("p", 0, 0, 0, &input, &minted));
+    }
+}

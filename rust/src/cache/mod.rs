@@ -1,0 +1,105 @@
+//! Prediction result cache + memoization tier.
+//!
+//! Clipper-style input-keyed caching in front of black-box pipelines is
+//! one of the highest-leverage serving optimizations, and under skewed
+//! (zipfian) popularity the planner should trade replicas for hit rate.
+//! This module supplies the whole tier:
+//!
+//! * [`key`] — canonical byte-stable content hashing of input tables
+//!   (layout- and seed-independent, row ids excluded).
+//! * [`result`] — the [`ResultCache`] store (in-process
+//!   [`anna::Cache`](crate::anna::Cache) shard with TTL/LRU bounds, plus
+//!   an optional anna-backed KVS tier) and the [`Cached`] deployment
+//!   wrapper that serves repeated inputs without re-running the plan.
+//! * [`memo`] — per-stage memoization of deterministic pure stages
+//!   (Expr-only maps/filters and fused kernels), consulted by the
+//!   cluster executor.
+//!
+//! Invalidation is by **fingerprint generation**: every plan carries a
+//! [`PlanGeneration`] that `Cluster::apply_plan` (and explicit
+//! [`Cached::invalidate`]) bumps atomically, making all existing entries
+//! unreachable in one step and journaling a `CacheInvalidate` event.
+//! Hit/miss/evict/invalidate counts are exported through the global
+//! metrics registry (`cache_hit`, `cache_miss`, `cache_evict`,
+//! `cache_invalidate`).
+
+pub mod key;
+pub mod memo;
+pub mod result;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::obs::metrics::{self as obs_metrics, Counter};
+
+pub use key::{result_key, table_hash, ContentHasher};
+pub use memo::{op_memoizable, stage_memoizable, MemoCache};
+pub use result::{CacheStats, Cached, ResultCache};
+
+/// A plan's cache fingerprint generation: a cheaply cloneable atomic
+/// counter shared between the deployed plan, its result cache and the
+/// memo tier. Bumping it (plan hot-swap, model swap, explicit flush)
+/// atomically orphans every cache entry keyed under the old generation.
+#[derive(Debug, Clone, Default)]
+pub struct PlanGeneration(Arc<AtomicU64>);
+
+impl PlanGeneration {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+
+    /// Advance to the next generation; returns the new value.
+    pub fn bump(&self) -> u64 {
+        self.0.fetch_add(1, Ordering::Relaxed) + 1
+    }
+}
+
+/// `cache_hit` counter in the global metrics registry.
+pub fn hit_counter() -> Counter {
+    obs_metrics::global().counter("cache_hit", &[])
+}
+
+/// `cache_miss` counter in the global metrics registry.
+pub fn miss_counter() -> Counter {
+    obs_metrics::global().counter("cache_miss", &[])
+}
+
+/// `cache_evict` counter (LRU pressure + TTL expiry) in the global
+/// metrics registry.
+pub fn evict_counter() -> Counter {
+    obs_metrics::global().counter("cache_evict", &[])
+}
+
+/// `cache_invalidate` counter (generation bumps) in the global metrics
+/// registry.
+pub fn invalidate_counter() -> Counter {
+    obs_metrics::global().counter("cache_invalidate", &[])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generation_bumps_are_shared_across_clones() {
+        let g = PlanGeneration::new();
+        let g2 = g.clone();
+        assert_eq!(g.get(), 0);
+        assert_eq!(g.bump(), 1);
+        assert_eq!(g2.get(), 1, "clones share the same counter");
+        assert_eq!(g2.bump(), 2);
+        assert_eq!(g.get(), 2);
+    }
+
+    #[test]
+    fn counters_register_once() {
+        let a = hit_counter();
+        let before = a.get();
+        hit_counter().inc();
+        assert_eq!(a.get(), before + 1, "same instrument behind both handles");
+    }
+}

@@ -1,0 +1,441 @@
+//! Content-keyed prediction result cache in front of a [`Deployment`].
+//!
+//! [`ResultCache`] stores finished responses keyed by
+//! [`key::result_key`] — the plan name, its fingerprint generation, and
+//! the input table's content hash. Storage is pluggable: an in-process
+//! [`anna::Cache`](crate::anna::Cache) shard (TTL + LRU/size-bounded)
+//! fronts an optional anna-backed KVS tier that is written through on
+//! store and decoded zero-copy (`Table::decode_shared`) on a shard miss.
+//!
+//! [`Cached`] wraps any deployment with the cache. A hit skips the whole
+//! pipeline but still behaves like a served request: it pays the modeled
+//! cache-hit cost, advances the deployment's latency/SLO metrics, and
+//! records a [`SpanKind::CacheHit`] span so critical-path tiling and
+//! burn-rate monitoring stay exact on the hit path. Responses are only
+//! stored when the pipeline preserved row ids; on a hit the stored
+//! output is re-stamped with the incoming request's ids, so a cached
+//! response is byte-identical to what the uncached oracle would return.
+
+use std::collections::{HashMap, HashSet};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::anna::{Bytes, Cache, Directory, KvsClient};
+use crate::cache::{key, PlanGeneration};
+use crate::cloudburst::metrics::PlanMetrics;
+use crate::cloudburst::ExecFuture;
+use crate::config;
+use crate::dataflow::table::Table;
+use crate::net::NodeId;
+use crate::obs::journal::{self, EventKind};
+use crate::obs::trace::{Span, SpanKind, TraceCtx};
+use crate::serve::{CallOpts, Deployment, ServeError};
+use crate::simulation::clock::{self, Clock};
+use crate::util::codec::{Reader, Writer};
+
+/// Hit/miss/store/invalidation counters for one cache instance, shared
+/// with the adaptive controller (which watches the observed hit rate).
+#[derive(Debug, Default)]
+pub struct CacheStats {
+    hits: AtomicU64,
+    misses: AtomicU64,
+    stores: AtomicU64,
+    invalidations: AtomicU64,
+}
+
+impl CacheStats {
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    pub fn stores(&self) -> u64 {
+        self.stores.load(Ordering::Relaxed)
+    }
+
+    pub fn invalidations(&self) -> u64 {
+        self.invalidations.load(Ordering::Relaxed)
+    }
+
+    pub fn lookups(&self) -> u64 {
+        self.hits() + self.misses()
+    }
+
+    /// Observed hit rate, `None` before any lookup.
+    pub fn hit_rate(&self) -> Option<f64> {
+        let n = self.lookups();
+        (n > 0).then(|| self.hits() as f64 / n as f64)
+    }
+}
+
+/// The pluggable result store: in-process shard + optional KVS tier.
+#[derive(Clone)]
+pub struct ResultCache {
+    shard: Arc<Cache>,
+    kvs: Option<KvsClient>,
+    ttl_ms: f64,
+    stats: Arc<CacheStats>,
+    /// Shard evictions already exported to the `cache_evict` counter.
+    evict_seen: Arc<AtomicU64>,
+}
+
+impl Default for ResultCache {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ResultCache {
+    /// Capacity and TTL from the global config
+    /// (`CLOUDFLOW_CACHE_CAP` / `CLOUDFLOW_CACHE_TTL_MS`).
+    pub fn new() -> Self {
+        let cfg = config::global();
+        Self::with_capacity(cfg.cache.capacity_bytes, cfg.cache.ttl_ms)
+    }
+
+    pub fn with_capacity(capacity_bytes: usize, ttl_ms: f64) -> Self {
+        ResultCache {
+            shard: Arc::new(Cache::new(NodeId::CLIENT, capacity_bytes, Directory::new())),
+            kvs: None,
+            ttl_ms,
+            stats: Arc::new(CacheStats::default()),
+            evict_seen: Arc::new(AtomicU64::new(0)),
+        }
+    }
+
+    /// Add an anna-backed KVS tier: written through on store, consulted
+    /// (with modeled KVS latency, zero-copy decode) when the in-process
+    /// shard misses. The durable tier carries no TTL; stale entries are
+    /// fenced off by the plan-generation component of the key instead.
+    pub fn with_kvs(mut self, kvs: KvsClient) -> Self {
+        self.kvs = Some(kvs);
+        self
+    }
+
+    pub fn stats(&self) -> Arc<CacheStats> {
+        self.stats.clone()
+    }
+
+    pub fn shard(&self) -> &Arc<Cache> {
+        &self.shard
+    }
+
+    pub fn ttl_ms(&self) -> f64 {
+        self.ttl_ms
+    }
+
+    /// Export shard evictions (LRU pressure + TTL expiries) accrued
+    /// since the last sync to the global `cache_evict` counter.
+    fn sync_evictions(&self) {
+        let seen = self.shard.eviction_count();
+        let prev = self.evict_seen.swap(seen, Ordering::Relaxed);
+        if seen > prev {
+            super::evict_counter().add(seen - prev);
+        }
+    }
+
+    fn fetch(&self, key: &str, now_ms: f64) -> Option<Bytes> {
+        if let Some(b) = self.shard.get_at(key, now_ms) {
+            return Some(b);
+        }
+        self.kvs.as_ref()?.get(key)
+    }
+
+    /// Probe for `key`; on a hit, rebuild the stored response with the
+    /// incoming request's row ids (see [`remap_output`]).
+    pub fn lookup(&self, key: &str, input: &Table, now_ms: f64) -> Option<Table> {
+        let out = self.lookup_inner(key, input, now_ms);
+        match out {
+            Some(_) => {
+                self.stats.hits.fetch_add(1, Ordering::Relaxed);
+                super::hit_counter().inc();
+            }
+            None => {
+                self.stats.misses.fetch_add(1, Ordering::Relaxed);
+                super::miss_counter().inc();
+            }
+        }
+        self.sync_evictions();
+        out
+    }
+
+    fn lookup_inner(&self, key: &str, input: &Table, now_ms: f64) -> Option<Table> {
+        let ids_buf = self.fetch(&format!("{key}#i"), now_ms)?;
+        let tab_buf = self.fetch(&format!("{key}#t"), now_ms)?;
+        let stored_ids = decode_ids(&ids_buf)?;
+        let stored = Table::decode_shared(&tab_buf).ok()?;
+        remap_output(&stored, &stored_ids, &input.ids())
+    }
+
+    /// Store a response. Returns `false` (entry skipped) when the
+    /// pipeline did not preserve row ids — such responses can never be
+    /// replayed byte-identically — or when the payload exceeds the shard
+    /// capacity.
+    pub fn store(&self, key: &str, input: &Table, output: &Table, now_ms: f64) -> bool {
+        let input_ids = input.ids();
+        let idset: HashSet<u64> = input_ids.iter().copied().collect();
+        if idset.len() != input_ids.len() {
+            return false;
+        }
+        if !output.ids().iter().all(|id| idset.contains(id)) {
+            return false;
+        }
+        let mut w = Writer::new();
+        w.u32(input_ids.len() as u32);
+        w.u64s_raw(&input_ids);
+        let ids_bytes: Bytes = w.finish().into();
+        let tab_bytes: Bytes = output.encode().into();
+        self.shard.insert_with_ttl(&format!("{key}#i"), ids_bytes.clone(), now_ms, self.ttl_ms);
+        self.shard.insert_with_ttl(&format!("{key}#t"), tab_bytes.clone(), now_ms, self.ttl_ms);
+        if let Some(kvs) = &self.kvs {
+            kvs.put_free(&format!("{key}#i"), ids_bytes);
+            kvs.put_free(&format!("{key}#t"), tab_bytes);
+        }
+        self.stats.stores.fetch_add(1, Ordering::Relaxed);
+        self.sync_evictions();
+        true
+    }
+}
+
+fn decode_ids(buf: &Bytes) -> Option<Vec<u64>> {
+    let mut r = Reader::new(buf.as_slice());
+    let n = r.u32().ok()? as usize;
+    r.u64_vec(n).ok()
+}
+
+/// Re-stamp a stored output with the incoming request's row ids: the
+/// stored input ids give each id's position, the new input supplies the
+/// id now occupying that position. Bails (miss) when the id sets cannot
+/// be aligned — duplicate ids, a length mismatch, or an output id the
+/// stored input never contained.
+pub(crate) fn remap_output(
+    stored: &Table,
+    stored_input_ids: &[u64],
+    new_input_ids: &[u64],
+) -> Option<Table> {
+    if stored_input_ids.len() != new_input_ids.len() {
+        return None;
+    }
+    let pos: HashMap<u64, usize> =
+        stored_input_ids.iter().enumerate().map(|(i, &id)| (id, i)).collect();
+    if pos.len() != stored_input_ids.len() {
+        return None;
+    }
+    let mut new_ids = Vec::with_capacity(stored.len());
+    for id in stored.ids() {
+        new_ids.push(new_input_ids[*pos.get(&id)?]);
+    }
+    let schema = stored.schema().clone();
+    let mut cols = Vec::with_capacity(schema.cols().len());
+    for (name, _) in schema.cols() {
+        cols.push(stored.column(name).ok()?);
+    }
+    let mut out = Table::from_columns(schema, new_ids, cols).ok()?;
+    out.set_grouping(stored.grouping().map(|s| s.to_string())).ok()?;
+    Some(out)
+}
+
+/// Hit-path request ids live above this base so they never collide with
+/// the inner deployment's own request counter.
+const HIT_REQ_BASE: u64 = 1 << 40;
+
+/// A [`Deployment`] wrapper that serves repeated inputs from the result
+/// cache. Disabled (`set_enabled(false)`) it is one relaxed atomic load
+/// away from the bare deployment.
+pub struct Cached<D: Deployment> {
+    inner: D,
+    cache: ResultCache,
+    plan: String,
+    generation: PlanGeneration,
+    clock: Clock,
+    enabled: AtomicBool,
+    next_req: AtomicU64,
+}
+
+impl<D: Deployment> Cached<D> {
+    pub fn new(inner: D, clock: Clock) -> Self {
+        let plan = inner.label();
+        Cached {
+            inner,
+            cache: ResultCache::new(),
+            plan,
+            generation: PlanGeneration::new(),
+            clock,
+            enabled: AtomicBool::new(true),
+            next_req: AtomicU64::new(0),
+        }
+    }
+
+    pub fn with_cache(mut self, cache: ResultCache) -> Self {
+        self.cache = cache;
+        self
+    }
+
+    /// Share a fingerprint generation (e.g. the cluster's, so
+    /// `Cluster::apply_plan` invalidates this cache too).
+    pub fn with_generation(mut self, generation: PlanGeneration) -> Self {
+        self.generation = generation;
+        self
+    }
+
+    pub fn set_enabled(&self, on: bool) {
+        self.enabled.store(on, Ordering::Relaxed);
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    pub fn cache(&self) -> &ResultCache {
+        &self.cache
+    }
+
+    pub fn stats(&self) -> Arc<CacheStats> {
+        self.cache.stats()
+    }
+
+    pub fn generation(&self) -> PlanGeneration {
+        self.generation.clone()
+    }
+
+    pub fn inner(&self) -> &D {
+        &self.inner
+    }
+
+    /// Explicit invalidation (model hot-swap, manual flush): atomically
+    /// bumps the plan fingerprint generation — making every existing
+    /// entry unreachable — journals a [`EventKind::CacheInvalidate`]
+    /// event and bumps the `cache_invalidate` counter. Returns the new
+    /// generation.
+    pub fn invalidate(&self) -> u64 {
+        let g = self.generation.bump();
+        journal::record(self.clock.now_ms(), &self.plan, EventKind::CacheInvalidate {
+            generation: g,
+        });
+        super::invalidate_counter().inc();
+        self.cache.stats.invalidations.fetch_add(1, Ordering::Relaxed);
+        g
+    }
+}
+
+impl<D: Deployment> Deployment for Cached<D> {
+    fn label(&self) -> String {
+        self.inner.label()
+    }
+
+    fn metrics(&self) -> Arc<PlanMetrics> {
+        self.inner.metrics()
+    }
+
+    fn call_async(&self, input: Table, opts: &CallOpts) -> Result<ExecFuture, ServeError> {
+        if !self.enabled.load(Ordering::Relaxed) {
+            return self.inner.call_async(input, opts);
+        }
+        let submitted = self.clock.now_ms();
+        let ckey = key::result_key(&self.plan, self.generation.get(), &input);
+        if let Some(out) = self.cache.lookup(&ckey, &input, submitted) {
+            let metrics = self.inner.metrics();
+            metrics.note_offered();
+            let id = HIT_REQ_BASE + self.next_req.fetch_add(1, Ordering::Relaxed);
+            let tctx = TraceCtx::for_request(&self.plan, id, self.clock, submitted);
+            let cclock = self.clock;
+            let rows = out.len();
+            return Ok(ExecFuture::spawn(submitted, move || {
+                clock::sleep_ms(config::global().kvs.cache_hit_ms);
+                let now = cclock.now_ms();
+                metrics.record(now, now - submitted);
+                if let Some(tr) = tctx.get() {
+                    tr.record(Span {
+                        kind: SpanKind::CacheHit,
+                        stage: None,
+                        label: "result_cache".to_string(),
+                        start_ms: submitted,
+                        end_ms: now,
+                        rows_in: rows,
+                        rows_out: rows,
+                        parent: None,
+                    });
+                    tr.finish(now);
+                }
+                Ok(out)
+            }));
+        }
+        let fut = self.inner.call_async(input.clone(), opts)?;
+        let cache = self.cache.clone();
+        let cclock = self.clock;
+        Ok(ExecFuture::spawn(fut.submitted_ms, move || {
+            let out = fut.result()?;
+            cache.store(&ckey, &input, &out, cclock.now_ms());
+            Ok(out)
+        }))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataflow::table::{DType, Schema, Value};
+
+    fn table(rows: &[(f64, i64)]) -> Table {
+        let mut t = Table::new(Schema::new(vec![("x", DType::F64), ("n", DType::I64)]));
+        for &(x, n) in rows {
+            t.push_fresh(vec![Value::F64(x), Value::I64(n)]).unwrap();
+        }
+        t
+    }
+
+    #[test]
+    fn store_then_lookup_restamps_request_ids() {
+        let rc = ResultCache::with_capacity(1 << 20, f64::INFINITY);
+        let input = table(&[(1.0, 1), (2.0, 2)]);
+        // The "pipeline" dropped the second row but kept ids.
+        let mut output = Table::new(input.schema().clone());
+        output.push(input.ids()[0], vec![Value::F64(1.0), Value::I64(1)]).unwrap();
+        assert!(rc.store("k", &input, &output, 0.0));
+
+        // Same content arrives again with fresh ids.
+        let replay = table(&[(1.0, 1), (2.0, 2)]);
+        let hit = rc.lookup("k", &replay, 1.0).expect("hit");
+        assert_eq!(hit.ids(), vec![replay.ids()[0]]);
+        assert_eq!(hit.encode(), {
+            let mut want = Table::new(replay.schema().clone());
+            want.push(replay.ids()[0], vec![Value::F64(1.0), Value::I64(1)]).unwrap();
+            want.encode()
+        });
+        assert_eq!(rc.stats().hits(), 1);
+    }
+
+    #[test]
+    fn id_minting_pipelines_are_never_stored() {
+        let rc = ResultCache::with_capacity(1 << 20, f64::INFINITY);
+        let input = table(&[(1.0, 1)]);
+        let output = table(&[(1.0, 1)]); // fresh ids, not the input's
+        assert!(!rc.store("k", &input, &output, 0.0));
+        assert!(rc.lookup("k", &input, 0.0).is_none());
+    }
+
+    #[test]
+    fn ttl_expires_entries_in_the_shard() {
+        let rc = ResultCache::with_capacity(1 << 20, 10.0);
+        let input = table(&[(3.0, 3)]);
+        let output = input.clone();
+        assert!(rc.store("k", &input, &output, 0.0));
+        assert!(rc.lookup("k", &input, 5.0).is_some());
+        assert!(rc.lookup("k", &input, 10.0).is_none(), "expire at the boundary");
+    }
+
+    #[test]
+    fn kvs_tier_serves_shard_misses() {
+        use crate::anna::Store;
+        let kvs = KvsClient::direct(Arc::new(Store::new(1)), NodeId::CLIENT);
+        let rc = ResultCache::with_capacity(1 << 20, 5.0).with_kvs(kvs);
+        let input = table(&[(4.0, 4)]);
+        let output = input.clone();
+        assert!(rc.store("k", &input, &output, 0.0));
+        // Long past the shard TTL the durable tier still answers.
+        assert!(rc.lookup("k", &input, 1e6).is_some());
+    }
+}

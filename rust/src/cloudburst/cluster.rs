@@ -9,6 +9,7 @@ use std::sync::{mpsc, Arc, Mutex, RwLock};
 use anyhow::{bail, Context, Result};
 
 use crate::anna::{Cache, Directory, KvsClient, Store};
+use crate::cache::PlanGeneration;
 use crate::config;
 use crate::dataflow::compiler::{Plan, StageInput};
 use crate::dataflow::operator::ExecCtx;
@@ -205,6 +206,10 @@ pub struct RegisteredPlan {
     /// per-request decision is a deterministic hash of the request id, so
     /// a given id sequence always sheds the same requests.
     pub admit_ppm: AtomicU32,
+    /// Cache fingerprint generation: result-cache and memo entries are
+    /// keyed under it, and `apply_plan` bumps it so a hot-swap atomically
+    /// invalidates both tiers (no stale reads).
+    pub generation: PlanGeneration,
 }
 
 impl RegisteredPlan {
@@ -913,6 +918,16 @@ impl ClusterInner {
             &plan.plan.name,
             EventKind::PlanSwap { replicas: plan.total_replicas() },
         );
+        // The swap changes what the plan computes per replica-second, so
+        // every cached result/memo entry keyed under the old fingerprint
+        // generation is atomically orphaned.
+        let generation = plan.generation.bump();
+        crate::cache::invalidate_counter().inc();
+        obs::journal::record(
+            self.clock.now_ms(),
+            &plan.plan.name,
+            EventKind::CacheInvalidate { generation },
+        );
         Ok(())
     }
 
@@ -1207,6 +1222,7 @@ impl Cluster {
             segs,
             metrics: Arc::new(PlanMetrics::default()),
             admit_ppm: AtomicU32::new(ADMIT_ALL_PPM),
+            generation: PlanGeneration::new(),
         });
         register_plan_source(&registered);
         for seg in &registered.segs {
@@ -1263,6 +1279,24 @@ impl Cluster {
     pub fn deployment(&self, h: DagHandle) -> Result<ClusterDeployment> {
         self.inner.plan(h)?; // fail fast on a dangling handle
         Ok(ClusterDeployment { inner: self.inner.clone(), h })
+    }
+
+    /// [`Cluster::deployment`] fronted by the content-keyed result cache
+    /// ([`crate::cache::Cached`]), sharing this plan's fingerprint
+    /// generation so `apply_plan` invalidates cached responses too.
+    pub fn cached_deployment(
+        &self,
+        h: DagHandle,
+    ) -> Result<crate::cache::Cached<ClusterDeployment>> {
+        let generation = self.generation(h)?;
+        Ok(crate::cache::Cached::new(self.deployment(h)?, self.inner.clock)
+            .with_generation(generation))
+    }
+
+    /// The cache fingerprint generation of a registered plan (bumped on
+    /// every [`Cluster::apply_plan`]).
+    pub fn generation(&self, h: DagHandle) -> Result<PlanGeneration> {
+        Ok(self.inner.plan(h)?.generation.clone())
     }
 
     /// Direct (client-side) KVS access for dataset setup.

@@ -409,13 +409,14 @@ fn process_batch(
             .trace
             .is_sampled()
             .then(|| trace::enter_staged(&task.req.trace, Some((task.seg, task.stage))));
-        let out = run_ops(ctx, &stage_rt.spec, inputs);
+        let (out, memo_hit) =
+            run_ops_memo(ctx, plan, task.seg, task.stage, &stage_rt.spec, inputs);
         drop(staged);
         let t1 = cluster.clock.now_ms();
         stage_rt.telemetry.note_invocation(1, t1 - t0);
         if let Some(tr) = task.req.trace.get() {
             tr.record(Span {
-                kind: SpanKind::Service,
+                kind: if memo_hit { SpanKind::CacheHit } else { SpanKind::Service },
                 stage: Some((task.seg, task.stage)),
                 label: stage_rt.spec.name.clone(),
                 start_ms: t0,
@@ -450,7 +451,14 @@ fn process_batch(
         .iter()
         .find(|t| t.req.trace.is_sampled())
         .map(|t| trace::enter_staged(&t.req.trace, Some((t.seg, t.stage))));
-    let out = run_ops(ctx, &stage_rt.spec, vec![combined]);
+    let (out, memo_hit) = run_ops_memo(
+        ctx,
+        plan,
+        tasks[0].seg,
+        tasks[0].stage,
+        &stage_rt.spec,
+        vec![combined],
+    );
     drop(staged);
     let t1 = cluster.clock.now_ms();
     stage_rt.telemetry.note_invocation(tasks.len(), t1 - t0);
@@ -461,7 +469,7 @@ fn process_batch(
                 let part = out.subset_by_ids(&ids);
                 if let Some(tr) = t.req.trace.get() {
                     tr.record(Span {
-                        kind: SpanKind::Service,
+                        kind: if memo_hit { SpanKind::CacheHit } else { SpanKind::Service },
                         stage: Some((t.seg, t.stage)),
                         label: stage_rt.spec.name.clone(),
                         start_ms: t0,
@@ -482,6 +490,38 @@ fn process_batch(
         }
     }
     Ok(())
+}
+
+/// Run a stage's ops, consulting the per-stage memo tier when it is
+/// enabled and the stage is statically pure (see [`crate::cache::memo`]).
+/// Returns the output and whether it came from the memo — the caller
+/// records a `CacheHit` span instead of `Service` on a hit so
+/// critical-path tiling stays exact.
+fn run_ops_memo(
+    ctx: &ExecCtx,
+    plan: &Arc<RegisteredPlan>,
+    seg: usize,
+    idx: usize,
+    spec: &PlanStage,
+    inputs: Vec<Table>,
+) -> (Result<Table>, bool) {
+    if !crate::cache::memo::enabled()
+        || inputs.len() != 1
+        || !crate::cache::memo::stage_memoizable(spec)
+    {
+        return (run_ops(ctx, spec, inputs), false);
+    }
+    let memo = crate::cache::memo::global();
+    let generation = plan.generation.get();
+    if let Some(hit) = memo.lookup(&plan.plan.name, generation, seg, idx, &inputs[0]) {
+        return (Ok(hit), true);
+    }
+    let input = inputs[0].clone();
+    let out = run_ops(ctx, spec, inputs);
+    if let Ok(t) = &out {
+        memo.store(&plan.plan.name, generation, seg, idx, &input, t);
+    }
+    (out, false)
 }
 
 /// Execute a stage's op chain: ops[0] may be multi-input, the rest are a

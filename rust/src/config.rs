@@ -88,6 +88,15 @@ pub struct BatchConfig {
 }
 
 #[derive(Debug, Clone)]
+pub struct CacheConfig {
+    /// Result-cache shard capacity in bytes (`CLOUDFLOW_CACHE_CAP`).
+    pub capacity_bytes: usize,
+    /// Default entry TTL in virtual ms (`CLOUDFLOW_CACHE_TTL_MS`); a
+    /// non-positive or non-finite value disables expiry.
+    pub ttl_ms: f64,
+}
+
+#[derive(Debug, Clone)]
 pub struct Config {
     /// Multiplier applied to modeled sleeps (see module docs).
     pub time_scale: f64,
@@ -97,6 +106,7 @@ pub struct Config {
     pub batch: BatchConfig,
     pub cluster: ClusterConfig,
     pub resilience: ResilienceConfig,
+    pub cache: CacheConfig,
 }
 
 impl Default for Config {
@@ -133,6 +143,10 @@ impl Default for Config {
                 max_task_retries: 4,
                 retry_backoff_ms: 25.0,
             },
+            cache: CacheConfig {
+                capacity_bytes: 256 * 1024 * 1024, // 256 MB result shard
+                ttl_ms: 120_000.0,
+            },
         }
     }
 }
@@ -155,6 +169,12 @@ impl Config {
         }
         if let Some(v) = env_f64("CLOUDFLOW_SUPERVISOR_MS") {
             c.resilience.supervisor_interval_ms = v.max(1.0);
+        }
+        if let Some(v) = env_f64("CLOUDFLOW_CACHE_CAP") {
+            c.cache.capacity_bytes = v.max(0.0) as usize;
+        }
+        if let Some(v) = env_f64("CLOUDFLOW_CACHE_TTL_MS") {
+            c.cache.ttl_ms = v;
         }
         c
     }

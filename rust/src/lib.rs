@@ -30,6 +30,12 @@
 //! a unified metrics registry with JSON/Prometheus exporters, and a
 //! structured journal of control-plane decisions.
 //!
+//! The [`cache`] subsystem adds a Clipper-style result cache and
+//! per-stage memoization tier: content-hash keys over canonical table
+//! bytes, TTL/LRU-bounded storage over the anna shard, generation-based
+//! invalidation wired into plan hot-swap, and cache-aware replica
+//! planning fed by observed hit rates.
+//!
 //! The [`faults`] subsystem makes it survivable — seed-deterministic
 //! fault plans (replica crashes, message drops/delays, KVS outages)
 //! injected into the runtime, a crash-recovery supervisor
@@ -56,6 +62,7 @@
 pub mod adaptive;
 pub mod anna;
 pub mod baselines;
+pub mod cache;
 pub mod cloudburst;
 pub mod config;
 pub mod dataflow;

@@ -29,6 +29,9 @@ pub const NOMINAL_EXCESS_MS: f64 = 1.0;
 /// Monte-Carlo samples for the predicted estimate re-run.
 const ESTIMATE_SAMPLES: usize = 200;
 
+/// Absolute hit-rate drop below plan that reads as a collapse.
+pub const COLLAPSE_DROP: f64 = 0.15;
+
 /// What dominates a stage's excess latency.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Cause {
@@ -39,6 +42,9 @@ pub enum Cause {
     /// A replica of this stage crashed in the window (journaled by the
     /// recovery supervisor); the excess is recovery fallout, not drift.
     Crash,
+    /// The result-cache hit rate collapsed below what the plan's replica
+    /// counts assumed, and the extra miss traffic is queueing here.
+    HitRateCollapse,
     /// Within plan.
     Nominal,
 }
@@ -49,8 +55,27 @@ impl Cause {
             Cause::Queueing => "queueing",
             Cause::ServiceDrift => "service_drift",
             Cause::Crash => "crash",
+            Cause::HitRateCollapse => "hit_rate_collapse",
             Cause::Nominal => "nominal",
         }
+    }
+}
+
+/// Result-cache health over the explained window: the hit rate the
+/// deployed plan's replica counts were tuned for vs the rate actually
+/// observed ([`crate::cache::CacheStats::hit_rate`]).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CacheHealth {
+    pub expected: f64,
+    pub observed: f64,
+}
+
+impl CacheHealth {
+    /// Did the hit rate fall far enough below plan
+    /// ([`COLLAPSE_DROP`]) that the pipeline is absorbing traffic the
+    /// cache was supposed to serve?
+    pub fn collapsed(&self) -> bool {
+        self.expected - self.observed > COLLAPSE_DROP
     }
 }
 
@@ -111,6 +136,9 @@ pub struct ExplainReport {
     pub crashes: Vec<(String, f64)>,
     /// Stages whose live service ratio exceeds [`DRIFT_NOTE_RATIO`].
     pub drifted: Vec<(usize, usize, f64)>,
+    /// Result-cache health at explain time, when the caller serves
+    /// through a cache tier.
+    pub cache: Option<CacheHealth>,
     /// Findings ranked by `excess_ms`, worst first.
     pub findings: Vec<StageFinding>,
     /// One-line human conclusion.
@@ -146,6 +174,14 @@ impl ExplainReport {
                 .map(|(s, t)| format!("{s}@{t:.0}ms"))
                 .collect();
             out.push_str(&format!("crashes in window: {}\n", list.join(", ")));
+        }
+        if let Some(c) = &self.cache {
+            out.push_str(&format!(
+                "cache: hit rate {:.2} observed vs {:.2} planned{}\n",
+                c.observed,
+                c.expected,
+                if c.collapsed() { " (collapsed)" } else { "" }
+            ));
         }
         out.push_str(&format!(
             "{:<18} {:<13} {:>6} {:>22} {:>22} {:>7} {:>7}\n",
@@ -183,6 +219,14 @@ impl ExplainReport {
         out.push_str(&format!(",\"attainment\":{}", jf(self.attainment)));
         out.push_str(&format!(",\"admit_fraction\":{}", jf(self.admit_fraction)));
         out.push_str(&format!(",\"shed_fraction\":{}", jf(self.shed_fraction)));
+        match &self.cache {
+            Some(c) => out.push_str(&format!(
+                ",\"cache\":{{\"expected\":{},\"observed\":{}}}",
+                jf(c.expected),
+                jf(c.observed)
+            )),
+            None => out.push_str(",\"cache\":null"),
+        }
         out.push_str(",\"crashes\":[");
         for (i, (stage, t)) in self.crashes.iter().enumerate() {
             if i > 0 {
@@ -250,6 +294,22 @@ pub fn explain(
     blame: Option<&BlameReport>,
     baseline: Option<&BlameReport>,
     admit_fraction: f64,
+) -> ExplainReport {
+    explain_with_cache(dp, snap, blame, baseline, admit_fraction, None)
+}
+
+/// [`explain`], plus the result-cache health of the serving tier: when
+/// the observed hit rate has [`CacheHealth::collapsed`] below what the
+/// plan assumed, queueing excess is attributed to
+/// [`Cause::HitRateCollapse`] — the stage queues are the symptom, the
+/// cold cache is the candidate root cause.
+pub fn explain_with_cache(
+    dp: &DeploymentPlan,
+    snap: &LiveSnapshot,
+    blame: Option<&BlameReport>,
+    baseline: Option<&BlameReport>,
+    admit_fraction: f64,
+    cache: Option<CacheHealth>,
 ) -> ExplainReport {
     // Reconstruct the deployed configuration and re-run the cost model at
     // the observed load (clamped just under the plan's ceiling: Sakasegawa
@@ -346,7 +406,11 @@ pub fn explain(
         } else if excess < NOMINAL_EXCESS_MS {
             Cause::Nominal
         } else if wait_excess >= service_excess {
-            Cause::Queueing
+            if cache.is_some_and(|c| c.collapsed()) {
+                Cause::HitRateCollapse
+            } else {
+                Cause::Queueing
+            }
         } else {
             Cause::ServiceDrift
         };
@@ -383,6 +447,15 @@ pub fn explain(
             snap.p99_ms, dp.slo.p99_ms, top.label, top.seg, top.idx,
             crashes.len(), top.excess_ms,
         ),
+        Some(top) if regressed && top.cause == Cause::HitRateCollapse => {
+            let c = cache.expect("HitRateCollapse implies cache health");
+            format!(
+                "p99 regressed to {:.0}ms (target {:.0}ms) because the result-cache hit rate collapsed from {:.2} to {:.2}: miss traffic the plan expected the cache to absorb is queueing at stage {} ({},{}), wait {:.1}ms vs {:.1}ms predicted",
+                snap.p99_ms, dp.slo.p99_ms, c.expected, c.observed,
+                top.label, top.seg, top.idx,
+                top.observed_wait_ms, top.predicted_wait_ms,
+            )
+        }
         Some(top) if regressed => {
             let (what, ratio) = match top.cause {
                 Cause::Queueing => ("queueing", top.wait_ratio),
@@ -419,6 +492,7 @@ pub fn explain(
         shed_fraction,
         crashes,
         drifted,
+        cache,
         findings,
         verdict,
     }
@@ -524,6 +598,36 @@ mod tests {
         let report = explain(&dp, &snap, None, None, 1.0);
         assert!(report.top().is_none(), "{:?}", report.findings);
         assert!(report.verdict.contains("within"), "{}", report.verdict);
+    }
+
+    #[test]
+    fn hit_rate_collapse_is_attributed() {
+        let dp = two_stage_dp_named("exp_cache_t");
+        let snap = LiveSnapshot {
+            t_ms: 5_000.0,
+            stages: vec![obs(&dp, "front", 1.0, 0, 40.0), obs(&dp, "heavy", 1.2, 150, 40.0)],
+            offered_qps: 40.0,
+            attainment: 0.5,
+            p99_ms: 800.0,
+            latency_window: 256,
+            completed: 400,
+            shed: 0,
+        };
+        let health = CacheHealth { expected: 0.8, observed: 0.1 };
+        assert!(health.collapsed());
+        let report = explain_with_cache(&dp, &snap, None, None, 1.0, Some(health));
+        let top = report.top().expect("a non-nominal top cause");
+        assert_eq!(top.cause, Cause::HitRateCollapse, "top={top:?}");
+        assert!(report.verdict.contains("hit rate collapsed"), "{}", report.verdict);
+        assert!(report.render().contains("(collapsed)"), "{}", report.render());
+        let j = crate::util::json::Json::parse(&report.to_json()).unwrap();
+        let c = j.get("cache").expect("cache field");
+        assert!(c.get("observed").is_some(), "{}", report.to_json());
+        // A healthy cache leaves the queueing attribution untouched.
+        let ok = CacheHealth { expected: 0.8, observed: 0.75 };
+        assert!(!ok.collapsed());
+        let report2 = explain_with_cache(&dp, &snap, None, None, 1.0, Some(ok));
+        assert_eq!(report2.top().unwrap().cause, Cause::Queueing);
     }
 
     #[test]

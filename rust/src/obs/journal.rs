@@ -57,6 +57,10 @@ pub enum EventKind {
     Degraded { reason: String },
     /// The deterministic fault layer injected a fault.
     FaultInjected { kind: String },
+    /// The result/memoization cache for a plan was invalidated (plan
+    /// hot-swap or model swap); `generation` is the fingerprint generation
+    /// entries are keyed by *after* the bump.
+    CacheInvalidate { generation: u64 },
 }
 
 impl EventKind {
@@ -79,6 +83,7 @@ impl EventKind {
             EventKind::HedgeFired => "hedge_fired",
             EventKind::Degraded { .. } => "degraded",
             EventKind::FaultInjected { .. } => "fault_injected",
+            EventKind::CacheInvalidate { .. } => "cache_invalidate",
         }
     }
 }
@@ -147,6 +152,9 @@ impl Event {
             EventKind::HedgeFired => String::new(),
             EventKind::Degraded { reason } => format!(",\"reason\":{reason:?}"),
             EventKind::FaultInjected { kind } => format!(",\"kind\":{kind:?}"),
+            EventKind::CacheInvalidate { generation } => {
+                format!(",\"generation\":{generation}")
+            }
         };
         format!("{{{head}{tail}}}")
     }

@@ -59,6 +59,10 @@ pub enum SpanKind {
     CodecDecode,
     /// Final result hop back to the client.
     Return,
+    /// Request (or stage) served from the result/memoization cache: the
+    /// work it replaces never ran, but the hit must still appear on the
+    /// critical path so tiling and burn-rate accounting stay exact.
+    CacheHit,
 }
 
 impl SpanKind {
@@ -74,6 +78,7 @@ impl SpanKind {
             SpanKind::CodecEncode => "codec_encode",
             SpanKind::CodecDecode => "codec_decode",
             SpanKind::Return => "return",
+            SpanKind::CacheHit => "cache_hit",
         }
     }
 }

@@ -180,6 +180,28 @@ impl Profile {
         }
         out
     }
+
+    /// A copy with every stage's `invoke_prob` scaled by `1 - rate`,
+    /// where `rate` is the observed result-cache hit rate: a hit is
+    /// served before any stage runs, so under a zipfian workload with a
+    /// warm cache only the miss fraction of offered load reaches the
+    /// pipeline, and the tuner can shrink replicas on cacheable stages
+    /// accordingly.  Non-finite rates are a no-op; the rate is clamped
+    /// to `[0, 0.99]` so the cost model never divides by a zero arrival
+    /// rate.
+    pub fn with_expected_hit_rate(&self, rate: f64) -> Profile {
+        if !rate.is_finite() {
+            return self.clone();
+        }
+        let miss = 1.0 - rate.clamp(0.0, 0.99);
+        let mut out = self.clone();
+        for seg in &mut out.stages {
+            for sp in seg.iter_mut() {
+                sp.invoke_prob = (sp.invoke_prob * miss).min(1.0);
+            }
+        }
+        out
+    }
 }
 
 #[cfg(test)]
@@ -256,6 +278,26 @@ mod tests {
         // 1.7 clamps to 1.0; NaN/non-positive leave the calibration value.
         assert!((bad.get(0, 0).invoke_prob - 1.0).abs() < 1e-9);
         assert!((bad.get(0, 0).rows_in - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn expected_hit_rate_scales_invoke_prob() {
+        let p = Profile {
+            stages: vec![vec![prof(vec![(1, vec![10.0])])]],
+            input_bytes: 1.0,
+            output_bytes: 1.0,
+            calib_requests: 1,
+        };
+        let warm = p.with_expected_hit_rate(0.75);
+        assert!((warm.get(0, 0).invoke_prob - 0.25).abs() < 1e-9);
+        // Clamped: a perfect hit rate still leaves 1% of traffic, and
+        // bad inputs leave the profile untouched.
+        let perfect = p.with_expected_hit_rate(1.0);
+        assert!(perfect.get(0, 0).invoke_prob > 0.0);
+        let nan = p.with_expected_hit_rate(f64::NAN);
+        assert!((nan.get(0, 0).invoke_prob - 1.0).abs() < 1e-9);
+        let neg = p.with_expected_hit_rate(-0.5);
+        assert!((neg.get(0, 0).invoke_prob - 1.0).abs() < 1e-9);
     }
 
     #[test]

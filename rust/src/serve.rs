@@ -27,6 +27,11 @@
 //! reusable options template plus a cached last-good response.  Every
 //! retry, hedge and degradation is journaled and counted, so the
 //! observability plane can attribute them.
+//!
+//! The result-cache tier composes the same way: [`Cached`] (re-exported
+//! from [`crate::cache`]) wraps any deployment and serves repeated
+//! inputs from a content-hash cache without re-running the plan, while
+//! still recording latency, SLO counts and a `CacheHit` trace span.
 
 use std::fmt;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -44,6 +49,8 @@ use crate::obs::journal::{self, EventKind};
 use crate::obs::metrics as obs_metrics;
 use crate::obs::trace::{self, Span, SpanKind, TraceCtx};
 use crate::simulation::clock::{self, Clock};
+
+pub use crate::cache::{Cached, ResultCache};
 
 /// Typed serving error (replaces bare `anyhow` on the request path).
 #[derive(Debug)]
@@ -803,6 +810,37 @@ mod tests {
         assert_eq!(outs.len(), 8);
         assert!(outs.iter().all(|r| r.is_ok()));
         assert_eq!(d.metrics().completed(), 8);
+    }
+
+    #[test]
+    fn cached_deployment_hits_are_byte_identical() {
+        let d = Cached::new(LocalServer::new(flow()).unwrap(), Clock::new());
+        d.call(input(3)).unwrap();
+        assert_eq!(d.stats().misses(), 1);
+        assert_eq!(d.stats().stores(), 1);
+
+        // Same content, fresh row ids: a hit, byte-identical to what a
+        // separate uncached oracle returns for this exact request.
+        let replay = input(3);
+        let oracle = LocalServer::new(flow()).unwrap().call(replay.clone()).unwrap();
+        let hit = d.call(replay).unwrap();
+        assert_eq!(d.stats().hits(), 1);
+        assert_eq!(hit.encode(), oracle.encode());
+        // The hit still counts as a served request.
+        assert_eq!(d.metrics().completed(), 2);
+
+        // Invalidation bumps the generation: same content misses again.
+        let g = d.invalidate();
+        assert_eq!(g, d.generation().get());
+        d.call(input(3)).unwrap();
+        assert_eq!(d.stats().misses(), 2);
+
+        // Disabled: pure delegation, the cache is never consulted.
+        d.set_enabled(false);
+        let lookups = d.stats().lookups();
+        d.call(input(3)).unwrap();
+        assert_eq!(d.stats().lookups(), lookups);
+        assert!(!d.enabled());
     }
 
     #[test]

@@ -12,4 +12,4 @@ pub mod traces;
 pub use drift::{drifting_chain, overload_stage, payload_shift, DriftScenario};
 pub use loadgen::{closed_loop, open_loop, open_loop_with, LoadResult, OpenLoopResult};
 pub use pipelines::PipelineSpec;
-pub use traces::ArrivalTrace;
+pub use traces::{zipfian, ArrivalTrace, ZipfianKeys};

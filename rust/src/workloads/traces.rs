@@ -144,6 +144,79 @@ impl ArrivalTrace {
     }
 }
 
+/// A deterministic zipfian key-popularity distribution over
+/// `n_keys` ranked keys: rank `k` (0-based) is drawn with probability
+/// proportional to `1 / (k+1)^alpha`.  Sampling inverts a precomputed
+/// CDF against the seeded RNG stream, so a fixed `CLOUDFLOW_SEED`
+/// yields a byte-identical key sequence — pair [`ZipfianKeys::keys`]
+/// with an [`ArrivalTrace`] by index to drive a popularity-skewed
+/// open-loop workload (the cache bench's traffic model).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ZipfianKeys {
+    pub alpha: f64,
+    pub n_keys: usize,
+    stream: u64,
+    /// Normalized CDF over ranks, ascending; `cdf[n-1] == 1.0`.
+    cdf: Vec<f64>,
+}
+
+/// [`ZipfianKeys`] on the default RNG stream.  `alpha = 0` is uniform;
+/// `alpha >= 1` concentrates most draws on the head of the key space.
+pub fn zipfian(alpha: f64, n_keys: usize) -> ZipfianKeys {
+    ZipfianKeys::new(0, alpha, n_keys)
+}
+
+impl ZipfianKeys {
+    pub fn new(stream: u64, alpha: f64, n_keys: usize) -> ZipfianKeys {
+        let n = n_keys.max(1);
+        let a = if alpha.is_finite() { alpha.max(0.0) } else { 0.0 };
+        let mut cdf = Vec::with_capacity(n);
+        let mut acc = 0.0;
+        for k in 0..n {
+            acc += 1.0 / ((k + 1) as f64).powf(a);
+            cdf.push(acc);
+        }
+        for c in cdf.iter_mut() {
+            *c /= acc;
+        }
+        ZipfianKeys { alpha: a, n_keys: n, stream, cdf }
+    }
+
+    /// Probability of drawing rank `k`.
+    pub fn mass(&self, k: usize) -> f64 {
+        if k >= self.n_keys {
+            return 0.0;
+        }
+        let below = if k == 0 { 0.0 } else { self.cdf[k - 1] };
+        self.cdf[k] - below
+    }
+
+    /// The first `n` key ranks of the deterministic sequence (CDF
+    /// inversion of the seeded stream; same `(seed, stream, alpha,
+    /// n_keys)` → same sequence).
+    pub fn keys(&self, n: usize) -> Vec<usize> {
+        let mut r = rng::for_case(0x21FF, self.stream);
+        (0..n)
+            .map(|_| {
+                let u = r.f64();
+                self.cdf.partition_point(|&c| c < u).min(self.n_keys - 1)
+            })
+            .collect()
+    }
+
+    /// FNV-1a over a key sequence of length `n` (the determinism test's
+    /// probe, mirroring [`ArrivalTrace::digest`]).
+    pub fn digest(&self, n: usize) -> String {
+        let mut h: u64 = 0xcbf29ce484222325;
+        for k in self.keys(n) {
+            for b in (k as u64).to_le_bytes() {
+                h = (h ^ b as u64).wrapping_mul(0x100000001b3);
+            }
+        }
+        format!("zipf[a{:.2},k{}]:{n}:{h:016x}", self.alpha, self.n_keys)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -198,6 +271,46 @@ mod tests {
             .count();
         // 10% of the time carries most of the arrivals.
         assert!(burst as f64 > 0.5 * tr.len() as f64, "{burst}/{}", tr.len());
+    }
+
+    #[test]
+    fn zipfian_is_deterministic_and_skewed() {
+        let z = zipfian(1.2, 64);
+        assert_eq!(z.keys(500), z.keys(500));
+        assert_eq!(z.digest(500), z.digest(500));
+        // A different stream (or alpha) draws a different sequence.
+        let other = ZipfianKeys::new(1, 1.2, 64);
+        assert_ne!(z.keys(500), other.keys(500));
+        // Skew: the head of the key space absorbs most of the draws.
+        let keys = z.keys(2_000);
+        let head = keys.iter().filter(|&&k| k < 8).count();
+        assert!(
+            head as f64 > 0.5 * keys.len() as f64,
+            "head draws {head}/{}",
+            keys.len()
+        );
+        // Empirical head mass tracks the analytic CDF.
+        let analytic: f64 = (0..8).map(|k| z.mass(k)).sum();
+        assert!((head as f64 / keys.len() as f64 - analytic).abs() < 0.08);
+        // All ranks in range.
+        assert!(keys.iter().all(|&k| k < 64));
+    }
+
+    #[test]
+    fn zipfian_alpha_zero_is_uniform() {
+        let z = zipfian(0.0, 10);
+        assert!((z.mass(0) - 0.1).abs() < 1e-9);
+        assert!((z.mass(9) - 0.1).abs() < 1e-9);
+        let keys = z.keys(5_000);
+        let head = keys.iter().filter(|&&k| k == 0).count();
+        assert!((head as f64 / 5_000.0 - 0.1).abs() < 0.05, "{head}");
+    }
+
+    #[test]
+    fn zipfian_composes_with_arrival_traces() {
+        let tr = ArrivalTrace::poisson(9, 50.0, 10_000.0);
+        let keys = zipfian(1.0, 32).keys(tr.len());
+        assert_eq!(keys.len(), tr.len());
     }
 
     #[test]

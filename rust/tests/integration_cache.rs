@@ -1,0 +1,189 @@
+//! Integration tests for the prediction result cache + memoization tier:
+//! generation invalidation across `apply_plan` hot-swaps (no stale
+//! reads mid-trace), hit-path observability (trace spans + SLO counts
+//! keep advancing), and per-stage memoization correctness on a live
+//! cluster.
+
+use cloudflow::cache;
+use cloudflow::cloudburst::Cluster;
+use cloudflow::dataflow::compiler::{compile, OptFlags};
+use cloudflow::dataflow::exec_local;
+use cloudflow::dataflow::operator::ExecCtx;
+use cloudflow::dataflow::table::{DType, Schema, Table, Value};
+use cloudflow::dataflow::v2::Flow;
+use cloudflow::dataflow::{col, lit, Dataflow};
+use cloudflow::obs::journal::{self, EventKind};
+use cloudflow::obs::trace::{self, SpanKind};
+use cloudflow::planner::{plan_for_slo, PlannerCtx, Slo};
+use cloudflow::serve::Deployment;
+
+fn schema() -> Schema {
+    Schema::new(vec![("x", DType::F64)])
+}
+
+fn input(xs: &[f64]) -> Table {
+    let mut t = Table::new(schema());
+    for &x in xs {
+        t.push_fresh(vec![Value::F64(x)]).unwrap();
+    }
+    t
+}
+
+/// A pure Expr pipeline (id-preserving, so responses are cacheable and
+/// its compiled stage qualifies for memoization under fusion).
+fn expr_flow(name: &str) -> Dataflow {
+    Flow::source(name, schema())
+        .select(&[("x", col("x") * lit(2.0))])
+        .unwrap()
+        .filter_expr(col("x").ge(lit(0.0)))
+        .unwrap()
+        .into_dataflow()
+        .unwrap()
+}
+
+/// Plan hot-swap is a cache barrier: entries stored under the old plan
+/// fingerprint generation are unreachable the instant `apply_plan`
+/// returns, the bump is journaled as `cache_invalidate`, and repeated
+/// content is recomputed — byte-identical to the oracle — rather than
+/// served stale.
+#[test]
+fn hot_swap_invalidates_and_never_serves_stale() {
+    let flow = expr_flow("cache_swap_t");
+    let dp = plan_for_slo(&flow, &Slo::new(500.0, 10.0), &PlannerCtx::default().quick()).unwrap();
+    let cluster = Cluster::new(None);
+    let h = cluster.register_planned(&dp).unwrap();
+    let cached = cluster.cached_deployment(h).unwrap();
+    let ctx = ExecCtx::local();
+
+    let req = input(&[1.0, -2.0, 3.0]);
+    let oracle = exec_local::execute(&flow, req.clone(), &ctx).unwrap();
+    let miss = cached.call(req.clone()).unwrap();
+    assert_eq!(miss.encode(), oracle.encode());
+    assert_eq!((cached.stats().hits(), cached.stats().misses()), (0, 1));
+
+    // Same content again: a hit, still byte-identical.
+    let replay = input(&[1.0, -2.0, 3.0]);
+    let oracle2 = exec_local::execute(&flow, replay.clone(), &ctx).unwrap();
+    let hit = cached.call(replay).unwrap();
+    assert_eq!(hit.encode(), oracle2.encode());
+    assert_eq!(cached.stats().hits(), 1);
+
+    // Hot-swap mid-trace: the generation bumps atomically and the bump
+    // is journaled for this plan.
+    let before = cluster.generation(h).unwrap().get();
+    cluster.apply_plan(h, &dp).unwrap();
+    let after = cluster.generation(h).unwrap().get();
+    assert_eq!(after, before + 1);
+    assert_eq!(cached.generation().get(), after, "wrapper shares the cluster's generation");
+    let invalidations: Vec<u64> = journal::events_for(&dp.plan.name)
+        .iter()
+        .filter_map(|e| match e.kind {
+            EventKind::CacheInvalidate { generation } => Some(generation),
+            _ => None,
+        })
+        .collect();
+    assert!(invalidations.contains(&after), "swap not journaled: {invalidations:?}");
+
+    // The old entry is unreachable: same content misses, is recomputed
+    // on the swapped plan, and still matches the oracle byte-for-byte.
+    let replay2 = input(&[1.0, -2.0, 3.0]);
+    let oracle3 = exec_local::execute(&flow, replay2.clone(), &ctx).unwrap();
+    let recomputed = cached.call(replay2).unwrap();
+    assert_eq!(recomputed.encode(), oracle3.encode());
+    assert_eq!(cached.stats().hits(), 1, "stale entry served after hot-swap");
+    assert_eq!(cached.stats().misses(), 2);
+
+    // The new generation repopulates normally.
+    let warm = cached.call(input(&[1.0, -2.0, 3.0])).unwrap();
+    assert_eq!(warm.encode(), oracle3.encode());
+    assert_eq!(cached.stats().hits(), 2);
+}
+
+/// Satellite bugfix regression test: a cache hit must still look like a
+/// served request to the observability plane — a `CacheHit` trace span
+/// is recorded and the deployment's latency/SLO good-bad counters keep
+/// advancing.
+#[test]
+fn hit_path_records_trace_span_and_slo_counts() {
+    trace::set_sample_rate(1.0);
+    let flow = expr_flow("cache_span_t");
+    let plan = compile(&flow, &OptFlags::all()).unwrap();
+    let cluster = Cluster::new(None);
+    let h = cluster.register(plan, 1).unwrap();
+    let cached = cluster.cached_deployment(h).unwrap();
+    cached.metrics().set_slo_threshold(250.0);
+    let label = cached.label();
+    let _ = trace::drain_finished_for(&label);
+
+    cached.call(input(&[4.0, 5.0])).unwrap();
+    let (good0, bad0) = cached.metrics().slo_counts();
+    assert_eq!(good0 + bad0, 1, "miss did not advance SLO counts");
+
+    cached.call(input(&[4.0, 5.0])).unwrap();
+    assert_eq!(cached.stats().hits(), 1);
+    let (good1, bad1) = cached.metrics().slo_counts();
+    assert_eq!(good1 + bad1, 2, "hit did not advance SLO counts");
+    assert_eq!(cached.metrics().completed(), 2);
+
+    // The hit produced a finished trace whose only service work is the
+    // CacheHit span.
+    let traces = trace::drain_finished_for(&label);
+    let hit_spans: Vec<_> = traces
+        .iter()
+        .flat_map(|t| t.spans())
+        .filter(|s| s.kind == SpanKind::CacheHit && s.stage.is_none())
+        .collect();
+    assert_eq!(hit_spans.len(), 1, "expected exactly one result-cache CacheHit span");
+    assert_eq!(hit_spans[0].label, "result_cache");
+    assert!(hit_spans[0].end_ms >= hit_spans[0].start_ms);
+}
+
+/// Per-stage memoization on a live cluster: with the tier enabled, a
+/// repeated request's pure fused stage is served from the memo (a
+/// stage-attributed `CacheHit` span replaces the `Service` span) and
+/// the response still matches the local oracle byte-for-byte.
+#[test]
+fn memoized_cluster_stage_hits_and_stays_correct() {
+    trace::set_sample_rate(1.0);
+    let flow = expr_flow("cache_memo_t");
+    let plan = compile(&flow, &OptFlags::all()).unwrap();
+    let n_memoizable = plan
+        .segments
+        .iter()
+        .flat_map(|s| s.stages.iter())
+        .filter(|st| cache::stage_memoizable(st))
+        .count();
+    assert!(n_memoizable >= 1, "expr pipeline compiled without a memoizable stage");
+
+    let cluster = Cluster::new(None);
+    let h = cluster.register(plan, 1).unwrap();
+    let d = cluster.deployment(h).unwrap();
+    let ctx = ExecCtx::local();
+    let _ = trace::drain_finished_for("cache_memo_t");
+
+    cache::memo::set_enabled(true);
+    let r1 = input(&[1.5, -0.5, 2.5]);
+    let want1 = exec_local::execute(&flow, r1.clone(), &ctx).unwrap();
+    let got1 = d.call(r1).unwrap();
+    assert_eq!(got1.encode(), want1.encode());
+
+    let r2 = input(&[1.5, -0.5, 2.5]);
+    let want2 = exec_local::execute(&flow, r2.clone(), &ctx).unwrap();
+    let got2 = d.call(r2).unwrap();
+    cache::memo::set_enabled(false);
+    assert_eq!(got2.encode(), want2.encode(), "memoized stage changed the response");
+
+    // The second request's trace carries a stage-attributed CacheHit.
+    let traces = trace::drain_finished_for("cache_memo_t");
+    let memo_hits: Vec<_> = traces
+        .iter()
+        .flat_map(|t| t.spans())
+        .filter(|s| s.kind == SpanKind::CacheHit && s.stage.is_some())
+        .collect();
+    assert!(
+        !memo_hits.is_empty(),
+        "no stage-level CacheHit span recorded; spans: {:?}",
+        traces.iter().flat_map(|t| t.spans()).collect::<Vec<_>>()
+    );
+    cache::memo::global().clear();
+}

@@ -875,6 +875,179 @@ fn prop_pass_manager_rewrites_are_byte_identical() {
     });
 }
 
+// ---------------------------------------------------------------------
+// Result cache: content-hash stability and hit-path byte identity
+// ---------------------------------------------------------------------
+
+/// Same logical rows, fresh row ids (the shape of a repeated request).
+fn rebuild_fresh(t: &Table) -> Table {
+    let mut out = Table::new(t.schema().clone());
+    for r in t.rows() {
+        out.push_fresh(r.values.clone()).unwrap();
+    }
+    out
+}
+
+#[test]
+fn prop_content_hash_is_layout_independent() {
+    use cloudflow::cache::{result_key, table_hash};
+    // The hash consumes no randomness (and excludes row ids), so it is
+    // independent of CLOUDFLOW_SEED by construction; the fresh-id rebuild
+    // below is what a different seed's id sequence would produce.
+    check("content hash stable across layouts", 60, |rng| {
+        let t = random_table(rng, 16);
+        let h0 = table_hash(&t);
+
+        // Chunked (concat of two pieces) vs consolidated layouts.
+        let rows = t.rows();
+        let split = rng.below(rows.len() as u64 + 1) as usize;
+        let mut a = Table::new(t.schema().clone());
+        let mut b = Table::new(t.schema().clone());
+        for r in &rows[..split] {
+            a.push(r.id, r.values.clone()).map_err(|e| format!("{e:#}"))?;
+        }
+        for r in &rows[split..] {
+            b.push(r.id, r.values.clone()).map_err(|e| format!("{e:#}"))?;
+        }
+        let chunked = Table::concat(vec![a, b]).map_err(|e| format!("{e:#}"))?;
+        cloudflow::prop_assert!(table_hash(&chunked) == h0, "chunked layout changed the hash");
+        cloudflow::prop_assert!(
+            table_hash(&chunked.compacted()) == h0,
+            "compaction changed the hash"
+        );
+        cloudflow::prop_assert!(
+            result_key("p", 3, &chunked) == result_key("p", 3, &t),
+            "result keys diverged across layouts"
+        );
+
+        // A selection-vector layout (post-filter) hashes like its
+        // consolidated copy.
+        let ctx = ExecCtx::local();
+        let filtered = exec_local::apply_filter(
+            &ctx,
+            &Predicate::threshold("conf", CmpOp::Ge, 0.5),
+            t.clone(),
+        )
+        .map_err(|e| format!("{e:#}"))?;
+        cloudflow::prop_assert!(
+            table_hash(&filtered) == table_hash(&filtered.compacted()),
+            "selection vector changed the hash"
+        );
+
+        // Row ids never feed the hash: a fresh-id rebuild collides.
+        cloudflow::prop_assert!(
+            table_hash(&rebuild_fresh(&t)) == h0,
+            "row ids leaked into the hash"
+        );
+
+        // ...but cell values do.
+        if !t.is_empty() {
+            let mut bumped = Table::new(t.schema().clone());
+            for (i, r) in t.rows().iter().enumerate() {
+                let mut vals = r.values.clone();
+                if i == 0 {
+                    vals[1] = Value::F64(vals[1].as_f64().map_err(|e| format!("{e:#}"))? + 1.0);
+                }
+                bumped.push(r.id, vals).map_err(|e| format!("{e:#}"))?;
+            }
+            cloudflow::prop_assert!(
+                table_hash(&bumped) != h0,
+                "value change did not change the hash"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_cached_cluster_is_byte_identical_to_oracle() {
+    use cloudflow::serve::Deployment;
+    // Id-preserving pipelines (the only ones the cache ever stores):
+    // both the miss and the re-stamped hit must match the uncached
+    // oracle byte-for-byte under OptFlags::all().
+    check("cached responses == uncached oracle bytes", 20, |rng| {
+        let ops = random_fusible_chain(rng);
+        let schema = Schema::new(vec![
+            ("name", DType::Str),
+            ("conf", DType::F64),
+            ("n", DType::I64),
+        ]);
+        let mut fl = Dataflow::new("cachep", schema);
+        let mut cur = fl.input();
+        for op in &ops {
+            cur = match op {
+                OpKind::Map(f) => fl.map(cur, f.clone()).unwrap(),
+                OpKind::Filter(p) => fl.filter(cur, p.clone()).unwrap(),
+                _ => unreachable!("fusible chains contain only maps and filters"),
+            };
+        }
+        fl.set_output(cur).unwrap();
+        let input = random_table(rng, 10);
+        let ctx = ExecCtx::local();
+
+        let cluster = Cluster::new(None);
+        let plan = compile(&fl, &OptFlags::all()).map_err(|e| format!("{e:#}"))?;
+        let h = cluster.register(plan, 1).map_err(|e| format!("{e:#}"))?;
+        let cached = cluster.cached_deployment(h).map_err(|e| format!("{e:#}"))?;
+
+        let oracle1 = exec_local::execute(&fl, input.clone(), &ctx)
+            .map_err(|e| format!("oracle: {e:#}"))?;
+        let miss = cached.call(input.clone()).map_err(|e| format!("miss: {e:#}"))?;
+        cloudflow::prop_assert!(
+            miss.encode() == oracle1.encode(),
+            "miss path != oracle\n{miss}\nvs\n{oracle1}"
+        );
+
+        // The same content returns with fresh ids: served from cache,
+        // still byte-identical to what the oracle returns for *this*
+        // request (ids re-stamped).
+        let replay = rebuild_fresh(&input);
+        let oracle2 = exec_local::execute(&fl, replay.clone(), &ctx)
+            .map_err(|e| format!("oracle2: {e:#}"))?;
+        let hit = cached.call(replay).map_err(|e| format!("hit: {e:#}"))?;
+        cloudflow::prop_assert!(
+            cached.stats().hits() == 1,
+            "expected a cache hit, stats={:?}/{:?}",
+            cached.stats().hits(),
+            cached.stats().misses()
+        );
+        cloudflow::prop_assert!(
+            hit.encode() == oracle2.encode(),
+            "hit path != oracle\n{hit}\nvs\n{oracle2}"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_cached_random_pipelines_match_oracle() {
+    use cloudflow::serve::Deployment;
+    // Fully random pipelines include aggregations, which mint fresh row
+    // ids: those are never stored (so every call misses), and results
+    // compare id-insensitively.
+    check("cached cluster (random pipelines) == oracle", 20, |rng| {
+        let ops = random_ops(rng);
+        let fl = build_v2(&ops);
+        let input = prop_input(rng, 10);
+        let ctx = ExecCtx::local();
+        let cluster = Cluster::new(None);
+        let plan = compile(&fl, &OptFlags::all()).map_err(|e| format!("{e:#}"))?;
+        let h = cluster.register(plan, 1).map_err(|e| format!("{e:#}"))?;
+        let cached = cluster.cached_deployment(h).map_err(|e| format!("{e:#}"))?;
+        for _ in 0..2 {
+            let req = rebuild_fresh(&input);
+            let want = exec_local::execute(&fl, req.clone(), &ctx)
+                .map_err(|e| format!("oracle: {e:#}"))?;
+            let got = cached.call(req).map_err(|e| format!("cached: {e:#}"))?;
+            cloudflow::prop_assert!(
+                canon(&got) == canon(&want),
+                "cached cluster != oracle\n{got}\nvs\n{want}"
+            );
+        }
+        Ok(())
+    });
+}
+
 #[test]
 fn prop_rewritten_cluster_matches_oracle() {
     check("cluster under OptFlags::all matches oracle", 25, |rng| {
